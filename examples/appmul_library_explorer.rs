@@ -1,0 +1,68 @@
+//! AppMul library explorer — inspect the generated approximate-multiplier
+//! designs (the EvoApprox8b/ALSRAC substitute) without touching any model.
+//!
+//! Prints every design per bitwidth with hardware costs (from the gate-level
+//! netlist substrate) and error metrics, the Pareto frontier, and the
+//! PDP-vs-bitwidth scaling that underlies the paper's relative-energy
+//! columns. Writes `results/appmul_library.csv`.
+//!
+//! Run: `cargo run --release --example appmul_library_explorer`
+
+use fames::appmul::{generate_library, Library};
+use fames::report::Table;
+use fames::util;
+
+fn main() -> anyhow::Result<()> {
+    let bits: Vec<(u32, u32)> = vec![(2, 2), (3, 3), (4, 4), (8, 8)];
+    let lib: Library = generate_library(&bits, 0);
+    println!("generated {} designs\n", lib.items.len());
+
+    let mut csv = Vec::new();
+    for &(a, w) in &bits {
+        let muls = lib.for_bits(a, w);
+        let mut t = Table::new(
+            format!("{a}x{w}-bit multipliers ({} designs)", muls.len()),
+            &["name", "family", "pdp fJ·ns", "delay ps", "area µm²", "gates",
+              "MRED", "ER", "WCE"],
+        );
+        for m in &muls {
+            t.row(vec![
+                m.name.clone(),
+                m.family.clone(),
+                format!("{:.2}", m.pdp),
+                format!("{:.0}", m.delay_ps),
+                format!("{:.1}", m.area_um2),
+                m.gates.to_string(),
+                format!("{:.4}", m.metrics.mred),
+                format!("{:.3}", m.metrics.er),
+                m.metrics.wce.to_string(),
+            ]);
+            csv.push(vec![
+                m.name.clone(),
+                m.family.clone(),
+                format!("{a}"),
+                format!("{:.4}", m.pdp),
+                format!("{:.5}", m.metrics.mred),
+            ]);
+        }
+        t.print();
+        let pareto: Vec<&str> = lib.pareto(a, w).iter().map(|m| m.name.as_str()).collect();
+        println!("Pareto frontier (pdp × mred): {pareto:?}\n");
+    }
+
+    // PDP scaling across bitwidths — the Table III energy-ratio driver
+    println!("exact-multiplier PDP scaling:");
+    let p8 = lib.exact(8, 8)?.pdp;
+    for &(a, w) in &bits {
+        let p = lib.exact(a, w)?.pdp;
+        println!("  {a}x{w}: {:8.2} fJ·ns  ({:.2}% of 8x8)", p, 100.0 * p / p8);
+    }
+
+    util::write_csv(
+        "results/appmul_library.csv",
+        &["name", "family", "bits", "pdp", "mred"],
+        &csv,
+    )?;
+    println!("\nwrote results/appmul_library.csv");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Mixed-precision pipeline — FAMES on a HAWQ-style mixed-bitwidth model
+//! (the paper's Table III "MP" rows), plus the rust-side bitwidth-allocation
+//! advisory pass (our HAWQ-V3 substrate, reusing the same MCKP solver).
+//!
+//! Run: `cargo run --release --example mixed_precision_pipeline`
+
+use std::rc::Rc;
+
+use fames::appmul::generate_library;
+use fames::pipeline::{self, FamesConfig, Session};
+use fames::quant::allocate_bits;
+use fames::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let root = pipeline::artifacts_root();
+    let rt = Rc::new(Runtime::cpu()?);
+
+    // ---- bitwidth advisory: what would our sensitivity-guided MCKP pick? ----
+    let cfg = FamesConfig {
+        model: "resnet20".into(),
+        cfg: "mixed".into(),
+        artifact_root: root.clone(),
+        ..FamesConfig::default()
+    };
+    let mut session = Session::open(rt.clone(), &root, "resnet20", "mixed", 0)?;
+    pipeline::ensure_trained(&mut session, &cfg)?;
+    let lib = generate_library(&[(2, 2), (3, 3), (4, 4), (8, 8)], 0);
+    let alloc = allocate_bits(&session.art.manifest, &session.params, &lib, 0.10, &[2, 3, 4, 8])?;
+    println!("HAWQ-like bit allocation at 10% of the 8-bit energy:");
+    println!("  avg bits {:.2}, energy ratio {:.3}", alloc.avg_bits, alloc.energy_ratio_8bit);
+    for (l, b) in session.art.manifest.layers.iter().zip(&alloc.bits) {
+        println!("  {:12} {b} bits (baked: {})", l.name, l.w_bits);
+    }
+
+    // ---- FAMES on the baked mixed config ----
+    let library = pipeline::library_for(&session.art.manifest, 0);
+    drop(session);
+    let rep = pipeline::run(rt, &cfg, &library)?;
+    println!("\n== resnet20 / mixed (avg {:.2} bits), R = {} ==",
+             avg_bits(&rep.selection), cfg.r_energy);
+    println!("quantized-exact accuracy : {:.2}%", 100.0 * rep.quant_eval.accuracy);
+    println!("approx after calibration : {:.2}%", 100.0 * rep.approx_eval_after.accuracy);
+    println!("energy vs same-bitwidth  : {:.1}%", 100.0 * rep.energy_ratio_exact);
+    println!("energy vs 8-bit baseline : {:.2}%", 100.0 * rep.energy_ratio_8bit);
+    println!("selection (bitwidth-heterogeneous):");
+    for (k, name) in rep.selection.iter().enumerate() {
+        println!("  layer {k:2}: {name}");
+    }
+    Ok(())
+}
+
+fn avg_bits(selection: &[String]) -> f64 {
+    // names look like mul4x4_...; parse the leading bitwidth
+    let mut total = 0.0;
+    for name in selection {
+        let b: f64 = name
+            .trim_start_matches("mul")
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect::<String>()
+            .parse()
+            .unwrap_or(0.0);
+        total += b;
+    }
+    total / selection.len() as f64
+}

@@ -1,0 +1,59 @@
+//! Pareto sweep — the accuracy-vs-energy operating curve of FAMES on one
+//! model (the per-model view behind paper Fig. 3): estimate once, then sweep
+//! the ILP energy budget and calibrate each operating point.
+//!
+//! Run: `cargo run --release --example pareto_sweep [model] [cfg]`
+
+use fames::experiments::common::ExpCtx;
+use fames::report::{pct, Table};
+use fames::util;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("resnet8");
+    let cfg = args.get(2).map(|s| s.as_str()).unwrap_or("w4a4");
+
+    let ctx = ExpCtx::new()?;
+    let mut prep = ctx.prepare(model, cfg)?;
+    println!(
+        "{model}/{cfg}: quantized-exact accuracy {} % (estimation {:.1}s)",
+        pct(prep.quant_acc),
+        prep.table.estimate_secs
+    );
+
+    let mut t = Table::new(
+        format!("FAMES operating curve — {model}/{cfg}"),
+        &["R budget", "achieved energy", "acc before %", "acc after calib %"],
+    );
+    let mut csv = Vec::new();
+    for r in [0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3] {
+        match ctx.point_at(&mut prep, r, true) {
+            Ok(p) => {
+                t.row(vec![
+                    format!("{r:.2}"),
+                    format!("{:.3}", p.energy_vs_exact),
+                    pct(p.acc_before),
+                    pct(p.acc_after),
+                ]);
+                csv.push(vec![
+                    format!("{r}"),
+                    format!("{:.5}", p.energy_vs_exact),
+                    format!("{:.4}", p.acc_before),
+                    format!("{:.4}", p.acc_after),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![format!("{r:.2}"), format!("infeasible: {e}"), "-".into(), "-".into()]);
+                break;
+            }
+        }
+    }
+    t.print();
+    util::write_csv(
+        format!("results/pareto_{model}_{cfg}.csv"),
+        &["r_budget", "energy_ratio", "acc_before", "acc_after"],
+        &csv,
+    )?;
+    println!("wrote results/pareto_{model}_{cfg}.csv");
+    Ok(())
+}

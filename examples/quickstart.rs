@@ -1,0 +1,72 @@
+//! Quickstart — the end-to-end driver (DESIGN.md "end-to-end validation").
+//!
+//! Trains a mini ResNet-8 fp32 **from rust** (the SGD step is an AOT-compiled
+//! XLA executable; python never runs here), quantizes it to 4 bits, then runs
+//! the full FAMES flow: Taylor perturbation estimation → ILP AppMul selection
+//! under a 70% energy budget → retraining-free calibration → evaluation,
+//! reporting the paper's headline quantities.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first.)
+
+use std::rc::Rc;
+
+use fames::pipeline::{self, FamesConfig, Session};
+use fames::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let root = pipeline::artifacts_root();
+    let rt = Rc::new(Runtime::cpu()?);
+    println!("PJRT platform: {}", rt.platform());
+
+    // ---- 1. train the fp32 baseline from scratch ----
+    let mut session = Session::open(rt.clone(), &root, "resnet8", "w4a4", 0)?;
+    println!("training resnet8 (fp32, AOT SGD step, synthetic-CIFAR) ...");
+    let losses = session.train(900, 0.01)?;
+    for (i, chunk) in losses.chunks(150).enumerate() {
+        let avg: f64 = chunk.iter().sum::<f64>() / chunk.len() as f64;
+        println!("  steps {:4}..{:4}: mean loss {avg:.4}", i * 150, i * 150 + chunk.len());
+    }
+    session.init_act_ranges()?;
+    let float_acc = session.evaluate_float(4)?;
+    println!("fp32 accuracy: {:.2}%", 100.0 * float_acc.accuracy);
+    session.save_params(Session::state_path(&root, "resnet8"))?;
+
+    // ---- 2. full FAMES pipeline at a 70% energy budget ----
+    let cfg = FamesConfig {
+        artifact_root: root,
+        r_energy: 0.7,
+        ..FamesConfig::default()
+    };
+    let library = pipeline::library_for(&session.art.manifest, 0);
+    drop(session);
+    println!(
+        "AppMul library: {} designs across bitwidths {:?}",
+        library.items.len(),
+        library
+            .items
+            .iter()
+            .map(|m| m.a_bits)
+            .collect::<std::collections::BTreeSet<_>>()
+    );
+    let rep = pipeline::run(rt, &cfg, &library)?;
+
+    println!("\n== FAMES quickstart result (resnet8 / w4a4, R = 0.7) ==");
+    println!("quantized-exact accuracy : {:.2}%", 100.0 * rep.quant_eval.accuracy);
+    println!("approx before calibration: {:.2}%", 100.0 * rep.approx_eval_before.accuracy);
+    println!("approx after calibration : {:.2}%", 100.0 * rep.approx_eval_after.accuracy);
+    println!("energy vs same-bitwidth  : {:.1}% (budget 70%)", 100.0 * rep.energy_ratio_exact);
+    println!("energy vs 8-bit baseline : {:.2}%", 100.0 * rep.energy_ratio_8bit);
+    println!(
+        "estimate/select/calibrate: {:.1}s / {:.3}s / {:.1}s",
+        rep.times.estimate_secs, rep.times.select_secs, rep.times.calibrate_secs
+    );
+    println!("per-layer selection:");
+    for (k, name) in rep.selection.iter().enumerate() {
+        println!("  layer {k:2}: {name}");
+    }
+    anyhow::ensure!(rep.quant_eval.accuracy > 0.5, "baseline failed to train");
+    anyhow::ensure!(rep.energy_ratio_exact <= 0.7 + 1e-6, "budget violated");
+    println!("\nquickstart OK");
+    Ok(())
+}

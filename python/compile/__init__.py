@@ -1,0 +1,1 @@
+"""FAMES compile path (build-time only)."""

@@ -1,0 +1,469 @@
+"""AOT exporter — lowers the Layer-2 graphs to HLO **text** artifacts.
+
+This is the compile-path half of the three-layer architecture: python/jax
+authors the computation, rust loads and runs it via the PJRT C API. HLO text
+(not serialized HloModuleProto) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids, so text round-trips cleanly.
+
+Per (model, bitwidth-config) this writes ``artifacts/<model>_<cfg>/`` with
+eight executables plus ``manifest.json`` (the rust↔python contract, see
+``rust/src/runtime/manifest.rs``):
+
+  train       fp32 SGD-momentum step (rust pre-trains the baseline)
+  acts_float  fp32 forward, returns each conv's input (initial act ranges)
+  fwd         quantized+approx forward → loss_sum, correct, logits
+  fwd_pallas  same, error GEMM routed through the Pallas kernel (Layer 1)
+  fwd_acts    quantized+approx forward → per-layer conv inputs + loss
+  grad_e      ∇_E loss (Eq. 10 via the gather-transpose ≡ counting matrix)
+  hvp_e       Gauss–Newton Hessian-vector products in E-space (Eq. 11)
+  calib       ∂loss/∂(γ, β) per layer (LWC calibration, Algorithm 1)
+  retrain     grads wrt all weights/biases + γ/β (Table IV baseline)
+
+Usage: ``python -m compile.aot --out-root ../artifacts [--sets resnet8_w4a4,...]``
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, quant
+from .layers import QContext, cross_entropy
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 128
+MOMENTUM = 0.9
+
+# Default artifact build matrix: (model, cfg) pairs used by the experiment
+# drivers. Kept deliberately small for w8a8 (the gather path is ~16× the
+# 4-bit cost).
+DEFAULT_SETS = [
+    ("resnet8", "w8a8"),
+    ("resnet8", "w4a4"),
+    ("resnet8", "w3a3"),
+    ("resnet8", "w2a2"),
+    ("resnet8", "mixed"),
+    ("resnet14", "w4a4"),
+    ("resnet14", "mixed"),
+    ("resnet20", "w8a8"),
+    ("resnet20", "w4a4"),
+    ("resnet20", "w3a3"),
+    ("resnet20", "w2a2"),
+    ("resnet20", "mixed"),
+    ("vgg11", "w8a8"),
+    ("vgg11", "w3a3"),
+    ("squeezenet", "w8a8"),
+    ("squeezenet", "w3a3"),
+    ("squeezenet", "w2a2"),
+]
+
+
+def bit_config(md: models.ModelDef, cfg: str):
+    """Per-layer (w_bits, a_bits) lists for a named config.
+
+    ``mixed`` follows the HAWQ-style pattern the paper evaluates: the stem
+    (most sensitive) keeps 8 bits, the middle of the network 4, the deepest
+    third (least sensitive, most multiplications already downsampled) 2 —
+    average ≈ 4.1 bits, mirroring the paper's Table III mixed rows.
+    """
+    n = len(md.convs)
+    if cfg.startswith("w") and "a" in cfg:
+        wb = int(cfg[1:cfg.index("a")])
+        ab = int(cfg[cfg.index("a") + 1:])
+        return [wb] * n, [ab] * n
+    if cfg == "mixed":
+        bits = []
+        for i in range(n):
+            if i == 0:
+                bits.append(8)
+            elif i < (2 * n) // 3:
+                bits.append(4)
+            else:
+                bits.append(2)
+        return bits, list(bits)
+    raise KeyError(f"unknown config '{cfg}'")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Argument (un)packing — the order here IS the manifest contract.
+# ---------------------------------------------------------------------------
+
+
+class Packing:
+    """Builds flat argument specs and unpackers for one artifact set."""
+
+    def __init__(self, md: models.ModelDef, wb, ab, in_shapes):
+        self.md = md
+        self.wb, self.ab = wb, ab
+        self.n = len(md.convs)
+        self.param_shapes = [md._param_shape(n) for n in md.param_names]
+        self.e_lens = [(1 << ab[i]) * (1 << wb[i]) for i in range(self.n)]
+        self.in_shapes = in_shapes  # per-conv input (C, H, W)
+
+    def specs(self, groups, batch):
+        """ShapeDtypeStructs for the given ordered input groups."""
+        s = []
+        f32 = jnp.float32
+        for g in groups:
+            if g == "params":
+                s += [jax.ShapeDtypeStruct(sh, f32) for sh in self.param_shapes]
+            elif g == "opt_state":
+                s += [jax.ShapeDtypeStruct(sh, f32) for sh in self.param_shapes]
+            elif g == "lwc":
+                s += [jax.ShapeDtypeStruct((), f32)] * (2 * self.n)
+            elif g == "act_q":
+                s += [jax.ShapeDtypeStruct((), f32)] * (2 * self.n)
+            elif g in ("e_list", "rvecs"):
+                s += [jax.ShapeDtypeStruct((l,), f32) for l in self.e_lens]
+            elif g in ("images_train", "images_eval"):
+                s.append(jax.ShapeDtypeStruct((batch, *self.md.image_shape), f32))
+            elif g in ("labels_train", "labels_eval"):
+                s.append(jax.ShapeDtypeStruct((batch,), f32))
+            elif g == "lr":
+                s.append(jax.ShapeDtypeStruct((), f32))
+            else:
+                raise KeyError(g)
+        return s
+
+    def unpack(self, groups, flat):
+        """Flat tuple → dict of structured groups."""
+        out = {}
+        i = 0
+        for g in groups:
+            if g in ("params", "opt_state"):
+                vals = flat[i:i + len(self.param_shapes)]
+                i += len(self.param_shapes)
+                out[g] = dict(zip(self.md.param_names, vals))
+            elif g in ("lwc", "act_q"):
+                vals = flat[i:i + 2 * self.n]
+                i += 2 * self.n
+                out[g] = [(vals[2 * j], vals[2 * j + 1]) for j in range(self.n)]
+            elif g in ("e_list", "rvecs"):
+                out[g] = list(flat[i:i + self.n])
+                i += self.n
+            else:
+                out[g] = flat[i]
+                i += 1
+        assert i == len(flat), (i, len(flat))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Export functions
+# ---------------------------------------------------------------------------
+
+
+def make_ctx(pk: Packing, u, mode, ste=False, use_pallas=False, collect=None):
+    return QContext(
+        mode=mode, ste=ste, use_pallas=use_pallas,
+        act_q=u.get("act_q"), lwc=u.get("lwc"), e_list=u.get("e_list"),
+        w_bits=pk.wb, a_bits=pk.ab, collect=collect,
+    )
+
+
+def loss_outputs(md, params, logits, labels):
+    ce = cross_entropy(logits, labels)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.float32)
+    correct = jnp.sum((pred == labels).astype(jnp.float32))
+    return ce, correct
+
+
+def build_exports(md: models.ModelDef, wb, ab):
+    in_shapes = md.conv_input_shapes(1)
+    pk = Packing(md, wb, ab, in_shapes)
+    ex = {}
+
+    # ---- train: fp32 SGD momentum ----
+    tg = ["params", "opt_state", "images_train", "labels_train", "lr"]
+
+    def train_fn(*flat):
+        u = pk.unpack(tg, flat)
+        params, mom, lr = u["params"], u["opt_state"], u["lr"]
+
+        def loss_of(p):
+            logits = md.forward(p, u["images_train"], make_ctx(pk, u, "float"))
+            ce, _ = loss_outputs(md, p, logits, u["labels_train"])
+            return ce.mean()
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_p, new_m = [], []
+        for name in md.param_names:
+            m2 = MOMENTUM * mom[name] + grads[name]
+            new_m.append(m2)
+            new_p.append(params[name] - lr * m2)
+        return (*new_p, *new_m, loss)
+
+    ex["train"] = (train_fn, tg, TRAIN_BATCH,
+                   [f"param:{n}" for n in md.param_names]
+                   + [f"mom:{n}" for n in md.param_names] + ["loss"])
+
+    # ---- acts_float ----
+    ag = ["params", "images_eval"]
+
+    def acts_float_fn(*flat):
+        u = pk.unpack(ag, flat)
+        collect = []
+        logits = md.forward(u["params"], u["images_eval"],
+                            make_ctx(pk, u, "float", collect=collect))
+        return (*collect, logits)
+
+    ex["acts_float"] = (acts_float_fn, ag, EVAL_BATCH,
+                        [f"act:{i}" for i in range(pk.n)] + ["logits"])
+
+    # ---- fwd (+ pallas variant, + acts variant) ----
+    fg = ["params", "lwc", "act_q", "e_list", "images_eval", "labels_eval"]
+
+    def fwd_fn_base(flat, use_pallas=False, with_acts=False):
+        u = pk.unpack(fg, flat)
+        collect = [] if with_acts else None
+        ctx = make_ctx(pk, u, "approx", use_pallas=use_pallas, collect=collect)
+        logits = md.forward(u["params"], u["images_eval"], ctx)
+        ce, correct = loss_outputs(md, u["params"], logits, u["labels_eval"])
+        if with_acts:
+            return (*collect, ce.sum(), correct)
+        return (ce.sum(), correct, logits)
+
+    ex["fwd"] = (lambda *f: fwd_fn_base(f), fg, EVAL_BATCH,
+                 ["loss_sum", "correct", "logits"])
+    ex["fwd_pallas"] = (lambda *f: fwd_fn_base(f, use_pallas=True), fg, EVAL_BATCH,
+                        ["loss_sum", "correct", "logits"])
+    ex["fwd_acts"] = (lambda *f: fwd_fn_base(f, with_acts=True), fg, EVAL_BATCH,
+                      [f"act:{i}" for i in range(pk.n)] + ["loss_sum", "correct"])
+
+    # ---- grad_e / hvp_e (estimation batch = train size) ----
+    gg = ["params", "lwc", "act_q", "e_list", "images_train", "labels_train"]
+
+    def loss_wrt_e(e_list, u):
+        # STE rounding so ∂L/∂Y^(k) propagates through downstream
+        # quantizers (the paper's PyTorch backprop does the same); without
+        # it every layer but the last has zero gradient.
+        u = dict(u, e_list=e_list)
+        logits = md.forward(u["params"], u["images_train"],
+                            make_ctx(pk, u, "approx", ste=True))
+        ce, _ = loss_outputs(md, u["params"], logits, u["labels_train"])
+        return ce.mean()
+
+    def grad_e_fn(*flat):
+        u = pk.unpack(gg, flat)
+        loss, g = jax.value_and_grad(loss_wrt_e)(u["e_list"], u)
+        return (loss, *g)
+
+    ex["grad_e"] = (grad_e_fn, gg, TRAIN_BATCH,
+                    ["loss"] + [f"g_e:{i}" for i in range(pk.n)])
+
+    hg = gg + ["rvecs"]
+
+    def hvp_e_fn(*flat):
+        u = pk.unpack(hg, flat)
+        grad_fn = jax.grad(loss_wrt_e)
+        _, hr = jax.jvp(lambda e: grad_fn(e, u), (u["e_list"],), (u["rvecs"],))
+        return tuple(hr)
+
+    ex["hvp_e"] = (hvp_e_fn, hg, TRAIN_BATCH,
+                   [f"h_r:{i}" for i in range(pk.n)])
+
+    # ---- quad_e: per-layer exact Gauss–Newton quadratics, one call ----
+    # q_k = ½ (J_k r_k)ᵀ H_L(z) (J_k r_k) with H_L the analytic softmax-CE
+    # Hessian. jax.linearize shares the primal across the per-layer
+    # tangent evaluations, so one execution covers every layer — the
+    # estimation hot path of the rust pipeline (HessianMode::Exact).
+    # NOTE: no labels input — H_L(z) needs only the logits, and the
+    # stablehlo→HLO conversion strips unused parameters, so an unused
+    # labels arg would break the manifest's input contract.
+    qg = ["params", "lwc", "act_q", "e_list", "images_train", "rvecs"]
+
+    def quad_e_fn(*flat):
+        u = pk.unpack(qg, flat)
+
+        def logits_of(e_list):
+            uu = dict(u, e_list=e_list)
+            return md.forward(uu["params"], uu["images_train"],
+                              make_ctx(pk, uu, "approx", ste=True))
+
+        z, lin = jax.linearize(logits_of, u["e_list"])
+        p = jax.nn.softmax(z, axis=-1)
+        batch = z.shape[0]
+        outs = []
+        for k in range(pk.n):
+            probe = [u["rvecs"][j] if j == k else jnp.zeros_like(u["e_list"][j])
+                     for j in range(pk.n)]
+            jr = lin(probe)
+            # per-sample H_L: (diag(p) − p pᵀ)/B on the mean-CE loss
+            hjr = (p * jr - p * jnp.sum(p * jr, axis=-1, keepdims=True)) / batch
+            outs.append(0.5 * jnp.vdot(jr, hjr))
+        return tuple(outs)
+
+    ex["quad_e"] = (quad_e_fn, qg, TRAIN_BATCH,
+                    [f"quad:{i}" for i in range(pk.n)])
+
+    # ---- calib: grads wrt LWC bounds (STE graph) ----
+    cg = ["params", "lwc", "act_q", "e_list", "images_train", "labels_train"]
+
+    def loss_wrt_lwc(lwc, u):
+        u = dict(u, lwc=lwc)
+        logits = md.forward(u["params"], u["images_train"],
+                            make_ctx(pk, u, "approx", ste=True))
+        ce, _ = loss_outputs(md, u["params"], logits, u["labels_train"])
+        return ce.mean()
+
+    def calib_fn(*flat):
+        u = pk.unpack(cg, flat)
+        loss, g = jax.value_and_grad(loss_wrt_lwc)(u["lwc"], u)
+        flat_g = [x for pair in g for x in pair]
+        return (loss, *flat_g)
+
+    ex["calib"] = (calib_fn, cg, TRAIN_BATCH,
+                   ["loss"] + [f"d{k}:{i}" for i in range(pk.n) for k in ("gamma", "beta")])
+
+    # ---- retrain: grads wrt params + LWC (STE graph) ----
+    def loss_wrt_all(pl, u):
+        params, lwc = pl
+        u = dict(u, lwc=lwc)
+        logits = md.forward(params, u["images_train"],
+                            make_ctx(pk, u, "approx", ste=True))
+        ce, _ = loss_outputs(md, params, logits, u["labels_train"])
+        return ce.mean()
+
+    def retrain_fn(*flat):
+        u = pk.unpack(cg, flat)
+        loss, (gp, gl) = jax.value_and_grad(loss_wrt_all)((u["params"], u["lwc"]), u)
+        flat_p = [gp[n] for n in md.param_names]
+        flat_l = [x for pair in gl for x in pair]
+        return (loss, *flat_p, *flat_l)
+
+    ex["retrain"] = (retrain_fn, cg, TRAIN_BATCH,
+                     ["loss"] + [f"gparam:{n}" for n in md.param_names]
+                     + [f"d{k}:{i}" for i in range(pk.n) for k in ("gamma", "beta")])
+
+    return pk, ex
+
+
+# ---------------------------------------------------------------------------
+# Manifest + driver
+# ---------------------------------------------------------------------------
+
+
+def manifest_json(md: models.ModelDef, cfg, wb, ab, pk: Packing, exe_files):
+    in_shapes = pk.in_shapes
+    layers = []
+    for i, spec in enumerate(md.convs):
+        c, h, w = in_shapes[i]
+        assert c == spec.in_ch, (spec.name, c, spec.in_ch)
+        ho, wo = spec.out_hw(h, w)
+        layers.append({
+            "name": spec.name, "index": i,
+            "w_bits": wb[i], "a_bits": ab[i],
+            "in_ch": spec.in_ch, "out_ch": spec.out_ch,
+            "kernel": [spec.kernel, spec.kernel], "stride": spec.stride,
+            "in_hw": [h, w], "out_hw": [ho, wo],
+            "e_rows": 1 << ab[i], "e_cols": 1 << wb[i],
+            "mults_per_image": spec.mults_per_image(h, w),
+        })
+    return {
+        "model": md.name, "cfg": cfg,
+        "num_classes": md.num_classes,
+        "image_shape": list(md.image_shape),
+        "train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH,
+        "layers": layers,
+        "params": [{"name": n, "shape": list(md._param_shape(n))} for n in md.param_names],
+        "opt_state": [{"name": f"{n}.m", "shape": list(md._param_shape(n))}
+                      for n in md.param_names],
+        "executables": exe_files,
+    }
+
+
+def export_set(md_name: str, cfg: str, out_root: str, only=None):
+    md = models.build(md_name)
+    wb, ab = bit_config(md, cfg)
+    out_dir = os.path.join(out_root, f"{md_name}_{cfg}")
+    os.makedirs(out_dir, exist_ok=True)
+    pk, ex = build_exports(md, wb, ab)
+    exe_files = {}
+    for name, (fn, groups, batch, outputs) in ex.items():
+        exe_files[name] = {"file": f"{name}.hlo.txt", "inputs": groups, "outputs": outputs}
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        specs = pk.specs(groups, batch)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        print(f"  {md_name}_{cfg}/{name}: {len(text) / 1e6:.1f} MB in {time.time() - t0:.1f}s",
+              flush=True)
+    mj = manifest_json(md, cfg, wb, ab, pk, exe_files)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(mj, f, indent=1)
+    return out_dir
+
+
+def export_spike(out_root: str):
+    """Tiny fixed-scale approx-conv used by the rust bridge test."""
+    from jax import lax
+
+    def fwd(x, w, e_flat):
+        q = 16
+        sx, bx, sw, bw = 0.1, 0.0, 0.05, -0.4
+        xq = jnp.clip(jnp.round((x - bx) / sx), 0, q - 1)
+        wq = jnp.clip(jnp.round((w - bw) / sw), 0, q - 1)
+        b, c, h, wd = x.shape
+        o = w.shape[0]
+        xp = jnp.pad(xq, ((0, 0), (0, 0), (1, 1), (1, 1)))
+        patches = jnp.stack(
+            [xp[:, :, i:i + h, j:j + wd] for i in range(3) for j in range(3)], axis=2)
+        pm = patches.transpose(0, 3, 4, 1, 2).reshape(b, h * wd, c * 9)
+        wm = wq.reshape(o, c * 9)
+        exact = jnp.einsum("bpk,ok->bpo", pm, wm)
+        idx = (pm[:, :, None, :] * q + wm[None, None, :, :]).astype(jnp.int32)
+        err = jnp.take(e_flat, idx, axis=0).sum(axis=-1)
+        y = sx * sw * (exact + err)
+        loss = jnp.mean(y ** 2)
+        return loss, jnp.sum(y), y.reshape(-1)[:4]
+
+    os.makedirs(os.path.join(out_root, "spike"), exist_ok=True)
+    specs = [jax.ShapeDtypeStruct((2, 3, 8, 8), jnp.float32),
+             jax.ShapeDtypeStruct((4, 3, 3, 3), jnp.float32),
+             jax.ShapeDtypeStruct((256,), jnp.float32)]
+    text = to_hlo_text(jax.jit(fwd).lower(*specs))
+    with open(os.path.join(out_root, "spike", "spike.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  spike: {len(text) / 1e3:.0f} KB", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--sets", default="",
+                    help="comma-separated model_cfg pairs (default: full matrix)")
+    ap.add_argument("--exes", default="", help="only these executables")
+    args = ap.parse_args()
+    sets = DEFAULT_SETS
+    if args.sets:
+        sets = []
+        for s in args.sets.split(","):
+            model, cfg = s.rsplit("_", 1)
+            sets.append((model, cfg))
+    only = set(args.exes.split(",")) if args.exes else None
+    t0 = time.time()
+    export_spike(args.out_root)
+    for model, cfg in sets:
+        export_set(model, cfg, args.out_root, only=only)
+    print(f"artifacts complete in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

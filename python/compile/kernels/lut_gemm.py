@@ -1,0 +1,119 @@
+"""Layer 1 — Pallas LUT-GEMM kernel.
+
+The compute hot-spot of an AppMul-substituted accelerator is
+``out[m, n] = Σ_k LUT[x̂[m, k], ŵ[k, n]]`` (paper Eq. 5/8 inner term).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ASIC
+replaces each exact multiplier with an approximate one; on a TPU the natural
+mapping is **table lookup as one-hot matmul** so the MXU does the work:
+
+* pre-gather the LUT columns selected by the (static per-call) weight codes:
+  ``EW[k, a, n] = LUT[a, ŵ[k, n]]`` — tiny, lives in VMEM;
+* per M-tile, materialize the one-hot expansion of the activation codes in
+  VMEM and contract ``(TM, K·Q) @ (K·Q, N)`` on the MXU.
+
+BlockSpec tiles the activation-code matrix HBM→VMEM exactly where the
+paper's accelerator streams activations through its multiplier array.
+Lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the interpret path traces to plain HLO, so the same program
+runs inside the AOT artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default M-tile: 128 rows keeps the one-hot expansion
+# (128 × K·Q f32) comfortably inside a TPU core's VMEM for every
+# (K, Q) used by the model zoo (≤ 288·16 at 4-bit, ≤ 72·256 at 8-bit).
+DEFAULT_TILE_M = 128
+
+
+def _lut_gemm_kernel(x_ref, ew_ref, o_ref, *, q: int):
+    """One M-tile: one-hot expand codes, contract on the MXU.
+
+    x_ref: [TM, K] activation codes (float-valued integers).
+    ew_ref: [K, Q, N] pre-gathered LUT columns.
+    o_ref: [TM, N] output tile.
+    """
+    x = x_ref[...]
+    tm, k = x.shape
+    _, q_dim, n = ew_ref.shape
+    # One-hot along a new Q axis: (TM, K, Q). broadcasted_iota is
+    # TPU-friendly (no 1-D iota restriction).
+    iota = jax.lax.broadcasted_iota(jnp.float32, (tm, k, q_dim), 2)
+    onehot = (x[:, :, None] == iota).astype(jnp.float32)
+    # (TM, K·Q) @ (K·Q, N) — the MXU contraction.
+    out = jnp.dot(
+        onehot.reshape(tm, k * q_dim),
+        ew_ref[...].reshape(k * q_dim, n),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = out
+
+
+def lut_gemm(x_codes, ew, *, tile_m: int = DEFAULT_TILE_M, interpret: bool = True):
+    """Pallas LUT-GEMM: ``out[m, n] = Σ_k EW[k, x̂[m, k], n]``.
+
+    Args:
+      x_codes: ``[M, K]`` float array of integer activation codes.
+      ew: ``[K, Q, N]`` pre-gathered LUT columns
+          (``EW[k, a, n] = LUT[a, ŵ[k, n]]``).
+      tile_m: M-tile size (grid dimension).
+      interpret: must stay True on CPU PJRT (see module docstring).
+    Returns ``[M, N]`` f32.
+    """
+    m, k = x_codes.shape
+    k2, q, n = ew.shape
+    assert k == k2, (x_codes.shape, ew.shape)
+    tile_m = min(tile_m, m)
+    # Pad M to a tile multiple; padded rows use code 0 and are sliced off.
+    m_pad = (-m) % tile_m
+    if m_pad:
+        x_codes = jnp.pad(x_codes, ((0, m_pad), (0, 0)))
+    grid = ((m + m_pad) // tile_m,)
+    out = pl.pallas_call(
+        functools.partial(_lut_gemm_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, q, n), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, n), jnp.float32),
+        interpret=interpret,
+    )(x_codes.astype(jnp.float32), ew.astype(jnp.float32))
+    return out[:m]
+
+
+def build_ew(lut, w_codes):
+    """Pre-gather LUT columns by weight codes.
+
+    Args:
+      lut: ``[Qx, Qw]`` table.
+      w_codes: ``[K, N]`` float array of integer weight codes.
+    Returns ``EW[k, a, n] = LUT[a, ŵ[k, n]]`` with shape ``[K, Qx, N]``.
+    """
+    idx = jax.lax.stop_gradient(w_codes).astype(jnp.int32)  # [K, N]
+    # lut[:, idx] -> [Qx, K, N]; move Qx inside.
+    return jnp.transpose(lut[:, idx], (1, 0, 2))
+
+
+def lut_gemm_from_codes(x_codes, w_codes, lut, **kw):
+    """Convenience wrapper: codes + LUT → LUT-GEMM output."""
+    return lut_gemm(x_codes, build_ew(lut, w_codes), **kw)
+
+
+def vmem_bytes_estimate(k: int, q: int, n: int, tile_m: int = DEFAULT_TILE_M) -> int:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §Perf).
+
+    Counts the x tile, the pre-gathered EW block, the one-hot expansion and
+    the output tile, all f32. Used by the perf notes, not at runtime.
+    """
+    x_tile = tile_m * k
+    ew_blk = k * q * n
+    onehot = tile_m * k * q
+    out_tile = tile_m * n
+    return 4 * (x_tile + ew_blk + onehot + out_tile)

@@ -1,0 +1,95 @@
+"""Pure-jnp / pure-python oracles for the LUT-GEMM kernel (Layer 1 spec).
+
+These are the correctness ground truth: deliberately naive, loop-based where
+practical, and used by pytest (incl. hypothesis sweeps) to check both the
+Pallas kernel and the fast one-hot-GEMM path in ``layers.py``.
+"""
+
+import numpy as np
+
+
+def lut_gemm_ref(x_codes, w_codes, lut):
+    """Naive LUT GEMM: ``out[m, n] = sum_k LUT[x[m, k], w[k, n]]``.
+
+    Args:
+      x_codes: ``[M, K]`` integer array (activation codes).
+      w_codes: ``[K, N]`` integer array (weight codes).
+      lut: ``[Qx, Qw]`` table (the AppMul LUT or its error matrix E).
+    Returns ``[M, N]`` float64 array.
+    """
+    x_codes = np.asarray(x_codes).astype(np.int64)
+    w_codes = np.asarray(w_codes).astype(np.int64)
+    lut = np.asarray(lut)
+    m_dim, k_dim = x_codes.shape
+    k2, n_dim = w_codes.shape
+    assert k_dim == k2, (x_codes.shape, w_codes.shape)
+    out = np.zeros((m_dim, n_dim), dtype=np.float64)
+    for m in range(m_dim):
+        for n in range(n_dim):
+            acc = 0.0
+            for k in range(k_dim):
+                acc += float(lut[x_codes[m, k], w_codes[k, n]])
+            out[m, n] = acc
+    return out
+
+
+def counting_matrix_ref(x_codes, w_codes, qx, qw):
+    """Aggregate counting matrix ``T[a, b]`` = #times code pair (a, b) is
+    multiplied in the GEMM (paper §IV-B, summed over all output entries)."""
+    x_codes = np.asarray(x_codes).astype(np.int64)
+    w_codes = np.asarray(w_codes).astype(np.int64)
+    t = np.zeros((qx, qw), dtype=np.int64)
+    m_dim, k_dim = x_codes.shape
+    _, n_dim = w_codes.shape
+    for m in range(m_dim):
+        for n in range(n_dim):
+            for k in range(k_dim):
+                t[x_codes[m, k], w_codes[k, n]] += 1
+    return t
+
+
+def conv2d_ref(x, w, stride, pad):
+    """Naive float conv (NCHW ⊛ OIHW), for model-shape oracle tests."""
+    x = np.asarray(x, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    b_dim, c_dim, h_dim, w_dim = x.shape
+    o_dim, c2, kh, kw = w.shape
+    assert c_dim == c2
+    xp = np.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    ho = (h_dim + 2 * pad - kh) // stride + 1
+    wo = (w_dim + 2 * pad - kw) // stride + 1
+    out = np.zeros((b_dim, o_dim, ho, wo))
+    for b in range(b_dim):
+        for o in range(o_dim):
+            for i in range(ho):
+                for j in range(wo):
+                    patch = xp[b, :, i * stride:i * stride + kh, j * stride:j * stride + kw]
+                    out[b, o, i, j] = np.sum(patch * w[o])
+    return out
+
+
+def paper_worked_example():
+    """The worked 3×3 / 2-bit example from paper §IV-B.
+
+    Returns (X, W, C_expected, E). The paper's convolution there is the
+    single *valid* position (3×3 kernel on a 3×3 input, correlation without
+    flipping). NOTE: the paper's printed C has a typo in row 2 — the pair
+    (2, 3) occurs twice (X entries 2 at (0,2)/(2,0) multiply W entries 3 at
+    (0,2)/(2,0)), so C[2,3]=2, but the paper prints C[2,2]=2. We return the
+    corrected matrix; every other entry matches the paper verbatim.
+    """
+    x = np.array([[0, 1, 2], [3, 0, 1], [2, 3, 0]])
+    w = np.array([[1, 2, 3], [0, 1, 2], [3, 0, 1]])
+    c = np.array([
+        [0, 3, 0, 0],
+        [0, 0, 2, 0],
+        [0, 0, 0, 2],
+        [2, 0, 0, 0],
+    ])
+    e = np.array([
+        [0, 1, 3, 2],
+        [-1, 0, 2, 0],
+        [0, -2, 2, 0],
+        [2, 1, 1, 0],
+    ])
+    return x, w, c, e

@@ -1,0 +1,231 @@
+"""Layer 2 — quantized/approximate conv layers.
+
+Implements the paper's Eq. 4 (quantized conv) and Eq. 8
+(``Y_approx = Y_exact + s_X·s_W · Σ_sites E[x̂, ŵ]``). The error term is
+**linear in the flattened error vector e**, so JAX reverse-mode through it
+yields exactly the counting-matrix-weighted gradient of Eq. 10, and
+forward-over-reverse yields exact Gauss–Newton Hessian-vector products
+(Eq. 11) — see DESIGN.md §4.
+
+Two implementations of the error term:
+
+* ``error_gemm_onehot`` — one-hot × pre-gathered-LUT GEMM (BLAS/MXU-shaped);
+  used for low bitwidths, and routed through the Pallas kernel when
+  ``use_pallas`` (inference artifacts only).
+* ``error_gemm_gather`` — k-chunked gather; cheaper when Q is large (8-bit).
+
+Both are differentiable in ``e`` (codes are wrapped in stop_gradient).
+"""
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import lut_gemm as lk
+from . import quant
+
+# Cap on materialized one-hot elements per chunk (f32 count).
+ONEHOT_ELEM_CAP = 1 << 24
+# Above this Q, the gather formulation is cheaper than one-hot GEMM.
+ONEHOT_MAX_Q = 32
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """Static geometry of one substitutable conv layer."""
+
+    name: str
+    in_ch: int
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    pad: Optional[int] = None  # default: same-ish (kernel // 2)
+
+    @property
+    def padding(self) -> int:
+        return self.kernel // 2 if self.pad is None else self.pad
+
+    def out_hw(self, h: int, w: int):
+        p, k, s = self.padding, self.kernel, self.stride
+        return ((h + 2 * p - k) // s + 1, (w + 2 * p - k) // s + 1)
+
+    def mults_per_image(self, h: int, w: int) -> int:
+        ho, wo = self.out_hw(h, w)
+        return self.out_ch * ho * wo * self.in_ch * self.kernel * self.kernel
+
+
+@dataclass
+class QContext:
+    """Per-trace quantization/approximation context.
+
+    mode: 'float' | 'quant' | 'approx'.
+    ste: straight-through rounding (calibration / retraining graphs).
+    use_pallas: route the error GEMM through the Pallas kernel (fwd only).
+    act_q: per-layer (s_x, b_x); lwc: per-layer (gamma, beta);
+    e_list: per-layer flat error vectors (length 2^(w_bits+a_bits));
+    w_bits/a_bits: per-layer bitwidths.
+    collect: when not None, pre-quant conv inputs are appended per layer.
+    """
+
+    mode: str = "float"
+    ste: bool = False
+    use_pallas: bool = False
+    act_q: Optional[List] = None
+    lwc: Optional[List] = None
+    e_list: Optional[List] = None
+    w_bits: Optional[List[int]] = None
+    a_bits: Optional[List[int]] = None
+    collect: Optional[List] = None
+
+
+def im2col(x, kernel: int, stride: int, pad: int):
+    """NCHW → ``[B, P, K]`` patch matrix (K = C·kh·kw, matching
+    ``w.reshape(O, -1)`` ordering), plus the output spatial dims."""
+    b, _, h, w = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x, (kernel, kernel), (stride, stride), padding=((pad, pad), (pad, pad))
+    )  # [B, C*kh*kw, Ho, Wo]
+    _, k_dim, ho, wo = patches.shape
+    return patches.reshape(b, k_dim, ho * wo).transpose(0, 2, 1), (ho, wo)
+
+
+def error_gemm_onehot(x_codes, ew, use_pallas=False):
+    """``err[b, p, o] = Σ_k EW[k, x̂[b,p,k], o]`` via one-hot GEMM.
+
+    x_codes: [B, P, K] float codes; ew: [K, Q, O].
+    Chunks the flattened (B·P) dimension so the one-hot never exceeds
+    ONEHOT_ELEM_CAP elements.
+    """
+    b, p, k = x_codes.shape
+    _, q, o = ew.shape
+    m = b * p
+    xm = x_codes.reshape(m, k)
+    if use_pallas:
+        err = lk.lut_gemm(xm, ew)
+        return err.reshape(b, p, o)
+    chunk = max(1, min(m, ONEHOT_ELEM_CAP // max(1, k * q)))
+    ew_mat = ew.reshape(k * q, o)
+
+    def one_chunk(xc):
+        oh = jax.nn.one_hot(xc.astype(jnp.int32), q, dtype=jnp.float32)  # [mc, K, Q]
+        return oh.reshape(xc.shape[0], k * q) @ ew_mat
+
+    if chunk >= m:
+        return one_chunk(xm).reshape(b, p, o)
+    n_chunks = -(-m // chunk)
+    m_pad = n_chunks * chunk - m
+    xm = jnp.pad(xm, ((0, m_pad), (0, 0)))
+    out = lax.map(one_chunk, xm.reshape(n_chunks, chunk, k))
+    return out.reshape(n_chunks * chunk, o)[:m].reshape(b, p, o)
+
+
+def error_gemm_gather(x_codes, w_codes, e, qw: int, k_chunk: int = 8):
+    """``err[b, p, o] = Σ_k e_flat[x̂[b,p,k]·Qw + ŵ[o,k]]`` via k-chunked
+    gather — cheaper than one-hot when Q is large (8-bit layers).
+
+    x_codes: [B, P, K]; w_codes: [O, K]; e: flat [Qx·Qw].
+    """
+    b, p, k = x_codes.shape
+    o = w_codes.shape[0]
+    k_pad = (-k) % k_chunk
+    if k_pad:
+        # Padded slots index e[0·Qw + 0]; subtract their contribution after.
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, 0), (0, k_pad)))
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, k_pad)))
+    n_steps = (k + k_pad) // k_chunk
+    xs = x_codes.reshape(b, p, n_steps, k_chunk).transpose(2, 0, 1, 3)  # [S,B,P,kc]
+    ws = w_codes.reshape(o, n_steps, k_chunk).transpose(1, 0, 2)  # [S,O,kc]
+
+    def step(acc, inp):
+        xc, wc = inp  # [B,P,kc], [O,kc]
+        idx = (xc[:, :, None, :] * qw + wc[None, None, :, :]).astype(jnp.int32)
+        return acc + jnp.take(e, idx, axis=0).sum(-1), None
+
+    init = jnp.zeros((b, p, o), jnp.float32)
+    acc, _ = lax.scan(step, init, (xs, ws))
+    if k_pad:
+        acc = acc - k_pad * e[0]
+    return acc
+
+
+def error_conv(x, spec: ConvSpec, x_codes_img, w_codes, e_flat, qx: int, qw: int,
+               use_pallas: bool = False):
+    """Error term of Eq. 8 for a conv layer, shaped [B, O, Ho, Wo].
+
+    x_codes_img: [B, C, H, W] activation codes; w_codes: [O, C, kh, kw].
+    """
+    del x  # geometry comes from codes
+    b = x_codes_img.shape[0]
+    patches, (ho, wo) = im2col(x_codes_img, spec.kernel, spec.stride, spec.padding)
+    w_mat = w_codes.reshape(spec.out_ch, -1)  # [O, K]
+    if qx <= ONEHOT_MAX_Q and qw <= ONEHOT_MAX_Q:
+        e2d = e_flat.reshape(qx, qw)
+        ew = lk.build_ew(e2d, w_mat.T)  # [K, Qx, O]
+        err = error_gemm_onehot(patches, ew, use_pallas=use_pallas)
+    else:
+        err = error_gemm_gather(patches, w_mat, e_flat, qw)
+    return err.reshape(b, ho, wo, spec.out_ch).transpose(0, 3, 1, 2)
+
+
+def conv_float(x, w, b, spec: ConvSpec):
+    """Plain f32 conv + bias."""
+    y = lax.conv_general_dilated(
+        x, w, (spec.stride, spec.stride),
+        padding=((spec.padding, spec.padding), (spec.padding, spec.padding)),
+    )
+    return y + b[None, :, None, None]
+
+
+def conv_apply(i: int, spec: ConvSpec, params, ctx: QContext, x):
+    """Apply conv layer `i` under the context's mode.
+
+    In 'quant'/'approx' modes this computes Eq. 4 via dequantized operands
+    (mathematically identical, numerically friendlier), and in 'approx' adds
+    the Eq. 8 error term with stop-gradient codes.
+    """
+    w = params[f"{spec.name}.w"]
+    b = params[f"{spec.name}.b"]
+    if ctx.collect is not None:
+        ctx.collect.append(x)
+    if ctx.mode == "float":
+        return conv_float(x, w, b, spec)
+    s_x, b_x = ctx.act_q[i]
+    gamma, beta = ctx.lwc[i]
+    a_bits, w_bits = ctx.a_bits[i], ctx.w_bits[i]
+    xq, x_deq = quant.quantize_act(x, s_x, b_x, a_bits, ste=ctx.ste)
+    wq, w_deq, s_w, _b_w = quant.lwc_weight_quant(w, gamma, beta, w_bits, ste=ctx.ste)
+    y = conv_float(x_deq, w_deq, b, spec)
+    if ctx.mode == "approx":
+        e_flat = ctx.e_list[i]
+        x_codes = lax.stop_gradient(xq)
+        w_codes = lax.stop_gradient(wq)
+        err = error_conv(x, spec, x_codes, w_codes, e_flat,
+                         qx=1 << a_bits, qw=1 << w_bits,
+                         use_pallas=ctx.use_pallas)
+        # s_w is per-output-channel [O,1,1,1]; broadcast over [B,O,Ho,Wo]
+        sw_b = s_w.reshape(1, -1, 1, 1) if jnp.ndim(s_w) > 0 else s_w
+        y = y + s_x * sw_b * err
+    return y
+
+
+def avg_pool(x, k: int = 2):
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // k, k, w // k, k).mean(axis=(3, 5))
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(2, 3))
+
+
+def linear(x, w, b):
+    return x @ w + b
+
+
+def cross_entropy(logits, labels_f32):
+    """Per-sample CE; labels arrive as f32 class indices (PJRT contract)."""
+    labels = labels_f32.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]

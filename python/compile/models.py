@@ -1,0 +1,220 @@
+"""Layer 2 — model zoo (mini ResNet / VGG / SqueezeNet).
+
+Channel-scaled versions of the paper's evaluation models, preserving the
+topological structure that drives layer-wise sensitivity (residual blocks,
+VGG conv stacks, Fire modules) on 3×16×16 synthetic-CIFAR images. The
+substitution rationale is documented in DESIGN.md §3.
+
+Every conv is a substitutable layer (the paper applies one AppMul per conv
+layer, including residual shortcuts); the final linear classifier stays
+exact, as in prior AppMul work.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ConvSpec, QContext, conv_apply, avg_pool, global_avg_pool, linear
+
+
+@dataclass
+class ModelDef:
+    name: str
+    num_classes: int
+    image_shape: tuple  # (C, H, W)
+    convs: List[ConvSpec]
+    fc_in: int
+    forward: Callable  # (params, x, ctx) -> logits
+    param_names: List[str] = field(default_factory=list)
+
+    def init_params(self, seed: int = 0):
+        """He-normal conv weights, zero biases, LeCun fc."""
+        key = jax.random.PRNGKey(seed)
+        params = {}
+        for spec in self.convs:
+            key, k1 = jax.random.split(key)
+            fan_in = spec.in_ch * spec.kernel * spec.kernel
+            std = (2.0 / fan_in) ** 0.5
+            params[f"{spec.name}.w"] = std * jax.random.normal(
+                k1, (spec.out_ch, spec.in_ch, spec.kernel, spec.kernel), jnp.float32
+            )
+            params[f"{spec.name}.b"] = jnp.zeros((spec.out_ch,), jnp.float32)
+        key, k1 = jax.random.split(key)
+        params["fc.w"] = (1.0 / self.fc_in**0.5) * jax.random.normal(
+            k1, (self.fc_in, self.num_classes), jnp.float32
+        )
+        params["fc.b"] = jnp.zeros((self.num_classes,), jnp.float32)
+        assert list(params.keys()) == self.param_names
+        return params
+
+    def _param_shape(self, name: str):
+        if name == "fc.w":
+            return (self.fc_in, self.num_classes)
+        if name == "fc.b":
+            return (self.num_classes,)
+        base, kind = name.rsplit(".", 1)
+        spec = next(s for s in self.convs if s.name == base)
+        if kind == "w":
+            return (spec.out_ch, spec.in_ch, spec.kernel, spec.kernel)
+        return (spec.out_ch,)
+
+
+def _finish_modeldef(md: ModelDef) -> ModelDef:
+    md.param_names = [f"{s.name}.{k}" for s in md.convs for k in ("w", "b")] + [
+        "fc.w",
+        "fc.b",
+    ]
+
+    def conv_input_shapes(batch: int = 1):
+        """Record each conv's input (C, H, W) by abstract evaluation."""
+        collected: List = []
+        ctx = QContext(
+            mode="quant",
+            ste=False,
+            act_q=[(jnp.float32(0.1), jnp.float32(0.0))] * len(md.convs),
+            lwc=[(jnp.float32(4.0), jnp.float32(4.0))] * len(md.convs),
+            w_bits=[4] * len(md.convs),
+            a_bits=[4] * len(md.convs),
+            collect=collected,
+        )
+        params = {
+            n: jax.ShapeDtypeStruct(md._param_shape(n), jnp.float32)
+            for n in md.param_names
+        }
+        x = jax.ShapeDtypeStruct((batch, *md.image_shape), jnp.float32)
+        jax.eval_shape(lambda p, xx: md.forward(p, xx, ctx), params, x)
+        return [tuple(c.shape[1:]) for c in collected]
+
+    md.conv_input_shapes = conv_input_shapes  # type: ignore[method-assign]
+    return md
+
+
+# ---------------------------------------------------------------------------
+# ResNet (CIFAR-style: 3 stages, stride-2 transitions, identity/projection
+# shortcuts). depth = 2 + 6·blocks_per_stage convs (+ projections).
+# ---------------------------------------------------------------------------
+
+
+def make_resnet(name: str, blocks_per_stage: int, widths=(8, 16, 32), num_classes: int = 10,
+                image_shape=(3, 16, 16)) -> ModelDef:
+    convs: List[ConvSpec] = [ConvSpec("conv0", image_shape[0], widths[0], 3)]
+    order = []  # (kind, payload) list mirrored by forward()
+    in_ch = widths[0]
+    for s, width in enumerate(widths):
+        for b in range(blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            proj = stride != 1 or in_ch != width
+            base = f"s{s}b{b}"
+            convs.append(ConvSpec(f"{base}.c1", in_ch, width, 3, stride))
+            convs.append(ConvSpec(f"{base}.c2", width, width, 3, 1))
+            if proj:
+                convs.append(ConvSpec(f"{base}.sc", in_ch, width, 1, stride, pad=0))
+            order.append((len(convs) - (3 if proj else 2), proj))
+            in_ch = width
+
+    def forward(params, x, ctx: QContext):
+        h = jax.nn.relu(conv_apply(0, convs[0], params, ctx, x))
+        i = 1
+        for first_idx, proj in order:
+            assert i == first_idx
+            h1 = jax.nn.relu(conv_apply(i, convs[i], params, ctx, h))
+            h2 = conv_apply(i + 1, convs[i + 1], params, ctx, h1)
+            if proj:
+                sc = conv_apply(i + 2, convs[i + 2], params, ctx, h)
+                i += 3
+            else:
+                sc = h
+                i += 2
+            h = jax.nn.relu(h2 + sc)
+        feat = global_avg_pool(h)
+        return linear(feat, params["fc.w"], params["fc.b"])
+
+    return _finish_modeldef(
+        ModelDef(name, num_classes, image_shape, convs, widths[-1], forward)
+    )
+
+
+# ---------------------------------------------------------------------------
+# VGG-style conv stack ('M' = 2×2 avg-pool), GAP head.
+# ---------------------------------------------------------------------------
+
+
+def make_vgg(name: str, cfg=(8, 8, "M", 16, 16, "M", 32, 32, "M"), num_classes: int = 10,
+             image_shape=(3, 16, 16)) -> ModelDef:
+    convs: List[ConvSpec] = []
+    in_ch = image_shape[0]
+    for item in cfg:
+        if item == "M":
+            continue
+        convs.append(ConvSpec(f"conv{len(convs)}", in_ch, int(item), 3))
+        in_ch = int(item)
+    last = in_ch
+
+    def forward(params, x, ctx: QContext):
+        h = x
+        ci = 0
+        for item in cfg:
+            if item == "M":
+                h = avg_pool(h, 2)
+            else:
+                h = jax.nn.relu(conv_apply(ci, convs[ci], params, ctx, h))
+                ci += 1
+        feat = global_avg_pool(h)
+        return linear(feat, params["fc.w"], params["fc.b"])
+
+    return _finish_modeldef(ModelDef(name, num_classes, image_shape, convs, last, forward))
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet-style Fire modules (squeeze 1×1 → expand 1×1 ∥ 3×3, concat).
+# ---------------------------------------------------------------------------
+
+
+def make_squeezenet(name: str, num_classes: int = 100, image_shape=(3, 16, 16)) -> ModelDef:
+    convs: List[ConvSpec] = [ConvSpec("conv0", image_shape[0], 8, 3)]
+    fires = [(8, 4, 8), (16, 8, 16)]  # (in, squeeze, expand)
+    for f, (cin, cs, ce) in enumerate(fires):
+        convs.append(ConvSpec(f"fire{f}.sq", cin, cs, 1, pad=0))
+        convs.append(ConvSpec(f"fire{f}.e1", cs, ce, 1, pad=0))
+        convs.append(ConvSpec(f"fire{f}.e3", cs, ce, 3))
+    last = 2 * fires[-1][2]
+
+    def forward(params, x, ctx: QContext):
+        h = jax.nn.relu(conv_apply(0, convs[0], params, ctx, x))
+        h = avg_pool(h, 2)
+        i = 1
+        for f in range(len(fires)):
+            sq = jax.nn.relu(conv_apply(i, convs[i], params, ctx, h))
+            e1 = jax.nn.relu(conv_apply(i + 1, convs[i + 1], params, ctx, sq))
+            e3 = jax.nn.relu(conv_apply(i + 2, convs[i + 2], params, ctx, sq))
+            h = jnp.concatenate([e1, e3], axis=1)
+            if f + 1 < len(fires):
+                h = avg_pool(h, 2)
+            i += 3
+        feat = global_avg_pool(h)
+        return linear(feat, params["fc.w"], params["fc.b"])
+
+    return _finish_modeldef(ModelDef(name, num_classes, image_shape, convs, last, forward))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def build(name: str) -> ModelDef:
+    builders = {
+        "resnet8": lambda: make_resnet("resnet8", 1),
+        "resnet14": lambda: make_resnet("resnet14", 2),
+        "resnet20": lambda: make_resnet("resnet20", 3),
+        "vgg11": lambda: make_vgg("vgg11"),
+        "squeezenet": lambda: make_squeezenet("squeezenet"),
+    }
+    if name not in builders:
+        raise KeyError(f"unknown model '{name}' (have {sorted(builders)})")
+    return builders[name]()
+
+
+MODEL_NAMES = ["resnet8", "resnet14", "resnet20", "vgg11", "squeezenet"]

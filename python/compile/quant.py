@@ -1,0 +1,72 @@
+"""Quantization primitives (Layer 2).
+
+Implements the paper's preliminaries:
+
+* asymmetric uniform quantization (Eq. 1-2): ``v̂ = round((v - b) / s)``,
+  ``v ≈ s·v̂ + b`` with unsigned codes in ``[0, 2^N - 1]`` so the code pair
+  directly indexes the AppMul LUT;
+* Learnable Weight Clipping (LWC, Eq. 6, from OmniQuant): learnable γ/β
+  squeeze the clip range ``[σ(γ)·min(W), σ(β)·max(W)]``;
+* straight-through estimator (STE) rounding for the calibration /
+  retraining graphs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def round_ste(x):
+    """Round with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def act_qparams_init(x_min, x_max, bits):
+    """Initial activation scale/offset covering ``[x_min, x_max]``."""
+    levels = (1 << bits) - 1
+    span = max(x_max - x_min, 1e-6)
+    return span / levels, x_min
+
+
+def quantize_act(x, s, b, bits, ste=False):
+    """Quantize activations to unsigned codes.
+
+    Returns ``(codes, dequantized)``. ``codes`` are float-valued integers in
+    ``[0, 2^bits - 1]`` (everything crossing PJRT is f32).
+    """
+    levels = (1 << bits) - 1
+    rnd = round_ste if ste else jnp.round
+    q = jnp.clip(rnd((x - b) / s), 0.0, float(levels))
+    return q, s * q + b
+
+
+def lwc_weight_quant(w, gamma, beta, bits, ste=False):
+    """LWC-clipped weight quantization (paper Eq. 6 + Eq. 1-2).
+
+    **Per-output-channel** ranges (HAWQ/OmniQuant practice): for a conv
+    weight ``[O, I, kh, kw]`` the min/max reduce over all but the leading
+    axis, so each output channel gets its own scale/offset. γ/β stay scalar
+    per layer, exactly as in Eq. 6. Returns ``(codes, dequantized, s_w,
+    b_w)`` with ``s_w``/``b_w`` broadcastable against ``w``.
+    """
+    if w.ndim > 1:
+        axes = tuple(range(1, w.ndim))
+        w_min = jnp.min(w, axis=axes, keepdims=True)
+        w_max = jnp.max(w, axis=axes, keepdims=True)
+    else:
+        w_min = jnp.min(w)
+        w_max = jnp.max(w)
+    lo = sigmoid(gamma) * w_min
+    hi = sigmoid(beta) * w_max
+    # Guard the degenerate all-equal case.
+    hi = jnp.maximum(hi, lo + 1e-6)
+    w_c = jnp.clip(w, lo, hi)
+    levels = (1 << bits) - 1
+    s = (hi - lo) / levels
+    b = lo
+    rnd = round_ste if ste else jnp.round
+    q = jnp.clip(rnd((w_c - b) / s), 0.0, float(levels))
+    return q, s * q + b, s, b

@@ -1,0 +1,85 @@
+"""Layer-1 correctness: Pallas LUT-GEMM vs the pure oracle.
+
+The Pallas kernel is the CORE correctness signal of the compile path — it is
+what ends up inside the `fwd_pallas` artifact the rust runtime executes.
+Hypothesis sweeps shapes and bitwidths.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lut_gemm as lk
+from compile.kernels import ref
+
+
+def random_case(rng, m, k, n, qx, qw):
+    x = rng.integers(0, qx, size=(m, k))
+    w = rng.integers(0, qw, size=(k, n))
+    lut = rng.normal(size=(qx, qw)).astype(np.float32)
+    return x, w, lut
+
+
+@pytest.mark.parametrize("m,k,n,qx,qw", [
+    (4, 3, 2, 4, 4),
+    (16, 9, 8, 16, 16),
+    (130, 27, 8, 16, 16),   # exercises M padding (tile 128)
+    (8, 5, 3, 4, 8),        # rectangular LUT (w≠a bits)
+])
+def test_pallas_matches_oracle(m, k, n, qx, qw):
+    rng = np.random.default_rng(m * 1000 + k)
+    x, w, lut = random_case(rng, m, k, n, qx, qw)
+    want = ref.lut_gemm_ref(x, w, lut)
+    ew = lk.build_ew(jnp.array(lut), jnp.array(w, dtype=jnp.float32))
+    got = lk.lut_gemm(jnp.array(x, dtype=jnp.float32), ew)
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 30),
+    n=st.integers(1, 12),
+    qbits=st.sampled_from([(2, 2), (3, 3), (4, 4), (2, 4), (4, 2)]),
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([8, 32, 128]),
+)
+def test_pallas_hypothesis_sweep(m, k, n, qbits, seed, tile):
+    qx, qw = 1 << qbits[0], 1 << qbits[1]
+    rng = np.random.default_rng(seed)
+    x, w, lut = random_case(rng, m, k, n, qx, qw)
+    want = ref.lut_gemm_ref(x, w, lut)
+    ew = lk.build_ew(jnp.array(lut), jnp.array(w, dtype=jnp.float32))
+    got = lk.lut_gemm(jnp.array(x, dtype=jnp.float32), ew, tile_m=tile)
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_convenience_wrapper():
+    rng = np.random.default_rng(7)
+    x, w, lut = random_case(rng, 6, 4, 3, 8, 8)
+    want = ref.lut_gemm_ref(x, w, lut)
+    got = lk.lut_gemm_from_codes(
+        jnp.array(x, jnp.float32), jnp.array(w, jnp.float32), jnp.array(lut))
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_exact_multiplier_lut_reproduces_int_gemm():
+    """With LUT[a,b] = a·b the LUT-GEMM must equal the plain integer GEMM."""
+    rng = np.random.default_rng(3)
+    qx = qw = 16
+    x = rng.integers(0, qx, size=(12, 9))
+    w = rng.integers(0, qw, size=(9, 5))
+    lut = np.outer(np.arange(qx), np.arange(qw)).astype(np.float32)
+    got = lk.lut_gemm_from_codes(
+        jnp.array(x, jnp.float32), jnp.array(w, jnp.float32), jnp.array(lut))
+    np.testing.assert_allclose(np.array(got), (x @ w).astype(np.float64), rtol=1e-5)
+
+
+def test_vmem_estimate_within_tpu_budget():
+    """DESIGN §Perf: worst model-zoo tile fits a 16 MiB VMEM."""
+    worst = max(
+        lk.vmem_bytes_estimate(k=288, q=16, n=32),   # biggest 4-bit layer
+        lk.vmem_bytes_estimate(k=72, q=256, n=8),    # biggest 8-bit layer
+    )
+    assert worst < 16 * 1024 * 1024

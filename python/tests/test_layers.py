@@ -1,0 +1,229 @@
+"""Layer-2 correctness: quantizers, error-conv formulations, Eq. 8 identity."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.layers import (
+    ConvSpec, QContext, conv_apply, error_conv, error_gemm_gather,
+    error_gemm_onehot, im2col, cross_entropy,
+)
+from compile.kernels import lut_gemm as lk
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+
+def test_act_quant_roundtrip_exact_grid():
+    """Values on the quantization grid survive the round trip exactly."""
+    s, b, bits = 0.25, -1.0, 3
+    codes = jnp.arange(8, dtype=jnp.float32)
+    x = s * codes + b
+    q, deq = quant.quantize_act(x, s, b, bits)
+    np.testing.assert_allclose(np.array(q), np.array(codes))
+    np.testing.assert_allclose(np.array(deq), np.array(x), atol=1e-6)
+
+
+def test_act_quant_clips_out_of_range():
+    q, _ = quant.quantize_act(jnp.array([-10.0, 10.0]), 0.1, 0.0, 2)
+    assert q.tolist() == [0.0, 3.0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 10**6))
+def test_act_quant_error_bounded_by_half_step(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, size=64).astype(np.float32)
+    s, b = quant.act_qparams_init(-1.0, 1.0, bits)
+    _, deq = quant.quantize_act(jnp.array(x), s, b, bits)
+    assert np.max(np.abs(np.array(deq) - x)) <= s / 2 + 1e-6
+
+
+def test_lwc_wide_bounds_recover_minmax_quant():
+    """γ=β=+8 ⇒ σ≈1 ⇒ LWC reduces to per-channel min/max quantization."""
+    rng = np.random.default_rng(0)
+    w = jnp.array(rng.normal(size=(4, 3, 3, 3)).astype(np.float32))
+    q, deq, s, b = quant.lwc_weight_quant(w, 8.0, 8.0, 4)
+    assert s.shape == (4, 1, 1, 1) and b.shape == (4, 1, 1, 1)
+    # every channel spans its own code range...
+    q_np = np.array(q)
+    for o in range(4):
+        assert q_np[o].min() == 0.0 and q_np[o].max() == 15.0
+    # ...and round-trips within half a per-channel step
+    err = np.abs(np.array(deq) - np.array(w))
+    assert np.all(err <= np.array(s) / 2 * (1 + 1e-3) + 1e-5)
+
+
+def test_lwc_tight_bounds_clip():
+    w = jnp.array([-4.0, -1.0, 0.0, 1.0, 4.0])
+    # σ(-2) ≈ 0.119: bounds ≈ ±0.48 — everything clips hard.
+    _, deq, _, _ = quant.lwc_weight_quant(w, -2.0, -2.0, 4)
+    assert float(jnp.max(jnp.abs(deq))) < 0.5
+
+
+def test_lwc_gradients_flow_to_bounds():
+    """Autodiff through Eq. 6 matches the paper's piecewise gradient: only
+    clipped weights contribute to ∂/∂γ, ∂/∂β."""
+    w = jnp.array([-4.0, -0.1, 0.1, 4.0])
+
+    def f(gamma, beta):
+        _, deq, _, _ = quant.lwc_weight_quant(w, gamma, beta, 8, ste=True)
+        return jnp.sum(deq)
+
+    dg, db = jax.grad(f, argnums=(0, 1))(0.0, 0.0)
+    # lower bound moves with γ via σ'(γ)·min(w): negative direction
+    assert float(dg) < 0.0
+    assert float(db) > 0.0
+
+
+def test_round_ste_gradient_is_identity():
+    g = jax.grad(lambda x: quant.round_ste(x * 3.0))(0.3)
+    assert float(g) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# error-term formulations agree with the oracle and each other
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qx,qw", [(4, 4), (16, 16), (4, 16), (256, 256)])
+def test_error_gemm_formulations_agree(qx, qw):
+    rng = np.random.default_rng(qx + qw)
+    b, p, k, o = 2, 6, 5, 3
+    x = jnp.array(rng.integers(0, qx, size=(b, p, k)), jnp.float32)
+    w = jnp.array(rng.integers(0, qw, size=(o, k)), jnp.float32)
+    e2d = rng.normal(size=(qx, qw)).astype(np.float32)
+    e_flat = jnp.array(e2d.reshape(-1))
+    got_gather = error_gemm_gather(x, w, e_flat, qw)
+    # oracle per batch entry
+    for bi in range(b):
+        want = ref.lut_gemm_ref(np.array(x[bi]), np.array(w).T, e2d)
+        np.testing.assert_allclose(np.array(got_gather[bi]), want, rtol=1e-4, atol=1e-4)
+    if qx <= 32:
+        ew = lk.build_ew(jnp.array(e2d), w.T)
+        got_oh = error_gemm_onehot(x, ew)
+        np.testing.assert_allclose(np.array(got_oh), np.array(got_gather), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_error_gemm_gather_k_padding():
+    """K not a multiple of the chunk must not change the result (the padded
+    slots' e[0] contribution is subtracted)."""
+    rng = np.random.default_rng(5)
+    qx = qw = 4
+    b, p, k, o = 1, 3, 9, 2  # k=9, chunk=8 → one padded slot
+    x = jnp.array(rng.integers(0, qx, size=(b, p, k)), jnp.float32)
+    w = jnp.array(rng.integers(0, qw, size=(o, k)), jnp.float32)
+    e2d = rng.normal(size=(qx, qw)).astype(np.float32)
+    e2d[0, 0] = 17.0  # make a wrong-padding bug loud
+    got = error_gemm_gather(x, w, jnp.array(e2d.reshape(-1)), qw)
+    want = ref.lut_gemm_ref(np.array(x[0]), np.array(w).T, e2d)
+    np.testing.assert_allclose(np.array(got[0]), want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 8: approx conv == exact quant conv + s_x·s_w·(counting ⊙ E)
+# ---------------------------------------------------------------------------
+
+
+def _quant_setup(seed=0, bits=4):
+    rng = np.random.default_rng(seed)
+    spec = ConvSpec("c", 3, 4, 3)
+    x = jnp.array(rng.normal(size=(2, 3, 8, 8)).astype(np.float32))
+    params = {
+        "c.w": jnp.array(0.3 * rng.normal(size=(4, 3, 3, 3)).astype(np.float32)),
+        "c.b": jnp.array(rng.normal(size=(4,)).astype(np.float32)),
+    }
+    q = 1 << bits
+    e2d = rng.normal(size=(q, q)).astype(np.float32)
+    ctx_kw = dict(
+        act_q=[(jnp.float32(0.05), jnp.float32(-1.0))],
+        lwc=[(jnp.float32(8.0), jnp.float32(8.0))],
+        w_bits=[bits], a_bits=[bits],
+    )
+    return spec, x, params, e2d, ctx_kw
+
+
+def test_eq8_identity_zero_error_matches_quant():
+    spec, x, params, _, kw = _quant_setup()
+    y_quant = conv_apply(0, spec, params, QContext(mode="quant", **kw), x)
+    kw2 = dict(kw, e_list=[jnp.zeros(256)])
+    y_approx = conv_apply(0, spec, params, QContext(mode="approx", **kw2), x)
+    np.testing.assert_allclose(np.array(y_quant), np.array(y_approx), atol=1e-5)
+
+
+def test_eq8_identity_error_term_via_counting_matrix():
+    """Y_approx - Y_exact summed per channel == s_x·s_w[o]·Σ_ab T_o[a,b]·E[a,b]
+    (aggregate counting-matrix form of Eq. 8, per output channel since weight
+    quantization is per-channel)."""
+    spec, x, params, e2d, kw = _quant_setup()
+    bits = 4
+    y_quant = conv_apply(0, spec, params, QContext(mode="quant", **kw), x)
+    kw2 = dict(kw, e_list=[jnp.array(e2d.reshape(-1))])
+    y_approx = conv_apply(0, spec, params, QContext(mode="approx", **kw2), x)
+
+    # independent counting-matrix computation, per output channel
+    s_x, b_x = 0.05, -1.0
+    xq, _ = quant.quantize_act(x, s_x, b_x, bits)
+    wq, _, s_w, _ = quant.lwc_weight_quant(params["c.w"], 8.0, 8.0, bits)
+    patches, _ = im2col(xq, 3, 1, 1)
+    s_w = np.array(s_w).reshape(-1)
+    delta_per_ch = np.array(jnp.sum(y_approx - y_quant, axis=(0, 2, 3)))
+    for o in range(4):
+        t = np.zeros((16, 16), np.int64)
+        for bi in range(2):
+            t += ref.counting_matrix_ref(
+                np.array(patches[bi]),
+                np.array(wq.reshape(4, -1))[o:o + 1].T, 16, 16)
+        want = float(s_x) * float(s_w[o]) * float(np.sum(t * e2d))
+        np.testing.assert_allclose(delta_per_ch[o], want, rtol=1e-3)
+
+
+def test_paper_worked_example_counting_matrix():
+    """§IV-B worked example: C matches the paper's printed matrix."""
+    x, w, c_want, _ = ref.paper_worked_example()
+    # single valid position: patch == whole X, element-wise with W
+    t = ref.counting_matrix_ref(x.reshape(1, -1), w.reshape(-1, 1), 4, 4)
+    np.testing.assert_array_equal(t, c_want)
+
+
+def test_grad_wrt_e_is_counting_weighted(tmp_path):
+    """∇_E of (sum of approx outputs) equals s_x·s_w·T — the gather
+    transpose IS the counting matrix (Eq. 10 with dL/dY ≡ 1)."""
+    spec, x, params, e2d, kw = _quant_setup()
+    bits = 4
+
+    def f(e_flat):
+        ctx = QContext(mode="approx", **dict(kw, e_list=[e_flat]))
+        return jnp.sum(conv_apply(0, spec, params, ctx, x))
+
+    g = jax.grad(f)(jnp.zeros(256))
+    s_x, b_x = 0.05, -1.0
+    xq, _ = quant.quantize_act(x, s_x, b_x, bits)
+    wq, _, s_w, _ = quant.lwc_weight_quant(params["c.w"], 8.0, 8.0, bits)
+    patches, _ = im2col(xq, 3, 1, 1)
+    s_w = np.array(s_w).reshape(-1)
+    want = np.zeros((16, 16))
+    for o in range(4):
+        t = np.zeros((16, 16), np.int64)
+        for bi in range(2):
+            t += ref.counting_matrix_ref(
+                np.array(patches[bi]),
+                np.array(wq.reshape(4, -1))[o:o + 1].T, 16, 16)
+        want += float(s_x) * float(s_w[o]) * t
+    np.testing.assert_allclose(np.array(g).reshape(16, 16), want, rtol=1e-3, atol=1e-5)
+
+
+def test_cross_entropy_matches_numpy():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.0, 1.0, 0.0]])
+    labels = jnp.array([0.0, 2.0])
+    ce = cross_entropy(logits, labels)
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    p1 = 1.0 / (1 + np.e + 1)
+    np.testing.assert_allclose(np.array(ce), [-np.log(p0), -np.log(p1)], rtol=1e-5)

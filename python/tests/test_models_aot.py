@@ -1,0 +1,192 @@
+"""Model-zoo shape/consistency tests + AOT export contract tests."""
+
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, models
+from compile.layers import QContext
+
+
+@pytest.mark.parametrize("name,n_convs", [
+    ("resnet8", 9), ("resnet14", 15), ("resnet20", 21),
+    ("vgg11", 6), ("squeezenet", 7),
+])
+def test_zoo_geometry(name, n_convs):
+    md = models.build(name)
+    assert len(md.convs) == n_convs
+    shapes = md.conv_input_shapes(1)
+    assert len(shapes) == n_convs
+    # every conv's declared in_ch matches the traced input
+    for spec, (c, _, _) in zip(md.convs, shapes):
+        assert spec.in_ch == c, spec.name
+
+
+@pytest.mark.parametrize("name", models.MODEL_NAMES)
+def test_float_forward_shapes_and_finite(name):
+    md = models.build(name)
+    params = md.init_params(0)
+    x = jnp.array(np.random.default_rng(0).normal(size=(2, *md.image_shape)),
+                  jnp.float32)
+    logits = md.forward(params, x, QContext(mode="float"))
+    assert logits.shape == (2, md.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_quant_forward_close_to_float_at_8_bits():
+    """8-bit quantization should barely move the logits of a random net."""
+    md = models.build("resnet8")
+    params = md.init_params(0)
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.uniform(0, 1, size=(2, *md.image_shape)), jnp.float32)
+    n = len(md.convs)
+    y_f = md.forward(params, x, QContext(mode="float"))
+    ctx = QContext(
+        mode="quant",
+        act_q=[(jnp.float32(4.0 / 255), jnp.float32(-2.0))] * n,
+        lwc=[(jnp.float32(8.0), jnp.float32(8.0))] * n,
+        w_bits=[8] * n, a_bits=[8] * n,
+    )
+    y_q = md.forward(params, x, ctx)
+    assert float(jnp.max(jnp.abs(y_f - y_q))) < 0.2 * float(jnp.max(jnp.abs(y_f)) + 1)
+
+
+def test_bit_config_mixed_average():
+    md = models.build("resnet20")
+    wb, ab = aot.bit_config(md, "mixed")
+    assert wb == ab
+    assert wb[0] == 8 and wb[-1] == 2
+    avg = sum(wb) / len(wb)
+    assert 3.0 <= avg <= 5.0
+
+
+def test_bit_config_uniform_parse():
+    md = models.build("resnet8")
+    wb, ab = aot.bit_config(md, "w4a8")
+    assert set(wb) == {4} and set(ab) == {8}
+    with pytest.raises(KeyError):
+        aot.bit_config(md, "bogus")
+
+
+def test_packing_spec_and_unpack_roundtrip():
+    md = models.build("resnet8")
+    wb, ab = aot.bit_config(md, "w3a3")
+    pk = aot.Packing(md, wb, ab, md.conv_input_shapes(1))
+    groups = ["params", "lwc", "act_q", "e_list", "images_train", "labels_train"]
+    specs = pk.specs(groups, aot.TRAIN_BATCH)
+    vals = [jnp.zeros(s.shape, s.dtype) for s in specs]
+    u = pk.unpack(groups, vals)
+    assert set(u["params"].keys()) == set(md.param_names)
+    assert len(u["lwc"]) == len(md.convs)
+    assert len(u["e_list"]) == len(md.convs)
+    assert all(e.shape == (64,) for e in u["e_list"])  # 2^3 · 2^3
+    assert u["images_train"].shape == (aot.TRAIN_BATCH, *md.image_shape)
+
+
+def test_export_set_writes_manifest_and_hlo(tmp_path):
+    out = str(tmp_path)
+    aot.export_set("resnet8", "w2a2", out, only={"fwd"})
+    mdir = tmp_path / "resnet8_w2a2"
+    mj = json.loads((mdir / "manifest.json").read_text())
+    assert mj["model"] == "resnet8" and mj["cfg"] == "w2a2"
+    assert len(mj["layers"]) == 9
+    lay0 = mj["layers"][0]
+    assert lay0["e_rows"] == 4 and lay0["e_cols"] == 4
+    # mults formula (paper §IV-D): N_O·H·W·N_I·W_K·H_K
+    assert lay0["mults_per_image"] == 8 * 16 * 16 * 3 * 3 * 3
+    hlo = (mdir / "fwd.hlo.txt").read_text()
+    assert hlo.startswith("HloModule")
+    # executable contract recorded for every exe even when not lowered
+    assert set(mj["executables"]) == {
+        "train", "acts_float", "fwd", "fwd_pallas", "fwd_acts",
+        "grad_e", "hvp_e", "quad_e", "calib", "retrain",
+    }
+
+
+def test_grad_e_matches_finite_difference():
+    """End-to-end ∇_E check through a full (tiny) model."""
+    md = models.build("resnet8")
+    params = md.init_params(0)
+    wb, ab = aot.bit_config(md, "w2a2")
+    n = len(md.convs)
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.uniform(0, 1, size=(4, *md.image_shape)), jnp.float32)
+    labels = jnp.array(rng.integers(0, 10, size=4), jnp.float32)
+    act_q = [(jnp.float32(0.3), jnp.float32(0.0))] * n
+    lwc = [(jnp.float32(8.0), jnp.float32(8.0))] * n
+    e_list = [jnp.zeros(16) for _ in range(n)]
+
+    def loss_of(e_list):
+        # STE as in the exported grad_e graph (see aot.loss_wrt_e).
+        ctx = QContext(mode="approx", ste=True, act_q=act_q, lwc=lwc,
+                       e_list=e_list, w_bits=wb, a_bits=ab)
+        logits = md.forward(params, x, ctx)
+        from compile.layers import cross_entropy
+        return cross_entropy(logits, labels).mean()
+
+    g = jax.grad(loss_of)(e_list)
+    # With STE, the error of EVERY layer influences the loss estimate.
+    for i in range(n):
+        assert float(jnp.abs(g[i]).sum()) > 0.0, f"zero grad at layer {i}"
+    # FD is only well-posed where no downstream rounding intervenes: the
+    # last conv layer (its output reaches the loss through relu/GAP/fc).
+    layer = n - 1
+    eps = 1e-3
+    checked = 0
+    for coord in range(16):
+        if abs(float(g[layer][coord])) < 1e-4:
+            continue
+        ep = [e.at[coord].add(eps) if i == layer else e for i, e in enumerate(e_list)]
+        em = [e.at[coord].add(-eps) if i == layer else e for i, e in enumerate(e_list)]
+        fd = (float(loss_of(ep)) - float(loss_of(em))) / (2 * eps)
+        np.testing.assert_allclose(float(g[layer][coord]), fd, rtol=0.05, atol=1e-4)
+        checked += 1
+    assert checked >= 2
+
+
+def test_hvp_matches_finite_difference_of_grad():
+    md = models.build("resnet8")
+    params = md.init_params(1)
+    wb, ab = aot.bit_config(md, "w2a2")
+    n = len(md.convs)
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.uniform(0, 1, size=(4, *md.image_shape)), jnp.float32)
+    labels = jnp.array(rng.integers(0, 10, size=4), jnp.float32)
+    act_q = [(jnp.float32(0.3), jnp.float32(0.0))] * n
+    lwc = [(jnp.float32(8.0), jnp.float32(8.0))] * n
+    e0 = [jnp.zeros(16) for _ in range(n)]
+    r = [jnp.array(rng.normal(size=16), jnp.float32) for _ in range(n)]
+
+    def loss_of(e_list):
+        ctx = QContext(mode="approx", ste=True, act_q=act_q, lwc=lwc,
+                       e_list=e_list, w_bits=wb, a_bits=ab)
+        logits = md.forward(params, x, ctx)
+        from compile.layers import cross_entropy
+        return cross_entropy(logits, labels).mean()
+
+    grad_fn = jax.grad(loss_of)
+    _, hr = jax.jvp(grad_fn, (e0,), (r,))
+
+    # Independent Gauss–Newton computation: with fixed codes, the logits are
+    # locally affine in e (conv/relu/STE tangents are linear), so
+    # H_e = Jᵀ·H_L(z)·J exactly, with H_L(z) the analytic softmax-CE Hessian
+    # (diag(p) − p pᵀ)/B per sample. FD is ill-posed here (the loss gradient
+    # is discontinuous at code flips), so this is the correct oracle.
+    def logits_of(el):
+        ctx = QContext(mode="approx", ste=True, act_q=act_q, lwc=lwc,
+                       e_list=el, w_bits=wb, a_bits=ab)
+        return md.forward(params, x, ctx)
+
+    z, jr = jax.jvp(logits_of, (e0,), (r,))  # J·r
+    p = jax.nn.softmax(z, axis=-1)
+    batch = z.shape[0]
+    # u_s = H_s · (J r)_s with H_s = (diag(p_s) − p_s p_sᵀ)/B
+    u = (p * jr - p * jnp.sum(p * jr, axis=-1, keepdims=True)) / batch
+    _, vjp_fn = jax.vjp(logits_of, e0)
+    (hr_gn,) = vjp_fn(u)
+    for i in range(n):
+        np.testing.assert_allclose(
+            np.array(hr[i]), np.array(hr_gn[i]), rtol=1e-3, atol=1e-5)

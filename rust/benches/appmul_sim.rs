@@ -1,0 +1,41 @@
+//! Bench: circuit-substrate hot paths — word-parallel LUT extraction,
+//! switching-energy estimation, and full library generation per bitwidth.
+//!
+//! Target (DESIGN.md §Perf): full 2/3/4/8-bit library in seconds; 8×8 LUT
+//! extraction well under 10 ms (word-parallel sweeps).
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use fames::appmul::generate_for_bits;
+use fames::circuit::{build_lut, build_multiplier, MulConfig};
+
+fn main() {
+    for bits in [4u32, 8] {
+        let net = build_multiplier(&MulConfig::exact(bits, bits));
+        println!(
+            "exact {bits}x{bits}: {} live gates, {:.0} ps critical path",
+            net.live_gate_count(),
+            net.critical_path_ps()
+        );
+        bench(&format!("lut_exhaustive/{bits}x{bits}"), 3, 30, || {
+            black_box(build_lut(black_box(&net), bits, bits));
+        });
+        bench(&format!("switching_energy_words/{bits}x{bits}"), 3, 30, || {
+            black_box(net.switching_energy_words_fj(32, 7));
+        });
+        bench(&format!("switching_energy_scalar/{bits}x{bits}"), 3, 10, || {
+            black_box(net.switching_energy_fj(2048, 7));
+        });
+    }
+    for bits in [2u32, 3, 4, 8] {
+        let r = bench(&format!("library_generation/{bits}x{bits}"), 0, 3, || {
+            black_box(generate_for_bits(bits, bits, 0));
+        });
+        let n = generate_for_bits(bits, bits, 0).len();
+        println!(
+            "  {bits}-bit library: {n} designs, {:.1} ms/design",
+            r.mean_ns / 1e6 / n as f64
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//!
+//! Each `[[bench]]` target is a plain binary with `harness = false` that
+//! calls [`bench`] for its cases: warmup, then timed iterations with
+//! mean/min/max reporting in a criterion-like format.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: u32,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        min_ns: min,
+        max_ns: max,
+        iters,
+    };
+    println!(
+        "{:48} time: [{:>12} {:>12} {:>12}]  ({} iters)",
+        r.name,
+        fmt_ns(r.min_ns),
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.max_ns),
+        r.iters
+    );
+    r
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Black-box to defeat the optimizer (std::hint::black_box re-export).
+pub use std::hint::black_box;

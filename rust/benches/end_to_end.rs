@@ -1,0 +1,49 @@
+//! Bench: end-to-end FAMES phases on resnet8/w4a4 — the per-phase costs
+//! behind Table II (estimation, ILP selection, calibration, evaluation).
+//!
+//! Skips when artifacts/trained parameters are unavailable.
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use fames::energy::EnergyModel;
+use fames::experiments::common::ExpCtx;
+use fames::pipeline;
+
+fn main() -> anyhow::Result<()> {
+    let root = fames::pipeline::artifacts_root();
+    if !std::path::Path::new(&root).join("resnet8_w4a4/manifest.json").exists() {
+        println!("skipping end-to-end benches: artifacts not built");
+        return Ok(());
+    }
+    std::env::set_var("FAMES_FAST", "1"); // small knobs: this is a bench
+    let ctx = ExpCtx::new()?;
+    let mut prep = ctx.prepare("resnet8", "w4a4")?;
+    println!(
+        "prepared resnet8/w4a4: estimation took {:.2}s (quant acc {:.1}%)",
+        prep.table.estimate_secs,
+        100.0 * prep.quant_acc
+    );
+
+    bench("ilp_select/resnet8_w4a4", 2, 20, || {
+        let energy = EnergyModel::new(&prep.session.art.manifest, &prep.library);
+        black_box(pipeline::select_ilp(&prep.table, &energy, &prep.library, 0.7).unwrap());
+    });
+
+    bench("evaluate_1batch/resnet8_w4a4", 1, 5, || {
+        black_box(prep.session.evaluate(1).unwrap());
+    });
+
+    bench("grad_e_1batch/resnet8_w4a4", 1, 5, || {
+        black_box(prep.session.grad_e(1).unwrap());
+    });
+
+    bench("calib_step/resnet8_w4a4", 1, 5, || {
+        black_box(prep.session.calib_step(0, 0, 0.0).unwrap());
+    });
+
+    bench("train_step/resnet8_w4a4", 1, 5, || {
+        black_box(prep.session.train_step(0, 0, 0.0).unwrap());
+    });
+    Ok(())
+}

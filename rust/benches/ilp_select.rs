@@ -1,0 +1,59 @@
+//! Bench: MCKP branch-and-bound (the paper's ILP selection, §IV-D) across
+//! instance sizes, vs the greedy heuristic. Target: 20-layer × 40-choice
+//! instances in milliseconds (DESIGN.md §Perf).
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use fames::rng::Pcg;
+use fames::select::{solve_exact, solve_greedy, Choice};
+
+fn random_problem(seed: u64, layers: usize, choices: usize) -> Vec<Vec<Choice>> {
+    let mut rng = Pcg::seeded(seed);
+    (0..layers)
+        .map(|_| {
+            (0..choices)
+                .map(|_| Choice {
+                    cost: rng.range_f64(0.1, 10.0),
+                    value: rng.range_f64(-0.5, 5.0),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn budget_of(p: &[Vec<Choice>], slack: f64) -> f64 {
+    let min: f64 = p
+        .iter()
+        .map(|l| l.iter().map(|c| c.cost).fold(f64::MAX, f64::min))
+        .sum();
+    min * slack
+}
+
+fn main() {
+    for (layers, choices) in [(9, 25), (21, 25), (20, 40), (50, 100)] {
+        let p = random_problem(layers as u64 * 131 + choices as u64, layers, choices);
+        let b = budget_of(&p, 1.6);
+        bench(
+            &format!("ilp_exact/{layers}x{choices}"),
+            2,
+            if layers >= 50 { 10 } else { 30 },
+            || {
+                black_box(solve_exact(black_box(&p), b).unwrap());
+            },
+        );
+        bench(&format!("greedy/{layers}x{choices}"), 2, 50, || {
+            black_box(solve_greedy(black_box(&p), b).unwrap());
+        });
+    }
+    // optimality-gap report for the ablation (greedy vs exact)
+    let mut worst_gap = 0.0f64;
+    for seed in 0..20 {
+        let p = random_problem(seed, 12, 30);
+        let b = budget_of(&p, 1.5);
+        let e = solve_exact(&p, b).unwrap();
+        let g = solve_greedy(&p, b).unwrap();
+        worst_gap = worst_gap.max(g.total_value - e.total_value);
+    }
+    println!("greedy worst absolute optimality gap over 20 instances: {worst_gap:.4}");
+}

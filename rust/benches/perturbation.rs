@@ -1,0 +1,52 @@
+//! Bench: per-candidate perturbation evaluation (the paper's headline
+//! "evaluate many AppMuls in microseconds" path) + the Ω-table hot loop.
+//!
+//! Target (DESIGN.md §Perf): Ω evaluation is two dot products —
+//! micro-seconds per candidate even at 8-bit (65 536-entry E vectors).
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use fames::appmul::generate_library;
+use fames::sensitivity::{Estimator, LayerEstimate};
+use fames::tensor::Tensor;
+
+fn synthetic_estimator(dim: usize, layers: usize) -> Estimator {
+    let mk = |seed: u64| {
+        let mut rng = fames::rng::Pcg::seeded(seed);
+        Tensor::new(vec![dim], (0..dim).map(|_| rng.normal() as f32).collect()).unwrap()
+    };
+    Estimator {
+        layers: (0..layers)
+            .map(|k| LayerEstimate {
+                grad: mk(k as u64),
+                lambda: 1.5,
+                eigvec: mk(1000 + k as u64),
+                lambda_history: vec![],
+            })
+            .collect(),
+        base_loss: 0.1,
+    }
+}
+
+fn main() {
+    for (bits, label) in [(4u32, "4-bit (256-dim E)"), (8, "8-bit (65536-dim E)")] {
+        let lib = generate_library(&[(bits, bits)], 0);
+        let muls = lib.for_bits(bits, bits);
+        let dim = (1usize << bits) * (1usize << bits);
+        let est = synthetic_estimator(dim, 8);
+        let am = muls[muls.len() / 2];
+        bench(&format!("omega_single_candidate/{label}"), 10, 200, || {
+            black_box(est.perturbation(3, black_box(am)).unwrap());
+        });
+        bench(&format!("omega_full_library/{label}/{} muls", muls.len()), 3, 50, || {
+            for am in &muls {
+                black_box(est.perturbation(3, am).unwrap());
+            }
+        });
+        // error-tensor materialization (the allocation in the hot loop)
+        bench(&format!("error_tensor/{label}"), 10, 200, || {
+            black_box(am.error_tensor());
+        });
+    }
+}

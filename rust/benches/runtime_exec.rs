@@ -1,0 +1,76 @@
+//! Bench: PJRT runtime hot paths — HLO-text compile, literal conversion,
+//! and end-to-end executable dispatch latency (the L3 request path).
+//!
+//! Skips (with a message) when `make artifacts` has not run.
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use fames::runtime::Runtime;
+use fames::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let root = fames::pipeline::artifacts_root();
+    let spike = std::path::Path::new(&root).join("spike/spike.hlo.txt");
+    if !spike.exists() {
+        println!("skipping runtime benches: {} not built (run `make artifacts`)", spike.display());
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+
+    // compile latency (fresh runtime each time to defeat the cache)
+    bench("compile_hlo_text/spike", 1, 5, || {
+        let rt2 = Runtime::cpu().unwrap();
+        black_box(rt2.load(&spike).unwrap());
+    });
+
+    let exe = rt.load(&spike)?;
+    let x = Tensor::new(vec![2, 3, 8, 8], vec![0.3; 2 * 3 * 8 * 8]).unwrap();
+    let w = Tensor::new(vec![4, 3, 3, 3], vec![0.1; 4 * 27]).unwrap();
+    let e = Tensor::zeros(&[256]);
+    bench("execute/spike_conv", 10, 100, || {
+        black_box(exe.run(black_box(&[x.clone(), w.clone(), e.clone()])).unwrap());
+    });
+
+    // tensor⇄literal conversion overhead in isolation
+    let big = Tensor::zeros(&[128, 3, 16, 16]);
+    bench("tensor_to_literal/128x3x16x16", 10, 200, || {
+        black_box(big.to_literal().unwrap());
+    });
+    let lit = big.to_literal()?;
+    bench("literal_to_tensor/128x3x16x16", 10, 200, || {
+        black_box(Tensor::from_literal(black_box(&lit)).unwrap());
+    });
+
+    // a real model fwd, if built
+    let art = std::path::Path::new(&root).join("resnet8_w4a4");
+    if art.join("manifest.json").exists() {
+        use fames::runtime::ArtifactSet;
+        let set = ArtifactSet::open(&art)?;
+        let exe = rt.load(set.exe_path("fwd")?)?;
+        // zero-filled inputs matching the manifest contract
+        let mut inputs: Vec<Tensor> = Vec::new();
+        for p in &set.manifest.params {
+            inputs.push(Tensor::zeros(&p.shape));
+        }
+        let n = set.manifest.layers.len();
+        for _ in 0..n {
+            inputs.push(Tensor::scalar(4.0));
+            inputs.push(Tensor::scalar(4.0));
+        }
+        for l in &set.manifest.layers {
+            inputs.push(Tensor::scalar(0.1));
+            inputs.push(Tensor::scalar(0.0));
+            let _ = l;
+        }
+        for l in &set.manifest.layers {
+            inputs.push(Tensor::zeros(&[l.e_len()]));
+        }
+        inputs.push(Tensor::zeros(&[set.manifest.eval_batch, 3, 16, 16]));
+        inputs.push(Tensor::zeros(&[set.manifest.eval_batch]));
+        bench("execute/resnet8_w4a4_fwd_b128", 2, 10, || {
+            black_box(exe.run(black_box(&inputs)).unwrap());
+        });
+    }
+    Ok(())
+}

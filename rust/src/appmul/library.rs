@@ -1,0 +1,345 @@
+//! AppMul library generation (EvoApprox8b + ALSRAC stand-in).
+//!
+//! Generation is deterministic in `(bitwidths, seed)` and fast enough
+//! (word-parallel netlist simulation) that the library is rebuilt on demand
+//! rather than shipped: a full 2/3/4/8-bit library takes ~2 s.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics;
+use super::AppMul;
+use crate::circuit::{build_lut, build_multiplier, MulConfig, Netlist};
+use crate::json::Json;
+use crate::rng::Pcg;
+
+/// The paper's ALSRAC error threshold (MRED ≤ 20%, §V-A).
+pub const MRED_THRESHOLD: f64 = 0.20;
+
+/// A generated AppMul library, grouped by bitwidth pair.
+#[derive(Clone, Debug, Default)]
+pub struct Library {
+    pub items: Vec<AppMul>,
+}
+
+impl Library {
+    /// All multipliers for a bitwidth pair (exact first, then by PDP).
+    pub fn for_bits(&self, a_bits: u32, w_bits: u32) -> Vec<&AppMul> {
+        let mut v: Vec<&AppMul> = self
+            .items
+            .iter()
+            .filter(|m| m.a_bits == a_bits && m.w_bits == w_bits)
+            .collect();
+        v.sort_by(|x, y| {
+            y.is_exact()
+                .cmp(&x.is_exact())
+                .then(x.pdp.partial_cmp(&y.pdp).unwrap())
+        });
+        v
+    }
+
+    /// The exact multiplier for a bitwidth pair.
+    pub fn exact(&self, a_bits: u32, w_bits: u32) -> Result<&AppMul> {
+        self.items
+            .iter()
+            .find(|m| m.a_bits == a_bits && m.w_bits == w_bits && m.is_exact())
+            .with_context(|| format!("no exact {a_bits}x{w_bits} multiplier in library"))
+    }
+
+    pub fn find(&self, name: &str) -> Result<&AppMul> {
+        self.items
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("no multiplier named '{name}'"))
+    }
+
+    /// Summary (no LUTs) as JSON, for the library-explorer tooling.
+    pub fn summary_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for m in &self.items {
+            arr.push(
+                Json::obj()
+                    .with("name", m.name.as_str())
+                    .with("family", m.family.as_str())
+                    .with("a_bits", m.a_bits as usize)
+                    .with("w_bits", m.w_bits as usize)
+                    .with("pdp", m.pdp)
+                    .with("energy_fj", m.energy_fj)
+                    .with("delay_ps", m.delay_ps)
+                    .with("area_um2", m.area_um2)
+                    .with("gates", m.gates)
+                    .with("mred", m.metrics.mred)
+                    .with("nmed", m.metrics.nmed)
+                    .with("er", m.metrics.er)
+                    .with("wce", m.metrics.wce as usize)
+                    .with("e_l2", m.metrics.e_l2),
+            );
+        }
+        arr
+    }
+
+    /// Pareto frontier over (pdp, mred): multipliers not dominated by any
+    /// other of the same bitwidth.
+    pub fn pareto(&self, a_bits: u32, w_bits: u32) -> Vec<&AppMul> {
+        let all = self.for_bits(a_bits, w_bits);
+        all.iter()
+            .filter(|m| {
+                !all.iter().any(|o| {
+                    (o.pdp < m.pdp && o.metrics.mred <= m.metrics.mred)
+                        || (o.pdp <= m.pdp && o.metrics.mred < m.metrics.mred)
+                })
+            })
+            .copied()
+            .collect()
+    }
+}
+
+/// ALSRAC-style randomized stuck-at simplification: greedily prune gates of
+/// the exact netlist while the LUT's MRED stays ≤ `target` (paper threshold
+/// family). Deterministic in `seed`.
+fn alsrac_prune(a_bits: u32, w_bits: u32, target: f64, seed: u64, max_tries: usize) -> Netlist {
+    let mut net = build_multiplier(&MulConfig::exact(a_bits, w_bits));
+    let mut rng = Pcg::seeded(seed);
+    let mut order: Vec<usize> = (0..net.gates.len()).collect();
+    rng.shuffle(&mut order);
+    let mut tried = 0;
+    for &gi in &order {
+        if tried >= max_tries {
+            break;
+        }
+        tried += 1;
+        let first = rng.chance(0.5);
+        for val in [first, !first] {
+            let mut trial = net.clone();
+            trial.stuck_at(gi, val).unwrap();
+            let lut = build_lut(&trial, a_bits, w_bits);
+            let m = metrics::compute(&lut, a_bits, w_bits);
+            if m.mred <= target {
+                net = trial;
+                break;
+            }
+        }
+    }
+    net
+}
+
+/// Generate the library for one bitwidth pair.
+pub fn generate_for_bits(a_bits: u32, w_bits: u32, seed: u64) -> Vec<AppMul> {
+    if !(2..=8).contains(&a_bits) || !(2..=8).contains(&w_bits) {
+        // deliberate hard stop: LUT sizes explode past 8 bits
+        panic!("bitwidths must be in 2..=8 (got {a_bits}x{w_bits})");
+    }
+    let total = a_bits + w_bits;
+    let mut out: Vec<AppMul> = Vec::new();
+    let mut seen: HashMap<Vec<i64>, String> = HashMap::new();
+    let tag = |s: &str| format!("mul{a_bits}x{w_bits}_{s}");
+    let mut push = |out: &mut Vec<AppMul>, seen: &mut HashMap<Vec<i64>, String>, am: AppMul| {
+        // dedup identical LUTs; drop hopeless designs (MRED > 60%)
+        if am.metrics.mred > 0.6 {
+            return;
+        }
+        if seen.contains_key(&am.lut) {
+            return;
+        }
+        seen.insert(am.lut.clone(), am.name.clone());
+        out.push(am);
+    };
+
+    // exact
+    let n = build_multiplier(&MulConfig::exact(a_bits, w_bits));
+    push(&mut out, &mut seen,
+         AppMul::from_netlist(tag("exact"), "exact", a_bits, w_bits, &n, seed));
+
+    // truncation ladder
+    for k in 1..=total.saturating_sub(3) {
+        let cfg = MulConfig {
+            trunc_cols: k,
+            ..MulConfig::exact(a_bits, w_bits)
+        };
+        let n = build_multiplier(&cfg);
+        push(&mut out, &mut seen,
+             AppMul::from_netlist(tag(&format!("trunc{k}")), "trunc", a_bits, w_bits, &n, seed));
+    }
+
+    // row perforation: single rows + LSB prefixes
+    for r in 0..w_bits {
+        let cfg = MulConfig {
+            perf_rows: vec![r],
+            ..MulConfig::exact(a_bits, w_bits)
+        };
+        let n = build_multiplier(&cfg);
+        push(&mut out, &mut seen,
+             AppMul::from_netlist(tag(&format!("perf{r}")), "perf", a_bits, w_bits, &n, seed));
+    }
+    for r in 2..w_bits {
+        let cfg = MulConfig {
+            perf_rows: (0..r).collect(),
+            ..MulConfig::exact(a_bits, w_bits)
+        };
+        let n = build_multiplier(&cfg);
+        push(&mut out, &mut seen,
+             AppMul::from_netlist(tag(&format!("perf0_{r}")), "perf", a_bits, w_bits, &n, seed));
+    }
+
+    // approximate compressors
+    for c in 1..total {
+        let cfg = MulConfig {
+            approx_cols: c,
+            ..MulConfig::exact(a_bits, w_bits)
+        };
+        let n = build_multiplier(&cfg);
+        push(&mut out, &mut seen,
+             AppMul::from_netlist(tag(&format!("axc{c}")), "axc", a_bits, w_bits, &n, seed));
+    }
+
+    // truncation × compressor combos
+    for k in [total / 4, total / 3, total / 2] {
+        for c in [total / 3, total / 2] {
+            if k == 0 || c == 0 {
+                continue;
+            }
+            let cfg = MulConfig {
+                trunc_cols: k,
+                approx_cols: c,
+                ..MulConfig::exact(a_bits, w_bits)
+            };
+            let n = build_multiplier(&cfg);
+            push(&mut out, &mut seen,
+                 AppMul::from_netlist(tag(&format!("tx{k}c{c}")), "combo",
+                                      a_bits, w_bits, &n, seed));
+        }
+    }
+
+    // ALSRAC-style pruning at several error targets
+    let max_tries = if total >= 12 { 60 } else { 120 };
+    let mut idx = 0;
+    for &target in &[0.03, 0.08, 0.15, MRED_THRESHOLD] {
+        for s in 0..2u64 {
+            let n = alsrac_prune(a_bits, w_bits, target, seed ^ (0xA15AC + idx * 7 + s), max_tries);
+            push(&mut out, &mut seen,
+                 AppMul::from_netlist(tag(&format!("alsrac{idx}_{s}")), "alsrac",
+                                      a_bits, w_bits, &n, seed));
+        }
+        idx += 1;
+    }
+
+    out
+}
+
+/// Generate a library covering the given bitwidth pairs.
+pub fn generate_library(bit_pairs: &[(u32, u32)], seed: u64) -> Library {
+    let mut items = Vec::new();
+    for &(a, w) in bit_pairs {
+        items.extend(generate_for_bits(a, w, seed));
+    }
+    Library { items }
+}
+
+/// Parse a library summary back (tooling round-trip; LUTs not included).
+pub fn parse_summary(j: &Json) -> Result<Vec<(String, f64, f64)>> {
+    let mut v = Vec::new();
+    for item in j.as_arr()? {
+        let name = item.get("name")?.as_str()?.to_string();
+        let pdp = item.get("pdp")?.as_f64()?;
+        let mred = item.get("mred")?.as_f64()?;
+        if pdp < 0.0 || mred < 0.0 {
+            bail!("negative pdp/mred in summary");
+        }
+        v.push((name, pdp, mred));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_bit_library_properties() {
+        let lib = generate_library(&[(4, 4)], 7);
+        let muls = lib.for_bits(4, 4);
+        assert!(muls.len() >= 15, "only {} items", muls.len());
+        // exact present, first, and unique
+        assert!(muls[0].is_exact());
+        assert_eq!(muls.iter().filter(|m| m.is_exact()).count(), 1);
+        // every approximate design is cheaper than exact
+        let exact_pdp = muls[0].pdp;
+        for m in &muls[1..] {
+            assert!(m.pdp < exact_pdp, "{} pdp {} ≥ exact {}", m.name, m.pdp, exact_pdp);
+            assert!(m.metrics.mred > 0.0);
+        }
+        // ALSRAC family respects the paper threshold
+        for m in lib.items.iter().filter(|m| m.family == "alsrac") {
+            assert!(m.metrics.mred <= MRED_THRESHOLD + 1e-9, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate_library(&[(3, 3)], 5);
+        let b = generate_library(&[(3, 3)], 5);
+        assert_eq!(a.items.len(), b.items.len());
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.lut, y.lut);
+            assert_eq!(x.pdp, y.pdp);
+        }
+    }
+
+    #[test]
+    fn truncation_error_monotone_in_k() {
+        let lib = generate_library(&[(4, 4)], 1);
+        let mut trunc: Vec<&AppMul> = lib
+            .items
+            .iter()
+            .filter(|m| m.family == "trunc")
+            .collect();
+        trunc.sort_by_key(|m| {
+            m.name
+                .trim_start_matches("mul4x4_trunc")
+                .parse::<u32>()
+                .unwrap()
+        });
+        for w in trunc.windows(2) {
+            assert!(w[1].metrics.mred >= w[0].metrics.mred);
+            assert!(w[1].pdp <= w[0].pdp);
+        }
+    }
+
+    #[test]
+    fn pareto_frontier_is_subset_and_nondominated() {
+        let lib = generate_library(&[(4, 4)], 2);
+        let pareto = lib.pareto(4, 4);
+        assert!(!pareto.is_empty() && pareto.len() <= lib.for_bits(4, 4).len());
+        for p in &pareto {
+            for o in lib.for_bits(4, 4) {
+                assert!(
+                    !(o.pdp < p.pdp && o.metrics.mred < p.metrics.mred),
+                    "{} dominated by {}",
+                    p.name,
+                    o.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrip() {
+        let lib = generate_library(&[(2, 2)], 3);
+        let j = lib.summary_json();
+        let parsed = parse_summary(&j).unwrap();
+        assert_eq!(parsed.len(), lib.items.len());
+    }
+
+    #[test]
+    fn library_spans_energy_error_tradeoff() {
+        // the selection problem is only interesting if the library spans a
+        // broad PDP range with varied error
+        let lib = generate_library(&[(4, 4)], 11);
+        let muls = lib.for_bits(4, 4);
+        let pdps: Vec<f64> = muls.iter().map(|m| m.pdp).collect();
+        let max = pdps.iter().cloned().fold(0.0, f64::max);
+        let min = pdps.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 3.0, "PDP span too narrow: {min}..{max}");
+    }
+}

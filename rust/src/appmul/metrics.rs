@@ -1,0 +1,102 @@
+//! AppMul error metrics (the vocabulary of the AppMul literature).
+//!
+//! All metrics compare an approximate LUT against the exact product over the
+//! full input space. The paper's library-generation threshold is
+//! **MRED ≤ 20%** (ALSRAC configuration in §V-A); Fig. 5(c) additionally uses
+//! MRE and the L2 norm of the error matrix as baseline perturbation
+//! estimators.
+
+/// Error statistics of one LUT vs the exact multiplier.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ErrorMetrics {
+    /// Mean relative error distance: mean over all pairs of
+    /// `|approx − exact| / max(1, exact)`.
+    pub mred: f64,
+    /// Normalized mean error distance: mean |err| / max exact product.
+    pub nmed: f64,
+    /// Error rate: fraction of input pairs with a wrong product.
+    pub er: f64,
+    /// Worst-case (absolute) error.
+    pub wce: u64,
+    /// Mean signed error (bias).
+    pub bias: f64,
+    /// L2 norm of the flattened error matrix.
+    pub e_l2: f64,
+}
+
+/// Compute all metrics for `lut[a·2^w_bits + w]`.
+pub fn compute(lut: &[i64], a_bits: u32, w_bits: u32) -> ErrorMetrics {
+    let qa = 1u64 << a_bits;
+    let qw = 1u64 << w_bits;
+    assert_eq!(lut.len() as u64, qa * qw);
+    let max_prod = ((qa - 1) * (qw - 1)).max(1) as f64;
+    let mut m = ErrorMetrics::default();
+    let mut sum_red = 0.0;
+    let mut sum_abs = 0.0;
+    let mut sum_sq = 0.0;
+    let mut sum_signed = 0.0;
+    let mut wrong = 0u64;
+    for a in 0..qa {
+        for w in 0..qw {
+            let exact = (a * w) as i64;
+            let err = lut[(a * qw + w) as usize] - exact;
+            let abs = err.unsigned_abs();
+            if err != 0 {
+                wrong += 1;
+            }
+            sum_red += abs as f64 / (exact.max(1)) as f64;
+            sum_abs += abs as f64;
+            sum_sq += (err as f64) * (err as f64);
+            sum_signed += err as f64;
+            m.wce = m.wce.max(abs);
+        }
+    }
+    let n = (qa * qw) as f64;
+    m.mred = sum_red / n;
+    m.nmed = sum_abs / n / max_prod;
+    m.er = wrong as f64 / n;
+    m.bias = sum_signed / n;
+    m.e_l2 = sum_sq.sqrt();
+    m
+}
+
+/// Exact-multiplier LUT (reference + zero-error assertions in tests).
+pub fn exact_lut(a_bits: u32, w_bits: u32) -> Vec<i64> {
+    let qa = 1i64 << a_bits;
+    let qw = 1i64 << w_bits;
+    (0..qa)
+        .flat_map(|a| (0..qw).map(move |w| a * w))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_lut_has_zero_metrics() {
+        let m = compute(&exact_lut(4, 4), 4, 4);
+        assert_eq!(m, ErrorMetrics::default());
+    }
+
+    #[test]
+    fn single_entry_error() {
+        let mut lut = exact_lut(2, 2);
+        lut[3 * 4 + 2] += 5; // 3·2=6 → 11
+        let m = compute(&lut, 2, 2);
+        assert_eq!(m.wce, 5);
+        assert!((m.er - 1.0 / 16.0).abs() < 1e-12);
+        assert!((m.mred - (5.0 / 6.0) / 16.0).abs() < 1e-12);
+        assert!((m.bias - 5.0 / 16.0).abs() < 1e-12);
+        assert!((m.e_l2 - 5.0).abs() < 1e-12);
+        assert!((m.nmed - 5.0 / 16.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mred_uses_max_1_denominator_at_zero_products() {
+        let mut lut = exact_lut(2, 2);
+        lut[0] = 2; // 0·0=0 → 2: relative error 2/max(1,0)=2
+        let m = compute(&lut, 2, 2);
+        assert!((m.mred - 2.0 / 16.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Approximate-multiplier (AppMul) library substrate.
+//!
+//! Stand-in for EvoApprox8b + ALSRAC (DESIGN.md §3): every AppMul is
+//! generated from a gate-level netlist (`crate::circuit`), so its LUT
+//! (exhaustive simulation), PDP (toggle counting × critical path) and area
+//! are all self-consistent. Families:
+//!
+//! * `exact` — the baseline multiplier of each bitwidth;
+//! * `trunc<k>` — LSB-column truncation;
+//! * `perf<r>` — partial-product row perforation;
+//! * `axc<c>` — approximate compressors in the low columns;
+//! * `tx<k>c<c>` — truncation + approximate-compressor combinations;
+//! * `alsrac<i>` — randomized stuck-at netlist simplification accepted
+//!   while **MRED ≤ 20%** (the paper's ALSRAC threshold).
+
+pub mod library;
+pub mod metrics;
+
+pub use library::{generate_for_bits, generate_library, Library};
+pub use metrics::{compute as compute_metrics, exact_lut, ErrorMetrics};
+
+use crate::circuit::{build_lut, Netlist};
+use crate::tensor::Tensor;
+
+/// One approximate multiplier: LUT + hardware costs + error statistics.
+#[derive(Clone, Debug)]
+pub struct AppMul {
+    pub name: String,
+    pub family: String,
+    pub a_bits: u32,
+    pub w_bits: u32,
+    /// `lut[a · 2^w_bits + w]` = approximate product.
+    pub lut: Vec<i64>,
+    /// PDP proxy: mean switching energy per op (fJ) × critical path (ns).
+    /// Chosen because it reproduces the paper's observed inter-bitwidth
+    /// energy ratios (≈N³ growth; Table III's 8-bit→2-bit ≈ 85×) — see
+    /// DESIGN.md §3.
+    pub pdp: f64,
+    pub energy_fj: f64,
+    pub delay_ps: f64,
+    pub area_um2: f64,
+    pub gates: usize,
+    pub metrics: ErrorMetrics,
+    /// Precomputed flattened error matrix (E = LUT − exact), f32 — avoids
+    /// rebuilding the 2^(a+w)-element vector in the estimation hot loop.
+    err: Vec<f32>,
+}
+
+impl AppMul {
+    /// Characterize a netlist into an AppMul entry.
+    pub fn from_netlist(
+        name: impl Into<String>,
+        family: impl Into<String>,
+        a_bits: u32,
+        w_bits: u32,
+        netlist: &Netlist,
+        seed: u64,
+    ) -> AppMul {
+        let lut = build_lut(netlist, a_bits, w_bits);
+        let metrics = metrics::compute(&lut, a_bits, w_bits);
+        let energy_fj = netlist.switching_energy_words_fj(32, seed);
+        let delay_ps = netlist.critical_path_ps();
+        let qw = 1i64 << w_bits;
+        let err: Vec<f32> = lut
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let a = i as i64 / qw;
+                let w = i as i64 % qw;
+                (v - a * w) as f32
+            })
+            .collect();
+        AppMul {
+            name: name.into(),
+            family: family.into(),
+            a_bits,
+            w_bits,
+            lut,
+            pdp: energy_fj * (delay_ps / 1000.0),
+            energy_fj,
+            delay_ps,
+            area_um2: netlist.area(),
+            gates: netlist.live_gate_count(),
+            metrics,
+            err,
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.metrics.er == 0.0
+    }
+
+    /// Flattened error matrix `E[a·Qw + w] = LUT[a,w] − a·w` as an f32
+    /// tensor — the runtime injection format (paper Eq. 7). Cheap: clones
+    /// the precomputed vector.
+    pub fn error_tensor(&self) -> Tensor {
+        Tensor::new(vec![self.err.len()], self.err.clone()).unwrap()
+    }
+
+    /// Borrowed view of the precomputed error matrix.
+    pub fn error_slice(&self) -> &[f32] {
+        &self.err
+    }
+
+    /// Perturbation-estimation baseline for Fig. 5(c): L2 norm of E.
+    pub fn e_l2(&self) -> f64 {
+        self.metrics.e_l2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::{build_multiplier, MulConfig};
+
+    #[test]
+    fn exact_appmul_has_zero_error_tensor() {
+        let n = build_multiplier(&MulConfig::exact(3, 3));
+        let am = AppMul::from_netlist("mul3x3", "exact", 3, 3, &n, 0);
+        assert!(am.is_exact());
+        assert!(am.error_tensor().data().iter().all(|&v| v == 0.0));
+        assert!(am.pdp > 0.0 && am.area_um2 > 0.0);
+    }
+
+    #[test]
+    fn truncated_appmul_error_tensor_matches_lut() {
+        let cfg = MulConfig {
+            trunc_cols: 2,
+            ..MulConfig::exact(3, 3)
+        };
+        let n = build_multiplier(&cfg);
+        let am = AppMul::from_netlist("t2", "trunc", 3, 3, &n, 0);
+        assert!(!am.is_exact());
+        let e = am.error_tensor();
+        for a in 0..8i64 {
+            for w in 0..8i64 {
+                let idx = (a * 8 + w) as usize;
+                assert_eq!(e.data()[idx] as i64, am.lut[idx] - a * w);
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Adder building blocks: half/full adders (exact and approximate) and
+//! ripple-carry vectors, used by the array-multiplier generators.
+//!
+//! The approximate full adder is the classic "lower-part OR" style
+//! approximation used throughout the AppMul literature (e.g. the
+//! EvoApprox8b seeds): `sum = a | b | cin`-family cells that trade XOR
+//! stacks for single OR gates.
+
+use super::cell::CellKind;
+use super::netlist::{NetId, Netlist};
+
+/// sum/carry of a half adder.
+pub fn half_adder(n: &mut Netlist, a: NetId, b: NetId) -> (NetId, NetId) {
+    let sum = n.gate(CellKind::Xor2, a, b);
+    let carry = n.gate(CellKind::And2, a, b);
+    (sum, carry)
+}
+
+/// sum/carry of an exact full adder (two XORs, two ANDs, one OR).
+pub fn full_adder(n: &mut Netlist, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+    let axb = n.gate(CellKind::Xor2, a, b);
+    let sum = n.gate(CellKind::Xor2, axb, cin);
+    let t1 = n.gate(CellKind::And2, a, b);
+    let t2 = n.gate(CellKind::And2, axb, cin);
+    let carry = n.gate(CellKind::Or2, t1, t2);
+    (sum, carry)
+}
+
+/// Approximate full adder: `sum ≈ a ⊕ b | cin-ish` single-gate forms.
+/// This is the "AFA" used by the approximate-compressor multiplier family:
+/// sum = (a | b) ⊕ cin is replaced by sum = a | b | cin and
+/// carry = majority is replaced by carry = a & b — 3 cheap gates total.
+pub fn approx_full_adder(n: &mut Netlist, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+    let ab = n.gate(CellKind::Or2, a, b);
+    let sum = n.gate(CellKind::Or2, ab, cin);
+    let carry = n.gate(CellKind::And2, a, b);
+    (sum, carry)
+}
+
+/// Ripple-carry addition of two equal-width little-endian vectors; returns
+/// `width + 1` sum bits (the MSB is the carry out).
+pub fn ripple_carry(n: &mut Netlist, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+    assert_eq!(a.len(), b.len());
+    let mut out = Vec::with_capacity(a.len() + 1);
+    let mut carry: Option<NetId> = None;
+    for i in 0..a.len() {
+        let (s, c) = match carry {
+            None => half_adder(n, a[i], b[i]),
+            Some(cin) => full_adder(n, a[i], b[i], cin),
+        };
+        out.push(s);
+        carry = Some(c);
+    }
+    out.push(carry.unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval_bits(bits: &[bool]) -> u64 {
+        bits.iter()
+            .enumerate()
+            .map(|(i, &b)| (b as u64) << i)
+            .sum()
+    }
+
+    #[test]
+    fn full_adder_truth_table() {
+        for i in 0..8u32 {
+            let mut n = Netlist::new(3);
+            let (s, c) = full_adder(&mut n, 0, 1, 2);
+            n.set_outputs(vec![s, c]);
+            let a = i & 1 != 0;
+            let b = i & 2 != 0;
+            let cin = i & 4 != 0;
+            let out = n.eval(&[a, b, cin]);
+            let want = a as u32 + b as u32 + cin as u32;
+            assert_eq!(out[0] as u32, want & 1);
+            assert_eq!(out[1] as u32, want >> 1);
+        }
+    }
+
+    #[test]
+    fn half_adder_truth_table() {
+        for i in 0..4u32 {
+            let mut n = Netlist::new(2);
+            let (s, c) = half_adder(&mut n, 0, 1);
+            n.set_outputs(vec![s, c]);
+            let a = i & 1 != 0;
+            let b = i & 2 != 0;
+            let out = n.eval(&[a, b]);
+            let want = a as u32 + b as u32;
+            assert_eq!(out[0] as u32, want & 1);
+            assert_eq!(out[1] as u32, want >> 1);
+        }
+    }
+
+    #[test]
+    fn approx_full_adder_is_cheaper_and_close() {
+        // cost comparison
+        let mut ne = Netlist::new(3);
+        let (s, c) = full_adder(&mut ne, 0, 1, 2);
+        ne.set_outputs(vec![s, c]);
+        let mut na = Netlist::new(3);
+        let (s, c) = approx_full_adder(&mut na, 0, 1, 2);
+        na.set_outputs(vec![s, c]);
+        assert!(na.area() < ne.area());
+        assert!(na.critical_path_ps() < ne.critical_path_ps());
+        // functional distance: wrong on a minority of the 8 input rows
+        let mut wrong = 0;
+        for i in 0..8u32 {
+            let bits = [i & 1 != 0, i & 2 != 0, i & 4 != 0];
+            let want = bits.iter().map(|&b| b as u32).sum::<u32>();
+            let out = na.eval(&bits);
+            let got = out[0] as u32 + 2 * out[1] as u32;
+            if got != want {
+                wrong += 1;
+            }
+        }
+        assert!(wrong > 0 && wrong <= 3, "wrong rows: {wrong}");
+    }
+
+    #[test]
+    fn ripple_carry_exhaustive_4bit() {
+        let mut n = Netlist::new(8);
+        let a: Vec<NetId> = (0..4).collect();
+        let b: Vec<NetId> = (4..8).collect();
+        let sum = ripple_carry(&mut n, &a, &b);
+        n.set_outputs(sum);
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                let mut bits = [false; 8];
+                for i in 0..4 {
+                    bits[i] = x >> i & 1 != 0;
+                    bits[4 + i] = y >> i & 1 != 0;
+                }
+                let out = n.eval(&bits);
+                assert_eq!(eval_bits(&out), x + y, "{x}+{y}");
+            }
+        }
+    }
+}

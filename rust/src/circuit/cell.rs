@@ -1,0 +1,116 @@
+//! Standard-cell cost table — NanGate-45nm-like typical values.
+//!
+//! Stand-in for the paper's Synopsys Design Compiler + NanGate 45nm Open
+//! Cell Library characterization (DESIGN.md §3). Values are representative
+//! of the NanGate45 typical corner (area in µm², delay in ps, internal +
+//! switching energy per output toggle in fJ); what matters for the paper's
+//! claims is the *relative* PDP across multiplier variants and bitwidths,
+//! which these preserve (array-multiplier PDP grows ≈N³: N² cells × N
+//! critical path).
+
+/// Combinational cell kinds used by the multiplier generators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    Inv,
+    Buf,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    /// Constant 0/1 driver (used by pruning transforms); zero cost.
+    Const,
+}
+
+/// Per-cell characterization.
+#[derive(Clone, Copy, Debug)]
+pub struct CellCost {
+    /// Cell area, µm².
+    pub area: f64,
+    /// Pin-to-pin propagation delay, ps.
+    pub delay: f64,
+    /// Energy per output toggle, fJ.
+    pub energy: f64,
+}
+
+impl CellKind {
+    /// NanGate-45-like typical-corner characterization.
+    pub fn cost(self) -> CellCost {
+        // (area µm², delay ps, energy fJ/toggle)
+        let (area, delay, energy) = match self {
+            CellKind::Inv => (0.53, 12.0, 0.35),
+            CellKind::Buf => (0.80, 18.0, 0.50),
+            CellKind::And2 => (1.06, 32.0, 0.75),
+            CellKind::Or2 => (1.06, 33.0, 0.78),
+            CellKind::Nand2 => (0.80, 22.0, 0.55),
+            CellKind::Nor2 => (0.80, 24.0, 0.58),
+            CellKind::Xor2 => (1.60, 45.0, 1.20),
+            CellKind::Xnor2 => (1.60, 46.0, 1.22),
+            CellKind::Const => (0.0, 0.0, 0.0),
+        };
+        CellCost { area, delay, energy }
+    }
+
+    /// Number of data inputs the kind consumes.
+    pub fn arity(self) -> usize {
+        match self {
+            CellKind::Inv | CellKind::Buf => 1,
+            CellKind::Const => 0,
+            _ => 2,
+        }
+    }
+
+    /// Evaluate the boolean function. `b` is ignored for unary cells; for
+    /// `Const`, `a` carries the constant value.
+    #[inline]
+    pub fn eval(self, a: bool, b: bool) -> bool {
+        match self {
+            CellKind::Inv => !a,
+            CellKind::Buf => a,
+            CellKind::And2 => a & b,
+            CellKind::Or2 => a | b,
+            CellKind::Nand2 => !(a & b),
+            CellKind::Nor2 => !(a | b),
+            CellKind::Xor2 => a ^ b,
+            CellKind::Xnor2 => !(a ^ b),
+            CellKind::Const => a,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_tables() {
+        use CellKind::*;
+        for (k, table) in [
+            (And2, [false, false, false, true]),
+            (Or2, [false, true, true, true]),
+            (Nand2, [true, true, true, false]),
+            (Nor2, [true, false, false, false]),
+            (Xor2, [false, true, true, false]),
+            (Xnor2, [true, false, false, true]),
+        ] {
+            for (i, want) in table.iter().enumerate() {
+                let a = i & 2 != 0;
+                let b = i & 1 != 0;
+                assert_eq!(k.eval(a, b), *want, "{k:?} {a} {b}");
+            }
+        }
+        assert!(Inv.eval(false, false));
+        assert!(!Inv.eval(true, false));
+        assert!(Buf.eval(true, false));
+    }
+
+    #[test]
+    fn xor_is_most_expensive_two_input() {
+        let xor = CellKind::Xor2.cost();
+        for k in [CellKind::And2, CellKind::Or2, CellKind::Nand2, CellKind::Nor2] {
+            assert!(xor.delay > k.cost().delay);
+            assert!(xor.energy > k.cost().energy);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Gate-level circuit substrate.
+//!
+//! Stand-in for the paper's hardware characterization flow (Synopsys Design
+//! Compiler + NanGate 45nm): cell library ([`cell`]), netlist construction /
+//! simulation / timing / switching-energy analysis ([`netlist`]), adder
+//! blocks ([`adders`]) and array-multiplier generators with structural
+//! approximation knobs ([`multiplier`]). The AppMul library (`crate::appmul`)
+//! is generated entirely from these netlists: LUTs by exhaustive simulation,
+//! PDP by Monte-Carlo toggle counting × critical-path delay.
+
+pub mod adders;
+pub mod cell;
+pub mod multiplier;
+pub mod netlist;
+
+pub use cell::{CellCost, CellKind};
+pub use multiplier::{build_lut, build_multiplier, eval_mult, MulConfig};
+pub use netlist::{Gate, NetId, Netlist};

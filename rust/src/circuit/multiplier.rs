@@ -1,0 +1,266 @@
+//! Unsigned array-multiplier generators (exact + structural approximations).
+//!
+//! The generator builds a partial-product AND matrix and reduces it
+//! column-wise with full/half adders (Wallace-style 3:2 reduction) followed
+//! by a final ripple adder — the same structure the AppMul literature
+//! approximates. Three structural knobs mirror the classic approximation
+//! families:
+//!
+//! * `trunc_cols` — drop all partial products in the lowest columns
+//!   (LSB truncation, the EvoApprox "trunc" family);
+//! * `perf_rows`  — skip whole partial-product rows (perforation);
+//! * `approx_cols` — use the cheap OR-based approximate full adder for
+//!   reductions in the lowest columns (approximate-compressor family).
+
+use super::adders::{approx_full_adder, full_adder, ripple_carry};
+use super::cell::CellKind;
+use super::netlist::{NetId, Netlist};
+
+/// Configuration of one generated multiplier.
+#[derive(Clone, Debug, Default)]
+pub struct MulConfig {
+    pub a_bits: u32,
+    pub w_bits: u32,
+    /// Zero out partial products in columns `< trunc_cols`.
+    pub trunc_cols: u32,
+    /// Skip partial-product rows with these indices (0 = LSB row of w).
+    pub perf_rows: Vec<u32>,
+    /// Use the approximate full adder for columns `< approx_cols`.
+    pub approx_cols: u32,
+}
+
+impl MulConfig {
+    pub fn exact(a_bits: u32, w_bits: u32) -> Self {
+        MulConfig {
+            a_bits,
+            w_bits,
+            ..Default::default()
+        }
+    }
+}
+
+/// Build the netlist for a configuration. Inputs are little-endian:
+/// nets `0..a_bits` = multiplicand, `a_bits..a_bits+w_bits` = multiplier.
+/// Outputs are the `a_bits + w_bits` product bits, little-endian.
+pub fn build_multiplier(cfg: &MulConfig) -> Netlist {
+    let (na, nw) = (cfg.a_bits as usize, cfg.w_bits as usize);
+    let total = na + nw;
+    let mut n = Netlist::new(na + nw);
+    // Partial-product matrix, bucketed by output column.
+    let mut cols: Vec<Vec<NetId>> = vec![Vec::new(); total];
+    for j in 0..nw {
+        if cfg.perf_rows.contains(&(j as u32)) {
+            continue;
+        }
+        for i in 0..na {
+            let col = i + j;
+            if (col as u32) < cfg.trunc_cols {
+                continue;
+            }
+            let pp = n.gate(CellKind::And2, i, na + j);
+            cols[col].push(pp);
+        }
+    }
+    // Column-wise 3:2 / 2:2 reduction until every column holds ≤ 2 bits.
+    for c in 0..total {
+        while cols[c].len() > 2 {
+            if cols[c].len() >= 3 {
+                let x = cols[c].pop().unwrap();
+                let y = cols[c].pop().unwrap();
+                let z = cols[c].pop().unwrap();
+                let (s, carry) = if (c as u32) < cfg.approx_cols {
+                    approx_full_adder(&mut n, x, y, z)
+                } else {
+                    full_adder(&mut n, x, y, z)
+                };
+                cols[c].push(s);
+                if c + 1 < total {
+                    cols[c + 1].push(carry);
+                }
+            }
+        }
+    }
+    // Final ripple adder over the two remaining rows.
+    let zero = n.constant(false);
+    let row1: Vec<NetId> = (0..total)
+        .map(|c| cols[c].first().copied().unwrap_or(zero))
+        .collect();
+    let row2: Vec<NetId> = (0..total)
+        .map(|c| cols[c].get(1).copied().unwrap_or(zero))
+        .collect();
+    let mut sum = ripple_carry(&mut n, &row1, &row2);
+    sum.truncate(total); // a·w < 2^(na+nw): the final carry is always 0
+    n.set_outputs(sum);
+    n
+}
+
+/// Evaluate a multiplier netlist on integer operands.
+pub fn eval_mult(n: &Netlist, a_bits: u32, w_bits: u32, a: u64, w: u64) -> u64 {
+    let mut bits = Vec::with_capacity((a_bits + w_bits) as usize);
+    for i in 0..a_bits {
+        bits.push(a >> i & 1 != 0);
+    }
+    for j in 0..w_bits {
+        bits.push(w >> j & 1 != 0);
+    }
+    let out = n.eval(&bits);
+    out.iter()
+        .enumerate()
+        .map(|(i, &b)| (b as u64) << i)
+        .sum()
+}
+
+/// Exhaustive LUT: `lut[a · 2^w_bits + w] = netlist(a, w)`, computed with
+/// 64-lane word-parallel sweeps (the hot path of library generation: one
+/// 8×8 LUT costs 1024 sweeps instead of 65536 scalar evaluations).
+pub fn build_lut(n: &Netlist, a_bits: u32, w_bits: u32) -> Vec<i64> {
+    let total_bits = (a_bits + w_bits) as usize;
+    let rows = 1usize << total_bits;
+    let mut lut = vec![0i64; rows];
+    let mut inputs = vec![0u64; total_bits];
+    let mut nets = Vec::with_capacity(n.n_nets());
+    let mut base = 0usize;
+    while base < rows {
+        let lanes = 64.min(rows - base);
+        // lane L carries input row (base + L); input bit i of that row is
+        // bit i of the row index (a in low bits? No: row = a·2^w + w, and
+        // the netlist wants a little-endian then w little-endian).
+        for (i, word) in inputs.iter_mut().enumerate() {
+            let mut v = 0u64;
+            for lane in 0..lanes {
+                let row = base + lane;
+                let a = (row >> w_bits) as u64;
+                let w = (row as u64) & ((1 << w_bits) - 1);
+                let bit = if i < a_bits as usize {
+                    a >> i & 1
+                } else {
+                    w >> (i - a_bits as usize) & 1
+                };
+                v |= bit << lane;
+            }
+            *word = v;
+        }
+        n.eval_words(&inputs, &mut nets);
+        for lane in 0..lanes {
+            let mut v = 0i64;
+            for (i, &o) in n.outputs.iter().enumerate() {
+                v |= ((nets[o] >> lane & 1) as i64) << i;
+            }
+            lut[base + lane] = v;
+        }
+        base += lanes;
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multipliers_exhaustive() {
+        for (a_bits, w_bits) in [(2, 2), (3, 3), (4, 4), (2, 4), (5, 3)] {
+            let n = build_multiplier(&MulConfig::exact(a_bits, w_bits));
+            for a in 0..1u64 << a_bits {
+                for w in 0..1u64 << w_bits {
+                    assert_eq!(
+                        eval_mult(&n, a_bits, w_bits, a, w),
+                        a * w,
+                        "{a_bits}x{w_bits}: {a}*{w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_8x8_spot_checks() {
+        let n = build_multiplier(&MulConfig::exact(8, 8));
+        for (a, w) in [(0, 0), (255, 255), (255, 1), (127, 2), (200, 99), (13, 17)] {
+            assert_eq!(eval_mult(&n, 8, 8, a, w), a * w);
+        }
+    }
+
+    #[test]
+    fn lut_matches_eval() {
+        let cfg = MulConfig::exact(3, 3);
+        let n = build_multiplier(&cfg);
+        let lut = build_lut(&n, 3, 3);
+        for a in 0..8u64 {
+            for w in 0..8u64 {
+                assert_eq!(lut[(a * 8 + w) as usize] as u64, a * w);
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_underestimates_and_saves() {
+        let exact = build_multiplier(&MulConfig::exact(4, 4));
+        let cfg = MulConfig {
+            trunc_cols: 3,
+            ..MulConfig::exact(4, 4)
+        };
+        let trunc = build_multiplier(&cfg);
+        assert!(trunc.area() < exact.area());
+        let mut any_err = false;
+        for a in 0..16u64 {
+            for w in 0..16u64 {
+                let t = eval_mult(&trunc, 4, 4, a, w);
+                assert!(t <= a * w, "truncation must underestimate");
+                // dropped columns bound the error below 2^trunc_cols scaled
+                // by the number of dropped diagonals
+                assert!(a * w - t < 64, "error too large: {a}*{w}={t}");
+                any_err |= t != a * w;
+            }
+        }
+        assert!(any_err);
+    }
+
+    #[test]
+    fn perforation_drops_row_contribution() {
+        let cfg = MulConfig {
+            perf_rows: vec![0],
+            ..MulConfig::exact(4, 4)
+        };
+        let n = build_multiplier(&cfg);
+        for a in 0..16u64 {
+            for w in 0..16u64 {
+                // dropping w's LSB row computes a · (w & !1)
+                assert_eq!(eval_mult(&n, 4, 4, a, w), a * (w & !1));
+            }
+        }
+    }
+
+    #[test]
+    fn approx_compressor_cheaper_with_bounded_error() {
+        let exact = build_multiplier(&MulConfig::exact(4, 4));
+        let cfg = MulConfig {
+            approx_cols: 4,
+            ..MulConfig::exact(4, 4)
+        };
+        let ap = build_multiplier(&cfg);
+        assert!(ap.area() < exact.area());
+        let mut max_rel: f64 = 0.0;
+        for a in 1..16u64 {
+            for w in 1..16u64 {
+                let got = eval_mult(&ap, 4, 4, a, w) as f64;
+                let want = (a * w) as f64;
+                max_rel = max_rel.max((got - want).abs() / want);
+            }
+        }
+        assert!(max_rel > 0.0 && max_rel < 1.5, "max rel err {max_rel}");
+    }
+
+    #[test]
+    fn pdp_scales_superlinearly_with_bitwidth() {
+        // DESIGN.md §3: the relative-energy columns of Table III rest on
+        // PDP(8b) ≫ PDP(4b) ≫ PDP(2b).
+        let pdp = |bits: u32| {
+            let n = build_multiplier(&MulConfig::exact(bits, bits));
+            n.pdp_fj(512, 1) * n.critical_path_ps()
+        };
+        let (p2, p4, p8) = (pdp(2), pdp(4), pdp(8));
+        assert!(p4 > 4.0 * p2, "p4={p4} p2={p2}");
+        assert!(p8 > 4.0 * p4, "p8={p8} p4={p4}");
+    }
+}

@@ -1,0 +1,370 @@
+//! Gate-level netlist: construction, simulation, timing, area and energy.
+//!
+//! The netlist is kept in topological order by construction (a gate may only
+//! reference already-existing nets), so evaluation, arrival-time analysis
+//! and toggle counting are single forward sweeps.
+
+use anyhow::{bail, Result};
+
+use super::cell::CellKind;
+use crate::rng::Pcg;
+
+/// Net index: `0..n_inputs` are primary inputs; each gate drives net
+/// `n_inputs + gate_index`.
+pub type NetId = usize;
+
+/// One gate instance. For `CellKind::Const`, `a` holds the constant (0/1).
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: CellKind,
+    pub a: NetId,
+    pub b: NetId,
+}
+
+/// A combinational netlist.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub n_inputs: usize,
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<NetId>,
+}
+
+impl Netlist {
+    pub fn new(n_inputs: usize) -> Self {
+        Netlist {
+            n_inputs,
+            gates: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.n_inputs + self.gates.len()
+    }
+
+    /// Add a gate; returns the net it drives. Panics on forward references
+    /// (programmer error — builders construct in topological order).
+    pub fn gate(&mut self, kind: CellKind, a: NetId, b: NetId) -> NetId {
+        let limit = self.n_nets();
+        assert!(a < limit && (kind.arity() < 2 || b < limit), "forward net reference");
+        self.gates.push(Gate { kind, a, b });
+        limit
+    }
+
+    /// Constant-0 / constant-1 net.
+    pub fn constant(&mut self, value: bool) -> NetId {
+        self.gates.push(Gate {
+            kind: CellKind::Const,
+            a: value as usize,
+            b: 0,
+        });
+        self.n_nets() - 1
+    }
+
+    pub fn set_outputs(&mut self, outs: Vec<NetId>) {
+        self.outputs = outs;
+    }
+
+    /// Evaluate all nets for the given primary-input values.
+    pub fn eval_nets(&self, inputs: &[bool], nets: &mut Vec<bool>) {
+        debug_assert_eq!(inputs.len(), self.n_inputs);
+        nets.clear();
+        nets.extend_from_slice(inputs);
+        for g in &self.gates {
+            let v = match g.kind {
+                CellKind::Const => g.a != 0,
+                k if k.arity() == 1 => k.eval(nets[g.a], false),
+                k => k.eval(nets[g.a], nets[g.b]),
+            };
+            nets.push(v);
+        }
+    }
+
+    /// Evaluate primary outputs.
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        let mut nets = Vec::with_capacity(self.n_nets());
+        self.eval_nets(inputs, &mut nets);
+        self.outputs.iter().map(|&o| nets[o]).collect()
+    }
+
+    /// Gates transitively reachable from the outputs (dead logic excluded
+    /// from every cost metric — pruning transforms rely on this).
+    pub fn live_gates(&self) -> Vec<bool> {
+        let mut live_net = vec![false; self.n_nets()];
+        for &o in &self.outputs {
+            live_net[o] = true;
+        }
+        for (gi, g) in self.gates.iter().enumerate().rev() {
+            let net = self.n_inputs + gi;
+            if !live_net[net] || g.kind == CellKind::Const {
+                continue;
+            }
+            live_net[g.a] = true;
+            if g.kind.arity() == 2 {
+                live_net[g.b] = true;
+            }
+        }
+        (0..self.gates.len())
+            .map(|gi| live_net[self.n_inputs + gi])
+            .collect()
+    }
+
+    /// Number of live (cost-bearing) gates.
+    pub fn live_gate_count(&self) -> usize {
+        let live = self.live_gates();
+        self.gates
+            .iter()
+            .zip(&live)
+            .filter(|(g, &l)| l && g.kind != CellKind::Const)
+            .count()
+    }
+
+    /// Total cell area (µm²) over live gates.
+    pub fn area(&self) -> f64 {
+        let live = self.live_gates();
+        self.gates
+            .iter()
+            .zip(&live)
+            .filter(|(_, &l)| l)
+            .map(|(g, _)| g.kind.cost().area)
+            .sum()
+    }
+
+    /// Critical-path delay (ps): longest arrival time at any output.
+    pub fn critical_path_ps(&self) -> f64 {
+        let live = self.live_gates();
+        let mut arrival = vec![0.0f64; self.n_nets()];
+        for (gi, g) in self.gates.iter().enumerate() {
+            let net = self.n_inputs + gi;
+            if !live[gi] || g.kind == CellKind::Const {
+                continue;
+            }
+            let t_in = if g.kind.arity() == 2 {
+                arrival[g.a].max(arrival[g.b])
+            } else {
+                arrival[g.a]
+            };
+            arrival[net] = t_in + g.kind.cost().delay;
+        }
+        self.outputs
+            .iter()
+            .map(|&o| arrival[o])
+            .fold(0.0, f64::max)
+    }
+
+    /// Average switching energy per operation (fJ), by toggle-counting over
+    /// random input transitions (Monte-Carlo switching-activity model: each
+    /// output toggle of a live gate costs that cell's per-toggle energy).
+    pub fn switching_energy_fj(&self, transitions: usize, seed: u64) -> f64 {
+        let mut rng = Pcg::seeded(seed ^ 0x5eed);
+        let live = self.live_gates();
+        let mut prev = vec![false; self.n_nets()];
+        let mut cur = Vec::with_capacity(self.n_nets());
+        let mut inputs = vec![false; self.n_inputs];
+        // initial state
+        for v in inputs.iter_mut() {
+            *v = rng.chance(0.5);
+        }
+        self.eval_nets(&inputs.clone(), &mut cur);
+        std::mem::swap(&mut prev, &mut cur);
+        let mut total = 0.0;
+        for _ in 0..transitions {
+            for v in inputs.iter_mut() {
+                *v = rng.chance(0.5);
+            }
+            self.eval_nets(&inputs.clone(), &mut cur);
+            for (gi, g) in self.gates.iter().enumerate() {
+                if !live[gi] || g.kind == CellKind::Const {
+                    continue;
+                }
+                let net = self.n_inputs + gi;
+                if prev[net] != cur[net] {
+                    total += g.kind.cost().energy;
+                }
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        total / transitions as f64
+    }
+
+    /// Power-delay product proxy (fJ): average energy per operation. The
+    /// paper's `Energy(k, AM) = PDP · #mults` uses exactly this quantity.
+    pub fn pdp_fj(&self, transitions: usize, seed: u64) -> f64 {
+        self.switching_energy_fj(transitions, seed)
+    }
+
+    /// Bit-parallel evaluation: every net is a 64-lane word, so one sweep
+    /// simulates 64 independent input vectors. This is the hot path of LUT
+    /// extraction (2^16 rows for 8×8) and of the ALSRAC-style pruning loop.
+    pub fn eval_words(&self, inputs: &[u64], nets: &mut Vec<u64>) {
+        debug_assert_eq!(inputs.len(), self.n_inputs);
+        nets.clear();
+        nets.extend_from_slice(inputs);
+        for g in &self.gates {
+            let v = match g.kind {
+                CellKind::Const => {
+                    if g.a != 0 {
+                        !0u64
+                    } else {
+                        0u64
+                    }
+                }
+                CellKind::Inv => !nets[g.a],
+                CellKind::Buf => nets[g.a],
+                CellKind::And2 => nets[g.a] & nets[g.b],
+                CellKind::Or2 => nets[g.a] | nets[g.b],
+                CellKind::Nand2 => !(nets[g.a] & nets[g.b]),
+                CellKind::Nor2 => !(nets[g.a] | nets[g.b]),
+                CellKind::Xor2 => nets[g.a] ^ nets[g.b],
+                CellKind::Xnor2 => !(nets[g.a] ^ nets[g.b]),
+            };
+            nets.push(v);
+        }
+    }
+
+    /// Word-parallel switching energy: `pairs` random (before, after) input
+    /// transitions per 64-lane sweep; toggles counted with popcount.
+    pub fn switching_energy_words_fj(&self, sweeps: usize, seed: u64) -> f64 {
+        let mut rng = Pcg::seeded(seed ^ 0x5eed);
+        let live = self.live_gates();
+        let mut in_a = vec![0u64; self.n_inputs];
+        let mut in_b = vec![0u64; self.n_inputs];
+        let mut nets_a = Vec::with_capacity(self.n_nets());
+        let mut nets_b = Vec::with_capacity(self.n_nets());
+        let mut total = 0.0;
+        for _ in 0..sweeps {
+            for v in in_a.iter_mut() {
+                *v = rng.next_u64();
+            }
+            for v in in_b.iter_mut() {
+                *v = rng.next_u64();
+            }
+            self.eval_words(&in_a, &mut nets_a);
+            self.eval_words(&in_b, &mut nets_b);
+            for (gi, g) in self.gates.iter().enumerate() {
+                if !live[gi] || g.kind == CellKind::Const {
+                    continue;
+                }
+                let net = self.n_inputs + gi;
+                let toggles = (nets_a[net] ^ nets_b[net]).count_ones() as f64;
+                total += toggles * g.kind.cost().energy;
+            }
+        }
+        total / (sweeps * 64) as f64
+    }
+
+    /// Replace gate `gi`'s output with a constant (ALSRAC-style stuck-at
+    /// simplification). Downstream logic keeps indices; dead fan-in is
+    /// excluded from costs automatically via the live set.
+    pub fn stuck_at(&mut self, gi: usize, value: bool) -> Result<()> {
+        if gi >= self.gates.len() {
+            bail!("gate index {gi} out of range");
+        }
+        self.gates[gi] = Gate {
+            kind: CellKind::Const,
+            a: value as usize,
+            b: 0,
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// c = (a AND b) XOR a
+    fn tiny() -> Netlist {
+        let mut n = Netlist::new(2);
+        let ab = n.gate(CellKind::And2, 0, 1);
+        let x = n.gate(CellKind::Xor2, ab, 0);
+        n.set_outputs(vec![x]);
+        n
+    }
+
+    #[test]
+    fn eval_tiny() {
+        let n = tiny();
+        // (a&b)^a: 00->0 01->0 10->1 11->0
+        assert_eq!(n.eval(&[false, false]), vec![false]);
+        assert_eq!(n.eval(&[false, true]), vec![false]);
+        assert_eq!(n.eval(&[true, false]), vec![true]);
+        assert_eq!(n.eval(&[true, true]), vec![false]);
+    }
+
+    #[test]
+    fn delay_is_path_sum() {
+        let n = tiny();
+        let want = CellKind::And2.cost().delay + CellKind::Xor2.cost().delay;
+        assert_eq!(n.critical_path_ps(), want);
+    }
+
+    #[test]
+    fn area_counts_live_only() {
+        let mut n = tiny();
+        // dead gate: not on any output path
+        n.gate(CellKind::Or2, 0, 1);
+        let want = CellKind::And2.cost().area + CellKind::Xor2.cost().area;
+        assert_eq!(n.area(), want);
+        assert_eq!(n.live_gate_count(), 2);
+    }
+
+    #[test]
+    fn stuck_at_simplifies() {
+        let mut n = tiny();
+        n.stuck_at(0, false).unwrap(); // and-gate → const 0 ⇒ out = a
+        assert_eq!(n.eval(&[true, true]), vec![true]);
+        assert_eq!(n.eval(&[false, true]), vec![false]);
+        // the AND's cost disappears
+        assert_eq!(n.area(), CellKind::Xor2.cost().area);
+    }
+
+    #[test]
+    fn switching_energy_positive_and_deterministic() {
+        let n = tiny();
+        let e1 = n.switching_energy_fj(256, 9);
+        let e2 = n.switching_energy_fj(256, 9);
+        assert_eq!(e1, e2);
+        assert!(e1 > 0.0);
+        // can't exceed every live gate toggling every transition
+        let cap = CellKind::And2.cost().energy + CellKind::Xor2.cost().energy;
+        assert!(e1 <= cap);
+    }
+
+    #[test]
+    fn word_eval_matches_scalar_eval() {
+        let n = tiny();
+        // lanes: all 4 input combinations
+        let a_word = 0b1100u64;
+        let b_word = 0b1010u64;
+        let mut nets = Vec::new();
+        n.eval_words(&[a_word, b_word], &mut nets);
+        for lane in 0..4 {
+            let a = a_word >> lane & 1 != 0;
+            let b = b_word >> lane & 1 != 0;
+            let want = n.eval(&[a, b])[0];
+            let got = nets[n.outputs[0]] >> lane & 1 != 0;
+            assert_eq!(got, want, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn word_switching_energy_close_to_scalar() {
+        let n = tiny();
+        let scalar = n.switching_energy_fj(4096, 11);
+        let words = n.switching_energy_words_fj(64, 11);
+        let rel = (scalar - words).abs() / scalar;
+        assert!(rel < 0.15, "scalar {scalar} vs words {words}");
+    }
+
+    #[test]
+    fn constant_nets_cost_nothing() {
+        let mut n = Netlist::new(1);
+        let c1 = n.constant(true);
+        let o = n.gate(CellKind::And2, 0, c1);
+        n.set_outputs(vec![o]);
+        assert_eq!(n.eval(&[true]), vec![true]);
+        assert_eq!(n.eval(&[false]), vec![false]);
+        assert_eq!(n.area(), CellKind::And2.cost().area);
+    }
+}

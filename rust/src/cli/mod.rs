@@ -1,0 +1,208 @@
+//! Hand-rolled CLI (no `clap` in the offline crate set).
+//!
+//! ```text
+//! fames <command> [key=value ...]
+//!
+//!   pipeline    run the full FAMES flow (estimate → ILP → calibrate → eval)
+//!   train       fp32 pre-train a model and cache its parameters
+//!   evaluate    evaluate the quantized-exact model (E = 0)
+//!   library     generate + print the AppMul library for given bitwidths
+//!   bits        HAWQ-like mixed-precision bitwidth proposal
+//!   experiment  reproduce a paper table/figure (table2|table3|table4|
+//!               fig2|fig3|fig4|fig5ab|fig5c|all)
+//!   help        this text
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::appmul::generate_library;
+use crate::config;
+use crate::pipeline::{self, FamesConfig, Session};
+use crate::report::{f3, pct, Table};
+
+const HELP: &str = "fames — FAMES reproduction (approximate-multiplier substitution)
+
+USAGE: fames <command> [key=value ...]
+
+COMMANDS
+  pipeline     full flow: estimate → ILP select → calibrate → evaluate
+  train        fp32 pre-train and cache parameters (steps=, train_lr=)
+  evaluate     evaluate the quantized-exact model (E = 0)
+  library      print the AppMul library (bits=4 or bits=4x8)
+  bits         HAWQ-like mixed-precision proposal (budget=0.1 vs 8-bit)
+  experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
+               fig5c | all   (writes results/<id>.csv)
+  help         this text
+
+COMMON KEYS
+  model=resnet8|resnet14|resnet20|vgg11|squeezenet   cfg=w8a8|w4a4|w3a3|w2a2|mixed
+  artifacts=PATH  seed=N  r_energy=0.7  est_batches=2  hessian=exact|rank1|off
+  eval_batches=4  train_steps=500  train_lr=0.05
+  calib_epochs=3  calib_samples=256  calib_lr=0.1  q_step=0.02  q_max=0.3
+";
+
+/// Run the CLI. Returns a process exit code.
+pub fn run(args: &[String]) -> Result<i32> {
+    let cmd = args.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[2.min(args.len())..];
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "pipeline" => cmd_pipeline(rest),
+        "train" => cmd_train(rest),
+        "evaluate" => cmd_evaluate(rest),
+        "library" => cmd_library(rest),
+        "bits" => cmd_bits(rest),
+        "experiment" => crate::experiments::run_cli(rest),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+fn base_config(args: &[String]) -> Result<FamesConfig> {
+    let mut cfg = FamesConfig {
+        artifact_root: pipeline::artifacts_root(),
+        ..FamesConfig::default()
+    };
+    config::apply_args(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+fn cmd_pipeline(args: &[String]) -> Result<i32> {
+    let cfg = base_config(args)?;
+    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    println!("== FAMES pipeline: {} / {} (R_energy = {}) ==", cfg.model, cfg.cfg, cfg.r_energy);
+    let session0 = Session::open(rt.clone(), &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    let library = pipeline::library_for(&session0.art.manifest, cfg.seed);
+    drop(session0);
+    let rep = pipeline::run(rt, &cfg, &library)?;
+
+    let mut t = Table::new("result", &["metric", "value"]);
+    t.row(vec!["quantized-exact accuracy (%)".into(), pct(rep.quant_eval.accuracy)]);
+    t.row(vec!["approx accuracy before calib (%)".into(), pct(rep.approx_eval_before.accuracy)]);
+    t.row(vec!["approx accuracy after calib (%)".into(), pct(rep.approx_eval_after.accuracy)]);
+    t.row(vec!["energy vs exact same-bitwidth".into(), f3(rep.energy_ratio_exact)]);
+    t.row(vec!["energy vs 8-bit baseline".into(), f3(rep.energy_ratio_8bit)]);
+    t.row(vec!["quant energy vs 8-bit baseline".into(), f3(rep.quant_energy_ratio_8bit)]);
+    t.row(vec!["estimate time (s)".into(), f3(rep.times.estimate_secs)]);
+    t.row(vec!["select time (s)".into(), f3(rep.times.select_secs)]);
+    t.row(vec!["calibrate time (s)".into(), f3(rep.times.calibrate_secs)]);
+    t.row(vec!["ILP nodes".into(), rep.ilp_nodes.to_string()]);
+    t.print();
+    println!("selection:");
+    for (l, (name, p)) in rep.selection.iter().zip(&rep.perturbations).enumerate() {
+        println!("  layer {l:2}: {name}  (Ω = {p:+.5})");
+    }
+    Ok(0)
+}
+
+fn cmd_train(args: &[String]) -> Result<i32> {
+    let cfg = base_config(args)?;
+    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    let curve = crate::train::train(&mut session, cfg.train_steps, cfg.train_lr)?;
+    let (head, tail) = curve.head_tail(20);
+    println!("trained {} steps: loss {head:.3} → {tail:.3}", cfg.train_steps);
+    let path = Session::state_path(&cfg.artifact_root, &cfg.model);
+    session.save_params(&path)?;
+    println!("saved params to {}", path.display());
+    Ok(0)
+}
+
+fn cmd_evaluate(args: &[String]) -> Result<i32> {
+    let cfg = base_config(args)?;
+    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    pipeline::ensure_trained(&mut session, &cfg)?;
+    session.init_act_ranges()?;
+    let rf = session.evaluate_float(cfg.eval_batches)?;
+    let r = session.evaluate(cfg.eval_batches)?;
+    println!(
+        "{} / {}: fp32 accuracy {} %, quantized-exact accuracy {} % (loss {:.4}, {} samples)",
+        cfg.model,
+        cfg.cfg,
+        pct(rf.accuracy),
+        pct(r.accuracy),
+        r.loss,
+        r.samples
+    );
+    Ok(0)
+}
+
+fn cmd_library(args: &[String]) -> Result<i32> {
+    let mut bits_arg = "4".to_string();
+    let mut seed = 0u64;
+    for a in args {
+        match a.split_once('=') {
+            Some(("bits", v)) => bits_arg = v.to_string(),
+            Some(("seed", v)) => seed = v.parse().context("seed")?,
+            _ => bail!("library takes bits= and seed= (got '{a}')"),
+        }
+    }
+    let (a_bits, w_bits) = match bits_arg.split_once('x') {
+        Some((a, w)) => (a.parse()?, w.parse()?),
+        None => {
+            let b: u32 = bits_arg.parse()?;
+            (b, b)
+        }
+    };
+    let lib = generate_library(&[(a_bits, w_bits)], seed);
+    let mut t = Table::new(
+        format!("AppMul library {a_bits}x{w_bits} (seed {seed})"),
+        &["name", "family", "pdp", "energy_fj", "delay_ps", "area_um2", "gates", "mred", "er", "wce"],
+    );
+    for m in lib.for_bits(a_bits, w_bits) {
+        t.row(vec![
+            m.name.clone(),
+            m.family.clone(),
+            f3(m.pdp),
+            f3(m.energy_fj),
+            format!("{:.0}", m.delay_ps),
+            format!("{:.1}", m.area_um2),
+            m.gates.to_string(),
+            format!("{:.4}", m.metrics.mred),
+            format!("{:.3}", m.metrics.er),
+            m.metrics.wce.to_string(),
+        ]);
+    }
+    t.print();
+    println!("pareto frontier: {:?}",
+             lib.pareto(a_bits, w_bits).iter().map(|m| m.name.as_str()).collect::<Vec<_>>());
+    Ok(0)
+}
+
+fn cmd_bits(args: &[String]) -> Result<i32> {
+    let mut budget = 0.10;
+    let mut kv = Vec::new();
+    for a in args {
+        if let Some(("budget", v)) = a.split_once('=') {
+            budget = v.parse().context("budget")?;
+        } else {
+            kv.push(a.clone());
+        }
+    }
+    let cfg = base_config(&kv)?;
+    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    pipeline::ensure_trained(&mut session, &cfg)?;
+    let lib = generate_library(&[(2, 2), (3, 3), (4, 4), (8, 8)], cfg.seed);
+    let alloc = crate::quant::allocate_bits(
+        &session.art.manifest,
+        &session.params,
+        &lib,
+        budget,
+        &[2, 3, 4, 8],
+    )?;
+    println!("proposed bitwidths (avg {:.2}, energy {:.3}× of 8-bit):",
+             alloc.avg_bits, alloc.energy_ratio_8bit);
+    for (l, b) in session.art.manifest.layers.iter().zip(&alloc.bits) {
+        println!("  {:12} {} bits", l.name, b);
+    }
+    Ok(0)
+}

@@ -1,0 +1,131 @@
+//! Configuration: defaults + JSON config files + `key=value` CLI overrides
+//! (no `clap`/`serde` in the offline crate set).
+
+use anyhow::{bail, Context, Result};
+
+use crate::calibrate::CalibConfig;
+use crate::json::Json;
+use crate::pipeline::FamesConfig;
+
+/// Apply one `key=value` override to a [`FamesConfig`].
+pub fn apply_kv(cfg: &mut FamesConfig, key: &str, value: &str) -> Result<()> {
+    let vf = || -> Result<f64> {
+        value
+            .parse::<f64>()
+            .with_context(|| format!("'{value}' is not a number (for {key})"))
+    };
+    let vu = || -> Result<usize> {
+        value
+            .parse::<usize>()
+            .with_context(|| format!("'{value}' is not an integer (for {key})"))
+    };
+    match key {
+        "model" => cfg.model = value.to_string(),
+        "cfg" => cfg.cfg = value.to_string(),
+        "artifacts" => cfg.artifact_root = value.to_string(),
+        "seed" => cfg.seed = vu()? as u64,
+        "r_energy" => cfg.r_energy = vf()?,
+        "est_batches" => cfg.est_batches = vu()?,
+        "hessian" => {
+            cfg.hessian = match value {
+                "off" => crate::sensitivity::HessianMode::Off,
+                "exact" => crate::sensitivity::HessianMode::Exact,
+                "rank1" => crate::sensitivity::HessianMode::Rank1 { iters: 6 },
+                other => bail!("hessian must be off|rank1|exact (got '{other}')"),
+            }
+        }
+        "hessian_iters" => cfg.hessian = crate::sensitivity::HessianMode::Rank1 { iters: vu()? },
+        "eval_batches" => cfg.eval_batches = vu()?,
+        "train_steps" => cfg.train_steps = vu()?,
+        "train_lr" => cfg.train_lr = vf()? as f32,
+        "calib_epochs" => cfg.calib.epochs = vu()?,
+        "calib_samples" => cfg.calib.samples = vu()?,
+        "calib_lr" => cfg.calib.lr = vf()? as f32,
+        "q_step" => cfg.calib.q_step = vf()?,
+        "q_max" => cfg.calib.q_max = vf()?,
+        "sweep_metric" => {
+            cfg.calib.metric = match value {
+                "mse" => crate::calibrate::SweepMetric::Mse,
+                "mre" => crate::calibrate::SweepMetric::Mre,
+                other => bail!("sweep_metric must be mse|mre (got '{other}')"),
+            }
+        }
+        other => bail!("unknown config key '{other}'"),
+    }
+    Ok(())
+}
+
+/// Parse a JSON config object into a [`FamesConfig`] (all keys optional).
+pub fn from_json(j: &Json) -> Result<FamesConfig> {
+    let mut cfg = FamesConfig::default();
+    for (k, v) in j.as_obj()? {
+        let s = match v {
+            Json::Str(s) => s.clone(),
+            Json::Num(n) => format!("{n}"),
+            other => bail!("config key '{k}': unsupported value {other}"),
+        };
+        apply_kv(&mut cfg, k, &s)?;
+    }
+    Ok(cfg)
+}
+
+/// Parse trailing `key=value` CLI arguments over a base config.
+pub fn apply_args(cfg: &mut FamesConfig, args: &[String]) -> Result<()> {
+    for a in args {
+        match a.split_once('=') {
+            Some((k, v)) => apply_kv(cfg, k, v)?,
+            None => bail!("expected key=value, got '{a}'"),
+        }
+    }
+    Ok(())
+}
+
+/// Default calibration settings matching the paper's Algorithm 1 scale
+/// (1024 samples / 5 epochs) — used by the `--paper-scale` flag.
+pub fn paper_scale_calib() -> CalibConfig {
+    CalibConfig {
+        epochs: 5,
+        samples: 1024,
+        lr: 0.1,
+        q_step: 0.01,
+        q_max: 0.5,
+        metric: crate::calibrate::SweepMetric::Mse,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_overrides() {
+        let mut cfg = FamesConfig::default();
+        apply_kv(&mut cfg, "model", "resnet20").unwrap();
+        apply_kv(&mut cfg, "r_energy", "0.5").unwrap();
+        apply_kv(&mut cfg, "calib_epochs", "7").unwrap();
+        assert_eq!(cfg.model, "resnet20");
+        assert_eq!(cfg.r_energy, 0.5);
+        assert_eq!(cfg.calib.epochs, 7);
+        assert!(apply_kv(&mut cfg, "bogus", "1").is_err());
+        assert!(apply_kv(&mut cfg, "seed", "xyz").is_err());
+    }
+
+    #[test]
+    fn json_config() {
+        let j = Json::parse(r#"{"model":"vgg11","cfg":"w3a3","r_energy":0.6}"#).unwrap();
+        let cfg = from_json(&j).unwrap();
+        assert_eq!(cfg.model, "vgg11");
+        assert_eq!(cfg.cfg, "w3a3");
+        assert_eq!(cfg.r_energy, 0.6);
+    }
+
+    #[test]
+    fn args_parsing() {
+        let mut cfg = FamesConfig::default();
+        let args = vec!["model=resnet14".to_string(), "eval_batches=2".to_string()];
+        apply_args(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.model, "resnet14");
+        assert_eq!(cfg.eval_batches, 2);
+        assert!(apply_args(&mut cfg, &["nokv".to_string()]).is_err());
+    }
+}

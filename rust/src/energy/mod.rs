@@ -1,0 +1,131 @@
+//! Energy accounting (paper §IV-D).
+//!
+//! `Energy(k, AM) = PDP_AM · N_O·H·W·N_I·W_K·H_K` per image; model energy is
+//! the sum over substitutable layers. Two reference points:
+//!
+//! * the **exact same-bitwidth model** — the ILP budget `R_Energy` and the
+//!   paper's "Reduced Energy" column are relative to this;
+//! * the **8×8 exact baseline model** — Table III's "Relative Energy" column.
+
+use anyhow::Result;
+
+use crate::appmul::{AppMul, Library};
+use crate::runtime::{LayerInfo, Manifest};
+
+/// Energy model bound to one model manifest + one AppMul library.
+pub struct EnergyModel<'a> {
+    pub manifest: &'a Manifest,
+    pub library: &'a Library,
+}
+
+impl<'a> EnergyModel<'a> {
+    pub fn new(manifest: &'a Manifest, library: &'a Library) -> Self {
+        EnergyModel { manifest, library }
+    }
+
+    /// Energy (PDP·mults, fJ·ns units) of one layer under one AppMul.
+    pub fn layer_energy(&self, layer: &LayerInfo, am: &AppMul) -> f64 {
+        am.pdp * layer.mults_per_image as f64
+    }
+
+    /// Energy of a layer with its exact same-bitwidth multiplier.
+    pub fn layer_energy_exact(&self, layer: &LayerInfo) -> Result<f64> {
+        let exact = self.library.exact(layer.a_bits, layer.w_bits)?;
+        Ok(self.layer_energy(layer, exact))
+    }
+
+    /// Total energy of the exact model at the manifest's bitwidths.
+    pub fn model_energy_exact(&self) -> Result<f64> {
+        self.manifest
+            .layers
+            .iter()
+            .map(|l| self.layer_energy_exact(l))
+            .sum()
+    }
+
+    /// Total energy of the hypothetical 8×8 exact model with identical
+    /// geometry (Table III's 100% reference).
+    pub fn model_energy_8bit_baseline(&self) -> Result<f64> {
+        let exact8 = self.library.exact(8, 8)?;
+        Ok(self
+            .manifest
+            .layers
+            .iter()
+            .map(|l| self.layer_energy(l, exact8))
+            .sum())
+    }
+
+    /// Total energy under a per-layer AppMul assignment.
+    pub fn model_energy(&self, selection: &[&AppMul]) -> f64 {
+        self.manifest
+            .layers
+            .iter()
+            .zip(selection)
+            .map(|(l, am)| self.layer_energy(l, am))
+            .sum()
+    }
+
+    /// Ratio of an assignment to the exact same-bitwidth model.
+    pub fn ratio_vs_exact(&self, selection: &[&AppMul]) -> Result<f64> {
+        Ok(self.model_energy(selection) / self.model_energy_exact()?)
+    }
+
+    /// Ratio of an assignment to the 8×8 exact baseline (Table III column).
+    pub fn ratio_vs_8bit(&self, selection: &[&AppMul]) -> Result<f64> {
+        Ok(self.model_energy(selection) / self.model_energy_8bit_baseline()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appmul::generate_library;
+    use crate::json::Json;
+    use crate::runtime::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(
+                r#"{
+              "model":"m","cfg":"w4a4","num_classes":10,
+              "image_shape":[3,8,8],"train_batch":4,"eval_batch":4,
+              "layers":[
+                {"name":"c0","index":0,"w_bits":4,"a_bits":4,"in_ch":3,"out_ch":8,
+                 "kernel":[3,3],"stride":1,"in_hw":[8,8],"out_hw":[8,8],
+                 "e_rows":16,"e_cols":16,"mults_per_image":13824},
+                {"name":"c1","index":1,"w_bits":4,"a_bits":4,"in_ch":8,"out_ch":8,
+                 "kernel":[3,3],"stride":1,"in_hw":[8,8],"out_hw":[8,8],
+                 "e_rows":16,"e_cols":16,"mults_per_image":36864}],
+              "params":[],"opt_state":[],"executables":{}
+            }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn exact_model_energy_is_pdp_times_mults() {
+        let lib = generate_library(&[(4, 4), (8, 8)], 0);
+        let m = tiny_manifest();
+        let em = EnergyModel::new(&m, &lib);
+        let exact = lib.exact(4, 4).unwrap();
+        let want = exact.pdp * (13824.0 + 36864.0);
+        assert!((em.model_energy_exact().unwrap() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn approx_selection_cheaper_and_8bit_baseline_larger() {
+        let lib = generate_library(&[(4, 4), (8, 8)], 0);
+        let m = tiny_manifest();
+        let em = EnergyModel::new(&m, &lib);
+        let muls = lib.for_bits(4, 4);
+        let cheap = *muls.last().unwrap();
+        let sel = vec![cheap, cheap];
+        assert!(em.ratio_vs_exact(&sel).unwrap() < 1.0);
+        // 4-bit exact model is a small fraction of the 8-bit baseline
+        let exact = lib.exact(4, 4).unwrap();
+        let r8 = em.ratio_vs_8bit(&[exact, exact]).unwrap();
+        assert!(r8 < 0.25, "4-bit vs 8-bit ratio {r8}");
+    }
+}

@@ -1,0 +1,242 @@
+//! Shared context for the experiment drivers.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::appmul::Library;
+use crate::pipeline::{self, FamesConfig, Session};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Shared state: one PJRT runtime, the artifact root, a results directory,
+/// and a scale knob for quick runs.
+pub struct ExpCtx {
+    pub rt: Rc<Runtime>,
+    pub root: String,
+    pub results: PathBuf,
+    /// `FAMES_FAST=1` shrinks sweeps for smoke runs.
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl ExpCtx {
+    pub fn new() -> Result<ExpCtx> {
+        let root = pipeline::artifacts_root();
+        let results = PathBuf::from("results");
+        std::fs::create_dir_all(&results)?;
+        Ok(ExpCtx {
+            rt: Rc::new(Runtime::cpu()?),
+            root,
+            results,
+            fast: std::env::var("FAMES_FAST").map(|v| v == "1").unwrap_or(false),
+            seed: 0,
+        })
+    }
+
+    /// Base pipeline config for a (model, cfg) with experiment-grade knobs.
+    pub fn fames_config(&self, model: &str, cfg: &str) -> FamesConfig {
+        let mut c = FamesConfig {
+            model: model.into(),
+            cfg: cfg.into(),
+            artifact_root: self.root.clone(),
+            seed: self.seed,
+            ..FamesConfig::default()
+        };
+        // experiment-grade knobs: keep sweeps affordable on this substrate
+        c.calib.epochs = 2;
+        c.calib.samples = 128;
+        if self.fast {
+            c.est_batches = 1;
+            c.hessian = crate::sensitivity::HessianMode::Rank1 { iters: 2 };
+            c.eval_batches = 1;
+            c.calib.epochs = 1;
+            c.calib.samples = 64;
+            c.train_steps = 120;
+        }
+        c
+    }
+
+    /// Open a session with trained params + calibrated activation ranges.
+    pub fn ready_session(&self, cfg: &FamesConfig) -> Result<Session> {
+        let mut s = Session::open(self.rt.clone(), &cfg.artifact_root, &cfg.model, &cfg.cfg,
+                                  cfg.seed)?;
+        pipeline::ensure_trained(&mut s, cfg)?;
+        s.init_act_ranges()?;
+        Ok(s)
+    }
+
+    /// Library covering a session's manifest.
+    pub fn library(&self, session: &Session) -> Library {
+        pipeline::library_for(&session.art.manifest, self.seed)
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.results.join(name)
+    }
+}
+
+/// One FAMES operating point (selection at a given R, calibrated).
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub r_energy: f64,
+    pub acc_before: f64,
+    pub acc_after: f64,
+    pub loss_after: f64,
+    pub energy_vs_exact: f64,
+    pub energy_vs_8bit: f64,
+    pub calib_secs: f64,
+    pub selection: Vec<String>,
+}
+
+/// Estimation state reused across an R sweep: estimate once, select many.
+pub struct Prepared {
+    pub session: Session,
+    pub library: Library,
+    pub table: crate::sensitivity::PerturbTable,
+    pub quant_acc: f64,
+    pub quant_loss: f64,
+    init_act_q: Vec<(f32, f32)>,
+    init_lwc: Vec<(f32, f32)>,
+}
+
+impl ExpCtx {
+    /// Estimate the Ω table once for (model, cfg). `hessian` defaults to
+    /// Exact for ≤4-bit sets and first-order for w8a8 (the 8-bit quadratics
+    /// are 16× the cost and first-order is accurate in the small-relative-
+    /// error regime there).
+    pub fn prepare(&self, model: &str, cfg: &str) -> Result<Prepared> {
+        let fcfg = self.fames_config(model, cfg);
+        let mut session = self.ready_session(&fcfg)?;
+        let library = self.library(&session);
+        let hessian = if cfg == "w8a8" {
+            crate::sensitivity::HessianMode::Off
+        } else {
+            fcfg.hessian
+        };
+        session.clear_selection();
+        let quant = session.evaluate(fcfg.eval_batches)?;
+        let (_e, table) = crate::sensitivity::estimate_table(
+            &mut session,
+            &library,
+            fcfg.est_batches,
+            hessian,
+        )?;
+        Ok(Prepared {
+            init_act_q: session.act_q.clone(),
+            init_lwc: session.lwc.clone(),
+            quant_acc: quant.accuracy,
+            quant_loss: quant.loss,
+            session,
+            library,
+            table,
+        })
+    }
+
+    /// Select at energy budget `r`, calibrate, evaluate.
+    pub fn point_at(&self, prep: &mut Prepared, r: f64, calib: bool) -> Result<Point> {
+        let fcfg = self.fames_config(&prep.session.art.manifest.model,
+                                     &prep.session.art.manifest.cfg);
+        // reset calibration state from the sweep's baseline
+        prep.session.act_q = prep.init_act_q.clone();
+        prep.session.lwc = prep.init_lwc.clone();
+        let (choices, sol, ratios) = {
+            let energy = crate::energy::EnergyModel::new(&prep.session.art.manifest,
+                                                         &prep.library);
+            let (choices, sol) =
+                pipeline::select_ilp(&prep.table, &energy, &prep.library, r)?;
+            let selection: Vec<&crate::appmul::AppMul> = choices
+                .iter()
+                .zip(&sol.picks)
+                .map(|(row, &i)| row[i])
+                .collect();
+            let ratios = (
+                energy.ratio_vs_exact(&selection)?,
+                energy.ratio_vs_8bit(&selection)?,
+            );
+            (choices, sol, ratios)
+        };
+        let names: Vec<String> = choices
+            .iter()
+            .zip(&sol.picks)
+            .map(|(row, &i)| row[i].name.clone())
+            .collect();
+        prep.session
+            .set_selection(pipeline::selection_tensors(&choices, &sol.picks))?;
+        let before = prep.session.evaluate(fcfg.eval_batches)?;
+        let mut calib_secs = 0.0;
+        let after = if calib {
+            let t = std::time::Instant::now();
+            crate::calibrate::calibrate(&mut prep.session, &fcfg.calib)?;
+            calib_secs = t.elapsed().as_secs_f64();
+            prep.session.evaluate(fcfg.eval_batches)?
+        } else {
+            before
+        };
+        Ok(Point {
+            r_energy: r,
+            acc_before: before.accuracy,
+            acc_after: after.accuracy,
+            loss_after: after.loss,
+            energy_vs_exact: ratios.0,
+            energy_vs_8bit: ratios.1,
+            calib_secs,
+            selection: names,
+        })
+    }
+}
+
+/// Mean loss of the current selection on `n` estimation batches (the
+/// "true loss" axis of Fig. 4 / Fig. 5: same batches the estimator saw).
+pub fn true_loss(session: &Session, n: usize) -> Result<f64> {
+    let m = &session.art.manifest;
+    let mut loss = 0.0;
+    for i in 0..n {
+        let batch = session
+            .data
+            .train_batch(900 + i as u64, 0, m.train_batch, session.train_pool);
+        let out = run_fwd_on(session, &batch)?;
+        loss += out;
+    }
+    Ok(loss / n as f64)
+}
+
+fn run_fwd_on(session: &Session, batch: &crate::data::Batch) -> Result<f64> {
+    // fwd is exported at eval batch size; estimation batches are train-sized,
+    // so run grad_e (same STE loss) and use its loss output.
+    let spec = session.art.manifest.exe("grad_e")?.clone();
+    let exe = session.exe("grad_e")?;
+    let mut inputs: Vec<Tensor> = Vec::new();
+    for g in &spec.inputs {
+        match g.as_str() {
+            "params" => {
+                for p in &session.art.manifest.params {
+                    inputs.push(session.params.get(&p.name)?.clone());
+                }
+            }
+            "lwc" => {
+                for &(a, b) in &session.lwc {
+                    inputs.push(Tensor::scalar(a));
+                    inputs.push(Tensor::scalar(b));
+                }
+            }
+            "act_q" => {
+                for &(a, b) in &session.act_q {
+                    inputs.push(Tensor::scalar(a));
+                    inputs.push(Tensor::scalar(b));
+                }
+            }
+            "e_list" => {
+                for e in &session.e_list {
+                    inputs.push(e.clone());
+                }
+            }
+            "images_train" => inputs.push(batch.images.clone()),
+            "labels_train" => inputs.push(batch.labels.clone()),
+            other => anyhow::bail!("unexpected group {other} in grad_e"),
+        }
+    }
+    let out = exe.run(&inputs)?;
+    Ok(out[0].item()? as f64)
+}

@@ -1,0 +1,407 @@
+//! Figure drivers: Fig. 2 (calibration effect on output differences),
+//! Fig. 3 (accuracy–energy fronts per method), Fig. 4 (true vs estimated
+//! perturbation), Fig. 5 (selection & estimator ablations).
+
+use anyhow::Result;
+
+use super::common::{true_loss, ExpCtx};
+use crate::calibrate::{self, CalibConfig};
+use crate::energy::EnergyModel;
+use crate::pipeline;
+use crate::report::pct;
+use crate::select::nsga::{self, NsgaConfig};
+use crate::sensitivity;
+use crate::tensor::Tensor;
+use crate::util;
+
+/// Fig. 2 — distribution of (approx − exact) output differences before and
+/// after calibration. The "output" observed is each conv layer's input
+/// activation stream (the paper plots layer outputs; inputs of layer k+1
+/// are the post-ReLU outputs of layer k).
+pub fn fig2(ctx: &ExpCtx) -> Result<()> {
+    // resnet8: the paper uses ResNet-20, whose mini version has a degenerate
+    // quantized baseline on this substrate (see fig4 note).
+    let model = "resnet8";
+    let mut prep = ctx.prepare(model, "w4a4")?;
+    let p = ctx.point_at(&mut prep, 0.65, false)?;
+    println!("fig2: selection at R=0.65 (acc before calib {})", pct(p.acc_before));
+
+    let batch = prep.session.eval_batch(0);
+    // exact reference
+    let saved = prep.session.e_list.clone();
+    prep.session.clear_selection();
+    let (acts_exact, _) = prep.session.fwd_acts(&batch)?;
+    prep.session.e_list = saved;
+
+    let collect_diffs = |session: &crate::pipeline::Session| -> Result<Vec<f32>> {
+        let (acts, _) = session.fwd_acts(&batch)?;
+        let mut diffs = Vec::new();
+        for (a, e) in acts.iter().zip(&acts_exact).skip(1) {
+            for (&x, &y) in a.data().iter().zip(e.data()) {
+                diffs.push(x - y);
+            }
+        }
+        Ok(diffs)
+    };
+
+    let before = collect_diffs(&prep.session)?;
+    let fcfg = ctx.fames_config(model, "w4a4");
+    calibrate::calibrate(&mut prep.session, &fcfg.calib)?;
+    let after = collect_diffs(&prep.session)?;
+    let acc_after = prep.session.evaluate(fcfg.eval_batches)?;
+    println!("fig2: acc after calib {}", pct(acc_after.accuracy));
+
+    // histogram both distributions on a common grid
+    let lim = before
+        .iter()
+        .chain(&after)
+        .map(|v| v.abs())
+        .fold(0.0f32, f32::max)
+        .max(1e-6);
+    let bins = 61usize;
+    let hist = |v: &[f32]| -> Vec<usize> {
+        let mut h = vec![0usize; bins];
+        for &x in v {
+            let t = ((x + lim) / (2.0 * lim) * (bins as f32 - 1.0)).round();
+            h[(t.max(0.0) as usize).min(bins - 1)] += 1;
+        }
+        h
+    };
+    let hb = hist(&before);
+    let ha = hist(&after);
+    let rows: Vec<Vec<String>> = (0..bins)
+        .map(|i| {
+            let center = -lim + 2.0 * lim * i as f32 / (bins as f32 - 1.0);
+            vec![format!("{center:.5}"), hb[i].to_string(), ha[i].to_string()]
+        })
+        .collect();
+    util::write_csv(ctx.csv_path("fig2.csv"), &["diff", "before", "after"], &rows)?;
+
+    // paper-shape check: the after distribution must be tighter
+    let std = |v: &[f32]| {
+        let m: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        (v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / v.len() as f64).sqrt()
+    };
+    println!(
+        "fig2: output-difference std before {:.4} → after {:.4}; wrote results/fig2.csv",
+        std(&before),
+        std(&after)
+    );
+    Ok(())
+}
+
+/// Fig. 3 — relative accuracy vs relative energy for FAMES (ILP), a
+/// MARLIN-style NSGA-II and an ALWANN-style NSGA-II, per model.
+pub fn fig3(ctx: &ExpCtx) -> Result<()> {
+    // resnet20 omitted: degenerate quantized baseline (see fig4 note).
+    let models: &[&str] = if ctx.fast {
+        &["resnet8"]
+    } else {
+        &["resnet8", "resnet14"]
+    };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for model in models {
+        let mut prep = ctx.prepare(model, "w4a4")?;
+        let quant_acc = prep.quant_acc;
+
+        // ours: ILP sweep over energy budgets, with calibration
+        let r_values: &[f64] = if ctx.fast { &[0.7] } else { &[0.8, 0.65, 0.5, 0.4] };
+        for &r in r_values {
+            if let Ok(p) = ctx.point_at(&mut prep, r, true) {
+                rows.push(vec![
+                    model.to_string(),
+                    "fames".into(),
+                    format!("{:.5}", p.energy_vs_exact),
+                    format!("{:.5}", p.acc_after / quant_acc),
+                ]);
+            }
+        }
+
+        // GA baselines: final Pareto fronts (loss, energy) → evaluate accuracy
+        for (method, pop, gens) in [("marlin", 8usize, 4usize), ("alwann", 6, 3)] {
+            if ctx.fast {
+                continue;
+            }
+            let manifest = prep.session.art.manifest.clone();
+            let n_choices: Vec<usize> = manifest
+                .layers
+                .iter()
+                .map(|l| prep.library.for_bits(l.a_bits, l.w_bits).len())
+                .collect();
+            let cfg = NsgaConfig {
+                population: pop,
+                generations: gens,
+                seed: ctx.seed + 7,
+                ..Default::default()
+            };
+            let session = &mut prep.session;
+            let library = &prep.library;
+            let (front, _) = nsga::run(&n_choices, &cfg, |genome| {
+                let mut e_list = Vec::with_capacity(genome.len());
+                let mut sel = Vec::with_capacity(genome.len());
+                for (k, &gi) in genome.iter().enumerate() {
+                    let muls = library.for_bits(manifest.layers[k].a_bits,
+                                                manifest.layers[k].w_bits);
+                    let am = muls[gi.min(muls.len() - 1)];
+                    sel.push(am);
+                    e_list.push(am.error_tensor());
+                }
+                let energy = EnergyModel::new(&manifest, library);
+                let ratio = energy.ratio_vs_exact(&sel).unwrap_or(f64::MAX);
+                if session.set_selection(e_list).is_err() {
+                    return (f64::MAX, f64::MAX);
+                }
+                match session.evaluate(1) {
+                    Ok(r) => (r.loss, ratio),
+                    Err(_) => (f64::MAX, f64::MAX),
+                }
+            });
+            for ind in front.iter().take(6) {
+                // re-evaluate the accuracy of each front member
+                let mut e_list = Vec::new();
+                for (k, &gi) in ind.genome.iter().enumerate() {
+                    let muls = prep.library.for_bits(manifest.layers[k].a_bits,
+                                                     manifest.layers[k].w_bits);
+                    e_list.push(muls[gi.min(muls.len() - 1)].error_tensor());
+                }
+                prep.session.set_selection(e_list)?;
+                let acc = prep.session.evaluate(2)?.accuracy;
+                rows.push(vec![
+                    model.to_string(),
+                    method.into(),
+                    format!("{:.5}", ind.objectives.1),
+                    format!("{:.5}", acc / quant_acc),
+                ]);
+            }
+            prep.session.clear_selection();
+        }
+    }
+    util::write_csv(
+        ctx.csv_path("fig3.csv"),
+        &["model", "method", "rel_energy_vs_exact", "rel_accuracy"],
+        &rows,
+    )?;
+    // shape summary: best FAMES point vs best GA point per model
+    println!("fig3: wrote results/fig3.csv ({} points)", rows.len());
+    Ok(())
+}
+
+/// Fig. 4 — true loss vs Taylor estimate across the 4×4 library.
+///
+/// Paper uses ResNet-20; on this substrate the 21-layer mini-ResNet's
+/// 4-bit quantized baseline sits at chance (DESIGN §3 caveat), which makes
+/// the true-loss axis degenerate — resnet8 (healthy 99.6% baseline) is the
+/// faithful carrier of the experiment here.
+pub fn fig4(ctx: &ExpCtx) -> Result<()> {
+    let model = "resnet8";
+    let mut prep = ctx.prepare(model, "w4a4")?;
+    let n_layers = prep.session.art.manifest.layers.len();
+    let layers: Vec<usize> = if ctx.fast {
+        vec![1, n_layers - 1]
+    } else {
+        (0..n_layers).collect()
+    };
+    let base = true_loss(&prep.session, 1)?;
+    let mut rows = Vec::new();
+    let mut est_pts = Vec::new();
+    let mut true_pts = Vec::new();
+    for &k in &layers {
+        let layer = &prep.session.art.manifest.layers[k];
+        let muls = prep.library.for_bits(layer.a_bits, layer.w_bits);
+        for (i, am) in muls.iter().enumerate() {
+            let estimate = prep.table.values[k][i];
+            prep.session.clear_selection();
+            let mut e_list = prep.session.e_list.clone();
+            e_list[k] = am.error_tensor();
+            prep.session.set_selection(e_list)?;
+            let tl = true_loss(&prep.session, 1)? - base;
+            rows.push(vec![
+                k.to_string(),
+                am.name.clone(),
+                format!("{estimate:.6}"),
+                format!("{tl:.6}"),
+            ]);
+            if !am.is_exact() {
+                est_pts.push(estimate);
+                true_pts.push(tl);
+            }
+        }
+    }
+    prep.session.clear_selection();
+    util::write_csv(
+        ctx.csv_path("fig4.csv"),
+        &["layer", "appmul", "estimate", "true_delta"],
+        &rows,
+    )?;
+    // paper-shape check: estimates must track the actual trend — rank
+    // correlation (Spearman) over all candidates
+    let rho = spearman(&est_pts, &true_pts);
+    println!(
+        "fig4: {} points, Spearman rank correlation estimate↔truth = {:.3}; \
+         wrote results/fig4.csv",
+        est_pts.len(),
+        rho
+    );
+    Ok(())
+}
+
+fn rank(v: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+    let mut r = vec![0.0; v.len()];
+    for (pos, &i) in idx.iter().enumerate() {
+        r[i] = pos as f64;
+    }
+    r
+}
+
+pub(super) fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    if a.len() < 3 {
+        return 0.0;
+    }
+    let ra = rank(a);
+    let rb = rank(b);
+    let ma = util::mean(&ra);
+    let mb = util::mean(&rb);
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..ra.len() {
+        num += (ra[i] - ma) * (rb[i] - mb);
+        da += (ra[i] - ma).powi(2);
+        db += (rb[i] - mb).powi(2);
+    }
+    num / (da.sqrt() * db.sqrt()).max(1e-12)
+}
+
+/// Fig. 5(a,b) — ILP selection vs uniform selection at matched energy
+/// ratios, in uniform 4-bit (a) and 8-bit (b) settings.
+pub fn fig5ab(ctx: &ExpCtx) -> Result<()> {
+    // w8a8 omitted by default (see tables.rs); w4a4 + w3a3 span the regime
+    let cfgs: &[&str] = if ctx.fast { &["w4a4"] } else { &["w4a4", "w3a3"] };
+    let mut rows = Vec::new();
+    for cfg in cfgs {
+        let mut prep = ctx.prepare("resnet8", cfg)?;
+        let n_layers = prep.session.art.manifest.layers.len();
+        let bits = prep.session.art.manifest.layers[0].a_bits;
+
+        // uniform selection: every library member applied to all layers
+        let uniform: Vec<(String, f64, f64)> = {
+            let mut out = Vec::new();
+            let muls = prep.library.for_bits(bits, bits);
+            for am in muls {
+                let sel = vec![am; n_layers];
+                let ratio = {
+                    let energy = EnergyModel::new(&prep.session.art.manifest, &prep.library);
+                    energy.ratio_vs_exact(&sel)?
+                };
+                out.push((am.name.clone(), ratio, 0.0));
+            }
+            out
+        };
+        for (name, ratio, _) in &uniform {
+            let am = prep.library.find(name)?;
+            let e_list = (0..n_layers).map(|_| am.error_tensor()).collect();
+            prep.session.set_selection(e_list)?;
+            let loss = true_loss(&prep.session, 1)?;
+            rows.push(vec![
+                cfg.to_string(),
+                "uniform".into(),
+                name.clone(),
+                format!("{ratio:.5}"),
+                format!("{loss:.5}"),
+            ]);
+        }
+
+        // ILP at matched ratios
+        let r_values: &[f64] = if ctx.fast {
+            &[0.7]
+        } else {
+            &[0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3]
+        };
+        for &r in r_values {
+            if let Ok(p) = ctx.point_at(&mut prep, r, false) {
+                let loss = true_loss(&prep.session, 1)?;
+                rows.push(vec![
+                    cfg.to_string(),
+                    "ilp".into(),
+                    format!("R={r}"),
+                    format!("{:.5}", p.energy_vs_exact),
+                    format!("{loss:.5}"),
+                ]);
+            }
+        }
+        prep.session.clear_selection();
+    }
+    util::write_csv(
+        ctx.csv_path("fig5ab.csv"),
+        &["cfg", "method", "point", "energy_ratio", "loss"],
+        &rows,
+    )?;
+    println!("fig5ab: wrote results/fig5ab.csv ({} points)", rows.len());
+    Ok(())
+}
+
+/// Fig. 5(c) — mixed-precision selection with different perturbation
+/// estimators: Taylor (ours) vs error-matrix L2 norm vs AppMul MRE.
+pub fn fig5c(ctx: &ExpCtx) -> Result<()> {
+    let model = "resnet8";
+    let mut prep = ctx.prepare(model, "mixed")?;
+    let manifest = prep.session.art.manifest.clone();
+    let r_values: &[f64] = if ctx.fast { &[0.7] } else { &[0.85, 0.7, 0.55, 0.4] };
+    let mut rows = Vec::new();
+    for estimator in ["taylor", "l2", "mre"] {
+        // swap the Ω table values per estimator; L2/MRE ignore layer
+        // importance (the paper's point: they cannot rank layers)
+        let mut table = prep.table.clone();
+        if estimator != "taylor" {
+            for (k, layer) in manifest.layers.iter().enumerate() {
+                let muls = prep.library.for_bits(layer.a_bits, layer.w_bits);
+                for (i, am) in muls.iter().enumerate() {
+                    table.values[k][i] = match estimator {
+                        "l2" => sensitivity::Estimator::l2_estimate(am),
+                        _ => sensitivity::Estimator::mre_estimate(am),
+                    };
+                }
+            }
+        }
+        for &r in r_values {
+            let sol = {
+                let energy = EnergyModel::new(&manifest, &prep.library);
+                pipeline::select_ilp(&table, &energy, &prep.library, r)
+            };
+            let Ok((choices, sol)) = sol else { continue };
+            let e_list: Vec<Tensor> = pipeline::selection_tensors(&choices, &sol.picks);
+            prep.session.set_selection(e_list)?;
+            let loss = true_loss(&prep.session, 1)?;
+            let ratio = {
+                let energy = EnergyModel::new(&manifest, &prep.library);
+                let sel: Vec<&crate::appmul::AppMul> = choices
+                    .iter()
+                    .zip(&sol.picks)
+                    .map(|(row, &i)| row[i])
+                    .collect();
+                energy.ratio_vs_exact(&sel)?
+            };
+            rows.push(vec![
+                estimator.to_string(),
+                format!("{ratio:.5}"),
+                format!("{loss:.5}"),
+            ]);
+        }
+    }
+    prep.session.clear_selection();
+    util::write_csv(
+        ctx.csv_path("fig5c.csv"),
+        &["estimator", "energy_ratio", "loss"],
+        &rows,
+    )?;
+    println!("fig5c: wrote results/fig5c.csv ({} points)", rows.len());
+    Ok(())
+}
+
+/// Calibration config accessor used by fig2 (kept for clarity).
+#[allow(dead_code)]
+fn default_calib() -> CalibConfig {
+    CalibConfig::default()
+}

@@ -1,0 +1,44 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md §5). Each driver prints the paper-shaped rows/series and
+//! writes `results/<id>.csv`.
+
+pub mod common;
+mod figures;
+mod tables;
+
+use anyhow::Result;
+
+pub use common::ExpCtx;
+
+/// CLI entry for `fames experiment <id> [key=value ...]`.
+pub fn run_cli(args: &[String]) -> Result<i32> {
+    let id = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let ctx = ExpCtx::new()?;
+    match id {
+        "table2" => tables::table2(&ctx)?,
+        "table3" => tables::table3(&ctx)?,
+        "table4" => tables::table4(&ctx)?,
+        "fig2" => figures::fig2(&ctx)?,
+        "fig3" => figures::fig3(&ctx)?,
+        "fig4" => figures::fig4(&ctx)?,
+        "fig5ab" => figures::fig5ab(&ctx)?,
+        "fig5c" => figures::fig5c(&ctx)?,
+        "all" => {
+            figures::fig2(&ctx)?;
+            figures::fig3(&ctx)?;
+            figures::fig4(&ctx)?;
+            figures::fig5ab(&ctx)?;
+            figures::fig5c(&ctx)?;
+            tables::table2(&ctx)?;
+            tables::table3(&ctx)?;
+            tables::table4(&ctx)?;
+        }
+        other => {
+            eprintln!(
+                "unknown experiment '{other}' (table2|table3|table4|fig2|fig3|fig4|fig5ab|fig5c|all)"
+            );
+            return Ok(2);
+        }
+    }
+    Ok(0)
+}

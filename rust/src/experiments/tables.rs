@@ -1,0 +1,376 @@
+//! Table drivers: Table II (selection runtime), Table III (accuracy/energy
+//! vs baselines), Table IV (calibration vs retraining).
+
+use anyhow::Result;
+
+use super::common::{ExpCtx, Prepared};
+use crate::calibrate;
+use crate::energy::EnergyModel;
+use crate::pipeline;
+use crate::report::{pct, Table};
+use crate::select::{nsga_run, NsgaConfig};
+use crate::util::{self, fmt_secs};
+
+/// Accuracy-drop criterion of the paper's headline claim (<1%).
+const MAX_DROP: f64 = 0.01;
+
+/// Table II — runtime of multiplier-selection methods.
+///
+/// Paper: ours (estimate+ILP select / calibrate) vs MARLIN and ALWANN
+/// (NSGA-II selection / training resp. validation). GA population sizes are
+/// scaled to this testbed; the *shape* — GA needs many full-model fitness
+/// evaluations, ours needs none — is what reproduces.
+pub fn table2(ctx: &ExpCtx) -> Result<()> {
+    let models: &[&str] = if ctx.fast {
+        &["resnet8"]
+    } else {
+        // paper row "ResNet-50" → resnet20 (largest mini model; DESIGN §3)
+        &["resnet8", "resnet14", "resnet20"]
+    };
+    let mut t = Table::new(
+        "Table II — runtime of multiplier selection methods (seconds)",
+        &["model", "ours select", "ours other", "marlin select", "marlin other",
+          "alwann select", "alwann other", "marlin evals", "alwann evals"],
+    );
+    let mut csv = Vec::new();
+    for model in models {
+        // ---- ours: estimation+ILP = select; calibration = other ----
+        let mut prep = ctx.prepare(model, "w4a4")?;
+        let t0 = std::time::Instant::now();
+        {
+            let energy = EnergyModel::new(&prep.session.art.manifest, &prep.library);
+            let _ = pipeline::select_ilp(&prep.table, &energy, &prep.library, 0.7)?;
+        }
+        let ours_select = prep.table.estimate_secs + t0.elapsed().as_secs_f64();
+        let p = ctx.point_at(&mut prep, 0.7, true)?;
+        let ours_other = p.calib_secs;
+
+        // ---- MARLIN-style NSGA-II: fitness = (eval loss, energy ratio) ----
+        let t0 = std::time::Instant::now();
+        let marlin_evals = run_ga(ctx, &mut prep, 8, 4)?;
+        let marlin_select = t0.elapsed().as_secs_f64();
+        // MARLIN "other" = per-candidate retraining; one short retrain here
+        let t0 = std::time::Instant::now();
+        calibrate::retrain(&mut prep.session, 1, 128, 0.002)?;
+        let marlin_other = t0.elapsed().as_secs_f64();
+
+        // ---- ALWANN-style NSGA-II (smaller, no retraining) ----
+        let t0 = std::time::Instant::now();
+        let alwann_evals = run_ga(ctx, &mut prep, 6, 3)?;
+        let alwann_select = t0.elapsed().as_secs_f64();
+        // ALWANN "other" = validation of the front on the eval stream
+        let t0 = std::time::Instant::now();
+        prep.session.evaluate(4)?;
+        let alwann_other = t0.elapsed().as_secs_f64();
+
+        t.row(vec![
+            model.to_string(),
+            fmt_secs(ours_select),
+            fmt_secs(ours_other),
+            fmt_secs(marlin_select),
+            fmt_secs(marlin_other),
+            fmt_secs(alwann_select),
+            fmt_secs(alwann_other),
+            marlin_evals.to_string(),
+            alwann_evals.to_string(),
+        ]);
+        csv.push(vec![
+            model.to_string(),
+            format!("{ours_select:.2}"),
+            format!("{ours_other:.2}"),
+            format!("{marlin_select:.2}"),
+            format!("{marlin_other:.2}"),
+            format!("{alwann_select:.2}"),
+            format!("{alwann_other:.2}"),
+        ]);
+    }
+    t.print();
+    util::write_csv(
+        ctx.csv_path("table2.csv"),
+        &["model", "ours_select_s", "ours_other_s", "marlin_select_s",
+          "marlin_other_s", "alwann_select_s", "alwann_other_s"],
+        &csv,
+    )?;
+    println!("wrote results/table2.csv");
+    Ok(())
+}
+
+/// Run a GA selection over the prepared session; returns fitness-eval count.
+pub(super) fn run_ga(ctx: &ExpCtx, prep: &mut Prepared, pop: usize, gens: usize) -> Result<u64> {
+    let manifest = prep.session.art.manifest.clone();
+    let n_choices: Vec<usize> = manifest
+        .layers
+        .iter()
+        .map(|l| prep.library.for_bits(l.a_bits, l.w_bits).len())
+        .collect();
+    let eval_batches = if ctx.fast { 1 } else { 2 };
+    let mut err: Option<anyhow::Error> = None;
+    let cfg = NsgaConfig {
+        population: pop,
+        generations: gens,
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    let session = &mut prep.session;
+    let library = &prep.library;
+    let (_front, evals) = nsga_run(&n_choices, &cfg, |genome| {
+        let mut run = || -> Result<(f64, f64)> {
+            let energy = EnergyModel::new(&manifest, library);
+            let mut selection = Vec::with_capacity(genome.len());
+            let mut e_list = Vec::with_capacity(genome.len());
+            for (k, &gi) in genome.iter().enumerate() {
+                let muls = library.for_bits(manifest.layers[k].a_bits,
+                                            manifest.layers[k].w_bits);
+                let am = muls[gi.min(muls.len() - 1)];
+                selection.push(am);
+                e_list.push(am.error_tensor());
+            }
+            let ratio = energy.ratio_vs_exact(&selection)?;
+            session.set_selection(e_list)?;
+            let r = session.evaluate(eval_batches)?;
+            Ok((r.loss, ratio))
+        };
+        match run() {
+            Ok(v) => v,
+            Err(e) => {
+                err = Some(e);
+                (f64::MAX, f64::MAX)
+            }
+        }
+    });
+    prep.session.clear_selection();
+    if let Some(e) = err {
+        return Err(e);
+    }
+    Ok(evals)
+}
+
+/// Table III — accuracy and energy vs quantized / uniform-AppMul baselines.
+///
+/// Per (model, cfg): quantized-exact baseline, then FAMES at the smallest
+/// energy budget whose post-calibration accuracy stays within 1% of the
+/// baseline (the paper's operating criterion). For w8a8 an additional
+/// uniform-AppMul row reproduces the [13]/AdaPT comparison.
+pub fn table3(ctx: &ExpCtx) -> Result<()> {
+    let sets: &[(&str, &str)] = if ctx.fast {
+        &[("resnet8", "w4a4")]
+    } else {
+        // w8a8 rows are omitted by default: the 8-bit gather path is ~16×
+        // the 4-bit cost on this CPU substrate and the paper's focus is the
+        // low-bitwidth regime (`fames pipeline model=vgg11 cfg=w8a8` runs
+        // any 8-bit point on demand).
+        &[
+            ("resnet8", "w4a4"),
+            ("resnet8", "w3a3"),
+            ("resnet8", "w2a2"),
+            ("resnet8", "mixed"),
+            ("resnet20", "w4a4"),
+            ("resnet20", "w3a3"),
+            ("resnet20", "w2a2"),
+            ("resnet20", "mixed"),
+            ("vgg11", "w3a3"),
+            ("squeezenet", "w3a3"),
+            ("squeezenet", "w2a2"),
+        ]
+    };
+    let mut t = Table::new(
+        "Table III — accuracy & energy vs baselines (energy relative to 8-bit exact)",
+        &["model", "cfg", "multiplier", "acc %", "rel acc %", "rel energy %", "reduced energy %"],
+    );
+    let mut csv = Vec::new();
+    let mut reductions = Vec::new();
+    let mut drops = Vec::new();
+    for (model, cfg) in sets {
+        let mut prep = ctx.prepare(model, cfg)?;
+        let quant_acc = prep.quant_acc;
+        let quant_ratio8 = {
+            let energy = EnergyModel::new(&prep.session.art.manifest, &prep.library);
+            energy.model_energy_exact()? / energy.model_energy_8bit_baseline()?
+        };
+        t.row(vec![
+            model.to_string(),
+            cfg.to_string(),
+            "Accurate".into(),
+            pct(quant_acc),
+            "100.00".into(),
+            pct(quant_ratio8),
+            "-".into(),
+        ]);
+        csv.push(vec![model.to_string(), cfg.to_string(), "accurate".into(),
+                      format!("{quant_acc:.4}"), format!("{quant_ratio8:.5}"), "".into()]);
+
+        // uniform-AppMul baseline for 8-bit rows ([13]/AdaPT-style)
+        if *cfg == "w8a8" {
+            let (name, acc, ratio8) = {
+                let muls = prep.library.for_bits(8, 8);
+                let mid = muls
+                    .iter()
+                    .find(|m| !m.is_exact() && m.metrics.mred < 0.02)
+                    .copied();
+                match mid {
+                    Some(mid) => {
+                        let n_layers = prep.session.art.manifest.layers.len();
+                        let e_list = (0..n_layers).map(|_| mid.error_tensor()).collect();
+                        let sel: Vec<&crate::appmul::AppMul> = vec![mid; n_layers];
+                        let ratio8 = {
+                            let energy = EnergyModel::new(&prep.session.art.manifest,
+                                                          &prep.library);
+                            energy.ratio_vs_8bit(&sel)?
+                        };
+                        prep.session.set_selection(e_list)?;
+                        let r = prep.session.evaluate(2)?;
+                        prep.session.clear_selection();
+                        (mid.name.clone(), r.accuracy, ratio8)
+                    }
+                    None => (String::new(), 0.0, 0.0),
+                }
+            };
+            if !name.is_empty() {
+                t.row(vec![
+                    model.to_string(),
+                    cfg.to_string(),
+                    format!("Uniform {name}"),
+                    pct(acc),
+                    pct(acc / quant_acc),
+                    pct(ratio8),
+                    "-".into(),
+                ]);
+                csv.push(vec![model.to_string(), cfg.to_string(), "uniform".into(),
+                              format!("{acc:.4}"), format!("{ratio8:.5}"), "".into()]);
+            }
+        }
+
+        // FAMES: smallest R keeping the drop within 1%
+        let mut chosen: Option<super::common::Point> = None;
+        for r in [0.9, 0.75, 0.6, 0.45] {
+            match ctx.point_at(&mut prep, r, true) {
+                Ok(p) => {
+                    if quant_acc - p.acc_after <= MAX_DROP {
+                        chosen = Some(p);
+                    } else {
+                        break;
+                    }
+                }
+                Err(_) => break, // infeasible budget at this R
+            }
+            if ctx.fast {
+                break;
+            }
+        }
+        match chosen {
+            Some(p) => {
+                let reduced = 1.0 - p.energy_vs_exact;
+                reductions.push(reduced);
+                drops.push(quant_acc - p.acc_after);
+                t.row(vec![
+                    model.to_string(),
+                    cfg.to_string(),
+                    "Mixed (ours)".into(),
+                    pct(p.acc_after),
+                    pct(p.acc_after / quant_acc),
+                    pct(p.energy_vs_8bit),
+                    pct(reduced),
+                ]);
+                csv.push(vec![model.to_string(), cfg.to_string(), "fames".into(),
+                              format!("{:.4}", p.acc_after),
+                              format!("{:.5}", p.energy_vs_8bit),
+                              format!("{reduced:.4}")]);
+            }
+            None => {
+                t.row(vec![
+                    model.to_string(),
+                    cfg.to_string(),
+                    "Mixed (ours)".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "no R met the 1% criterion".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    if !reductions.is_empty() {
+        let avg = util::mean(&reductions);
+        let max_drop = drops.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "average energy reduction over same-bitwidth exact: {:.2}% \
+             (paper: 28.67%); max accuracy drop {:.2}% (paper: <1%)",
+            100.0 * avg,
+            100.0 * max_drop
+        );
+    }
+    util::write_csv(
+        ctx.csv_path("table3.csv"),
+        &["model", "cfg", "method", "accuracy", "rel_energy_8bit", "reduced_energy"],
+        &csv,
+    )?;
+    println!("wrote results/table3.csv");
+    Ok(())
+}
+
+/// Table IV — recovered accuracy and runtime: calibration vs retraining.
+pub fn table4(ctx: &ExpCtx) -> Result<()> {
+    let sets: &[(&str, &str)] = if ctx.fast {
+        &[("resnet8", "w4a4")]
+    } else {
+        &[
+            ("resnet8", "w4a4"),
+            ("resnet8", "w2a2"),
+            ("vgg11", "w3a3"),
+        ]
+    };
+    let mut t = Table::new(
+        "Table IV — recovered accuracy and runtime (calibration vs retraining)",
+        &["model", "cfg", "quant acc %", "before %", "retrain acc %", "retrain time",
+          "calib acc %", "calib time"],
+    );
+    let mut csv = Vec::new();
+    for (model, cfg) in sets {
+        let mut prep = ctx.prepare(model, cfg)?;
+        // fixed selection at R = 0.7 for both recovery methods
+        let p0 = ctx.point_at(&mut prep, 0.7, false)?;
+
+        // retraining branch (restore params afterwards)
+        let saved_params = prep.session.params.clone();
+        let epochs = if ctx.fast { 1 } else { 3 };
+        let t0 = std::time::Instant::now();
+        calibrate::retrain(&mut prep.session, epochs, 256, 0.002)?;
+        let retrain_secs = t0.elapsed().as_secs_f64();
+        let retrain_acc = prep.session.evaluate(4)?.accuracy;
+        prep.session.params = saved_params;
+
+        // calibration branch
+        let p1 = ctx.point_at(&mut prep, 0.7, true)?;
+
+        t.row(vec![
+            model.to_string(),
+            cfg.to_string(),
+            pct(prep.quant_acc),
+            pct(p0.acc_before),
+            pct(retrain_acc),
+            fmt_secs(retrain_secs),
+            pct(p1.acc_after),
+            fmt_secs(p1.calib_secs),
+        ]);
+        csv.push(vec![
+            model.to_string(),
+            cfg.to_string(),
+            format!("{:.4}", prep.quant_acc),
+            format!("{:.4}", p0.acc_before),
+            format!("{retrain_acc:.4}"),
+            format!("{retrain_secs:.2}"),
+            format!("{:.4}", p1.acc_after),
+            format!("{:.2}", p1.calib_secs),
+        ]);
+    }
+    t.print();
+    util::write_csv(
+        ctx.csv_path("table4.csv"),
+        &["model", "cfg", "quant_acc", "before_acc", "retrain_acc", "retrain_s",
+          "calib_acc", "calib_s"],
+        &csv,
+    )?;
+    println!("wrote results/table4.csv");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! # FAMES — Fast Approximate Multiplier Substitution for Mixed-Precision Quantized DNNs
+//!
+//! Reproduction of Ren, Xu, Guo & Qian (2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): Pallas LUT-GEMM kernel — the
+//!   approximate-multiplier compute hot-spot.
+//! * **Layer 2** (`python/compile/`): quantized JAX model zoo, AOT-lowered to
+//!   HLO text artifacts at build time (`make artifacts`).
+//! * **Layer 3** (this crate): the FAMES coordinator — AppMul library +
+//!   gate-level circuit substrate, Taylor-expansion perturbation estimation,
+//!   ILP (multiple-choice knapsack) selection, retraining-free calibration,
+//!   and the experiment harness reproducing every table and figure of the
+//!   paper. Python never runs on this path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod appmul;
+pub mod calibrate;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod json;
+pub mod pipeline;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod select;
+pub mod sensitivity;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,15 @@
+//! `fames` — CLI entrypoint for the FAMES coordinator.
+//!
+//! See `fames help` for the command inventory (pipeline, train, evaluate,
+//! experiments, appmul library tools, bitwidth search).
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    match fames::cli::run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

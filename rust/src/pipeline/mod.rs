@@ -1,0 +1,259 @@
+//! The FAMES pipeline orchestrator (paper Fig. 1).
+//!
+//! `estimate → select (ILP) → calibrate → evaluate`, with per-phase timing
+//! (the Table II columns) and energy accounting. The GA baselines reuse the
+//! same session through `select::nsga`.
+
+pub mod session;
+
+pub use session::{EvalResult, Session};
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::appmul::{AppMul, Library};
+use crate::calibrate::{self, CalibConfig};
+use crate::energy::EnergyModel;
+use crate::runtime::Runtime;
+use crate::select::{self, Choice};
+use crate::sensitivity::{self, HessianMode, PerturbTable};
+use crate::tensor::Tensor;
+
+/// Pipeline configuration (see `fames help pipeline` for CLI mapping).
+#[derive(Clone, Debug)]
+pub struct FamesConfig {
+    pub model: String,
+    pub cfg: String,
+    pub artifact_root: String,
+    pub seed: u64,
+    /// Energy budget relative to the exact same-bitwidth model (§IV-D).
+    pub r_energy: f64,
+    pub est_batches: usize,
+    /// Second-order term mode (paper Eq. 11/12); Exact is the default at
+    /// this model scale (see `sensitivity::HessianMode`).
+    pub hessian: HessianMode,
+    pub calib: CalibConfig,
+    pub eval_batches: usize,
+    /// fp32 pre-training steps when no cached parameters exist.
+    pub train_steps: usize,
+    pub train_lr: f32,
+}
+
+impl Default for FamesConfig {
+    fn default() -> Self {
+        FamesConfig {
+            model: "resnet8".into(),
+            cfg: "w4a4".into(),
+            artifact_root: "artifacts".into(),
+            seed: 0,
+            r_energy: 0.7,
+            est_batches: 2,
+            hessian: HessianMode::Exact,
+            calib: CalibConfig::default(),
+            eval_batches: 4,
+            train_steps: 900,
+            train_lr: 0.01,
+        }
+    }
+}
+
+/// Per-phase wall-clock breakdown (Table II's Select/Other columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub train_secs: f64,
+    pub estimate_secs: f64,
+    pub select_secs: f64,
+    pub calibrate_secs: f64,
+    pub eval_secs: f64,
+}
+
+/// Full pipeline outcome.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub model: String,
+    pub cfg: String,
+    /// Chosen AppMul name per layer.
+    pub selection: Vec<String>,
+    /// Estimated perturbation per layer for the chosen AppMuls.
+    pub perturbations: Vec<f64>,
+    pub quant_eval: EvalResult,
+    pub approx_eval_before: EvalResult,
+    pub approx_eval_after: EvalResult,
+    /// Energy of the selection / exact same-bitwidth model.
+    pub energy_ratio_exact: f64,
+    /// Energy of the selection / 8×8 exact baseline model.
+    pub energy_ratio_8bit: f64,
+    /// Energy of exact same-bitwidth model / 8×8 baseline.
+    pub quant_energy_ratio_8bit: f64,
+    pub times: PhaseTimes,
+    pub ilp_nodes: u64,
+}
+
+/// Ensure the session has trained parameters: load the per-model cache or
+/// pre-train + save. Returns training wall-clock (0 when cached).
+pub fn ensure_trained(session: &mut Session, cfg: &FamesConfig) -> Result<f64> {
+    let path = Session::state_path(&cfg.artifact_root, &cfg.model);
+    if path.exists() {
+        session
+            .load_params(&path)
+            .with_context(|| format!("loading cached params {}", path.display()))?;
+        return Ok(0.0);
+    }
+    let t0 = std::time::Instant::now();
+    let losses = session.train(cfg.train_steps, cfg.train_lr)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let tail: f64 = losses.iter().rev().take(20).sum::<f64>() / 20.0_f64.min(losses.len() as f64);
+    println!(
+        "  pre-trained {} for {} steps in {:.1}s (final loss ≈ {:.3})",
+        cfg.model,
+        cfg.train_steps,
+        dt,
+        tail
+    );
+    session.save_params(&path)?;
+    Ok(dt)
+}
+
+/// Build the MCKP instance from a precomputed Ω table and solve it.
+/// Table rows must align with `library.for_bits(...)` ordering (they do
+/// when built by `sensitivity::estimate_table`).
+pub fn select_ilp<'l>(
+    table: &PerturbTable,
+    energy: &EnergyModel<'_>,
+    library: &'l Library,
+    r_energy: f64,
+) -> Result<(Vec<Vec<&'l AppMul>>, select::Solution)> {
+    let manifest = energy.manifest;
+    let mut problem: Vec<Vec<Choice>> = Vec::with_capacity(manifest.layers.len());
+    let mut choices: Vec<Vec<&AppMul>> = Vec::with_capacity(manifest.layers.len());
+    for (k, layer) in manifest.layers.iter().enumerate() {
+        let muls = library.for_bits(layer.a_bits, layer.w_bits);
+        anyhow::ensure!(!muls.is_empty(), "no AppMuls for {}x{}", layer.a_bits, layer.w_bits);
+        anyhow::ensure!(muls.len() == table.values[k].len(),
+                        "table/library mismatch at layer {k}");
+        let mut row = Vec::with_capacity(muls.len());
+        for (i, am) in muls.iter().enumerate() {
+            row.push(Choice {
+                cost: energy.layer_energy(layer, am),
+                value: table.values[k][i],
+            });
+        }
+        problem.push(row);
+        choices.push(muls);
+    }
+    let budget = r_energy * energy.model_energy_exact()?;
+    let sol = select::solve_exact(&problem, budget)?;
+    Ok((choices, sol))
+}
+
+/// Turn a per-layer pick into the session's E-tensor list.
+pub fn selection_tensors(choices: &[Vec<&AppMul>], picks: &[usize]) -> Vec<Tensor> {
+    choices
+        .iter()
+        .zip(picks)
+        .map(|(row, &i)| row[i].error_tensor())
+        .collect()
+}
+
+/// Run the full FAMES pipeline.
+pub fn run(rt: Rc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<PipelineReport> {
+    let mut times = PhaseTimes::default();
+    let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    times.train_secs = ensure_trained(&mut session, cfg)?;
+    session.init_act_ranges()?;
+
+    // quantized-exact reference
+    let t = std::time::Instant::now();
+    session.clear_selection();
+    let quant_eval = session.evaluate(cfg.eval_batches)?;
+    times.eval_secs += t.elapsed().as_secs_f64();
+
+    // Step 1: perturbation estimation (Ω table, computed once)
+    let t = std::time::Instant::now();
+    let (_est, table) =
+        sensitivity::estimate_table(&mut session, library, cfg.est_batches, cfg.hessian)?;
+    times.estimate_secs = t.elapsed().as_secs_f64();
+
+    // Step 2: ILP selection
+    let t = std::time::Instant::now();
+    let energy = EnergyModel::new(&session.art.manifest, library);
+    let (choices, sol) = select_ilp(&table, &energy, library, cfg.r_energy)?;
+    times.select_secs = t.elapsed().as_secs_f64();
+
+    let selection: Vec<&AppMul> = choices
+        .iter()
+        .zip(&sol.picks)
+        .map(|(row, &i)| row[i])
+        .collect();
+    let perturbations: Vec<f64> = (0..selection.len())
+        .map(|k| table.values[k][sol.picks[k]])
+        .collect();
+    let energy_ratio_exact = energy.ratio_vs_exact(&selection)?;
+    let energy_ratio_8bit = energy.ratio_vs_8bit(&selection)?;
+    let quant_energy_ratio_8bit =
+        energy.model_energy_exact()? / energy.model_energy_8bit_baseline()?;
+
+    session.set_selection(selection_tensors(&choices, &sol.picks))?;
+
+    let t = std::time::Instant::now();
+    let approx_eval_before = session.evaluate(cfg.eval_batches)?;
+    times.eval_secs += t.elapsed().as_secs_f64();
+
+    // Step 3: calibration (Algorithm 1)
+    let t = std::time::Instant::now();
+    calibrate::calibrate(&mut session, &cfg.calib)?;
+    times.calibrate_secs = t.elapsed().as_secs_f64();
+
+    let t = std::time::Instant::now();
+    let approx_eval_after = session.evaluate(cfg.eval_batches)?;
+    times.eval_secs += t.elapsed().as_secs_f64();
+
+    Ok(PipelineReport {
+        model: cfg.model.clone(),
+        cfg: cfg.cfg.clone(),
+        selection: selection.iter().map(|m| m.name.clone()).collect(),
+        perturbations,
+        quant_eval,
+        approx_eval_before,
+        approx_eval_after,
+        energy_ratio_exact,
+        energy_ratio_8bit,
+        quant_energy_ratio_8bit,
+        times,
+        ilp_nodes: sol.nodes,
+    })
+}
+
+/// Bitwidth pairs needed to cover a manifest (for library generation).
+pub fn bit_pairs_for(manifest: &crate::runtime::Manifest) -> Vec<(u32, u32)> {
+    let mut pairs: Vec<(u32, u32)> = manifest
+        .layers
+        .iter()
+        .map(|l| (l.a_bits, l.w_bits))
+        .collect();
+    pairs.push((8, 8)); // Table III baseline reference
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs
+}
+
+/// Library covering an artifact set (convenience used by CLI/experiments).
+pub fn library_for(manifest: &crate::runtime::Manifest, seed: u64) -> Library {
+    crate::appmul::generate_library(&bit_pairs_for(manifest), seed)
+}
+
+/// Locate the artifacts root: `$FAMES_ARTIFACTS`, `./artifacts`, or the
+/// repo-relative default — the first that exists.
+pub fn artifacts_root() -> String {
+    if let Ok(p) = std::env::var("FAMES_ARTIFACTS") {
+        return p;
+    }
+    for cand in ["artifacts", "../artifacts", "/root/repo/artifacts"] {
+        if Path::new(cand).join("spike").exists() || Path::new(cand).read_dir().map(|mut d| d.next().is_some()).unwrap_or(false) {
+            return cand.to_string();
+        }
+    }
+    "artifacts".to_string()
+}

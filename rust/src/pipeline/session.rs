@@ -1,0 +1,544 @@
+//! `Session` — a loaded model (artifact set) + its mutable state.
+//!
+//! Owns the PJRT runtime handle, the parameter/optimizer tensors, the
+//! per-layer quantization state (activation scale/offset, LWC γ/β) and the
+//! current AppMul error-matrix selection. Every exported executable is
+//! invoked through the typed wrappers here; argument lists are assembled
+//! from the manifest's input-group ordering, so the rust↔python contract
+//! lives in exactly two places (aot.py and this file).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Batch, Dataset};
+use crate::runtime::{ArtifactSet, Executable, Runtime};
+use crate::rng::Pcg;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util;
+
+/// Default γ/β init: σ(4) ≈ 0.982 — effectively no clipping until
+/// calibration tightens the bounds.
+pub const LWC_INIT: f32 = 4.0;
+
+/// Evaluation result over the eval stream.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub samples: usize,
+}
+
+/// Extra per-call inputs beyond the session state.
+#[derive(Default)]
+struct Extra<'a> {
+    batch: Option<&'a Batch>,
+    rvecs: Option<&'a [Tensor]>,
+    lr: f32,
+}
+
+pub struct Session {
+    pub rt: Rc<Runtime>,
+    pub art: ArtifactSet,
+    pub data: Dataset,
+    pub params: TensorStore,
+    pub momentum: TensorStore,
+    /// Per conv layer (γ, β).
+    pub lwc: Vec<(f32, f32)>,
+    /// Per conv layer (s_x, b_x).
+    pub act_q: Vec<(f32, f32)>,
+    /// Current AppMul error injection, one flat E per conv layer.
+    pub e_list: Vec<Tensor>,
+    /// First sample index of the held-out eval stream.
+    pub eval_base: u64,
+    /// Training pool size (samples 0..pool are the train set).
+    pub train_pool: u64,
+}
+
+impl Session {
+    /// Open an artifact set and initialize fresh state (He-init params,
+    /// wide LWC bounds, unit activation scales, exact multipliers).
+    pub fn open(rt: Rc<Runtime>, artifact_root: impl AsRef<Path>, model: &str, cfg: &str,
+                seed: u64) -> Result<Session> {
+        let art = ArtifactSet::locate(artifact_root, model, cfg)?;
+        let m = &art.manifest;
+        let data = Dataset::new(m.num_classes, &m.image_shape, seed);
+        let mut s = Session {
+            rt,
+            art,
+            data,
+            params: TensorStore::new(),
+            momentum: TensorStore::new(),
+            lwc: Vec::new(),
+            act_q: Vec::new(),
+            e_list: Vec::new(),
+            eval_base: 1 << 20,
+            train_pool: 4096,
+        };
+        s.init_params(seed);
+        s.reset_quant_state();
+        Ok(s)
+    }
+
+    /// He-normal init matching `ModelDef.init_params` conventions.
+    pub fn init_params(&mut self, seed: u64) {
+        let mut rng = Pcg::new(seed, 0x9a1a);
+        self.params = TensorStore::new();
+        self.momentum = TensorStore::new();
+        for p in &self.art.manifest.params {
+            let n: usize = p.shape.iter().product();
+            let data: Vec<f32> = if p.name.ends_with(".b") {
+                vec![0.0; n]
+            } else if p.shape.len() == 4 {
+                let fan_in: usize = p.shape[1..].iter().product();
+                let std = (2.0 / fan_in as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            } else {
+                let std = 1.0 / (p.shape[0] as f64).sqrt();
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            };
+            self.params
+                .insert(p.name.clone(), Tensor::new(p.shape.clone(), data).unwrap());
+            self.momentum
+                .insert(p.name.clone(), Tensor::zeros(&p.shape));
+        }
+    }
+
+    /// Wide LWC bounds, placeholder activation ranges, exact multipliers.
+    pub fn reset_quant_state(&mut self) {
+        let n = self.art.manifest.layers.len();
+        self.lwc = vec![(LWC_INIT, LWC_INIT); n];
+        self.act_q = self
+            .art
+            .manifest
+            .layers
+            .iter()
+            .map(|l| (1.0 / ((1u64 << l.a_bits) - 1) as f32, 0.0))
+            .collect();
+        self.e_list = self
+            .art
+            .manifest
+            .layers
+            .iter()
+            .map(|l| Tensor::zeros(&[l.e_len()]))
+            .collect();
+    }
+
+    // ---- state persistence ----
+
+    pub fn state_path(root: impl AsRef<Path>, model: &str) -> PathBuf {
+        root.as_ref().join("state").join(format!("{model}.fmt"))
+    }
+
+    /// Save trained parameters (shared across bit configs of one model).
+    pub fn save_params(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.params.save(path)
+    }
+
+    pub fn load_params(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let store = TensorStore::load(path)?;
+        for p in &self.art.manifest.params {
+            let t = store.get(&p.name)?;
+            if t.shape() != p.shape.as_slice() {
+                bail!("param {} shape {:?} != manifest {:?}", p.name, t.shape(), p.shape);
+            }
+        }
+        self.params = store;
+        Ok(())
+    }
+
+    // ---- executable plumbing ----
+
+    pub fn exe(&self, name: &str) -> Result<Rc<Executable>> {
+        self.rt.load(self.art.exe_path(name)?)
+    }
+
+    fn build_inputs(&self, groups: &[String], extra: &Extra) -> Result<Vec<Tensor>> {
+        let m = &self.art.manifest;
+        let mut v: Vec<Tensor> = Vec::new();
+        for g in groups {
+            match g.as_str() {
+                "params" => {
+                    for p in &m.params {
+                        v.push(self.params.get(&p.name)?.clone());
+                    }
+                }
+                "opt_state" => {
+                    for p in &m.params {
+                        v.push(self.momentum.get(&p.name)?.clone());
+                    }
+                }
+                "lwc" => {
+                    for &(g1, b1) in &self.lwc {
+                        v.push(Tensor::scalar(g1));
+                        v.push(Tensor::scalar(b1));
+                    }
+                }
+                "act_q" => {
+                    for &(s, b) in &self.act_q {
+                        v.push(Tensor::scalar(s));
+                        v.push(Tensor::scalar(b));
+                    }
+                }
+                "e_list" => {
+                    for e in &self.e_list {
+                        v.push(e.clone());
+                    }
+                }
+                "rvecs" => {
+                    let r = extra.rvecs.context("rvecs required")?;
+                    for t in r {
+                        v.push(t.clone());
+                    }
+                }
+                "images_train" | "images_eval" => {
+                    v.push(extra.batch.context("batch required")?.images.clone());
+                }
+                "labels_train" | "labels_eval" => {
+                    v.push(extra.batch.context("batch required")?.labels.clone());
+                }
+                "lr" => v.push(Tensor::scalar(extra.lr)),
+                other => bail!("unknown input group '{other}'"),
+            }
+        }
+        Ok(v)
+    }
+
+    fn run_exe(&self, name: &str, extra: &Extra) -> Result<Vec<Tensor>> {
+        let spec = self.art.manifest.exe(name)?.clone();
+        let exe = self.exe(name)?;
+        let inputs = self.build_inputs(&spec.inputs, extra)?;
+        let out = exe.run(&inputs)?;
+        if out.len() != spec.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                out.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(out)
+    }
+
+    // ---- training (fp32 pre-training, rust-driven) ----
+
+    /// One SGD-momentum step; returns the batch loss.
+    pub fn train_step(&mut self, epoch: u64, step: u64, lr: f32) -> Result<f64> {
+        let m = &self.art.manifest;
+        let batch = self
+            .data
+            .train_batch(epoch, step, m.train_batch, self.train_pool);
+        let out = self.run_exe(
+            "train",
+            &Extra {
+                batch: Some(&batch),
+                lr,
+                ..Default::default()
+            },
+        )?;
+        let np = m.params.len();
+        for (i, p) in m.params.iter().enumerate() {
+            self.params.insert(p.name.clone(), out[i].clone());
+            self.momentum.insert(p.name.clone(), out[np + i].clone());
+        }
+        Ok(out[2 * np].item()? as f64)
+    }
+
+    /// Pre-train for `steps` with a simple 2-phase lr schedule.
+    pub fn train(&mut self, steps: usize, lr: f32) -> Result<Vec<f64>> {
+        let spb = (self.train_pool as usize / self.art.manifest.train_batch).max(1);
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let lr_s = if s * 3 >= steps * 2 { lr * 0.1 } else { lr };
+            let epoch = (s / spb) as u64;
+            let step = (s % spb) as u64;
+            losses.push(self.train_step(epoch, step, lr_s)?);
+        }
+        Ok(losses)
+    }
+
+    /// fp32 accuracy via the `acts_float` logits (diagnostic + quickstart).
+    pub fn evaluate_float(&self, n_batches: usize) -> Result<EvalResult> {
+        let n_layers = self.art.manifest.layers.len();
+        let mut correct = 0.0;
+        let mut samples = 0usize;
+        for i in 0..n_batches {
+            let batch = self.eval_batch(i as u64);
+            let out = self.run_exe(
+                "acts_float",
+                &Extra {
+                    batch: Some(&batch),
+                    ..Default::default()
+                },
+            )?;
+            let logits = &out[n_layers];
+            let nc = self.art.manifest.num_classes;
+            for (s, &label) in batch.labels.data().iter().enumerate() {
+                let row = &logits.data()[s * nc..(s + 1) * nc];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == label as usize {
+                    correct += 1.0;
+                }
+            }
+            samples += batch.labels.len();
+        }
+        Ok(EvalResult {
+            loss: f64::NAN,
+            accuracy: correct / samples as f64,
+            samples,
+        })
+    }
+
+    // ---- activation-range initialization ----
+
+    /// Set (s_x, b_x) per layer from percentiles of the fp32 activations on
+    /// one eval batch (asymmetric quantization grid covering p0.1..p99.9).
+    pub fn init_act_ranges(&mut self) -> Result<()> {
+        let batch = self.eval_batch(0);
+        let out = self.run_exe(
+            "acts_float",
+            &Extra {
+                batch: Some(&batch),
+                ..Default::default()
+            },
+        )?;
+        let layers = &self.art.manifest.layers;
+        for (k, layer) in layers.iter().enumerate() {
+            let acts = &out[k];
+            let mut sorted = acts.data().to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let lo = util::quantile_sorted(&sorted, 0.001);
+            let hi = util::quantile_sorted(&sorted, 0.999);
+            let levels = ((1u64 << layer.a_bits) - 1) as f32;
+            let span = (hi - lo).max(1e-5);
+            self.act_q[k] = (span / levels, lo);
+        }
+        Ok(())
+    }
+
+    // ---- evaluation ----
+
+    pub fn eval_batch(&self, idx: u64) -> Batch {
+        let b = self.art.manifest.eval_batch;
+        self.data.batch(self.eval_base + idx * b as u64, b)
+    }
+
+    /// Evaluate the quantized+approximate model (current E selection) over
+    /// `n_batches` held-out batches.
+    pub fn evaluate(&self, n_batches: usize) -> Result<EvalResult> {
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut samples = 0usize;
+        for i in 0..n_batches {
+            let batch = self.eval_batch(i as u64);
+            let out = self.run_exe(
+                "fwd",
+                &Extra {
+                    batch: Some(&batch),
+                    ..Default::default()
+                },
+            )?;
+            loss_sum += out[0].item()? as f64;
+            correct += out[1].item()? as f64;
+            samples += batch.labels.len();
+        }
+        Ok(EvalResult {
+            loss: loss_sum / samples as f64,
+            accuracy: correct / samples as f64,
+            samples,
+        })
+    }
+
+    /// Same as [`evaluate`] but through the Pallas-kernel artifact (Layer-1
+    /// path); numerics must match `fwd` — asserted by integration tests.
+    pub fn evaluate_pallas(&self, n_batches: usize) -> Result<EvalResult> {
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut samples = 0usize;
+        for i in 0..n_batches {
+            let batch = self.eval_batch(i as u64);
+            let out = self.run_exe(
+                "fwd_pallas",
+                &Extra {
+                    batch: Some(&batch),
+                    ..Default::default()
+                },
+            )?;
+            loss_sum += out[0].item()? as f64;
+            correct += out[1].item()? as f64;
+            samples += batch.labels.len();
+        }
+        Ok(EvalResult {
+            loss: loss_sum / samples as f64,
+            accuracy: correct / samples as f64,
+            samples,
+        })
+    }
+
+    /// Per-layer pre-quant conv inputs under the current E selection,
+    /// plus (loss_sum, correct). Algorithm 1's data source.
+    pub fn fwd_acts(&self, batch: &Batch) -> Result<(Vec<Tensor>, f64)> {
+        let out = self.run_exe(
+            "fwd_acts",
+            &Extra {
+                batch: Some(batch),
+                ..Default::default()
+            },
+        )?;
+        let n = self.art.manifest.layers.len();
+        let loss_sum = out[n].item()? as f64;
+        Ok((out[..n].to_vec(), loss_sum))
+    }
+
+    // ---- estimation primitives (paper §IV-C) ----
+
+    /// Mean loss + ∇_E loss averaged over `n_batches` estimation batches
+    /// (batches are drawn from the training stream, as in the paper).
+    pub fn grad_e(&self, n_batches: usize) -> Result<(f64, Vec<Tensor>)> {
+        let m = &self.art.manifest;
+        let mut loss = 0.0;
+        let mut grads: Vec<Tensor> = m
+            .layers
+            .iter()
+            .map(|l| Tensor::zeros(&[l.e_len()]))
+            .collect();
+        for i in 0..n_batches {
+            let batch = self.data.train_batch(900 + i as u64, 0, m.train_batch, self.train_pool);
+            let out = self.run_exe(
+                "grad_e",
+                &Extra {
+                    batch: Some(&batch),
+                    ..Default::default()
+                },
+            )?;
+            loss += out[0].item()? as f64;
+            for (k, g) in grads.iter_mut().enumerate() {
+                g.axpy(1.0 / n_batches as f32, &out[1 + k])?;
+            }
+        }
+        Ok((loss / n_batches as f64, grads))
+    }
+
+    /// Hessian-vector product in E-space: returns `H · r` per layer
+    /// (cross-layer blocks included; pass zero vectors to isolate a layer).
+    pub fn hvp_e(&self, rvecs: &[Tensor], batch_idx: u64) -> Result<Vec<Tensor>> {
+        let m = &self.art.manifest;
+        let batch = self
+            .data
+            .train_batch(900 + batch_idx, 0, m.train_batch, self.train_pool);
+        let out = self.run_exe(
+            "hvp_e",
+            &Extra {
+                batch: Some(&batch),
+                rvecs: Some(rvecs),
+                ..Default::default()
+            },
+        )?;
+        Ok(out)
+    }
+
+    /// Per-layer exact Gauss–Newton quadratics `½ rₖ·(H_kk rₖ)` for all
+    /// layers in ONE execution (the `quad_e` artifact). Much cheaper than
+    /// per-layer [`hvp_e`] calls: the primal pass is shared.
+    pub fn quad_e(&self, rvecs: &[Tensor], batch_idx: u64) -> Result<Vec<f64>> {
+        let m = &self.art.manifest;
+        let batch = self
+            .data
+            .train_batch(900 + batch_idx, 0, m.train_batch, self.train_pool);
+        let out = self.run_exe(
+            "quad_e",
+            &Extra {
+                batch: Some(&batch),
+                rvecs: Some(rvecs),
+                ..Default::default()
+            },
+        )?;
+        out.iter().map(|t| Ok(t.item()? as f64)).collect()
+    }
+
+    /// Whether this artifact set exports `quad_e` (newer sets do).
+    pub fn has_quad_e(&self) -> bool {
+        self.art
+            .manifest
+            .executables
+            .contains_key("quad_e")
+            .then(|| self.art.exe_path("quad_e").map(|p| p.exists()).unwrap_or(false))
+            .unwrap_or(false)
+    }
+
+    // ---- calibration / retraining primitives ----
+
+    /// One LWC gradient step on a calibration batch; returns the loss and
+    /// applies `γ/β -= lr · grad`.
+    pub fn calib_step(&mut self, epoch: u64, step: u64, lr: f32) -> Result<f64> {
+        let m = &self.art.manifest;
+        let batch = self
+            .data
+            .train_batch(500 + epoch, step, m.train_batch, self.train_pool);
+        let out = self.run_exe(
+            "calib",
+            &Extra {
+                batch: Some(&batch),
+                ..Default::default()
+            },
+        )?;
+        let loss = out[0].item()? as f64;
+        for (k, pair) in self.lwc.iter_mut().enumerate() {
+            pair.0 -= lr * out[1 + 2 * k].item()?;
+            pair.1 -= lr * out[2 + 2 * k].item()?;
+        }
+        Ok(loss)
+    }
+
+    /// One full retraining step (STE grads on weights, biases and LWC).
+    pub fn retrain_step(&mut self, epoch: u64, step: u64, lr: f32) -> Result<f64> {
+        let m = &self.art.manifest;
+        let batch = self
+            .data
+            .train_batch(700 + epoch, step, m.train_batch, self.train_pool);
+        let out = self.run_exe(
+            "retrain",
+            &Extra {
+                batch: Some(&batch),
+                ..Default::default()
+            },
+        )?;
+        let loss = out[0].item()? as f64;
+        let np = m.params.len();
+        for (i, p) in m.params.iter().enumerate() {
+            let cur = self.params.get_mut(&p.name)?;
+            cur.axpy(-lr, &out[1 + i])?;
+        }
+        for (k, pair) in self.lwc.iter_mut().enumerate() {
+            pair.0 -= lr * out[1 + np + 2 * k].item()?;
+            pair.1 -= lr * out[2 + np + 2 * k].item()?;
+        }
+        Ok(loss)
+    }
+
+    /// Install an AppMul selection as per-layer error tensors.
+    pub fn set_selection(&mut self, e_list: Vec<Tensor>) -> Result<()> {
+        let m = &self.art.manifest;
+        if e_list.len() != m.layers.len() {
+            bail!("selection has {} layers, model has {}", e_list.len(), m.layers.len());
+        }
+        for (l, e) in m.layers.iter().zip(&e_list) {
+            if e.len() != l.e_len() {
+                bail!("layer {}: E length {} != {}", l.name, e.len(), l.e_len());
+            }
+        }
+        self.e_list = e_list;
+        Ok(())
+    }
+
+    /// Reset to exact multipliers (all-zero E).
+    pub fn clear_selection(&mut self) {
+        let m = &self.art.manifest;
+        self.e_list = m.layers.iter().map(|l| Tensor::zeros(&[l.e_len()])).collect();
+    }
+}

@@ -1,0 +1,108 @@
+//! Quantization math + mixed-precision bitwidth allocation (HAWQ-V3
+//! substrate, DESIGN.md §6).
+//!
+//! The AOT artifacts bake per-layer bitwidths, so runtime bit allocation is
+//! an *advisory* pass: it scores each (layer, bitwidth) pair by a
+//! weight-quantization sensitivity proxy and solves the same MCKP as the
+//! AppMul selection to propose a mixed config for the next `make artifacts`.
+
+use anyhow::Result;
+
+use crate::appmul::Library;
+use crate::runtime::Manifest;
+use crate::select::{self, Choice};
+use crate::tensor::TensorStore;
+
+/// Asymmetric uniform quantization of a slice to `bits`; returns the MSE
+/// (the sensitivity proxy) and the scale used.
+pub fn quantize_mse(w: &[f32], bits: u32) -> (f64, f32) {
+    if w.is_empty() {
+        return (0.0, 1.0);
+    }
+    let lo = w.iter().cloned().fold(f32::MAX, f32::min);
+    let hi = w.iter().cloned().fold(f32::MIN, f32::max);
+    let levels = ((1u64 << bits) - 1) as f32;
+    let s = ((hi - lo) / levels).max(1e-12);
+    let mut mse = 0.0f64;
+    for &v in w {
+        let code = ((v - lo) / s).round().clamp(0.0, levels);
+        let deq = s * code + lo;
+        mse += ((v - deq) as f64).powi(2);
+    }
+    (mse / w.len() as f64, s)
+}
+
+/// One proposed per-layer bitwidth assignment.
+#[derive(Clone, Debug)]
+pub struct BitAllocation {
+    pub bits: Vec<u32>,
+    pub avg_bits: f64,
+    pub energy_ratio_8bit: f64,
+    pub sensitivity: f64,
+}
+
+/// Propose per-layer bitwidths: minimize Σ (quant-MSE · mults) subject to an
+/// energy budget relative to the all-8-bit model — HAWQ-V3's ILP with our
+/// MCKP solver. `candidates` defaults to [2, 3, 4, 8].
+pub fn allocate_bits(
+    manifest: &Manifest,
+    params: &TensorStore,
+    library: &Library,
+    budget_ratio: f64,
+    candidates: &[u32],
+) -> Result<BitAllocation> {
+    let mut problem: Vec<Vec<Choice>> = Vec::new();
+    for layer in &manifest.layers {
+        let w = params.get(&format!("{}.w", layer.name))?;
+        let mut row = Vec::new();
+        for &b in candidates {
+            let (mse, _) = quantize_mse(w.data(), b);
+            let exact = library.exact(b, b)?;
+            row.push(Choice {
+                cost: exact.pdp * layer.mults_per_image as f64,
+                // sensitivity proxy: quantization MSE weighted by how many
+                // multiplications consume the quantized weights
+                value: mse * layer.mults_per_image as f64,
+            });
+        }
+        problem.push(row);
+    }
+    let exact8 = library.exact(8, 8)?;
+    let e8: f64 = manifest
+        .layers
+        .iter()
+        .map(|l| exact8.pdp * l.mults_per_image as f64)
+        .sum();
+    let sol = select::solve_exact(&problem, budget_ratio * e8)?;
+    let bits: Vec<u32> = sol.picks.iter().map(|&i| candidates[i]).collect();
+    Ok(BitAllocation {
+        avg_bits: bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64,
+        energy_ratio_8bit: sol.total_cost / e8,
+        sensitivity: sol.total_value,
+        bits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let w: Vec<f32> = (0..256).map(|i| ((i * 37) % 97) as f32 / 97.0 - 0.5).collect();
+        let (m2, _) = quantize_mse(&w, 2);
+        let (m4, _) = quantize_mse(&w, 4);
+        let (m8, _) = quantize_mse(&w, 8);
+        assert!(m2 > m4 && m4 > m8);
+        assert!(m8 < 1e-4);
+    }
+
+    #[test]
+    fn grid_values_quantize_losslessly() {
+        // values already on the 2-bit grid of [0, 3]
+        let w = [0.0f32, 1.0, 2.0, 3.0];
+        let (mse, s) = quantize_mse(&w, 2);
+        assert!(mse < 1e-12);
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+}

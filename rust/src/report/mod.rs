@@ -1,0 +1,118 @@
+//! ASCII/markdown table rendering for the experiment drivers.
+
+/// A simple column-aligned table with a title.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(c);
+                for _ in c.chars().count()..w[i] {
+                    s.push(' ');
+                }
+                s.push_str(" | ");
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = w.iter().map(|&n| "-".repeat(n)).collect();
+        out.push_str(&line(&sep));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render + print.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Rows as CSV-ready records.
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        self.rows.clone()
+    }
+
+    /// Header as &str slice (for `util::write_csv`).
+    pub fn csv_header(&self) -> Vec<&str> {
+        self.header.iter().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Format helpers shared by the drivers.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f5(x: f64) -> String {
+    format!("{x:.5}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "v"]);
+        t.row(vec!["a".into(), "1.00".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| name   | v"));
+        assert!(r.contains("| longer | 2"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(pct(0.9249), "92.49");
+        assert_eq!(f3(1.23456), "1.235");
+    }
+}

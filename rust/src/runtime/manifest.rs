@@ -1,0 +1,264 @@
+//! Artifact manifest — the python↔rust contract.
+//!
+//! `python/compile/aot.py` writes one `manifest.json` next to every artifact
+//! set (one set per `(model, bitwidth-config)`). It records layer geometry
+//! (for energy accounting and E-matrix shapes), the parameter inventory, and
+//! the **input-group ordering** of every exported executable, so the rust
+//! side can assemble argument lists without guessing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+/// One convolution layer that is subject to AppMul substitution.
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub index: usize,
+    /// Weight bitwidth N (LUT side is 2^N).
+    pub w_bits: u32,
+    /// Activation bitwidth (equal to `w_bits` in all paper configs; kept
+    /// separate for W≠A configs like w4a8).
+    pub a_bits: u32,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kernel: (usize, usize),
+    pub stride: usize,
+    pub in_hw: (usize, usize),
+    pub out_hw: (usize, usize),
+    /// E-matrix rows (2^a_bits) and columns (2^w_bits).
+    pub e_rows: usize,
+    pub e_cols: usize,
+    /// Multiplications per image: N_O·H·W·N_I·W_K·H_K (paper §IV-D).
+    pub mults_per_image: u64,
+}
+
+impl LayerInfo {
+    /// Flattened E-vector length (2^(a_bits+w_bits)).
+    pub fn e_len(&self) -> usize {
+        self.e_rows * self.e_cols
+    }
+
+    fn from_json(j: &Json) -> Result<LayerInfo> {
+        let kernel = j.get("kernel")?.as_usize_vec()?;
+        let in_hw = j.get("in_hw")?.as_usize_vec()?;
+        let out_hw = j.get("out_hw")?.as_usize_vec()?;
+        if kernel.len() != 2 || out_hw.len() != 2 || in_hw.len() != 2 {
+            bail!("kernel/in_hw/out_hw must have 2 entries");
+        }
+        let li = LayerInfo {
+            name: j.get("name")?.as_str()?.to_string(),
+            index: j.get("index")?.as_usize()?,
+            w_bits: j.get("w_bits")?.as_usize()? as u32,
+            a_bits: j.get("a_bits")?.as_usize()? as u32,
+            in_ch: j.get("in_ch")?.as_usize()?,
+            out_ch: j.get("out_ch")?.as_usize()?,
+            kernel: (kernel[0], kernel[1]),
+            stride: j.get("stride")?.as_usize()?,
+            in_hw: (in_hw[0], in_hw[1]),
+            out_hw: (out_hw[0], out_hw[1]),
+            e_rows: j.get("e_rows")?.as_usize()?,
+            e_cols: j.get("e_cols")?.as_usize()?,
+            mults_per_image: j.get("mults_per_image")?.as_i64()? as u64,
+        };
+        if li.e_rows != 1 << li.a_bits || li.e_cols != 1 << li.w_bits {
+            bail!("layer {}: e shape {}x{} inconsistent with bits a={} w={}",
+                  li.name, li.e_rows, li.e_cols, li.a_bits, li.w_bits);
+        }
+        Ok(li)
+    }
+}
+
+/// One named parameter tensor (order matters: it is the executable input order).
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    fn from_json(j: &Json) -> Result<ParamInfo> {
+        Ok(ParamInfo {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j.get("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// Input/output contract of one exported executable.
+#[derive(Clone, Debug)]
+pub struct ExeSpec {
+    pub file: String,
+    /// Ordered input *groups* (e.g. `params`, `lwc`, `act_q`, `e_list`,
+    /// `images`, `labels`, `lr`, `rvecs`); the pipeline expands groups.
+    pub inputs: Vec<String>,
+    /// Ordered output names.
+    pub outputs: Vec<String>,
+}
+
+impl ExeSpec {
+    fn from_json(j: &Json) -> Result<ExeSpec> {
+        Ok(ExeSpec {
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: j.get("inputs")?.as_str_vec()?,
+            outputs: j.get("outputs")?.as_str_vec()?,
+        })
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .with_context(|| format!("executable has no output '{name}' (have {:?})", self.outputs))
+    }
+}
+
+/// Parsed `manifest.json` for one artifact set.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub cfg: String,
+    pub num_classes: usize,
+    /// CHW image shape.
+    pub image_shape: Vec<usize>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub layers: Vec<LayerInfo>,
+    pub params: Vec<ParamInfo>,
+    pub opt_state: Vec<ParamInfo>,
+    pub executables: BTreeMap<String, ExeSpec>,
+}
+
+impl Manifest {
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let layers = j
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(LayerInfo::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(ParamInfo::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let opt_state = j
+            .get("opt_state")?
+            .as_arr()?
+            .iter()
+            .map(ParamInfo::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut executables = BTreeMap::new();
+        for (name, spec) in j.get("executables")?.as_obj()? {
+            executables.insert(name.clone(), ExeSpec::from_json(spec)?);
+        }
+        Ok(Manifest {
+            model: j.get("model")?.as_str()?.to_string(),
+            cfg: j.get("cfg")?.as_str()?.to_string(),
+            num_classes: j.get("num_classes")?.as_usize()?,
+            image_shape: j.get("image_shape")?.as_usize_vec()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            layers,
+            params,
+            opt_state,
+            executables,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let j = Json::load(path)?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables.get(name).with_context(|| {
+            format!(
+                "manifest has no executable '{name}' (have {:?})",
+                self.executables.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Total multiplications per image across all substitutable layers.
+    pub fn total_mults_per_image(&self) -> u64 {
+        self.layers.iter().map(|l| l.mults_per_image).sum()
+    }
+}
+
+/// An artifact set on disk: directory + parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactSet {
+    /// Open `artifacts/<model>_<cfg>/`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading artifact set {}", dir.display()))?;
+        Ok(ArtifactSet { dir, manifest })
+    }
+
+    /// Conventional location: `<root>/<model>_<cfg>/`.
+    pub fn locate(root: impl AsRef<Path>, model: &str, cfg: &str) -> Result<ArtifactSet> {
+        Self::open(root.as_ref().join(format!("{model}_{cfg}")))
+    }
+
+    /// Absolute path of a named executable's HLO file.
+    pub fn exe_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.manifest.exe(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "model":"resnet8","cfg":"w4a4","num_classes":10,
+              "image_shape":[3,16,16],"train_batch":64,"eval_batch":256,
+              "layers":[{"name":"conv0","index":0,"w_bits":4,"a_bits":4,
+                         "in_ch":3,"out_ch":8,"kernel":[3,3],"stride":1,
+                         "in_hw":[16,16],"out_hw":[16,16],
+                         "e_rows":16,"e_cols":16,"mults_per_image":55296}],
+              "params":[{"name":"conv0.w","shape":[8,3,3,3]}],
+              "opt_state":[{"name":"conv0.w.m","shape":[8,3,3,3]}],
+              "executables":{"fwd":{"file":"fwd.hlo.txt",
+                "inputs":["params","e_list","images","labels"],
+                "outputs":["loss_sum","correct","logits"]}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.model, "resnet8");
+        assert_eq!(m.layers[0].e_len(), 256);
+        assert_eq!(m.total_mults_per_image(), 55296);
+        let exe = m.exe("fwd").unwrap();
+        assert_eq!(exe.output_index("correct").unwrap(), 1);
+        assert!(exe.output_index("nope").is_err());
+        assert!(m.exe("train").is_err());
+    }
+
+    #[test]
+    fn mults_formula_matches_layer_geometry() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        let l = &m.layers[0];
+        let expect =
+            (l.out_ch * l.out_hw.0 * l.out_hw.1 * l.in_ch * l.kernel.0 * l.kernel.1) as u64;
+        assert_eq!(l.mults_per_image, expect);
+    }
+}

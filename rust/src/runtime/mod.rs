@@ -1,0 +1,153 @@
+//! PJRT runtime — loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! This is the only place the `xla` crate is touched. The interchange format
+//! is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly (see
+//! `/opt/xla-example/README.md` and `python/compile/aot.py`).
+//!
+//! All executables follow the contract recorded in each artifact set's
+//! `manifest.json`: f32 inputs in manifest order, a tuple of f32 outputs.
+//!
+//! Note: `PjRtClient` holds an `Rc` internally, so a [`Runtime`] is pinned to
+//! the thread that created it. XLA's own intra-op thread pool still uses all
+//! cores for the heavy lifting.
+
+mod manifest;
+
+pub use manifest::{ArtifactSet, ExeSpec, LayerInfo, Manifest, ParamInfo};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Cumulative execution statistics for one executable.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// A compiled HLO executable with its source path and stats.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    /// Execute on f32 tensors; unpacks the output tuple into tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let start = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                t.to_literal()
+                    .with_context(|| format!("converting input {i} for {}", self.path.display()))
+            })
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        if out.is_empty() || out[0].is_empty() {
+            bail!("executable {} produced no outputs", self.path.display());
+        }
+        let root = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple().context("decomposing output tuple")?;
+        let tensors = parts
+            .iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                Tensor::from_literal(lit)
+                    .with_context(|| format!("converting output {i} of {}", self.path.display()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.total_secs += start.elapsed().as_secs_f64();
+        Ok(tensors)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// A PJRT CPU client plus a compile cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by canonical path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::rc::Rc<Executable>> {
+        let path = path.as_ref();
+        let key = path
+            .canonicalize()
+            .with_context(|| format!("artifact not found: {}", path.display()))?;
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {}", key.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", key.display()))?;
+        let exe = std::rc::Rc::new(Executable {
+            exe,
+            path: key.clone(),
+            stats: RefCell::new(ExecStats {
+                compile_secs: start.elapsed().as_secs_f64(),
+                ..Default::default()
+            }),
+        });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Aggregate stats over all cached executables.
+    pub fn all_stats(&self) -> Vec<(PathBuf, ExecStats)> {
+        self.cache
+            .borrow()
+            .iter()
+            .map(|(p, e)| (p.clone(), e.stats()))
+            .collect()
+    }
+}

@@ -1,0 +1,14 @@
+//! AppMul selection algorithms.
+//!
+//! * [`ilp`] — the paper's contribution: exact multiple-choice-knapsack
+//!   branch-and-bound over Taylor-estimated perturbations (§IV-D);
+//! * [`nsga`] — the NSGA-II baseline used by ALWANN/MARLIN (§II-B), for the
+//!   Table II / Fig. 3 comparisons;
+//! * uniform selection (same AppMul index everywhere) lives in the
+//!   experiment drivers (Fig. 5(a,b) baseline).
+
+pub mod ilp;
+pub mod nsga;
+
+pub use ilp::{solve_exact, solve_greedy, Choice, Solution};
+pub use nsga::{run as nsga_run, NsgaConfig};

@@ -1,0 +1,297 @@
+//! NSGA-II baseline (the selection algorithm of ALWANN [8] / MARLIN [9]).
+//!
+//! Generic bi-objective minimizer over per-layer choice vectors. The FAMES
+//! paper's Table II / Fig. 3 comparison point: GA-based selection needs many
+//! full-model fitness evaluations (hours), while the ILP + Taylor estimate
+//! needs none.
+
+use crate::rng::Pcg;
+
+/// Candidate assignment: one choice index per layer.
+pub type Genome = Vec<usize>;
+
+/// Both objectives are minimized (e.g. `(loss, energy_ratio)`).
+pub type Objectives = (f64, f64);
+
+/// NSGA-II configuration.
+#[derive(Clone, Debug)]
+pub struct NsgaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_p: f64,
+    pub mutation_p: f64,
+    pub seed: u64,
+}
+
+impl Default for NsgaConfig {
+    fn default() -> Self {
+        NsgaConfig {
+            population: 12,
+            generations: 6,
+            crossover_p: 0.9,
+            mutation_p: 0.15,
+            seed: 0,
+        }
+    }
+}
+
+/// One evaluated individual.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genome: Genome,
+    pub objectives: Objectives,
+}
+
+/// `a` Pareto-dominates `b` (both minimized).
+pub fn dominates(a: Objectives, b: Objectives) -> bool {
+    (a.0 <= b.0 && a.1 <= b.1) && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Fast non-dominated sort: returns front index per individual (0 = best).
+pub fn non_dominated_sort(objs: &[Objectives]) -> Vec<usize> {
+    let n = objs.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(objs[i], objs[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            }
+        }
+    }
+    let mut front = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut f = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            front[i] = f;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        f += 1;
+    }
+    front
+}
+
+/// Crowding distance within one front (index set).
+pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    for obj_idx in 0..2 {
+        let get = |i: usize| if obj_idx == 0 { objs[front[i]].0 } else { objs[front[i]].1 };
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| get(a).partial_cmp(&get(b)).unwrap());
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = (get(order[m - 1]) - get(order[0])).max(1e-12);
+        for w in 1..m - 1 {
+            dist[order[w]] += (get(order[w + 1]) - get(order[w - 1])) / span;
+        }
+    }
+    dist
+}
+
+/// Run NSGA-II. `n_choices[k]` bounds the gene at layer `k`;
+/// `eval(genome) -> (obj1, obj2)` is the (expensive) fitness.
+/// Returns the final population's first Pareto front, plus the number of
+/// fitness evaluations spent (the Table II runtime driver).
+pub fn run<F: FnMut(&Genome) -> Objectives>(
+    n_choices: &[usize],
+    cfg: &NsgaConfig,
+    mut eval: F,
+) -> (Vec<Individual>, u64) {
+    let mut rng = Pcg::seeded(cfg.seed ^ 0x46a);
+    let mut evals = 0u64;
+    let mut eval_counted = |g: &Genome, evals: &mut u64, eval: &mut F| {
+        *evals += 1;
+        eval(g)
+    };
+
+    // init population: random genomes, plus the all-exact genome (index 0 is
+    // exact by library convention) to anchor the front
+    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.population);
+    let zero: Genome = vec![0; n_choices.len()];
+    let obj = eval_counted(&zero, &mut evals, &mut eval);
+    pop.push(Individual {
+        genome: zero,
+        objectives: obj,
+    });
+    while pop.len() < cfg.population {
+        let g: Genome = n_choices.iter().map(|&n| rng.below(n)).collect();
+        let objectives = eval_counted(&g, &mut evals, &mut eval);
+        pop.push(Individual {
+            genome: g,
+            objectives,
+        });
+    }
+
+    for _gen in 0..cfg.generations {
+        // offspring by binary tournament + uniform crossover + mutation
+        let objs: Vec<Objectives> = pop.iter().map(|i| i.objectives).collect();
+        let fronts = non_dominated_sort(&objs);
+        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.population);
+        while offspring.len() < cfg.population {
+            let pick = |rng: &mut Pcg| {
+                let a = rng.below(pop.len());
+                let b = rng.below(pop.len());
+                if fronts[a] <= fronts[b] {
+                    a
+                } else {
+                    b
+                }
+            };
+            let pa = pick(&mut rng);
+            let pb = pick(&mut rng);
+            let mut child: Genome = if rng.chance(cfg.crossover_p) {
+                pop[pa]
+                    .genome
+                    .iter()
+                    .zip(&pop[pb].genome)
+                    .map(|(&x, &y)| if rng.chance(0.5) { x } else { y })
+                    .collect()
+            } else {
+                pop[pa].genome.clone()
+            };
+            for (k, gene) in child.iter_mut().enumerate() {
+                if rng.chance(cfg.mutation_p) {
+                    *gene = rng.below(n_choices[k]);
+                }
+            }
+            let objectives = eval_counted(&child, &mut evals, &mut eval);
+            offspring.push(Individual {
+                genome: child,
+                objectives,
+            });
+        }
+        // environmental selection over parents + offspring
+        pop.extend(offspring);
+        let objs: Vec<Objectives> = pop.iter().map(|i| i.objectives).collect();
+        let fronts = non_dominated_sort(&objs);
+        let max_front = fronts.iter().max().copied().unwrap_or(0);
+        let mut new_pop: Vec<Individual> = Vec::with_capacity(cfg.population);
+        for f in 0..=max_front {
+            let members: Vec<usize> = (0..pop.len()).filter(|&i| fronts[i] == f).collect();
+            if new_pop.len() + members.len() <= cfg.population {
+                for &i in &members {
+                    new_pop.push(pop[i].clone());
+                }
+            } else {
+                let dist = crowding_distance(&objs, &members);
+                let mut order: Vec<usize> = (0..members.len()).collect();
+                order.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+                for &w in &order {
+                    if new_pop.len() >= cfg.population {
+                        break;
+                    }
+                    new_pop.push(pop[members[w]].clone());
+                }
+            }
+            if new_pop.len() >= cfg.population {
+                break;
+            }
+        }
+        pop = new_pop;
+    }
+
+    let objs: Vec<Objectives> = pop.iter().map(|i| i.objectives).collect();
+    let fronts = non_dominated_sort(&objs);
+    let front: Vec<Individual> = pop
+        .into_iter()
+        .zip(fronts)
+        .filter(|(_, f)| *f == 0)
+        .map(|(i, _)| i)
+        .collect();
+    (front, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates((1.0, 1.0), (2.0, 2.0)));
+        assert!(dominates((1.0, 2.0), (1.0, 3.0)));
+        assert!(!dominates((1.0, 3.0), (2.0, 2.0)));
+        assert!(!dominates((1.0, 1.0), (1.0, 1.0)));
+    }
+
+    #[test]
+    fn sort_identifies_fronts() {
+        let objs = vec![(1.0, 5.0), (5.0, 1.0), (2.0, 2.0), (6.0, 6.0), (3.0, 3.0)];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts[0], 0);
+        assert_eq!(fronts[1], 0);
+        assert_eq!(fronts[2], 0);
+        assert_eq!(fronts[4], 1); // dominated by (2,2)
+        assert_eq!(fronts[3], 2); // dominated by (3,3) too
+    }
+
+    #[test]
+    fn crowding_infinite_at_extremes() {
+        let objs = vec![(1.0, 5.0), (2.0, 3.0), (3.0, 2.0), (5.0, 1.0)];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&objs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn optimizes_separable_problem() {
+        // known optimum: gene k == k % 3 minimizes obj1; gene 0 minimizes obj2.
+        let n_choices = vec![3usize; 6];
+        let cfg = NsgaConfig {
+            population: 16,
+            generations: 12,
+            seed: 3,
+            ..Default::default()
+        };
+        let (front, evals) = run(&n_choices, &cfg, |g| {
+            let miss: f64 = g
+                .iter()
+                .enumerate()
+                .map(|(k, &v)| if v == k % 3 { 0.0 } else { 1.0 })
+                .sum();
+            let cost: f64 = g.iter().map(|&v| v as f64).sum();
+            (miss, cost)
+        });
+        assert!(evals > 16);
+        // the front must contain the all-zeros genome (cost optimum)...
+        assert!(front.iter().any(|i| i.objectives.1 == 0.0));
+        // ...and something substantially better than random on obj1
+        let best_miss = front
+            .iter()
+            .map(|i| i.objectives.0)
+            .fold(f64::MAX, f64::min);
+        assert!(best_miss <= 2.0, "best miss {best_miss}");
+    }
+
+    #[test]
+    fn front_is_mutually_nondominated() {
+        let n_choices = vec![4usize; 4];
+        let cfg = NsgaConfig {
+            population: 10,
+            generations: 5,
+            seed: 1,
+            ..Default::default()
+        };
+        let (front, _) = run(&n_choices, &cfg, |g| {
+            (g.iter().sum::<usize>() as f64, g.iter().map(|&x| 3 - x).sum::<usize>() as f64)
+        });
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a.objectives, b.objectives) || a.genome == b.genome);
+            }
+        }
+    }
+}

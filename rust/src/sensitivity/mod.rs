@@ -1,0 +1,354 @@
+//! Taylor-expansion perturbation estimation (paper §IV-C).
+//!
+//! `Ω(k, AM) ≈ gₖ·e + ½ eᵀ Hₖ e` with `g = ∇_E L` fetched from the `grad_e`
+//! artifact (one backprop — the gather transpose *is* the counting-matrix
+//! sum of Eq. 10) and `Hₖ` approximated by its top eigenpair `λₖ uₖuₖᵀ`
+//! (Eq. 12), obtained by **power iteration** on the exact Gauss–Newton
+//! Hessian-vector products of the `hvp_e` artifact.
+//!
+//! Everything here is computed **once per model**; evaluating a candidate
+//! AppMul is then two dot products (the paper's headline speed-up over
+//! GA-based selection).
+
+use anyhow::{bail, Result};
+
+use crate::appmul::{AppMul, Library};
+use crate::pipeline::session::Session;
+use crate::tensor::Tensor;
+
+/// How the second-order term of Eq. 9 is computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HessianMode {
+    /// First-order only (`Ω = g·e`).
+    Off,
+    /// Rank-1 top-eigenpair approximation (paper Eq. 12; power iteration).
+    Rank1 { iters: usize },
+    /// Exact Gauss–Newton quadratic per candidate: `½ e·(H e)` via one
+    /// HVP per (layer, candidate) — the paper's §IV-C2 ("accurate but
+    /// slower") variant; at this model scale it costs seconds, not hours,
+    /// and is the pipeline default.
+    Exact,
+}
+
+/// Per-layer estimation state.
+#[derive(Clone, Debug)]
+pub struct LayerEstimate {
+    /// ∇_E L (flattened, length 2^(a+w) bits).
+    pub grad: Tensor,
+    /// Top Hessian eigenvalue (0 when Hessian disabled).
+    pub lambda: f64,
+    /// Top Hessian eigenvector (empty when Hessian disabled).
+    pub eigvec: Tensor,
+    /// Power-iteration convergence history (|λ| per iteration).
+    pub lambda_history: Vec<f64>,
+}
+
+/// Full estimation state for one model.
+pub struct Estimator {
+    pub layers: Vec<LayerEstimate>,
+    /// Mean loss of the exact-multiplier model on the estimation batches.
+    pub base_loss: f64,
+}
+
+impl Estimator {
+    /// Run the estimation phase: one averaged `grad_e` pass, then (for
+    /// [`HessianMode::Rank1`]) power iterations per layer.
+    ///
+    /// The session's current E selection is temporarily cleared: the Taylor
+    /// expansion is taken around the exact model (Eq. 9's `e^(k,exact)`).
+    pub fn compute(session: &mut Session, est_batches: usize, mode: HessianMode)
+                   -> Result<Estimator> {
+        let hessian_iters = match mode {
+            HessianMode::Rank1 { iters } => iters,
+            _ => 0,
+        };
+        let saved = session.e_list.clone();
+        session.clear_selection();
+        let result = Self::compute_inner(session, est_batches, hessian_iters);
+        session.e_list = saved;
+        result
+    }
+
+    fn compute_inner(session: &mut Session, est_batches: usize, hessian_iters: usize)
+                     -> Result<Estimator> {
+        if est_batches == 0 {
+            bail!("est_batches must be ≥ 1");
+        }
+        let (base_loss, grads) = session.grad_e(est_batches)?;
+        let n = grads.len();
+        let mut layers: Vec<LayerEstimate> = grads
+            .into_iter()
+            .map(|grad| LayerEstimate {
+                grad,
+                lambda: 0.0,
+                eigvec: Tensor::zeros(&[0]),
+                lambda_history: Vec::new(),
+            })
+            .collect();
+
+        if hessian_iters > 0 {
+            for k in 0..n {
+                let dim = layers[k].grad.len();
+                // deterministic start vector (seeded by layer index)
+                let mut rng = crate::rng::Pcg::seeded(0x11e55 + k as u64);
+                let mut v = Tensor::new(
+                    vec![dim],
+                    (0..dim).map(|_| rng.normal() as f32).collect(),
+                )?;
+                normalize(&mut v);
+                let mut lambda = 0.0f64;
+                let mut history = Vec::with_capacity(hessian_iters);
+                for it in 0..hessian_iters {
+                    // zero r in all other layers isolates the diagonal block
+                    let rvecs: Vec<Tensor> = (0..n)
+                        .map(|j| {
+                            if j == k {
+                                v.clone()
+                            } else {
+                                Tensor::zeros(&[layers[j].grad.len()])
+                            }
+                        })
+                        .collect();
+                    let hr = session.hvp_e(&rvecs, it as u64 % 2)?;
+                    let hv = hr[k].clone();
+                    lambda = v.dot(&hv)?;
+                    history.push(lambda);
+                    let norm = hv.norm();
+                    if norm < 1e-12 {
+                        lambda = 0.0;
+                        break;
+                    }
+                    v = hv;
+                    normalize(&mut v);
+                }
+                layers[k].lambda = lambda.max(0.0); // PSD Gauss–Newton: clamp noise
+                layers[k].eigvec = v;
+                layers[k].lambda_history = history;
+            }
+        }
+
+        Ok(Estimator { layers, base_loss })
+    }
+
+    /// Ω(k, AM): the Taylor estimate of Eq. 9 for one candidate — two dot
+    /// products over the precomputed error slice (no allocation).
+    pub fn perturbation(&self, layer: usize, am: &AppMul) -> Result<f64> {
+        let le = &self.layers[layer];
+        let e = am.error_slice();
+        if e.len() != le.grad.len() {
+            bail!(
+                "layer {layer}: AppMul {} has E length {}, expected {}",
+                am.name,
+                e.len(),
+                le.grad.len()
+            );
+        }
+        let dot = |v: &[f32]| -> f64 {
+            v.iter()
+                .zip(e.iter())
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum()
+        };
+        let first = dot(le.grad.data());
+        let second = if le.lambda > 0.0 && le.eigvec.len() == e.len() {
+            let proj = dot(le.eigvec.data());
+            0.5 * le.lambda * proj * proj
+        } else {
+            0.0
+        };
+        Ok(first + second)
+    }
+
+    /// Exact Gauss–Newton quadratic for one candidate on one layer:
+    /// `½ e·(H_kk e)` from a single HVP with e isolated in layer `k`.
+    pub fn quadratic_exact(session: &Session, layer: usize, e: &Tensor) -> Result<f64> {
+        let n = session.art.manifest.layers.len();
+        let rvecs: Vec<Tensor> = (0..n)
+            .map(|j| {
+                if j == layer {
+                    e.clone()
+                } else {
+                    Tensor::zeros(&[session.art.manifest.layers[j].e_len()])
+                }
+            })
+            .collect();
+        let hr = session.hvp_e(&rvecs, 0)?;
+        Ok(0.5 * e.dot(&hr[layer])?)
+    }
+
+    /// Fig. 5(c) baseline estimator: L2 norm of the error matrix.
+    pub fn l2_estimate(am: &AppMul) -> f64 {
+        am.metrics.e_l2
+    }
+
+    /// Fig. 5(c) baseline estimator: MRED of the AppMul.
+    pub fn mre_estimate(am: &AppMul) -> f64 {
+        am.metrics.mred
+    }
+}
+
+/// Precomputed Ω table aligned with `library.for_bits(...)` ordering per
+/// layer — what the ILP consumes. Built once per model; candidate lookup is
+/// then O(1) (the paper's "compute once" speed-up).
+#[derive(Clone, Debug)]
+pub struct PerturbTable {
+    /// `values[layer][choice]` = Ω(layer, choice).
+    pub values: Vec<Vec<f64>>,
+    /// AppMul name per entry (diagnostics / reports).
+    pub names: Vec<Vec<String>>,
+    pub base_loss: f64,
+    /// Wall-clock spent estimating (Table II "Select Time" component).
+    pub estimate_secs: f64,
+}
+
+/// Build the full Ω table for a session + library under a Hessian mode.
+pub fn estimate_table(
+    session: &mut Session,
+    library: &Library,
+    est_batches: usize,
+    mode: HessianMode,
+) -> Result<(Estimator, PerturbTable)> {
+    let t0 = std::time::Instant::now();
+    let est = Estimator::compute(session, est_batches, mode)?;
+    let saved = session.e_list.clone();
+    session.clear_selection();
+    let n = session.art.manifest.layers.len();
+    let mut values = Vec::with_capacity(n);
+    let mut names = Vec::with_capacity(n);
+    let per_layer_muls: Vec<Vec<&crate::appmul::AppMul>> = session
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| library.for_bits(l.a_bits, l.w_bits))
+        .collect();
+    // first-order terms (two dot products each)
+    for (k, muls) in per_layer_muls.iter().enumerate() {
+        let mut row = Vec::with_capacity(muls.len());
+        let mut row_names = Vec::with_capacity(muls.len());
+        for am in muls {
+            // Clamp at zero: the Gauss–Newton Hessian is PSD and the model
+            // is converged (∂L/∂z ≈ 0, paper §IV-C2), so a genuinely
+            // negative Ω is below the estimation noise floor — leaving it
+            // negative lets the ILP treat approximation as a free lunch.
+            row.push(est.perturbation(k, am)?.max(0.0));
+            row_names.push(am.name.clone());
+        }
+        values.push(row);
+        names.push(row_names);
+    }
+    // exact Gauss–Newton quadratics, batched: candidate slot `i` of every
+    // layer is probed in one `quad_e` execution (primal pass shared).
+    if mode == HessianMode::Exact {
+        let use_quad = session.has_quad_e();
+        let max_c = per_layer_muls.iter().map(|m| m.len()).max().unwrap_or(0);
+        for i in 0..max_c {
+            if use_quad {
+                let rvecs: Vec<Tensor> = per_layer_muls
+                    .iter()
+                    .enumerate()
+                    .map(|(k, muls)| match muls.get(i) {
+                        Some(am) if !am.is_exact() => am.error_tensor(),
+                        _ => Tensor::zeros(&[session.art.manifest.layers[k].e_len()]),
+                    })
+                    .collect();
+                let quads = session.quad_e(&rvecs, 0)?;
+                for (k, muls) in per_layer_muls.iter().enumerate() {
+                    if let Some(am) = muls.get(i) {
+                        if !am.is_exact() {
+                            values[k][i] += quads[k].max(0.0);
+                        }
+                    }
+                }
+            } else {
+                // fallback for artifact sets without quad_e: per-layer HVPs
+                for (k, muls) in per_layer_muls.iter().enumerate() {
+                    if let Some(am) = muls.get(i) {
+                        if !am.is_exact() {
+                            let e = am.error_tensor();
+                            values[k][i] +=
+                                Estimator::quadratic_exact(session, k, &e)?.max(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    session.e_list = saved;
+    let table = PerturbTable {
+        values,
+        names,
+        base_loss: est.base_loss,
+        estimate_secs: t0.elapsed().as_secs_f64(),
+    };
+    Ok((est, table))
+}
+
+fn normalize(v: &mut Tensor) {
+    let n = v.norm() as f32;
+    if n > 0.0 {
+        v.scale(1.0 / n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appmul::generate_library;
+
+    #[test]
+    fn perturbation_is_two_dot_products() {
+        // synthetic estimator — no runtime needed
+        let lib = generate_library(&[(2, 2)], 0);
+        let am = lib.for_bits(2, 2)[1]; // some approximate design
+        let grad = Tensor::new(vec![16], (0..16).map(|i| i as f32 * 0.1).collect()).unwrap();
+        let mut eig = Tensor::full(&[16], 0.25);
+        eig.data_mut()[0] = 0.5;
+        let est = Estimator {
+            layers: vec![LayerEstimate {
+                grad: grad.clone(),
+                lambda: 2.0,
+                eigvec: eig.clone(),
+                lambda_history: vec![2.0],
+            }],
+            base_loss: 1.0,
+        };
+        let e = am.error_tensor();
+        let want = grad.dot(&e).unwrap()
+            + 0.5 * 2.0 * eig.dot(&e).unwrap() * eig.dot(&e).unwrap();
+        let got = est.perturbation(0, am).unwrap();
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_multiplier_has_zero_perturbation() {
+        let lib = generate_library(&[(3, 3)], 0);
+        let exact = lib.exact(3, 3).unwrap();
+        let est = Estimator {
+            layers: vec![LayerEstimate {
+                grad: Tensor::full(&[64], 1.0),
+                lambda: 1.0,
+                eigvec: Tensor::full(&[64], 0.125),
+                lambda_history: vec![],
+            }],
+            base_loss: 0.0,
+        };
+        assert_eq!(est.perturbation(0, exact).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn size_mismatch_is_error() {
+        let lib = generate_library(&[(3, 3)], 0);
+        let am = lib.exact(3, 3).unwrap();
+        let est = Estimator {
+            layers: vec![LayerEstimate {
+                grad: Tensor::zeros(&[16]), // wrong: 2-bit length
+                lambda: 0.0,
+                eigvec: Tensor::zeros(&[0]),
+                lambda_history: vec![],
+            }],
+            base_loss: 0.0,
+        };
+        assert!(est.perturbation(0, am).is_err());
+    }
+}

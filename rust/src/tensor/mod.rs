@@ -1,0 +1,247 @@
+//! Dense f32 tensor type plus an on-disk store.
+//!
+//! The offline crate set has no `ndarray`, so FAMES carries its own minimal
+//! dense tensor: row-major `Vec<f32>` + shape. Everything crossing the PJRT
+//! boundary is f32 (integer quantities like LUT entries are exactly
+//! representable: |product| ≤ 255² < 2²⁴), which keeps the rust↔HLO contract
+//! to a single dtype.
+
+mod store;
+
+pub use store::TensorStore;
+
+use anyhow::{bail, Context, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create a tensor from a shape and backing data (row-major).
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} implies {} elements but data has {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// All-`v` tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn from_slice(v: &[f32]) -> Self {
+        Self {
+            shape: vec![v.len()],
+            data: v.to_vec(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// The scalar value of a rank-0/1-element tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Reshape without copying. Element count must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row-major linear index of a multi-index.
+    pub fn linear_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut lin = 0usize;
+        for (i, (&ix, &dim)) in idx.iter().zip(self.shape.iter()).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bounds for dim {i} ({dim})");
+            lin = lin * dim + ix;
+        }
+        lin
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.linear_index(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let lin = self.linear_index(idx);
+        self.data[lin] = v;
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.data.len() as f64
+    }
+
+    /// Dot product with another tensor of identical element count.
+    pub fn dot(&self, other: &Tensor) -> Result<f64> {
+        if self.len() != other.len() {
+            bail!("dot: length mismatch {} vs {}", self.len(), other.len());
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum())
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// In-place `self += s * other`.
+    pub fn axpy(&mut self, s: f32, other: &Tensor) -> Result<()> {
+        if self.len() != other.len() {
+            bail!("axpy: length mismatch {} vs {}", self.len(), other.len());
+        }
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal (f32, given shape).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        lit.reshape(&dims)
+            .with_context(|| format!("reshaping literal to {:?}", self.shape))
+    }
+
+    /// Convert from an XLA literal (must be an f32 array).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal to_vec::<f32>")?;
+        Tensor::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_is_row_major() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.get(&[0, 0]), 0.0);
+        assert_eq!(t.get(&[0, 2]), 2.0);
+        assert_eq!(t.get(&[1, 0]), 3.0);
+        assert_eq!(t.get(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_slice(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.get(&[1, 1]), 4.0);
+        assert!(t.clone().reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = Tensor::from_slice(&[1.0, 2.0, 2.0]);
+        let b = Tensor::from_slice(&[3.0, 0.0, 4.0]);
+        assert_eq!(a.dot(&b).unwrap(), 11.0);
+        assert_eq!(a.norm(), 3.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = Tensor::from_slice(&[1.0, 1.0]);
+        let b = Tensor::from_slice(&[2.0, 4.0]);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(7.0).item().unwrap(), 7.0);
+        assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! `TensorStore` — a tiny named-tensor container file format (`.fmt`).
+//!
+//! No `serde`/`npz` in the offline crate set, so FAMES defines its own
+//! format: a magic header, a count, then per-entry
+//! `name_len u32 | name bytes | rank u32 | dims u64… | data f32…`,
+//! all little-endian. Used for model parameters, calibration state and
+//! cached estimation vectors.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+const MAGIC: &[u8; 8] = b"FAMESTS1";
+
+/// An ordered map of named tensors with binary save/load.
+#[derive(Clone, Debug, Default)]
+pub struct TensorStore {
+    entries: BTreeMap<String, Tensor>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.entries.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in store (have: {:?})", self.names()))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        if !self.entries.contains_key(name) {
+            bail!("tensor '{name}' not in store");
+        }
+        Ok(self.entries.get_mut(name).unwrap())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.entries.remove(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.entries.iter()
+    }
+
+    /// Total number of f32 elements across all tensors.
+    pub fn total_elements(&self) -> usize {
+        self.entries.values().map(|t| t.len()).sum()
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, mut w: impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.entries {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // Bulk-write the payload as raw little-endian f32.
+            let data = t.data();
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(mut r: impl Read) -> Result<Self> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("reading magic")?;
+        if &magic != MAGIC {
+            bail!("not a FAMES tensor store (bad magic {:?})", magic);
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 1 << 16 {
+                bail!("unreasonable name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf8")?;
+            let rank = read_u32(&mut r)? as usize;
+            if rank > 16 {
+                bail!("unreasonable rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)
+                .with_context(|| format!("reading {n} f32 for '{name}'"))?;
+            let mut data = Vec::with_capacity(n);
+            for c in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            entries.insert(name, Tensor::new(shape, data)?);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        self.write_to(std::io::BufWriter::new(f))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::read_from(std::io::BufReader::new(f))
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+fn read_u32(mut r: impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_bytes() {
+        let mut s = TensorStore::new();
+        s.insert("w0", Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap());
+        s.insert("scalar", Tensor::scalar(-1.5));
+        s.insert("empty_shape", Tensor::zeros(&[0]));
+        let mut buf = Vec::new();
+        s.write_to(&mut buf).unwrap();
+        let s2 = TensorStore::read_from(&buf[..]).unwrap();
+        assert_eq!(s2.len(), 3);
+        assert_eq!(s2.get("w0").unwrap(), s.get("w0").unwrap());
+        assert_eq!(s2.get("scalar").unwrap().item().unwrap(), -1.5);
+        assert_eq!(s2.get("empty_shape").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTAFMT0\x00\x00\x00\x00".to_vec();
+        assert!(TensorStore::read_from(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let s = TensorStore::new();
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn fuzz_roundtrip_random_stores() {
+        use crate::rng::Pcg;
+        for seed in 0..50u64 {
+            let mut rng = Pcg::seeded(seed ^ 0xf00d);
+            let mut s = TensorStore::new();
+            let n = 1 + rng.below(6);
+            for i in 0..n {
+                let rank = rng.below(4);
+                let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5)).collect();
+                let count: usize = shape.iter().product();
+                let data: Vec<f32> = (0..count).map(|_| rng.normal() as f32).collect();
+                s.insert(format!("t{i}"), Tensor::new(shape, data).unwrap());
+            }
+            let mut buf = Vec::new();
+            s.write_to(&mut buf).unwrap();
+            let s2 = TensorStore::read_from(&buf[..]).unwrap();
+            assert_eq!(s2.len(), s.len(), "seed {seed}");
+            for (name, t) in s.iter() {
+                assert_eq!(s2.get(name).unwrap(), t, "seed {seed} {name}");
+            }
+            // truncated payloads must error, not panic
+            if buf.len() > 16 {
+                assert!(TensorStore::read_from(&buf[..buf.len() - 3]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("fames_store_test");
+        let path = dir.join("x.fmt");
+        let mut s = TensorStore::new();
+        s.insert("a", Tensor::from_slice(&[1.0, 2.0]));
+        s.save(&path).unwrap();
+        let s2 = TensorStore::load(&path).unwrap();
+        assert_eq!(s2.get("a").unwrap().data(), &[1.0, 2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

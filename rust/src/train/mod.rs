@@ -1,0 +1,58 @@
+//! fp32 pre-training driver (rust-side, via the `train` artifact).
+//!
+//! Thin utilities over `Session::train` used by the quickstart example and
+//! the experiment drivers: loss-curve recording and simple convergence
+//! checks. Python never runs here — the SGD step itself is an AOT-compiled
+//! executable.
+
+use anyhow::Result;
+
+use crate::pipeline::Session;
+
+/// Loss curve of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainCurve {
+    pub losses: Vec<f64>,
+}
+
+impl TrainCurve {
+    /// Mean loss over the first / last `k` steps (convergence summary).
+    pub fn head_tail(&self, k: usize) -> (f64, f64) {
+        let k = k.min(self.losses.len()).max(1);
+        let head = self.losses.iter().take(k).sum::<f64>() / k as f64;
+        let tail = self.losses.iter().rev().take(k).sum::<f64>() / k as f64;
+        (head, tail)
+    }
+
+    /// True when the tail improves on the head by at least `factor`.
+    pub fn converged(&self, factor: f64) -> bool {
+        let (head, tail) = self.head_tail(20);
+        tail < head / factor
+    }
+}
+
+/// Train with a 2-phase lr schedule and return the loss curve.
+pub fn train(session: &mut Session, steps: usize, lr: f32) -> Result<TrainCurve> {
+    Ok(TrainCurve {
+        losses: session.train(steps, lr)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_tail_and_convergence() {
+        let c = TrainCurve {
+            losses: (0..100).map(|i| 2.3 * (0.97f64).powi(i)).collect(),
+        };
+        let (head, tail) = c.head_tail(10);
+        assert!(head > tail);
+        assert!(c.converged(1.5));
+        let flat = TrainCurve {
+            losses: vec![2.3; 100],
+        };
+        assert!(!flat.converged(1.1));
+    }
+}

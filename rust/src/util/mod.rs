@@ -1,0 +1,176 @@
+//! Small shared utilities: timers, stats, csv, quantiles.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with named lap reporting.
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch {
+            start: now,
+            laps: Vec::new(),
+            last: now,
+        }
+    }
+
+    /// Record a lap since the previous lap (or start).
+    pub fn lap(&mut self, name: impl Into<String>) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.laps.push((name.into(), dt));
+        self.last = now;
+        dt
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(v: &[f64]) -> f64 {
+    if v.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(v);
+    (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+}
+
+/// `q`-quantile (0..=1) by linear interpolation on a sorted copy.
+pub fn quantile(v: &[f32], q: f64) -> f32 {
+    assert!(!v.is_empty());
+    let mut s: Vec<f32> = v.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&s, q)
+}
+
+/// `q`-quantile of an already-sorted slice.
+pub fn quantile_sorted(s: &[f32], q: f64) -> f32 {
+    assert!(!s.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    s[lo] * (1.0 - frac) + s[hi] * frac
+}
+
+/// Mean relative error between two equally-sized slices (Algorithm 1's MRE).
+///
+/// The denominator is floored at 1% of the reference's mean magnitude:
+/// with a raw `|y| + 1e-6` floor, near-zero reference entries dominate the
+/// mean and the quantile sweep "optimizes" by clipping everything toward
+/// zero — destroying the large activations that actually carry signal.
+pub fn mre(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mean_mag: f64 =
+        b.iter().map(|&y| y.abs() as f64).sum::<f64>() / b.len() as f64;
+    let floor = (0.01 * mean_mag).max(1e-6) as f32;
+    let mut sum = 0.0;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        sum += ((x - y).abs() / (y.abs() + floor)) as f64;
+    }
+    sum / a.len() as f64
+}
+
+/// Write rows as CSV (header + records) to a file, creating directories.
+pub fn write_csv(
+    path: impl AsRef<std::path::Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Human-readable seconds (for experiment tables).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.2}h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles() {
+        let v = [3.0f32, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+        assert_eq!(quantile(&v, 0.5), 2.5);
+    }
+
+    #[test]
+    fn mre_zero_for_identical() {
+        let v = [1.0f32, -2.0, 3.0];
+        assert_eq!(mre(&v, &v), 0.0);
+        assert!(mre(&[2.0], &[1.0]) > 0.9);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 1.0, 1.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_laps() {
+        let mut sw = Stopwatch::new();
+        let dt = sw.lap("a");
+        assert!(dt >= 0.0);
+        assert_eq!(sw.laps().len(), 1);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(0.0000005).ends_with("µs"));
+        assert!(fmt_secs(0.05).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(7200.0).ends_with('h'));
+    }
+}

@@ -1,0 +1,93 @@
+//! Artifact-contract integration tests: every built artifact set must have
+//! a parseable manifest whose executables exist, compile, and respect the
+//! declared input/output arities. Skips gracefully before `make artifacts`.
+
+use fames::pipeline::artifacts_root;
+use fames::runtime::{ArtifactSet, Runtime};
+use fames::tensor::Tensor;
+
+fn sets() -> Vec<std::path::PathBuf> {
+    let root = std::path::PathBuf::from(artifacts_root());
+    let Ok(rd) = std::fs::read_dir(&root) else {
+        return vec![];
+    };
+    rd.filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.join("manifest.json").exists())
+        .collect()
+}
+
+#[test]
+fn all_manifests_parse_and_are_consistent() {
+    let sets = sets();
+    if sets.is_empty() {
+        eprintln!("skipping: no artifacts built");
+        return;
+    }
+    for dir in sets {
+        let set = ArtifactSet::open(&dir).unwrap_or_else(|e| panic!("{dir:?}: {e:#}"));
+        let m = &set.manifest;
+        assert!(!m.layers.is_empty(), "{dir:?}");
+        for l in &m.layers {
+            // mults formula (paper §IV-D)
+            let want = (l.out_ch * l.out_hw.0 * l.out_hw.1 * l.in_ch * l.kernel.0 * l.kernel.1)
+                as u64;
+            assert_eq!(l.mults_per_image, want, "{dir:?} layer {}", l.name);
+            assert_eq!(l.e_len(), l.e_rows * l.e_cols);
+        }
+        // every declared executable file exists
+        for (name, spec) in &m.executables {
+            let p = set.dir.join(&spec.file);
+            assert!(p.exists(), "{dir:?}: missing {name} ({})", spec.file);
+            assert!(!spec.inputs.is_empty() && !spec.outputs.is_empty());
+        }
+    }
+}
+
+#[test]
+fn fwd_executable_compiles_and_runs_with_manifest_shapes() {
+    let root = std::path::PathBuf::from(artifacts_root());
+    let dir = root.join("resnet8_w4a4");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: resnet8_w4a4 not built");
+        return;
+    }
+    let set = ArtifactSet::open(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(set.exe_path("fwd").unwrap()).unwrap();
+    let m = &set.manifest;
+    // assemble zero-filled inputs from the manifest groups
+    let mut inputs: Vec<Tensor> = Vec::new();
+    for g in &m.exe("fwd").unwrap().inputs {
+        match g.as_str() {
+            "params" => inputs.extend(m.params.iter().map(|p| Tensor::zeros(&p.shape))),
+            "lwc" => {
+                for _ in 0..2 * m.layers.len() {
+                    inputs.push(Tensor::scalar(4.0));
+                }
+            }
+            "act_q" => {
+                for _ in 0..m.layers.len() {
+                    inputs.push(Tensor::scalar(0.1));
+                    inputs.push(Tensor::scalar(0.0));
+                }
+            }
+            "e_list" => inputs.extend(m.layers.iter().map(|l| Tensor::zeros(&[l.e_len()]))),
+            "images_eval" => {
+                let mut sh = vec![m.eval_batch];
+                sh.extend(&m.image_shape);
+                inputs.push(Tensor::zeros(&sh));
+            }
+            "labels_eval" => inputs.push(Tensor::zeros(&[m.eval_batch])),
+            other => panic!("unexpected group {other}"),
+        }
+    }
+    let out = exe.run(&inputs).unwrap();
+    let spec = m.exe("fwd").unwrap();
+    assert_eq!(out.len(), spec.outputs.len());
+    // loss_sum finite, correct count within [0, batch]
+    let loss = out[spec.output_index("loss_sum").unwrap()].item().unwrap();
+    let correct = out[spec.output_index("correct").unwrap()].item().unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=m.eval_batch as f32).contains(&correct));
+}

@@ -1,0 +1,156 @@
+//! End-to-end pipeline integration tests over real artifacts.
+//!
+//! These are the cross-layer composition checks: rust coordinator (L3)
+//! driving AOT-compiled jax graphs (L2) that embed the Pallas LUT-GEMM
+//! kernel (L1). Skips gracefully before `make artifacts`.
+
+use std::rc::Rc;
+
+use fames::appmul::generate_library;
+use fames::calibrate::{self, CalibConfig};
+use fames::pipeline::{self, FamesConfig, Session};
+use fames::runtime::Runtime;
+use fames::sensitivity::{estimate_table, HessianMode};
+
+fn ready() -> Option<(Rc<Runtime>, String)> {
+    let root = pipeline::artifacts_root();
+    if !std::path::Path::new(&root).join("resnet8_w4a4/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Rc::new(Runtime::cpu().expect("pjrt")), root))
+}
+
+/// Short but real training run: loss must drop substantially.
+#[test]
+fn training_reduces_loss() {
+    let Some((rt, root)) = ready() else { return };
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 11).unwrap();
+    let losses = s.train(200, 0.01).unwrap();
+    let head: f64 = losses[..20].iter().sum::<f64>() / 20.0;
+    let tail: f64 = losses[losses.len() - 20..].iter().sum::<f64>() / 20.0;
+    assert!(tail < head * 0.9, "no learning: {head:.3} → {tail:.3}");
+}
+
+/// L1 validation: the Pallas-kernel artifact must agree with the jnp-path
+/// artifact on identical inputs (loss and accuracy).
+#[test]
+fn pallas_and_jnp_paths_agree() {
+    let Some((rt, root)) = ready() else { return };
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
+    // trained params if available, otherwise fresh init is fine — the
+    // equivalence must hold regardless
+    let _ = s.load_params(Session::state_path(&root, "resnet8"));
+    s.init_act_ranges().unwrap();
+    // inject a real AppMul error so the LUT path is actually exercised
+    let lib = generate_library(&[(4, 4)], 0);
+    let am = lib
+        .for_bits(4, 4)
+        .into_iter()
+        .find(|m| !m.is_exact())
+        .unwrap();
+    let e_list = (0..s.art.manifest.layers.len())
+        .map(|_| am.error_tensor())
+        .collect();
+    s.set_selection(e_list).unwrap();
+    let jnp = s.evaluate(1).unwrap();
+    let pallas = s.evaluate_pallas(1).unwrap();
+    assert!(
+        (jnp.loss - pallas.loss).abs() < 1e-3 * (1.0 + jnp.loss.abs()),
+        "loss mismatch: jnp {} vs pallas {}",
+        jnp.loss,
+        pallas.loss
+    );
+    assert_eq!(jnp.accuracy, pallas.accuracy, "accuracy mismatch");
+}
+
+/// Estimation → selection → calibration composes and respects the budget.
+#[test]
+fn mini_pipeline_respects_energy_budget() {
+    let Some((rt, root)) = ready() else { return };
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
+    let cfg = FamesConfig {
+        artifact_root: root.clone(),
+        train_steps: 150,
+        ..FamesConfig::default()
+    };
+    pipeline::ensure_trained(&mut s, &cfg).unwrap();
+    s.init_act_ranges().unwrap();
+    let lib = pipeline::library_for(&s.art.manifest, 0);
+    let (_est, table) =
+        estimate_table(&mut s, &lib, 1, HessianMode::Rank1 { iters: 2 }).unwrap();
+    // Ω table is clamped non-negative with exact == 0
+    for row in &table.values {
+        for &v in row {
+            assert!(v >= 0.0 && v.is_finite());
+        }
+    }
+    let energy = fames::energy::EnergyModel::new(&s.art.manifest, &lib);
+    let (choices, sol) = pipeline::select_ilp(&table, &energy, &lib, 0.6).unwrap();
+    let selection: Vec<&fames::appmul::AppMul> = choices
+        .iter()
+        .zip(&sol.picks)
+        .map(|(row, &i)| row[i])
+        .collect();
+    let ratio = energy.ratio_vs_exact(&selection).unwrap();
+    assert!(ratio <= 0.6 + 1e-9, "budget violated: {ratio}");
+
+    s.set_selection(pipeline::selection_tensors(&choices, &sol.picks))
+        .unwrap();
+    let before = s.evaluate(1).unwrap();
+    assert!(before.loss.is_finite());
+    // calibration must never make the quantile scales worse than the
+    // incumbent (by construction) and must leave the model evaluable
+    let ccfg = CalibConfig {
+        epochs: 1,
+        samples: 64,
+        ..CalibConfig::default()
+    };
+    calibrate::calibrate(&mut s, &ccfg).unwrap();
+    let after = s.evaluate(1).unwrap();
+    assert!(after.loss.is_finite());
+}
+
+/// The hvp/quad_e artifacts agree: ½·e·(H e) from hvp_e must equal the
+/// batched quad_e output (they are two lowerings of the same Gauss–Newton
+/// quadratic).
+#[test]
+fn quad_e_matches_hvp_quadratic() {
+    let Some((rt, root)) = ready() else { return };
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 3).unwrap();
+    let _ = s.load_params(Session::state_path(&root, "resnet8"));
+    s.init_act_ranges().unwrap();
+    if !s.has_quad_e() {
+        eprintln!("skipping: artifact set has no quad_e");
+        return;
+    }
+    let lib = generate_library(&[(4, 4)], 0);
+    let am = lib.for_bits(4, 4)[2];
+    let n = s.art.manifest.layers.len();
+    let layer = 2;
+    let rvecs: Vec<_> = (0..n)
+        .map(|j| {
+            if j == layer {
+                am.error_tensor()
+            } else {
+                fames::tensor::Tensor::zeros(&[s.art.manifest.layers[j].e_len()])
+            }
+        })
+        .collect();
+    let quads = s.quad_e(&rvecs, 0).unwrap();
+    let hr = s.hvp_e(&rvecs, 0).unwrap();
+    let via_hvp = 0.5 * am.error_tensor().dot(&hr[layer]).unwrap();
+    let rel = (quads[layer] - via_hvp).abs() / (via_hvp.abs() + 1e-9);
+    assert!(
+        rel < 1e-2,
+        "quad_e {} vs hvp quadratic {} (rel {rel})",
+        quads[layer],
+        via_hvp
+    );
+    // other layers' probes were zero ⇒ zero quadratic
+    for (j, &q) in quads.iter().enumerate() {
+        if j != layer {
+            assert!(q.abs() < 1e-6, "layer {j}: {q}");
+        }
+    }
+}

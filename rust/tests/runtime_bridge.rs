@@ -1,0 +1,64 @@
+//! Integration test for the AOT bridge: load an HLO-text artifact produced
+//! by the jax compile path and execute it through the PJRT runtime.
+//!
+//! Skips (with a message) when the artifact is absent so `cargo test` stays
+//! green before `make artifacts`.
+
+use fames::runtime::Runtime;
+use fames::tensor::Tensor;
+
+fn spike_path() -> Option<std::path::PathBuf> {
+    // Allow both the dev spike location and the built artifact tree.
+    for p in ["/tmp/spike.hlo.txt", "artifacts/spike/spike.hlo.txt"] {
+        let pb = std::path::PathBuf::from(p);
+        if pb.exists() {
+            return Some(pb);
+        }
+    }
+    None
+}
+
+#[test]
+fn load_and_execute_spike_hlo() {
+    let Some(path) = spike_path() else {
+        eprintln!("skipping: spike artifact not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let exe = rt.load(&path).expect("compile spike hlo");
+
+    // Inputs mirror /tmp/spike_gen.py: x[2,3,8,8], w[4,3,3,3], e[256].
+    let n = 2 * 3 * 8 * 8;
+    let x = Tensor::new(
+        vec![2, 3, 8, 8],
+        (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.3).collect(),
+    )
+    .unwrap();
+    let w = Tensor::new(
+        vec![4, 3, 3, 3],
+        (0..4 * 3 * 3 * 3).map(|i| ((i % 5) as f32 - 2.0) * 0.1).collect(),
+    )
+    .unwrap();
+    let mut e = Tensor::zeros(&[256]);
+    e.data_mut()[3 * 16 + 4] = 2.0; // pair (x̂=3, ŵ=4) occurs for these inputs
+
+    let out = exe.run(&[x.clone(), w.clone(), e.clone()]).expect("execute");
+    assert_eq!(out.len(), 3, "fwd returns (loss, sum, head)");
+    assert_eq!(out[0].shape(), &[] as &[usize]);
+    assert!(out[0].item().unwrap().is_finite());
+
+    // Error-matrix linearity: injecting a LUT error must change the output,
+    // and E=0 must reproduce the exact-path result.
+    let out0 = exe.run(&[x.clone(), w.clone(), Tensor::zeros(&[256])]).unwrap();
+    let out2 = exe.run(&[x, w, e]).unwrap();
+    assert_eq!(out2[0].item().unwrap(), out[0].item().unwrap(), "determinism");
+    // (loss with E) != (loss without E) unless the pair (2,5)≡37 never occurs;
+    // with these dense inputs it does occur.
+    assert_ne!(out0[0].item().unwrap(), out2[0].item().unwrap());
+
+    // Compile cache: same path returns the same executable.
+    assert_eq!(rt.cache_len(), 1);
+    let exe2 = rt.load(&path).unwrap();
+    assert_eq!(rt.cache_len(), 1);
+    assert!(exe2.stats().calls >= 3);
+}
