@@ -1,76 +1,51 @@
-//! Bench: PJRT runtime hot paths — HLO-text compile, literal conversion,
-//! and end-to-end executable dispatch latency (the L3 request path).
-//!
-//! Skips (with a message) when `make artifacts` has not run.
+//! Bench: runtime hot paths — backend artifact load, executable dispatch,
+//! and the per-call overhead of the `ExecBackend` seam (the L3 request
+//! path). Runs on the native backend against a self-generated synthetic
+//! artifact set, so it works on any machine.
 
 mod bench_util;
 
 use bench_util::{bench, black_box};
-use fames::runtime::Runtime;
-use fames::tensor::Tensor;
+use fames::runtime::backend::native::{
+    template_inputs, write_synthetic_artifacts, SyntheticSpec,
+};
+use fames::runtime::{ArtifactSet, Runtime};
 
 fn main() -> anyhow::Result<()> {
-    let root = fames::pipeline::artifacts_root();
-    let spike = std::path::Path::new(&root).join("spike/spike.hlo.txt");
-    if !spike.exists() {
-        println!("skipping runtime benches: {} not built (run `make artifacts`)", spike.display());
-        return Ok(());
-    }
-    let rt = Runtime::cpu()?;
+    let root = std::env::temp_dir().join(format!("fames-bench-rt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+    let dir = write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4"))?;
+    let set = ArtifactSet::open(&dir)?;
+    let rt = Runtime::native();
 
-    // compile latency (fresh runtime each time to defeat the cache)
-    bench("compile_hlo_text/spike", 1, 5, || {
-        let rt2 = Runtime::cpu().unwrap();
-        black_box(rt2.load(&spike).unwrap());
+    // load latency (fresh runtime each time to defeat the cache)
+    let fwd_path = set.exe_path("fwd")?;
+    bench("backend_load/native_fwd", 2, 50, || {
+        let rt2 = Runtime::native();
+        black_box(rt2.load(&fwd_path).unwrap());
     });
 
-    let exe = rt.load(&spike)?;
-    let x = Tensor::new(vec![2, 3, 8, 8], vec![0.3; 2 * 3 * 8 * 8]).unwrap();
-    let w = Tensor::new(vec![4, 3, 3, 3], vec![0.1; 4 * 27]).unwrap();
-    let e = Tensor::zeros(&[256]);
-    bench("execute/spike_conv", 10, 100, || {
-        black_box(exe.run(black_box(&[x.clone(), w.clone(), e.clone()])).unwrap());
+    // cached load (cache-hit path)
+    rt.load(&fwd_path)?;
+    bench("backend_load_cached/native_fwd", 10, 200, || {
+        black_box(rt.load(&fwd_path).unwrap());
     });
 
-    // tensor⇄literal conversion overhead in isolation
-    let big = Tensor::zeros(&[128, 3, 16, 16]);
-    bench("tensor_to_literal/128x3x16x16", 10, 200, || {
-        black_box(big.to_literal().unwrap());
-    });
-    let lit = big.to_literal()?;
-    bench("literal_to_tensor/128x3x16x16", 10, 200, || {
-        black_box(Tensor::from_literal(black_box(&lit)).unwrap());
+    // end-to-end dispatch of the eval-batch forward pass
+    let exe = rt.load(&fwd_path)?;
+    let inputs = template_inputs(&set.manifest, "fwd")?;
+    bench("execute/native_fwd_b64", 3, 30, || {
+        black_box(exe.run(black_box(&inputs)).unwrap());
     });
 
-    // a real model fwd, if built
-    let art = std::path::Path::new(&root).join("resnet8_w4a4");
-    if art.join("manifest.json").exists() {
-        use fames::runtime::ArtifactSet;
-        let set = ArtifactSet::open(&art)?;
-        let exe = rt.load(set.exe_path("fwd")?)?;
-        // zero-filled inputs matching the manifest contract
-        let mut inputs: Vec<Tensor> = Vec::new();
-        for p in &set.manifest.params {
-            inputs.push(Tensor::zeros(&p.shape));
-        }
-        let n = set.manifest.layers.len();
-        for _ in 0..n {
-            inputs.push(Tensor::scalar(4.0));
-            inputs.push(Tensor::scalar(4.0));
-        }
-        for l in &set.manifest.layers {
-            inputs.push(Tensor::scalar(0.1));
-            inputs.push(Tensor::scalar(0.0));
-            let _ = l;
-        }
-        for l in &set.manifest.layers {
-            inputs.push(Tensor::zeros(&[l.e_len()]));
-        }
-        inputs.push(Tensor::zeros(&[set.manifest.eval_batch, 3, 16, 16]));
-        inputs.push(Tensor::zeros(&[set.manifest.eval_batch]));
-        bench("execute/resnet8_w4a4_fwd_b128", 2, 10, || {
-            black_box(exe.run(black_box(&inputs)).unwrap());
-        });
-    }
+    // estimation primitives: grad_e dispatch
+    let grad_exe = rt.load(set.exe_path("grad_e")?)?;
+    let ginputs = template_inputs(&set.manifest, "grad_e")?;
+    bench("execute/native_grad_e_b16", 3, 50, || {
+        black_box(grad_exe.run(black_box(&ginputs)).unwrap());
+    });
+
+    let _ = std::fs::remove_dir_all(&root);
     Ok(())
 }

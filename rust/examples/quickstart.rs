@@ -7,17 +7,35 @@
 //! reporting the paper's headline quantities.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first.)
+//!
+//! On the default native backend a synthetic artifact set is generated
+//! automatically; with `FAMES_BACKEND=pjrt` this drives the real AOT
+//! artifacts (requires `make artifacts` first).
 
 use std::rc::Rc;
 
 use fames::pipeline::{self, FamesConfig, Session};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
 use fames::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let root = pipeline::artifacts_root();
-    let rt = Rc::new(Runtime::cpu()?);
-    println!("PJRT platform: {}", rt.platform());
+    let mut root = pipeline::artifacts_root();
+    let rt = Rc::new(Runtime::from_env()?);
+    println!("execution backend: {}", rt.platform());
+    // Auto-generate a synthetic set only into a root that holds no artifact
+    // sets at all (and only when the user didn't point FAMES_ARTIFACTS at a
+    // tree of their own) — never plant stubs inside a real AOT tree.
+    let root_has_sets = std::fs::read_dir(&root)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .any(|e| e.path().join("manifest.json").is_file())
+        })
+        .unwrap_or(false);
+    if rt.platform() == "native" && !root_has_sets && std::env::var("FAMES_ARTIFACTS").is_err() {
+        let dir = write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4"))?;
+        println!("generated synthetic artifact set {}", dir.display());
+        root = pipeline::artifacts_root();
+    }
 
     // ---- 1. train the fp32 baseline from scratch ----
     let mut session = Session::open(rt.clone(), &root, "resnet8", "w4a4", 0)?;

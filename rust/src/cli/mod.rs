@@ -30,6 +30,8 @@ COMMANDS
   pipeline     full flow: estimate → ILP select → calibrate → evaluate
   train        fp32 pre-train and cache parameters (steps=, train_lr=)
   evaluate     evaluate the quantized-exact model (E = 0)
+  synth        write a synthetic artifact set for the native backend
+               (model=resnet8 cfg=w4a4 out=artifacts)
   library      print the AppMul library (bits=4 or bits=4x8)
   bits         HAWQ-like mixed-precision proposal (budget=0.1 vs 8-bit)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
@@ -41,6 +43,11 @@ COMMON KEYS
   artifacts=PATH  seed=N  r_energy=0.7  est_batches=2  hessian=exact|rank1|off
   eval_batches=4  train_steps=500  train_lr=0.05
   calib_epochs=3  calib_samples=256  calib_lr=0.1  q_step=0.02  q_max=0.3
+
+ENVIRONMENT
+  FAMES_BACKEND=native|pjrt   execution backend (default native; pjrt needs
+                              a build with --features pjrt plus real XLA)
+  FAMES_ARTIFACTS=PATH        artifact root override
 ";
 
 /// Run the CLI. Returns a process exit code.
@@ -55,6 +62,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "pipeline" => cmd_pipeline(rest),
         "train" => cmd_train(rest),
         "evaluate" => cmd_evaluate(rest),
+        "synth" => cmd_synth(rest),
         "library" => cmd_library(rest),
         "bits" => cmd_bits(rest),
         "experiment" => crate::experiments::run_cli(rest),
@@ -76,7 +84,7 @@ fn base_config(args: &[String]) -> Result<FamesConfig> {
 
 fn cmd_pipeline(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
-    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
     println!("== FAMES pipeline: {} / {} (R_energy = {}) ==", cfg.model, cfg.cfg, cfg.r_energy);
     let session0 = Session::open(rt.clone(), &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     let library = pipeline::library_for(&session0.art.manifest, cfg.seed);
@@ -104,7 +112,7 @@ fn cmd_pipeline(args: &[String]) -> Result<i32> {
 
 fn cmd_train(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
-    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     let curve = crate::train::train(&mut session, cfg.train_steps, cfg.train_lr)?;
     let (head, tail) = curve.head_tail(20);
@@ -117,7 +125,7 @@ fn cmd_train(args: &[String]) -> Result<i32> {
 
 fn cmd_evaluate(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
-    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     pipeline::ensure_trained(&mut session, &cfg)?;
     session.init_act_ranges()?;
@@ -132,6 +140,25 @@ fn cmd_evaluate(args: &[String]) -> Result<i32> {
         r.loss,
         r.samples
     );
+    Ok(0)
+}
+
+fn cmd_synth(args: &[String]) -> Result<i32> {
+    use crate::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+    let mut model = "resnet8".to_string();
+    let mut cfg = "w4a4".to_string();
+    let mut out = "artifacts".to_string();
+    for a in args {
+        match a.split_once('=') {
+            Some(("model", v)) => model = v.to_string(),
+            Some(("cfg", v)) => cfg = v.to_string(),
+            Some(("out", v)) => out = v.to_string(),
+            _ => bail!("synth takes model=, cfg= and out= (got '{a}')"),
+        }
+    }
+    let dir = write_synthetic_artifacts(&out, &SyntheticSpec::small(&model, &cfg))?;
+    println!("wrote synthetic artifact set {}", dir.display());
+    println!("try: fames pipeline model={model} cfg={cfg} artifacts={out}");
     Ok(0)
 }
 
@@ -188,7 +215,7 @@ fn cmd_bits(args: &[String]) -> Result<i32> {
         }
     }
     let cfg = base_config(&kv)?;
-    let rt = Rc::new(crate::runtime::Runtime::cpu()?);
+    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     pipeline::ensure_trained(&mut session, &cfg)?;
     let lib = generate_library(&[(2, 2), (3, 3), (4, 4), (8, 8)], cfg.seed);

@@ -10,8 +10,9 @@ use crate::pipeline::{self, FamesConfig, Session};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
-/// Shared state: one PJRT runtime, the artifact root, a results directory,
-/// and a scale knob for quick runs.
+/// Shared state: one execution runtime (native or PJRT, per
+/// `FAMES_BACKEND`), the artifact root, a results directory, and a scale
+/// knob for quick runs.
 pub struct ExpCtx {
     pub rt: Rc<Runtime>,
     pub root: String,
@@ -27,7 +28,7 @@ impl ExpCtx {
         let results = PathBuf::from("results");
         std::fs::create_dir_all(&results)?;
         Ok(ExpCtx {
-            rt: Rc::new(Runtime::cpu()?),
+            rt: Rc::new(Runtime::from_env()?),
             root,
             results,
             fast: std::env::var("FAMES_FAST").map(|v| v == "1").unwrap_or(false),

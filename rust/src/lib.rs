@@ -13,6 +13,23 @@
 //!   and the experiment harness reproducing every table and figure of the
 //!   paper. Python never runs on this path.
 //!
+//! # Execution backends
+//!
+//! Execution goes through the [`runtime::backend::ExecBackend`] seam; the
+//! crate ships two implementations:
+//!
+//! | backend  | cargo feature    | artifacts                | use case |
+//! |----------|------------------|--------------------------|----------|
+//! | `native` | (default, none)  | synthetic sets (`fames synth`, [`runtime::backend::native::write_synthetic_artifacts`]) | deterministic pure-Rust execution anywhere; unit/e2e tests, examples, CI |
+//! | `pjrt`   | `--features pjrt`| AOT HLO text (`make artifacts`) | real XLA execution of the jax/Pallas graphs |
+//!
+//! Select at runtime with `FAMES_BACKEND=native|pjrt` (default `native`).
+//! The default build has **no** XLA dependency; with `--features pjrt` the
+//! `xla` crate resolves to the in-tree API shim (`rust/vendor/xla`), which
+//! type-checks without libxla — swap it for a real xla-rs checkout to run
+//! PJRT. Build/test entry points (tier-1): `cargo build --release &&
+//! cargo test -q` from the repo root; see `rust/README.md`.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 

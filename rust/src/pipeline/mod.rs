@@ -104,13 +104,14 @@ pub fn ensure_trained(session: &mut Session, cfg: &FamesConfig) -> Result<f64> {
     let t0 = std::time::Instant::now();
     let losses = session.train(cfg.train_steps, cfg.train_lr)?;
     let dt = t0.elapsed().as_secs_f64();
-    let tail: f64 = losses.iter().rev().take(20).sum::<f64>() / 20.0_f64.min(losses.len() as f64);
+    // An empty loss vector (train_steps = 0) used to produce 0/0 = NaN here.
+    let tail = match crate::util::tail_mean(&losses, 20) {
+        Some(t) => format!("{t:.3}"),
+        None => "n/a".to_string(),
+    };
     println!(
-        "  pre-trained {} for {} steps in {:.1}s (final loss ≈ {:.3})",
-        cfg.model,
-        cfg.train_steps,
-        dt,
-        tail
+        "  pre-trained {} for {} steps in {:.1}s (final loss ≈ {})",
+        cfg.model, cfg.train_steps, dt, tail
     );
     session.save_params(&path)?;
     Ok(dt)
@@ -244,14 +245,26 @@ pub fn library_for(manifest: &crate::runtime::Manifest, seed: u64) -> Library {
     crate::appmul::generate_library(&bit_pairs_for(manifest), seed)
 }
 
+/// Whether `dir` holds at least one artifact set (`*/manifest.json`).
+fn has_artifact_set(dir: &Path) -> bool {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .any(|e| e.path().join("manifest.json").is_file())
+        })
+        .unwrap_or(false)
+}
+
 /// Locate the artifacts root: `$FAMES_ARTIFACTS`, `./artifacts`, or the
-/// repo-relative default — the first that exists.
+/// repo-relative default — the first that actually contains an artifact set
+/// (a subdirectory with a `manifest.json`), so a stray empty/unrelated
+/// `artifacts/` directory cannot hijack resolution.
 pub fn artifacts_root() -> String {
     if let Ok(p) = std::env::var("FAMES_ARTIFACTS") {
         return p;
     }
     for cand in ["artifacts", "../artifacts", "/root/repo/artifacts"] {
-        if Path::new(cand).join("spike").exists() || Path::new(cand).read_dir().map(|mut d| d.next().is_some()).unwrap_or(false) {
+        if has_artifact_set(Path::new(cand)) {
             return cand.to_string();
         }
     }

@@ -1,0 +1,41 @@
+//! Pluggable execution backends — the `ExecBackend` seam.
+//!
+//! [`crate::runtime::Runtime`] is backend-agnostic: it owns a compile cache
+//! and per-executable stats, and delegates artifact loading/execution to an
+//! [`ExecBackend`]. Two implementations ship:
+//!
+//! * [`native`] (default) — pure Rust, deterministic, zero external
+//!   dependencies. Executes **synthetic artifact sets** (see
+//!   [`native::write_synthetic_artifacts`]) that follow the same
+//!   `manifest.json` contract as the AOT/XLA path, so the full FAMES
+//!   estimate → select → calibrate loop runs on any machine.
+//! * [`pjrt`] (`--features pjrt`) — the XLA/PJRT path for real AOT-compiled
+//!   HLO-text artifacts produced by `python/compile/aot.py`.
+//!
+//! Later scaling work (sharded execution, batched dispatch, GPU clients)
+//! plugs in as additional `ExecBackend` implementations without touching the
+//! pipeline layers.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// A loaded (compiled) executable, ready to run on f32 tensors.
+pub trait LoadedExec {
+    /// Execute on f32 inputs; returns the output tensors in manifest order.
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: loads artifacts into [`LoadedExec`] handles.
+pub trait ExecBackend {
+    /// Short backend identifier (`"native"`, `"pjrt"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Load/compile the artifact at `path`.
+    fn load(&self, path: &Path) -> Result<Box<dyn LoadedExec>>;
+}

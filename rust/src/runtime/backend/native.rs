@@ -1,0 +1,1060 @@
+//! Pure-Rust execution backend (the default).
+//!
+//! Executes **synthetic artifact sets**: directories with the same
+//! `manifest.json` contract as the AOT/XLA path, but whose "executables" are
+//! tiny JSON stubs interpreted by this backend instead of compiled HLO. The
+//! backend implements every executable kind the pipeline invokes (`train`,
+//! `fwd`, `fwd_pallas`, `acts_float`, `fwd_acts`, `grad_e`, `hvp_e`,
+//! `quad_e`, `calib`, `retrain`) over a deterministic proxy model:
+//!
+//! * the **task model** is a linear softmax classifier over the flattened
+//!   synthetic-CIFAR images (`fc.w`, `fc.b`) — genuinely trainable, so the
+//!   fp32 pre-training loop converges for real;
+//! * each manifest **layer** contributes an analytic loss penalty
+//!   `gₖ·eₖ + ½ eₖᵀ diag(hₖ) eₖ` in its AppMul error vector, plus
+//!   requantization-MSE and LWC terms in `(s,b)` / `(γ,β)` — so perturbation
+//!   estimation (`grad_e`/`hvp_e`/`quad_e`), ILP selection and Algorithm-1
+//!   calibration all exercise their true contracts, and the Taylor estimate
+//!   is *exact* by construction (useful for seam tests);
+//! * evaluation accuracy degrades with the total penalty via deterministic
+//!   per-sample logit noise, reproducing the paper-shaped
+//!   quantized → approximate → calibrated accuracy ordering.
+//!
+//! Everything is a pure function of `(backend seed, manifest, inputs)`:
+//! identical runs produce bit-identical outputs on every platform ([`Pcg`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{ExecBackend, LoadedExec};
+use crate::json::Json;
+use crate::rng::Pcg;
+use crate::runtime::{ExeSpec, Manifest};
+use crate::tensor::Tensor;
+
+/// Synthetic activation samples per layer (quantile/calibration substrate).
+const N_ACT: usize = 256;
+/// First-order (gradient) scale of the per-layer error penalty.
+const G0: f64 = 0.4;
+/// Curvature scale of the per-layer error penalty.
+const H0: f64 = 30.0;
+/// Weight of the requantization-MSE penalty.
+const CQ: f64 = 1.0;
+/// Weight of the LWC (γ/β) penalty.
+const CW: f64 = 0.5;
+/// σ(γ) target of the LWC penalty (γ descends toward σ⁻¹(0.9)).
+const LWC_TARGET: f64 = 0.9;
+/// Activation jitter per unit of relative E-matrix RMS error.
+const ACT_NOISE: f64 = 2.0;
+/// Logit noise per √(total penalty) — couples penalty to accuracy.
+const ACC_NOISE: f64 = 0.8;
+/// Format marker written into every synthetic executable stub; `load`
+/// refuses artifacts without it so real AOT/HLO trees are never silently
+/// "executed" with synthetic numerics.
+const NATIVE_FORMAT: &str = "fames-native-synthetic-v1";
+
+/// Deterministic pure-Rust backend.
+pub struct NativeBackend {
+    seed: u64,
+}
+
+impl NativeBackend {
+    pub fn new(seed: u64) -> Self {
+        NativeBackend { seed }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self, path: &Path) -> Result<Box<dyn LoadedExec>> {
+        let dir = path
+            .parent()
+            .with_context(|| format!("artifact {} has no parent dir", path.display()))?;
+        let mpath = dir.join("manifest.json");
+        if !mpath.is_file() {
+            bail!(
+                "{}: no manifest.json beside the artifact — the native backend executes \
+                 synthetic artifact sets (write_synthetic_artifacts); HLO-text artifacts \
+                 need the `pjrt` backend (--features pjrt)",
+                path.display()
+            );
+        }
+        let manifest = Manifest::load(&mpath)?;
+        let fname = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .with_context(|| format!("bad artifact path {}", path.display()))?;
+        let (name, spec) = manifest
+            .executables
+            .iter()
+            .find(|(_, s)| s.file == fname)
+            .map(|(n, s)| (n.clone(), s.clone()))
+            .with_context(|| format!("{fname} is not declared in {}", mpath.display()))?;
+        // Refuse anything that is not a synthetic stub (e.g. a real HLO-text
+        // artifact whose manifest happens to parse) instead of fabricating
+        // synthetic results for it.
+        let stub_json = Json::load(path).ok();
+        if stub_json
+            .as_ref()
+            .and_then(|j| j.opt("format"))
+            .and_then(|f| f.as_str().ok())
+            != Some(NATIVE_FORMAT)
+        {
+            bail!(
+                "{}: not a native synthetic artifact (expected a '{NATIVE_FORMAT}' JSON \
+                 stub) — real AOT/HLO artifacts need the pjrt backend \
+                 (--features pjrt, FAMES_BACKEND=pjrt)",
+                path.display()
+            );
+        }
+        let kind = Kind::parse(&name)?;
+        Ok(Box::new(NativeExec {
+            manifest,
+            spec,
+            kind,
+            seed: self.seed,
+        }))
+    }
+}
+
+/// The executable kinds of the artifact contract (see `pipeline::session`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Train,
+    /// `fwd` and `fwd_pallas` — identical numerics by contract.
+    Fwd,
+    ActsFloat,
+    FwdActs,
+    GradE,
+    HvpE,
+    QuadE,
+    Calib,
+    Retrain,
+}
+
+impl Kind {
+    fn parse(name: &str) -> Result<Kind> {
+        Ok(match name {
+            "train" => Kind::Train,
+            "fwd" | "fwd_pallas" => Kind::Fwd,
+            "acts_float" => Kind::ActsFloat,
+            "fwd_acts" => Kind::FwdActs,
+            "grad_e" => Kind::GradE,
+            "hvp_e" => Kind::HvpE,
+            "quad_e" => Kind::QuadE,
+            "calib" => Kind::Calib,
+            "retrain" => Kind::Retrain,
+            other => bail!("native backend: unknown executable kind '{other}'"),
+        })
+    }
+}
+
+/// One loaded native executable: manifest + contract + deterministic seed.
+struct NativeExec {
+    manifest: Manifest,
+    spec: ExeSpec,
+    kind: Kind,
+    seed: u64,
+}
+
+/// Inputs regrouped per the manifest's input-group ordering.
+#[derive(Default)]
+struct Parsed<'a> {
+    params: Vec<&'a Tensor>,
+    opt_state: Vec<&'a Tensor>,
+    lwc: Vec<(f32, f32)>,
+    act_q: Vec<(f32, f32)>,
+    e_list: Vec<&'a Tensor>,
+    rvecs: Vec<&'a Tensor>,
+    images: Option<&'a Tensor>,
+    labels: Option<&'a Tensor>,
+    lr: f32,
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn logsumexp(row: &[f64]) -> f64 {
+    let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
+}
+
+fn argmax(row: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn lwc_penalty(gamma: f32, beta: f32) -> f64 {
+    let dg = sigmoid(gamma as f64) - LWC_TARGET;
+    let db = sigmoid(beta as f64) - LWC_TARGET;
+    CW * (dg * dg + db * db)
+}
+
+fn lwc_grads(gamma: f32, beta: f32) -> (f64, f64) {
+    let sg = sigmoid(gamma as f64);
+    let sb = sigmoid(beta as f64);
+    (
+        CW * 2.0 * (sg - LWC_TARGET) * sg * (1.0 - sg),
+        CW * 2.0 * (sb - LWC_TARGET) * sb * (1.0 - sb),
+    )
+}
+
+impl NativeExec {
+    fn parse_inputs<'a>(&self, inputs: &'a [Tensor]) -> Result<Parsed<'a>> {
+        let np = self.manifest.params.len();
+        let nl = self.manifest.layers.len();
+        let mut p = Parsed::default();
+        let mut pos = 0usize;
+        let need = |pos: usize, n: usize, len: usize, g: &str| -> Result<()> {
+            ensure!(pos + n <= len, "native backend: input underflow in group '{g}'");
+            Ok(())
+        };
+        for g in &self.spec.inputs {
+            match g.as_str() {
+                "params" => {
+                    need(pos, np, inputs.len(), g)?;
+                    p.params = inputs[pos..pos + np].iter().collect();
+                    pos += np;
+                }
+                "opt_state" => {
+                    need(pos, np, inputs.len(), g)?;
+                    p.opt_state = inputs[pos..pos + np].iter().collect();
+                    pos += np;
+                }
+                "lwc" => {
+                    need(pos, 2 * nl, inputs.len(), g)?;
+                    for k in 0..nl {
+                        p.lwc
+                            .push((inputs[pos + 2 * k].item()?, inputs[pos + 2 * k + 1].item()?));
+                    }
+                    pos += 2 * nl;
+                }
+                "act_q" => {
+                    need(pos, 2 * nl, inputs.len(), g)?;
+                    for k in 0..nl {
+                        p.act_q
+                            .push((inputs[pos + 2 * k].item()?, inputs[pos + 2 * k + 1].item()?));
+                    }
+                    pos += 2 * nl;
+                }
+                "e_list" => {
+                    need(pos, nl, inputs.len(), g)?;
+                    p.e_list = inputs[pos..pos + nl].iter().collect();
+                    pos += nl;
+                }
+                "rvecs" => {
+                    need(pos, nl, inputs.len(), g)?;
+                    p.rvecs = inputs[pos..pos + nl].iter().collect();
+                    pos += nl;
+                }
+                "images_train" | "images_eval" => {
+                    need(pos, 1, inputs.len(), g)?;
+                    p.images = Some(&inputs[pos]);
+                    pos += 1;
+                }
+                "labels_train" | "labels_eval" => {
+                    need(pos, 1, inputs.len(), g)?;
+                    p.labels = Some(&inputs[pos]);
+                    pos += 1;
+                }
+                "lr" => {
+                    need(pos, 1, inputs.len(), g)?;
+                    p.lr = inputs[pos].item()?;
+                    pos += 1;
+                }
+                other => bail!("native backend: unknown input group '{other}'"),
+            }
+        }
+        ensure!(
+            pos == inputs.len(),
+            "native backend: {} inputs, contract consumes {pos}",
+            inputs.len()
+        );
+        Ok(p)
+    }
+
+    /// The proxy task model's weights: manifest params [fc.w [nc,D], fc.b [nc]].
+    fn wb<'a>(&self, p: &Parsed<'a>) -> Result<(&'a Tensor, &'a Tensor)> {
+        ensure!(
+            p.params.len() == 2,
+            "native model expects params [fc.w, fc.b], got {}",
+            p.params.len()
+        );
+        let (w, b) = (p.params[0], p.params[1]);
+        let nc = self.manifest.num_classes;
+        let d: usize = self.manifest.image_shape.iter().product();
+        ensure!(
+            w.len() == nc * d && b.len() == nc,
+            "native model: fc.w/fc.b shapes {:?}/{:?} do not match nc={nc} D={d}",
+            w.shape(),
+            b.shape()
+        );
+        Ok((w, b))
+    }
+
+    /// Linear logits `z[s,i] = Σ_d W[i,d]·x[s,d] + b[i]` (f64 accumulation).
+    fn logits(&self, w: &Tensor, b: &Tensor, images: &Tensor) -> Result<Vec<f64>> {
+        let nc = self.manifest.num_classes;
+        let d: usize = self.manifest.image_shape.iter().product();
+        let bsz = *images.shape().first().context("images need a batch dim")?;
+        ensure!(
+            images.len() == bsz * d,
+            "images {:?} do not flatten to [B, {d}]",
+            images.shape()
+        );
+        let (wd, bd, xd) = (w.data(), b.data(), images.data());
+        let mut z = vec![0f64; bsz * nc];
+        for s in 0..bsz {
+            let x = &xd[s * d..(s + 1) * d];
+            for i in 0..nc {
+                let row = &wd[i * d..(i + 1) * d];
+                let mut acc = bd[i] as f64;
+                for (wv, xv) in row.iter().zip(x) {
+                    acc += *wv as f64 * *xv as f64;
+                }
+                z[s * nc + i] = acc;
+            }
+        }
+        Ok(z)
+    }
+
+    /// Max representable product of a layer's LUT (error normalizer).
+    fn max_product(&self, k: usize) -> f64 {
+        let l = &self.manifest.layers[k];
+        (((l.e_rows - 1) * (l.e_cols - 1)) as f64).max(1.0)
+    }
+
+    /// Per-layer analytic penalty coefficients `(g, h)` — deterministic in
+    /// `(seed, layer name, layer index)`; entries weighted by the LUT
+    /// operand product (large products matter more), normalized so the
+    /// penalty is bitwidth-independent in the *relative* error.
+    fn layer_coeffs(&self, k: usize) -> (Vec<f32>, Vec<f32>) {
+        let l = &self.manifest.layers[k];
+        let (rows, cols) = (l.e_rows, l.e_cols);
+        let len = rows * cols;
+        let maxp = self.max_product(k);
+        let mut rng = Pcg::new(self.seed ^ fnv1a(&l.name), k as u64 + 1);
+        let mut g = Vec::with_capacity(len);
+        let mut h = Vec::with_capacity(len);
+        for i in 0..len {
+            let a = (i / cols) as f64;
+            let w = (i % cols) as f64;
+            let imp = (a * w) / maxp;
+            g.push((G0 * (0.5 + rng.uniform()) * imp / (len as f64 * maxp)) as f32);
+            h.push((H0 * (0.5 + rng.uniform()) * (imp + 0.05) / (len as f64 * maxp * maxp)) as f32);
+        }
+        (g, h)
+    }
+
+    /// `gₖ·e + ½ eᵀ diag(hₖ) e` — the layer's loss penalty in its E vector.
+    fn perturb_penalty(&self, k: usize, e: &Tensor) -> Result<f64> {
+        let l = &self.manifest.layers[k];
+        ensure!(
+            e.len() == l.e_len(),
+            "layer {k} ({}): E length {} != {}",
+            l.name,
+            e.len(),
+            l.e_len()
+        );
+        let (g, h) = self.layer_coeffs(k);
+        let mut first = 0f64;
+        let mut quad = 0f64;
+        for (i, &ev) in e.data().iter().enumerate() {
+            let ev = ev as f64;
+            first += g[i] as f64 * ev;
+            quad += h[i] as f64 * ev * ev;
+        }
+        Ok(first + 0.5 * quad)
+    }
+
+    /// Fixed per-layer activation distribution (exact-model reference).
+    fn base_acts(&self, k: usize) -> Vec<f32> {
+        let mut rng = Pcg::new(self.seed ^ 0xac75_0000 ^ k as u64, 7);
+        let sigma = 0.4 + 0.15 * k as f64;
+        (0..N_ACT)
+            .map(|_| (rng.normal().abs() * sigma) as f32)
+            .collect()
+    }
+
+    /// Activations under an E selection: base + jitter ∝ relative RMS error.
+    fn approx_acts(&self, k: usize, e: &Tensor) -> Result<Vec<f32>> {
+        let l = &self.manifest.layers[k];
+        ensure!(e.len() == l.e_len(), "layer {k}: bad E length {}", e.len());
+        let mut acts = self.base_acts(k);
+        let rms = (e.data().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / e.len().max(1) as f64)
+            .sqrt();
+        let rel = rms / self.max_product(k);
+        if rel > 0.0 {
+            let sigma = 0.4 + 0.15 * k as f64;
+            let mut rng = Pcg::new(self.seed ^ 0xe000_0000 ^ k as u64, 13);
+            for a in &mut acts {
+                *a += (rel * ACT_NOISE * sigma * rng.normal()) as f32;
+            }
+        }
+        Ok(acts)
+    }
+
+    /// Requantization MSE of the layer's reference activations under (s, lo).
+    fn quant_penalty(&self, k: usize, s: f32, lo: f32) -> f64 {
+        let l = &self.manifest.layers[k];
+        let levels = ((1u64 << l.a_bits) - 1) as f64;
+        let s = (s as f64).abs().max(1e-8);
+        let lo = lo as f64;
+        let acts = self.base_acts(k);
+        let mut mse = 0.0;
+        for &v in &acts {
+            let v = v as f64;
+            let code = ((v - lo) / s).round().clamp(0.0, levels);
+            let q = s * code + lo;
+            mse += (q - v) * (q - v);
+        }
+        CQ * mse / acts.len() as f64
+    }
+
+    /// Total per-sample loss penalty of the current quant/approx state.
+    fn total_penalty(&self, p: &Parsed) -> Result<f64> {
+        let mut pen = 0.0;
+        for k in 0..self.manifest.layers.len() {
+            if let Some(e) = p.e_list.get(k) {
+                pen += self.perturb_penalty(k, e)?;
+            }
+            if let Some(&(s, lo)) = p.act_q.get(k) {
+                pen += self.quant_penalty(k, s, lo);
+            }
+            if let Some(&(g, b)) = p.lwc.get(k) {
+                pen += lwc_penalty(g, b);
+            }
+        }
+        Ok(pen)
+    }
+
+    /// `fwd`/`fwd_pallas`: (loss_sum, correct) with penalty-coupled noise.
+    fn run_fwd(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let (w, b) = self.wb(p)?;
+        let images = p.images.context("fwd: images required")?;
+        let labels = p.labels.context("fwd: labels required")?;
+        let z = self.logits(w, b, images)?;
+        let nc = self.manifest.num_classes;
+        let pen = self.total_penalty(p)?;
+        let eta = ACC_NOISE * pen.max(0.0).sqrt();
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        for (s, &lab) in labels.data().iter().enumerate() {
+            let mut row: Vec<f64> = z[s * nc..(s + 1) * nc].to_vec();
+            if eta > 0.0 {
+                let mut rng = Pcg::new(
+                    self.seed
+                        ^ (s as u64).wrapping_mul(0x9e3779b97f4a7c15)
+                        ^ ((lab as i64 as u64) << 17),
+                    29,
+                );
+                for v in &mut row {
+                    *v += eta * rng.normal();
+                }
+            }
+            let lab = lab as usize;
+            ensure!(lab < nc, "label {lab} out of range (nc={nc})");
+            loss_sum += logsumexp(&row) - row[lab];
+            if argmax(&row) == lab {
+                correct += 1.0;
+            }
+        }
+        loss_sum += labels.len() as f64 * pen;
+        Ok(vec![
+            Tensor::scalar(loss_sum as f32),
+            Tensor::scalar(correct as f32),
+        ])
+    }
+
+    /// `acts_float`: per-layer reference activations + fp32 logits.
+    fn run_acts_float(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let (w, b) = self.wb(p)?;
+        let images = p.images.context("acts_float: images required")?;
+        let z = self.logits(w, b, images)?;
+        let nc = self.manifest.num_classes;
+        let bsz = z.len() / nc;
+        let mut out: Vec<Tensor> = (0..self.manifest.layers.len())
+            .map(|k| Tensor::from_slice(&self.base_acts(k)))
+            .collect();
+        let zf: Vec<f32> = z.iter().map(|&v| v as f32).collect();
+        out.push(Tensor::new(vec![bsz, nc], zf)?);
+        Ok(out)
+    }
+
+    /// `fwd_acts`: per-layer activations under the E selection + loss_sum.
+    fn run_fwd_acts(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let nl = self.manifest.layers.len();
+        ensure!(p.e_list.len() == nl, "fwd_acts: e_list required");
+        let mut out = Vec::with_capacity(nl + 1);
+        for k in 0..nl {
+            out.push(Tensor::from_slice(&self.approx_acts(k, p.e_list[k])?));
+        }
+        let fwd = self.run_fwd(p)?;
+        out.push(fwd[0].clone());
+        Ok(out)
+    }
+
+    /// `grad_e`: mean loss + ∇_E of the penalty (= g + h⊙e).
+    fn run_grad_e(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let labels = p.labels.context("grad_e: labels required")?;
+        let nl = self.manifest.layers.len();
+        ensure!(p.e_list.len() == nl, "grad_e: e_list required");
+        let fwd = self.run_fwd(p)?;
+        let loss = fwd[0].item()? as f64 / labels.len() as f64;
+        let mut out = Vec::with_capacity(nl + 1);
+        out.push(Tensor::scalar(loss as f32));
+        for k in 0..nl {
+            let (g, h) = self.layer_coeffs(k);
+            let e = p.e_list[k];
+            ensure!(e.len() == g.len(), "grad_e: layer {k} E length {}", e.len());
+            let grad: Vec<f32> = e
+                .data()
+                .iter()
+                .enumerate()
+                .map(|(i, &ev)| g[i] + h[i] * ev)
+                .collect();
+            out.push(Tensor::from_slice(&grad));
+        }
+        Ok(out)
+    }
+
+    /// `hvp_e`: diag Hessian-vector products `hₖ ⊙ rₖ` (cross-layer zero).
+    fn run_hvp_e(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let nl = self.manifest.layers.len();
+        ensure!(p.rvecs.len() == nl, "hvp_e: rvecs required");
+        let mut out = Vec::with_capacity(nl);
+        for k in 0..nl {
+            let (_, h) = self.layer_coeffs(k);
+            let r = p.rvecs[k];
+            ensure!(r.len() == h.len(), "hvp_e: layer {k} r length {}", r.len());
+            let hv: Vec<f32> = r.data().iter().enumerate().map(|(i, &rv)| h[i] * rv).collect();
+            out.push(Tensor::from_slice(&hv));
+        }
+        Ok(out)
+    }
+
+    /// `quad_e`: per-layer Gauss–Newton quadratics `½ rₖ·(hₖ ⊙ rₖ)`.
+    fn run_quad_e(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let nl = self.manifest.layers.len();
+        ensure!(p.rvecs.len() == nl, "quad_e: rvecs required");
+        let mut out = Vec::with_capacity(nl);
+        for k in 0..nl {
+            let (_, h) = self.layer_coeffs(k);
+            let r = p.rvecs[k];
+            ensure!(r.len() == h.len(), "quad_e: layer {k} r length {}", r.len());
+            let q: f64 = r
+                .data()
+                .iter()
+                .enumerate()
+                .map(|(i, &rv)| 0.5 * h[i] as f64 * rv as f64 * rv as f64)
+                .sum();
+            out.push(Tensor::scalar(q as f32));
+        }
+        Ok(out)
+    }
+
+    /// `calib`: mean loss + analytic ∂loss/∂(γ,β) per layer.
+    fn run_calib(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let labels = p.labels.context("calib: labels required")?;
+        let nl = self.manifest.layers.len();
+        ensure!(p.lwc.len() == nl, "calib: lwc required");
+        let fwd = self.run_fwd(p)?;
+        let loss = fwd[0].item()? as f64 / labels.len() as f64;
+        let mut out = Vec::with_capacity(1 + 2 * nl);
+        out.push(Tensor::scalar(loss as f32));
+        for &(g, b) in &p.lwc {
+            let (dg, db) = lwc_grads(g, b);
+            out.push(Tensor::scalar(dg as f32));
+            out.push(Tensor::scalar(db as f32));
+        }
+        Ok(out)
+    }
+
+    /// Softmax cross-entropy gradients of the linear model, batch-averaged.
+    /// Returns (mean loss, dW, db).
+    fn ce_grads(
+        &self,
+        w: &Tensor,
+        b: &Tensor,
+        images: &Tensor,
+        labels: &Tensor,
+    ) -> Result<(f64, Vec<f32>, Vec<f32>)> {
+        let nc = self.manifest.num_classes;
+        let d: usize = self.manifest.image_shape.iter().product();
+        let z = self.logits(w, b, images)?;
+        let bsz = labels.len();
+        ensure!(z.len() == bsz * nc, "logits/labels mismatch");
+        let xd = images.data();
+        let mut dw = vec![0f64; nc * d];
+        let mut db = vec![0f64; nc];
+        let mut loss = 0.0;
+        let inv_b = 1.0 / bsz as f64;
+        for (s, &lab) in labels.data().iter().enumerate() {
+            let lab = lab as usize;
+            ensure!(lab < nc, "label {lab} out of range");
+            let row = &z[s * nc..(s + 1) * nc];
+            let lse = logsumexp(row);
+            loss += lse - row[lab];
+            let x = &xd[s * d..(s + 1) * d];
+            for i in 0..nc {
+                let mut dz = (row[i] - lse).exp();
+                if i == lab {
+                    dz -= 1.0;
+                }
+                dz *= inv_b;
+                db[i] += dz;
+                let drow = &mut dw[i * d..(i + 1) * d];
+                for (dv, &xv) in drow.iter_mut().zip(x) {
+                    *dv += dz * xv as f64;
+                }
+            }
+        }
+        Ok((
+            loss * inv_b,
+            dw.iter().map(|&v| v as f32).collect(),
+            db.iter().map(|&v| v as f32).collect(),
+        ))
+    }
+
+    /// `train`: one fp32 SGD-momentum step → (params', momentum', loss).
+    fn run_train(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let (w, b) = self.wb(p)?;
+        ensure!(p.opt_state.len() == 2, "train: opt_state required");
+        let images = p.images.context("train: images required")?;
+        let labels = p.labels.context("train: labels required")?;
+        let (loss, dw, db) = self.ce_grads(w, b, images, labels)?;
+        let step = |cur: &Tensor, mom: &Tensor, grad: &[f32]| -> Result<(Tensor, Tensor)> {
+            ensure!(cur.len() == grad.len() && mom.len() == grad.len(), "train: shape drift");
+            let mut m = mom.clone();
+            for (mv, &gv) in m.data_mut().iter_mut().zip(grad) {
+                *mv = 0.9 * *mv + gv;
+            }
+            let mut nw = cur.clone();
+            for (wv, &mv) in nw.data_mut().iter_mut().zip(m.data()) {
+                *wv -= p.lr * mv;
+            }
+            Ok((nw, m))
+        };
+        let (w2, mw2) = step(w, p.opt_state[0], &dw)?;
+        let (b2, mb2) = step(b, p.opt_state[1], &db)?;
+        Ok(vec![w2, b2, mw2, mb2, Tensor::scalar(loss as f32)])
+    }
+
+    /// `retrain`: loss + STE grads on (fc.w, fc.b) + LWC grads.
+    fn run_retrain(&self, p: &Parsed) -> Result<Vec<Tensor>> {
+        let (w, b) = self.wb(p)?;
+        let images = p.images.context("retrain: images required")?;
+        let labels = p.labels.context("retrain: labels required")?;
+        let nl = self.manifest.layers.len();
+        ensure!(p.lwc.len() == nl, "retrain: lwc required");
+        let (ce, dw, db) = self.ce_grads(w, b, images, labels)?;
+        let loss = ce + self.total_penalty(p)?;
+        let mut out = Vec::with_capacity(3 + 2 * nl);
+        out.push(Tensor::scalar(loss as f32));
+        out.push(Tensor::new(w.shape().to_vec(), dw)?);
+        out.push(Tensor::new(b.shape().to_vec(), db)?);
+        for &(g, bb) in &p.lwc {
+            let (dg, dbb) = lwc_grads(g, bb);
+            out.push(Tensor::scalar(dg as f32));
+            out.push(Tensor::scalar(dbb as f32));
+        }
+        Ok(out)
+    }
+}
+
+impl LoadedExec for NativeExec {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let p = self.parse_inputs(inputs)?;
+        let out = match self.kind {
+            Kind::Train => self.run_train(&p)?,
+            Kind::Fwd => self.run_fwd(&p)?,
+            Kind::ActsFloat => self.run_acts_float(&p)?,
+            Kind::FwdActs => self.run_fwd_acts(&p)?,
+            Kind::GradE => self.run_grad_e(&p)?,
+            Kind::HvpE => self.run_hvp_e(&p)?,
+            Kind::QuadE => self.run_quad_e(&p)?,
+            Kind::Calib => self.run_calib(&p)?,
+            Kind::Retrain => self.run_retrain(&p)?,
+        };
+        ensure!(
+            out.len() == self.spec.outputs.len(),
+            "native {:?}: produced {} outputs, manifest declares {}",
+            self.kind,
+            out.len(),
+            self.spec.outputs.len()
+        );
+        Ok(out)
+    }
+}
+
+// ---- synthetic artifact generation ----
+
+/// Shape of a synthetic artifact set.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub model: String,
+    pub cfg: String,
+    /// `(a_bits, w_bits)` per substitutable layer.
+    pub layer_bits: Vec<(u32, u32)>,
+    pub num_classes: usize,
+    /// CHW.
+    pub image_shape: [usize; 3],
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl SyntheticSpec {
+    /// Small mixed-precision default: fast enough for tests and examples.
+    pub fn small(model: &str, cfg: &str) -> SyntheticSpec {
+        SyntheticSpec {
+            model: model.to_string(),
+            cfg: cfg.to_string(),
+            layer_bits: vec![(4, 4), (3, 3), (4, 4), (2, 2)],
+            num_classes: 10,
+            image_shape: [3, 8, 8],
+            train_batch: 16,
+            eval_batch: 64,
+        }
+    }
+}
+
+/// Write a synthetic artifact set under `<root>/<model>_<cfg>/`: a
+/// `manifest.json` following the AOT contract plus one `<name>.nexe.json`
+/// stub per executable. Returns the set directory.
+pub fn write_synthetic_artifacts(root: impl AsRef<Path>, spec: &SyntheticSpec) -> Result<PathBuf> {
+    let dir = root.as_ref().join(format!("{}_{}", spec.model, spec.cfg));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let nl = spec.layer_bits.len();
+    let d: usize = spec.image_shape.iter().product();
+    let (h, wd) = (spec.image_shape[1], spec.image_shape[2]);
+
+    let mut layers = Json::arr();
+    for (k, &(a, w)) in spec.layer_bits.iter().enumerate() {
+        let in_ch = if k == 0 { spec.image_shape[0] } else { 8 };
+        let out_ch = 8usize;
+        let mults = (out_ch * h * wd * in_ch * 3 * 3) as i64;
+        layers.push(
+            Json::obj()
+                .with("name", format!("conv{k}"))
+                .with("index", k)
+                .with("w_bits", w)
+                .with("a_bits", a)
+                .with("in_ch", in_ch)
+                .with("out_ch", out_ch)
+                .with("kernel", vec![3usize, 3])
+                .with("stride", 1usize)
+                .with("in_hw", vec![h, wd])
+                .with("out_hw", vec![h, wd])
+                .with("e_rows", 1usize << a)
+                .with("e_cols", 1usize << w)
+                .with("mults_per_image", mults),
+        );
+    }
+
+    let param = |name: &str, shape: Vec<usize>| Json::obj().with("name", name).with("shape", shape);
+    let mut params = Json::arr();
+    params.push(param("fc.w", vec![spec.num_classes, d]));
+    params.push(param("fc.b", vec![spec.num_classes]));
+    let mut opt_state = Json::arr();
+    opt_state.push(param("fc.w.m", vec![spec.num_classes, d]));
+    opt_state.push(param("fc.b.m", vec![spec.num_classes]));
+
+    let acts: Vec<String> = (0..nl).map(|k| format!("act{k}")).collect();
+    let lwc_grads: Vec<String> = (0..nl)
+        .flat_map(|k| [format!("dgamma{k}"), format!("dbeta{k}")])
+        .collect();
+    let mut exes = Json::obj();
+    let add = |exes: &mut Json, name: &str, inputs: &[&str], outputs: Vec<String>| {
+        exes.set(
+            name,
+            Json::obj()
+                .with("file", format!("{name}.nexe.json"))
+                .with("inputs", inputs.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+                .with("outputs", outputs),
+        );
+    };
+    add(
+        &mut exes,
+        "train",
+        &["params", "opt_state", "images_train", "labels_train", "lr"],
+        vec!["fc.w".into(), "fc.b".into(), "fc.w.m".into(), "fc.b.m".into(), "loss".into()],
+    );
+    let fwd_inputs = ["params", "lwc", "act_q", "e_list", "images_eval", "labels_eval"];
+    add(&mut exes, "fwd", &fwd_inputs, vec!["loss_sum".into(), "correct".into()]);
+    add(&mut exes, "fwd_pallas", &fwd_inputs, vec!["loss_sum".into(), "correct".into()]);
+    add(
+        &mut exes,
+        "acts_float",
+        &["params", "images_eval", "labels_eval"],
+        acts.iter().cloned().chain(["logits".to_string()]).collect(),
+    );
+    add(
+        &mut exes,
+        "fwd_acts",
+        &fwd_inputs,
+        acts.iter().cloned().chain(["loss_sum".to_string()]).collect(),
+    );
+    let est_inputs = ["params", "lwc", "act_q", "e_list", "images_train", "labels_train"];
+    add(
+        &mut exes,
+        "grad_e",
+        &est_inputs,
+        ["loss".to_string()]
+            .into_iter()
+            .chain((0..nl).map(|k| format!("grad{k}")))
+            .collect(),
+    );
+    let hvp_inputs =
+        ["params", "lwc", "act_q", "e_list", "rvecs", "images_train", "labels_train"];
+    add(&mut exes, "hvp_e", &hvp_inputs, (0..nl).map(|k| format!("hvp{k}")).collect());
+    add(&mut exes, "quad_e", &hvp_inputs, (0..nl).map(|k| format!("quad{k}")).collect());
+    add(
+        &mut exes,
+        "calib",
+        &est_inputs,
+        ["loss".to_string()].into_iter().chain(lwc_grads.iter().cloned()).collect(),
+    );
+    add(
+        &mut exes,
+        "retrain",
+        &est_inputs,
+        ["loss".to_string(), "d.fc.w".to_string(), "d.fc.b".to_string()]
+            .into_iter()
+            .chain(lwc_grads.iter().cloned())
+            .collect(),
+    );
+
+    let manifest = Json::obj()
+        .with("model", spec.model.as_str())
+        .with("cfg", spec.cfg.as_str())
+        .with("num_classes", spec.num_classes)
+        .with("image_shape", spec.image_shape.to_vec())
+        .with("train_batch", spec.train_batch)
+        .with("eval_batch", spec.eval_batch)
+        .with("layers", layers)
+        .with("params", params)
+        .with("opt_state", opt_state)
+        .with("executables", exes);
+    manifest.save(dir.join("manifest.json"))?;
+
+    let exe_names = [
+        "train", "fwd", "fwd_pallas", "acts_float", "fwd_acts", "grad_e", "hvp_e", "quad_e",
+        "calib", "retrain",
+    ];
+    for name in exe_names {
+        Json::obj()
+            .with("kind", name)
+            .with("format", NATIVE_FORMAT)
+            .save(dir.join(format!("{name}.nexe.json")))?;
+    }
+    Ok(dir)
+}
+
+/// Default-filled inputs for one executable, expanded per the manifest's
+/// input-group contract: zero params/opt-state, wide LWC (4.0), placeholder
+/// activation scales (0.1, 0.0), zero E/r vectors, constant images, cycling
+/// labels, lr 0.01. Test/bench scaffolding — the single place the group
+/// arities are spelled out outside `pipeline::session::build_inputs`.
+pub fn template_inputs(m: &Manifest, exe: &str) -> Result<Vec<Tensor>> {
+    let spec = m.exe(exe)?;
+    let mut v: Vec<Tensor> = Vec::new();
+    for g in &spec.inputs {
+        match g.as_str() {
+            "params" | "opt_state" => {
+                v.extend(m.params.iter().map(|p| Tensor::zeros(&p.shape)))
+            }
+            "lwc" => (0..2 * m.layers.len()).for_each(|_| v.push(Tensor::scalar(4.0))),
+            "act_q" => {
+                for _ in 0..m.layers.len() {
+                    v.push(Tensor::scalar(0.1));
+                    v.push(Tensor::scalar(0.0));
+                }
+            }
+            "e_list" | "rvecs" => {
+                v.extend(m.layers.iter().map(|l| Tensor::zeros(&[l.e_len()])))
+            }
+            "images_train" | "images_eval" => {
+                let b = if g == "images_train" { m.train_batch } else { m.eval_batch };
+                let mut sh = vec![b];
+                sh.extend(&m.image_shape);
+                v.push(Tensor::full(&sh, 0.25));
+            }
+            "labels_train" | "labels_eval" => {
+                let b = if g == "labels_train" { m.train_batch } else { m.eval_batch };
+                v.push(Tensor::new(
+                    vec![b],
+                    (0..b).map(|i| (i % m.num_classes) as f32).collect(),
+                )?);
+            }
+            "lr" => v.push(Tensor::scalar(0.01)),
+            other => bail!("template_inputs: unknown input group '{other}'"),
+        }
+    }
+    Ok(v)
+}
+
+/// Flat index where `group` starts in `exe`'s expanded input list (for
+/// tests/benches that overwrite one tensor of a [`template_inputs`] list).
+pub fn input_offset(m: &Manifest, exe: &str, group: &str) -> Result<usize> {
+    let spec = m.exe(exe)?;
+    let mut pos = 0usize;
+    for g in &spec.inputs {
+        if g.as_str() == group {
+            return Ok(pos);
+        }
+        pos += match g.as_str() {
+            "params" | "opt_state" => m.params.len(),
+            "lwc" | "act_q" => 2 * m.layers.len(),
+            "e_list" | "rvecs" => m.layers.len(),
+            "images_train" | "images_eval" | "labels_train" | "labels_eval" | "lr" => 1,
+            other => bail!("input_offset: unknown input group '{other}'"),
+        };
+    }
+    bail!("executable '{exe}' has no input group '{group}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactSet;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fames-native-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn zero_inputs(m: &Manifest, exe: &str) -> Vec<Tensor> {
+        template_inputs(m, exe).unwrap()
+    }
+
+    #[test]
+    fn synthetic_set_opens_and_is_consistent() {
+        let root = tmpdir("gen");
+        let dir =
+            write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+        let set = ArtifactSet::open(&dir).unwrap();
+        let m = &set.manifest;
+        assert_eq!(m.model, "resnet8");
+        assert_eq!(m.layers.len(), 4);
+        for l in &m.layers {
+            let want =
+                (l.out_ch * l.out_hw.0 * l.out_hw.1 * l.in_ch * l.kernel.0 * l.kernel.1) as u64;
+            assert_eq!(l.mults_per_image, want, "layer {}", l.name);
+        }
+        for (name, spec) in &m.executables {
+            assert!(set.dir.join(&spec.file).is_file(), "missing {name}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn fwd_is_deterministic_per_seed_and_varies_across_seeds() {
+        let root = tmpdir("det");
+        let dir =
+            write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+        let set = ArtifactSet::open(&dir).unwrap();
+        let inputs = zero_inputs(&set.manifest, "fwd");
+        let path = set.exe_path("fwd").unwrap();
+        let run = |seed: u64| {
+            let exe = NativeBackend::new(seed).load(&path).unwrap();
+            exe.run(&inputs).unwrap()
+        };
+        let (a, b, c) = (run(0), run(0), run(1));
+        assert_eq!(a[0], b[0], "same seed must be bit-identical");
+        assert_eq!(a[1], b[1]);
+        assert_ne!(a[0], c[0], "different backend seed must differ");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn error_injection_raises_loss_and_quad_matches_hvp() {
+        let root = tmpdir("einj");
+        let dir =
+            write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+        let set = ArtifactSet::open(&dir).unwrap();
+        let backend = NativeBackend::default();
+        let m = &set.manifest;
+
+        let fwd = backend.load(&set.exe_path("fwd").unwrap()).unwrap();
+        let clean = fwd.run(&zero_inputs(m, "fwd")).unwrap();
+        let mut noisy_in = zero_inputs(m, "fwd");
+        let e0 = input_offset(m, "fwd", "e_list").unwrap();
+        noisy_in[e0] = Tensor::full(&[m.layers[0].e_len()], 20.0);
+        let noisy = fwd.run(&noisy_in).unwrap();
+        assert!(
+            noisy[0].item().unwrap() > clean[0].item().unwrap(),
+            "E injection must raise the loss: {} vs {}",
+            noisy[0].item().unwrap(),
+            clean[0].item().unwrap()
+        );
+
+        // ½ r·(H r) from hvp_e must equal quad_e exactly (same analytic H)
+        let hvp = backend.load(&set.exe_path("hvp_e").unwrap()).unwrap();
+        let quad = backend.load(&set.exe_path("quad_e").unwrap()).unwrap();
+        let mut est_in = zero_inputs(m, "hvp_e");
+        let r0 = input_offset(m, "hvp_e", "rvecs").unwrap();
+        est_in[r0] = Tensor::full(&[m.layers[0].e_len()], 3.0);
+        let hr = hvp.run(&est_in).unwrap();
+        let qs = quad.run(&est_in).unwrap();
+        let via_hvp = 0.5 * est_in[r0].dot(&hr[0]).unwrap();
+        let q = qs[0].item().unwrap() as f64;
+        assert!((q - via_hvp).abs() <= 1e-6 * (1.0 + via_hvp.abs()), "{q} vs {via_hvp}");
+        for k in 1..m.layers.len() {
+            assert_eq!(qs[k].item().unwrap(), 0.0, "zero probe ⇒ zero quadratic");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn hlo_artifacts_are_rejected_with_guidance() {
+        // no manifest at all → rejected up front
+        let root = tmpdir("hlo");
+        std::fs::write(root.join("spike.hlo.txt"), "HloModule spike").unwrap();
+        let err = NativeBackend::default()
+            .load(&root.join("spike.hlo.txt"))
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+
+        // a manifest-declared executable that is NOT a synthetic stub (a real
+        // HLO-text tree) must also be refused, not executed synthetically
+        let dir =
+            write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+        std::fs::write(dir.join("fwd.nexe.json"), "HloModule fwd, not json").unwrap();
+        let err = NativeBackend::default()
+            .load(&dir.join("fwd.nexe.json"))
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

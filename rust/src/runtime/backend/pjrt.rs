@@ -1,0 +1,118 @@
+//! PJRT/XLA execution backend (`--features pjrt`).
+//!
+//! This is the only place the `xla` crate is touched. The interchange format
+//! is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly (see `python/compile/aot.py`).
+//!
+//! All executables follow the contract recorded in each artifact set's
+//! `manifest.json`: f32 inputs in manifest order, a tuple of f32 outputs.
+//!
+//! Note: `PjRtClient` holds an `Rc` internally, so a backend (and therefore
+//! the owning [`crate::runtime::Runtime`]) is pinned to the thread that
+//! created it. XLA's own intra-op thread pool still uses all cores.
+//!
+//! By default the `xla` dependency resolves to the in-tree API shim
+//! (`rust/vendor/xla`), which compiles without libxla but errors at runtime —
+//! enough for CI's cfg-check lane. Swap it for a real xla-rs checkout to
+//! execute HLO.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{ExecBackend, LoadedExec};
+use crate::tensor::Tensor;
+
+/// PJRT CPU-client backend.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client })
+    }
+
+    /// PJRT platform string (e.g. `"cpu"`).
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Parse + compile an HLO-text artifact.
+    fn load(&self, path: &Path) -> Result<Box<dyn LoadedExec>> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Box::new(PjrtExec {
+            exe,
+            path: path.to_path_buf(),
+        }))
+    }
+}
+
+struct PjrtExec {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl LoadedExec for PjrtExec {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                to_literal(t)
+                    .with_context(|| format!("converting input {i} for {}", self.path.display()))
+            })
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        if out.is_empty() || out[0].is_empty() {
+            bail!("executable {} produced no outputs", self.path.display());
+        }
+        let root = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple().context("decomposing output tuple")?;
+        parts
+            .iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                from_literal(lit)
+                    .with_context(|| format!("converting output {i} of {}", self.path.display()))
+            })
+            .collect()
+    }
+}
+
+/// Convert a tensor to an XLA literal (f32, given shape).
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(t.data());
+    lit.reshape(&dims)
+        .with_context(|| format!("reshaping literal to {:?}", t.shape()))
+}
+
+/// Convert from an XLA literal (must be an f32 array).
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().context("literal to_vec::<f32>")?;
+    Tensor::new(dims, data)
+}

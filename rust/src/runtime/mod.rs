@@ -1,25 +1,26 @@
-//! PJRT runtime — loads AOT-compiled HLO-text artifacts and executes them.
+//! Execution runtime — backend-agnostic loader/executor for model artifacts.
 //!
-//! This is the only place the `xla` crate is touched. The interchange format
-//! is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5 emits protos
-//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids and round-trips cleanly (see
-//! `/opt/xla-example/README.md` and `python/compile/aot.py`).
+//! [`Runtime`] owns a compile cache (keyed by canonical artifact path) and
+//! per-executable statistics; actual loading/execution is delegated to a
+//! pluggable [`backend::ExecBackend`]:
 //!
-//! All executables follow the contract recorded in each artifact set's
-//! `manifest.json`: f32 inputs in manifest order, a tuple of f32 outputs.
+//! * `native` (default) — pure Rust, deterministic, runs synthetic artifact
+//!   sets on any machine with zero external dependencies;
+//! * `pjrt` (`--features pjrt`) — XLA/PJRT execution of AOT-compiled
+//!   HLO-text artifacts.
 //!
-//! Note: `PjRtClient` holds an `Rc` internally, so a [`Runtime`] is pinned to
-//! the thread that created it. XLA's own intra-op thread pool still uses all
-//! cores for the heavy lifting.
+//! Select at runtime with `FAMES_BACKEND=native|pjrt` (default `native`).
 
+pub mod backend;
 mod manifest;
 
+pub use backend::{ExecBackend, LoadedExec};
 pub use manifest::{ArtifactSet, ExeSpec, LayerInfo, Manifest, ParamInfo};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -34,49 +35,28 @@ pub struct ExecStats {
     pub compile_secs: f64,
 }
 
-/// A compiled HLO executable with its source path and stats.
+/// A loaded executable with its source path and stats.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    exe: Box<dyn LoadedExec>,
     path: PathBuf,
     stats: RefCell<ExecStats>,
 }
 
 impl Executable {
-    /// Execute on f32 tensors; unpacks the output tuple into tensors.
+    /// Execute on f32 tensors; returns the output tensors in manifest order.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let start = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .enumerate()
-            .map(|(i, t)| {
-                t.to_literal()
-                    .with_context(|| format!("converting input {i} for {}", self.path.display()))
-            })
-            .collect::<Result<_>>()?;
         let out = self
             .exe
-            .execute::<xla::Literal>(&literals)
+            .run(inputs)
             .with_context(|| format!("executing {}", self.path.display()))?;
-        if out.is_empty() || out[0].is_empty() {
+        if out.is_empty() {
             bail!("executable {} produced no outputs", self.path.display());
         }
-        let root = out[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = root.to_tuple().context("decomposing output tuple")?;
-        let tensors = parts
-            .iter()
-            .enumerate()
-            .map(|(i, lit)| {
-                Tensor::from_literal(lit)
-                    .with_context(|| format!("converting output {i} of {}", self.path.display()))
-            })
-            .collect::<Result<Vec<_>>>()?;
         let mut st = self.stats.borrow_mut();
         st.calls += 1;
         st.total_secs += start.elapsed().as_secs_f64();
-        Ok(tensors)
+        Ok(out)
     }
 
     pub fn stats(&self) -> ExecStats {
@@ -88,28 +68,67 @@ impl Executable {
     }
 }
 
-/// A PJRT CPU client plus a compile cache keyed by artifact path.
+/// A backend plus a compile cache keyed by canonical artifact path.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<PathBuf, std::rc::Rc<Executable>>>,
+    backend: Box<dyn ExecBackend>,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
 }
 
 impl Runtime {
-    /// Create a CPU runtime.
+    /// Default CPU runtime: the backend named by `FAMES_BACKEND`
+    /// (`native` when unset).
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
+        Self::from_env()
+    }
+
+    /// Backend selected by the `FAMES_BACKEND` env var (default `native`).
+    pub fn from_env() -> Result<Self> {
+        let sel = std::env::var("FAMES_BACKEND").unwrap_or_else(|_| "native".to_string());
+        Self::named(&sel)
+    }
+
+    /// Runtime over a backend selected by name (`"native"` or `"pjrt"`).
+    pub fn named(name: &str) -> Result<Self> {
+        match name {
+            "native" => Ok(Self::native()),
+            "pjrt" => Self::pjrt(),
+            other => bail!("unknown backend '{other}' (available: native, pjrt)"),
+        }
+    }
+
+    /// Pure-Rust deterministic backend (seed 0).
+    pub fn native() -> Self {
+        Self::with_backend(Box::new(backend::native::NativeBackend::default()))
+    }
+
+    /// PJRT/XLA backend. Errors when the crate was built without the
+    /// `pjrt` feature, or when no real XLA library is available.
+    pub fn pjrt() -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        {
+            return Ok(Self::with_backend(Box::new(backend::pjrt::PjrtBackend::cpu()?)));
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            bail!("PJRT backend not compiled in — rebuild with `--features pjrt`");
+        }
+    }
+
+    /// Runtime over an arbitrary backend implementation.
+    pub fn with_backend(backend: Box<dyn ExecBackend>) -> Self {
+        Runtime {
+            backend,
             cache: RefCell::new(HashMap::new()),
-        })
+        }
     }
 
+    /// Backend identifier (`"native"`, `"pjrt"`, …).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name().to_string()
     }
 
-    /// Load + compile an HLO-text artifact (cached by canonical path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::rc::Rc<Executable>> {
+    /// Load + compile an artifact (cached by canonical path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
         let path = path.as_ref();
         let key = path
             .canonicalize()
@@ -118,14 +137,11 @@ impl Runtime {
             return Ok(exe.clone());
         }
         let start = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&key)
-            .with_context(|| format!("parsing HLO text {}", key.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", key.display()))?;
-        let exe = std::rc::Rc::new(Executable {
+            .backend
+            .load(&key)
+            .with_context(|| format!("loading {} via {} backend", key.display(), self.backend.name()))?;
+        let exe = Rc::new(Executable {
             exe,
             path: key.clone(),
             stats: RefCell::new(ExecStats {
@@ -149,5 +165,62 @@ impl Runtime {
             .iter()
             .map(|(p, e)| (p.clone(), e.stats()))
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+    use super::*;
+
+    fn tmp_set(tag: &str) -> (PathBuf, ArtifactSet) {
+        let root = std::env::temp_dir().join(format!("fames-rt-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let dir = write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4"))
+            .unwrap();
+        let set = ArtifactSet::open(dir).unwrap();
+        (root, set)
+    }
+
+    #[test]
+    fn unknown_backend_is_an_error() {
+        assert!(Runtime::named("tpu-v9").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_errors_with_guidance() {
+        let err = Runtime::named("pjrt").err().unwrap();
+        assert!(format!("{err:#}").contains("--features pjrt"));
+    }
+
+    #[test]
+    fn load_caches_by_canonical_path_and_accumulates_stats() {
+        let (root, set) = tmp_set("cache");
+        let rt = Runtime::native();
+        assert_eq!(rt.platform(), "native");
+        let path = set.exe_path("quad_e").unwrap();
+        let exe = rt.load(&path).unwrap();
+        assert_eq!(rt.cache_len(), 1);
+        let exe2 = rt.load(&path).unwrap();
+        assert_eq!(rt.cache_len(), 1);
+        assert!(Rc::ptr_eq(&exe, &exe2), "cache must return the same handle");
+        assert!(exe.stats().compile_secs >= 0.0);
+        assert_eq!(exe.stats().calls, 0);
+
+        // run through the manifest contract and watch the stats move
+        let m = &set.manifest;
+        let inputs = backend::native::template_inputs(m, "quad_e").unwrap();
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), m.layers.len());
+        assert_eq!(exe.stats().calls, 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::native();
+        assert!(rt.load("/definitely/not/there.nexe.json").is_err());
     }
 }

@@ -76,8 +76,11 @@ pub fn solve_greedy(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
         if guard > 100_000 {
             bail!("greedy failed to converge");
         }
-        // best swap: maximize cost reduction per value increase
-        let mut best: Option<(usize, usize, f64)> = None;
+        // Best swap: maximize cost reduction per value increase. All free
+        // swaps (dv ≤ 0) score ∞, so ties are broken by the largest cost
+        // reduction — otherwise the first free swap found wins regardless of
+        // dc and large instances crawl toward the 100 000-iteration guard.
+        let mut best: Option<(usize, usize, f64, f64)> = None; // (k, i, score, dc)
         for (k, layer) in problem.iter().enumerate() {
             let cur = layer[picks[k]];
             for (i, ch) in layer.iter().enumerate() {
@@ -87,13 +90,17 @@ pub fn solve_greedy(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
                 let dv = ch.value - cur.value; // ≥ usually
                 let dc = cur.cost - ch.cost; // > 0
                 let score = if dv <= 0.0 { f64::INFINITY } else { dc / dv };
-                if best.map_or(true, |(_, _, s)| score > s) {
-                    best = Some((k, i, score));
+                let better = match best {
+                    None => true,
+                    Some((_, _, bs, bdc)) => score > bs || (score == bs && dc > bdc),
+                };
+                if better {
+                    best = Some((k, i, score, dc));
                 }
             }
         }
         match best {
-            Some((k, i, _)) => {
+            Some((k, i, _, _)) => {
                 cost += problem[k][i].cost - problem[k][picks[k]].cost;
                 picks[k] = i;
             }
@@ -106,7 +113,8 @@ pub fn solve_greedy(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
         total_cost,
         total_value,
         optimal: false,
-        nodes: 0,
+        // for the greedy, "nodes" counts swap iterations
+        nodes: guard as u64,
     })
 }
 
@@ -481,6 +489,37 @@ mod tests {
         let s = solve_exact(&problem, 6.0).unwrap();
         assert_eq!(s.picks, vec![1, 0]);
         assert_eq!(s.total_value, 3.0);
+    }
+
+    #[test]
+    fn greedy_breaks_free_swap_ties_by_cost_reduction() {
+        // Both layers offer a value-neutral (∞-score) swap; only the big-dc
+        // one reaches the budget in a single iteration. (Expensive choices
+        // come first: min_by keeps the *first* minimal value, so the greedy
+        // starts on the expensive picks.)
+        let problem = vec![
+            vec![Choice { cost: 10.0, value: 0.0 }, Choice { cost: 9.9, value: 0.0 }],
+            vec![Choice { cost: 10.0, value: 0.0 }, Choice { cost: 1.0, value: 0.0 }],
+        ];
+        let s = solve_greedy(&problem, 11.0).unwrap();
+        assert_eq!(s.picks, vec![0, 1], "must take the largest-dc free swap");
+        assert_eq!(s.nodes, 1, "one swap must suffice, got {}", s.nodes);
+        assert!(s.total_cost <= 11.0);
+    }
+
+    #[test]
+    fn greedy_breaks_equal_ratio_ties_by_cost_reduction() {
+        // two swaps with the exact same dc/dv ratio (binary-exact values):
+        // the larger cost reduction must win
+        let problem = vec![vec![
+            Choice { cost: 7.5, value: -0.75 },
+            Choice { cost: 5.0, value: -0.5 },
+            Choice { cost: 10.0, value: -1.0 },
+        ]];
+        let s = solve_greedy(&problem, 5.0).unwrap();
+        assert_eq!(s.picks, vec![1]);
+        assert_eq!(s.nodes, 1);
+        assert_eq!(s.total_cost, 5.0);
     }
 
     #[test]

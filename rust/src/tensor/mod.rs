@@ -1,16 +1,18 @@
 //! Dense f32 tensor type plus an on-disk store.
 //!
 //! The offline crate set has no `ndarray`, so FAMES carries its own minimal
-//! dense tensor: row-major `Vec<f32>` + shape. Everything crossing the PJRT
-//! boundary is f32 (integer quantities like LUT entries are exactly
-//! representable: |product| ≤ 255² < 2²⁴), which keeps the rust↔HLO contract
-//! to a single dtype.
+//! dense tensor: row-major `Vec<f32>` + shape. Everything crossing the
+//! execution-backend boundary is f32 (integer quantities like LUT entries are
+//! exactly representable: |product| ≤ 255² < 2²⁴), which keeps the
+//! rust↔backend contract to a single dtype. Backend-specific conversions
+//! (e.g. XLA literals) live with their backend
+//! (`runtime::backend::pjrt`), keeping this type dependency-free.
 
 mod store;
 
 pub use store::TensorStore;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -179,21 +181,6 @@ impl Tensor {
         Ok(())
     }
 
-    /// Convert to an XLA literal (f32, given shape).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(&self.data);
-        lit.reshape(&dims)
-            .with_context(|| format!("reshaping literal to {:?}", self.shape))
-    }
-
-    /// Convert from an XLA literal (must be an f32 array).
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape().context("literal has no array shape")?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>().context("literal to_vec::<f32>")?;
-        Tensor::new(dims, data)
-    }
 }
 
 #[cfg(test)]

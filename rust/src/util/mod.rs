@@ -128,9 +128,21 @@ pub fn fmt_secs(s: f64) -> String {
         format!("{:.1}ms", s * 1e3)
     } else if s < 120.0 {
         format!("{s:.2}s")
+    } else if s < 3600.0 {
+        format!("{:.1}m", s / 60.0)
     } else {
         format!("{:.2}h", s / 3600.0)
     }
+}
+
+/// Mean of the last `k` entries (fewer when the slice is shorter); `None`
+/// for an empty slice — callers print "n/a" instead of propagating 0/0 NaN.
+pub fn tail_mean(v: &[f64], k: usize) -> Option<f64> {
+    if v.is_empty() {
+        return None;
+    }
+    let k = k.min(v.len());
+    Some(v[v.len() - k..].iter().sum::<f64>() / k as f64)
 }
 
 #[cfg(test)]
@@ -171,6 +183,21 @@ mod tests {
         assert!(fmt_secs(0.0000005).ends_with("µs"));
         assert!(fmt_secs(0.05).ends_with("ms"));
         assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(119.0).ends_with('s'));
+        // regression: [120 s, 3600 s) used to print as (sub-unity) hours
+        assert_eq!(fmt_secs(300.0), "5.0m");
+        assert!(fmt_secs(120.0).ends_with('m'));
+        assert!(fmt_secs(3599.0).ends_with('m'));
+        assert!(fmt_secs(3600.0).ends_with('h'));
         assert!(fmt_secs(7200.0).ends_with('h'));
+    }
+
+    #[test]
+    fn tail_mean_guards_empty_and_short_slices() {
+        assert_eq!(tail_mean(&[], 20), None);
+        assert_eq!(tail_mean(&[3.0], 20), Some(3.0));
+        let v: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        // last 20 of 0..30 → mean of 10..=29 = 19.5
+        assert_eq!(tail_mean(&v, 20), Some(19.5));
     }
 }

@@ -1,8 +1,13 @@
-//! Artifact-contract integration tests: every built artifact set must have
-//! a parseable manifest whose executables exist, compile, and respect the
-//! declared input/output arities. Skips gracefully before `make artifacts`.
+//! Artifact-contract integration tests: every artifact set must have a
+//! parseable manifest whose executables exist and respect the declared
+//! input/output arities.
+//!
+//! The native-backend test generates its own synthetic set, so the contract
+//! is exercised on every machine; the scan over `artifacts_root()` covers
+//! real AOT-built trees and skips when none exist.
 
 use fames::pipeline::artifacts_root;
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
 use fames::runtime::{ArtifactSet, Runtime};
 use fames::tensor::Tensor;
 
@@ -17,6 +22,25 @@ fn sets() -> Vec<std::path::PathBuf> {
         .collect()
 }
 
+fn check_consistency(dir: &std::path::Path) {
+    let set = ArtifactSet::open(dir).unwrap_or_else(|e| panic!("{dir:?}: {e:#}"));
+    let m = &set.manifest;
+    assert!(!m.layers.is_empty(), "{dir:?}");
+    for l in &m.layers {
+        // mults formula (paper §IV-D)
+        let want =
+            (l.out_ch * l.out_hw.0 * l.out_hw.1 * l.in_ch * l.kernel.0 * l.kernel.1) as u64;
+        assert_eq!(l.mults_per_image, want, "{dir:?} layer {}", l.name);
+        assert_eq!(l.e_len(), l.e_rows * l.e_cols);
+    }
+    // every declared executable file exists
+    for (name, spec) in &m.executables {
+        let p = set.dir.join(&spec.file);
+        assert!(p.exists(), "{dir:?}: missing {name} ({})", spec.file);
+        assert!(!spec.inputs.is_empty() && !spec.outputs.is_empty());
+    }
+}
+
 #[test]
 fn all_manifests_parse_and_are_consistent() {
     let sets = sets();
@@ -25,35 +49,21 @@ fn all_manifests_parse_and_are_consistent() {
         return;
     }
     for dir in sets {
-        let set = ArtifactSet::open(&dir).unwrap_or_else(|e| panic!("{dir:?}: {e:#}"));
-        let m = &set.manifest;
-        assert!(!m.layers.is_empty(), "{dir:?}");
-        for l in &m.layers {
-            // mults formula (paper §IV-D)
-            let want = (l.out_ch * l.out_hw.0 * l.out_hw.1 * l.in_ch * l.kernel.0 * l.kernel.1)
-                as u64;
-            assert_eq!(l.mults_per_image, want, "{dir:?} layer {}", l.name);
-            assert_eq!(l.e_len(), l.e_rows * l.e_cols);
-        }
-        // every declared executable file exists
-        for (name, spec) in &m.executables {
-            let p = set.dir.join(&spec.file);
-            assert!(p.exists(), "{dir:?}: missing {name} ({})", spec.file);
-            assert!(!spec.inputs.is_empty() && !spec.outputs.is_empty());
-        }
+        check_consistency(&dir);
     }
 }
 
 #[test]
-fn fwd_executable_compiles_and_runs_with_manifest_shapes() {
-    let root = std::path::PathBuf::from(artifacts_root());
-    let dir = root.join("resnet8_w4a4");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: resnet8_w4a4 not built");
-        return;
-    }
+fn fwd_executable_runs_with_manifest_shapes() {
+    // self-contained: generate a synthetic set and drive it natively
+    let root = std::env::temp_dir().join(format!("fames-contract-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let dir = write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    check_consistency(&dir);
+
     let set = ArtifactSet::open(&dir).unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let rt = Runtime::native();
     let exe = rt.load(set.exe_path("fwd").unwrap()).unwrap();
     let m = &set.manifest;
     // assemble zero-filled inputs from the manifest groups
@@ -90,4 +100,5 @@ fn fwd_executable_compiles_and_runs_with_manifest_shapes() {
     let correct = out[spec.output_index("correct").unwrap()].item().unwrap();
     assert!(loss.is_finite());
     assert!((0.0..=m.eval_batch as f32).contains(&correct));
+    let _ = std::fs::remove_dir_all(&root);
 }

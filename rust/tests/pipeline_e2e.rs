@@ -1,24 +1,214 @@
-//! End-to-end pipeline integration tests over real artifacts.
+//! End-to-end pipeline integration tests.
 //!
-//! These are the cross-layer composition checks: rust coordinator (L3)
-//! driving AOT-compiled jax graphs (L2) that embed the Pallas LUT-GEMM
-//! kernel (L1). Skips gracefully before `make artifacts`.
+//! The **native** tests generate a synthetic artifact set on the fly and
+//! drive the full estimate → select → calibrate loop through the default
+//! pure-Rust backend — they run on every machine, no XLA required.
+//!
+//! The **real-artifact** tests exercise the AOT-compiled jax graphs (L2)
+//! embedding the Pallas LUT-GEMM kernel (L1); they require
+//! `FAMES_BACKEND=pjrt` plus `make artifacts` and skip gracefully otherwise.
 
+use std::path::PathBuf;
 use std::rc::Rc;
 
-use fames::appmul::generate_library;
+use fames::appmul::{generate_library, AppMul, Library};
 use fames::calibrate::{self, CalibConfig};
+use fames::circuit::{build_multiplier, MulConfig};
 use fames::pipeline::{self, FamesConfig, Session};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
 use fames::runtime::Runtime;
 use fames::sensitivity::{estimate_table, HessianMode};
 
+// ---- native-backend e2e (always runs) ----
+
+fn native_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    root
+}
+
+/// Library covering the synthetic set's bit pairs, plus the 8×8 exact
+/// baseline (generating the full 8-bit approximate family would dominate
+/// the test's runtime; the energy model only needs the exact design).
+fn test_library() -> Library {
+    let mut lib = generate_library(&[(4, 4), (3, 3), (2, 2)], 0);
+    let n8 = build_multiplier(&MulConfig::exact(8, 8));
+    lib.items
+        .push(AppMul::from_netlist("mul8x8_exact", "exact", 8, 8, &n8, 0));
+    lib
+}
+
+fn native_cfg(root: &std::path::Path) -> FamesConfig {
+    let mut cfg = FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        r_energy: 0.7,
+        est_batches: 1,
+        eval_batches: 2,
+        train_steps: 400,
+        train_lr: 0.02,
+        ..FamesConfig::default()
+    };
+    cfg.calib = CalibConfig {
+        epochs: 1,
+        samples: 64,
+        ..CalibConfig::default()
+    };
+    cfg
+}
+
+/// Short but real fp32 training through the native backend: loss must drop.
+#[test]
+fn native_training_reduces_loss() {
+    let root = native_root("train");
+    let rt = Rc::new(Runtime::native());
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 11).unwrap();
+    let losses = s.train(400, 0.02).unwrap();
+    let head: f64 = losses[..20].iter().sum::<f64>() / 20.0;
+    let tail: f64 = losses[losses.len() - 20..].iter().sum::<f64>() / 20.0;
+    assert!(
+        tail < head * 0.9,
+        "no learning through the native backend: {head:.3} → {tail:.3}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// `fwd` and `fwd_pallas` must agree bit-for-bit on the native backend
+/// (same contract the PJRT artifacts are held to).
+#[test]
+fn native_pallas_and_fwd_paths_agree() {
+    let root = native_root("pallas");
+    let rt = Rc::new(Runtime::native());
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
+    s.init_act_ranges().unwrap();
+    let lib = test_library();
+    let am = lib
+        .for_bits(4, 4)
+        .into_iter()
+        .find(|m| !m.is_exact())
+        .unwrap();
+    let e_list = s
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| {
+            if l.a_bits == 4 && l.w_bits == 4 {
+                am.error_tensor()
+            } else {
+                fames::tensor::Tensor::zeros(&[l.e_len()])
+            }
+        })
+        .collect();
+    s.set_selection(e_list).unwrap();
+    let jnp = s.evaluate(1).unwrap();
+    let pallas = s.evaluate_pallas(1).unwrap();
+    assert_eq!(jnp.loss, pallas.loss, "loss mismatch");
+    assert_eq!(jnp.accuracy, pallas.accuracy, "accuracy mismatch");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The full FAMES pipeline (train → estimate → ILP select → calibrate →
+/// evaluate) runs through the native backend, respects the energy budget,
+/// and is deterministic across runs (second run hits the parameter cache).
+#[test]
+fn native_full_pipeline_respects_budget_and_is_deterministic() {
+    let root = native_root("pipeline");
+    let rt = Rc::new(Runtime::native());
+    let cfg = native_cfg(&root);
+    let lib = test_library();
+
+    let rep = pipeline::run(rt.clone(), &cfg, &lib).unwrap();
+    assert_eq!(rep.selection.len(), 4);
+    assert_eq!(rep.perturbations.len(), 4);
+    for p in &rep.perturbations {
+        assert!(p.is_finite() && *p >= 0.0, "Ω = {p}");
+    }
+    assert!(
+        rep.energy_ratio_exact <= cfg.r_energy + 1e-9,
+        "budget violated: {}",
+        rep.energy_ratio_exact
+    );
+    assert!(rep.energy_ratio_8bit > 0.0 && rep.energy_ratio_8bit.is_finite());
+    assert!(rep.quant_eval.loss.is_finite());
+    assert!(rep.approx_eval_before.loss.is_finite());
+    assert!(rep.approx_eval_after.loss.is_finite());
+    assert!(rep.times.train_secs > 0.0, "first run must pre-train");
+
+    // second run: cached params, identical deterministic outcome
+    let rep2 = pipeline::run(rt, &cfg, &lib).unwrap();
+    assert_eq!(rep2.times.train_secs, 0.0, "second run must hit the cache");
+    assert_eq!(rep.selection, rep2.selection);
+    assert_eq!(rep.quant_eval.accuracy, rep2.quant_eval.accuracy);
+    assert_eq!(rep.approx_eval_after.accuracy, rep2.approx_eval_after.accuracy);
+    assert_eq!(rep.perturbations, rep2.perturbations);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Estimation + calibration contracts on the native backend: Ω table is
+/// clamped non-negative, selection satisfies the budget, calibration leaves
+/// the model evaluable.
+#[test]
+fn native_estimate_select_calibrate_composes() {
+    let root = native_root("est");
+    let rt = Rc::new(Runtime::native());
+    let cfg = native_cfg(&root);
+    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
+    pipeline::ensure_trained(&mut s, &cfg).unwrap();
+    s.init_act_ranges().unwrap();
+    let lib = test_library();
+    let (_est, table) = estimate_table(&mut s, &lib, 1, HessianMode::Rank1 { iters: 2 }).unwrap();
+    for row in &table.values {
+        for &v in row {
+            assert!(v >= 0.0 && v.is_finite());
+        }
+    }
+    let energy = fames::energy::EnergyModel::new(&s.art.manifest, &lib);
+    let (choices, sol) = pipeline::select_ilp(&table, &energy, &lib, 0.6).unwrap();
+    let selection: Vec<&AppMul> = choices
+        .iter()
+        .zip(&sol.picks)
+        .map(|(row, &i)| row[i])
+        .collect();
+    let ratio = energy.ratio_vs_exact(&selection).unwrap();
+    assert!(ratio <= 0.6 + 1e-9, "budget violated: {ratio}");
+
+    s.set_selection(pipeline::selection_tensors(&choices, &sol.picks))
+        .unwrap();
+    let before = s.evaluate(1).unwrap();
+    assert!(before.loss.is_finite());
+    let ccfg = CalibConfig {
+        epochs: 1,
+        samples: 64,
+        ..CalibConfig::default()
+    };
+    calibrate::calibrate(&mut s, &ccfg).unwrap();
+    let after = s.evaluate(1).unwrap();
+    assert!(after.loss.is_finite());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---- real-artifact e2e (requires FAMES_BACKEND=pjrt + make artifacts) ----
+
 fn ready() -> Option<(Rc<Runtime>, String)> {
+    if std::env::var("FAMES_BACKEND").as_deref() != Ok("pjrt") {
+        eprintln!("skipping: real-artifact test needs FAMES_BACKEND=pjrt");
+        return None;
+    }
     let root = pipeline::artifacts_root();
     if !std::path::Path::new(&root).join("resnet8_w4a4/manifest.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some((Rc::new(Runtime::cpu().expect("pjrt")), root))
+    let rt = match Runtime::from_env() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: pjrt backend unavailable ({e:#})");
+            return None;
+        }
+    };
+    Some((Rc::new(rt), root))
 }
 
 /// Short but real training run: loss must drop substantially.
@@ -38,11 +228,8 @@ fn training_reduces_loss() {
 fn pallas_and_jnp_paths_agree() {
     let Some((rt, root)) = ready() else { return };
     let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
-    // trained params if available, otherwise fresh init is fine — the
-    // equivalence must hold regardless
     let _ = s.load_params(Session::state_path(&root, "resnet8"));
     s.init_act_ranges().unwrap();
-    // inject a real AppMul error so the LUT path is actually exercised
     let lib = generate_library(&[(4, 4)], 0);
     let am = lib
         .for_bits(4, 4)
@@ -64,56 +251,8 @@ fn pallas_and_jnp_paths_agree() {
     assert_eq!(jnp.accuracy, pallas.accuracy, "accuracy mismatch");
 }
 
-/// Estimation → selection → calibration composes and respects the budget.
-#[test]
-fn mini_pipeline_respects_energy_budget() {
-    let Some((rt, root)) = ready() else { return };
-    let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
-    let cfg = FamesConfig {
-        artifact_root: root.clone(),
-        train_steps: 150,
-        ..FamesConfig::default()
-    };
-    pipeline::ensure_trained(&mut s, &cfg).unwrap();
-    s.init_act_ranges().unwrap();
-    let lib = pipeline::library_for(&s.art.manifest, 0);
-    let (_est, table) =
-        estimate_table(&mut s, &lib, 1, HessianMode::Rank1 { iters: 2 }).unwrap();
-    // Ω table is clamped non-negative with exact == 0
-    for row in &table.values {
-        for &v in row {
-            assert!(v >= 0.0 && v.is_finite());
-        }
-    }
-    let energy = fames::energy::EnergyModel::new(&s.art.manifest, &lib);
-    let (choices, sol) = pipeline::select_ilp(&table, &energy, &lib, 0.6).unwrap();
-    let selection: Vec<&fames::appmul::AppMul> = choices
-        .iter()
-        .zip(&sol.picks)
-        .map(|(row, &i)| row[i])
-        .collect();
-    let ratio = energy.ratio_vs_exact(&selection).unwrap();
-    assert!(ratio <= 0.6 + 1e-9, "budget violated: {ratio}");
-
-    s.set_selection(pipeline::selection_tensors(&choices, &sol.picks))
-        .unwrap();
-    let before = s.evaluate(1).unwrap();
-    assert!(before.loss.is_finite());
-    // calibration must never make the quantile scales worse than the
-    // incumbent (by construction) and must leave the model evaluable
-    let ccfg = CalibConfig {
-        epochs: 1,
-        samples: 64,
-        ..CalibConfig::default()
-    };
-    calibrate::calibrate(&mut s, &ccfg).unwrap();
-    let after = s.evaluate(1).unwrap();
-    assert!(after.loss.is_finite());
-}
-
 /// The hvp/quad_e artifacts agree: ½·e·(H e) from hvp_e must equal the
-/// batched quad_e output (they are two lowerings of the same Gauss–Newton
-/// quadratic).
+/// batched quad_e output (two lowerings of the same Gauss–Newton quadratic).
 #[test]
 fn quad_e_matches_hvp_quadratic() {
     let Some((rt, root)) = ready() else { return };
@@ -147,7 +286,6 @@ fn quad_e_matches_hvp_quadratic() {
         quads[layer],
         via_hvp
     );
-    // other layers' probes were zero ⇒ zero quadratic
     for (j, &q) in quads.iter().enumerate() {
         if j != layer {
             assert!(q.abs() < 1e-6, "layer {j}: {q}");
