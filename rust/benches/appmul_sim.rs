@@ -7,7 +7,7 @@
 mod bench_util;
 
 use bench_util::{bench, black_box};
-use fames::appmul::generate_for_bits;
+use fames::appmul::{generate_for_bits, generate_for_bits_jobs};
 use fames::circuit::{build_lut, build_multiplier, MulConfig};
 
 fn main() {
@@ -37,5 +37,15 @@ fn main() {
             "  {bits}-bit library: {n} designs, {:.1} ms/design",
             r.mean_ns / 1e6 / n as f64
         );
+    }
+    // scoped-parallel candidate simulation vs pinned-serial (bit-identical
+    // outputs; see `fames bench` for the full per-stage snapshot)
+    for bits in [4u32, 8] {
+        bench(&format!("library_generation_serial/{bits}x{bits}"), 0, 3, || {
+            black_box(generate_for_bits_jobs(bits, bits, 0, 1));
+        });
+        bench(&format!("library_generation_parallel/{bits}x{bits}"), 0, 3, || {
+            black_box(generate_for_bits_jobs(bits, bits, 0, 0));
+        });
     }
 }

@@ -1,0 +1,26 @@
+//! Bench: serial-vs-parallel wall-clock of every `util::par`-driven hot
+//! path (library generation, power iteration, Ω table, NSGA population
+//! evaluation, native batch execution). Thin wrapper over `fames::bench`,
+//! the same engine behind `fames bench --json`.
+//!
+//! `cargo bench --bench par_stages` for full sizes, `-- --quick` for the
+//! CI smoke lane.
+
+use fames::bench::{run_stages, snapshot_json, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--smoke");
+    let cfg = BenchConfig { jobs: 0, quick };
+    let stages = run_stages(&cfg)?;
+    for s in &stages {
+        println!(
+            "{:32} serial {:>10} | parallel {:>10} | speedup {:>5.2}x",
+            s.name,
+            fames::util::fmt_secs(s.serial_secs),
+            fames::util::fmt_secs(s.parallel_secs),
+            s.speedup()
+        );
+    }
+    println!("{}", snapshot_json(&stages, &cfg).compact());
+    Ok(())
+}

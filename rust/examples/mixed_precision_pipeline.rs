@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example mixed_precision_pipeline`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fames::appmul::generate_library;
 use fames::pipeline::{self, FamesConfig, Session};
@@ -13,7 +13,7 @@ use fames::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let root = pipeline::artifacts_root();
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Arc::new(Runtime::cpu()?);
 
     // ---- bitwidth advisory: what would our sensitivity-guided MCKP pick? ----
     let cfg = FamesConfig {

@@ -12,7 +12,7 @@
 //! automatically; with `FAMES_BACKEND=pjrt` this drives the real AOT
 //! artifacts (requires `make artifacts` first).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fames::pipeline::{self, FamesConfig, Session};
 use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
@@ -20,7 +20,7 @@ use fames::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let mut root = pipeline::artifacts_root();
-    let rt = Rc::new(Runtime::from_env()?);
+    let rt = Arc::new(Runtime::from_env()?);
     println!("execution backend: {}", rt.platform());
     // Auto-generate a synthetic set only into a root that holds no artifact
     // sets at all (and only when the user didn't point FAMES_ARTIFACTS at a

@@ -2,9 +2,13 @@
 //!
 //! Generation is deterministic in `(bitwidths, seed)` and fast enough
 //! (word-parallel netlist simulation) that the library is rebuilt on demand
-//! rather than shipped: a full 2/3/4/8-bit library takes ~2 s.
+//! rather than shipped: a full 2/3/4/8-bit library takes ~2 s serial, and
+//! candidate netlists simulate concurrently (`util::par`) — the candidate
+//! list is enumerated up front and the dedup/quality filter runs over the
+//! built designs in enumeration order, so the library is bit-identical at
+//! every worker count.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 
 use anyhow::{bail, Context, Result};
 
@@ -13,6 +17,7 @@ use super::AppMul;
 use crate::circuit::{build_lut, build_multiplier, MulConfig, Netlist};
 use crate::json::Json;
 use crate::rng::Pcg;
+use crate::util::par;
 
 /// The paper's ALSRAC error threshold (MRED ≤ 20%, §V-A).
 pub const MRED_THRESHOLD: f64 = 0.20;
@@ -24,17 +29,27 @@ pub struct Library {
 }
 
 impl Library {
-    /// All multipliers for a bitwidth pair (exact first, then by PDP).
+    /// All multipliers for a bitwidth pair (exact first, then by PDP,
+    /// NaN-safe total order).
+    ///
+    /// ```
+    /// let lib = fames::appmul::generate_library(&[(2, 2)], 0);
+    /// let muls = lib.for_bits(2, 2);
+    /// assert!(muls[0].is_exact(), "the exact design sorts first");
+    /// assert!(muls.iter().skip(1).all(|m| !m.is_exact()));
+    /// ```
     pub fn for_bits(&self, a_bits: u32, w_bits: u32) -> Vec<&AppMul> {
         let mut v: Vec<&AppMul> = self
             .items
             .iter()
             .filter(|m| m.a_bits == a_bits && m.w_bits == w_bits)
             .collect();
+        // total_cmp, not partial_cmp().unwrap(): a NaN PDP (e.g. from a
+        // corrupted summary round-trip) must not panic the selection path.
         v.sort_by(|x, y| {
             y.is_exact()
                 .cmp(&x.is_exact())
-                .then(x.pdp.partial_cmp(&y.pdp).unwrap())
+                .then(x.pdp.total_cmp(&y.pdp))
         });
         v
     }
@@ -124,73 +139,68 @@ fn alsrac_prune(a_bits: u32, w_bits: u32, target: f64, seed: u64, max_tries: usi
     net
 }
 
-/// Generate the library for one bitwidth pair.
-pub fn generate_for_bits(a_bits: u32, w_bits: u32, seed: u64) -> Vec<AppMul> {
-    if !(2..=8).contains(&a_bits) || !(2..=8).contains(&w_bits) {
-        // deliberate hard stop: LUT sizes explode past 8 bits
-        panic!("bitwidths must be in 2..=8 (got {a_bits}x{w_bits})");
-    }
-    let total = a_bits + w_bits;
-    let mut out: Vec<AppMul> = Vec::new();
-    let mut seen: HashMap<Vec<i64>, String> = HashMap::new();
-    let tag = |s: &str| format!("mul{a_bits}x{w_bits}_{s}");
-    let mut push = |out: &mut Vec<AppMul>, seen: &mut HashMap<Vec<i64>, String>, am: AppMul| {
-        // dedup identical LUTs; drop hopeless designs (MRED > 60%)
-        if am.metrics.mred > 0.6 {
-            return;
-        }
-        if seen.contains_key(&am.lut) {
-            return;
-        }
-        seen.insert(am.lut.clone(), am.name.clone());
-        out.push(am);
-    };
+/// One enumerated candidate design, built (netlist → LUT → metrics)
+/// independently of every other candidate — the parallel work unit of
+/// library generation.
+enum CandSpec {
+    /// Structural configuration (exact / trunc / perf / axc / combo).
+    Cfg {
+        name: String,
+        family: &'static str,
+        cfg: MulConfig,
+    },
+    /// ALSRAC-style randomized pruning run with its own derived seed.
+    Alsrac {
+        name: String,
+        target: f64,
+        prune_seed: u64,
+        max_tries: usize,
+    },
+}
 
-    // exact
-    let n = build_multiplier(&MulConfig::exact(a_bits, w_bits));
-    push(&mut out, &mut seen,
-         AppMul::from_netlist(tag("exact"), "exact", a_bits, w_bits, &n, seed));
+/// Enumerate the candidate list for one bitwidth pair, in the canonical
+/// order that defines dedup priority (exact first, then the structural
+/// families, then ALSRAC runs).
+fn candidate_specs(a_bits: u32, w_bits: u32, seed: u64) -> Vec<CandSpec> {
+    let total = a_bits + w_bits;
+    let tag = |s: &str| format!("mul{a_bits}x{w_bits}_{s}");
+    let exact = || MulConfig::exact(a_bits, w_bits);
+    let mut specs: Vec<CandSpec> = Vec::new();
+
+    specs.push(CandSpec::Cfg { name: tag("exact"), family: "exact", cfg: exact() });
 
     // truncation ladder
     for k in 1..=total.saturating_sub(3) {
-        let cfg = MulConfig {
-            trunc_cols: k,
-            ..MulConfig::exact(a_bits, w_bits)
-        };
-        let n = build_multiplier(&cfg);
-        push(&mut out, &mut seen,
-             AppMul::from_netlist(tag(&format!("trunc{k}")), "trunc", a_bits, w_bits, &n, seed));
+        specs.push(CandSpec::Cfg {
+            name: tag(&format!("trunc{k}")),
+            family: "trunc",
+            cfg: MulConfig { trunc_cols: k, ..exact() },
+        });
     }
 
     // row perforation: single rows + LSB prefixes
     for r in 0..w_bits {
-        let cfg = MulConfig {
-            perf_rows: vec![r],
-            ..MulConfig::exact(a_bits, w_bits)
-        };
-        let n = build_multiplier(&cfg);
-        push(&mut out, &mut seen,
-             AppMul::from_netlist(tag(&format!("perf{r}")), "perf", a_bits, w_bits, &n, seed));
+        specs.push(CandSpec::Cfg {
+            name: tag(&format!("perf{r}")),
+            family: "perf",
+            cfg: MulConfig { perf_rows: vec![r], ..exact() },
+        });
     }
     for r in 2..w_bits {
-        let cfg = MulConfig {
-            perf_rows: (0..r).collect(),
-            ..MulConfig::exact(a_bits, w_bits)
-        };
-        let n = build_multiplier(&cfg);
-        push(&mut out, &mut seen,
-             AppMul::from_netlist(tag(&format!("perf0_{r}")), "perf", a_bits, w_bits, &n, seed));
+        specs.push(CandSpec::Cfg {
+            name: tag(&format!("perf0_{r}")),
+            family: "perf",
+            cfg: MulConfig { perf_rows: (0..r).collect(), ..exact() },
+        });
     }
 
     // approximate compressors
     for c in 1..total {
-        let cfg = MulConfig {
-            approx_cols: c,
-            ..MulConfig::exact(a_bits, w_bits)
-        };
-        let n = build_multiplier(&cfg);
-        push(&mut out, &mut seen,
-             AppMul::from_netlist(tag(&format!("axc{c}")), "axc", a_bits, w_bits, &n, seed));
+        specs.push(CandSpec::Cfg {
+            name: tag(&format!("axc{c}")),
+            family: "axc",
+            cfg: MulConfig { approx_cols: c, ..exact() },
+        });
     }
 
     // truncation × compressor combos
@@ -199,39 +209,85 @@ pub fn generate_for_bits(a_bits: u32, w_bits: u32, seed: u64) -> Vec<AppMul> {
             if k == 0 || c == 0 {
                 continue;
             }
-            let cfg = MulConfig {
-                trunc_cols: k,
-                approx_cols: c,
-                ..MulConfig::exact(a_bits, w_bits)
-            };
-            let n = build_multiplier(&cfg);
-            push(&mut out, &mut seen,
-                 AppMul::from_netlist(tag(&format!("tx{k}c{c}")), "combo",
-                                      a_bits, w_bits, &n, seed));
+            specs.push(CandSpec::Cfg {
+                name: tag(&format!("tx{k}c{c}")),
+                family: "combo",
+                cfg: MulConfig { trunc_cols: k, approx_cols: c, ..exact() },
+            });
         }
     }
 
     // ALSRAC-style pruning at several error targets
     let max_tries = if total >= 12 { 60 } else { 120 };
-    let mut idx = 0;
-    for &target in &[0.03, 0.08, 0.15, MRED_THRESHOLD] {
+    for (idx, &target) in [0.03, 0.08, 0.15, MRED_THRESHOLD].iter().enumerate() {
         for s in 0..2u64 {
-            let n = alsrac_prune(a_bits, w_bits, target, seed ^ (0xA15AC + idx * 7 + s), max_tries);
-            push(&mut out, &mut seen,
-                 AppMul::from_netlist(tag(&format!("alsrac{idx}_{s}")), "alsrac",
-                                      a_bits, w_bits, &n, seed));
+            specs.push(CandSpec::Alsrac {
+                name: tag(&format!("alsrac{idx}_{s}")),
+                target,
+                prune_seed: seed ^ (0xA15AC + idx as u64 * 7 + s),
+                max_tries,
+            });
         }
-        idx += 1;
     }
 
+    specs
+}
+
+/// Build + characterize one enumerated candidate.
+fn build_candidate(a_bits: u32, w_bits: u32, seed: u64, spec: &CandSpec) -> AppMul {
+    match spec {
+        CandSpec::Cfg { name, family, cfg } => {
+            let n = build_multiplier(cfg);
+            AppMul::from_netlist(name.clone(), *family, a_bits, w_bits, &n, seed)
+        }
+        CandSpec::Alsrac { name, target, prune_seed, max_tries } => {
+            let n = alsrac_prune(a_bits, w_bits, *target, *prune_seed, *max_tries);
+            AppMul::from_netlist(name.clone(), "alsrac", a_bits, w_bits, &n, seed)
+        }
+    }
+}
+
+/// Generate the library for one bitwidth pair (auto worker count).
+pub fn generate_for_bits(a_bits: u32, w_bits: u32, seed: u64) -> Vec<AppMul> {
+    generate_for_bits_jobs(a_bits, w_bits, seed, 0)
+}
+
+/// [`generate_for_bits`] with an explicit worker count (0 = auto). The
+/// result is bit-identical at every `jobs` value: candidates simulate
+/// concurrently, but the dedup/quality filter runs in enumeration order.
+pub fn generate_for_bits_jobs(a_bits: u32, w_bits: u32, seed: u64, jobs: usize) -> Vec<AppMul> {
+    if !(2..=8).contains(&a_bits) || !(2..=8).contains(&w_bits) {
+        // deliberate hard stop: LUT sizes explode past 8 bits
+        panic!("bitwidths must be in 2..=8 (got {a_bits}x{w_bits})");
+    }
+    let specs = candidate_specs(a_bits, w_bits, seed);
+    let built = par::par_map(&specs, jobs, |_, spec| build_candidate(a_bits, w_bits, seed, spec));
+    // dedup identical LUTs; drop hopeless designs (MRED > 60%); order is
+    // the canonical enumeration order, so the first-seen LUT always wins
+    let mut out: Vec<AppMul> = Vec::with_capacity(built.len());
+    let mut seen: HashSet<Vec<i64>> = HashSet::new();
+    for am in built {
+        if am.metrics.mred > 0.6 {
+            continue;
+        }
+        if !seen.insert(am.lut.clone()) {
+            continue;
+        }
+        out.push(am);
+    }
     out
 }
 
-/// Generate a library covering the given bitwidth pairs.
+/// Generate a library covering the given bitwidth pairs (auto workers).
 pub fn generate_library(bit_pairs: &[(u32, u32)], seed: u64) -> Library {
+    generate_library_jobs(bit_pairs, seed, 0)
+}
+
+/// [`generate_library`] with an explicit worker count (0 = auto).
+pub fn generate_library_jobs(bit_pairs: &[(u32, u32)], seed: u64, jobs: usize) -> Library {
     let mut items = Vec::new();
     for &(a, w) in bit_pairs {
-        items.extend(generate_for_bits(a, w, seed));
+        items.extend(generate_for_bits_jobs(a, w, seed, jobs));
     }
     Library { items }
 }
@@ -283,6 +339,36 @@ mod tests {
         for (x, y) in a.items.iter().zip(&b.items) {
             assert_eq!(x.lut, y.lut);
             assert_eq!(x.pdp, y.pdp);
+        }
+    }
+
+    #[test]
+    fn for_bits_survives_nan_pdp() {
+        // regression: partial_cmp().unwrap() used to panic on NaN PDP
+        let mut lib = generate_library(&[(2, 2)], 3);
+        let mut poisoned = lib.items[1].clone();
+        poisoned.name = "mul2x2_nan".into();
+        poisoned.pdp = f64::NAN;
+        lib.items.push(poisoned);
+        let muls = lib.for_bits(2, 2);
+        assert_eq!(muls.len(), lib.items.len());
+        assert!(muls[0].is_exact(), "exact still sorts first");
+        // total_cmp puts NaN after every finite PDP
+        assert!(muls.last().unwrap().pdp.is_nan());
+    }
+
+    #[test]
+    fn generation_is_identical_across_worker_counts() {
+        let serial = generate_for_bits_jobs(4, 4, 7, 1);
+        for jobs in [2usize, 4] {
+            let par = generate_for_bits_jobs(4, 4, 7, jobs);
+            assert_eq!(serial.len(), par.len(), "jobs={jobs}");
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.lut, b.lut);
+                assert_eq!(a.pdp.to_bits(), b.pdp.to_bits());
+                assert_eq!(a.metrics.mred.to_bits(), b.metrics.mred.to_bits());
+            }
         }
     }
 

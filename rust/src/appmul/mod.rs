@@ -16,7 +16,9 @@
 pub mod library;
 pub mod metrics;
 
-pub use library::{generate_for_bits, generate_library, Library};
+pub use library::{
+    generate_for_bits, generate_for_bits_jobs, generate_library, generate_library_jobs, Library,
+};
 pub use metrics::{compute as compute_metrics, exact_lut, ErrorMetrics};
 
 use crate::circuit::{build_lut, Netlist};

@@ -1,0 +1,269 @@
+//! Serial-vs-parallel perf snapshots (`fames bench`).
+//!
+//! Times every `util::par`-driven hot path twice — pinned to one worker and
+//! at the requested worker count — and reports the per-stage speedup as a
+//! table or a machine-readable JSON document (`fames bench --json`, schema
+//! [`SCHEMA`]). Future PRs can track the perf trajectory by committing the
+//! snapshots as `BENCH_*.json`.
+//!
+//! Stages:
+//!
+//! * `library_generation` — candidate netlist simulation (`appmul::library`);
+//! * `estimator_power_iteration` — per-layer power iteration (§IV-C Eq. 12);
+//! * `omega_table_exact` — Ω table with batched exact-HVP quadratics;
+//! * `nsga_population_eval` — GA-baseline population scoring (`select::nsga`);
+//! * `native_batch_exec` — batched forward evaluation through the native
+//!   backend.
+//!
+//! Everything runs against self-generated synthetic artifact sets, so the
+//! bench works on any machine (`--quick` shrinks sizes for CI smoke lanes).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::appmul::{generate_for_bits_jobs, generate_library_jobs};
+use crate::json::Json;
+use crate::pipeline::Session;
+use crate::runtime::backend::native::{write_synthetic_artifacts, NativeBackend, SyntheticSpec};
+use crate::runtime::Runtime;
+use crate::select::nsga::{self, NsgaConfig};
+use crate::sensitivity::{estimate_table, Estimator, HessianMode};
+use crate::util::par;
+
+/// Schema tag of the JSON snapshot (bump on shape changes).
+pub const SCHEMA: &str = "fames-bench-v1";
+
+/// Bench knobs.
+#[derive(Clone, Debug, Default)]
+pub struct BenchConfig {
+    /// Parallel worker count (0 = auto via `util::par::effective_jobs`).
+    pub jobs: usize,
+    /// Shrink workloads for smoke runs (CI).
+    pub quick: bool,
+}
+
+/// One stage's serial-vs-parallel timing.
+#[derive(Clone, Debug)]
+pub struct StageResult {
+    pub name: &'static str,
+    pub serial_secs: f64,
+    pub parallel_secs: f64,
+}
+
+impl StageResult {
+    /// Serial / parallel wall-clock ratio (> 1 means the parallel path won).
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_secs > 0.0 {
+            self.serial_secs / self.parallel_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Best-of-`reps` wall-clock of fallible `f`; the first error aborts the
+/// stage (a failing stage must fail the bench, not report the wall-clock
+/// of its error path).
+fn time_best_of<F>(reps: usize, mut f: F) -> Result<f64>
+where
+    F: FnMut() -> Result<()>,
+{
+    let mut best = f64::MAX;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f()?;
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+/// Run every stage serial-vs-parallel and collect the timings.
+pub fn run_stages(cfg: &BenchConfig) -> Result<Vec<StageResult>> {
+    let jobs = par::effective_jobs(cfg.jobs);
+    // workload sizes: full runs use 7-bit LUTs (16 384-entry E vectors);
+    // quick runs shrink to 5-bit so the CI smoke lane stays in seconds
+    let (lib_bits, est_bits, iters, eval_batch, pop, gens, reps) = if cfg.quick {
+        (5u32, 5u32, 2usize, 128usize, 6usize, 1usize, 1usize)
+    } else {
+        (7, 7, 6, 512, 8, 2, 2)
+    };
+    let mut stages: Vec<StageResult> = Vec::new();
+
+    // 1. AppMul library generation (candidate netlist simulation);
+    // black_box: the call is pure, keep release builds from eliding it
+    let serial_secs = time_best_of(reps, || {
+        std::hint::black_box(generate_for_bits_jobs(lib_bits, lib_bits, 0, 1));
+        Ok(())
+    })?;
+    let parallel_secs = time_best_of(reps, || {
+        std::hint::black_box(generate_for_bits_jobs(lib_bits, lib_bits, 0, jobs));
+        Ok(())
+    })?;
+    stages.push(StageResult { name: "library_generation", serial_secs, parallel_secs });
+
+    // shared synthetic model: 4 substitutable layers at the chosen bitwidth
+    let root = std::env::temp_dir().join(format!("fames-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+    let spec = SyntheticSpec {
+        model: "benchnet".to_string(),
+        cfg: "uniform".to_string(),
+        layer_bits: vec![(est_bits, est_bits); 4],
+        num_classes: 10,
+        image_shape: [3, 16, 16],
+        train_batch: 16,
+        eval_batch,
+    };
+    write_synthetic_artifacts(&root, &spec)?;
+    let open = |backend_jobs: usize, session_jobs: usize| -> Result<Session> {
+        let backend = NativeBackend::new(0).with_jobs(backend_jobs);
+        let rt = Arc::new(Runtime::with_backend(Box::new(backend)));
+        let mut s = Session::open(rt, &root, "benchnet", "uniform", 0)?;
+        s.jobs = session_jobs;
+        s.init_act_ranges()?;
+        Ok(s)
+    };
+    let mut serial_s = open(1, 1)?;
+    let mut par_s = open(jobs, jobs)?;
+    // candidates for the model's one bitwidth pair (no 8×8 energy baseline
+    // needed here — the Ω/NSGA stages only score the substitutable layers)
+    let library = generate_library_jobs(&[(est_bits, est_bits)], 0, jobs);
+
+    // 2. per-layer power iteration (paper Eq. 12)
+    let mode = HessianMode::Rank1 { iters };
+    let serial_secs = time_best_of(reps, || {
+        Estimator::compute(&mut serial_s, 1, mode).map(|_| ()).context("estimator (serial)")
+    })?;
+    let parallel_secs = time_best_of(reps, || {
+        Estimator::compute(&mut par_s, 1, mode).map(|_| ()).context("estimator (parallel)")
+    })?;
+    stages.push(StageResult { name: "estimator_power_iteration", serial_secs, parallel_secs });
+
+    // 3. Ω table with batched exact-HVP quadratics (paper §IV-C2)
+    let serial_secs = time_best_of(1, || {
+        estimate_table(&mut serial_s, &library, 1, HessianMode::Exact)
+            .map(|_| ())
+            .context("omega table (serial)")
+    })?;
+    let parallel_secs = time_best_of(1, || {
+        estimate_table(&mut par_s, &library, 1, HessianMode::Exact)
+            .map(|_| ())
+            .context("omega table (parallel)")
+    })?;
+    stages.push(StageResult { name: "omega_table_exact", serial_secs, parallel_secs });
+
+    // 4. NSGA population evaluation (GA-baseline candidate scoring); the
+    //    backend stays serial so only the population-wave workers vary
+    let manifest = serial_s.art.manifest.clone();
+    let n_choices: Vec<usize> = manifest
+        .layers
+        .iter()
+        .map(|l| library.for_bits(l.a_bits, l.w_bits).len())
+        .collect();
+    ensure!(
+        n_choices.iter().all(|&n| n > 0),
+        "bench: a layer has no AppMul candidates (library/spec bitwidth mismatch)"
+    );
+    let ga_secs = |session: &Session, ga_jobs: usize| -> Result<f64> {
+        let ncfg = NsgaConfig {
+            population: pop,
+            generations: gens,
+            seed: 0,
+            jobs: ga_jobs,
+            ..Default::default()
+        };
+        let err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+        let t = Instant::now();
+        nsga::run(&n_choices, &ncfg, |genome| {
+            let e_list: Vec<_> = genome
+                .iter()
+                .enumerate()
+                .map(|(k, &gi)| {
+                    let muls =
+                        library.for_bits(manifest.layers[k].a_bits, manifest.layers[k].w_bits);
+                    muls[gi.min(muls.len() - 1)].error_tensor()
+                })
+                .collect();
+            match session.evaluate_with(&e_list, 1) {
+                Ok(r) => (r.loss, 0.0),
+                Err(e) => {
+                    *err.lock().unwrap() = Some(e);
+                    (f64::MAX, f64::MAX)
+                }
+            }
+        });
+        let dt = t.elapsed().as_secs_f64();
+        if let Some(e) = err.into_inner().unwrap() {
+            return Err(e).context("nsga population eval");
+        }
+        Ok(dt)
+    };
+    let serial_secs = ga_secs(&serial_s, 1)?;
+    let parallel_secs = ga_secs(&serial_s, jobs)?;
+    stages.push(StageResult { name: "nsga_population_eval", serial_secs, parallel_secs });
+
+    // 5. native-backend batch execution (parallel eval batches)
+    let serial_secs = time_best_of(reps, || {
+        serial_s.evaluate(2).map(|_| ()).context("native exec (serial)")
+    })?;
+    let parallel_secs = time_best_of(reps, || {
+        par_s.evaluate(2).map(|_| ()).context("native exec (parallel)")
+    })?;
+    stages.push(StageResult { name: "native_batch_exec", serial_secs, parallel_secs });
+
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(stages)
+}
+
+/// The machine-readable snapshot (`fames bench --json`).
+pub fn snapshot_json(stages: &[StageResult], cfg: &BenchConfig) -> Json {
+    let mut arr = Json::arr();
+    for s in stages {
+        arr.push(
+            Json::obj()
+                .with("name", s.name)
+                .with("serial_secs", s.serial_secs)
+                .with("parallel_secs", s.parallel_secs)
+                .with("speedup", s.speedup()),
+        );
+    }
+    Json::obj()
+        .with("schema", SCHEMA)
+        .with("backend", "native")
+        .with("jobs", par::effective_jobs(cfg.jobs))
+        .with("quick", cfg.quick)
+        .with("stages", arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_shape_is_stable() {
+        let stages = vec![
+            StageResult { name: "library_generation", serial_secs: 1.0, parallel_secs: 0.5 },
+            StageResult { name: "native_batch_exec", serial_secs: 2.0, parallel_secs: 1.0 },
+        ];
+        let cfg = BenchConfig { jobs: 2, quick: true };
+        let j = snapshot_json(&stages, &cfg);
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert_eq!(j.get("jobs").unwrap().as_usize().unwrap(), 2);
+        let arr = j.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        for s in arr {
+            for key in ["name", "serial_secs", "parallel_secs", "speedup"] {
+                assert!(s.opt(key).is_some(), "missing {key}");
+            }
+        }
+        assert_eq!(arr[0].get("speedup").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn speedup_handles_zero_division() {
+        let s = StageResult { name: "x", serial_secs: 1.0, parallel_secs: 0.0 };
+        assert_eq!(s.speedup(), 0.0);
+    }
+}

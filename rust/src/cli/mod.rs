@@ -8,12 +8,13 @@
 //!   evaluate    evaluate the quantized-exact model (E = 0)
 //!   library     generate + print the AppMul library for given bitwidths
 //!   bits        HAWQ-like mixed-precision bitwidth proposal
+//!   bench       serial-vs-parallel perf snapshot (`--json` for machines)
 //!   experiment  reproduce a paper table/figure (table2|table3|table4|
 //!               fig2|fig3|fig4|fig5ab|fig5c|all)
 //!   help        this text
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -21,6 +22,7 @@ use crate::appmul::generate_library;
 use crate::config;
 use crate::pipeline::{self, FamesConfig, Session};
 use crate::report::{f3, pct, Table};
+use crate::util::par;
 
 const HELP: &str = "fames — FAMES reproduction (approximate-multiplier substitution)
 
@@ -34,6 +36,8 @@ COMMANDS
                (model=resnet8 cfg=w4a4 out=artifacts)
   library      print the AppMul library (bits=4 or bits=4x8)
   bits         HAWQ-like mixed-precision proposal (budget=0.1 vs 8-bit)
+  bench        serial-vs-parallel perf snapshot per hot stage
+               (--json machine-readable, --quick smoke sizes, out=PATH)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
                fig5c | all   (writes results/<id>.csv)
   help         this text
@@ -43,11 +47,14 @@ COMMON KEYS
   artifacts=PATH  seed=N  r_energy=0.7  est_batches=2  hessian=exact|rank1|off
   eval_batches=4  train_steps=500  train_lr=0.05
   calib_epochs=3  calib_samples=256  calib_lr=0.1  q_step=0.02  q_max=0.3
+  jobs=N (or --jobs=N)   worker threads for the parallel stages
+                         (0 = auto-detect; outputs are identical either way)
 
 ENVIRONMENT
   FAMES_BACKEND=native|pjrt   execution backend (default native; pjrt needs
                               a build with --features pjrt plus real XLA)
   FAMES_ARTIFACTS=PATH        artifact root override
+  FAMES_JOBS=N                worker-thread default when jobs= is not given
 ";
 
 /// Run the CLI. Returns a process exit code.
@@ -65,6 +72,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "synth" => cmd_synth(rest),
         "library" => cmd_library(rest),
         "bits" => cmd_bits(rest),
+        "bench" => cmd_bench(rest),
         "experiment" => crate::experiments::run_cli(rest),
         other => {
             eprintln!("unknown command '{other}'\n\n{HELP}");
@@ -79,12 +87,17 @@ fn base_config(args: &[String]) -> Result<FamesConfig> {
         ..FamesConfig::default()
     };
     config::apply_args(&mut cfg, args)?;
+    // make the knob reach code that resolves jobs lazily (e.g. the native
+    // backend's batched loops, library generation)
+    if cfg.jobs > 0 {
+        par::set_global_jobs(cfg.jobs);
+    }
     Ok(cfg)
 }
 
 fn cmd_pipeline(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
-    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
+    let rt = Arc::new(crate::runtime::Runtime::from_env()?);
     println!("== FAMES pipeline: {} / {} (R_energy = {}) ==", cfg.model, cfg.cfg, cfg.r_energy);
     let session0 = Session::open(rt.clone(), &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     let library = pipeline::library_for(&session0.art.manifest, cfg.seed);
@@ -112,7 +125,7 @@ fn cmd_pipeline(args: &[String]) -> Result<i32> {
 
 fn cmd_train(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
-    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
+    let rt = Arc::new(crate::runtime::Runtime::from_env()?);
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     let curve = crate::train::train(&mut session, cfg.train_steps, cfg.train_lr)?;
     let (head, tail) = curve.head_tail(20);
@@ -125,7 +138,7 @@ fn cmd_train(args: &[String]) -> Result<i32> {
 
 fn cmd_evaluate(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
-    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
+    let rt = Arc::new(crate::runtime::Runtime::from_env()?);
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     pipeline::ensure_trained(&mut session, &cfg)?;
     session.init_act_ranges()?;
@@ -204,6 +217,47 @@ fn cmd_library(args: &[String]) -> Result<i32> {
     Ok(0)
 }
 
+fn cmd_bench(args: &[String]) -> Result<i32> {
+    let mut bcfg = crate::bench::BenchConfig::default();
+    let mut json = false;
+    let mut out: Option<String> = None;
+    for a in args {
+        match a.as_str() {
+            "--json" | "json=1" => json = true,
+            "--quick" | "quick=1" => bcfg.quick = true,
+            _ => match a.strip_prefix("--").unwrap_or(a.as_str()).split_once('=') {
+                Some(("jobs", v)) => bcfg.jobs = v.parse().context("jobs")?,
+                Some(("out", v)) => out = Some(v.to_string()),
+                _ => bail!("bench takes --json, --quick, jobs=N, out=PATH (got '{a}')"),
+            },
+        }
+    }
+    let stages = crate::bench::run_stages(&bcfg)?;
+    let doc = crate::bench::snapshot_json(&stages, &bcfg);
+    if let Some(path) = &out {
+        doc.save(path)?;
+        println!("wrote {path}");
+    }
+    if json {
+        println!("{}", doc.pretty());
+    } else {
+        let mut t = Table::new(
+            format!("fames bench (jobs = {})", par::effective_jobs(bcfg.jobs)),
+            &["stage", "serial", "parallel", "speedup"],
+        );
+        for s in &stages {
+            t.row(vec![
+                s.name.to_string(),
+                crate::util::fmt_secs(s.serial_secs),
+                crate::util::fmt_secs(s.parallel_secs),
+                format!("{:.2}×", s.speedup()),
+            ]);
+        }
+        t.print();
+    }
+    Ok(0)
+}
+
 fn cmd_bits(args: &[String]) -> Result<i32> {
     let mut budget = 0.10;
     let mut kv = Vec::new();
@@ -215,7 +269,7 @@ fn cmd_bits(args: &[String]) -> Result<i32> {
         }
     }
     let cfg = base_config(&kv)?;
-    let rt = Rc::new(crate::runtime::Runtime::from_env()?);
+    let rt = Arc::new(crate::runtime::Runtime::from_env()?);
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     pipeline::ensure_trained(&mut session, &cfg)?;
     let lib = generate_library(&[(2, 2), (3, 3), (4, 4), (8, 8)], cfg.seed);

@@ -38,6 +38,7 @@ pub fn apply_kv(cfg: &mut FamesConfig, key: &str, value: &str) -> Result<()> {
         "eval_batches" => cfg.eval_batches = vu()?,
         "train_steps" => cfg.train_steps = vu()?,
         "train_lr" => cfg.train_lr = vf()? as f32,
+        "jobs" => cfg.jobs = vu()?,
         "calib_epochs" => cfg.calib.epochs = vu()?,
         "calib_samples" => cfg.calib.samples = vu()?,
         "calib_lr" => cfg.calib.lr = vf()? as f32,
@@ -69,9 +70,11 @@ pub fn from_json(j: &Json) -> Result<FamesConfig> {
     Ok(cfg)
 }
 
-/// Parse trailing `key=value` CLI arguments over a base config.
+/// Parse trailing `key=value` CLI arguments over a base config. A leading
+/// `--` on the key is accepted (`--jobs=4` ≡ `jobs=4`).
 pub fn apply_args(cfg: &mut FamesConfig, args: &[String]) -> Result<()> {
     for a in args {
+        let a = a.strip_prefix("--").unwrap_or(a.as_str());
         match a.split_once('=') {
             Some((k, v)) => apply_kv(cfg, k, v)?,
             None => bail!("expected key=value, got '{a}'"),
@@ -127,5 +130,16 @@ mod tests {
         assert_eq!(cfg.model, "resnet14");
         assert_eq!(cfg.eval_batches, 2);
         assert!(apply_args(&mut cfg, &["nokv".to_string()]).is_err());
+    }
+
+    #[test]
+    fn jobs_knob_accepts_dashed_and_plain_forms() {
+        let mut cfg = FamesConfig::default();
+        assert_eq!(cfg.jobs, 0, "default is auto-detect");
+        apply_args(&mut cfg, &["jobs=3".to_string()]).unwrap();
+        assert_eq!(cfg.jobs, 3);
+        apply_args(&mut cfg, &["--jobs=8".to_string()]).unwrap();
+        assert_eq!(cfg.jobs, 8);
+        assert!(apply_kv(&mut cfg, "jobs", "many").is_err());
     }
 }

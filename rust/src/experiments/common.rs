@@ -1,7 +1,7 @@
 //! Shared context for the experiment drivers.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -14,7 +14,7 @@ use crate::tensor::Tensor;
 /// `FAMES_BACKEND`), the artifact root, a results directory, and a scale
 /// knob for quick runs.
 pub struct ExpCtx {
-    pub rt: Rc<Runtime>,
+    pub rt: Arc<Runtime>,
     pub root: String,
     pub results: PathBuf,
     /// `FAMES_FAST=1` shrinks sweeps for smoke runs.
@@ -28,7 +28,7 @@ impl ExpCtx {
         let results = PathBuf::from("results");
         std::fs::create_dir_all(&results)?;
         Ok(ExpCtx {
-            rt: Rc::new(Runtime::from_env()?),
+            rt: Arc::new(Runtime::from_env()?),
             root,
             results,
             fast: std::env::var("FAMES_FAST").map(|v| v == "1").unwrap_or(false),

@@ -134,7 +134,7 @@ pub fn fig3(ctx: &ExpCtx) -> Result<()> {
                 seed: ctx.seed + 7,
                 ..Default::default()
             };
-            let session = &mut prep.session;
+            let session = &prep.session;
             let library = &prep.library;
             let (front, _) = nsga::run(&n_choices, &cfg, |genome| {
                 let mut e_list = Vec::with_capacity(genome.len());
@@ -148,10 +148,8 @@ pub fn fig3(ctx: &ExpCtx) -> Result<()> {
                 }
                 let energy = EnergyModel::new(&manifest, library);
                 let ratio = energy.ratio_vs_exact(&sel).unwrap_or(f64::MAX);
-                if session.set_selection(e_list).is_err() {
-                    return (f64::MAX, f64::MAX);
-                }
-                match session.evaluate(1) {
+                // parallel-safe scoring: no shared-session mutation
+                match session.evaluate_with(&e_list, 1) {
                     Ok(r) => (r.loss, ratio),
                     Err(_) => (f64::MAX, f64::MAX),
                 }

@@ -104,17 +104,19 @@ pub(super) fn run_ga(ctx: &ExpCtx, prep: &mut Prepared, pop: usize, gens: usize)
         .map(|l| prep.library.for_bits(l.a_bits, l.w_bits).len())
         .collect();
     let eval_batches = if ctx.fast { 1 } else { 2 };
-    let mut err: Option<anyhow::Error> = None;
+    // the fitness closure runs on `util::par` worker threads, so failures
+    // are collected behind a mutex instead of a captured &mut
+    let err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
     let cfg = NsgaConfig {
         population: pop,
         generations: gens,
         seed: ctx.seed,
         ..Default::default()
     };
-    let session = &mut prep.session;
+    let session = &prep.session;
     let library = &prep.library;
     let (_front, evals) = nsga_run(&n_choices, &cfg, |genome| {
-        let mut run = || -> Result<(f64, f64)> {
+        let run = || -> Result<(f64, f64)> {
             let energy = EnergyModel::new(&manifest, library);
             let mut selection = Vec::with_capacity(genome.len());
             let mut e_list = Vec::with_capacity(genome.len());
@@ -126,20 +128,20 @@ pub(super) fn run_ga(ctx: &ExpCtx, prep: &mut Prepared, pop: usize, gens: usize)
                 e_list.push(am.error_tensor());
             }
             let ratio = energy.ratio_vs_exact(&selection)?;
-            session.set_selection(e_list)?;
-            let r = session.evaluate(eval_batches)?;
+            // score without mutating the shared session (parallel-safe)
+            let r = session.evaluate_with(&e_list, eval_batches)?;
             Ok((r.loss, ratio))
         };
         match run() {
             Ok(v) => v,
             Err(e) => {
-                err = Some(e);
+                *err.lock().unwrap() = Some(e);
                 (f64::MAX, f64::MAX)
             }
         }
     });
     prep.session.clear_selection();
-    if let Some(e) = err {
+    if let Some(e) = err.into_inner().unwrap() {
         return Err(e);
     }
     Ok(evals)

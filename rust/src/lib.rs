@@ -30,10 +30,21 @@
 //! PJRT. Build/test entry points (tier-1): `cargo build --release &&
 //! cargo test -q` from the repo root; see `rust/README.md`.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! # Parallelism
+//!
+//! The hot paths — library netlist simulation, per-layer power iteration,
+//! Ω-table evaluation, selection scoring, native batch execution — fan out
+//! over scoped worker threads ([`util::par`]); results are **bit-identical
+//! at every worker count** (`--jobs` / `FAMES_JOBS`, default
+//! auto-detect). `fames bench --json` emits a per-stage serial-vs-parallel
+//! snapshot ([`bench`]).
+//!
+//! See `docs/ARCHITECTURE.md` for the paper-section → module map, and
+//! `DESIGN.md` / `EXPERIMENTS.md` for the system inventory and the
 //! paper-vs-measured record.
 
 pub mod appmul;
+pub mod bench;
 pub mod calibrate;
 pub mod circuit;
 pub mod cli;

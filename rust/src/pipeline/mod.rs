@@ -9,7 +9,7 @@ pub mod session;
 pub use session::{EvalResult, Session};
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -20,6 +20,7 @@ use crate::runtime::Runtime;
 use crate::select::{self, Choice};
 use crate::sensitivity::{self, HessianMode, PerturbTable};
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// Pipeline configuration (see `fames help pipeline` for CLI mapping).
 #[derive(Clone, Debug)]
@@ -39,6 +40,9 @@ pub struct FamesConfig {
     /// fp32 pre-training steps when no cached parameters exist.
     pub train_steps: usize,
     pub train_lr: f32,
+    /// Worker threads for the parallelized stages (0 = auto; results are
+    /// bit-identical at every setting). CLI: `--jobs=N` / `jobs=N`.
+    pub jobs: usize,
 }
 
 impl Default for FamesConfig {
@@ -55,6 +59,7 @@ impl Default for FamesConfig {
             eval_batches: 4,
             train_steps: 900,
             train_lr: 0.01,
+            jobs: 0,
         }
     }
 }
@@ -126,21 +131,43 @@ pub fn select_ilp<'l>(
     library: &'l Library,
     r_energy: f64,
 ) -> Result<(Vec<Vec<&'l AppMul>>, select::Solution)> {
+    select_ilp_jobs(table, energy, library, r_energy, 0)
+}
+
+/// [`select_ilp`] with an explicit worker count for the parallel MCKP row
+/// build (0 = auto; the solution is identical at every setting).
+pub fn select_ilp_jobs<'l>(
+    table: &PerturbTable,
+    energy: &EnergyModel<'_>,
+    library: &'l Library,
+    r_energy: f64,
+    jobs: usize,
+) -> Result<(Vec<Vec<&'l AppMul>>, select::Solution)> {
     let manifest = energy.manifest;
+    // per-layer candidate scoring is independent — build the MCKP rows in
+    // parallel (reassembled in layer order; bit-deterministic)
+    let built = par::try_par_map(
+        &manifest.layers,
+        jobs,
+        |k, layer| -> Result<(Vec<Choice>, Vec<&'l AppMul>)> {
+            let muls = library.for_bits(layer.a_bits, layer.w_bits);
+            anyhow::ensure!(!muls.is_empty(), "no AppMuls for {}x{}", layer.a_bits, layer.w_bits);
+            anyhow::ensure!(muls.len() == table.values[k].len(),
+                            "table/library mismatch at layer {k}");
+            let row = muls
+                .iter()
+                .enumerate()
+                .map(|(i, am)| Choice {
+                    cost: energy.layer_energy(layer, am),
+                    value: table.values[k][i],
+                })
+                .collect();
+            Ok((row, muls))
+        },
+    )?;
     let mut problem: Vec<Vec<Choice>> = Vec::with_capacity(manifest.layers.len());
     let mut choices: Vec<Vec<&AppMul>> = Vec::with_capacity(manifest.layers.len());
-    for (k, layer) in manifest.layers.iter().enumerate() {
-        let muls = library.for_bits(layer.a_bits, layer.w_bits);
-        anyhow::ensure!(!muls.is_empty(), "no AppMuls for {}x{}", layer.a_bits, layer.w_bits);
-        anyhow::ensure!(muls.len() == table.values[k].len(),
-                        "table/library mismatch at layer {k}");
-        let mut row = Vec::with_capacity(muls.len());
-        for (i, am) in muls.iter().enumerate() {
-            row.push(Choice {
-                cost: energy.layer_energy(layer, am),
-                value: table.values[k][i],
-            });
-        }
+    for (row, muls) in built {
         problem.push(row);
         choices.push(muls);
     }
@@ -159,9 +186,10 @@ pub fn selection_tensors(choices: &[Vec<&AppMul>], picks: &[usize]) -> Vec<Tenso
 }
 
 /// Run the full FAMES pipeline.
-pub fn run(rt: Rc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<PipelineReport> {
+pub fn run(rt: Arc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<PipelineReport> {
     let mut times = PhaseTimes::default();
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    session.jobs = cfg.jobs;
     times.train_secs = ensure_trained(&mut session, cfg)?;
     session.init_act_ranges()?;
 
@@ -180,7 +208,7 @@ pub fn run(rt: Rc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<Pipe
     // Step 2: ILP selection
     let t = std::time::Instant::now();
     let energy = EnergyModel::new(&session.art.manifest, library);
-    let (choices, sol) = select_ilp(&table, &energy, library, cfg.r_energy)?;
+    let (choices, sol) = select_ilp_jobs(&table, &energy, library, cfg.r_energy, cfg.jobs)?;
     times.select_secs = t.elapsed().as_secs_f64();
 
     let selection: Vec<&AppMul> = choices

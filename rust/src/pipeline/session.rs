@@ -8,7 +8,7 @@
 //! lives in exactly two places (aot.py and this file).
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -35,11 +35,14 @@ pub struct EvalResult {
 struct Extra<'a> {
     batch: Option<&'a Batch>,
     rvecs: Option<&'a [Tensor]>,
+    /// Override for the session's current E selection (used by parallel
+    /// candidate scoring, which must not mutate shared session state).
+    e_list: Option<&'a [Tensor]>,
     lr: f32,
 }
 
 pub struct Session {
-    pub rt: Rc<Runtime>,
+    pub rt: Arc<Runtime>,
     pub art: ArtifactSet,
     pub data: Dataset,
     pub params: TensorStore,
@@ -54,12 +57,16 @@ pub struct Session {
     pub eval_base: u64,
     /// Training pool size (samples 0..pool are the train set).
     pub train_pool: u64,
+    /// Worker threads for the parallelized estimation/selection stages
+    /// (0 = auto; see `util::par::effective_jobs`). Results are
+    /// bit-identical at every setting.
+    pub jobs: usize,
 }
 
 impl Session {
     /// Open an artifact set and initialize fresh state (He-init params,
     /// wide LWC bounds, unit activation scales, exact multipliers).
-    pub fn open(rt: Rc<Runtime>, artifact_root: impl AsRef<Path>, model: &str, cfg: &str,
+    pub fn open(rt: Arc<Runtime>, artifact_root: impl AsRef<Path>, model: &str, cfg: &str,
                 seed: u64) -> Result<Session> {
         let art = ArtifactSet::locate(artifact_root, model, cfg)?;
         let m = &art.manifest;
@@ -75,6 +82,7 @@ impl Session {
             e_list: Vec::new(),
             eval_base: 1 << 20,
             train_pool: 4096,
+            jobs: 0,
         };
         s.init_params(seed);
         s.reset_quant_state();
@@ -150,7 +158,7 @@ impl Session {
 
     // ---- executable plumbing ----
 
-    pub fn exe(&self, name: &str) -> Result<Rc<Executable>> {
+    pub fn exe(&self, name: &str) -> Result<Arc<Executable>> {
         self.rt.load(self.art.exe_path(name)?)
     }
 
@@ -182,7 +190,7 @@ impl Session {
                     }
                 }
                 "e_list" => {
-                    for e in &self.e_list {
+                    for e in extra.e_list.unwrap_or(&self.e_list) {
                         v.push(e.clone());
                     }
                 }
@@ -328,18 +336,24 @@ impl Session {
         self.data.batch(self.eval_base + idx * b as u64, b)
     }
 
-    /// Evaluate the quantized+approximate model (current E selection) over
-    /// `n_batches` held-out batches.
-    pub fn evaluate(&self, n_batches: usize) -> Result<EvalResult> {
+    /// Shared eval loop over the held-out stream through one fwd-shaped
+    /// executable, optionally overriding the session's E selection.
+    fn eval_exe(
+        &self,
+        exe: &str,
+        e_list: Option<&[Tensor]>,
+        n_batches: usize,
+    ) -> Result<EvalResult> {
         let mut loss_sum = 0.0;
         let mut correct = 0.0;
         let mut samples = 0usize;
         for i in 0..n_batches {
             let batch = self.eval_batch(i as u64);
             let out = self.run_exe(
-                "fwd",
+                exe,
                 &Extra {
                     batch: Some(&batch),
+                    e_list,
                     ..Default::default()
                 },
             )?;
@@ -354,30 +368,29 @@ impl Session {
         })
     }
 
-    /// Same as [`evaluate`] but through the Pallas-kernel artifact (Layer-1
-    /// path); numerics must match `fwd` — asserted by integration tests.
-    pub fn evaluate_pallas(&self, n_batches: usize) -> Result<EvalResult> {
-        let mut loss_sum = 0.0;
-        let mut correct = 0.0;
-        let mut samples = 0usize;
-        for i in 0..n_batches {
-            let batch = self.eval_batch(i as u64);
-            let out = self.run_exe(
-                "fwd_pallas",
-                &Extra {
-                    batch: Some(&batch),
-                    ..Default::default()
-                },
-            )?;
-            loss_sum += out[0].item()? as f64;
-            correct += out[1].item()? as f64;
-            samples += batch.labels.len();
+    /// Evaluate the quantized+approximate model (current E selection) over
+    /// `n_batches` held-out batches.
+    pub fn evaluate(&self, n_batches: usize) -> Result<EvalResult> {
+        self.eval_exe("fwd", None, n_batches)
+    }
+
+    /// Evaluate under an explicit E selection **without mutating the
+    /// session** — the candidate-scoring primitive used by the parallel
+    /// NSGA population evaluation, where many genomes are scored
+    /// concurrently against one shared `&Session`.
+    pub fn evaluate_with(&self, e_list: &[Tensor], n_batches: usize) -> Result<EvalResult> {
+        let m = &self.art.manifest;
+        if e_list.len() != m.layers.len() {
+            bail!("selection has {} layers, model has {}", e_list.len(), m.layers.len());
         }
-        Ok(EvalResult {
-            loss: loss_sum / samples as f64,
-            accuracy: correct / samples as f64,
-            samples,
-        })
+        self.eval_exe("fwd", Some(e_list), n_batches)
+    }
+
+    /// Same as [`Session::evaluate`] but through the Pallas-kernel artifact
+    /// (Layer-1 path); numerics must match `fwd` — asserted by integration
+    /// tests.
+    pub fn evaluate_pallas(&self, n_batches: usize) -> Result<EvalResult> {
+        self.eval_exe("fwd_pallas", None, n_batches)
     }
 
     /// Per-layer pre-quant conv inputs under the current E selection,
@@ -444,7 +457,7 @@ impl Session {
 
     /// Per-layer exact Gauss–Newton quadratics `½ rₖ·(H_kk rₖ)` for all
     /// layers in ONE execution (the `quad_e` artifact). Much cheaper than
-    /// per-layer [`hvp_e`] calls: the primal pass is shared.
+    /// per-layer [`Session::hvp_e`] calls: the primal pass is shared.
     pub fn quad_e(&self, rvecs: &[Tensor], batch_idx: u64) -> Result<Vec<f64>> {
         let m = &self.art.manifest;
         let batch = self

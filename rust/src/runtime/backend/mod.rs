@@ -9,7 +9,7 @@
 //!   [`native::write_synthetic_artifacts`]) that follow the same
 //!   `manifest.json` contract as the AOT/XLA path, so the full FAMES
 //!   estimate → select → calibrate loop runs on any machine.
-//! * [`pjrt`] (`--features pjrt`) — the XLA/PJRT path for real AOT-compiled
+//! * `pjrt` (`--features pjrt`; cfg-gated module) — the XLA/PJRT path for real AOT-compiled
 //!   HLO-text artifacts produced by `python/compile/aot.py`.
 //!
 //! Later scaling work (sharded execution, batched dispatch, GPU clients)
@@ -26,13 +26,18 @@ use crate::tensor::Tensor;
 use crate::Result;
 
 /// A loaded (compiled) executable, ready to run on f32 tensors.
-pub trait LoadedExec {
+///
+/// `Send + Sync` is part of the seam contract: the pipeline layers fan
+/// executions out across scoped worker threads (`util::par`), so a handle
+/// must be shareable. Backends wrapping thread-pinned foreign runtimes must
+/// provide their own dispatch (see `runtime::backend::pjrt`).
+pub trait LoadedExec: Send + Sync {
     /// Execute on f32 inputs; returns the output tensors in manifest order.
     fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
 }
 
 /// An execution backend: loads artifacts into [`LoadedExec`] handles.
-pub trait ExecBackend {
+pub trait ExecBackend: Send + Sync {
     /// Short backend identifier (`"native"`, `"pjrt"`, …).
     fn name(&self) -> &'static str;
 

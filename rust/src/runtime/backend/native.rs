@@ -32,9 +32,15 @@ use crate::json::Json;
 use crate::rng::Pcg;
 use crate::runtime::{ExeSpec, Manifest};
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// Synthetic activation samples per layer (quantile/calibration substrate).
 const N_ACT: usize = 256;
+/// Samples per parallel work unit in the batched loops. Fixed (independent
+/// of the worker count) so chunked f64 reductions merge in an identical
+/// order at every `jobs` setting — the bit-determinism contract of
+/// [`crate::util::par`].
+const SAMPLE_CHUNK: usize = 32;
 /// First-order (gradient) scale of the per-layer error penalty.
 const G0: f64 = 0.4;
 /// Curvature scale of the per-layer error penalty.
@@ -57,11 +63,20 @@ const NATIVE_FORMAT: &str = "fames-native-synthetic-v1";
 /// Deterministic pure-Rust backend.
 pub struct NativeBackend {
     seed: u64,
+    /// Worker threads for batched loops (0 = auto via `util::par`).
+    /// Outputs are bit-identical at every setting.
+    jobs: usize,
 }
 
 impl NativeBackend {
     pub fn new(seed: u64) -> Self {
-        NativeBackend { seed }
+        NativeBackend { seed, jobs: 0 }
+    }
+
+    /// Pin the worker count for this backend's executables (0 = auto).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
     }
 }
 
@@ -123,6 +138,7 @@ impl ExecBackend for NativeBackend {
             spec,
             kind,
             seed: self.seed,
+            jobs: self.jobs,
         }))
     }
 }
@@ -165,6 +181,8 @@ struct NativeExec {
     spec: ExeSpec,
     kind: Kind,
     seed: u64,
+    /// Worker threads for the batched sample/layer loops (0 = auto).
+    jobs: usize,
 }
 
 /// Inputs regrouped per the manifest's input-group ordering.
@@ -318,6 +336,8 @@ impl NativeExec {
     }
 
     /// Linear logits `z[s,i] = Σ_d W[i,d]·x[s,d] + b[i]` (f64 accumulation).
+    /// Samples are independent, so the batch is computed in parallel
+    /// per-chunk; each sample's row is bit-identical to the serial sweep.
     fn logits(&self, w: &Tensor, b: &Tensor, images: &Tensor) -> Result<Vec<f64>> {
         let nc = self.manifest.num_classes;
         let d: usize = self.manifest.image_shape.iter().product();
@@ -328,17 +348,25 @@ impl NativeExec {
             images.shape()
         );
         let (wd, bd, xd) = (w.data(), b.data(), images.data());
-        let mut z = vec![0f64; bsz * nc];
-        for s in 0..bsz {
-            let x = &xd[s * d..(s + 1) * d];
-            for i in 0..nc {
-                let row = &wd[i * d..(i + 1) * d];
-                let mut acc = bd[i] as f64;
-                for (wv, xv) in row.iter().zip(x) {
-                    acc += *wv as f64 * *xv as f64;
+        let samples: Vec<usize> = (0..bsz).collect();
+        let parts = par::par_chunks(&samples, SAMPLE_CHUNK, self.jobs, |_, chunk| {
+            let mut zc = vec![0f64; chunk.len() * nc];
+            for (ci, &s) in chunk.iter().enumerate() {
+                let x = &xd[s * d..(s + 1) * d];
+                for i in 0..nc {
+                    let row = &wd[i * d..(i + 1) * d];
+                    let mut acc = bd[i] as f64;
+                    for (wv, xv) in row.iter().zip(x) {
+                        acc += *wv as f64 * *xv as f64;
+                    }
+                    zc[ci * nc + i] = acc;
                 }
-                z[s * nc + i] = acc;
             }
+            zc
+        });
+        let mut z = Vec::with_capacity(bsz * nc);
+        for p in parts {
+            z.extend(p);
         }
         Ok(z)
     }
@@ -438,9 +466,12 @@ impl NativeExec {
     }
 
     /// Total per-sample loss penalty of the current quant/approx state.
+    /// Per-layer terms are independent; partials are summed in layer order,
+    /// so the total is bit-identical to the serial sweep at any job count.
     fn total_penalty(&self, p: &Parsed) -> Result<f64> {
-        let mut pen = 0.0;
-        for k in 0..self.manifest.layers.len() {
+        let layers: Vec<usize> = (0..self.manifest.layers.len()).collect();
+        let parts = par::try_par_map(&layers, self.jobs, |_, &k| -> Result<f64> {
+            let mut pen = 0.0;
             if let Some(e) = p.e_list.get(k) {
                 pen += self.perturb_penalty(k, e)?;
             }
@@ -450,8 +481,9 @@ impl NativeExec {
             if let Some(&(g, b)) = p.lwc.get(k) {
                 pen += lwc_penalty(g, b);
             }
-        }
-        Ok(pen)
+            Ok(pen)
+        })?;
+        Ok(parts.into_iter().sum())
     }
 
     /// `fwd`/`fwd_pallas`: (loss_sum, correct) with penalty-coupled noise.
@@ -463,27 +495,42 @@ impl NativeExec {
         let nc = self.manifest.num_classes;
         let pen = self.total_penalty(p)?;
         let eta = ACC_NOISE * pen.max(0.0).sqrt();
-        let mut loss_sum = 0.0;
-        let mut correct = 0.0;
-        for (s, &lab) in labels.data().iter().enumerate() {
-            let mut row: Vec<f64> = z[s * nc..(s + 1) * nc].to_vec();
-            if eta > 0.0 {
-                let mut rng = Pcg::new(
-                    self.seed
-                        ^ (s as u64).wrapping_mul(0x9e3779b97f4a7c15)
-                        ^ ((lab as i64 as u64) << 17),
-                    29,
-                );
-                for v in &mut row {
-                    *v += eta * rng.normal();
+        // Per-sample noise is seeded by (sample, label), so samples stay
+        // independent; chunk partials merge in order (bit-deterministic).
+        let labels_d = labels.data();
+        let samples: Vec<usize> = (0..labels_d.len()).collect();
+        let parts = par::par_chunks(&samples, SAMPLE_CHUNK, self.jobs, |_, chunk| {
+            let mut loss = 0.0f64;
+            let mut hits = 0.0f64;
+            for &s in chunk {
+                let lab = labels_d[s];
+                let mut row: Vec<f64> = z[s * nc..(s + 1) * nc].to_vec();
+                if eta > 0.0 {
+                    let mut rng = Pcg::new(
+                        self.seed
+                            ^ (s as u64).wrapping_mul(0x9e3779b97f4a7c15)
+                            ^ ((lab as i64 as u64) << 17),
+                        29,
+                    );
+                    for v in &mut row {
+                        *v += eta * rng.normal();
+                    }
+                }
+                let lab = lab as usize;
+                ensure!(lab < nc, "label {lab} out of range (nc={nc})");
+                loss += logsumexp(&row) - row[lab];
+                if argmax(&row) == lab {
+                    hits += 1.0;
                 }
             }
-            let lab = lab as usize;
-            ensure!(lab < nc, "label {lab} out of range (nc={nc})");
-            loss_sum += logsumexp(&row) - row[lab];
-            if argmax(&row) == lab {
-                correct += 1.0;
-            }
+            Ok((loss, hits))
+        });
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        for part in parts {
+            let (l, c): (f64, f64) = part?;
+            loss_sum += l;
+            correct += c;
         }
         loss_sum += labels.len() as f64 * pen;
         Ok(vec![
@@ -529,7 +576,8 @@ impl NativeExec {
         let loss = fwd[0].item()? as f64 / labels.len() as f64;
         let mut out = Vec::with_capacity(nl + 1);
         out.push(Tensor::scalar(loss as f32));
-        for k in 0..nl {
+        let layers: Vec<usize> = (0..nl).collect();
+        out.extend(par::try_par_map(&layers, self.jobs, |_, &k| -> Result<Tensor> {
             let (g, h) = self.layer_coeffs(k);
             let e = p.e_list[k];
             ensure!(e.len() == g.len(), "grad_e: layer {k} E length {}", e.len());
@@ -539,32 +587,33 @@ impl NativeExec {
                 .enumerate()
                 .map(|(i, &ev)| g[i] + h[i] * ev)
                 .collect();
-            out.push(Tensor::from_slice(&grad));
-        }
+            Ok(Tensor::from_slice(&grad))
+        })?);
         Ok(out)
     }
 
     /// `hvp_e`: diag Hessian-vector products `hₖ ⊙ rₖ` (cross-layer zero).
+    /// Layers are independent, so they run in parallel.
     fn run_hvp_e(&self, p: &Parsed) -> Result<Vec<Tensor>> {
         let nl = self.manifest.layers.len();
         ensure!(p.rvecs.len() == nl, "hvp_e: rvecs required");
-        let mut out = Vec::with_capacity(nl);
-        for k in 0..nl {
+        let layers: Vec<usize> = (0..nl).collect();
+        par::try_par_map(&layers, self.jobs, |_, &k| -> Result<Tensor> {
             let (_, h) = self.layer_coeffs(k);
             let r = p.rvecs[k];
             ensure!(r.len() == h.len(), "hvp_e: layer {k} r length {}", r.len());
             let hv: Vec<f32> = r.data().iter().enumerate().map(|(i, &rv)| h[i] * rv).collect();
-            out.push(Tensor::from_slice(&hv));
-        }
-        Ok(out)
+            Ok(Tensor::from_slice(&hv))
+        })
     }
 
-    /// `quad_e`: per-layer Gauss–Newton quadratics `½ rₖ·(hₖ ⊙ rₖ)`.
+    /// `quad_e`: per-layer Gauss–Newton quadratics `½ rₖ·(hₖ ⊙ rₖ)`,
+    /// one independent parallel unit per layer.
     fn run_quad_e(&self, p: &Parsed) -> Result<Vec<Tensor>> {
         let nl = self.manifest.layers.len();
         ensure!(p.rvecs.len() == nl, "quad_e: rvecs required");
-        let mut out = Vec::with_capacity(nl);
-        for k in 0..nl {
+        let layers: Vec<usize> = (0..nl).collect();
+        par::try_par_map(&layers, self.jobs, |_, &k| -> Result<Tensor> {
             let (_, h) = self.layer_coeffs(k);
             let r = p.rvecs[k];
             ensure!(r.len() == h.len(), "quad_e: layer {k} r length {}", r.len());
@@ -574,9 +623,8 @@ impl NativeExec {
                 .enumerate()
                 .map(|(i, &rv)| 0.5 * h[i] as f64 * rv as f64 * rv as f64)
                 .sum();
-            out.push(Tensor::scalar(q as f32));
-        }
-        Ok(out)
+            Ok(Tensor::scalar(q as f32))
+        })
     }
 
     /// `calib`: mean loss + analytic ∂loss/∂(γ,β) per layer.
@@ -611,28 +659,49 @@ impl NativeExec {
         let bsz = labels.len();
         ensure!(z.len() == bsz * nc, "logits/labels mismatch");
         let xd = images.data();
+        let labels_d = labels.data();
+        let inv_b = 1.0 / bsz as f64;
+        // Per-chunk partial gradients, merged in chunk order: the f64
+        // accumulation tree is fixed by SAMPLE_CHUNK, not by the worker
+        // count, so dW/db are bit-identical at any `jobs`.
+        let samples: Vec<usize> = (0..bsz).collect();
+        let parts = par::par_chunks(&samples, SAMPLE_CHUNK, self.jobs, |_, chunk| {
+            let mut dw = vec![0f64; nc * d];
+            let mut db = vec![0f64; nc];
+            let mut loss = 0.0;
+            for &s in chunk {
+                let lab = labels_d[s] as usize;
+                ensure!(lab < nc, "label {lab} out of range");
+                let row = &z[s * nc..(s + 1) * nc];
+                let lse = logsumexp(row);
+                loss += lse - row[lab];
+                let x = &xd[s * d..(s + 1) * d];
+                for i in 0..nc {
+                    let mut dz = (row[i] - lse).exp();
+                    if i == lab {
+                        dz -= 1.0;
+                    }
+                    dz *= inv_b;
+                    db[i] += dz;
+                    let drow = &mut dw[i * d..(i + 1) * d];
+                    for (dv, &xv) in drow.iter_mut().zip(x) {
+                        *dv += dz * xv as f64;
+                    }
+                }
+            }
+            Ok((loss, dw, db))
+        });
         let mut dw = vec![0f64; nc * d];
         let mut db = vec![0f64; nc];
         let mut loss = 0.0;
-        let inv_b = 1.0 / bsz as f64;
-        for (s, &lab) in labels.data().iter().enumerate() {
-            let lab = lab as usize;
-            ensure!(lab < nc, "label {lab} out of range");
-            let row = &z[s * nc..(s + 1) * nc];
-            let lse = logsumexp(row);
-            loss += lse - row[lab];
-            let x = &xd[s * d..(s + 1) * d];
-            for i in 0..nc {
-                let mut dz = (row[i] - lse).exp();
-                if i == lab {
-                    dz -= 1.0;
-                }
-                dz *= inv_b;
-                db[i] += dz;
-                let drow = &mut dw[i * d..(i + 1) * d];
-                for (dv, &xv) in drow.iter_mut().zip(x) {
-                    *dv += dz * xv as f64;
-                }
+        for part in parts {
+            let (lp, dwp, dbp): (f64, Vec<f64>, Vec<f64>) = part?;
+            loss += lp;
+            for (acc, v) in dw.iter_mut().zip(&dwp) {
+                *acc += v;
+            }
+            for (acc, v) in db.iter_mut().zip(&dbp) {
+                *acc += v;
             }
         }
         Ok((

@@ -8,9 +8,13 @@
 //! All executables follow the contract recorded in each artifact set's
 //! `manifest.json`: f32 inputs in manifest order, a tuple of f32 outputs.
 //!
-//! Note: `PjRtClient` holds an `Rc` internally, so a backend (and therefore
-//! the owning [`crate::runtime::Runtime`]) is pinned to the thread that
-//! created it. XLA's own intra-op thread pool still uses all cores.
+//! Note: the `ExecBackend`/`LoadedExec` seam requires `Send + Sync` (the
+//! pipeline fans executions out via `util::par`). The in-tree shim's handle
+//! types satisfy that trivially; real xla-rs `PjRtClient` handles hold an
+//! `Rc` internally and are pinned to their creating thread, so a real-XLA
+//! integration must wrap client/executable access in a dedicated dispatcher
+//! thread (channel-based) rather than sharing handles directly. XLA's own
+//! intra-op thread pool still uses all cores either way.
 //!
 //! By default the `xla` dependency resolves to the in-tree API shim
 //! (`rust/vendor/xla`), which compiles without libxla but errors at runtime —

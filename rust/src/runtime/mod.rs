@@ -17,10 +17,9 @@ mod manifest;
 pub use backend::{ExecBackend, LoadedExec};
 pub use manifest::{ArtifactSet, ExeSpec, LayerInfo, Manifest, ParamInfo};
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -35,11 +34,12 @@ pub struct ExecStats {
     pub compile_secs: f64,
 }
 
-/// A loaded executable with its source path and stats.
+/// A loaded executable with its source path and stats. Shareable across
+/// the scoped worker threads of `util::par` (stats behind a [`Mutex`]).
 pub struct Executable {
     exe: Box<dyn LoadedExec>,
     path: PathBuf,
-    stats: RefCell<ExecStats>,
+    stats: Mutex<ExecStats>,
 }
 
 impl Executable {
@@ -53,14 +53,14 @@ impl Executable {
         if out.is_empty() {
             bail!("executable {} produced no outputs", self.path.display());
         }
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.calls += 1;
         st.total_secs += start.elapsed().as_secs_f64();
         Ok(out)
     }
 
     pub fn stats(&self) -> ExecStats {
-        *self.stats.borrow()
+        *self.stats.lock().unwrap()
     }
 
     pub fn path(&self) -> &Path {
@@ -69,9 +69,12 @@ impl Executable {
 }
 
 /// A backend plus a compile cache keyed by canonical artifact path.
+///
+/// `Send + Sync` (the backend traits require it), so one runtime can serve
+/// concurrent executions from the `util::par` worker threads.
 pub struct Runtime {
     backend: Box<dyn ExecBackend>,
-    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
 }
 
 impl Runtime {
@@ -118,7 +121,7 @@ impl Runtime {
     pub fn with_backend(backend: Box<dyn ExecBackend>) -> Self {
         Runtime {
             backend,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
         }
     }
 
@@ -127,13 +130,16 @@ impl Runtime {
         self.backend.name().to_string()
     }
 
-    /// Load + compile an artifact (cached by canonical path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+    /// Load + compile an artifact (cached by canonical path). The cache
+    /// lock is held across a compile so concurrent loaders of the same
+    /// artifact never compile it twice.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
         let path = path.as_ref();
         let key = path
             .canonicalize()
             .with_context(|| format!("artifact not found: {}", path.display()))?;
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&key) {
             return Ok(exe.clone());
         }
         let start = Instant::now();
@@ -141,27 +147,28 @@ impl Runtime {
             .backend
             .load(&key)
             .with_context(|| format!("loading {} via {} backend", key.display(), self.backend.name()))?;
-        let exe = Rc::new(Executable {
+        let exe = Arc::new(Executable {
             exe,
             path: key.clone(),
-            stats: RefCell::new(ExecStats {
+            stats: Mutex::new(ExecStats {
                 compile_secs: start.elapsed().as_secs_f64(),
                 ..Default::default()
             }),
         });
-        self.cache.borrow_mut().insert(key, exe.clone());
+        cache.insert(key, exe.clone());
         Ok(exe)
     }
 
     /// Number of compiled executables held in the cache.
     pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 
     /// Aggregate stats over all cached executables.
     pub fn all_stats(&self) -> Vec<(PathBuf, ExecStats)> {
         self.cache
-            .borrow()
+            .lock()
+            .unwrap()
             .iter()
             .map(|(p, e)| (p.clone(), e.stats()))
             .collect()
@@ -205,7 +212,7 @@ mod tests {
         assert_eq!(rt.cache_len(), 1);
         let exe2 = rt.load(&path).unwrap();
         assert_eq!(rt.cache_len(), 1);
-        assert!(Rc::ptr_eq(&exe, &exe2), "cache must return the same handle");
+        assert!(Arc::ptr_eq(&exe, &exe2), "cache must return the same handle");
         assert!(exe.stats().compile_secs >= 0.0);
         assert_eq!(exe.stats().calls, 0);
 

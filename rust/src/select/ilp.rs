@@ -56,6 +56,19 @@ fn totals(problem: &[Vec<Choice>], picks: &[usize]) -> (f64, f64) {
 
 /// Greedy: start from each layer's min-value choice; while over budget,
 /// apply the swap with the best value-increase per cost-decrease ratio.
+///
+/// ```
+/// use fames::select::{solve_greedy, Choice};
+/// // one layer: the low-value pick costs 5.0, over the budget of 2.0,
+/// // so the greedy must degrade to the cheap pick
+/// let problem = vec![vec![
+///     Choice { cost: 5.0, value: 0.0 },
+///     Choice { cost: 1.0, value: 1.5 },
+/// ]];
+/// let s = solve_greedy(&problem, 2.0).unwrap();
+/// assert_eq!(s.picks, vec![1]);
+/// assert!(s.total_cost <= 2.0);
+/// ```
 pub fn solve_greedy(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
     validate(problem)?;
     let mut picks: Vec<usize> = problem

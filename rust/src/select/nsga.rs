@@ -4,8 +4,15 @@
 //! paper's Table II / Fig. 3 comparison point: GA-based selection needs many
 //! full-model fitness evaluations (hours), while the ILP + Taylor estimate
 //! needs none.
+//!
+//! Fitness evaluation is the cost driver, so each population is scored as a
+//! **parallel wave** ([`NsgaConfig::jobs`] workers): genomes are generated
+//! first (single-threaded RNG, so the random sequence is independent of the
+//! worker count), then evaluated concurrently through a `Fn(&Genome)`
+//! closure — results are bit-identical at every `jobs` setting.
 
 use crate::rng::Pcg;
+use crate::util::par;
 
 /// Candidate assignment: one choice index per layer.
 pub type Genome = Vec<usize>;
@@ -21,6 +28,9 @@ pub struct NsgaConfig {
     pub crossover_p: f64,
     pub mutation_p: f64,
     pub seed: u64,
+    /// Worker threads for population evaluation (0 = auto; see
+    /// `util::par::effective_jobs`). Results are identical at any setting.
+    pub jobs: usize,
 }
 
 impl Default for NsgaConfig {
@@ -31,6 +41,7 @@ impl Default for NsgaConfig {
             crossover_p: 0.9,
             mutation_p: 0.15,
             seed: 0,
+            jobs: 0,
         }
     }
 }
@@ -102,45 +113,46 @@ pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
 }
 
 /// Run NSGA-II. `n_choices[k]` bounds the gene at layer `k`;
-/// `eval(genome) -> (obj1, obj2)` is the (expensive) fitness.
+/// `eval(genome) -> (obj1, obj2)` is the (expensive) fitness, scored in
+/// parallel waves of one population ([`NsgaConfig::jobs`] workers) — it
+/// must be a pure function of the genome.
 /// Returns the final population's first Pareto front, plus the number of
 /// fitness evaluations spent (the Table II runtime driver).
-pub fn run<F: FnMut(&Genome) -> Objectives>(
+pub fn run<F: Fn(&Genome) -> Objectives + Sync>(
     n_choices: &[usize],
     cfg: &NsgaConfig,
-    mut eval: F,
+    eval: F,
 ) -> (Vec<Individual>, u64) {
     let mut rng = Pcg::seeded(cfg.seed ^ 0x46a);
     let mut evals = 0u64;
-    let mut eval_counted = |g: &Genome, evals: &mut u64, eval: &mut F| {
-        *evals += 1;
-        eval(g)
+    // score one generated wave concurrently, keeping genome order
+    let eval_wave = |genomes: Vec<Genome>, evals: &mut u64| -> Vec<Individual> {
+        *evals += genomes.len() as u64;
+        let objs = par::par_map(&genomes, cfg.jobs, |_, g| eval(g));
+        genomes
+            .into_iter()
+            .zip(objs)
+            .map(|(genome, objectives)| Individual { genome, objectives })
+            .collect()
     };
 
     // init population: random genomes, plus the all-exact genome (index 0 is
     // exact by library convention) to anchor the front
-    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.population);
-    let zero: Genome = vec![0; n_choices.len()];
-    let obj = eval_counted(&zero, &mut evals, &mut eval);
-    pop.push(Individual {
-        genome: zero,
-        objectives: obj,
-    });
-    while pop.len() < cfg.population {
-        let g: Genome = n_choices.iter().map(|&n| rng.below(n)).collect();
-        let objectives = eval_counted(&g, &mut evals, &mut eval);
-        pop.push(Individual {
-            genome: g,
-            objectives,
-        });
+    let mut genomes: Vec<Genome> = Vec::with_capacity(cfg.population);
+    genomes.push(vec![0; n_choices.len()]);
+    while genomes.len() < cfg.population {
+        genomes.push(n_choices.iter().map(|&n| rng.below(n)).collect());
     }
+    let mut pop = eval_wave(genomes, &mut evals);
 
     for _gen in 0..cfg.generations {
-        // offspring by binary tournament + uniform crossover + mutation
+        // offspring by binary tournament + uniform crossover + mutation;
+        // genomes are generated single-threaded first (fixed RNG sequence),
+        // then the wave is evaluated in parallel
         let objs: Vec<Objectives> = pop.iter().map(|i| i.objectives).collect();
         let fronts = non_dominated_sort(&objs);
-        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.population);
-        while offspring.len() < cfg.population {
+        let mut children: Vec<Genome> = Vec::with_capacity(cfg.population);
+        while children.len() < cfg.population {
             let pick = |rng: &mut Pcg| {
                 let a = rng.below(pop.len());
                 let b = rng.below(pop.len());
@@ -167,12 +179,9 @@ pub fn run<F: FnMut(&Genome) -> Objectives>(
                     *gene = rng.below(n_choices[k]);
                 }
             }
-            let objectives = eval_counted(&child, &mut evals, &mut eval);
-            offspring.push(Individual {
-                genome: child,
-                objectives,
-            });
+            children.push(child);
         }
+        let offspring = eval_wave(children, &mut evals);
         // environmental selection over parents + offspring
         pop.extend(offspring);
         let objs: Vec<Objectives> = pop.iter().map(|i| i.objectives).collect();
@@ -274,6 +283,36 @@ mod tests {
             .map(|i| i.objectives.0)
             .fold(f64::MAX, f64::min);
         assert!(best_miss <= 2.0, "best miss {best_miss}");
+    }
+
+    #[test]
+    fn parallel_evaluation_matches_serial() {
+        let n_choices = vec![5usize; 6];
+        let eval = |g: &Genome| -> Objectives {
+            let a: f64 = g.iter().map(|&x| (x as f64 - 2.0).powi(2)).sum();
+            let b: f64 = g.iter().sum::<usize>() as f64;
+            (a, b)
+        };
+        let run_jobs = |jobs: usize| {
+            let cfg = NsgaConfig {
+                population: 10,
+                generations: 4,
+                seed: 9,
+                jobs,
+                ..Default::default()
+            };
+            run(&n_choices, &cfg, eval)
+        };
+        let (f1, e1) = run_jobs(1);
+        for jobs in [2usize, 4] {
+            let (fj, ej) = run_jobs(jobs);
+            assert_eq!(e1, ej, "jobs={jobs}");
+            assert_eq!(f1.len(), fj.len(), "jobs={jobs}");
+            for (a, b) in f1.iter().zip(&fj) {
+                assert_eq!(a.genome, b.genome);
+                assert_eq!(a.objectives, b.objectives);
+            }
+        }
     }
 
     #[test]

@@ -8,15 +8,27 @@
 //!
 //! Everything here is computed **once per model**; evaluating a candidate
 //! AppMul is then two dot products (the paper's headline speed-up over
-//! GA-based selection).
+//! GA-based selection). Per-layer power iterations and the per-(layer,
+//! candidate) exact-HVP probes are independent, so both fan out across the
+//! `util::par` worker threads (`Session::jobs`) with bit-identical results
+//! at every worker count.
 
 use anyhow::{bail, Result};
 
 use crate::appmul::{AppMul, Library};
 use crate::pipeline::session::Session;
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// How the second-order term of Eq. 9 is computed.
+///
+/// ```
+/// use fames::sensitivity::HessianMode;
+/// // the paper's Eq. 12 rank-1 approximation, 6 power iterations
+/// let mode = HessianMode::Rank1 { iters: 6 };
+/// assert_ne!(mode, HessianMode::Off);
+/// assert_eq!(mode, HessianMode::Rank1 { iters: 6 });
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HessianMode {
     /// First-order only (`Ω = g·e`).
@@ -69,13 +81,12 @@ impl Estimator {
         result
     }
 
-    fn compute_inner(session: &mut Session, est_batches: usize, hessian_iters: usize)
+    fn compute_inner(session: &Session, est_batches: usize, hessian_iters: usize)
                      -> Result<Estimator> {
         if est_batches == 0 {
             bail!("est_batches must be ≥ 1");
         }
         let (base_loss, grads) = session.grad_e(est_batches)?;
-        let n = grads.len();
         let mut layers: Vec<LayerEstimate> = grads
             .into_iter()
             .map(|grad| LayerEstimate {
@@ -87,43 +98,56 @@ impl Estimator {
             .collect();
 
         if hessian_iters > 0 {
-            for k in 0..n {
-                let dim = layers[k].grad.len();
-                // deterministic start vector (seeded by layer index)
-                let mut rng = crate::rng::Pcg::seeded(0x11e55 + k as u64);
-                let mut v = Tensor::new(
-                    vec![dim],
-                    (0..dim).map(|_| rng.normal() as f32).collect(),
-                )?;
-                normalize(&mut v);
-                let mut lambda = 0.0f64;
-                let mut history = Vec::with_capacity(hessian_iters);
-                for it in 0..hessian_iters {
-                    // zero r in all other layers isolates the diagonal block
-                    let rvecs: Vec<Tensor> = (0..n)
-                        .map(|j| {
-                            if j == k {
-                                v.clone()
-                            } else {
-                                Tensor::zeros(&[layers[j].grad.len()])
-                            }
-                        })
-                        .collect();
-                    let hr = session.hvp_e(&rvecs, it as u64 % 2)?;
-                    let hv = hr[k].clone();
-                    lambda = v.dot(&hv)?;
-                    history.push(lambda);
-                    let norm = hv.norm();
-                    if norm < 1e-12 {
-                        lambda = 0.0;
-                        break;
-                    }
-                    v = hv;
+            // Per-layer power iterations are independent (each isolates its
+            // diagonal Hessian block), so they run in parallel; results are
+            // reassembled in layer order — bit-identical to serial.
+            let dims: Vec<usize> = layers.iter().map(|l| l.grad.len()).collect();
+            let results = par::try_par_map(
+                &dims,
+                session.jobs,
+                |k, &dim| -> Result<(f64, Tensor, Vec<f64>)> {
+                    // deterministic start vector (seeded by layer index)
+                    let mut rng = crate::rng::Pcg::seeded(0x11e55 + k as u64);
+                    let mut v = Tensor::new(
+                        vec![dim],
+                        (0..dim).map(|_| rng.normal() as f32).collect(),
+                    )?;
                     normalize(&mut v);
-                }
-                layers[k].lambda = lambda.max(0.0); // PSD Gauss–Newton: clamp noise
-                layers[k].eigvec = v;
-                layers[k].lambda_history = history;
+                    let mut lambda = 0.0f64;
+                    let mut history = Vec::with_capacity(hessian_iters);
+                    for it in 0..hessian_iters {
+                        // zero r in all other layers isolates the diagonal block
+                        let rvecs: Vec<Tensor> = dims
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &dj)| {
+                                if j == k {
+                                    v.clone()
+                                } else {
+                                    Tensor::zeros(&[dj])
+                                }
+                            })
+                            .collect();
+                        let hr = session.hvp_e(&rvecs, it as u64 % 2)?;
+                        let hv = hr[k].clone();
+                        lambda = v.dot(&hv)?;
+                        history.push(lambda);
+                        let norm = hv.norm();
+                        if norm < 1e-12 {
+                            lambda = 0.0;
+                            break;
+                        }
+                        v = hv;
+                        normalize(&mut v);
+                    }
+                    // PSD Gauss–Newton: clamp noise
+                    Ok((lambda.max(0.0), v, history))
+                },
+            )?;
+            for (layer, (lambda, eigvec, history)) in layers.iter_mut().zip(results) {
+                layer.lambda = lambda;
+                layer.eigvec = eigvec;
+                layer.lambda_history = history;
             }
         }
 
@@ -212,64 +236,84 @@ pub fn estimate_table(
     let est = Estimator::compute(session, est_batches, mode)?;
     let saved = session.e_list.clone();
     session.clear_selection();
-    let n = session.art.manifest.layers.len();
-    let mut values = Vec::with_capacity(n);
-    let mut names = Vec::with_capacity(n);
-    let per_layer_muls: Vec<Vec<&crate::appmul::AppMul>> = session
+    let jobs = session.jobs;
+    let sref: &Session = session;
+    let per_layer_muls: Vec<Vec<&crate::appmul::AppMul>> = sref
         .art
         .manifest
         .layers
         .iter()
         .map(|l| library.for_bits(l.a_bits, l.w_bits))
         .collect();
-    // first-order terms (two dot products each)
-    for (k, muls) in per_layer_muls.iter().enumerate() {
-        let mut row = Vec::with_capacity(muls.len());
-        let mut row_names = Vec::with_capacity(muls.len());
-        for am in muls {
-            // Clamp at zero: the Gauss–Newton Hessian is PSD and the model
-            // is converged (∂L/∂z ≈ 0, paper §IV-C2), so a genuinely
-            // negative Ω is below the estimation noise floor — leaving it
-            // negative lets the ILP treat approximation as a free lunch.
-            row.push(est.perturbation(k, am)?.max(0.0));
-            row_names.push(am.name.clone());
-        }
+    // first-order terms (two dot products each), one parallel unit per layer
+    let rows = par::try_par_map(
+        &per_layer_muls,
+        jobs,
+        |k, muls| -> Result<(Vec<f64>, Vec<String>)> {
+            let mut row = Vec::with_capacity(muls.len());
+            let mut row_names = Vec::with_capacity(muls.len());
+            for am in muls {
+                // Clamp at zero: the Gauss–Newton Hessian is PSD and the model
+                // is converged (∂L/∂z ≈ 0, paper §IV-C2), so a genuinely
+                // negative Ω is below the estimation noise floor — leaving it
+                // negative lets the ILP treat approximation as a free lunch.
+                row.push(est.perturbation(k, am)?.max(0.0));
+                row_names.push(am.name.clone());
+            }
+            Ok((row, row_names))
+        },
+    )?;
+    let mut values = Vec::with_capacity(rows.len());
+    let mut names = Vec::with_capacity(rows.len());
+    for (row, row_names) in rows {
         values.push(row);
         names.push(row_names);
     }
     // exact Gauss–Newton quadratics, batched: candidate slot `i` of every
-    // layer is probed in one `quad_e` execution (primal pass shared).
+    // layer is probed in one `quad_e` execution (primal pass shared), and
+    // the independent slots run concurrently.
     if mode == HessianMode::Exact {
-        let use_quad = session.has_quad_e();
+        let use_quad = sref.has_quad_e();
         let max_c = per_layer_muls.iter().map(|m| m.len()).max().unwrap_or(0);
-        for i in 0..max_c {
+        let slots: Vec<usize> = (0..max_c).collect();
+        let adds = par::try_par_map(&slots, jobs, |_, &i| -> Result<Vec<Option<f64>>> {
             if use_quad {
                 let rvecs: Vec<Tensor> = per_layer_muls
                     .iter()
                     .enumerate()
                     .map(|(k, muls)| match muls.get(i) {
                         Some(am) if !am.is_exact() => am.error_tensor(),
-                        _ => Tensor::zeros(&[session.art.manifest.layers[k].e_len()]),
+                        _ => Tensor::zeros(&[sref.art.manifest.layers[k].e_len()]),
                     })
                     .collect();
-                let quads = session.quad_e(&rvecs, 0)?;
-                for (k, muls) in per_layer_muls.iter().enumerate() {
-                    if let Some(am) = muls.get(i) {
-                        if !am.is_exact() {
-                            values[k][i] += quads[k].max(0.0);
-                        }
-                    }
-                }
+                let quads = sref.quad_e(&rvecs, 0)?;
+                Ok(per_layer_muls
+                    .iter()
+                    .enumerate()
+                    .map(|(k, muls)| match muls.get(i) {
+                        Some(am) if !am.is_exact() => Some(quads[k].max(0.0)),
+                        _ => None,
+                    })
+                    .collect())
             } else {
                 // fallback for artifact sets without quad_e: per-layer HVPs
+                let mut adds: Vec<Option<f64>> = vec![None; per_layer_muls.len()];
                 for (k, muls) in per_layer_muls.iter().enumerate() {
                     if let Some(am) = muls.get(i) {
                         if !am.is_exact() {
                             let e = am.error_tensor();
-                            values[k][i] +=
-                                Estimator::quadratic_exact(session, k, &e)?.max(0.0);
+                            adds[k] =
+                                Some(Estimator::quadratic_exact(sref, k, &e)?.max(0.0));
                         }
                     }
+                }
+                Ok(adds)
+            }
+        })?;
+        for (i, slot_adds) in adds.into_iter().enumerate() {
+            for (k, add) in slot_adds.into_iter().enumerate() {
+                if let Some(add) = add {
+                    values[k][i] += add;
                 }
             }
         }

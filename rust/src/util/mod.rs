@@ -1,4 +1,7 @@
-//! Small shared utilities: timers, stats, csv, quantiles.
+//! Small shared utilities: timers, stats, csv, quantiles, and the
+//! scoped-parallelism primitives ([`par`]).
+
+pub mod par;
 
 use std::time::Instant;
 

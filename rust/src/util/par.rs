@@ -1,0 +1,257 @@
+//! Scoped, dependency-free data parallelism for the FAMES hot paths.
+//!
+//! The paper's headline claim is *speed* (up to 300× over GA-based AppMul
+//! selection), and every expensive stage of the reproduction — library
+//! netlist simulation, per-layer power iteration, per-(layer, candidate)
+//! Ω evaluation, native batch execution — is embarrassingly parallel across
+//! layers, candidates or samples. This module provides the one primitive
+//! those stages share: a scoped fork-join map over a slice, built on
+//! [`std::thread::scope`] (no rayon in the offline crate set).
+//!
+//! # Determinism contract
+//!
+//! Every function here is **bit-deterministic in the worker count**: results
+//! are keyed by item index and reassembled in input order, so `jobs = 1` and
+//! `jobs = N` produce identical outputs as long as the per-item closure is a
+//! pure function of `(index, item)`. Callers that *reduce* over items must
+//! merge the returned partials in slice order (see
+//! [`par_chunks`]) — never in completion order. The
+//! `tests/par_equivalence.rs` suite holds every parallelized stage to this
+//! contract.
+//!
+//! # Worker-count resolution
+//!
+//! `jobs = 0` everywhere means "resolve automatically":
+//!
+//! 1. the process-wide override installed by [`set_global_jobs`]
+//!    (the CLI's `--jobs` / `jobs=` knob);
+//! 2. the `FAMES_JOBS` environment variable (read once per process);
+//! 3. [`std::thread::available_parallelism`].
+//!
+//! Nested regions — a `par_map` invoked from inside another `par_map`
+//! worker — run serially regardless of the requested count: one level of
+//! fan-out already saturates the cores, and the determinism contract makes
+//! the two shapes indistinguishable in output.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-wide worker-count override; 0 = unset (fall through to
+/// `FAMES_JOBS` / auto-detection).
+static GLOBAL_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// `FAMES_JOBS`, parsed once per process (0 = unset/invalid). The lookup
+/// sits on per-batch hot paths, so the env lock is taken only once.
+static ENV_JOBS: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    /// True on a `par_map` worker thread. Nested parallel regions (e.g. a
+    /// per-layer estimator worker driving the backend's per-sample loops)
+    /// run serially instead of multiplying the fan-out — results are
+    /// identical either way, and total live threads stay bounded by one
+    /// level of `effective_jobs`.
+    static IN_PAR_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Install a process-wide worker count (the CLI's `--jobs` knob).
+/// `jobs = 0` clears the override.
+pub fn set_global_jobs(jobs: usize) {
+    GLOBAL_JOBS.store(jobs, Ordering::Relaxed);
+}
+
+/// The current process-wide override (0 when unset).
+pub fn global_jobs() -> usize {
+    GLOBAL_JOBS.load(Ordering::Relaxed)
+}
+
+/// Resolve a requested worker count to an effective one (always ≥ 1):
+/// an explicit request wins; `0` falls back to the global override, then
+/// the `FAMES_JOBS` environment variable, then the machine's available
+/// parallelism.
+pub fn effective_jobs(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    let global = global_jobs();
+    if global > 0 {
+        return global;
+    }
+    let env = *ENV_JOBS.get_or_init(|| {
+        std::env::var("FAMES_JOBS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    });
+    if env > 0 {
+        return env;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `jobs` scoped worker threads, returning
+/// results **in input order** (bit-identical to the serial map for pure
+/// `f`). `jobs = 0` auto-detects (see [`effective_jobs`]); work is
+/// distributed by an atomic cursor, so uneven per-item costs balance.
+///
+/// Panics in `f` propagate to the caller.
+///
+/// ```
+/// let squares = fames::util::par::par_map(&[1i64, 2, 3, 4], 2, |_, &x| x * x);
+/// assert_eq!(squares, vec![1, 4, 9, 16]);
+/// ```
+pub fn par_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    // a nested region (called from inside another par_map worker) runs
+    // serially: one level of fan-out already saturates the cores
+    let nested = IN_PAR_WORKER.with(|flag| flag.get());
+    let jobs = if nested { 1 } else { effective_jobs(jobs).min(n.max(1)) };
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let cursor = &cursor;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                IN_PAR_WORKER.with(|flag| flag.set(true));
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            for (i, r) in h.join().expect("par_map: worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("par_map: unfilled slot"))
+        .collect()
+}
+
+/// Fallible [`par_map`]: maps `Result`-returning `f` and returns the first
+/// error **in input order** (deterministic regardless of which worker hit
+/// it first), or all results in input order.
+pub fn try_par_map<T, R, F>(items: &[T], jobs: usize, f: F) -> crate::Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> crate::Result<R> + Sync,
+{
+    par_map(items, jobs, f).into_iter().collect()
+}
+
+/// Map `f` over fixed-size chunks of `items` in parallel, returning one
+/// result per chunk **in chunk order**.
+///
+/// The chunk partition depends only on `chunk_size` — never on `jobs` — so
+/// a caller that folds the returned partials in order gets a reduction tree
+/// that is bit-identical at every worker count. This is how the native
+/// backend keeps f64 loss/gradient accumulations deterministic while
+/// executing batches in parallel.
+pub fn par_chunks<T, R, F>(items: &[T], chunk_size: usize, jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    let chunk_size = chunk_size.max(1);
+    let chunks: Vec<&[T]> = items.chunks(chunk_size).collect();
+    par_map(&chunks, jobs, |i, c| f(i, *c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial_and_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * 3 + 1).collect();
+        for jobs in [1, 2, 3, 8] {
+            let par = par_map(&items, jobs, |_, &x| x * 3 + 1);
+            assert_eq!(par, serial, "jobs={jobs}");
+        }
+        assert!(par_map(&[] as &[usize], 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn par_map_passes_the_item_index() {
+        let items = vec![10usize, 20, 30];
+        let got = par_map(&items, 2, |i, &x| (i, x));
+        assert_eq!(got, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+
+    #[test]
+    fn try_par_map_returns_first_error_by_index() {
+        let items: Vec<usize> = (0..64).collect();
+        let err = try_par_map(&items, 4, |_, &x| -> crate::Result<usize> {
+            if x == 7 || x == 41 {
+                anyhow::bail!("boom at {x}")
+            }
+            Ok(x)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("boom at 7"), "{err}");
+        let ok = try_par_map(&items, 4, |_, &x| -> crate::Result<usize> { Ok(x + 1) }).unwrap();
+        assert_eq!(ok[63], 64);
+    }
+
+    #[test]
+    fn par_chunks_partition_is_jobs_independent() {
+        let items: Vec<f64> = (0..100).map(|i| i as f64 * 0.1).collect();
+        // chunked sums merged in order must agree bit-for-bit across jobs
+        let reduce = |jobs: usize| -> f64 {
+            par_chunks(&items, 16, jobs, |_, c| c.iter().sum::<f64>())
+                .into_iter()
+                .sum()
+        };
+        let s1 = reduce(1);
+        for jobs in [2, 4, 7] {
+            let bits1 = s1.to_bits();
+            let bitsn = reduce(jobs).to_bits();
+            assert_eq!(bits1, bitsn, "jobs={jobs}");
+        }
+        // partition shape: ceil(100/16) = 7 chunks, last of length 4
+        let lens = par_chunks(&items, 16, 3, |_, c| c.len());
+        assert_eq!(lens, vec![16, 16, 16, 16, 16, 16, 4]);
+    }
+
+    #[test]
+    fn effective_jobs_auto_detects_at_least_one() {
+        assert!(effective_jobs(0) >= 1);
+        assert_eq!(effective_jobs(5), 5);
+    }
+
+    #[test]
+    fn nested_par_map_serializes_but_stays_correct() {
+        let outer: Vec<usize> = (0..8).collect();
+        let got = par_map(&outer, 4, |_, &x| {
+            // nested region: auto-serialized, results still index-ordered
+            par_map(&[1usize, 2, 3], 4, move |_, &y| x * 10 + y)
+        });
+        for (i, inner) in got.iter().enumerate() {
+            assert_eq!(inner, &vec![i * 10 + 1, i * 10 + 2, i * 10 + 3]);
+        }
+    }
+}

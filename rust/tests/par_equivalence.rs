@@ -1,0 +1,232 @@
+//! Parallel-vs-serial equivalence suite.
+//!
+//! The `util::par` contract: every parallelized stage produces
+//! **bit-identical** results at every worker count. Each test here pins a
+//! stage to `jobs = 1` and `jobs = 4` explicitly (never through the global
+//! knob or the environment, so tests stay independent) and compares outputs
+//! exactly. Plus: `--jobs 0` auto-detection and the `fames bench --json`
+//! snapshot shape.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fames::appmul::{generate_for_bits_jobs, generate_library, AppMul, Library};
+use fames::calibrate::CalibConfig;
+use fames::circuit::{build_multiplier, MulConfig};
+use fames::pipeline::{self, FamesConfig, Session};
+use fames::runtime::backend::native::{
+    input_offset, template_inputs, write_synthetic_artifacts, NativeBackend, SyntheticSpec,
+};
+use fames::runtime::Runtime;
+use fames::sensitivity::{Estimator, HessianMode};
+use fames::tensor::Tensor;
+use fames::util::par;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-pareq-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    root
+}
+
+fn synth_root(tag: &str) -> PathBuf {
+    let root = tmp_root(tag);
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    root
+}
+
+/// Library covering the synthetic set, with the 8×8 exact baseline only
+/// (full 8-bit family generation would dominate the test runtime).
+fn test_library() -> Library {
+    let mut lib = generate_library(&[(4, 4), (3, 3), (2, 2)], 0);
+    let n8 = build_multiplier(&MulConfig::exact(8, 8));
+    lib.items
+        .push(AppMul::from_netlist("mul8x8_exact", "exact", 8, 8, &n8, 0));
+    lib
+}
+
+fn rt_with_jobs(jobs: usize) -> Arc<Runtime> {
+    Arc::new(Runtime::with_backend(Box::new(
+        NativeBackend::new(0).with_jobs(jobs),
+    )))
+}
+
+fn assert_tensors_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: output count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x, y, "{what}: output {i} differs");
+    }
+}
+
+#[test]
+fn jobs_zero_auto_detects() {
+    assert!(par::effective_jobs(0) >= 1);
+    assert_eq!(par::effective_jobs(3), 3);
+}
+
+#[test]
+fn library_generation_is_bit_identical_across_jobs() {
+    let serial = generate_for_bits_jobs(3, 4, 11, 1);
+    let par4 = generate_for_bits_jobs(3, 4, 11, 4);
+    assert_eq!(serial.len(), par4.len());
+    for (a, b) in serial.iter().zip(&par4) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.lut, b.lut);
+        assert_eq!(a.pdp.to_bits(), b.pdp.to_bits());
+        assert_eq!(a.energy_fj.to_bits(), b.energy_fj.to_bits());
+        assert_eq!(a.error_slice(), b.error_slice());
+    }
+}
+
+/// Every native executable kind must produce bit-identical outputs whether
+/// its batched loops run on 1 or 4 workers.
+#[test]
+fn native_backend_execution_is_bit_identical_across_jobs() {
+    let root = synth_root("backend");
+    let set = fames::runtime::ArtifactSet::open(root.join("resnet8_w4a4")).unwrap();
+    let m = &set.manifest;
+    for exe in ["fwd", "fwd_acts", "acts_float", "grad_e", "hvp_e", "quad_e", "train", "calib",
+                "retrain"] {
+        let mut inputs = template_inputs(m, exe).unwrap();
+        // exercise the E/r paths with non-zero vectors where present
+        if let Ok(at) = input_offset(m, exe, "e_list") {
+            inputs[at] = Tensor::full(&[m.layers[0].e_len()], 3.0);
+        }
+        if let Ok(at) = input_offset(m, exe, "rvecs") {
+            inputs[at + 1] = Tensor::full(&[m.layers[1].e_len()], 2.0);
+        }
+        let path = set.exe_path(exe).unwrap();
+        let out1 = rt_with_jobs(1).load(&path).unwrap().run(&inputs).unwrap();
+        let out4 = rt_with_jobs(4).load(&path).unwrap().run(&inputs).unwrap();
+        assert_tensors_eq(&out1, &out4, exe);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Per-layer power iteration (Rank1) must converge to bit-identical
+/// eigenpairs at any session worker count.
+#[test]
+fn estimator_power_iteration_is_bit_identical_across_jobs() {
+    let root = synth_root("powiter");
+    let estimate = |jobs: usize| {
+        let mut s = Session::open(rt_with_jobs(jobs), &root, "resnet8", "w4a4", 5).unwrap();
+        s.jobs = jobs;
+        let est = Estimator::compute(&mut s, 1, HessianMode::Rank1 { iters: 4 }).unwrap();
+        (est.base_loss, est.layers)
+    };
+    let (loss1, layers1) = estimate(1);
+    let (loss4, layers4) = estimate(4);
+    assert_eq!(loss1.to_bits(), loss4.to_bits(), "base loss");
+    assert_eq!(layers1.len(), layers4.len());
+    for (k, (a, b)) in layers1.iter().zip(&layers4).enumerate() {
+        assert_eq!(a.grad, b.grad, "layer {k} grad");
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "layer {k} lambda");
+        assert_eq!(a.eigvec, b.eigvec, "layer {k} eigvec");
+        assert_eq!(a.lambda_history, b.lambda_history, "layer {k} history");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The full pipeline — train, estimate (exact quadratics), ILP select,
+/// calibrate, evaluate — must report identical numbers at jobs 1 vs 4.
+/// Each run uses its own artifact root, so fp32 pre-training itself is
+/// covered by the equivalence too.
+#[test]
+fn full_pipeline_is_bit_identical_across_jobs() {
+    let lib = test_library();
+    let run_at = |jobs: usize, tag: &str| {
+        let root = synth_root(tag);
+        let mut cfg = FamesConfig {
+            artifact_root: root.to_string_lossy().into_owned(),
+            est_batches: 1,
+            eval_batches: 1,
+            train_steps: 150,
+            train_lr: 0.02,
+            jobs,
+            ..FamesConfig::default()
+        };
+        cfg.calib = CalibConfig { epochs: 1, samples: 32, ..CalibConfig::default() };
+        let rep = pipeline::run(rt_with_jobs(jobs), &cfg, &lib).unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+        rep
+    };
+    let r1 = run_at(1, "pipe1");
+    let r4 = run_at(4, "pipe4");
+    assert_eq!(r1.selection, r4.selection);
+    assert_eq!(r1.perturbations, r4.perturbations);
+    assert_eq!(r1.quant_eval.loss.to_bits(), r4.quant_eval.loss.to_bits());
+    assert_eq!(r1.quant_eval.accuracy.to_bits(), r4.quant_eval.accuracy.to_bits());
+    assert_eq!(
+        r1.approx_eval_before.loss.to_bits(),
+        r4.approx_eval_before.loss.to_bits()
+    );
+    assert_eq!(
+        r1.approx_eval_after.loss.to_bits(),
+        r4.approx_eval_after.loss.to_bits()
+    );
+    assert_eq!(
+        r1.approx_eval_after.accuracy.to_bits(),
+        r4.approx_eval_after.accuracy.to_bits()
+    );
+    assert_eq!(r1.energy_ratio_exact.to_bits(), r4.energy_ratio_exact.to_bits());
+    assert_eq!(r1.ilp_nodes, r4.ilp_nodes);
+}
+
+/// `evaluate_with` (the parallel NSGA scoring primitive) must agree with
+/// the mutate-then-evaluate path exactly.
+#[test]
+fn evaluate_with_matches_set_selection_evaluate() {
+    let root = synth_root("evalwith");
+    let mut s = Session::open(rt_with_jobs(2), &root, "resnet8", "w4a4", 0).unwrap();
+    s.init_act_ranges().unwrap();
+    let lib = test_library();
+    let e_list: Vec<Tensor> = s
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| {
+            lib.for_bits(l.a_bits, l.w_bits)
+                .iter()
+                .find(|m| !m.is_exact())
+                .unwrap()
+                .error_tensor()
+        })
+        .collect();
+    let via_with = s.evaluate_with(&e_list, 1).unwrap();
+    s.set_selection(e_list).unwrap();
+    let via_set = s.evaluate(1).unwrap();
+    assert_eq!(via_with.loss.to_bits(), via_set.loss.to_bits());
+    assert_eq!(via_with.accuracy.to_bits(), via_set.accuracy.to_bits());
+    // wrong arity is rejected
+    assert!(s.evaluate_with(&[], 1).is_err());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// `fames bench --json --quick` snapshot: stable shape, all stages present,
+/// stage list deterministic.
+#[test]
+fn bench_snapshot_shape_is_deterministic() {
+    let cfg = fames::bench::BenchConfig { jobs: 2, quick: true };
+    let stages = fames::bench::run_stages(&cfg).unwrap();
+    assert!(stages.len() >= 4, "expected ≥ 4 stages, got {}", stages.len());
+    let j = fames::bench::snapshot_json(&stages, &cfg);
+    assert_eq!(j.get("schema").unwrap().as_str().unwrap(), fames::bench::SCHEMA);
+    assert_eq!(j.get("jobs").unwrap().as_usize().unwrap(), 2);
+    let arr = j.get("stages").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), stages.len());
+    let mut names: Vec<String> = Vec::new();
+    for s in arr {
+        names.push(s.get("name").unwrap().as_str().unwrap().to_string());
+        assert!(s.get("serial_secs").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(s.get("parallel_secs").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(s.get("speedup").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    let mut unique = names.clone();
+    unique.dedup();
+    assert_eq!(names, unique, "stage names must be unique");
+    // the stage list (the snapshot's shape) is fixed, not timing-dependent
+    let names2: Vec<&'static str> =
+        fames::bench::run_stages(&cfg).unwrap().iter().map(|s| s.name).collect();
+    assert_eq!(names, names2);
+}

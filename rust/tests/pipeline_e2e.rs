@@ -9,7 +9,7 @@
 //! `FAMES_BACKEND=pjrt` plus `make artifacts` and skip gracefully otherwise.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fames::appmul::{generate_library, AppMul, Library};
 use fames::calibrate::{self, CalibConfig};
@@ -62,7 +62,7 @@ fn native_cfg(root: &std::path::Path) -> FamesConfig {
 #[test]
 fn native_training_reduces_loss() {
     let root = native_root("train");
-    let rt = Rc::new(Runtime::native());
+    let rt = Arc::new(Runtime::native());
     let mut s = Session::open(rt, &root, "resnet8", "w4a4", 11).unwrap();
     let losses = s.train(400, 0.02).unwrap();
     let head: f64 = losses[..20].iter().sum::<f64>() / 20.0;
@@ -79,7 +79,7 @@ fn native_training_reduces_loss() {
 #[test]
 fn native_pallas_and_fwd_paths_agree() {
     let root = native_root("pallas");
-    let rt = Rc::new(Runtime::native());
+    let rt = Arc::new(Runtime::native());
     let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
     s.init_act_ranges().unwrap();
     let lib = test_library();
@@ -115,7 +115,7 @@ fn native_pallas_and_fwd_paths_agree() {
 #[test]
 fn native_full_pipeline_respects_budget_and_is_deterministic() {
     let root = native_root("pipeline");
-    let rt = Rc::new(Runtime::native());
+    let rt = Arc::new(Runtime::native());
     let cfg = native_cfg(&root);
     let lib = test_library();
 
@@ -152,7 +152,7 @@ fn native_full_pipeline_respects_budget_and_is_deterministic() {
 #[test]
 fn native_estimate_select_calibrate_composes() {
     let root = native_root("est");
-    let rt = Rc::new(Runtime::native());
+    let rt = Arc::new(Runtime::native());
     let cfg = native_cfg(&root);
     let mut s = Session::open(rt, &root, "resnet8", "w4a4", 0).unwrap();
     pipeline::ensure_trained(&mut s, &cfg).unwrap();
@@ -191,7 +191,7 @@ fn native_estimate_select_calibrate_composes() {
 
 // ---- real-artifact e2e (requires FAMES_BACKEND=pjrt + make artifacts) ----
 
-fn ready() -> Option<(Rc<Runtime>, String)> {
+fn ready() -> Option<(Arc<Runtime>, String)> {
     if std::env::var("FAMES_BACKEND").as_deref() != Ok("pjrt") {
         eprintln!("skipping: real-artifact test needs FAMES_BACKEND=pjrt");
         return None;
@@ -208,7 +208,7 @@ fn ready() -> Option<(Rc<Runtime>, String)> {
             return None;
         }
     };
-    Some((Rc::new(rt), root))
+    Some((Arc::new(rt), root))
 }
 
 /// Short but real training run: loss must drop substantially.

@@ -6,7 +6,7 @@
 //! build and artifact are present.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fames::runtime::backend::native::{
     input_offset, template_inputs, write_synthetic_artifacts, SyntheticSpec,
@@ -71,7 +71,7 @@ fn cache_and_stats_identical_across_backend_instances() {
         let path = set.exe_path("fwd").unwrap();
         let exe = rt.load(&path).unwrap();
         assert_eq!(rt.cache_len(), 1);
-        assert!(Rc::ptr_eq(&exe, &rt.load(&path).unwrap()));
+        assert!(Arc::ptr_eq(&exe, &rt.load(&path).unwrap()));
         exe.run(&fwd_inputs(&set, 0.0)).unwrap();
         exe.run(&fwd_inputs(&set, 0.0)).unwrap();
         let stats = exe.stats();
