@@ -15,7 +15,7 @@ use fames::util;
 fn main() -> anyhow::Result<()> {
     let bits: Vec<(u32, u32)> = vec![(2, 2), (3, 3), (4, 4), (8, 8)];
     let lib: Library = generate_library(&bits, 0);
-    println!("generated {} designs\n", lib.items.len());
+    println!("generated {} designs\n", lib.len());
 
     let mut csv = Vec::new();
     for &(a, w) in &bits {

@@ -60,9 +60,8 @@ fn main() -> anyhow::Result<()> {
     drop(session);
     println!(
         "AppMul library: {} designs across bitwidths {:?}",
-        library.items.len(),
+        library.len(),
         library
-            .items
             .iter()
             .map(|m| m.a_bits)
             .collect::<std::collections::BTreeSet<_>>()

@@ -8,7 +8,7 @@
 //! built designs in enumeration order, so the library is bit-identical at
 //! every worker count.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 use anyhow::{bail, Context, Result};
 
@@ -22,15 +22,82 @@ use crate::util::par;
 /// The paper's ALSRAC error threshold (MRED ≤ 20%, §V-A).
 pub const MRED_THRESHOLD: f64 = 0.20;
 
-/// A generated AppMul library, grouped by bitwidth pair.
+/// A generated AppMul library with lookup indexes built at construction:
+/// `find`/`exact` are hash/tree lookups and `for_bits` returns a
+/// precomputed presentation order, instead of the linear scans + re-sorts
+/// the hot selection loops used to pay per (layer, candidate).
 #[derive(Clone, Debug, Default)]
 pub struct Library {
-    pub items: Vec<AppMul>,
+    items: Vec<AppMul>,
+    /// name → item index (first occurrence wins, matching linear-scan
+    /// `find` semantics).
+    by_name: HashMap<String, usize>,
+    /// (a_bits, w_bits) → item indices in presentation order (exact first,
+    /// then ascending PDP under a NaN-safe total order).
+    by_bits: BTreeMap<(u32, u32), Vec<usize>>,
 }
 
 impl Library {
+    /// Build a library (and its lookup indexes) from characterized designs.
+    /// Item order is significant: it breaks PDP ties in `for_bits` and
+    /// resolves duplicate names in `find`.
+    pub fn new(items: Vec<AppMul>) -> Library {
+        let mut lib = Library { items, by_name: HashMap::new(), by_bits: BTreeMap::new() };
+        lib.rebuild_index();
+        lib
+    }
+
+    /// Append one design and refresh the indexes.
+    pub fn push(&mut self, am: AppMul) {
+        self.items.push(am);
+        self.rebuild_index();
+    }
+
+    /// Append many designs (one index rebuild).
+    pub fn extend(&mut self, items: impl IntoIterator<Item = AppMul>) {
+        self.items.extend(items);
+        self.rebuild_index();
+    }
+
+    /// All designs, in insertion order.
+    pub fn items(&self) -> &[AppMul] {
+        &self.items
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, AppMul> {
+        self.items.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    fn rebuild_index(&mut self) {
+        self.by_name.clear();
+        self.by_bits.clear();
+        for (i, m) in self.items.iter().enumerate() {
+            self.by_name.entry(m.name.clone()).or_insert(i);
+            self.by_bits.entry((m.a_bits, m.w_bits)).or_default().push(i);
+        }
+        let items = &self.items;
+        for idxs in self.by_bits.values_mut() {
+            // total_cmp, not partial_cmp().unwrap(): a NaN PDP (e.g. from a
+            // corrupted summary round-trip) must not panic the selection
+            // path. Stable sort keeps insertion order among ties — the same
+            // order the old filter-then-sort scan produced.
+            idxs.sort_by(|&x, &y| {
+                let (a, b) = (&items[x], &items[y]);
+                b.is_exact().cmp(&a.is_exact()).then(a.pdp.total_cmp(&b.pdp))
+            });
+        }
+    }
+
     /// All multipliers for a bitwidth pair (exact first, then by PDP,
-    /// NaN-safe total order).
+    /// NaN-safe total order). O(matches) — the order is precomputed.
     ///
     /// ```
     /// let lib = fames::appmul::generate_library(&[(2, 2)], 0);
@@ -39,33 +106,28 @@ impl Library {
     /// assert!(muls.iter().skip(1).all(|m| !m.is_exact()));
     /// ```
     pub fn for_bits(&self, a_bits: u32, w_bits: u32) -> Vec<&AppMul> {
-        let mut v: Vec<&AppMul> = self
-            .items
-            .iter()
-            .filter(|m| m.a_bits == a_bits && m.w_bits == w_bits)
-            .collect();
-        // total_cmp, not partial_cmp().unwrap(): a NaN PDP (e.g. from a
-        // corrupted summary round-trip) must not panic the selection path.
-        v.sort_by(|x, y| {
-            y.is_exact()
-                .cmp(&x.is_exact())
-                .then(x.pdp.total_cmp(&y.pdp))
-        });
-        v
+        match self.by_bits.get(&(a_bits, w_bits)) {
+            Some(idxs) => idxs.iter().map(|&i| &self.items[i]).collect(),
+            None => Vec::new(),
+        }
     }
 
-    /// The exact multiplier for a bitwidth pair.
+    /// The exact multiplier for a bitwidth pair. O(log kinds): the exact
+    /// design, when present, is the first entry of its bitwidth bucket.
     pub fn exact(&self, a_bits: u32, w_bits: u32) -> Result<&AppMul> {
-        self.items
-            .iter()
-            .find(|m| m.a_bits == a_bits && m.w_bits == w_bits && m.is_exact())
+        self.by_bits
+            .get(&(a_bits, w_bits))
+            .and_then(|idxs| idxs.first())
+            .map(|&i| &self.items[i])
+            .filter(|m| m.is_exact())
             .with_context(|| format!("no exact {a_bits}x{w_bits} multiplier in library"))
     }
 
+    /// Look up a design by name. O(1).
     pub fn find(&self, name: &str) -> Result<&AppMul> {
-        self.items
-            .iter()
-            .find(|m| m.name == name)
+        self.by_name
+            .get(name)
+            .map(|&i| &self.items[i])
             .with_context(|| format!("no multiplier named '{name}'"))
     }
 
@@ -289,7 +351,7 @@ pub fn generate_library_jobs(bit_pairs: &[(u32, u32)], seed: u64, jobs: usize) -
     for &(a, w) in bit_pairs {
         items.extend(generate_for_bits_jobs(a, w, seed, jobs));
     }
-    Library { items }
+    Library::new(items)
 }
 
 /// Parse a library summary back (tooling round-trip; LUTs not included).
@@ -326,7 +388,7 @@ mod tests {
             assert!(m.metrics.mred > 0.0);
         }
         // ALSRAC family respects the paper threshold
-        for m in lib.items.iter().filter(|m| m.family == "alsrac") {
+        for m in lib.iter().filter(|m| m.family == "alsrac") {
             assert!(m.metrics.mred <= MRED_THRESHOLD + 1e-9, "{}", m.name);
         }
     }
@@ -335,8 +397,8 @@ mod tests {
     fn deterministic_generation() {
         let a = generate_library(&[(3, 3)], 5);
         let b = generate_library(&[(3, 3)], 5);
-        assert_eq!(a.items.len(), b.items.len());
-        for (x, y) in a.items.iter().zip(&b.items) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.lut, y.lut);
             assert_eq!(x.pdp, y.pdp);
         }
@@ -346,12 +408,12 @@ mod tests {
     fn for_bits_survives_nan_pdp() {
         // regression: partial_cmp().unwrap() used to panic on NaN PDP
         let mut lib = generate_library(&[(2, 2)], 3);
-        let mut poisoned = lib.items[1].clone();
+        let mut poisoned = lib.items()[1].clone();
         poisoned.name = "mul2x2_nan".into();
         poisoned.pdp = f64::NAN;
-        lib.items.push(poisoned);
+        lib.push(poisoned);
         let muls = lib.for_bits(2, 2);
-        assert_eq!(muls.len(), lib.items.len());
+        assert_eq!(muls.len(), lib.len());
         assert!(muls[0].is_exact(), "exact still sorts first");
         // total_cmp puts NaN after every finite PDP
         assert!(muls.last().unwrap().pdp.is_nan());
@@ -373,13 +435,36 @@ mod tests {
     }
 
     #[test]
+    fn lookup_index_matches_linear_scan_and_survives_push() {
+        let lib = generate_library(&[(3, 3), (2, 2)], 4);
+        // find: every item reachable by name, first occurrence wins
+        for m in lib.iter() {
+            assert_eq!(lib.find(&m.name).unwrap().name, m.name);
+        }
+        assert!(lib.find("nope").is_err());
+        // exact: agrees with a linear scan
+        for &(a, w) in &[(3u32, 3u32), (2, 2)] {
+            let scan = lib
+                .iter()
+                .find(|m| m.a_bits == a && m.w_bits == w && m.is_exact())
+                .unwrap();
+            assert_eq!(lib.exact(a, w).unwrap().name, scan.name);
+        }
+        assert!(lib.exact(5, 5).is_err());
+        assert!(lib.for_bits(5, 5).is_empty());
+        // push refreshes every index
+        let mut lib = lib;
+        let n8 = crate::circuit::build_multiplier(&crate::circuit::MulConfig::exact(4, 4));
+        lib.push(AppMul::from_netlist("late4x4", "exact", 4, 4, &n8, 0));
+        assert_eq!(lib.find("late4x4").unwrap().name, "late4x4");
+        assert_eq!(lib.exact(4, 4).unwrap().name, "late4x4");
+        assert_eq!(lib.for_bits(4, 4).len(), 1);
+    }
+
+    #[test]
     fn truncation_error_monotone_in_k() {
         let lib = generate_library(&[(4, 4)], 1);
-        let mut trunc: Vec<&AppMul> = lib
-            .items
-            .iter()
-            .filter(|m| m.family == "trunc")
-            .collect();
+        let mut trunc: Vec<&AppMul> = lib.iter().filter(|m| m.family == "trunc").collect();
         trunc.sort_by_key(|m| {
             m.name
                 .trim_start_matches("mul4x4_trunc")
@@ -414,7 +499,7 @@ mod tests {
         let lib = generate_library(&[(2, 2)], 3);
         let j = lib.summary_json();
         let parsed = parse_summary(&j).unwrap();
-        assert_eq!(parsed.len(), lib.items.len());
+        assert_eq!(parsed.len(), lib.len());
     }
 
     #[test]

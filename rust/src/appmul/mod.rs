@@ -21,6 +21,8 @@ pub use library::{
 };
 pub use metrics::{compute as compute_metrics, exact_lut, ErrorMetrics};
 
+use anyhow::{ensure, Result};
+
 use crate::circuit::{build_lut, Netlist};
 use crate::tensor::Tensor;
 
@@ -86,6 +88,61 @@ impl AppMul {
             metrics,
             err,
         }
+    }
+
+    /// Rebuild an AppMul from persisted characterization (the store codec's
+    /// decode path). Error metrics and the flattened error matrix are
+    /// recomputed from the LUT, so a decoded entry is self-consistent by
+    /// construction; hardware costs are taken as given (they come from the
+    /// netlist, which is not persisted).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        name: String,
+        family: String,
+        a_bits: u32,
+        w_bits: u32,
+        lut: Vec<i64>,
+        pdp: f64,
+        energy_fj: f64,
+        delay_ps: f64,
+        area_um2: f64,
+        gates: usize,
+    ) -> Result<AppMul> {
+        ensure!(
+            (2..=8).contains(&a_bits) && (2..=8).contains(&w_bits),
+            "bitwidths must be in 2..=8 (got {a_bits}x{w_bits})"
+        );
+        ensure!(
+            lut.len() == 1usize << (a_bits + w_bits),
+            "LUT has {} entries, expected {}",
+            lut.len(),
+            1usize << (a_bits + w_bits)
+        );
+        let metrics = metrics::compute(&lut, a_bits, w_bits);
+        let qw = 1i64 << w_bits;
+        let err: Vec<f32> = lut
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let a = i as i64 / qw;
+                let w = i as i64 % qw;
+                (v - a * w) as f32
+            })
+            .collect();
+        Ok(AppMul {
+            name,
+            family,
+            a_bits,
+            w_bits,
+            lut,
+            pdp,
+            energy_fj,
+            delay_ps,
+            area_um2,
+            gates,
+            metrics,
+            err,
+        })
     }
 
     pub fn is_exact(&self) -> bool {

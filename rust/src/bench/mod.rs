@@ -21,19 +21,25 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::appmul::{generate_for_bits_jobs, generate_library_jobs};
+use crate::calibrate::CalibConfig;
 use crate::json::Json;
-use crate::pipeline::Session;
+use crate::pipeline::{self, FamesConfig, Session};
 use crate::runtime::backend::native::{write_synthetic_artifacts, NativeBackend, SyntheticSpec};
 use crate::runtime::Runtime;
 use crate::select::nsga::{self, NsgaConfig};
 use crate::sensitivity::{estimate_table, Estimator, HessianMode};
 use crate::util::par;
 
-/// Schema tag of the JSON snapshot (bump on shape changes).
+/// Schema tag of the JSON snapshot (bump on shape changes; the `cache`
+/// section added by the artifact-store PR is additive, so v1 stands).
 pub const SCHEMA: &str = "fames-bench-v1";
+
+/// A stage counts as regressed in `fames bench --compare` when it got more
+/// than this fraction slower.
+pub const REGRESSION_TOLERANCE: f64 = 0.10;
 
 /// Bench knobs.
 #[derive(Clone, Debug, Default)]
@@ -217,8 +223,108 @@ pub fn run_stages(cfg: &BenchConfig) -> Result<Vec<StageResult>> {
     Ok(stages)
 }
 
+// ---- cold-vs-warm pipeline bench (the artifact store's payoff) ----
+
+/// One pipeline stage's cold-vs-warm timing and cache outcome.
+#[derive(Clone, Debug)]
+pub struct CacheStageBench {
+    pub stage: &'static str,
+    /// `hit` / `miss` / `off` on the cold and warm runs.
+    pub cold_status: &'static str,
+    pub warm_status: &'static str,
+    pub cold_secs: f64,
+    pub warm_secs: f64,
+}
+
+/// Cold-vs-warm timings of the full pipeline against a fresh artifact
+/// store (`fames bench`'s cache section).
+#[derive(Clone, Debug)]
+pub struct CacheBench {
+    pub cold_secs: f64,
+    pub warm_secs: f64,
+    pub stages: Vec<CacheStageBench>,
+}
+
+impl CacheBench {
+    /// End-to-end cold / warm wall-clock ratio.
+    pub fn speedup(&self) -> f64 {
+        if self.warm_secs > 0.0 {
+            self.cold_secs / self.warm_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run the full pipeline twice against a fresh temp artifact store — cold
+/// then warm — and report per-stage cache outcomes. On the warm run every
+/// cacheable stage must hit; the pair of reports must be bit-identical
+/// (both asserted here: a broken cache must fail the bench loudly).
+pub fn run_cache_bench(cfg: &BenchConfig) -> Result<CacheBench> {
+    let root = std::env::temp_dir().join(format!("fames-bench-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4"))?;
+    let train_steps = if cfg.quick { 60 } else { 200 };
+    let fcfg = FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        est_batches: 1,
+        eval_batches: 1,
+        train_steps,
+        train_lr: 0.02,
+        jobs: cfg.jobs,
+        calib: CalibConfig { epochs: 1, samples: 64, ..CalibConfig::default() },
+        ..FamesConfig::default()
+    };
+    let rt = || -> Arc<Runtime> {
+        Arc::new(Runtime::with_backend(Box::new(NativeBackend::new(0).with_jobs(cfg.jobs))))
+    };
+    let t0 = Instant::now();
+    let cold = pipeline::run_cached(rt(), &fcfg).context("cache bench (cold)")?;
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let warm = pipeline::run_cached(rt(), &fcfg).context("cache bench (warm)")?;
+    let warm_secs = t1.elapsed().as_secs_f64();
+    ensure!(
+        warm.stages.iter().all(|s| s.hit == Some(true)),
+        "warm run missed a stage: {:?}",
+        warm.stages
+    );
+    ensure!(
+        cold.selection == warm.selection
+            && cold.perturbations == warm.perturbations
+            && cold.approx_eval_after.loss.to_bits() == warm.approx_eval_after.loss.to_bits(),
+        "warm run diverged from cold run"
+    );
+    let stages = cold
+        .stages
+        .iter()
+        .zip(&warm.stages)
+        .map(|(c, w)| CacheStageBench {
+            stage: c.stage,
+            cold_status: c.status(),
+            warm_status: w.status(),
+            cold_secs: c.secs,
+            warm_secs: w.secs,
+        })
+        .collect();
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(CacheBench { cold_secs, warm_secs, stages })
+}
+
+// ---- snapshot JSON + cross-PR comparison ----
+
 /// The machine-readable snapshot (`fames bench --json`).
 pub fn snapshot_json(stages: &[StageResult], cfg: &BenchConfig) -> Json {
+    snapshot_json_with_cache(stages, None, cfg)
+}
+
+/// [`snapshot_json`] with the optional cold-vs-warm cache section.
+pub fn snapshot_json_with_cache(
+    stages: &[StageResult],
+    cache: Option<&CacheBench>,
+    cfg: &BenchConfig,
+) -> Json {
     let mut arr = Json::arr();
     for s in stages {
         arr.push(
@@ -229,12 +335,100 @@ pub fn snapshot_json(stages: &[StageResult], cfg: &BenchConfig) -> Json {
                 .with("speedup", s.speedup()),
         );
     }
-    Json::obj()
+    let mut doc = Json::obj()
         .with("schema", SCHEMA)
         .with("backend", "native")
         .with("jobs", par::effective_jobs(cfg.jobs))
         .with("quick", cfg.quick)
-        .with("stages", arr)
+        .with("stages", arr);
+    if let Some(cache) = cache {
+        let mut carr = Json::arr();
+        for s in &cache.stages {
+            carr.push(
+                Json::obj()
+                    .with("stage", s.stage)
+                    .with("cold", s.cold_status)
+                    .with("warm", s.warm_status)
+                    .with("cold_secs", s.cold_secs)
+                    .with("warm_secs", s.warm_secs),
+            );
+        }
+        doc.set(
+            "cache",
+            Json::obj()
+                .with("cold_secs", cache.cold_secs)
+                .with("warm_secs", cache.warm_secs)
+                .with("speedup", cache.speedup())
+                .with("stages", carr),
+        );
+    }
+    doc
+}
+
+/// One stage's timing across two snapshots (`fames bench --compare`).
+#[derive(Clone, Debug)]
+pub struct StageDelta {
+    pub name: String,
+    pub old_secs: f64,
+    pub new_secs: f64,
+}
+
+impl StageDelta {
+    /// Old / new wall-clock ratio (> 1 means the new snapshot is faster).
+    pub fn speedup(&self) -> f64 {
+        if self.new_secs > 0.0 {
+            self.old_secs / self.new_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        self.new_secs > self.old_secs * (1.0 + REGRESSION_TOLERANCE)
+    }
+
+    pub fn verdict(&self) -> &'static str {
+        if self.is_regression() {
+            "REGRESSED"
+        } else if self.old_secs > self.new_secs * (1.0 + REGRESSION_TOLERANCE) {
+            "faster"
+        } else {
+            "~same"
+        }
+    }
+}
+
+/// Diff two `fames-bench-v1` snapshots by stage name (parallel wall
+/// clock). Stages present in only one snapshot are skipped — the trajectory
+/// comparison covers the common set.
+pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
+    for (label, doc) in [("old", old), ("new", new)] {
+        let schema = doc.get("schema")?.as_str()?;
+        if schema != SCHEMA {
+            bail!("{label} snapshot has schema '{schema}', expected '{SCHEMA}'");
+        }
+    }
+    let old_times: Vec<(String, f64)> = old
+        .get("stages")?
+        .as_arr()?
+        .iter()
+        .map(|s| -> Result<(String, f64)> {
+            Ok((
+                s.get("name")?.as_str()?.to_string(),
+                s.get("parallel_secs")?.as_f64()?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let mut deltas = Vec::new();
+    for s in new.get("stages")?.as_arr()? {
+        let name = s.get("name")?.as_str()?.to_string();
+        let new_secs = s.get("parallel_secs")?.as_f64()?;
+        if let Some((_, old_secs)) = old_times.iter().find(|(n, _)| n == &name) {
+            deltas.push(StageDelta { name, old_secs: *old_secs, new_secs });
+        }
+    }
+    ensure!(!deltas.is_empty(), "snapshots share no stages");
+    Ok(deltas)
 }
 
 #[cfg(test)]
@@ -265,5 +459,88 @@ mod tests {
     fn speedup_handles_zero_division() {
         let s = StageResult { name: "x", serial_secs: 1.0, parallel_secs: 0.0 };
         assert_eq!(s.speedup(), 0.0);
+    }
+
+    #[test]
+    fn cache_section_is_additive_and_shaped() {
+        let stages = vec![StageResult {
+            name: "library_generation",
+            serial_secs: 1.0,
+            parallel_secs: 0.5,
+        }];
+        let cfg = BenchConfig { jobs: 1, quick: true };
+        let cache = CacheBench {
+            cold_secs: 2.0,
+            warm_secs: 0.5,
+            stages: vec![CacheStageBench {
+                stage: "estimate",
+                cold_status: "miss",
+                warm_status: "hit",
+                cold_secs: 1.5,
+                warm_secs: 0.1,
+            }],
+        };
+        let j = snapshot_json_with_cache(&stages, Some(&cache), &cfg);
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        let c = j.get("cache").unwrap();
+        assert_eq!(c.get("speedup").unwrap().as_f64().unwrap(), 4.0);
+        let carr = c.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(carr[0].get("warm").unwrap().as_str().unwrap(), "hit");
+        // the plain snapshot has no cache section
+        assert!(snapshot_json(&stages, &cfg).opt("cache").is_none());
+    }
+
+    fn snap(entries: &[(&str, f64)]) -> Json {
+        let mut arr = Json::arr();
+        for (name, secs) in entries {
+            arr.push(
+                Json::obj()
+                    .with("name", *name)
+                    .with("serial_secs", *secs)
+                    .with("parallel_secs", *secs)
+                    .with("speedup", 1.0),
+            );
+        }
+        Json::obj()
+            .with("schema", SCHEMA)
+            .with("backend", "native")
+            .with("jobs", 1usize)
+            .with("quick", true)
+            .with("stages", arr)
+    }
+
+    #[test]
+    fn compare_matches_stages_by_name() {
+        let old = snap(&[("a", 1.0), ("b", 2.0), ("gone", 9.0)]);
+        let new = snap(&[("a", 0.5), ("b", 2.5), ("added", 1.0)]);
+        let deltas = compare_snapshots(&old, &new).unwrap();
+        assert_eq!(deltas.len(), 2, "only common stages compare");
+        let a = deltas.iter().find(|d| d.name == "a").unwrap();
+        assert_eq!(a.speedup(), 2.0);
+        assert!(!a.is_regression());
+        assert_eq!(a.verdict(), "faster");
+        let b = deltas.iter().find(|d| d.name == "b").unwrap();
+        assert!(b.is_regression());
+        assert_eq!(b.verdict(), "REGRESSED");
+    }
+
+    #[test]
+    fn compare_rejects_foreign_schemas() {
+        let good = snap(&[("a", 1.0)]);
+        let bad = Json::obj().with("schema", "other-v9").with("stages", Json::arr());
+        assert!(compare_snapshots(&bad, &good).is_err());
+        assert!(compare_snapshots(&good, &bad).is_err());
+        let empty_old = snap(&[("x", 1.0)]);
+        let empty_new = snap(&[("y", 1.0)]);
+        assert!(compare_snapshots(&empty_old, &empty_new).is_err(), "no common stages");
+    }
+
+    #[test]
+    fn delta_verdict_tolerance_band() {
+        let same = StageDelta { name: "s".into(), old_secs: 1.0, new_secs: 1.05 };
+        assert_eq!(same.verdict(), "~same");
+        assert!(!same.is_regression());
+        let zero = StageDelta { name: "z".into(), old_secs: 1.0, new_secs: 0.0 };
+        assert_eq!(zero.speedup(), 0.0);
     }
 }

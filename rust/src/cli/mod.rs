@@ -8,7 +8,9 @@
 //!   evaluate    evaluate the quantized-exact model (E = 0)
 //!   library     generate + print the AppMul library for given bitwidths
 //!   bits        HAWQ-like mixed-precision bitwidth proposal
-//!   bench       serial-vs-parallel perf snapshot (`--json` for machines)
+//!   bench       serial-vs-parallel + cold-vs-warm perf snapshot
+//!               (`--json` for machines, `--compare` to diff snapshots)
+//!   cache       artifact-store maintenance (ls | stat | gc)
 //!   experiment  reproduce a paper table/figure (table2|table3|table4|
 //!               fig2|fig3|fig4|fig5ab|fig5c|all)
 //!   help        this text
@@ -30,14 +32,19 @@ USAGE: fames <command> [key=value ...]
 
 COMMANDS
   pipeline     full flow: estimate → ILP select → calibrate → evaluate
+               (stage outputs are cached content-addressed; a warm run
+               loads every unchanged stage and is bit-identical)
   train        fp32 pre-train and cache parameters (steps=, train_lr=)
   evaluate     evaluate the quantized-exact model (E = 0)
   synth        write a synthetic artifact set for the native backend
                (model=resnet8 cfg=w4a4 out=artifacts)
   library      print the AppMul library (bits=4 or bits=4x8)
   bits         HAWQ-like mixed-precision proposal (budget=0.1 vs 8-bit)
-  bench        serial-vs-parallel perf snapshot per hot stage
-               (--json machine-readable, --quick smoke sizes, out=PATH)
+  bench        serial-vs-parallel + cold-vs-warm perf snapshot per stage
+               (--json machine-readable, --quick smoke sizes, out=PATH,
+                --compare=OLD.json [vs=NEW.json] to diff snapshots)
+  cache        artifact-store maintenance: cache ls | stat | gc
+               (honors artifacts=, --cache-dir; gc removes every entry)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
                fig5c | all   (writes results/<id>.csv)
   help         this text
@@ -49,6 +56,8 @@ COMMON KEYS
   calib_epochs=3  calib_samples=256  calib_lr=0.1  q_step=0.02  q_max=0.3
   jobs=N (or --jobs=N)   worker threads for the parallel stages
                          (0 = auto-detect; outputs are identical either way)
+  --cache-dir=PATH       artifact-store location (default artifacts/cache)
+  --no-cache             disable the artifact store (recompute everything)
 
 ENVIRONMENT
   FAMES_BACKEND=native|pjrt   execution backend (default native; pjrt needs
@@ -73,6 +82,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "library" => cmd_library(rest),
         "bits" => cmd_bits(rest),
         "bench" => cmd_bench(rest),
+        "cache" => cmd_cache(rest),
         "experiment" => crate::experiments::run_cli(rest),
         other => {
             eprintln!("unknown command '{other}'\n\n{HELP}");
@@ -99,10 +109,21 @@ fn cmd_pipeline(args: &[String]) -> Result<i32> {
     let cfg = base_config(args)?;
     let rt = Arc::new(crate::runtime::Runtime::from_env()?);
     println!("== FAMES pipeline: {} / {} (R_energy = {}) ==", cfg.model, cfg.cfg, cfg.r_energy);
-    let session0 = Session::open(rt.clone(), &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
-    let library = pipeline::library_for(&session0.art.manifest, cfg.seed);
-    drop(session0);
-    let rep = pipeline::run(rt, &cfg, &library)?;
+    if !cfg.no_cache {
+        println!("  artifact store: {}", cfg.effective_cache_dir());
+    }
+    let rep = pipeline::run_cached(rt, &cfg)?;
+
+    let mut st = Table::new("stages", &["stage", "fingerprint", "cache", "secs"]);
+    for s in &rep.stages {
+        st.row(vec![
+            s.stage.to_string(),
+            s.fingerprint.clone(),
+            s.status().to_string(),
+            f3(s.secs),
+        ]);
+    }
+    st.print();
 
     let mut t = Table::new("result", &["metric", "value"]);
     t.row(vec!["quantized-exact accuracy (%)".into(), pct(rep.quant_eval.accuracy)]);
@@ -221,6 +242,8 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
     let mut bcfg = crate::bench::BenchConfig::default();
     let mut json = false;
     let mut out: Option<String> = None;
+    let mut compare: Option<String> = None;
+    let mut vs: Option<String> = None;
     for a in args {
         match a.as_str() {
             "--json" | "json=1" => json = true,
@@ -228,12 +251,81 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             _ => match a.strip_prefix("--").unwrap_or(a.as_str()).split_once('=') {
                 Some(("jobs", v)) => bcfg.jobs = v.parse().context("jobs")?,
                 Some(("out", v)) => out = Some(v.to_string()),
-                _ => bail!("bench takes --json, --quick, jobs=N, out=PATH (got '{a}')"),
+                Some(("compare", v)) => compare = Some(v.to_string()),
+                Some(("vs", v)) => vs = Some(v.to_string()),
+                _ => bail!(
+                    "bench takes --json, --quick, jobs=N, out=PATH, \
+                     --compare=OLD.json, vs=NEW.json (got '{a}')"
+                ),
             },
         }
     }
+
+    // --compare: diff two snapshots. With vs=NEW.json both sides come from
+    // disk; otherwise the bench runs now and the fresh snapshot is "new"
+    // (and out=PATH still records it, so one run both diffs and logs the
+    // new trajectory point).
+    if let Some(old_path) = &compare {
+        let old = crate::json::Json::load(old_path)?;
+        let new = match &vs {
+            Some(p) => crate::json::Json::load(p)?,
+            None => {
+                let stages = crate::bench::run_stages(&bcfg)?;
+                crate::bench::snapshot_json(&stages, &bcfg)
+            }
+        };
+        if let Some(path) = &out {
+            new.save(path)?;
+            println!("wrote {path}");
+        }
+        let deltas = crate::bench::compare_snapshots(&old, &new)?;
+        let regressions = deltas.iter().filter(|d| d.is_regression()).count();
+        if json {
+            let mut arr = crate::json::Json::arr();
+            for d in &deltas {
+                arr.push(
+                    crate::json::Json::obj()
+                        .with("name", d.name.as_str())
+                        .with("old_secs", d.old_secs)
+                        .with("new_secs", d.new_secs)
+                        .with("speedup", d.speedup())
+                        .with("verdict", d.verdict()),
+                );
+            }
+            let doc = crate::json::Json::obj()
+                .with("schema", "fames-bench-compare-v1")
+                .with("old", old_path.as_str())
+                .with("regressions", regressions)
+                .with("stages", arr);
+            println!("{}", doc.pretty());
+        } else {
+            let new_label = vs.as_deref().unwrap_or("(fresh run)");
+            let mut t = Table::new(
+                format!("bench compare: {old_path} → {new_label}"),
+                &["stage", "old", "new", "speedup", "verdict"],
+            );
+            for d in &deltas {
+                t.row(vec![
+                    d.name.clone(),
+                    crate::util::fmt_secs(d.old_secs),
+                    crate::util::fmt_secs(d.new_secs),
+                    format!("{:.2}×", d.speedup()),
+                    d.verdict().to_string(),
+                ]);
+            }
+            t.print();
+        }
+        if regressions > 0 {
+            println!("{regressions} stage(s) regressed (> {:.0}% slower)",
+                     crate::bench::REGRESSION_TOLERANCE * 100.0);
+            return Ok(1);
+        }
+        return Ok(0);
+    }
+
     let stages = crate::bench::run_stages(&bcfg)?;
-    let doc = crate::bench::snapshot_json(&stages, &bcfg);
+    let cache = crate::bench::run_cache_bench(&bcfg)?;
+    let doc = crate::bench::snapshot_json_with_cache(&stages, Some(&cache), &bcfg);
     if let Some(path) = &out {
         doc.save(path)?;
         println!("wrote {path}");
@@ -254,6 +346,68 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             ]);
         }
         t.print();
+        let mut ct = Table::new(
+            format!(
+                "pipeline cold vs warm (cache; {:.2}× end-to-end)",
+                cache.speedup()
+            ),
+            &["stage", "cold", "warm", "cold cache", "warm cache"],
+        );
+        for s in &cache.stages {
+            ct.row(vec![
+                s.stage.to_string(),
+                crate::util::fmt_secs(s.cold_secs),
+                crate::util::fmt_secs(s.warm_secs),
+                s.cold_status.to_string(),
+                s.warm_status.to_string(),
+            ]);
+        }
+        ct.print();
+    }
+    Ok(0)
+}
+
+fn cmd_cache(args: &[String]) -> Result<i32> {
+    let sub = args.first().map(String::as_str).unwrap_or("stat");
+    let rest = &args[1.min(args.len())..];
+    let cfg = base_config(rest)?;
+    let Some(store) = cfg.store() else {
+        println!("artifact store disabled (--no-cache)");
+        return Ok(0);
+    };
+    match sub {
+        "ls" => {
+            let entries = store.entries();
+            let mut t = Table::new(
+                format!("cache entries ({})", store.root().display()),
+                &["kind", "fingerprint", "bytes"],
+            );
+            for e in &entries {
+                t.row(vec![e.kind.clone(), e.fingerprint.clone(), e.bytes.to_string()]);
+            }
+            t.print();
+            println!("{} entries", entries.len());
+        }
+        "stat" => {
+            let stat = store.stat();
+            let mut t = Table::new(
+                format!("cache stat ({})", store.root().display()),
+                &["kind", "entries", "bytes"],
+            );
+            for (kind, n, bytes) in &stat.by_kind {
+                t.row(vec![kind.clone(), n.to_string(), bytes.to_string()]);
+            }
+            t.row(vec!["total".into(), stat.entries.to_string(), stat.total_bytes.to_string()]);
+            t.print();
+        }
+        "gc" => {
+            let (n, bytes) = store.gc()?;
+            println!(
+                "removed {n} entries ({bytes} bytes) from {}",
+                store.root().display()
+            );
+        }
+        other => bail!("cache takes ls | stat | gc (got '{other}')"),
     }
     Ok(0)
 }

@@ -39,6 +39,14 @@ pub fn apply_kv(cfg: &mut FamesConfig, key: &str, value: &str) -> Result<()> {
         "train_steps" => cfg.train_steps = vu()?,
         "train_lr" => cfg.train_lr = vf()? as f32,
         "jobs" => cfg.jobs = vu()?,
+        "cache_dir" | "cache-dir" => cfg.cache_dir = Some(value.to_string()),
+        "no_cache" | "no-cache" => {
+            cfg.no_cache = match value {
+                "1" | "true" | "yes" => true,
+                "0" | "false" | "no" => false,
+                other => bail!("no_cache must be a boolean (got '{other}')"),
+            }
+        }
         "calib_epochs" => cfg.calib.epochs = vu()?,
         "calib_samples" => cfg.calib.samples = vu()?,
         "calib_lr" => cfg.calib.lr = vf()? as f32,
@@ -63,6 +71,7 @@ pub fn from_json(j: &Json) -> Result<FamesConfig> {
         let s = match v {
             Json::Str(s) => s.clone(),
             Json::Num(n) => format!("{n}"),
+            Json::Bool(b) => (if *b { "true" } else { "false" }).to_string(),
             other => bail!("config key '{k}': unsupported value {other}"),
         };
         apply_kv(&mut cfg, k, &s)?;
@@ -71,10 +80,15 @@ pub fn from_json(j: &Json) -> Result<FamesConfig> {
 }
 
 /// Parse trailing `key=value` CLI arguments over a base config. A leading
-/// `--` on the key is accepted (`--jobs=4` ≡ `jobs=4`).
+/// `--` on the key is accepted (`--jobs=4` ≡ `jobs=4`), and the cache
+/// kill-switch also works as a bare flag (`--no-cache`).
 pub fn apply_args(cfg: &mut FamesConfig, args: &[String]) -> Result<()> {
     for a in args {
         let a = a.strip_prefix("--").unwrap_or(a.as_str());
+        if a == "no-cache" || a == "no_cache" {
+            cfg.no_cache = true;
+            continue;
+        }
         match a.split_once('=') {
             Some((k, v)) => apply_kv(cfg, k, v)?,
             None => bail!("expected key=value, got '{a}'"),
@@ -130,6 +144,39 @@ mod tests {
         assert_eq!(cfg.model, "resnet14");
         assert_eq!(cfg.eval_batches, 2);
         assert!(apply_args(&mut cfg, &["nokv".to_string()]).is_err());
+    }
+
+    #[test]
+    fn cache_knobs_parse() {
+        let mut cfg = FamesConfig::default();
+        assert_eq!(cfg.cache_dir, None);
+        assert!(!cfg.no_cache);
+        apply_args(&mut cfg, &["--cache-dir=/tmp/c".to_string()]).unwrap();
+        assert_eq!(cfg.cache_dir.as_deref(), Some("/tmp/c"));
+        apply_args(&mut cfg, &["--no-cache".to_string()]).unwrap();
+        assert!(cfg.no_cache);
+        let mut cfg2 = FamesConfig::default();
+        apply_args(&mut cfg2, &["no_cache=1".to_string()]).unwrap();
+        assert!(cfg2.no_cache);
+        apply_args(&mut cfg2, &["no_cache=false".to_string()]).unwrap();
+        assert!(!cfg2.no_cache);
+        assert!(apply_kv(&mut cfg2, "no_cache", "maybe").is_err());
+        // resolution: override wins, else <artifact_root>/cache
+        let mut cfg3 = FamesConfig { artifact_root: "arts".into(), ..FamesConfig::default() };
+        assert!(cfg3.effective_cache_dir().ends_with("cache"));
+        assert!(cfg3.effective_cache_dir().starts_with("arts"));
+        cfg3.cache_dir = Some("/elsewhere".into());
+        assert_eq!(cfg3.effective_cache_dir(), "/elsewhere");
+        cfg3.no_cache = true;
+        assert!(cfg3.store().is_none());
+    }
+
+    #[test]
+    fn json_config_accepts_booleans() {
+        let j = Json::parse(r#"{"no_cache":true,"cache_dir":"/tmp/x"}"#).unwrap();
+        let cfg = from_json(&j).unwrap();
+        assert!(cfg.no_cache);
+        assert_eq!(cfg.cache_dir.as_deref(), Some("/tmp/x"));
     }
 
     #[test]

@@ -252,7 +252,13 @@ fn write_num(out: &mut String, n: f64) {
         return;
     }
     if n == n.trunc() && n.abs() < 1e15 {
-        out.push_str(&format!("{}", n as i64));
+        if n == 0.0 && n.is_sign_negative() {
+            // `n as i64` would drop the sign bit; the artifact store needs
+            // every finite f64 to round-trip bit-exactly.
+            out.push_str("-0");
+        } else {
+            out.push_str(&format!("{}", n as i64));
+        }
     } else {
         out.push_str(&format!("{n}"));
     }
@@ -636,5 +642,25 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::from(42usize).compact(), "42");
         assert_eq!(Json::Num(0.5).compact(), "0.5");
+    }
+
+    #[test]
+    fn finite_f64_roundtrips_bit_exactly() {
+        // the artifact store's exactness contract, including the -0.0 sign
+        // bit (formerly lost through the integer fast path)
+        for v in [
+            0.0,
+            -0.0,
+            0.1 + 0.2,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            -12345.0,
+            9.007199254740992e15,
+            1e300,
+        ] {
+            let s = Json::Num(v).compact();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} via '{s}'");
+        }
     }
 }

@@ -39,6 +39,15 @@
 //! auto-detect). `fames bench --json` emits a per-stage serial-vs-parallel
 //! snapshot ([`bench`]).
 //!
+//! # Incremental runs
+//!
+//! The pipeline is an explicit stage graph ([`pipeline::stages`]) whose
+//! outputs persist content-addressed in an artifact store ([`store`]):
+//! the AppMul library (LUTs included), the Ω table, the ILP solution and
+//! the calibration state all load from disk when their fingerprints
+//! match, and a warm run is bit-identical to a cold one. Knobs:
+//! `--cache-dir` / `--no-cache`; maintenance: `fames cache ls|stat|gc`.
+//!
 //! See `docs/ARCHITECTURE.md` for the paper-section → module map, and
 //! `DESIGN.md` / `EXPERIMENTS.md` for the system inventory and the
 //! paper-vs-measured record.
@@ -60,6 +69,7 @@ pub mod rng;
 pub mod runtime;
 pub mod select;
 pub mod sensitivity;
+pub mod store;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -3,10 +3,21 @@
 //! `estimate → select (ILP) → calibrate → evaluate`, with per-phase timing
 //! (the Table II columns) and energy accounting. The GA baselines reuse the
 //! same session through `select::nsga`.
+//!
+//! Since PR 3 the flow is an explicit **stage graph** ([`stages`]): each
+//! stage carries a deterministic fingerprint (config slice + upstream
+//! fingerprints + seed) and persists its output content-addressed in the
+//! artifact store ([`crate::store`]). On a warm run, stages whose
+//! fingerprints match load from the store and are skipped — bit-identically,
+//! at every `--jobs` count. Knobs: [`FamesConfig::cache_dir`] /
+//! [`FamesConfig::no_cache`] (CLI `--cache-dir` / `--no-cache`; inspect
+//! with `fames cache ls|stat|gc`).
 
 pub mod session;
+pub mod stages;
 
 pub use session::{EvalResult, Session};
+pub use stages::{StageGraph, StageRun};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,9 +27,10 @@ use anyhow::{Context, Result};
 use crate::appmul::{AppMul, Library};
 use crate::calibrate::{self, CalibConfig};
 use crate::energy::EnergyModel;
-use crate::runtime::Runtime;
+use crate::runtime::{Manifest, Runtime};
 use crate::select::{self, Choice};
 use crate::sensitivity::{self, HessianMode, PerturbTable};
+use crate::store::{codec, Fingerprint, FingerprintBuilder, Store};
 use crate::tensor::Tensor;
 use crate::util::par;
 
@@ -43,6 +55,12 @@ pub struct FamesConfig {
     /// Worker threads for the parallelized stages (0 = auto; results are
     /// bit-identical at every setting). CLI: `--jobs=N` / `jobs=N`.
     pub jobs: usize,
+    /// Artifact-store location override; `None` = `<artifact_root>/cache`.
+    /// CLI: `--cache-dir=PATH`.
+    pub cache_dir: Option<String>,
+    /// Disable the artifact store entirely (every stage recomputes and
+    /// nothing is persisted). CLI: `--no-cache`.
+    pub no_cache: bool,
 }
 
 impl Default for FamesConfig {
@@ -60,6 +78,31 @@ impl Default for FamesConfig {
             train_steps: 900,
             train_lr: 0.01,
             jobs: 0,
+            cache_dir: None,
+            no_cache: false,
+        }
+    }
+}
+
+impl FamesConfig {
+    /// Resolved cache directory: the `cache_dir` override, else
+    /// `<artifact_root>/cache` (next to the parameter cache in `state/`).
+    pub fn effective_cache_dir(&self) -> String {
+        match &self.cache_dir {
+            Some(dir) => dir.clone(),
+            None => Path::new(&self.artifact_root)
+                .join("cache")
+                .to_string_lossy()
+                .into_owned(),
+        }
+    }
+
+    /// The artifact store for this config; `None` when `no_cache` is set.
+    pub fn store(&self) -> Option<Store> {
+        if self.no_cache {
+            None
+        } else {
+            Some(Store::open(self.effective_cache_dir()))
         }
     }
 }
@@ -94,6 +137,16 @@ pub struct PipelineReport {
     pub quant_energy_ratio_8bit: f64,
     pub times: PhaseTimes,
     pub ilp_nodes: u64,
+    /// Per-stage cache record (fingerprint, hit/miss/off, wall clock), in
+    /// execution order: library, train, estimate, select, calibrate.
+    pub stages: Vec<StageRun>,
+}
+
+impl PipelineReport {
+    /// The stage record for a named stage (`stages::STAGE_ORDER` names).
+    pub fn stage(&self, name: &str) -> Option<&StageRun> {
+        self.stages.iter().find(|s| s.stage == name)
+    }
 }
 
 /// Ensure the session has trained parameters: load the per-model cache or
@@ -185,12 +238,140 @@ pub fn selection_tensors(choices: &[Vec<&AppMul>], picks: &[usize]) -> Vec<Tenso
         .collect()
 }
 
-/// Run the full FAMES pipeline.
+/// A library ready for the pipeline: the designs plus their content
+/// fingerprint (the universal downstream cache key — identical whether the
+/// library was generated, loaded from the store, or handed in).
+pub struct PreparedLibrary {
+    pub library: Library,
+    pub fingerprint: Fingerprint,
+    /// `Some(true)` loaded from the store, `Some(false)` generated and
+    /// persisted, `None` caching disabled.
+    pub hit: Option<bool>,
+    pub secs: f64,
+}
+
+/// The `library` stage: load the manifest-covering AppMul library from the
+/// store or generate it (deterministic in `(bit pairs, seed)`).
+///
+/// Approximate families are generated only for bitwidth pairs that actually
+/// appear in the manifest's layers; when no layer is 8-bit, the 8×8 entry
+/// is the exact baseline design alone (all the energy model needs for the
+/// Table III reference — generating the full 8-bit approximate family
+/// would dominate the cold-run cost without affecting any result).
+pub fn prepare_library(
+    manifest: &Manifest,
+    seed: u64,
+    store: Option<&Store>,
+    jobs: usize,
+) -> Result<PreparedLibrary> {
+    let t0 = std::time::Instant::now();
+    let mut layer_pairs: Vec<(u32, u32)> = manifest
+        .layers
+        .iter()
+        .map(|l| (l.a_bits, l.w_bits))
+        .collect();
+    layer_pairs.sort_unstable();
+    layer_pairs.dedup();
+    let needs_exact8 = !layer_pairs.contains(&(8, 8));
+    let mut b = FingerprintBuilder::new("library")
+        .u64("seed", seed)
+        .u64("exact8_baseline", needs_exact8 as u64)
+        .u64("pairs", layer_pairs.len() as u64);
+    for &(a, w) in &layer_pairs {
+        b = b.u64("a_bits", a as u64).u64("w_bits", w as u64);
+    }
+    let input_fp = b.finish();
+    if let Some(store) = store {
+        if let Some(payload) = store.get(codec::LIBRARY_KIND, codec::LIBRARY_VERSION, input_fp) {
+            match codec::library_from_json(&payload) {
+                Ok(library) => {
+                    let fingerprint = codec::library_fingerprint(&library);
+                    return Ok(PreparedLibrary {
+                        library,
+                        fingerprint,
+                        hit: Some(true),
+                        secs: t0.elapsed().as_secs_f64(),
+                    });
+                }
+                Err(e) => {
+                    eprintln!("  cache: discarding undecodable library entry {input_fp}: {e:#}")
+                }
+            }
+        }
+    }
+    let mut library = crate::appmul::generate_library_jobs(&layer_pairs, seed, jobs);
+    if needs_exact8 {
+        let n8 = crate::circuit::build_multiplier(&crate::circuit::MulConfig::exact(8, 8));
+        library.push(AppMul::from_netlist("mul8x8_exact", "exact", 8, 8, &n8, seed));
+    }
+    let hit = match store {
+        Some(store) => {
+            if let Err(e) = store.put(
+                codec::LIBRARY_KIND,
+                codec::LIBRARY_VERSION,
+                input_fp,
+                codec::library_to_json(&library),
+            ) {
+                eprintln!("  cache: failed to persist library entry {input_fp}: {e:#}");
+            }
+            Some(false)
+        }
+        None => None,
+    };
+    let fingerprint = codec::library_fingerprint(&library);
+    Ok(PreparedLibrary { library, fingerprint, hit, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Run the full FAMES pipeline with a caller-provided library (the library
+/// stage is recorded as externally provided; every other cacheable stage
+/// goes through the store per `cfg`).
 pub fn run(rt: Arc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<PipelineReport> {
+    let lib_fp = codec::library_fingerprint(library);
+    run_inner(rt, cfg, library, lib_fp, None, 0.0)
+}
+
+/// Run the full FAMES pipeline end to end through the artifact store:
+/// the library is loaded-or-generated ([`prepare_library`]) and every
+/// cacheable stage loads on a fingerprint match. This is what
+/// `fames pipeline` drives.
+pub fn run_cached(rt: Arc<Runtime>, cfg: &FamesConfig) -> Result<PipelineReport> {
+    let art = crate::runtime::ArtifactSet::locate(&cfg.artifact_root, &cfg.model, &cfg.cfg)?;
+    let store = cfg.store();
+    let prep = prepare_library(&art.manifest, cfg.seed, store.as_ref(), cfg.jobs)?;
+    run_inner(rt, cfg, &prep.library, prep.fingerprint, prep.hit, prep.secs)
+}
+
+/// The stage-graph pipeline body (see module docs and
+/// `docs/ARCHITECTURE.md` § "Stage graph & artifact store").
+fn run_inner(
+    rt: Arc<Runtime>,
+    cfg: &FamesConfig,
+    library: &Library,
+    lib_fp: Fingerprint,
+    lib_hit: Option<bool>,
+    lib_secs: f64,
+) -> Result<PipelineReport> {
+    let mut graph = StageGraph::new(cfg.store());
+    graph.record("library", lib_fp, lib_hit, lib_secs);
+
     let mut times = PhaseTimes::default();
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     session.jobs = cfg.jobs;
+
+    // train stage — the per-model parameter cache predates the store
+    // (params are shared across bit configs of one model, keyed by model
+    // name alone; `train_steps`/`train_lr`/`seed` only matter on a cold
+    // train). Its recorded fingerprint is therefore the *content* address
+    // of the parameters in use — honest about what the cache key is: a
+    // knob change that reuses cached params keeps the same fingerprint.
+    let t = std::time::Instant::now();
+    let params_cached = Session::state_path(&cfg.artifact_root, &cfg.model).exists();
     times.train_secs = ensure_trained(&mut session, cfg)?;
+    let train_fp = FingerprintBuilder::new("train")
+        .str("model", &cfg.model)
+        .u64("params", session.params.content_hash())
+        .finish();
+    graph.record("train", train_fp, Some(params_cached), t.elapsed().as_secs_f64());
     session.init_act_ranges()?;
 
     // quantized-exact reference
@@ -199,18 +380,101 @@ pub fn run(rt: Arc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<Pip
     let quant_eval = session.evaluate(cfg.eval_batches)?;
     times.eval_secs += t.elapsed().as_secs_f64();
 
-    // Step 1: perturbation estimation (Ω table, computed once)
+    // expected per-layer candidate counts — Ω-table/solution shape
+    // validation for cached entries (a stale entry must fall back to
+    // recompute, never panic downstream)
+    let row_lens: Vec<usize> = session
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| library.for_bits(l.a_bits, l.w_bits).len())
+        .collect();
+
+    // Step 1: perturbation estimation (Ω table, computed once per model).
+    // The estimate does NOT chain the train fingerprint: its true data
+    // dependency is the parameter content, so a re-train that loads the
+    // same cached params keeps the estimate warm.
+    let manifest_hash = crate::util::hash::hash_file(session.art.dir.join("manifest.json"))?;
+    let est_fp = FingerprintBuilder::new("estimate")
+        .fp("library", lib_fp)
+        .u64("manifest", manifest_hash)
+        .u64("params", session.params.content_hash())
+        .u64("seed", cfg.seed)
+        .u64("est_batches", cfg.est_batches as u64)
+        .str("hessian", &format!("{:?}", cfg.hessian))
+        .finish();
     let t = std::time::Instant::now();
-    let (_est, table) =
-        sensitivity::estimate_table(&mut session, library, cfg.est_batches, cfg.hessian)?;
+    let table = graph.stage(
+        "estimate",
+        codec::TABLE_KIND,
+        codec::TABLE_VERSION,
+        est_fp,
+        |j| {
+            let table = codec::table_from_json(j)?;
+            anyhow::ensure!(
+                table.values.len() == row_lens.len(),
+                "cached Ω table has {} layers, model has {}",
+                table.values.len(),
+                row_lens.len()
+            );
+            for (k, row) in table.values.iter().enumerate() {
+                anyhow::ensure!(
+                    row.len() == row_lens[k],
+                    "cached Ω table row {k} has {} entries, library has {}",
+                    row.len(),
+                    row_lens[k]
+                );
+            }
+            Ok(table)
+        },
+        codec::table_to_json,
+        || {
+            sensitivity::estimate_table(&mut session, library, cfg.est_batches, cfg.hessian)
+                .map(|(_est, table)| table)
+        },
+    )?;
     times.estimate_secs = t.elapsed().as_secs_f64();
 
     // Step 2: ILP selection
     let t = std::time::Instant::now();
     let energy = EnergyModel::new(&session.art.manifest, library);
-    let (choices, sol) = select_ilp_jobs(&table, &energy, library, cfg.r_energy, cfg.jobs)?;
+    let sel_fp = FingerprintBuilder::new("select")
+        .fp("estimate", est_fp)
+        .f64("r_energy", cfg.r_energy)
+        .finish();
+    let sol = graph.stage(
+        "select",
+        codec::SOLUTION_KIND,
+        codec::SOLUTION_VERSION,
+        sel_fp,
+        |j| {
+            let sol = codec::solution_from_json(j)?;
+            anyhow::ensure!(
+                sol.picks.len() == row_lens.len(),
+                "cached solution has {} picks, model has {} layers",
+                sol.picks.len(),
+                row_lens.len()
+            );
+            for (k, &p) in sol.picks.iter().enumerate() {
+                anyhow::ensure!(p < row_lens[k], "cached solution pick {k} out of range");
+            }
+            Ok(sol)
+        },
+        codec::solution_to_json,
+        || select_ilp_jobs(&table, &energy, library, cfg.r_energy, cfg.jobs).map(|(_, s)| s),
+    )?;
     times.select_secs = t.elapsed().as_secs_f64();
 
+    // the per-layer choice rows are deterministic in (library, manifest) —
+    // rebuild them instead of persisting borrowed data
+    let choices: Vec<Vec<&AppMul>> = session
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| library.for_bits(l.a_bits, l.w_bits))
+        .collect();
     let selection: Vec<&AppMul> = choices
         .iter()
         .zip(&sol.picks)
@@ -230,9 +494,47 @@ pub fn run(rt: Arc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<Pip
     let approx_eval_before = session.evaluate(cfg.eval_batches)?;
     times.eval_secs += t.elapsed().as_secs_f64();
 
-    // Step 3: calibration (Algorithm 1)
+    // Step 3: calibration (Algorithm 1). The cached artifact is the
+    // post-calibration session state (activation scales + LWC bounds);
+    // applying it reproduces the calibrated model bit-for-bit.
+    let n_layers = session.art.manifest.layers.len();
+    let cal_fp = FingerprintBuilder::new("calibrate")
+        .fp("select", sel_fp)
+        .u64("epochs", cfg.calib.epochs as u64)
+        .u64("samples", cfg.calib.samples as u64)
+        .f64("lr", cfg.calib.lr as f64)
+        .f64("q_step", cfg.calib.q_step)
+        .f64("q_max", cfg.calib.q_max)
+        .str("metric", &format!("{:?}", cfg.calib.metric))
+        .finish();
     let t = std::time::Instant::now();
-    calibrate::calibrate(&mut session, &cfg.calib)?;
+    let calib = graph.stage(
+        "calibrate",
+        codec::CALIB_KIND,
+        codec::CALIB_VERSION,
+        cal_fp,
+        |j| {
+            let c = codec::calib_from_json(j)?;
+            anyhow::ensure!(
+                c.act_q.len() == n_layers,
+                "cached calibration has {} layers, model has {n_layers}",
+                c.act_q.len()
+            );
+            Ok(c)
+        },
+        codec::calib_to_json,
+        || {
+            let rep = calibrate::calibrate(&mut session, &cfg.calib)?;
+            Ok(codec::CalibArtifact {
+                act_q: session.act_q.clone(),
+                lwc: session.lwc.clone(),
+                q_star: rep.q_star,
+                losses: rep.losses,
+            })
+        },
+    )?;
+    session.act_q = calib.act_q.clone();
+    session.lwc = calib.lwc.clone();
     times.calibrate_secs = t.elapsed().as_secs_f64();
 
     let t = std::time::Instant::now();
@@ -252,6 +554,7 @@ pub fn run(rt: Arc<Runtime>, cfg: &FamesConfig, library: &Library) -> Result<Pip
         quant_energy_ratio_8bit,
         times,
         ilp_nodes: sol.nodes,
+        stages: graph.runs,
     })
 }
 

@@ -1,0 +1,222 @@
+//! The incremental stage graph: explicit stages with typed, cacheable
+//! outputs and chained fingerprints.
+//!
+//! The FAMES flow is a small DAG:
+//!
+//! ```text
+//!   library ──┐
+//!   train ────┼──▶ estimate ──▶ select ──▶ calibrate
+//!   (params)  │    (Ω table)    (picks)    (scales/LWC)
+//! ```
+//!
+//! Each stage's [`crate::store::Fingerprint`] hashes exactly three things:
+//! its own config slice, the fingerprints of its upstream stages, and the
+//! seed/content inputs (manifest bytes, parameter tensors). Changing any
+//! input therefore invalidates precisely the downstream stages and nothing
+//! else — `tests/cache_semantics.rs` pins this per knob.
+//!
+//! [`StageGraph::stage`] is the one execution primitive: look the
+//! fingerprint up in the [`crate::store::Store`] (when caching is on),
+//! decode on a hit, otherwise compute and persist. A decode failure —
+//! corrupt bytes, stale codec version, wrong shape — degrades to a
+//! recompute, never an error. The determinism contract makes hits safe:
+//! every stage output is a pure function of its fingerprint inputs, and
+//! codecs round-trip bit-exactly, so a warm run is bit-identical to a cold
+//! one at every `--jobs` count.
+
+use anyhow::Result;
+
+use crate::json::Json;
+use crate::store::{Fingerprint, Store};
+
+/// Stage names in pipeline order (the `stage` field of [`StageRun`]).
+pub const STAGE_ORDER: [&str; 5] = ["library", "train", "estimate", "select", "calibrate"];
+
+/// One stage execution record, surfaced in
+/// [`crate::pipeline::PipelineReport::stages`].
+#[derive(Clone, Debug)]
+pub struct StageRun {
+    pub stage: &'static str,
+    /// Hex fingerprint of the stage's inputs.
+    pub fingerprint: String,
+    /// `Some(true)` = loaded from the store, `Some(false)` = computed and
+    /// persisted, `None` = caching disabled or artifact provided by the
+    /// caller.
+    pub hit: Option<bool>,
+    pub secs: f64,
+}
+
+impl StageRun {
+    /// Compact status for tables/logs: `hit`, `miss` or `off`.
+    pub fn status(&self) -> &'static str {
+        match self.hit {
+            Some(true) => "hit",
+            Some(false) => "miss",
+            None => "off",
+        }
+    }
+}
+
+/// Orchestrates the cacheable stages of one pipeline run.
+pub struct StageGraph {
+    store: Option<Store>,
+    pub runs: Vec<StageRun>,
+}
+
+impl StageGraph {
+    pub fn new(store: Option<Store>) -> StageGraph {
+        StageGraph { store, runs: Vec::new() }
+    }
+
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_ref()
+    }
+
+    /// Record a stage that ran outside [`StageGraph::stage`] (the library
+    /// preparation and the pre-existing parameter cache).
+    pub fn record(&mut self, stage: &'static str, fp: Fingerprint, hit: Option<bool>, secs: f64) {
+        self.runs.push(StageRun { stage, fingerprint: fp.hex(), hit, secs });
+    }
+
+    /// The run record for a named stage, if it executed.
+    pub fn run_for(&self, stage: &str) -> Option<&StageRun> {
+        self.runs.iter().find(|r| r.stage == stage)
+    }
+
+    /// Execute one cacheable stage.
+    ///
+    /// * `stage` — the graph-level stage name ([`STAGE_ORDER`]);
+    /// * `kind`/`version` — the store kind directory and codec schema
+    ///   version (`store::codec::*_KIND` / `*_VERSION`);
+    /// * `fp` — the stage fingerprint (config slice + upstream
+    ///   fingerprints + seed);
+    /// * `decode` — payload → typed output; its validation errors turn a
+    ///   corrupt/stale entry into a miss;
+    /// * `encode` — typed output → payload, persisted on a miss;
+    /// * `compute` — the actual stage body, run only on a miss.
+    pub fn stage<T>(
+        &mut self,
+        stage: &'static str,
+        kind: &'static str,
+        version: u32,
+        fp: Fingerprint,
+        decode: impl FnOnce(&Json) -> Result<T>,
+        encode: impl FnOnce(&T) -> Json,
+        compute: impl FnOnce() -> Result<T>,
+    ) -> Result<T> {
+        let t0 = std::time::Instant::now();
+        if let Some(store) = &self.store {
+            if let Some(payload) = store.get(kind, version, fp) {
+                match decode(&payload) {
+                    Ok(v) => {
+                        self.record(stage, fp, Some(true), t0.elapsed().as_secs_f64());
+                        return Ok(v);
+                    }
+                    Err(e) => {
+                        eprintln!("  cache: discarding undecodable {kind} entry {fp}: {e:#}")
+                    }
+                }
+            }
+        }
+        let v = compute()?;
+        if let Some(store) = &self.store {
+            if let Err(e) = store.put(kind, version, fp, encode(&v)) {
+                // a read-only or full cache dir must not fail the pipeline
+                eprintln!("  cache: failed to persist {kind} entry {fp}: {e:#}");
+            }
+            self.record(stage, fp, Some(false), t0.elapsed().as_secs_f64());
+        } else {
+            self.record(stage, fp, None, t0.elapsed().as_secs_f64());
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::FingerprintBuilder;
+
+    fn tmp_store(tag: &str) -> Store {
+        let root =
+            std::env::temp_dir().join(format!("fames-stages-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        Store::open(root)
+    }
+
+    fn fp(n: u64) -> Fingerprint {
+        FingerprintBuilder::new("test").u64("n", n).finish()
+    }
+
+    #[test]
+    fn stage_computes_then_hits() {
+        let mut g = StageGraph::new(Some(tmp_store("hits")));
+        let mut computed = 0usize;
+        for _ in 0..2 {
+            let v: usize = g
+                .stage(
+                    "numbers",
+                    "numbers",
+                    1,
+                    fp(1),
+                    |j| j.get("v")?.as_usize(),
+                    |v| Json::obj().with("v", *v),
+                    || {
+                        computed += 1;
+                        Ok(41 + computed)
+                    },
+                )
+                .unwrap();
+            assert_eq!(v, 42, "hit must return the first computation");
+        }
+        assert_eq!(computed, 1, "second call must be served from the store");
+        assert_eq!(g.runs.len(), 2);
+        assert_eq!(g.runs[0].hit, Some(false));
+        assert_eq!(g.runs[1].hit, Some(true));
+        assert_eq!(g.runs[0].fingerprint, g.runs[1].fingerprint);
+        assert_eq!(g.run_for("numbers").unwrap().status(), "miss");
+        let root = g.store().unwrap().root().to_path_buf();
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn undecodable_entry_recomputes() {
+        let mut g = StageGraph::new(Some(tmp_store("undecodable")));
+        // persist a payload the decoder will reject
+        g.store().unwrap().put("numbers", 1, fp(2), Json::obj().with("wrong", 1usize)).unwrap();
+        let v: usize = g
+            .stage(
+                "numbers",
+                "numbers",
+                1,
+                fp(2),
+                |j| j.get("v")?.as_usize(),
+                |v| Json::obj().with("v", *v),
+                || Ok(7),
+            )
+            .unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(g.runs[0].hit, Some(false), "bad entry must count as a miss");
+        // ... and the recompute overwrote it with a decodable entry
+        let v2: usize = g
+            .stage("numbers", "numbers", 1, fp(2), |j| j.get("v")?.as_usize(),
+                   |v| Json::obj().with("v", *v), || Ok(99))
+            .unwrap();
+        assert_eq!(v2, 7);
+        let root = g.store().unwrap().root().to_path_buf();
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn disabled_cache_always_computes() {
+        let mut g = StageGraph::new(None);
+        for want in [1usize, 2] {
+            let v: usize = g
+                .stage("numbers", "numbers", 1, fp(3), |j| j.get("v")?.as_usize(),
+                       |v| Json::obj().with("v", *v), || Ok(want))
+                .unwrap();
+            assert_eq!(v, want);
+        }
+        assert!(g.runs.iter().all(|r| r.hit.is_none() && r.status() == "off"));
+    }
+}

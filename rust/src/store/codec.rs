@@ -1,0 +1,234 @@
+//! Schema-versioned JSON codecs for the cacheable stage artifacts.
+//!
+//! Every codec is a value-exact round trip: `from_json(to_json(x)) == x`
+//! bit-for-bit on all persisted fields (floats cross the boundary via
+//! shortest-roundtrip formatting; derived fields like error metrics are
+//! recomputed deterministically from the persisted LUT). Decoders validate
+//! shape and reject malformed payloads with an error — the stage graph
+//! treats a decode failure as a cache miss and recomputes.
+//!
+//! Bump a kind's `*_VERSION` whenever its payload shape changes: old
+//! entries then stop validating in [`crate::store::Store::get`] and the
+//! pipeline transparently regenerates them.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::appmul::{AppMul, Library};
+use crate::json::Json;
+use crate::select::Solution;
+use crate::sensitivity::PerturbTable;
+use crate::store::Fingerprint;
+use crate::util::hash::Fnv64;
+
+pub const LIBRARY_KIND: &str = "library";
+pub const LIBRARY_VERSION: u32 = 1;
+
+pub const TABLE_KIND: &str = "perturb_table";
+pub const TABLE_VERSION: u32 = 1;
+
+pub const SOLUTION_KIND: &str = "solution";
+pub const SOLUTION_VERSION: u32 = 1;
+
+pub const CALIB_KIND: &str = "calibration";
+pub const CALIB_VERSION: u32 = 1;
+
+// ---- AppMul library (including LUT payloads) ----
+
+/// Serialize a library, LUTs included. Item order is preserved — the
+/// presentation order of `Library::for_bits` derives from it.
+pub fn library_to_json(lib: &Library) -> Json {
+    let mut items = Json::arr();
+    for m in lib.iter() {
+        items.push(
+            Json::obj()
+                .with("name", m.name.as_str())
+                .with("family", m.family.as_str())
+                .with("a_bits", m.a_bits)
+                .with("w_bits", m.w_bits)
+                .with("lut", Json::Arr(m.lut.iter().map(|&v| Json::from(v)).collect()))
+                .with("pdp", m.pdp)
+                .with("energy_fj", m.energy_fj)
+                .with("delay_ps", m.delay_ps)
+                .with("area_um2", m.area_um2)
+                .with("gates", m.gates),
+        );
+    }
+    Json::obj().with("items", items)
+}
+
+/// Decode a library; error metrics and the flattened error matrix are
+/// recomputed from each LUT (`AppMul::from_parts`).
+pub fn library_from_json(j: &Json) -> Result<Library> {
+    let mut items = Vec::new();
+    for (i, item) in j.get("items")?.as_arr()?.iter().enumerate() {
+        let ctx = || format!("library item {i}");
+        let a_bits = item.get("a_bits")?.as_usize().with_context(ctx)? as u32;
+        let w_bits = item.get("w_bits")?.as_usize().with_context(ctx)? as u32;
+        let lut = item
+            .get("lut")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_i64())
+            .collect::<Result<Vec<i64>>>()
+            .with_context(ctx)?;
+        let am = AppMul::from_parts(
+            item.get("name")?.as_str()?.to_string(),
+            item.get("family")?.as_str()?.to_string(),
+            a_bits,
+            w_bits,
+            lut,
+            item.get("pdp")?.as_f64()?,
+            item.get("energy_fj")?.as_f64()?,
+            item.get("delay_ps")?.as_f64()?,
+            item.get("area_um2")?.as_f64()?,
+            item.get("gates")?.as_usize()?,
+        )
+        .with_context(ctx)?;
+        items.push(am);
+    }
+    Ok(Library::new(items))
+}
+
+/// Order-sensitive content fingerprint of a library — the universal
+/// downstream cache key, identical whether the library was generated,
+/// loaded from the store, or handed in by the caller.
+pub fn library_fingerprint(lib: &Library) -> Fingerprint {
+    let mut h = Fnv64::new();
+    h.write_str("fames-library-content");
+    h.write_u64(lib.items().len() as u64);
+    for m in lib.iter() {
+        h.write_str(&m.name);
+        h.write_str(&m.family);
+        h.write_u64(m.a_bits as u64);
+        h.write_u64(m.w_bits as u64);
+        for &v in &m.lut {
+            h.write_i64(v);
+        }
+        h.write_f64(m.pdp);
+        h.write_f64(m.energy_fj);
+        h.write_f64(m.delay_ps);
+        h.write_f64(m.area_um2);
+        h.write_u64(m.gates as u64);
+    }
+    Fingerprint(h.finish())
+}
+
+// ---- Ω perturbation table ----
+
+/// Serialize a `PerturbTable` (values + names + base loss; the measured
+/// `estimate_secs` is wall clock, not content, and is not persisted).
+pub fn table_to_json(t: &PerturbTable) -> Json {
+    let mut values = Json::arr();
+    for row in &t.values {
+        values.push(Json::Arr(row.iter().map(|&v| Json::from(v)).collect()));
+    }
+    let mut names = Json::arr();
+    for row in &t.names {
+        names.push(Json::Arr(row.iter().map(|n| Json::from(n.as_str())).collect()));
+    }
+    Json::obj()
+        .with("values", values)
+        .with("names", names)
+        .with("base_loss", t.base_loss)
+}
+
+pub fn table_from_json(j: &Json) -> Result<PerturbTable> {
+    let mut values: Vec<Vec<f64>> = Vec::new();
+    for row in j.get("values")?.as_arr()? {
+        values.push(row.as_arr()?.iter().map(|v| v.as_f64()).collect::<Result<_>>()?);
+    }
+    let mut names: Vec<Vec<String>> = Vec::new();
+    for row in j.get("names")?.as_arr()? {
+        names.push(row.as_str_vec()?);
+    }
+    ensure!(values.len() == names.len(), "values/names layer count mismatch");
+    for (v, n) in values.iter().zip(&names) {
+        ensure!(v.len() == n.len(), "values/names row length mismatch");
+    }
+    Ok(PerturbTable {
+        values,
+        names,
+        base_loss: j.get("base_loss")?.as_f64()?,
+        estimate_secs: 0.0,
+    })
+}
+
+// ---- ILP solution ----
+
+pub fn solution_to_json(s: &Solution) -> Json {
+    Json::obj()
+        .with("picks", s.picks.as_slice())
+        .with("total_cost", s.total_cost)
+        .with("total_value", s.total_value)
+        .with("optimal", s.optimal)
+        .with("nodes", s.nodes as i64)
+}
+
+pub fn solution_from_json(j: &Json) -> Result<Solution> {
+    let nodes = j.get("nodes")?.as_i64()?;
+    ensure!(nodes >= 0, "negative node count");
+    Ok(Solution {
+        picks: j.get("picks")?.as_usize_vec()?,
+        total_cost: j.get("total_cost")?.as_f64()?,
+        total_value: j.get("total_value")?.as_f64()?,
+        optimal: j.get("optimal")?.as_bool()?,
+        nodes: nodes as u64,
+    })
+}
+
+// ---- calibration outcome ----
+
+/// The persisted result of `calibrate::calibrate`: the post-calibration
+/// session state (activation scales, LWC bounds) plus the report series.
+/// Applying a loaded artifact to a session reproduces the calibrated model
+/// bit-for-bit without re-running Algorithm 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibArtifact {
+    /// Per layer (s_x, b_x) after calibration.
+    pub act_q: Vec<(f32, f32)>,
+    /// Per layer (γ, β) after calibration.
+    pub lwc: Vec<(f32, f32)>,
+    /// Chosen clip quantile per layer.
+    pub q_star: Vec<f64>,
+    /// LWC loss per step.
+    pub losses: Vec<f64>,
+}
+
+fn pairs_to_json(pairs: &[(f32, f32)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|&(a, b)| Json::Arr(vec![Json::from(a as f64), Json::from(b as f64)]))
+            .collect(),
+    )
+}
+
+fn pairs_from_json(j: &Json) -> Result<Vec<(f32, f32)>> {
+    let mut out = Vec::new();
+    for pair in j.as_arr()? {
+        let p = pair.as_arr()?;
+        ensure!(p.len() == 2, "pair must have 2 entries");
+        out.push((p[0].as_f64()? as f32, p[1].as_f64()? as f32));
+    }
+    Ok(out)
+}
+
+pub fn calib_to_json(c: &CalibArtifact) -> Json {
+    Json::obj()
+        .with("act_q", pairs_to_json(&c.act_q))
+        .with("lwc", pairs_to_json(&c.lwc))
+        .with("q_star", Json::Arr(c.q_star.iter().map(|&v| Json::from(v)).collect()))
+        .with("losses", Json::Arr(c.losses.iter().map(|&v| Json::from(v)).collect()))
+}
+
+pub fn calib_from_json(j: &Json) -> Result<CalibArtifact> {
+    let act_q = pairs_from_json(j.get("act_q")?)?;
+    let lwc = pairs_from_json(j.get("lwc")?)?;
+    ensure!(act_q.len() == lwc.len(), "act_q/lwc layer count mismatch");
+    Ok(CalibArtifact {
+        act_q,
+        lwc,
+        q_star: j.get("q_star")?.as_arr()?.iter().map(|v| v.as_f64()).collect::<Result<_>>()?,
+        losses: j.get("losses")?.as_arr()?.iter().map(|v| v.as_f64()).collect::<Result<_>>()?,
+    })
+}

@@ -1,0 +1,389 @@
+//! Content-addressed artifact store — the persistence layer of the
+//! incremental stage graph (`pipeline::stages`).
+//!
+//! Every cacheable pipeline stage output (AppMul [`crate::appmul::Library`],
+//! Ω [`crate::sensitivity::PerturbTable`], ILP
+//! [`crate::select::Solution`], calibration state) is addressed by a
+//! [`Fingerprint`]: an FNV-1a hash of the stage's config slice, its
+//! upstream fingerprints, and the seed. Entries live on disk as
+//! schema-versioned JSON envelopes:
+//!
+//! ```text
+//! <cache_dir>/
+//!   library/<fingerprint>.json        (kind directory per artifact type)
+//!   perturb_table/<fingerprint>.json
+//!   solution/<fingerprint>.json
+//!   calibration/<fingerprint>.json
+//! ```
+//!
+//! Envelope: `{schema, kind, version, fingerprint, payload}`. [`Store::get`]
+//! validates all four header fields before handing back the payload;
+//! anything unreadable, corrupt, mis-kinded or from an older codec version
+//! is treated as a **miss** (the pipeline recomputes and overwrites) —
+//! never an error, never a panic. Writes go through a temp file + rename so
+//! a crashed run cannot leave a torn entry behind.
+//!
+//! The round-trip contract (enforced by `tests/store_roundtrip.rs` and
+//! `tests/cache_semantics.rs`): a warm load is **bit-identical** to the
+//! cold computation it replaces. All floats cross the JSON boundary via
+//! Rust's shortest-roundtrip formatting, which parses back to the exact
+//! same bit pattern for every finite value.
+
+pub mod codec;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+use crate::util::hash::Fnv64;
+
+/// Envelope schema tag (bump only on envelope-shape changes; per-kind
+/// payload evolution uses the codec `version` field instead).
+pub const ENVELOPE_SCHEMA: &str = "fames-store-v1";
+
+/// A 64-bit content/config address, printed as 16 hex digits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint(pub u64);
+
+impl Fingerprint {
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    pub fn from_hex(s: &str) -> Option<Fingerprint> {
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(Fingerprint)
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// Builder for stage fingerprints: a keyed, order-sensitive FNV-1a stream.
+/// Keys are hashed alongside values, so two stages with the same value list
+/// under different field names cannot collide by accident.
+///
+/// ```
+/// use fames::store::FingerprintBuilder;
+/// let a = FingerprintBuilder::new("estimate").u64("seed", 1).finish();
+/// let b = FingerprintBuilder::new("estimate").u64("seed", 2).finish();
+/// let c = FingerprintBuilder::new("select").u64("seed", 1).finish();
+/// assert_ne!(a, b);
+/// assert_ne!(a, c);
+/// ```
+#[derive(Clone, Debug)]
+pub struct FingerprintBuilder {
+    h: Fnv64,
+}
+
+impl FingerprintBuilder {
+    /// Start a fingerprint in a named domain (typically the stage name).
+    pub fn new(domain: &str) -> FingerprintBuilder {
+        let mut h = Fnv64::new();
+        h.write_str(domain);
+        FingerprintBuilder { h }
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.h.write_str(key);
+        self.h.write_str(v);
+        self
+    }
+
+    pub fn u64(mut self, key: &str, v: u64) -> Self {
+        self.h.write_str(key);
+        self.h.write_u64(v);
+        self
+    }
+
+    pub fn f64(mut self, key: &str, v: f64) -> Self {
+        self.h.write_str(key);
+        self.h.write_f64(v);
+        self
+    }
+
+    /// Chain an upstream stage's fingerprint (the DAG edge).
+    pub fn fp(mut self, key: &str, v: Fingerprint) -> Self {
+        self.h.write_str(key);
+        self.h.write_u64(v.0);
+        self
+    }
+
+    pub fn finish(self) -> Fingerprint {
+        Fingerprint(self.h.finish())
+    }
+}
+
+/// One on-disk entry (for `fames cache ls`).
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub kind: String,
+    pub fingerprint: String,
+    pub bytes: u64,
+    pub path: PathBuf,
+}
+
+/// Aggregate accounting (for `fames cache stat`).
+#[derive(Clone, Debug, Default)]
+pub struct StoreStat {
+    pub entries: usize,
+    pub total_bytes: u64,
+    /// Per kind: (kind, entry count, bytes).
+    pub by_kind: Vec<(String, usize, u64)>,
+}
+
+/// A content-addressed store rooted at one directory.
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Bind a store to a directory (created lazily on first `put`).
+    pub fn open(root: impl Into<PathBuf>) -> Store {
+        Store { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn entry_path(&self, kind: &str, fp: Fingerprint) -> PathBuf {
+        self.root.join(kind).join(format!("{}.json", fp.hex()))
+    }
+
+    /// Load an entry's payload. Returns `None` on a miss — including a
+    /// missing file, unparseable JSON, a wrong envelope schema/kind, a
+    /// stale codec `version`, or a fingerprint mismatch. Cache corruption
+    /// degrades to recomputation, never to an error.
+    pub fn get(&self, kind: &str, version: u32, fp: Fingerprint) -> Option<Json> {
+        let path = self.entry_path(kind, fp);
+        let doc = Json::load(&path).ok()?;
+        let header_ok = |key: &str, want: &str| {
+            doc.opt(key).and_then(|v| v.as_str().ok()).map(|s| s == want).unwrap_or(false)
+        };
+        if !header_ok("schema", ENVELOPE_SCHEMA)
+            || !header_ok("kind", kind)
+            || !header_ok("fingerprint", &fp.hex())
+            || doc.opt("version").and_then(|v| v.as_usize().ok()) != Some(version as usize)
+        {
+            return None;
+        }
+        doc.opt("payload").cloned()
+    }
+
+    /// Persist an entry (compact JSON, temp-file + rename for atomicity).
+    pub fn put(&self, kind: &str, version: u32, fp: Fingerprint, payload: Json) -> Result<()> {
+        let path = self.entry_path(kind, fp);
+        let parent = path.parent().expect("entry path has a parent");
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+        let doc = Json::obj()
+            .with("schema", ENVELOPE_SCHEMA)
+            .with("kind", kind)
+            .with("version", version as usize)
+            .with("fingerprint", fp.hex())
+            .with("payload", payload);
+        let tmp = parent.join(format!("{}.tmp{}", fp.hex(), std::process::id()));
+        std::fs::write(&tmp, doc.compact())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Whether an entry exists on disk (no validation — `ls`/tests only).
+    pub fn contains(&self, kind: &str, fp: Fingerprint) -> bool {
+        self.entry_path(kind, fp).is_file()
+    }
+
+    /// All entries on disk, sorted by (kind, fingerprint). I/O errors on
+    /// individual entries are skipped, not propagated.
+    pub fn entries(&self) -> Vec<EntryInfo> {
+        let mut out = Vec::new();
+        let Ok(kinds) = std::fs::read_dir(&self.root) else {
+            return out;
+        };
+        for kd in kinds.filter_map(|e| e.ok()) {
+            if !kd.path().is_dir() {
+                continue;
+            }
+            let kind = kd.file_name().to_string_lossy().into_owned();
+            let Ok(files) = std::fs::read_dir(kd.path()) else {
+                continue;
+            };
+            for f in files.filter_map(|e| e.ok()) {
+                let path = f.path();
+                let Some(stem) = path.file_stem().map(|s| s.to_string_lossy().into_owned())
+                else {
+                    continue;
+                };
+                if path.extension().map(|e| e != "json").unwrap_or(true) {
+                    continue;
+                }
+                let bytes = f.metadata().map(|m| m.len()).unwrap_or(0);
+                out.push(EntryInfo { kind: kind.clone(), fingerprint: stem, bytes, path });
+            }
+        }
+        out.sort_by(|a, b| (&a.kind, &a.fingerprint).cmp(&(&b.kind, &b.fingerprint)));
+        out
+    }
+
+    /// Entry/byte accounting, total and per kind.
+    pub fn stat(&self) -> StoreStat {
+        let entries = self.entries();
+        let mut stat = StoreStat {
+            entries: entries.len(),
+            total_bytes: entries.iter().map(|e| e.bytes).sum(),
+            by_kind: Vec::new(),
+        };
+        for e in &entries {
+            match stat.by_kind.iter_mut().find(|(k, _, _)| k == &e.kind) {
+                Some((_, n, b)) => {
+                    *n += 1;
+                    *b += e.bytes;
+                }
+                None => stat.by_kind.push((e.kind.clone(), 1, e.bytes)),
+            }
+        }
+        stat
+    }
+
+    /// Delete every entry — plus any orphaned temp file a crashed `put`
+    /// left behind — and return (entries removed, bytes reclaimed; temp
+    /// bytes count toward the total). Emptied kind directories are removed
+    /// too; the root is left in place.
+    pub fn gc(&self) -> Result<(usize, u64)> {
+        let mut n = 0usize;
+        let mut bytes = 0u64;
+        if let Ok(kinds) = std::fs::read_dir(&self.root) {
+            for kd in kinds.filter_map(|e| e.ok()) {
+                if !kd.path().is_dir() {
+                    continue;
+                }
+                let Ok(files) = std::fs::read_dir(kd.path()) else {
+                    continue;
+                };
+                for f in files.filter_map(|e| e.ok()) {
+                    let path = f.path();
+                    if !path.is_file() {
+                        continue;
+                    }
+                    let is_entry = path.extension().map(|e| e == "json").unwrap_or(false);
+                    let size = f.metadata().map(|m| m.len()).unwrap_or(0);
+                    if std::fs::remove_file(&path).is_ok() {
+                        bytes += size;
+                        if is_entry {
+                            n += 1;
+                        }
+                    }
+                }
+                let _ = std::fs::remove_dir(kd.path()); // fails if non-empty; fine
+            }
+        }
+        Ok((n, bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> Store {
+        let root = std::env::temp_dir().join(format!("fames-store-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        Store::open(root)
+    }
+
+    #[test]
+    fn fingerprint_hex_roundtrip() {
+        let fp = Fingerprint(0x0123_4567_89ab_cdef);
+        assert_eq!(fp.hex(), "0123456789abcdef");
+        assert_eq!(Fingerprint::from_hex(&fp.hex()), Some(fp));
+        assert_eq!(Fingerprint::from_hex("xyz"), None);
+        assert_eq!(Fingerprint::from_hex("123"), None);
+    }
+
+    #[test]
+    fn builder_is_order_and_key_sensitive() {
+        let base = FingerprintBuilder::new("s").u64("a", 1).u64("b", 2).finish();
+        assert_eq!(base, FingerprintBuilder::new("s").u64("a", 1).u64("b", 2).finish());
+        assert_ne!(base, FingerprintBuilder::new("s").u64("b", 2).u64("a", 1).finish());
+        assert_ne!(base, FingerprintBuilder::new("s").u64("a", 2).u64("b", 2).finish());
+        assert_ne!(base, FingerprintBuilder::new("t").u64("a", 1).u64("b", 2).finish());
+        let f = FingerprintBuilder::new("s").f64("x", 0.0).finish();
+        assert_ne!(f, FingerprintBuilder::new("s").f64("x", -0.0).finish());
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_miss_modes() {
+        let store = tmp_store("roundtrip");
+        let fp = Fingerprint(42);
+        let payload = Json::obj().with("x", 1.5).with("s", "hello");
+        assert!(store.get("table", 1, fp).is_none(), "empty store misses");
+        store.put("table", 1, fp, payload.clone()).unwrap();
+        assert_eq!(store.get("table", 1, fp), Some(payload));
+        // wrong version, wrong kind, wrong fingerprint → miss
+        assert!(store.get("table", 2, fp).is_none());
+        assert!(store.get("library", 1, fp).is_none());
+        assert!(store.get("table", 1, Fingerprint(43)).is_none());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn corrupt_entries_are_misses_not_errors() {
+        let store = tmp_store("corrupt");
+        let fp = Fingerprint(7);
+        store.put("k", 1, fp, Json::obj().with("v", 1usize)).unwrap();
+        // truncate the file to garbage
+        let path = store.root().join("k").join(format!("{}.json", fp.hex()));
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(store.get("k", 1, fp).is_none());
+        // valid JSON but a foreign document → miss
+        std::fs::write(&path, "{\"hello\":1}").unwrap();
+        assert!(store.get("k", 1, fp).is_none());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn stat_and_gc_account_entries_and_bytes() {
+        let store = tmp_store("gc");
+        store.put("a", 1, Fingerprint(1), Json::obj().with("v", 1usize)).unwrap();
+        store.put("a", 1, Fingerprint(2), Json::obj().with("v", 2usize)).unwrap();
+        store.put("b", 1, Fingerprint(3), Json::obj().with("v", 3usize)).unwrap();
+        let entries = store.entries();
+        assert_eq!(entries.len(), 3);
+        assert!(entries.iter().all(|e| e.bytes > 0));
+        let stat = store.stat();
+        assert_eq!(stat.entries, 3);
+        assert_eq!(stat.by_kind.len(), 2);
+        assert_eq!(stat.total_bytes, entries.iter().map(|e| e.bytes).sum::<u64>());
+        let (n, bytes) = store.gc().unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(bytes, stat.total_bytes);
+        assert_eq!(store.stat().entries, 0);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn gc_sweeps_orphaned_temp_files() {
+        let store = tmp_store("gc-tmp");
+        store.put("a", 1, Fingerprint(1), Json::obj().with("v", 1usize)).unwrap();
+        // simulate a crashed put(): temp file never renamed into place
+        let orphan = store.root().join("a").join("0000000000000002.tmp999");
+        std::fs::write(&orphan, "half-written").unwrap();
+        assert_eq!(store.stat().entries, 1, "temps are not entries");
+        let (n, bytes) = store.gc().unwrap();
+        assert_eq!(n, 1, "one real entry removed");
+        assert!(bytes > "half-written".len() as u64, "temp bytes reclaimed too");
+        assert!(!orphan.exists(), "orphaned temp must be swept");
+        assert!(!store.root().join("a").exists(), "emptied kind dir removed");
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

@@ -135,6 +135,15 @@ impl TensorStore {
         Ok(Self { entries })
     }
 
+    /// FNV-1a hash of the serialized store. Entry order is deterministic
+    /// (BTreeMap), so equal stores hash equal — this is the parameter
+    /// input to the pipeline's stage fingerprints (`pipeline::stages`).
+    pub fn content_hash(&self) -> u64 {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf).expect("serializing to memory cannot fail");
+        crate::util::hash::hash_bytes(&buf)
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(parent) = path.parent() {
@@ -217,6 +226,17 @@ mod tests {
                 assert!(TensorStore::read_from(&buf[..buf.len() - 3]).is_err());
             }
         }
+    }
+
+    #[test]
+    fn content_hash_tracks_content() {
+        let mut a = TensorStore::new();
+        a.insert("w", Tensor::from_slice(&[1.0, 2.0]));
+        let mut b = TensorStore::new();
+        b.insert("w", Tensor::from_slice(&[1.0, 2.0]));
+        assert_eq!(a.content_hash(), b.content_hash());
+        b.insert("w", Tensor::from_slice(&[1.0, 2.5]));
+        assert_ne!(a.content_hash(), b.content_hash());
     }
 
     #[test]

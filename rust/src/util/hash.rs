@@ -1,0 +1,130 @@
+//! FNV-1a 64-bit hashing — the fingerprint substrate of the artifact store.
+//!
+//! The offline crate set has no `xxhash`/`sha2`, so stage fingerprints and
+//! content addresses use FNV-1a: tiny, dependency-free, and deterministic
+//! across platforms (explicit little-endian encoding of every scalar).
+//! FNV is not cryptographic — the store only needs collision resistance
+//! against *accidental* config/content drift, the same bar the compile
+//! caches of build systems set.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64-bit hasher.
+///
+/// ```
+/// use fames::util::hash::Fnv64;
+/// let mut h = Fnv64::new();
+/// h.write(b"fames");
+/// let a = h.finish();
+/// let mut h2 = Fnv64::new();
+/// h2.write(b"fames");
+/// assert_eq!(a, h2.finish());
+/// assert_ne!(a, Fnv64::new().finish());
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(FNV_OFFSET)
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Absorb an f64 by its exact bit pattern (no rounding, `-0.0 ≠ 0.0`).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-prefixed string absorb, so `("ab","c")` ≠ `("a","bc")`.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot hash of a byte slice.
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// One-shot hash of a file's contents.
+pub fn hash_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<u64> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("hashing {}: {e}", path.display()))?;
+    Ok(hash_bytes(&bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(hash_bytes(b""), 0xcbf29ce484222325);
+        assert_eq!(hash_bytes(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(hash_bytes(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn length_prefix_disambiguates_strings() {
+        let mut a = Fnv64::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn f64_is_hashed_by_bits() {
+        let mut a = Fnv64::new();
+        a.write_f64(0.0);
+        let mut b = Fnv64::new();
+        b.write_f64(-0.0);
+        assert_ne!(a.finish(), b.finish(), "sign bit must matter");
+    }
+
+    #[test]
+    fn file_hash_matches_bytes_hash() {
+        let dir = std::env::temp_dir().join("fames_hash_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        std::fs::write(&path, b"foobar").unwrap();
+        assert_eq!(hash_file(&path).unwrap(), hash_bytes(b"foobar"));
+        assert!(hash_file(dir.join("missing")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

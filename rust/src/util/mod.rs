@@ -1,6 +1,7 @@
-//! Small shared utilities: timers, stats, csv, quantiles, and the
-//! scoped-parallelism primitives ([`par`]).
+//! Small shared utilities: timers, stats, csv, quantiles, FNV-1a hashing
+//! ([`hash`]) and the scoped-parallelism primitives ([`par`]).
 
+pub mod hash;
 pub mod par;
 
 use std::time::Instant;

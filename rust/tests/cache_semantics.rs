@@ -1,0 +1,245 @@
+//! Cache-semantics suite for the stage graph + artifact store.
+//!
+//! The two contracts under test:
+//!
+//! 1. **Warm == cold, bit-for-bit.** A fully cached pipeline run must
+//!    produce outputs identical to the cold run that populated the store —
+//!    at `jobs = 1` and at auto-detected worker counts.
+//! 2. **Exact invalidation.** Changing one knob re-runs precisely the
+//!    stages downstream of it and no others: `r_energy` touches
+//!    select+calibrate, the calibration config touches calibrate alone,
+//!    `est_batches` re-estimates, `seed`/bitwidths rebuild the library and
+//!    everything after it.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fames::calibrate::CalibConfig;
+use fames::pipeline::{self, FamesConfig, PipelineReport};
+use fames::runtime::backend::native::{write_synthetic_artifacts, NativeBackend, SyntheticSpec};
+use fames::runtime::Runtime;
+
+fn setup(tag: &str) -> (PathBuf, FamesConfig) {
+    let root = std::env::temp_dir().join(format!("fames-cachesem-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    let mut cfg = FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        est_batches: 1,
+        eval_batches: 1,
+        train_steps: 150,
+        train_lr: 0.02,
+        jobs: 1,
+        ..FamesConfig::default()
+    };
+    cfg.calib = CalibConfig { epochs: 1, samples: 32, ..CalibConfig::default() };
+    (root, cfg)
+}
+
+fn rt(jobs: usize) -> Arc<Runtime> {
+    Arc::new(Runtime::with_backend(Box::new(NativeBackend::new(0).with_jobs(jobs))))
+}
+
+fn stage_hit(rep: &PipelineReport, name: &str) -> Option<bool> {
+    rep.stage(name).unwrap_or_else(|| panic!("no stage '{name}'")).hit
+}
+
+/// Every substantive (non-timing) report field must match bit-for-bit.
+fn assert_reports_identical(a: &PipelineReport, b: &PipelineReport, what: &str) {
+    assert_eq!(a.selection, b.selection, "{what}: selection");
+    assert_eq!(a.perturbations.len(), b.perturbations.len(), "{what}");
+    for (k, (x, y)) in a.perturbations.iter().zip(&b.perturbations).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: Ω[{k}]");
+    }
+    for (x, y, field) in [
+        (a.quant_eval.loss, b.quant_eval.loss, "quant loss"),
+        (a.quant_eval.accuracy, b.quant_eval.accuracy, "quant acc"),
+        (a.approx_eval_before.loss, b.approx_eval_before.loss, "before loss"),
+        (a.approx_eval_before.accuracy, b.approx_eval_before.accuracy, "before acc"),
+        (a.approx_eval_after.loss, b.approx_eval_after.loss, "after loss"),
+        (a.approx_eval_after.accuracy, b.approx_eval_after.accuracy, "after acc"),
+        (a.energy_ratio_exact, b.energy_ratio_exact, "energy vs exact"),
+        (a.energy_ratio_8bit, b.energy_ratio_8bit, "energy vs 8bit"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {field}");
+    }
+    assert_eq!(a.ilp_nodes, b.ilp_nodes, "{what}: ilp nodes");
+}
+
+const CACHED_STAGES: [&str; 5] = ["library", "train", "estimate", "select", "calibrate"];
+
+#[test]
+fn warm_run_is_bit_identical_and_hits_every_stage() {
+    let (root, cfg) = setup("warm");
+
+    let cold = pipeline::run_cached(rt(1), &cfg).unwrap();
+    assert_eq!(cold.stages.len(), 5, "library, train, estimate, select, calibrate");
+    for s in &CACHED_STAGES {
+        assert_eq!(stage_hit(&cold, s), Some(false), "cold run must miss '{s}'");
+    }
+
+    let warm = pipeline::run_cached(rt(1), &cfg).unwrap();
+    for s in &CACHED_STAGES {
+        assert_eq!(stage_hit(&warm, s), Some(true), "warm run must hit '{s}'");
+    }
+    assert_reports_identical(&cold, &warm, "warm jobs=1");
+    // fingerprints are stable across runs
+    for (c, w) in cold.stages.iter().zip(&warm.stages) {
+        assert_eq!(c.stage, w.stage);
+        assert_eq!(c.fingerprint, w.fingerprint, "stage '{}' fingerprint", c.stage);
+    }
+
+    // warm at an auto-detected worker count: still all hits, still
+    // bit-identical (the determinism contract extends to cache loads)
+    let mut cfg_auto = cfg.clone();
+    cfg_auto.jobs = 0;
+    let warm_auto = pipeline::run_cached(rt(0), &cfg_auto).unwrap();
+    for s in &CACHED_STAGES {
+        assert_eq!(stage_hit(&warm_auto, s), Some(true), "auto-jobs warm must hit '{s}'");
+    }
+    assert_reports_identical(&cold, &warm_auto, "warm jobs=auto");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn no_cache_disables_the_store_entirely() {
+    let (root, mut cfg) = setup("nocache");
+    cfg.no_cache = true;
+    let rep = pipeline::run_cached(rt(1), &cfg).unwrap();
+    for s in &["library", "estimate", "select", "calibrate"] {
+        assert_eq!(stage_hit(&rep, s), None, "'{s}' must report cache off");
+    }
+    assert!(
+        !root.join("cache").exists(),
+        "no_cache must not create a cache directory"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn knob_changes_invalidate_exactly_the_downstream_stages() {
+    let (root, cfg) = setup("knobs");
+    let cold = pipeline::run_cached(rt(1), &cfg).unwrap();
+
+    // r_energy feeds the select stage: estimate stays warm
+    let mut c = cfg.clone();
+    c.r_energy = 0.6;
+    let rep = pipeline::run_cached(rt(1), &c).unwrap();
+    assert_eq!(stage_hit(&rep, "library"), Some(true), "r_energy must not touch library");
+    assert_eq!(stage_hit(&rep, "train"), Some(true));
+    assert_eq!(stage_hit(&rep, "estimate"), Some(true), "r_energy must not touch estimate");
+    assert_eq!(stage_hit(&rep, "select"), Some(false));
+    assert_eq!(stage_hit(&rep, "calibrate"), Some(false), "calibrate chains off select");
+
+    // calibration config feeds calibrate alone
+    let mut c = cfg.clone();
+    c.calib.lr = 0.05;
+    let rep = pipeline::run_cached(rt(1), &c).unwrap();
+    assert_eq!(stage_hit(&rep, "library"), Some(true));
+    assert_eq!(stage_hit(&rep, "estimate"), Some(true));
+    assert_eq!(stage_hit(&rep, "select"), Some(true), "calib config must not touch select");
+    assert_eq!(stage_hit(&rep, "calibrate"), Some(false));
+
+    // est_batches feeds estimate (and everything after)
+    let mut c = cfg.clone();
+    c.est_batches = 2;
+    let rep = pipeline::run_cached(rt(1), &c).unwrap();
+    assert_eq!(stage_hit(&rep, "library"), Some(true), "est_batches must not touch library");
+    assert_eq!(stage_hit(&rep, "estimate"), Some(false));
+    assert_eq!(stage_hit(&rep, "select"), Some(false));
+    assert_eq!(stage_hit(&rep, "calibrate"), Some(false));
+
+    // seed feeds the library generation and the estimation batches
+    let mut c = cfg.clone();
+    c.seed = 9;
+    let rep = pipeline::run_cached(rt(1), &c).unwrap();
+    assert_eq!(stage_hit(&rep, "library"), Some(false), "seed regenerates the library");
+    assert_eq!(stage_hit(&rep, "estimate"), Some(false));
+    assert_eq!(stage_hit(&rep, "select"), Some(false));
+    assert_eq!(stage_hit(&rep, "calibrate"), Some(false));
+
+    // the original configuration is untouched by all of the above
+    let warm = pipeline::run_cached(rt(1), &cfg).unwrap();
+    for s in &CACHED_STAGES {
+        assert_eq!(stage_hit(&warm, s), Some(true), "original cfg entry for '{s}' must survive");
+    }
+    assert_reports_identical(&cold, &warm, "original cfg after knob sweeps");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn bitwidth_changes_rebuild_the_library_chain() {
+    let (root, cfg) = setup("bits");
+    let _cold = pipeline::run_cached(rt(1), &cfg).unwrap();
+
+    // a second artifact set for the same model at uniform 3-bit layers
+    let spec3 = SyntheticSpec {
+        model: "resnet8".to_string(),
+        cfg: "w3a3".to_string(),
+        layer_bits: vec![(3, 3); 4],
+        num_classes: 10,
+        image_shape: [3, 8, 8],
+        train_batch: 16,
+        eval_batch: 64,
+    };
+    write_synthetic_artifacts(&root, &spec3).unwrap();
+    let mut c3 = cfg.clone();
+    c3.cfg = "w3a3".to_string();
+    let rep = pipeline::run_cached(rt(1), &c3).unwrap();
+    assert_eq!(
+        stage_hit(&rep, "library"),
+        Some(false),
+        "different bitwidth pairs need a different library"
+    );
+    assert_eq!(stage_hit(&rep, "train"), Some(true), "params are shared per model");
+    assert_eq!(stage_hit(&rep, "estimate"), Some(false));
+    assert_eq!(stage_hit(&rep, "select"), Some(false));
+    assert_eq!(stage_hit(&rep, "calibrate"), Some(false));
+
+    // the w4a4 entries are still valid
+    let warm = pipeline::run_cached(rt(1), &cfg).unwrap();
+    for s in &CACHED_STAGES {
+        assert_eq!(stage_hit(&warm, s), Some(true), "w4a4 '{s}' must still hit");
+    }
+    // and the new w3a3 entries are hits now too
+    let warm3 = pipeline::run_cached(rt(1), &c3).unwrap();
+    for s in &["library", "estimate", "select", "calibrate"] {
+        assert_eq!(stage_hit(&warm3, s), Some(true), "w3a3 '{s}' must hit on rerun");
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn corrupt_entries_fall_back_to_recompute_with_identical_results() {
+    let (root, cfg) = setup("corrupt");
+    let cold = pipeline::run_cached(rt(1), &cfg).unwrap();
+
+    // vandalize the Ω-table entry
+    let table_dir = root.join("cache").join("perturb_table");
+    let entries: Vec<_> = std::fs::read_dir(&table_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .collect();
+    assert_eq!(entries.len(), 1, "one Ω table cached");
+    std::fs::write(entries[0].path(), "garbage, not json").unwrap();
+
+    let rep = pipeline::run_cached(rt(1), &cfg).unwrap();
+    assert_eq!(stage_hit(&rep, "library"), Some(true));
+    assert_eq!(
+        stage_hit(&rep, "estimate"),
+        Some(false),
+        "a corrupt entry must degrade to recompute"
+    );
+    assert_reports_identical(&cold, &rep, "after corruption");
+
+    // the recompute repaired the entry
+    let warm = pipeline::run_cached(rt(1), &cfg).unwrap();
+    assert_eq!(stage_hit(&warm, "estimate"), Some(true));
+    assert_reports_identical(&cold, &warm, "after repair");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

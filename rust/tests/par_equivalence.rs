@@ -40,8 +40,7 @@ fn synth_root(tag: &str) -> PathBuf {
 fn test_library() -> Library {
     let mut lib = generate_library(&[(4, 4), (3, 3), (2, 2)], 0);
     let n8 = build_multiplier(&MulConfig::exact(8, 8));
-    lib.items
-        .push(AppMul::from_netlist("mul8x8_exact", "exact", 8, 8, &n8, 0));
+    lib.push(AppMul::from_netlist("mul8x8_exact", "exact", 8, 8, &n8, 0));
     lib
 }
 
