@@ -24,6 +24,7 @@ pub use metrics::{compute as compute_metrics, exact_lut, ErrorMetrics};
 use anyhow::{ensure, Result};
 
 use crate::circuit::{build_lut, Netlist};
+use crate::kernel::lut::{ErrStats, LutView};
 use crate::tensor::Tensor;
 
 /// One approximate multiplier: LUT + hardware costs + error statistics.
@@ -48,6 +49,10 @@ pub struct AppMul {
     /// Precomputed flattened error matrix (E = LUT − exact), f32 — avoids
     /// rebuilding the 2^(a+w)-element vector in the estimation hot loop.
     err: Vec<f32>,
+    /// Exact integer-domain error statistics (Σe, Σe², max|e|), computed
+    /// once per design via `kernel::lut::err_stats` — the cached quant
+    /// params of the fused LUT kernels.
+    err_stats: ErrStats,
 }
 
 impl AppMul {
@@ -64,16 +69,7 @@ impl AppMul {
         let metrics = metrics::compute(&lut, a_bits, w_bits);
         let energy_fj = netlist.switching_energy_words_fj(32, seed);
         let delay_ps = netlist.critical_path_ps();
-        let qw = 1i64 << w_bits;
-        let err: Vec<f32> = lut
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
-                let a = i as i64 / qw;
-                let w = i as i64 % qw;
-                (v - a * w) as f32
-            })
-            .collect();
+        let (err, err_stats) = err_from_lut(&lut, a_bits, w_bits);
         AppMul {
             name: name.into(),
             family: family.into(),
@@ -87,6 +83,7 @@ impl AppMul {
             gates: netlist.live_gate_count(),
             metrics,
             err,
+            err_stats,
         }
     }
 
@@ -119,16 +116,7 @@ impl AppMul {
             1usize << (a_bits + w_bits)
         );
         let metrics = metrics::compute(&lut, a_bits, w_bits);
-        let qw = 1i64 << w_bits;
-        let err: Vec<f32> = lut
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
-                let a = i as i64 / qw;
-                let w = i as i64 % qw;
-                (v - a * w) as f32
-            })
-            .collect();
+        let (err, err_stats) = err_from_lut(&lut, a_bits, w_bits);
         Ok(AppMul {
             name,
             family,
@@ -142,6 +130,7 @@ impl AppMul {
             gates,
             metrics,
             err,
+            err_stats,
         })
     }
 
@@ -165,6 +154,52 @@ impl AppMul {
     pub fn e_l2(&self) -> f64 {
         self.metrics.e_l2
     }
+
+    /// Borrowed integer-domain view of the LUT for the fused kernels
+    /// ([`crate::kernel::lut`]).
+    pub fn lut_view(&self) -> LutView<'_> {
+        LutView { lut: &self.lut, a_bits: self.a_bits, w_bits: self.w_bits }
+    }
+
+    /// Packed LUT index of operand codes `(a, w)`: `(a << w_bits) | w`.
+    pub fn packed_index(&self, a: u32, w: u32) -> usize {
+        self.lut_view().packed(a, w)
+    }
+
+    /// Cached exact integer error statistics (Σe, Σe², max|e|).
+    pub fn err_stats(&self) -> ErrStats {
+        self.err_stats
+    }
+
+    /// RMS of the error matrix, from the cached integer Σe² — O(1).
+    pub fn err_rms(&self) -> f64 {
+        (self.err_stats.sq_sum as f64 / self.err.len().max(1) as f64).sqrt()
+    }
+
+    /// `Σ v[i] · E[i]` through the fused integer-domain kernel: the error
+    /// operand is generated from the packed LUT index inside the loop —
+    /// bit-identical to a float dot over [`AppMul::error_slice`], without
+    /// streaming the materialized f32 tensor.
+    pub fn err_dot(&self, v: &[f32]) -> Result<f64> {
+        crate::kernel::lut::err_dot(self.lut_view(), v)
+    }
+}
+
+/// Flattened f32 error matrix + exact integer stats of a LUT (shared by
+/// both constructors so the cached stats can never drift from the tensor).
+fn err_from_lut(lut: &[i64], a_bits: u32, w_bits: u32) -> (Vec<f32>, ErrStats) {
+    let qw = 1i64 << w_bits;
+    let err: Vec<f32> = lut
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let a = i as i64 / qw;
+            let w = i as i64 % qw;
+            (v - a * w) as f32
+        })
+        .collect();
+    let stats = crate::kernel::lut::err_stats(LutView { lut, a_bits, w_bits });
+    (err, stats)
 }
 
 #[cfg(test)]
@@ -194,8 +229,38 @@ mod tests {
         for a in 0..8i64 {
             for w in 0..8i64 {
                 let idx = (a * 8 + w) as usize;
+                assert_eq!(idx, am.packed_index(a as u32, w as u32));
                 assert_eq!(e.data()[idx] as i64, am.lut[idx] - a * w);
+                assert_eq!(am.lut_view().err_at(idx), am.lut[idx] - a * w);
             }
         }
+    }
+
+    #[test]
+    fn cached_err_stats_match_the_error_tensor() {
+        let cfg = MulConfig {
+            trunc_cols: 2,
+            ..MulConfig::exact(4, 4)
+        };
+        let n = build_multiplier(&cfg);
+        let am = AppMul::from_netlist("t2", "trunc", 4, 4, &n, 0);
+        let e = am.error_tensor();
+        let sq: i64 = e.data().iter().map(|&v| (v as i64) * (v as i64)).sum();
+        let sum: i64 = e.data().iter().map(|&v| v as i64).sum();
+        let ma: i64 = e.data().iter().map(|&v| (v as i64).abs()).max().unwrap();
+        let stats = am.err_stats();
+        assert_eq!(stats.sq_sum, sq);
+        assert_eq!(stats.sum, sum);
+        assert_eq!(stats.max_abs, ma);
+        let want_rms = (sq as f64 / e.len() as f64).sqrt();
+        assert_eq!(am.err_rms().to_bits(), want_rms.to_bits());
+        // err_dot through the integer kernel == float dot over the slice
+        let v: Vec<f32> = (0..e.len()).map(|i| (i as f32 * 0.01).sin()).collect();
+        let want: f64 = v
+            .iter()
+            .zip(am.error_slice())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert_eq!(am.err_dot(&v).unwrap().to_bits(), want.to_bits());
     }
 }

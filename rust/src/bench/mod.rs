@@ -26,6 +26,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::appmul::{generate_for_bits_jobs, generate_library_jobs};
 use crate::calibrate::CalibConfig;
 use crate::json::Json;
+use crate::kernel::{counters, gemm, lut, Scratch};
 use crate::pipeline::{self, FamesConfig, Session};
 use crate::runtime::backend::native::{write_synthetic_artifacts, NativeBackend, SyntheticSpec};
 use crate::runtime::Runtime;
@@ -34,7 +35,9 @@ use crate::sensitivity::{estimate_table, Estimator, HessianMode};
 use crate::util::par;
 
 /// Schema tag of the JSON snapshot (bump on shape changes; the `cache`
-/// section added by the artifact-store PR is additive, so v1 stands).
+/// section added by the artifact-store PR and the `kernels` /
+/// `kernel_counters` sections added by the kernel-layer PR are additive,
+/// so v1 stands).
 pub const SCHEMA: &str = "fames-bench-v1";
 
 /// A stage counts as regressed in `fames bench --compare` when it got more
@@ -312,6 +315,149 @@ pub fn run_cache_bench(cfg: &BenchConfig) -> Result<CacheBench> {
     Ok(CacheBench { cold_secs, warm_secs, stages })
 }
 
+// ---- per-kernel micro-bench (the kernel layer's payoff) ----
+
+/// One fused kernel's wall-clock vs its reference formulation.
+#[derive(Clone, Debug)]
+pub struct KernelBench {
+    pub name: &'static str,
+    /// Reference (naive / float-path) wall-clock.
+    pub reference_secs: f64,
+    /// Fused/blocked kernel wall-clock.
+    pub kernel_secs: f64,
+    /// Kernel-counter increments observed while timing the fused side —
+    /// proof the fused path actually ran (asserted by the CI bench lane).
+    pub calls: u64,
+}
+
+impl KernelBench {
+    /// Reference / kernel wall-clock ratio (> 1 means the kernel won).
+    pub fn speedup(&self) -> f64 {
+        if self.kernel_secs > 0.0 {
+            self.reference_secs / self.kernel_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Time each kernel of [`crate::kernel`] against its reference
+/// formulation: blocked GEMM vs the naive triple loop, the fused
+/// integer-domain LUT-GEMM vs the float dequantize-multiply-inject path it
+/// replaces, and the fused penalty / Σv² reductions vs their two-pass f64
+/// forms. Self-contained synthetic workloads (`--quick` shrinks them).
+pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
+    let (bsz, d, nc, m, kdim, n, len, reps) = if cfg.quick {
+        (128usize, 192usize, 10usize, 32usize, 128usize, 32usize, 1usize << 12, 3usize)
+    } else {
+        (512, 768, 10, 64, 256, 64, 1 << 14, 5)
+    };
+    let mut rng = crate::rng::Pcg::seeded(7);
+    let mut normals = |count: usize| -> Vec<f32> {
+        (0..count).map(|_| rng.normal() as f32).collect()
+    };
+    let mut out = Vec::new();
+
+    // 1. blocked GEMM vs the naive triple loop
+    let w = normals(nc * d);
+    let b = normals(nc);
+    let x = normals(bsz * d);
+    let mut z = vec![0f64; bsz * nc];
+    let reference_secs = time_best_of(reps, || {
+        gemm::gemm_bias_naive(&w, &b, &x, d, nc, &mut z);
+        std::hint::black_box(&z);
+        Ok(())
+    })?;
+    let c0 = counters::snapshot();
+    let kernel_secs = time_best_of(reps, || {
+        gemm::gemm_bias(&w, &b, &x, d, nc, &mut z);
+        std::hint::black_box(&z);
+        Ok(())
+    })?;
+    let calls = counters::snapshot().since(&c0).gemm_blocked;
+    out.push(KernelBench { name: "gemm_bias_blocked", reference_secs, kernel_secs, calls });
+
+    // 2. fused integer LUT-GEMM vs the float dequantize+error-inject path
+    let (a_bits, w_bits) = (4u32, 4u32);
+    let lutvec: Vec<i64> = {
+        let mut v = Vec::with_capacity(1usize << (a_bits + w_bits));
+        for a in 0..(1i64 << a_bits) {
+            for wv in 0..(1i64 << w_bits) {
+                v.push((a * wv) & !1); // low-bit truncated product
+            }
+        }
+        v
+    };
+    let view = lut::LutView { lut: &lutvec, a_bits, w_bits };
+    let err_f32: Vec<f32> = (0..lutvec.len()).map(|i| view.err_at(i) as f32).collect();
+    let xq = lut::QuantGrid::new(0.07, 0.0, a_bits);
+    let wq = lut::QuantGrid::new(0.05, -0.4, w_bits);
+    let xg = normals(m * kdim);
+    let wg = normals(kdim * n);
+    let scratch = Scratch::new();
+    let mut prod = vec![0f32; m * n];
+    let reference_secs = time_best_of(reps, || {
+        // the float path: per-element quantize, dequantized multiply, f32
+        // error-tensor injection — what `lut_gemm` collapses into integer ops
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for k in 0..kdim {
+                    let a = xq.code(xg[i * kdim + k]);
+                    let wv = wq.code(wg[k * n + j]);
+                    let exact = xq.decode(a) as f64 * wq.decode(wv) as f64;
+                    acc += exact + err_f32[((a as usize) << w_bits) | wv as usize] as f64;
+                }
+                prod[i * n + j] = acc as f32;
+            }
+        }
+        std::hint::black_box(&prod);
+        Ok(())
+    })?;
+    let c0 = counters::snapshot();
+    let kernel_secs = time_best_of(reps, || {
+        lut::lut_gemm(&xg, &wg, m, kdim, n, xq, wq, view, &scratch, &mut prod)?;
+        std::hint::black_box(&prod);
+        Ok(())
+    })?;
+    let calls = counters::snapshot().since(&c0).lut_gemm;
+    out.push(KernelBench { name: "lut_gemm_fused_int", reference_secs, kernel_secs, calls });
+
+    // 3. fused analytic penalty vs two separate dot passes
+    let g = normals(len);
+    let h: Vec<f32> = normals(len).iter().map(|v| v.abs()).collect();
+    let e: Vec<f32> = (0..len).map(|i| ((i % 31) as f32) - 15.0).collect();
+    let reference_secs = time_best_of(reps, || {
+        let first: f64 = g.iter().zip(&e).map(|(&gv, &ev)| gv as f64 * ev as f64).sum();
+        let quad: f64 =
+            h.iter().zip(&e).map(|(&hv, &ev)| hv as f64 * ev as f64 * ev as f64).sum();
+        std::hint::black_box(first + 0.5 * quad);
+        Ok(())
+    })?;
+    let c0 = counters::snapshot();
+    let kernel_secs = time_best_of(reps, || {
+        std::hint::black_box(lut::penalty(&g, &h, &e));
+        Ok(())
+    })?;
+    let calls = counters::snapshot().since(&c0).lut_fused;
+    out.push(KernelBench { name: "penalty_fused", reference_secs, kernel_secs, calls });
+
+    // 4. integer-domain Σv² vs the f64 chain (error tensors are integral)
+    let reference_secs = time_best_of(reps, || {
+        std::hint::black_box(e.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>());
+        Ok(())
+    })?;
+    let c0 = counters::snapshot();
+    let kernel_secs = time_best_of(reps, || {
+        std::hint::black_box(lut::sq_sum(&e));
+        Ok(())
+    })?;
+    let calls = counters::snapshot().since(&c0).lut_fused;
+    out.push(KernelBench { name: "sq_sum_int", reference_secs, kernel_secs, calls });
+
+    Ok(out)
+}
+
 // ---- snapshot JSON + cross-PR comparison ----
 
 /// The machine-readable snapshot (`fames bench --json`).
@@ -362,6 +508,43 @@ pub fn snapshot_json_with_cache(
                 .with("stages", carr),
         );
     }
+    doc
+}
+
+/// [`snapshot_json_with_cache`] plus the per-kernel timing section and a
+/// snapshot of the process-wide kernel invocation counters (non-zero
+/// counters prove the fused paths were exercised by the bench pipeline —
+/// the CI bench lane asserts exactly that).
+pub fn snapshot_json_full(
+    stages: &[StageResult],
+    cache: Option<&CacheBench>,
+    kernels: Option<&[KernelBench]>,
+    cfg: &BenchConfig,
+) -> Json {
+    let mut doc = snapshot_json_with_cache(stages, cache, cfg);
+    if let Some(ks) = kernels {
+        let mut arr = Json::arr();
+        for k in ks {
+            arr.push(
+                Json::obj()
+                    .with("name", k.name)
+                    .with("reference_secs", k.reference_secs)
+                    .with("kernel_secs", k.kernel_secs)
+                    .with("speedup", k.speedup())
+                    .with("calls", k.calls as usize),
+            );
+        }
+        doc.set("kernels", arr);
+    }
+    let c = counters::snapshot();
+    doc.set(
+        "kernel_counters",
+        Json::obj()
+            .with("gemm_blocked", c.gemm_blocked as usize)
+            .with("softmax_fused", c.softmax_fused as usize)
+            .with("lut_fused", c.lut_fused as usize)
+            .with("lut_gemm", c.lut_gemm as usize),
+    );
     doc
 }
 
@@ -488,6 +671,48 @@ mod tests {
         assert_eq!(carr[0].get("warm").unwrap().as_str().unwrap(), "hit");
         // the plain snapshot has no cache section
         assert!(snapshot_json(&stages, &cfg).opt("cache").is_none());
+    }
+
+    #[test]
+    fn full_snapshot_adds_kernels_and_counters_sections() {
+        let stages = vec![StageResult {
+            name: "library_generation",
+            serial_secs: 1.0,
+            parallel_secs: 0.5,
+        }];
+        let kernels = vec![KernelBench {
+            name: "gemm_bias_blocked",
+            reference_secs: 1.0,
+            kernel_secs: 0.25,
+            calls: 8,
+        }];
+        let cfg = BenchConfig { jobs: 1, quick: true };
+        let j = snapshot_json_full(&stages, None, Some(&kernels), &cfg);
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        let karr = j.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(karr.len(), 1);
+        assert_eq!(karr[0].get("speedup").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(karr[0].get("calls").unwrap().as_usize().unwrap(), 8);
+        let kc = j.get("kernel_counters").unwrap();
+        for key in ["gemm_blocked", "softmax_fused", "lut_fused", "lut_gemm"] {
+            assert!(kc.opt(key).is_some(), "missing counter {key}");
+        }
+        // the plain snapshots stay shaped as before (no kernels key)
+        assert!(snapshot_json(&stages, &cfg).opt("kernels").is_none());
+    }
+
+    #[test]
+    fn kernel_bench_runs_and_counts_fused_calls() {
+        let cfg = BenchConfig { jobs: 1, quick: true };
+        let ks = run_kernel_bench(&cfg).unwrap();
+        assert!(ks.len() >= 4, "expected ≥ 4 kernel benches, got {}", ks.len());
+        let mut names: Vec<&str> = ks.iter().map(|k| k.name).collect();
+        names.dedup();
+        assert_eq!(names.len(), ks.len(), "kernel names must be unique");
+        for k in &ks {
+            assert!(k.reference_secs >= 0.0 && k.kernel_secs >= 0.0, "{}", k.name);
+            assert!(k.calls > 0, "fused path of {} was never exercised", k.name);
+        }
     }
 
     fn snap(entries: &[(&str, f64)]) -> Json {

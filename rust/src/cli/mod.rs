@@ -325,7 +325,8 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
 
     let stages = crate::bench::run_stages(&bcfg)?;
     let cache = crate::bench::run_cache_bench(&bcfg)?;
-    let doc = crate::bench::snapshot_json_with_cache(&stages, Some(&cache), &bcfg);
+    let kernels = crate::bench::run_kernel_bench(&bcfg)?;
+    let doc = crate::bench::snapshot_json_full(&stages, Some(&cache), Some(&kernels), &bcfg);
     if let Some(path) = &out {
         doc.save(path)?;
         println!("wrote {path}");
@@ -363,6 +364,20 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             ]);
         }
         ct.print();
+        let mut kt = Table::new(
+            "per-kernel timings (fused vs reference)",
+            &["kernel", "reference", "fused", "speedup", "calls"],
+        );
+        for k in &kernels {
+            kt.row(vec![
+                k.name.to_string(),
+                crate::util::fmt_secs(k.reference_secs),
+                crate::util::fmt_secs(k.kernel_secs),
+                format!("{:.2}×", k.speedup()),
+                k.calls.to_string(),
+            ]);
+        }
+        kt.print();
     }
     Ok(0)
 }

@@ -1,0 +1,239 @@
+//! Blocked f32 GEMM + fused softmax/cross-entropy reductions.
+//!
+//! These kernels carry the native backend's dense hot loops: the linear
+//! logits `z = W·xᵀ + b`, the fused per-row softmax cross-entropy, and the
+//! per-chunk softmax backward. The accumulation contract is shared by every
+//! entry point here:
+//!
+//! * each output element `z[s,i]` is one f64 chain seeded with `b[i]` and
+//!   extended in **ascending k** — exactly the order of the naive triple
+//!   loop — so the cache-blocked kernel ([`gemm_bias`]) is bit-identical to
+//!   its retained reference ([`gemm_bias_naive`]) and to the historical
+//!   scalar sweep it replaced;
+//! * blocking (over [`crate::kernel::K_BLOCK`] columns) only changes the
+//!   *visit order of outputs*, never an output's own chain, which is what
+//!   keeps `jobs`-equivalence and warm-cache bit-identity intact.
+
+use super::{argmax_f64, counters, logsumexp};
+
+/// `out[s·nc + i] = b[i] + Σ_k w[i·d + k] · x[s·d + k]`, f64 accumulation
+/// in ascending k, cache-blocked over k ([`crate::kernel::K_BLOCK`]).
+///
+/// `x` holds `S` row-major samples of length `d` (`x.len() = S·d`), `w` is
+/// `nc × d` row-major, `b` has length `nc`, and `out` must hold `S·nc`
+/// elements. Bit-identical to [`gemm_bias_naive`] by construction.
+///
+/// # Panics
+/// Debug-asserts the shape contract; callers validate sizes at the
+/// executable boundary.
+pub fn gemm_bias(w: &[f32], b: &[f32], x: &[f32], d: usize, nc: usize, out: &mut [f64]) {
+    debug_assert_eq!(w.len(), nc * d, "gemm_bias: w is nc×d");
+    debug_assert_eq!(b.len(), nc, "gemm_bias: b has nc entries");
+    if nc == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % nc, 0, "gemm_bias: out is S×nc");
+    let samples = out.len() / nc;
+    debug_assert_eq!(x.len(), samples * d, "gemm_bias: x is S×d");
+    counters::gemm_blocked_inc();
+    for s in 0..samples {
+        let x_row = &x[s * d..(s + 1) * d];
+        let z_row = &mut out[s * nc..(s + 1) * nc];
+        for (z, &bv) in z_row.iter_mut().zip(b) {
+            *z = bv as f64;
+        }
+        let mut k0 = 0usize;
+        while k0 < d {
+            let k1 = (k0 + super::K_BLOCK).min(d);
+            let x_blk = &x_row[k0..k1];
+            for (i, z) in z_row.iter_mut().enumerate() {
+                let w_blk = &w[i * d + k0..i * d + k1];
+                let mut acc = *z;
+                for (wv, xv) in w_blk.iter().zip(x_blk) {
+                    acc += *wv as f64 * *xv as f64;
+                }
+                *z = acc;
+            }
+            k0 = k1;
+        }
+    }
+}
+
+/// Unblocked reference twin of [`gemm_bias`]: the plain triple loop with
+/// the same per-output f64 chain. Retained so `tests/kernel_equivalence.rs`
+/// can hold the blocked kernel to bit-identity forever.
+pub fn gemm_bias_naive(w: &[f32], b: &[f32], x: &[f32], d: usize, nc: usize, out: &mut [f64]) {
+    debug_assert_eq!(w.len(), nc * d);
+    debug_assert_eq!(b.len(), nc);
+    if nc == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % nc, 0);
+    let samples = out.len() / nc;
+    debug_assert_eq!(x.len(), samples * d);
+    for s in 0..samples {
+        let x_row = &x[s * d..(s + 1) * d];
+        for i in 0..nc {
+            let w_row = &w[i * d..(i + 1) * d];
+            let mut acc = b[i] as f64;
+            for (wv, xv) in w_row.iter().zip(x_row) {
+                acc += *wv as f64 * *xv as f64;
+            }
+            out[s * nc + i] = acc;
+        }
+    }
+}
+
+/// Fused softmax cross-entropy of one logit row: `(lse − row[label], hit)`.
+///
+/// `hit` is true iff the row's total-order argmax equals `label` **and**
+/// that logit is finite — a NaN-poisoned row therefore contributes a `NaN`
+/// loss (loud) and never a hit (no silent accuracy skew).
+///
+/// Deliberately does not bump the kernel counters: one shared-atomic RMW
+/// per sample would ping-pong a cache line across `util::par` workers for
+/// ~`nc` flops of useful work. Callers count fused-softmax work once per
+/// chunk instead ([`mark_softmax_chunk`]).
+pub fn xent_row(row: &[f64], label: usize) -> (f64, bool) {
+    let lse = logsumexp(row);
+    let loss = lse - row[label];
+    let hit = match argmax_f64(row) {
+        Some(p) => p == label && row[p].is_finite(),
+        None => false,
+    };
+    (loss, hit)
+}
+
+/// Record one chunk's worth of fused-softmax work in the kernel counters.
+/// Called once per sample chunk by the batched executors, not per row —
+/// see [`xent_row`].
+pub fn mark_softmax_chunk() {
+    counters::softmax_fused_inc();
+}
+
+/// Fused softmax cross-entropy backward for one sample.
+///
+/// Given the sample's logit row, its input `x` (length `d`) and `label`,
+/// accumulates `∂L/∂W` into `dw` (`nc × d`) and `∂L/∂b` into `db`
+/// (both scaled by `inv_b`), and returns the sample's loss term
+/// `lse − row[label]`. Accumulation order per element is the caller's
+/// sample order — chunk partials merged in chunk order stay bit-identical
+/// at every worker count.
+pub fn xent_backward_row(
+    row: &[f64],
+    x: &[f32],
+    label: usize,
+    inv_b: f64,
+    dw: &mut [f64],
+    db: &mut [f64],
+) -> f64 {
+    let d = x.len();
+    let nc = row.len();
+    debug_assert_eq!(dw.len(), nc * d);
+    debug_assert_eq!(db.len(), nc);
+    let lse = logsumexp(row);
+    for i in 0..nc {
+        let mut dz = (row[i] - lse).exp();
+        if i == label {
+            dz -= 1.0;
+        }
+        dz *= inv_b;
+        db[i] += dz;
+        let d_row = &mut dw[i * d..(i + 1) * d];
+        for (dv, &xv) in d_row.iter_mut().zip(x) {
+            *dv += dz * xv as f64;
+        }
+    }
+    lse - row[label]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn fill(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise_incl_odd_remainders() {
+        let mut rng = Pcg::seeded(42);
+        // d values straddle K_BLOCK: below, equal, above, odd remainder
+        for (s, nc, d) in [(1, 1, 1), (3, 10, 7), (5, 4, 256), (2, 3, 257), (4, 10, 300)] {
+            let w = fill(&mut rng, nc * d);
+            let b = fill(&mut rng, nc);
+            let x = fill(&mut rng, s * d);
+            let mut blocked = vec![0f64; s * nc];
+            let mut naive = vec![1f64; s * nc]; // different init: kernels must overwrite
+            gemm_bias(&w, &b, &x, d, nc, &mut blocked);
+            gemm_bias_naive(&w, &b, &x, d, nc, &mut naive);
+            for (i, (a, r)) in blocked.iter().zip(&naive).enumerate() {
+                assert_eq!(a.to_bits(), r.to_bits(), "S={s} nc={nc} d={d} out[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_handwritten_scalar_chain() {
+        // pins the documented accumulation spec itself, not just twin-equality
+        let w = [0.5f32, -1.0, 2.0, 0.25, 3.0, -0.5];
+        let b = [0.1f32, -0.2];
+        let x = [1.0f32, 2.0, -1.0];
+        let (d, nc) = (3usize, 2usize);
+        let mut got = vec![0f64; nc];
+        gemm_bias(&w, &b, &x, d, nc, &mut got);
+        for i in 0..nc {
+            let mut acc = b[i] as f64;
+            for k in 0..d {
+                acc += w[i * d + k] as f64 * x[k] as f64;
+            }
+            assert_eq!(got[i].to_bits(), acc.to_bits());
+        }
+    }
+
+    #[test]
+    fn xent_row_matches_reference_and_guards_nan() {
+        let row = [1.0f64, 3.0, 0.5];
+        let (loss, hit) = xent_row(&row, 1);
+        let want = logsumexp(&row) - row[1];
+        assert_eq!(loss.to_bits(), want.to_bits());
+        assert!(hit);
+        let (loss0, hit0) = xent_row(&row, 0);
+        assert!(loss0 > 0.0 && !hit0);
+        // poisoned row: loud NaN loss, never a hit — even when the NaN sits
+        // at the label slot
+        let poisoned = [1.0f64, f64::NAN, 0.5];
+        let (l, h) = xent_row(&poisoned, 1);
+        assert!(l.is_nan() && !h);
+        let (l2, h2) = xent_row(&poisoned, 0);
+        assert!(l2.is_nan() && !h2);
+    }
+
+    #[test]
+    fn xent_backward_row_matches_reference() {
+        let row = [0.2f64, -0.4, 1.1];
+        let x = [0.5f32, -1.5];
+        let (nc, d) = (3usize, 2usize);
+        let inv_b = 0.25f64;
+        let label = 2usize;
+        let mut dw = vec![0f64; nc * d];
+        let mut db = vec![0f64; nc];
+        let loss = xent_backward_row(&row, &x, label, inv_b, &mut dw, &mut db);
+        let lse = logsumexp(&row);
+        assert_eq!(loss.to_bits(), (lse - row[label]).to_bits());
+        for i in 0..nc {
+            let mut dz = (row[i] - lse).exp();
+            if i == label {
+                dz -= 1.0;
+            }
+            dz *= inv_b;
+            assert_eq!(db[i].to_bits(), dz.to_bits());
+            for k in 0..d {
+                assert_eq!(dw[i * d + k].to_bits(), (dz * x[k] as f64).to_bits());
+            }
+        }
+        // gradients of a softmax sum to zero across classes (up to fp eps)
+        assert!(db.iter().sum::<f64>().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,540 @@
+//! Integer-domain fused LUT kernels.
+//!
+//! An approximate multiplier is *defined* by its LUT: `lut[(a << w_bits) |
+//! w]` is the approximate product of operand codes `a` and `w`. The float
+//! path materializes the error matrix `E = LUT − a·w` as an f32 tensor and
+//! streams it element-wise; the kernels here stay in the integer domain
+//! instead — packed-index lookups straight into the `i64` LUT, integer
+//! accumulation, and a **single dequantization at the tile edge**:
+//!
+//! * [`lut_gemm`] — the fused quantized GEMM: operands are quantized once
+//!   per block into `u16` code buffers (scratch-arena backed), the inner
+//!   product walks the LUT accumulating `(Σ lut, Σ a, Σ w)` in `i64`, and
+//!   one affine dequant per output tile edge recovers the f32 value. This
+//!   is the CPU reference of the Layer-1 Pallas LUT-GEMM contract; the
+//!   synthetic proxy model has no GEMM-shaped approximate path, so today
+//!   it is exercised by the bench harness and the equivalence suite (a
+//!   conv-backed native model will drive it in production);
+//! * [`err_stats`] — exact `i64` error statistics of a LUT (Σe, Σe²,
+//!   max|e|), the once-per-design numbers cached on `AppMul`;
+//! * [`err_dot`] — `Σ v[i]·e_i` with `e_i` generated from the packed index
+//!   (no f32 error tensor in the loop) — the Ω-evaluation primitive;
+//! * [`penalty`] / [`quad_form`] — the fused analytic-penalty reductions of
+//!   the native backend;
+//! * [`sq_sum`] — `Σ v²` with an exact integer fast path (error tensors are
+//!   integer-valued), falling back to the f64 chain bit-identically when
+//!   the input is not exactly representable as small integers.
+//!
+//! Every reduction documents its accumulation order; integer sums are exact
+//! (order-free), f64 chains are ascending-index — both properties are what
+//! make the fused kernels bit-identical to the float formulations they
+//! replaced (`tests/kernel_equivalence.rs`).
+
+use anyhow::{ensure, Result};
+
+use super::{counters, Scratch};
+
+/// Row-tile height of [`lut_gemm`] (outputs per x-row block).
+pub const LUT_TILE_M: usize = 32;
+/// Column-tile width of [`lut_gemm`].
+pub const LUT_TILE_N: usize = 64;
+
+/// A borrowed view of one multiplier LUT: `lut[(a << w_bits) | w]` is the
+/// approximate product of the operand codes `(a, w)`.
+#[derive(Clone, Copy, Debug)]
+pub struct LutView<'a> {
+    pub lut: &'a [i64],
+    pub a_bits: u32,
+    pub w_bits: u32,
+}
+
+impl<'a> LutView<'a> {
+    /// Packed LUT index of operand codes `(a, w)`.
+    #[inline]
+    pub fn packed(&self, a: u32, w: u32) -> usize {
+        ((a as usize) << self.w_bits) | w as usize
+    }
+
+    /// Error of entry `i` vs the exact product, in the integer domain:
+    /// `e_i = lut[i] − a·w` with `a = i >> w_bits`, `w = i & (2^w_bits−1)`.
+    #[inline]
+    pub fn err_at(&self, i: usize) -> i64 {
+        let a = (i >> self.w_bits) as i64;
+        let w = (i & ((1usize << self.w_bits) - 1)) as i64;
+        self.lut[i] - a * w
+    }
+
+    /// Number of entries the bitwidths imply (`2^(a_bits + w_bits)`).
+    pub fn expected_len(&self) -> usize {
+        1usize << (self.a_bits + self.w_bits)
+    }
+}
+
+/// Exact integer error statistics of one LUT.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ErrStats {
+    /// Σ e_i (signed).
+    pub sum: i64,
+    /// Σ e_i² (the squared L2 norm of the error matrix).
+    pub sq_sum: i64,
+    /// max |e_i|.
+    pub max_abs: i64,
+}
+
+/// One pass over the LUT in the integer domain — exact, no rounding.
+///
+/// Does not bump the kernel counters: this is once-per-design
+/// characterization (library construction), and counting it would let the
+/// CI "fused paths ran" assertion pass without the pipeline reductions
+/// ever executing.
+pub fn err_stats(lut: LutView) -> ErrStats {
+    let mut s = ErrStats::default();
+    for i in 0..lut.lut.len() {
+        let e = lut.err_at(i);
+        s.sum += e;
+        s.sq_sum += e * e;
+        s.max_abs = s.max_abs.max(e.abs());
+    }
+    s
+}
+
+/// `Σ v[i] · e_i` with `e_i` generated from the packed LUT index — the
+/// error operand never leaves the integer domain. The f64 chain is
+/// ascending-index, and `e_i as f64` equals the f32 error entry exactly
+/// (|e| < 2²⁴), so this is bit-identical to the float `error_slice()` dot
+/// it replaces.
+pub fn err_dot(lut: LutView, v: &[f32]) -> Result<f64> {
+    ensure!(
+        v.len() == lut.lut.len(),
+        "err_dot: vector length {} != LUT length {}",
+        v.len(),
+        lut.lut.len()
+    );
+    counters::lut_fused_inc();
+    let mut acc = 0f64;
+    for (i, &vi) in v.iter().enumerate() {
+        acc += vi as f64 * lut.err_at(i) as f64;
+    }
+    Ok(acc)
+}
+
+/// Fused analytic penalty `g·e + ½ eᵀ diag(h) e`: two f64 accumulators,
+/// one ascending-index pass — bit-identical to the historical two-accumulator
+/// scalar loop of the native backend.
+pub fn penalty(g: &[f32], h: &[f32], e: &[f32]) -> f64 {
+    debug_assert_eq!(g.len(), e.len());
+    debug_assert_eq!(h.len(), e.len());
+    counters::lut_fused_inc();
+    let mut first = 0f64;
+    let mut quad = 0f64;
+    for (i, &ev) in e.iter().enumerate() {
+        let ev = ev as f64;
+        first += g[i] as f64 * ev;
+        quad += h[i] as f64 * ev * ev;
+    }
+    first + 0.5 * quad
+}
+
+/// Fused Gauss–Newton quadratic `Σ ½ h[i]·r[i]²` (ascending-index f64
+/// chain, operation order `((0.5·h)·r)·r` — the native backend's historical
+/// form, preserved bit-exactly).
+pub fn quad_form(h: &[f32], r: &[f32]) -> f64 {
+    debug_assert_eq!(h.len(), r.len());
+    counters::lut_fused_inc();
+    let mut acc = 0f64;
+    for (i, &rv) in r.iter().enumerate() {
+        acc += 0.5 * h[i] as f64 * rv as f64 * rv as f64;
+    }
+    acc
+}
+
+/// `Σ v[i]²` with an exact integer fast path.
+///
+/// Error tensors are integer-valued by construction (LUT − exact product),
+/// so when every entry is integral and the sum provably stays below 2⁵³ the
+/// kernel accumulates in `i64` — exact, and therefore bit-identical to the
+/// ascending-index f64 chain (whose partial sums are all exactly
+/// representable integers too). Anything else falls back to that f64 chain
+/// unchanged.
+pub fn sq_sum(v: &[f32]) -> f64 {
+    counters::lut_fused_inc();
+    let mut integral = true;
+    let mut max_abs = 0f32;
+    for &x in v {
+        if x.fract() != 0.0 {
+            // non-integral, NaN and ±inf all land here (fract is NaN)
+            integral = false;
+            break;
+        }
+        max_abs = max_abs.max(x.abs());
+    }
+    if integral {
+        let ma = max_abs as f64;
+        // conservative: true sum ≤ len·max² must stay an exact f64 integer
+        if ma * ma * v.len().max(1) as f64 < 9.0e15 {
+            let mut acc = 0i64;
+            for &x in v {
+                let xi = x as i64;
+                acc += xi * xi;
+            }
+            return acc as f64;
+        }
+    }
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Affine dequantization of one fused output: with `x̂ = s_x·a + lo_x` and
+/// `ŵ = s_w·w + lo_w`,
+/// `Σ x̂·ŵ = s_x s_w Σlut + s_x lo_w Σa + s_w lo_x Σw + K·lo_x·lo_w`
+/// (the LUT standing in for `a·w`). Shared by the blocked kernel and its
+/// naive twin so the expression — and hence the bits — cannot drift apart.
+#[inline]
+fn dequant(s_lut: i64, s_a: i64, s_w: i64, kdim: usize, xq: QuantGrid, wq: QuantGrid) -> f32 {
+    let sx = xq.step() as f64;
+    let lox = xq.lo as f64;
+    let sw = wq.step() as f64;
+    let low = wq.lo as f64;
+    let v = sx * sw * s_lut as f64
+        + sx * low * s_a as f64
+        + sw * lox * s_w as f64
+        + kdim as f64 * lox * low;
+    v as f32
+}
+
+/// An asymmetric uniform quantization grid: `code = clamp(round((x − lo) /
+/// scale), 0, 2^bits − 1)` — the same grid the calibration layer sweeps.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantGrid {
+    pub scale: f32,
+    pub lo: f32,
+    pub bits: u32,
+}
+
+impl QuantGrid {
+    pub fn new(scale: f32, lo: f32, bits: u32) -> QuantGrid {
+        QuantGrid { scale, lo, bits }
+    }
+
+    /// Effective step size: encode, decode and the fused dequant all use
+    /// this one sanitized value, so a negative or degenerate `scale` can
+    /// never make the code grid and the value grid disagree.
+    #[inline]
+    fn step(&self) -> f32 {
+        self.scale.abs().max(1e-12)
+    }
+
+    /// Quantize one value to its operand code (deterministic for every
+    /// input: NaN clamps to code 0).
+    #[inline]
+    pub fn code(&self, x: f32) -> u16 {
+        let levels = ((1u32 << self.bits) - 1) as f32;
+        let c = ((x - self.lo) / self.step()).round().clamp(0.0, levels);
+        c as u16
+    }
+
+    /// Dequantize one operand code.
+    #[inline]
+    pub fn decode(&self, c: u16) -> f32 {
+        self.step() * c as f32 + self.lo
+    }
+}
+
+fn check_lut_gemm_shapes(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kdim: usize,
+    n: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+    lut: LutView,
+    out: &[f32],
+) -> Result<()> {
+    ensure!(x.len() == m * kdim, "lut_gemm: x is m×k ({} != {}·{})", x.len(), m, kdim);
+    ensure!(w.len() == kdim * n, "lut_gemm: w is k×n ({} != {}·{})", w.len(), kdim, n);
+    ensure!(out.len() == m * n, "lut_gemm: out is m×n ({} != {}·{})", out.len(), m, n);
+    ensure!(
+        lut.lut.len() == lut.expected_len(),
+        "lut_gemm: LUT has {} entries, bitwidths imply {}",
+        lut.lut.len(),
+        lut.expected_len()
+    );
+    ensure!(
+        xq.bits == lut.a_bits && wq.bits == lut.w_bits,
+        "lut_gemm: grid bits ({}, {}) != LUT bits ({}, {})",
+        xq.bits,
+        wq.bits,
+        lut.a_bits,
+        lut.w_bits
+    );
+    Ok(())
+}
+
+/// The fused integer-domain LUT-GEMM:
+/// `out[i,j] = dequant(Σ_k lut[(a_ik << w_bits) | w_kj])`.
+///
+/// `x` is `m × kdim` row-major, `w` is `kdim × n` row-major, `out` is
+/// `m × n`. Both operands are quantized **once** into `u16` code blocks
+/// from the [`Scratch`] arena (`w` packed transposed so inner products walk
+/// two contiguous code rows); the inner loop accumulates `(Σ lut, Σ a,
+/// Σ w)` in `i64` and each output is dequantized exactly once at the tile
+/// edge. Integer sums are order-free, so the tiled kernel is bit-identical
+/// to [`lut_gemm_naive`].
+pub fn lut_gemm(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kdim: usize,
+    n: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+    lut: LutView,
+    scratch: &Scratch,
+    out: &mut [f32],
+) -> Result<()> {
+    check_lut_gemm_shapes(x, w, m, kdim, n, xq, wq, lut, out)?;
+    counters::lut_gemm_inc();
+    // quantize once: x codes row-major, w codes packed transposed (n × kdim)
+    let mut x_codes = scratch.u16_buf(m * kdim);
+    for (c, &v) in x_codes.iter_mut().zip(x) {
+        *c = xq.code(v);
+    }
+    let mut w_codes = scratch.u16_buf(kdim * n);
+    for j in 0..n {
+        let col = &mut w_codes[j * kdim..(j + 1) * kdim];
+        for (k, c) in col.iter_mut().enumerate() {
+            *c = wq.code(w[k * n + j]);
+        }
+    }
+    let w_shift = lut.w_bits;
+    let table = lut.lut;
+    for i0 in (0..m).step_by(LUT_TILE_M) {
+        let i1 = (i0 + LUT_TILE_M).min(m);
+        for j0 in (0..n).step_by(LUT_TILE_N) {
+            let j1 = (j0 + LUT_TILE_N).min(n);
+            for i in i0..i1 {
+                let xr = &x_codes[i * kdim..(i + 1) * kdim];
+                for j in j0..j1 {
+                    let wc = &w_codes[j * kdim..(j + 1) * kdim];
+                    let mut s_lut = 0i64;
+                    let mut s_a = 0i64;
+                    let mut s_w = 0i64;
+                    for (&a, &wv) in xr.iter().zip(wc) {
+                        s_lut += table[((a as usize) << w_shift) | wv as usize];
+                        s_a += a as i64;
+                        s_w += wv as i64;
+                    }
+                    out[i * n + j] = dequant(s_lut, s_a, s_w, kdim, xq, wq);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Untiled reference twin of [`lut_gemm`]: same integer accumulation and
+/// the same shared `dequant` expression, but operands are re-quantized per
+/// element inside the loop and outputs are visited in plain row-major
+/// order. Retained for the equivalence suite.
+pub fn lut_gemm_naive(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kdim: usize,
+    n: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+    lut: LutView,
+    out: &mut [f32],
+) -> Result<()> {
+    check_lut_gemm_shapes(x, w, m, kdim, n, xq, wq, lut, out)?;
+    let w_shift = lut.w_bits;
+    for i in 0..m {
+        for j in 0..n {
+            let mut s_lut = 0i64;
+            let mut s_a = 0i64;
+            let mut s_w = 0i64;
+            for k in 0..kdim {
+                let a = xq.code(x[i * kdim + k]);
+                let wv = wq.code(w[k * n + j]);
+                s_lut += lut.lut[((a as usize) << w_shift) | wv as usize];
+                s_a += a as i64;
+                s_w += wv as i64;
+            }
+            out[i * n + j] = dequant(s_lut, s_a, s_w, kdim, xq, wq);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exact 3×3 multiplier LUT (a·w for all 8×8 code pairs).
+    fn exact_lut(a_bits: u32, w_bits: u32) -> Vec<i64> {
+        let (qa, qw) = (1usize << a_bits, 1usize << w_bits);
+        let mut lut = Vec::with_capacity(qa * qw);
+        for a in 0..qa {
+            for w in 0..qw {
+                lut.push((a * w) as i64);
+            }
+        }
+        lut
+    }
+
+    /// A deterministic "approximate" LUT: truncates the low bit of the
+    /// exact product.
+    fn trunc_lut(a_bits: u32, w_bits: u32) -> Vec<i64> {
+        exact_lut(a_bits, w_bits).into_iter().map(|v| v & !1).collect()
+    }
+
+    #[test]
+    fn err_stats_and_err_at_are_exact() {
+        let lut = trunc_lut(3, 3);
+        let view = LutView { lut: &lut, a_bits: 3, w_bits: 3 };
+        let mut sum = 0i64;
+        let mut sq = 0i64;
+        let mut ma = 0i64;
+        for a in 0..8i64 {
+            for w in 0..8i64 {
+                let i = view.packed(a as u32, w as u32);
+                let e = lut[i] - a * w;
+                assert_eq!(view.err_at(i), e);
+                sum += e;
+                sq += e * e;
+                ma = ma.max(e.abs());
+            }
+        }
+        assert_eq!(err_stats(view), ErrStats { sum, sq_sum: sq, max_abs: ma });
+        let exact = exact_lut(3, 3);
+        let ev = LutView { lut: &exact, a_bits: 3, w_bits: 3 };
+        assert_eq!(err_stats(ev), ErrStats::default());
+    }
+
+    #[test]
+    fn err_dot_matches_float_slice_dot_bitwise() {
+        let lut = trunc_lut(3, 3);
+        let view = LutView { lut: &lut, a_bits: 3, w_bits: 3 };
+        let err_f32: Vec<f32> = (0..lut.len()).map(|i| view.err_at(i) as f32).collect();
+        let v: Vec<f32> = (0..lut.len()).map(|i| (i as f32 * 0.37).sin()).collect();
+        let want: f64 = v.iter().zip(&err_f32).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let got = err_dot(view, &v).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits());
+        assert!(err_dot(view, &v[1..]).is_err(), "length mismatch must error");
+    }
+
+    #[test]
+    fn penalty_and_quad_form_match_scalar_references() {
+        let n = 257; // odd length
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
+        let h: Vec<f32> = (0..n).map(|i| 0.5 + (i as f32 * 0.02).sin().abs()).collect();
+        let e: Vec<f32> = (0..n).map(|i| ((i % 17) as f32) - 8.0).collect();
+        let mut first = 0f64;
+        let mut quad = 0f64;
+        for i in 0..n {
+            let ev = e[i] as f64;
+            first += g[i] as f64 * ev;
+            quad += h[i] as f64 * ev * ev;
+        }
+        assert_eq!(penalty(&g, &h, &e).to_bits(), (first + 0.5 * quad).to_bits());
+        let mut q = 0f64;
+        for i in 0..n {
+            q += 0.5 * h[i] as f64 * e[i] as f64 * e[i] as f64;
+        }
+        assert_eq!(quad_form(&h, &e).to_bits(), q.to_bits());
+    }
+
+    #[test]
+    fn sq_sum_integer_fast_path_is_bit_identical_to_f64_chain() {
+        // integral data (the error-tensor case)
+        let v: Vec<f32> = (0..4096).map(|i| ((i % 199) as f32) - 99.0).collect();
+        let chain: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(sq_sum(&v).to_bits(), chain.to_bits());
+        // non-integral data falls back to the identical f64 chain
+        let f: Vec<f32> = (0..1001).map(|i| (i as f32) * 0.1 - 3.7).collect();
+        let chain_f: f64 = f.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(sq_sum(&f).to_bits(), chain_f.to_bits());
+        // huge integral values exceed the exactness bound → f64 chain
+        let big = vec![1.0e8f32; 64];
+        let chain_b: f64 = big.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(sq_sum(&big).to_bits(), chain_b.to_bits());
+        // NaN/inf take the float path and propagate
+        assert!(sq_sum(&[1.0, f32::NAN]).is_nan());
+        assert_eq!(sq_sum(&[]), 0.0);
+    }
+
+    #[test]
+    fn quant_grid_codes_round_clamp_and_decode() {
+        let q = QuantGrid::new(0.5, -1.0, 3);
+        assert_eq!(q.code(-1.0), 0);
+        assert_eq!(q.code(-0.5), 1);
+        assert_eq!(q.code(100.0), 7, "clamps to top code");
+        assert_eq!(q.code(-100.0), 0, "clamps to bottom code");
+        assert_eq!(q.code(f32::NAN), 0, "NaN is deterministic");
+        assert_eq!(q.decode(2), 0.0);
+        // a negative or zero scale uses the same sanitized step on the
+        // encode AND decode sides — the grids can never disagree
+        let neg = QuantGrid::new(-0.5, -1.0, 3);
+        assert_eq!(neg.code(-0.5), q.code(-0.5));
+        assert_eq!(neg.decode(1).to_bits(), q.decode(1).to_bits());
+        // zero scale degrades to the 1e-12 floor on both sides (clamps to
+        // the top code rather than dividing by zero)
+        let zero = QuantGrid::new(0.0, 0.0, 3);
+        assert_eq!(zero.code(0.3), 7);
+        assert_eq!(zero.decode(7).to_bits(), (1e-12_f32 * 7.0).to_bits());
+    }
+
+    #[test]
+    fn lut_gemm_blocked_matches_naive_bitwise() {
+        let lut = trunc_lut(3, 3);
+        let view = LutView { lut: &lut, a_bits: 3, w_bits: 3 };
+        let xq = QuantGrid::new(0.2, 0.0, 3);
+        let wq = QuantGrid::new(0.1, -0.3, 3);
+        let scratch = Scratch::new();
+        // sizes straddle both tile dims and leave odd remainders
+        for (m, kdim, n) in [(1, 1, 1), (5, 33, 7), (32, 64, 64), (33, 100, 65)] {
+            let x: Vec<f32> = (0..m * kdim).map(|i| ((i as f32) * 0.013).sin()).collect();
+            let w: Vec<f32> = (0..kdim * n).map(|i| ((i as f32) * 0.007).cos() * 0.4).collect();
+            let mut blocked = vec![0f32; m * n];
+            let mut naive = vec![-1f32; m * n];
+            lut_gemm(&x, &w, m, kdim, n, xq, wq, view, &scratch, &mut blocked).unwrap();
+            lut_gemm_naive(&x, &w, m, kdim, n, xq, wq, view, &mut naive).unwrap();
+            for (i, (a, b)) in blocked.iter().zip(&naive).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "m={m} k={kdim} n={n} out[{i}]");
+            }
+        }
+        // shape violations are rejected
+        let mut out = vec![0f32; 4];
+        assert!(lut_gemm(&[0.0; 3], &[0.0; 2], 2, 1, 2, xq, wq, view, &scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn lut_gemm_with_exact_lut_matches_quantized_float_math() {
+        let lut = exact_lut(4, 4);
+        let view = LutView { lut: &lut, a_bits: 4, w_bits: 4 };
+        let xq = QuantGrid::new(0.11, -0.2, 4);
+        let wq = QuantGrid::new(0.07, -0.4, 4);
+        let (m, kdim, n) = (4usize, 19usize, 3usize);
+        let x: Vec<f32> = (0..m * kdim).map(|i| ((i as f32) * 0.031).sin()).collect();
+        let w: Vec<f32> = (0..kdim * n).map(|i| ((i as f32) * 0.017).cos() * 0.5).collect();
+        let scratch = Scratch::new();
+        let mut got = vec![0f32; m * n];
+        lut_gemm(&x, &w, m, kdim, n, xq, wq, view, &scratch, &mut got).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0f64;
+                for k in 0..kdim {
+                    let xa = xq.decode(xq.code(x[i * kdim + k])) as f64;
+                    let xw = wq.decode(wq.code(w[k * n + j])) as f64;
+                    want += xa * xw;
+                }
+                let got_v = got[i * n + j] as f64;
+                assert!(
+                    (got_v - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "[{i},{j}] fused {got_v} vs float {want}"
+                );
+            }
+        }
+    }
+}

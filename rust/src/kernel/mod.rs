@@ -1,0 +1,399 @@
+//! Cache-blocked, allocation-free inner kernels for the numeric hot loops.
+//!
+//! The FAMES paper's headline claim is *speed*, and after the `util::par`
+//! fan-out the remaining cost of the native backend and the sensitivity
+//! estimator was per-call redundancy: scalar per-element loops re-allocating
+//! scratch `Vec`s every batch, per-layer coefficient tables regenerated from
+//! the RNG on every executable invocation, and approximate-multiplier
+//! effects applied through a materialized f32 error tensor one element at a
+//! time. This module concentrates those loops into a small set of audited
+//! kernels:
+//!
+//! * [`gemm`] — blocked f32 GEMM with f64 accumulation ([`gemm::gemm_bias`])
+//!   plus the fused softmax/cross-entropy row reductions, all backed by a
+//!   reusable [`Scratch`] arena (one per loaded executable — no per-batch
+//!   `Vec` churn);
+//! * [`lut`] — integer-domain fused LUT kernels: packed `(a << w_bits) | w`
+//!   indexing straight into `AppMul::lut`, `i64` accumulation with a single
+//!   dequantization at the tile edge ([`lut::lut_gemm`]), and the fused
+//!   error-penalty / error-dot reductions that replace the float
+//!   `error_slice()` element-wise path;
+//! * NaN-guarded reductions ([`argmax_f64`], [`argmax_f32`],
+//!   [`logsumexp`]) — total-order comparisons so a poisoned batch surfaces
+//!   as a loud `NaN` loss and a counted miss instead of silently skewing
+//!   accuracy numbers.
+//!
+//! # Determinism contract
+//!
+//! Every kernel documents its floating-point accumulation order and keeps
+//! it **independent of blocking, tiling and worker count**: a blocked kernel
+//! is bit-identical to its retained naive reference (`*_naive` twins), and
+//! callers that fan out over `util::par` keep the bit-identical-at-every-
+//! `--jobs` contract. `tests/kernel_equivalence.rs` pins both properties.
+//!
+//! # Counters
+//!
+//! Each kernel family bumps a process-wide invocation counter
+//! ([`counters`]); `fames bench --json` embeds a snapshot so CI can assert
+//! the fused paths are actually exercised, not silently bypassed.
+
+pub mod gemm;
+pub mod lut;
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Mutex;
+
+/// Columns of one k-block in the blocked GEMM kernels. The block partition
+/// only affects *which* outputs are touched when — every output's f64
+/// accumulation chain stays in ascending-k order — so the constant is a
+/// locality knob, not a numerics knob.
+pub const K_BLOCK: usize = 256;
+
+/// Process-wide kernel invocation counters.
+///
+/// Relaxed atomics: the counts are diagnostics (bench snapshots, CI
+/// assertions that the fused paths ran), never synchronization. Tests that
+/// run concurrently in one process should assert on **deltas**
+/// ([`counters::KernelCounters::since`]), not absolute values or
+/// [`counters::reset`].
+pub mod counters {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static GEMM_BLOCKED: AtomicU64 = AtomicU64::new(0);
+    static SOFTMAX_FUSED: AtomicU64 = AtomicU64::new(0);
+    static LUT_FUSED: AtomicU64 = AtomicU64::new(0);
+    static LUT_GEMM: AtomicU64 = AtomicU64::new(0);
+
+    pub(crate) fn gemm_blocked_inc() {
+        GEMM_BLOCKED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn softmax_fused_inc() {
+        SOFTMAX_FUSED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn lut_fused_inc() {
+        LUT_FUSED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn lut_gemm_inc() {
+        LUT_GEMM.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point-in-time snapshot of every kernel counter.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct KernelCounters {
+        /// Blocked GEMM invocations (`kernel::gemm::gemm_bias`).
+        pub gemm_blocked: u64,
+        /// Fused softmax/cross-entropy sample chunks
+        /// (`gemm::mark_softmax_chunk`, once per batched chunk).
+        pub softmax_fused: u64,
+        /// Fused integer-domain LUT reductions (penalty / dot / sq-sum).
+        pub lut_fused: u64,
+        /// Fused integer LUT-GEMM invocations (`kernel::lut::lut_gemm`).
+        pub lut_gemm: u64,
+    }
+
+    impl KernelCounters {
+        /// Per-counter difference vs an earlier snapshot (saturating, so a
+        /// stale `earlier` cannot underflow).
+        pub fn since(&self, earlier: &KernelCounters) -> KernelCounters {
+            KernelCounters {
+                gemm_blocked: self.gemm_blocked.saturating_sub(earlier.gemm_blocked),
+                softmax_fused: self.softmax_fused.saturating_sub(earlier.softmax_fused),
+                lut_fused: self.lut_fused.saturating_sub(earlier.lut_fused),
+                lut_gemm: self.lut_gemm.saturating_sub(earlier.lut_gemm),
+            }
+        }
+
+        /// Sum of all counters (quick "did any kernel run" probe).
+        pub fn total(&self) -> u64 {
+            self.gemm_blocked + self.softmax_fused + self.lut_fused + self.lut_gemm
+        }
+    }
+
+    /// Read every counter.
+    pub fn snapshot() -> KernelCounters {
+        KernelCounters {
+            gemm_blocked: GEMM_BLOCKED.load(Ordering::Relaxed),
+            softmax_fused: SOFTMAX_FUSED.load(Ordering::Relaxed),
+            lut_fused: LUT_FUSED.load(Ordering::Relaxed),
+            lut_gemm: LUT_GEMM.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter. Meant for single-threaded harnesses (the CLI
+    /// bench); concurrent tests should diff snapshots instead.
+    pub fn reset() {
+        GEMM_BLOCKED.store(0, Ordering::Relaxed);
+        SOFTMAX_FUSED.store(0, Ordering::Relaxed);
+        LUT_FUSED.store(0, Ordering::Relaxed);
+        LUT_GEMM.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A thread-safe pool of reusable scratch buffers.
+///
+/// The native backend's batched loops used to allocate fresh `Vec`s per
+/// chunk per call; a `Scratch` lives as long as its `LoadedExec` and hands
+/// the same backing allocations back out on every batch. Checkout/return
+/// take a `Mutex` briefly (never held during compute), so `util::par`
+/// workers can each hold buffers concurrently.
+///
+/// ```
+/// use fames::kernel::Scratch;
+/// let scratch = Scratch::new();
+/// {
+///     let mut buf = scratch.f64_buf(128);
+///     buf[0] = 1.0;
+///     assert_eq!(buf.len(), 128);
+/// } // dropped → returned to the pool
+/// assert_eq!(scratch.pooled_f64(), 1);
+/// let again = scratch.f64_buf(64); // reuses the pooled allocation, zeroed
+/// assert_eq!(scratch.pooled_f64(), 0);
+/// assert!(again.iter().all(|&v| v == 0.0));
+/// ```
+#[derive(Default)]
+pub struct Scratch {
+    f64_pool: Mutex<Vec<Vec<f64>>>,
+    u16_pool: Mutex<Vec<Vec<u16>>>,
+}
+
+/// Maximum parked buffers per pool; returns beyond this are dropped so a
+/// one-off wide fan-out cannot pin its peak footprint forever.
+const POOL_MAX: usize = 64;
+
+/// Take the first pooled buffer whose capacity already covers `len`
+/// (avoids regrowing when small and large checkouts interleave), else any
+/// pooled buffer, else a fresh one.
+fn take_buf<T>(pool: &Mutex<Vec<Vec<T>>>, len: usize) -> Vec<T> {
+    let mut pool = pool.lock().unwrap_or_else(|e| e.into_inner());
+    match pool.iter().position(|b| b.capacity() >= len) {
+        Some(i) => pool.swap_remove(i),
+        None => pool.pop().unwrap_or_default(),
+    }
+}
+
+fn park_buf<T>(pool: &Mutex<Vec<Vec<T>>>, buf: Vec<T>) {
+    let mut pool = pool.lock().unwrap_or_else(|e| e.into_inner());
+    if pool.len() < POOL_MAX {
+        pool.push(buf);
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Check out a zero-filled f64 buffer of exactly `len` elements. The
+    /// buffer returns to the pool when the guard drops; capacity is kept,
+    /// so steady-state use allocates nothing.
+    pub fn f64_buf(&self, len: usize) -> ScratchF64<'_> {
+        let mut buf = take_buf(&self.f64_pool, len);
+        buf.clear();
+        buf.resize(len, 0.0);
+        ScratchF64 { buf, pool: self }
+    }
+
+    /// Check out a zero-filled u16 buffer of exactly `len` elements (the
+    /// quantized-operand blocks of [`lut::lut_gemm`]).
+    pub fn u16_buf(&self, len: usize) -> ScratchU16<'_> {
+        let mut buf = take_buf(&self.u16_pool, len);
+        buf.clear();
+        buf.resize(len, 0);
+        ScratchU16 { buf, pool: self }
+    }
+
+    /// Number of f64 buffers currently parked in the pool (diagnostics).
+    pub fn pooled_f64(&self) -> usize {
+        self.f64_pool.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Number of u16 buffers currently parked in the pool (diagnostics).
+    pub fn pooled_u16(&self) -> usize {
+        self.u16_pool.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+/// A checked-out f64 scratch buffer; derefs to `[f64]`, returns its backing
+/// allocation to the owning [`Scratch`] on drop.
+pub struct ScratchF64<'a> {
+    buf: Vec<f64>,
+    pool: &'a Scratch,
+}
+
+impl Deref for ScratchF64<'_> {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
+impl DerefMut for ScratchF64<'_> {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchF64<'_> {
+    fn drop(&mut self) {
+        park_buf(&self.pool.f64_pool, std::mem::take(&mut self.buf));
+    }
+}
+
+/// A checked-out u16 scratch buffer; see [`ScratchF64`].
+pub struct ScratchU16<'a> {
+    buf: Vec<u16>,
+    pool: &'a Scratch,
+}
+
+impl Deref for ScratchU16<'_> {
+    type Target = [u16];
+
+    fn deref(&self) -> &[u16] {
+        &self.buf
+    }
+}
+
+impl DerefMut for ScratchU16<'_> {
+    fn deref_mut(&mut self) -> &mut [u16] {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchU16<'_> {
+    fn drop(&mut self) {
+        park_buf(&self.pool.u16_pool, std::mem::take(&mut self.buf));
+    }
+}
+
+/// Index of the row's maximum under IEEE **total order** (first maximum
+/// wins); `None` only for an empty row. Unlike a `>`-based scan — where
+/// every comparison against NaN is `false` and a poisoned row silently
+/// "predicts" whatever non-NaN value came first — NaN sorts *above* every
+/// number here, so a poisoned row deterministically selects a NaN slot that
+/// callers can detect and count as a miss.
+pub fn argmax_f64(row: &[f64]) -> Option<usize> {
+    if row.is_empty() {
+        return None;
+    }
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+/// f32 twin of [`argmax_f64`] (the `acts_float` logits path).
+pub fn argmax_f32(row: &[f32]) -> Option<usize> {
+    if row.is_empty() {
+        return None;
+    }
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+/// `log Σ exp(row)` stabilized by the row max. The max is taken in total
+/// order, so a NaN anywhere in the row yields `NaN` (loud) instead of
+/// whatever the NaN-ignoring `f64::max` fold happened to produce. NaN-free
+/// rows are bit-identical to the classic max-shift formulation.
+pub fn logsumexp(row: &[f64]) -> f64 {
+    let mut m = f64::NEG_INFINITY;
+    for v in row {
+        if v.total_cmp(&m) == std::cmp::Ordering::Greater {
+            m = *v;
+        }
+    }
+    if m.is_nan() {
+        return f64::NAN;
+    }
+    if m == f64::NEG_INFINITY {
+        // empty row or all -inf: Σ exp = 0
+        return f64::NEG_INFINITY;
+    }
+    m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_buffers_are_zeroed_and_reused() {
+        let s = Scratch::new();
+        assert_eq!(s.pooled_f64(), 0);
+        {
+            let mut a = s.f64_buf(16);
+            a[3] = 7.0;
+            let b = s.f64_buf(8); // second concurrent checkout
+            assert_eq!(b.len(), 8);
+            assert_eq!(s.pooled_f64(), 0);
+        }
+        assert_eq!(s.pooled_f64(), 2);
+        let c = s.f64_buf(16);
+        assert_eq!(s.pooled_f64(), 1, "one buffer checked back out");
+        assert!(c.iter().all(|&v| v == 0.0), "reused buffer must be zeroed");
+        let u = s.u16_buf(4);
+        assert_eq!(u.len(), 4);
+        drop(u);
+        assert_eq!(s.pooled_u16(), 1);
+    }
+
+    #[test]
+    fn scratch_is_usable_across_scoped_threads() {
+        let s = Scratch::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    let mut b = s.f64_buf(32);
+                    b[0] = 1.0;
+                });
+            }
+        });
+        assert_eq!(s.pooled_f64(), 4);
+    }
+
+    #[test]
+    fn argmax_first_max_wins_and_handles_nan() {
+        assert_eq!(argmax_f64(&[]), None);
+        assert_eq!(argmax_f64(&[1.0, 3.0, 3.0, 2.0]), Some(1), "first max wins");
+        assert_eq!(argmax_f64(&[1.0, f64::NAN, 9.0]), Some(1), "NaN is total-order max");
+        assert_eq!(argmax_f32(&[2.0f32, 5.0, 5.0]), Some(1));
+        assert_eq!(argmax_f32(&[f32::NAN, 1.0]), Some(0));
+        assert_eq!(argmax_f64(&[f64::NEG_INFINITY, -1.0]), Some(1));
+    }
+
+    #[test]
+    fn logsumexp_matches_reference_and_poisons_loudly() {
+        let row = [0.5, -1.0, 2.0, 0.0];
+        let m = 2.0f64;
+        let want = m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln();
+        assert_eq!(logsumexp(&row).to_bits(), want.to_bits());
+        assert!(logsumexp(&[1.0, f64::NAN]).is_nan());
+        assert_eq!(logsumexp(&[]), f64::NEG_INFINITY);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY; 3]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn counter_snapshots_diff_saturating() {
+        use super::counters::KernelCounters;
+        let a = KernelCounters { gemm_blocked: 5, softmax_fused: 1, lut_fused: 2, lut_gemm: 0 };
+        let b = KernelCounters { gemm_blocked: 9, softmax_fused: 1, lut_fused: 7, lut_gemm: 3 };
+        let d = b.since(&a);
+        assert_eq!(d.gemm_blocked, 4);
+        assert_eq!(d.softmax_fused, 0);
+        assert_eq!(d.lut_fused, 5);
+        assert_eq!(d.lut_gemm, 3);
+        assert_eq!(d.total(), 12);
+        assert_eq!(a.since(&b).gemm_blocked, 0, "saturating");
+    }
+}

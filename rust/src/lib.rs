@@ -39,6 +39,17 @@
 //! auto-detect). `fames bench --json` emits a per-stage serial-vs-parallel
 //! snapshot ([`bench`]).
 //!
+//! # Kernel layer
+//!
+//! Inside each worker, the dense inner loops run through the [`kernel`]
+//! subsystem: a cache-blocked f32 GEMM with a reusable scratch arena
+//! ([`kernel::Scratch`]), integer-domain fused LUT kernels that index
+//! `AppMul` LUTs via packed `(a << w_bits) | w` indices and accumulate in
+//! `i64` ([`kernel::lut`]), and NaN-guarded softmax reductions. Blocked
+//! kernels are bit-identical to their retained naive references
+//! (`tests/kernel_equivalence.rs`), and `fames bench --json` embeds
+//! per-kernel timings plus invocation counters.
+//!
 //! # Incremental runs
 //!
 //! The pipeline is an explicit stage graph ([`pipeline::stages`]) whose
@@ -62,6 +73,7 @@ pub mod data;
 pub mod energy;
 pub mod experiments;
 pub mod json;
+pub mod kernel;
 pub mod pipeline;
 pub mod quant;
 pub mod report;

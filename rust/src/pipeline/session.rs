@@ -283,14 +283,13 @@ impl Session {
             let nc = self.art.manifest.num_classes;
             for (s, &label) in batch.labels.data().iter().enumerate() {
                 let row = &logits.data()[s * nc..(s + 1) * nc];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                if pred == label as usize {
-                    correct += 1.0;
+                // total-order argmax: a NaN-poisoned row deterministically
+                // counts as a miss instead of panicking (the old
+                // partial_cmp unwrap) or silently matching
+                if let Some(pred) = crate::kernel::argmax_f32(row) {
+                    if pred == label as usize && row[pred].is_finite() {
+                        correct += 1.0;
+                    }
                 }
             }
             samples += batch.labels.len();

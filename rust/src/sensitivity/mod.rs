@@ -154,28 +154,25 @@ impl Estimator {
         Ok(Estimator { layers, base_loss })
     }
 
-    /// Ω(k, AM): the Taylor estimate of Eq. 9 for one candidate — two dot
-    /// products over the precomputed error slice (no allocation).
+    /// Ω(k, AM): the Taylor estimate of Eq. 9 for one candidate — two
+    /// fused integer-domain LUT dots ([`AppMul::err_dot`]): the error
+    /// operand is generated from the packed LUT index, never materialized
+    /// as an f32 tensor, and the result is bit-identical to the float
+    /// `error_slice()` formulation it replaced.
     pub fn perturbation(&self, layer: usize, am: &AppMul) -> Result<f64> {
         let le = &self.layers[layer];
-        let e = am.error_slice();
-        if e.len() != le.grad.len() {
+        let e_len = am.lut.len();
+        if e_len != le.grad.len() {
             bail!(
                 "layer {layer}: AppMul {} has E length {}, expected {}",
                 am.name,
-                e.len(),
+                e_len,
                 le.grad.len()
             );
         }
-        let dot = |v: &[f32]| -> f64 {
-            v.iter()
-                .zip(e.iter())
-                .map(|(&a, &b)| a as f64 * b as f64)
-                .sum()
-        };
-        let first = dot(le.grad.data());
-        let second = if le.lambda > 0.0 && le.eigvec.len() == e.len() {
-            let proj = dot(le.eigvec.data());
+        let first = am.err_dot(le.grad.data())?;
+        let second = if le.lambda > 0.0 && le.eigvec.len() == e_len {
+            let proj = am.err_dot(le.eigvec.data())?;
             0.5 * le.lambda * proj * proj
         } else {
             0.0

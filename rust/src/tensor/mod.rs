@@ -158,9 +158,16 @@ impl Tensor {
             .sum())
     }
 
+    /// Sum of squared elements, through the kernel layer's fused reduction:
+    /// integer-valued tensors (error matrices) take an exact `i64` fast
+    /// path that is bit-identical to the ascending-index f64 chain.
+    pub fn sq_sum(&self) -> f64 {
+        crate::kernel::lut::sq_sum(&self.data)
+    }
+
     /// L2 norm.
     pub fn norm(&self) -> f64 {
-        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+        self.sq_sum().sqrt()
     }
 
     /// In-place scale.
@@ -216,6 +223,11 @@ mod tests {
         let b = Tensor::from_slice(&[3.0, 0.0, 4.0]);
         assert_eq!(a.dot(&b).unwrap(), 11.0);
         assert_eq!(a.norm(), 3.0);
+        assert_eq!(a.sq_sum(), 9.0);
+        // non-integral data: sq_sum must equal the plain f64 chain bitwise
+        let c = Tensor::from_slice(&[0.1, -2.7, 3.14]);
+        let chain: f64 = c.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(c.sq_sum().to_bits(), chain.to_bits());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Kernel-layer equivalence suite.
+//!
+//! The `kernel` subsystem's contract: every blocked/fused kernel is
+//! **bit-identical** to its retained naive reference, to the float
+//! formulation it replaced, and to itself at every `--jobs` count —
+//! including on shapes that leave odd tile/chunk remainders. Plus the
+//! NaN-guard regression tests and the kernel-counter / scratch-arena
+//! plumbing.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fames::appmul::generate_library;
+use fames::kernel::{self, counters, gemm, lut, Scratch};
+use fames::rng::Pcg;
+use fames::runtime::backend::native::{
+    input_offset, template_inputs, write_synthetic_artifacts, NativeBackend, SyntheticSpec,
+};
+use fames::runtime::{ArtifactSet, Runtime};
+use fames::tensor::Tensor;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-keq-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    root
+}
+
+/// A synthetic spec whose flattened image dim (3·7·9 = 189) is not a
+/// multiple of the GEMM k-block and whose batches (17 / 33) are not
+/// multiples of the native backend's sample chunk — every blocked loop has
+/// a ragged tail.
+fn odd_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        model: "oddnet".to_string(),
+        cfg: "w4a4".to_string(),
+        layer_bits: vec![(4, 4), (3, 3), (2, 2)],
+        num_classes: 10,
+        image_shape: [3, 7, 9],
+        train_batch: 17,
+        eval_batch: 33,
+    }
+}
+
+// ---- blocked vs naive bit-identity ----
+
+#[test]
+fn gemm_blocked_matches_naive_on_odd_shapes() {
+    let mut rng = Pcg::seeded(0xbeef);
+    for (samples, nc, d) in [(17, 10, 189), (1, 1, 1), (3, 7, 255), (2, 5, 257), (33, 10, 512)] {
+        let w: Vec<f32> = (0..nc * d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..nc).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..samples * d).map(|_| rng.normal() as f32).collect();
+        let mut blocked = vec![0f64; samples * nc];
+        let mut naive = vec![0f64; samples * nc];
+        gemm::gemm_bias(&w, &b, &x, d, nc, &mut blocked);
+        gemm::gemm_bias_naive(&w, &b, &x, d, nc, &mut naive);
+        for (i, (a, r)) in blocked.iter().zip(&naive).enumerate() {
+            assert_eq!(a.to_bits(), r.to_bits(), "S={samples} nc={nc} d={d} out[{i}]");
+        }
+    }
+}
+
+#[test]
+fn lut_gemm_blocked_matches_naive_on_real_luts() {
+    // real characterized designs, exact and approximate
+    let lib = generate_library(&[(4, 4)], 0);
+    let approx = lib.for_bits(4, 4).into_iter().find(|m| !m.is_exact()).unwrap();
+    let exact = lib.exact(4, 4).unwrap();
+    let scratch = Scratch::new();
+    let mut rng = Pcg::seeded(11);
+    for am in [exact, approx] {
+        let view = am.lut_view();
+        let xq = lut::QuantGrid::new(0.09, -0.1, am.a_bits);
+        let wq = lut::QuantGrid::new(0.06, -0.3, am.w_bits);
+        // odd remainders vs LUT_TILE_M (32) and LUT_TILE_N (64)
+        for (m, kdim, n) in [(33, 45, 65), (5, 189, 7), (32, 64, 64)] {
+            let x: Vec<f32> = (0..m * kdim).map(|_| rng.normal() as f32 * 0.5).collect();
+            let w: Vec<f32> = (0..kdim * n).map(|_| rng.normal() as f32 * 0.3).collect();
+            let mut blocked = vec![0f32; m * n];
+            let mut naive = vec![0f32; m * n];
+            lut::lut_gemm(&x, &w, m, kdim, n, xq, wq, view, &scratch, &mut blocked).unwrap();
+            lut::lut_gemm_naive(&x, &w, m, kdim, n, xq, wq, view, &mut naive).unwrap();
+            for (i, (a, b)) in blocked.iter().zip(&naive).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} m={m} k={kdim} n={n} out[{i}]",
+                    am.name
+                );
+            }
+        }
+    }
+}
+
+// ---- fused kernels vs the float formulations they replaced ----
+
+#[test]
+fn fused_lut_reductions_match_float_slice_math_bitwise() {
+    let lib = generate_library(&[(3, 3)], 0);
+    let am = lib.for_bits(3, 3).into_iter().find(|m| !m.is_exact()).unwrap();
+    let e = am.error_slice();
+    let n = e.len();
+    let v: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.11).sin()).collect();
+    // err_dot (integer-domain) == float dot over the materialized slice
+    let float_dot: f64 = v.iter().zip(e).map(|(&a, &b)| a as f64 * b as f64).sum();
+    assert_eq!(am.err_dot(&v).unwrap().to_bits(), float_dot.to_bits());
+    // penalty == the historical two-accumulator scalar loop
+    let g: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.07).cos()).collect();
+    let h: Vec<f32> = (0..n).map(|i| 0.1 + ((i % 5) as f32) * 0.01).collect();
+    let mut first = 0f64;
+    let mut quad = 0f64;
+    for i in 0..n {
+        let ev = e[i] as f64;
+        first += g[i] as f64 * ev;
+        quad += h[i] as f64 * ev * ev;
+    }
+    assert_eq!(lut::penalty(&g, &h, e).to_bits(), (first + 0.5 * quad).to_bits());
+    // integer Σe² fast path == f64 chain, and matches the cached stats
+    let chain: f64 = e.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    assert_eq!(lut::sq_sum(e).to_bits(), chain.to_bits());
+    assert_eq!(am.err_stats().sq_sum as f64, chain);
+    // quad_form == the ascending-index ½·h·r² chain
+    let q_ref: f64 = (0..n).map(|i| 0.5 * h[i] as f64 * e[i] as f64 * e[i] as f64).sum();
+    assert_eq!(lut::quad_form(&h, e).to_bits(), q_ref.to_bits());
+}
+
+// ---- native backend through the kernel path: jobs equivalence ----
+
+/// Every executable kind, on the ragged-tail spec, must produce
+/// bit-identical outputs at `jobs` = 1, 4 and auto (0).
+#[test]
+fn native_kernel_path_is_bit_identical_across_jobs_on_odd_shapes() {
+    let root = tmp_root("jobs");
+    let dir = write_synthetic_artifacts(&root, &odd_spec()).unwrap();
+    let set = ArtifactSet::open(&dir).unwrap();
+    let m = &set.manifest;
+    let rt = |jobs: usize| {
+        Arc::new(Runtime::with_backend(Box::new(NativeBackend::new(3).with_jobs(jobs))))
+    };
+    for exe in ["fwd", "fwd_acts", "acts_float", "grad_e", "hvp_e", "quad_e", "train", "calib",
+                "retrain"] {
+        let mut inputs = template_inputs(m, exe).unwrap();
+        if let Ok(at) = input_offset(m, exe, "e_list") {
+            inputs[at] = Tensor::full(&[m.layers[0].e_len()], 3.0);
+        }
+        if let Ok(at) = input_offset(m, exe, "rvecs") {
+            inputs[at + 1] = Tensor::full(&[m.layers[1].e_len()], 2.0);
+        }
+        let path = set.exe_path(exe).unwrap();
+        let out1 = rt(1).load(&path).unwrap().run(&inputs).unwrap();
+        for jobs in [4usize, 0] {
+            let outn = rt(jobs).load(&path).unwrap().run(&inputs).unwrap();
+            assert_eq!(out1.len(), outn.len(), "{exe}: output count at jobs={jobs}");
+            for (i, (a, b)) in out1.iter().zip(&outn).enumerate() {
+                assert_eq!(a, b, "{exe}: output {i} differs at jobs={jobs}");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---- NaN guards ----
+
+#[test]
+fn nan_guarded_reductions_regression() {
+    // argmax: total order, first max wins, NaN dominates
+    assert_eq!(kernel::argmax_f64(&[1.0, 5.0, 5.0, 2.0]), Some(1));
+    assert_eq!(kernel::argmax_f64(&[1.0, f64::NAN, 9.0]), Some(1));
+    assert_eq!(kernel::argmax_f32(&[3.0f32, f32::NAN]), Some(1));
+    assert_eq!(kernel::argmax_f64(&[]), None);
+    // logsumexp: loud NaN instead of the NaN-ignoring max fold
+    assert!(kernel::logsumexp(&[0.0, f64::NAN]).is_nan());
+    let clean = [0.1f64, 2.3, -1.0];
+    let m = 2.3f64;
+    let want = m + clean.iter().map(|v| (v - m).exp()).sum::<f64>().ln();
+    assert_eq!(kernel::logsumexp(&clean).to_bits(), want.to_bits());
+    // fused row kernel: poisoned rows never count as hits
+    let (loss, hit) = gemm::xent_row(&[1.0, f64::NAN, 0.0], 1);
+    assert!(loss.is_nan() && !hit);
+}
+
+// ---- plumbing: counters + scratch ----
+
+/// A real forward pass through the native backend must exercise the
+/// blocked-GEMM, fused-softmax and fused-LUT counters (delta-based: other
+/// tests may bump the process-wide counters concurrently).
+#[test]
+fn forward_pass_increments_kernel_counters() {
+    let root = tmp_root("counters");
+    let dir = write_synthetic_artifacts(&root, &odd_spec()).unwrap();
+    let set = ArtifactSet::open(&dir).unwrap();
+    let m = &set.manifest;
+    let mut inputs = template_inputs(m, "fwd").unwrap();
+    let at = input_offset(m, "fwd", "e_list").unwrap();
+    inputs[at] = Tensor::full(&[m.layers[0].e_len()], 2.0);
+    let exe = NativeBackend::new(0).load(&set.exe_path("fwd").unwrap()).unwrap();
+    let before = counters::snapshot();
+    exe.run(&inputs).unwrap();
+    let delta = counters::snapshot().since(&before);
+    assert!(delta.gemm_blocked > 0, "blocked GEMM not exercised: {delta:?}");
+    assert!(delta.softmax_fused > 0, "fused softmax not exercised: {delta:?}");
+    assert!(delta.lut_fused > 0, "fused LUT path not exercised: {delta:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn scratch_arena_reuses_allocations_across_runs() {
+    let root = tmp_root("scratch");
+    let dir = write_synthetic_artifacts(&root, &odd_spec()).unwrap();
+    let set = ArtifactSet::open(&dir).unwrap();
+    let m = &set.manifest;
+    let inputs = template_inputs(m, "fwd").unwrap();
+    // pinned to one worker so the pool high-water mark is one chunk's
+    // buffers; repeated runs must keep producing identical outputs while
+    // recycling the same arena
+    let exe = NativeBackend::new(0).with_jobs(1).load(&set.exe_path("fwd").unwrap()).unwrap();
+    let first = exe.run(&inputs).unwrap();
+    for _ in 0..3 {
+        let again = exe.run(&inputs).unwrap();
+        assert_eq!(first, again, "scratch reuse changed results");
+    }
+    // the standalone arena: buffers park and come back
+    let s = Scratch::new();
+    {
+        let _a = s.f64_buf(64);
+        let _b = s.u16_buf(32);
+    }
+    assert_eq!((s.pooled_f64(), s.pooled_u16()), (1, 1));
+    let c = s.f64_buf(128);
+    assert_eq!(s.pooled_f64(), 0);
+    assert_eq!(c.len(), 128);
+    let _ = std::fs::remove_dir_all(&root);
+}
