@@ -17,6 +17,12 @@
 //!
 //! Everything runs against self-generated synthetic artifact sets, so the
 //! bench works on any machine (`--quick` shrinks sizes for CI smoke lanes).
+//!
+//! Beyond the serial-vs-parallel stages, the snapshot carries three more
+//! sections: cold-vs-warm pipeline timings ([`run_cache_bench`]),
+//! per-kernel fused-vs-reference timings ([`run_kernel_bench`]), and
+//! `fames serve` throughput at 1/8/64 concurrent clients
+//! ([`run_serve_bench_full`]).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -35,9 +41,9 @@ use crate::sensitivity::{estimate_table, Estimator, HessianMode};
 use crate::util::par;
 
 /// Schema tag of the JSON snapshot (bump on shape changes; the `cache`
-/// section added by the artifact-store PR and the `kernels` /
-/// `kernel_counters` sections added by the kernel-layer PR are additive,
-/// so v1 stands).
+/// section added by the artifact-store PR, the `kernels` /
+/// `kernel_counters` sections added by the kernel-layer PR and the `serve`
+/// section added by the serving PR are additive, so v1 stands).
 pub const SCHEMA: &str = "fames-bench-v1";
 
 /// A stage counts as regressed in `fames bench --compare` when it got more
@@ -458,6 +464,132 @@ pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
     Ok(out)
 }
 
+// ---- serve throughput bench (the serving layer's payoff) ----
+
+/// Requests/sec at one concurrency level, cold vs warm.
+#[derive(Clone, Debug)]
+pub struct ServeLevel {
+    pub clients: usize,
+    /// Requests fired per round (clients × per-client requests).
+    pub requests: usize,
+    /// First round against a freshly bound server: per-executable caches,
+    /// `Scratch` pools and coefficient `OnceLock`s are all cold.
+    pub cold_rps: f64,
+    /// Second round against the same server (steady state).
+    pub warm_rps: f64,
+}
+
+impl ServeLevel {
+    pub fn speedup(&self) -> f64 {
+        if self.cold_rps > 0.0 {
+            self.warm_rps / self.cold_rps
+        } else {
+            0.0
+        }
+    }
+}
+
+/// `fames serve` throughput snapshot: requests/sec at 1/8/64 concurrent
+/// clients, plus the daemon warm-up cost.
+#[derive(Clone, Debug)]
+pub struct ServeBench {
+    /// First `Server::bind` wall-clock (trains + characterizes: the cold
+    /// startup). Later binds reuse the parameter cache + artifact store.
+    pub startup_cold_secs: f64,
+    /// Last `Server::bind` wall-clock (everything loads from caches).
+    pub startup_warm_secs: f64,
+    pub levels: Vec<ServeLevel>,
+}
+
+/// Measure `fames serve` end to end: a real daemon on a loopback port, a
+/// synthetic model, N client threads firing `evaluate` requests over the
+/// wire. Each concurrency level gets its own freshly bound server (cold
+/// kernel caches) but shares the artifact root, so the parameter cache and
+/// the artifact store make every bind after the first warm — the same
+/// restart path a production deployment would take.
+pub fn run_serve_bench(cfg: &BenchConfig) -> Result<Vec<ServeLevel>> {
+    run_serve_bench_full(cfg).map(|b| b.levels)
+}
+
+/// [`run_serve_bench`] with the startup timings included.
+pub fn run_serve_bench_full(cfg: &BenchConfig) -> Result<ServeBench> {
+    use crate::serve::{Client, ServeConfig, Server};
+
+    let root = std::env::temp_dir().join(format!("fames-bench-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4"))?;
+    let base = FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: if cfg.quick { 60 } else { 200 },
+        train_lr: 0.02,
+        jobs: cfg.jobs,
+        ..FamesConfig::default()
+    };
+    let per_client = if cfg.quick { 2 } else { 8 };
+    let mut startup_cold_secs = 0.0;
+    let mut startup_warm_secs = 0.0;
+    let mut levels = Vec::new();
+    for (li, &clients) in [1usize, 8, 64].iter().enumerate() {
+        let scfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            models: vec!["resnet8/w4a4".to_string()],
+            max_batch: 16,
+            base: base.clone(),
+        };
+        let t0 = Instant::now();
+        let server = Server::bind(&scfg).context("serve bench: bind")?;
+        let bind_secs = t0.elapsed().as_secs_f64();
+        if li == 0 {
+            startup_cold_secs = bind_secs;
+        }
+        startup_warm_secs = bind_secs;
+        let addr = server.local_addr().to_string();
+        let daemon = std::thread::spawn(move || server.run());
+
+        let round = |label: &str| -> Result<f64> {
+            let t = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || -> Result<()> {
+                        let mut cl = Client::connect(&addr)?;
+                        for r in 0..per_client {
+                            let req = Json::obj()
+                                .with("id", (c * 10_000 + r) as i64)
+                                .with("op", "evaluate")
+                                .with("model", "resnet8/w4a4")
+                                .with("batches", 1usize);
+                            let resp = cl.call(&req)?;
+                            Client::expect_ok(&resp)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("serve bench: client thread panicked"))?
+                    .with_context(|| format!("serve bench round '{label}'"))?;
+            }
+            Ok((clients * per_client) as f64 / t.elapsed().as_secs_f64().max(1e-9))
+        };
+        let cold_rps = round("cold")?;
+        let warm_rps = round("warm")?;
+
+        let mut cl = Client::connect(&addr)?;
+        cl.shutdown(-9)?;
+        drop(cl);
+        daemon
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve bench: daemon panicked"))?
+            .context("serve bench: daemon run")?;
+        levels.push(ServeLevel { clients, requests: clients * per_client, cold_rps, warm_rps });
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(ServeBench { startup_cold_secs, startup_warm_secs, levels })
+}
+
 // ---- snapshot JSON + cross-PR comparison ----
 
 /// The machine-readable snapshot (`fames bench --json`).
@@ -511,17 +643,38 @@ pub fn snapshot_json_with_cache(
     doc
 }
 
-/// [`snapshot_json_with_cache`] plus the per-kernel timing section and a
-/// snapshot of the process-wide kernel invocation counters (non-zero
-/// counters prove the fused paths were exercised by the bench pipeline —
-/// the CI bench lane asserts exactly that).
+/// [`snapshot_json_with_cache`] plus the per-kernel timing section, the
+/// serve throughput section, and a snapshot of the process-wide kernel
+/// invocation counters (non-zero counters prove the fused paths were
+/// exercised by the bench pipeline — the CI bench lane asserts exactly
+/// that).
 pub fn snapshot_json_full(
     stages: &[StageResult],
     cache: Option<&CacheBench>,
     kernels: Option<&[KernelBench]>,
+    serve: Option<&ServeBench>,
     cfg: &BenchConfig,
 ) -> Json {
     let mut doc = snapshot_json_with_cache(stages, cache, cfg);
+    if let Some(sb) = serve {
+        let mut arr = Json::arr();
+        for l in &sb.levels {
+            arr.push(
+                Json::obj()
+                    .with("clients", l.clients)
+                    .with("requests", l.requests)
+                    .with("cold_rps", l.cold_rps)
+                    .with("warm_rps", l.warm_rps),
+            );
+        }
+        doc.set(
+            "serve",
+            Json::obj()
+                .with("startup_cold_secs", sb.startup_cold_secs)
+                .with("startup_warm_secs", sb.startup_warm_secs)
+                .with("levels", arr),
+        );
+    }
     if let Some(ks) = kernels {
         let mut arr = Json::arr();
         for k in ks {
@@ -687,7 +840,7 @@ mod tests {
             calls: 8,
         }];
         let cfg = BenchConfig { jobs: 1, quick: true };
-        let j = snapshot_json_full(&stages, None, Some(&kernels), &cfg);
+        let j = snapshot_json_full(&stages, None, Some(&kernels), None, &cfg);
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), SCHEMA);
         let karr = j.get("kernels").unwrap().as_arr().unwrap();
         assert_eq!(karr.len(), 1);
@@ -699,6 +852,30 @@ mod tests {
         }
         // the plain snapshots stay shaped as before (no kernels key)
         assert!(snapshot_json(&stages, &cfg).opt("kernels").is_none());
+    }
+
+    #[test]
+    fn serve_section_is_additive_and_shaped() {
+        let stages = vec![StageResult {
+            name: "library_generation",
+            serial_secs: 1.0,
+            parallel_secs: 0.5,
+        }];
+        let cfg = BenchConfig { jobs: 1, quick: true };
+        let sb = ServeBench {
+            startup_cold_secs: 2.0,
+            startup_warm_secs: 0.4,
+            levels: vec![ServeLevel { clients: 8, requests: 16, cold_rps: 40.0, warm_rps: 80.0 }],
+        };
+        let j = snapshot_json_full(&stages, None, None, Some(&sb), &cfg);
+        let s = j.get("serve").unwrap();
+        assert_eq!(s.get("startup_cold_secs").unwrap().as_f64().unwrap(), 2.0);
+        let levels = s.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(levels[0].get("clients").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(levels[0].get("warm_rps").unwrap().as_f64().unwrap(), 80.0);
+        assert_eq!(sb.levels[0].speedup(), 2.0);
+        // the plain snapshot has no serve section
+        assert!(snapshot_json(&stages, &cfg).opt("serve").is_none());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   bench       serial-vs-parallel + cold-vs-warm perf snapshot
 //!               (`--json` for machines, `--compare` to diff snapshots)
 //!   cache       artifact-store maintenance (ls | stat | gc)
+//!   serve       long-running batched evaluation daemon (NDJSON over TCP)
 //!   experiment  reproduce a paper table/figure (table2|table3|table4|
 //!               fig2|fig3|fig4|fig5ab|fig5c|all)
 //!   help        this text
@@ -45,6 +46,12 @@ COMMANDS
                 --compare=OLD.json [vs=NEW.json] to diff snapshots)
   cache        artifact-store maintenance: cache ls | stat | gc
                (honors artifacts=, --cache-dir; gc removes every entry)
+  serve        long-running evaluation daemon: newline-delimited JSON over
+               TCP (ops: evaluate | energy | select | status | shutdown)
+               (addr=127.0.0.1:4271  models=<model>/<cfg>[,...]
+                max_batch=16, plus the common keys below; concurrent
+                requests are batched into parallel waves and answers are
+                bit-identical to direct Session calls at every jobs=)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
                fig5c | all   (writes results/<id>.csv)
   help         this text
@@ -83,6 +90,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "bits" => cmd_bits(rest),
         "bench" => cmd_bench(rest),
         "cache" => cmd_cache(rest),
+        "serve" => cmd_serve(rest),
         "experiment" => crate::experiments::run_cli(rest),
         other => {
             eprintln!("unknown command '{other}'\n\n{HELP}");
@@ -326,7 +334,14 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
     let stages = crate::bench::run_stages(&bcfg)?;
     let cache = crate::bench::run_cache_bench(&bcfg)?;
     let kernels = crate::bench::run_kernel_bench(&bcfg)?;
-    let doc = crate::bench::snapshot_json_full(&stages, Some(&cache), Some(&kernels), &bcfg);
+    let serve = crate::bench::run_serve_bench_full(&bcfg)?;
+    let doc = crate::bench::snapshot_json_full(
+        &stages,
+        Some(&cache),
+        Some(&kernels),
+        Some(&serve),
+        &bcfg,
+    );
     if let Some(path) = &out {
         doc.save(path)?;
         println!("wrote {path}");
@@ -378,7 +393,77 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             ]);
         }
         kt.print();
+        let mut st = Table::new(
+            format!(
+                "fames serve throughput (startup {} cold / {} warm)",
+                crate::util::fmt_secs(serve.startup_cold_secs),
+                crate::util::fmt_secs(serve.startup_warm_secs)
+            ),
+            &["clients", "requests", "cold req/s", "warm req/s", "warm/cold"],
+        );
+        for l in &serve.levels {
+            st.row(vec![
+                l.clients.to_string(),
+                l.requests.to_string(),
+                format!("{:.1}", l.cold_rps),
+                format!("{:.1}", l.warm_rps),
+                format!("{:.2}×", l.speedup()),
+            ]);
+        }
+        st.print();
     }
+    Ok(0)
+}
+
+fn cmd_serve(args: &[String]) -> Result<i32> {
+    let mut addr = "127.0.0.1:4271".to_string();
+    let mut models: Option<Vec<String>> = None;
+    let mut max_batch = 16usize;
+    let mut kv = Vec::new();
+    for a in args {
+        match a.strip_prefix("--").unwrap_or(a.as_str()).split_once('=') {
+            Some(("addr", v)) => addr = v.to_string(),
+            Some(("models", v)) => {
+                models = Some(v.split(',').map(|s| s.trim().to_string()).collect())
+            }
+            Some(("max_batch", v)) | Some(("max-batch", v)) => {
+                max_batch = v.parse().context("max_batch")?
+            }
+            _ => kv.push(a.clone()),
+        }
+    }
+    let base = base_config(&kv)?;
+    let models = models.unwrap_or_else(|| vec![format!("{}/{}", base.model, base.cfg)]);
+    let scfg = crate::serve::ServeConfig { addr, models, max_batch, base };
+    println!("== fames serve ({}) ==", crate::serve::PROTOCOL);
+    let server = crate::serve::Server::bind(&scfg)?;
+    let mut t = Table::new("models", &["key", "layers", "warm (s)", "library"]);
+    // bind() warmed every entry; show what startup cost and whether the
+    // artifact store paid off
+    let shared_addr = server.local_addr();
+    {
+        let reg = server.registry();
+        for e in reg.entries() {
+            t.row(vec![
+                e.key.clone(),
+                e.session.art.manifest.layers.len().to_string(),
+                f3(e.warm_secs),
+                match e.lib_hit {
+                    Some(true) => "hit".into(),
+                    Some(false) => "miss".into(),
+                    None => "off".into(),
+                },
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "listening on {shared_addr} (max_batch {max_batch}, jobs {}) — send \
+         {{\"id\":0,\"op\":\"shutdown\"}} to stop",
+        par::effective_jobs(scfg.base.jobs)
+    );
+    server.run()?;
+    println!("fames serve: drained and stopped");
     Ok(0)
 }
 

@@ -7,7 +7,7 @@
 //!   paper's "Reduced Energy" column are relative to this;
 //! * the **8×8 exact baseline model** — Table III's "Relative Energy" column.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::appmul::{AppMul, Library};
 use crate::runtime::{LayerInfo, Manifest};
@@ -66,13 +66,32 @@ impl<'a> EnergyModel<'a> {
     }
 
     /// Ratio of an assignment to the exact same-bitwidth model.
+    ///
+    /// Errors when the reference energy is zero or non-finite (empty layer
+    /// manifest, zero `mults_per_image`) — silently dividing used to yield
+    /// NaN ratios that flowed straight into the solver orderings.
     pub fn ratio_vs_exact(&self, selection: &[&AppMul]) -> Result<f64> {
-        Ok(self.model_energy(selection) / self.model_energy_exact()?)
+        let denom = self.model_energy_exact()?;
+        ensure!(
+            denom > 0.0 && denom.is_finite(),
+            "exact same-bitwidth model energy is {denom} \
+             (empty layer manifest or zero mults_per_image) — ratio undefined"
+        );
+        Ok(self.model_energy(selection) / denom)
     }
 
     /// Ratio of an assignment to the 8×8 exact baseline (Table III column).
+    ///
+    /// Errors when the baseline energy is zero or non-finite, like
+    /// [`EnergyModel::ratio_vs_exact`].
     pub fn ratio_vs_8bit(&self, selection: &[&AppMul]) -> Result<f64> {
-        Ok(self.model_energy(selection) / self.model_energy_8bit_baseline()?)
+        let denom = self.model_energy_8bit_baseline()?;
+        ensure!(
+            denom > 0.0 && denom.is_finite(),
+            "8×8 exact baseline model energy is {denom} \
+             (empty layer manifest or zero mults_per_image) — ratio undefined"
+        );
+        Ok(self.model_energy(selection) / denom)
     }
 }
 
@@ -112,6 +131,41 @@ mod tests {
         let exact = lib.exact(4, 4).unwrap();
         let want = exact.pdp * (13824.0 + 36864.0);
         assert!((em.model_energy_exact().unwrap() - want).abs() < 1e-9);
+    }
+
+    fn zero_energy_manifest() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(
+                r#"{
+              "model":"m","cfg":"w4a4","num_classes":10,
+              "image_shape":[3,8,8],"train_batch":4,"eval_batch":4,
+              "layers":[
+                {"name":"c0","index":0,"w_bits":4,"a_bits":4,"in_ch":3,"out_ch":8,
+                 "kernel":[3,3],"stride":1,"in_hw":[8,8],"out_hw":[8,8],
+                 "e_rows":16,"e_cols":16,"mults_per_image":0}],
+              "params":[],"opt_state":[],"executables":{}
+            }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn zero_energy_denominator_is_an_error_not_nan() {
+        // regression: a zero-mults manifest used to yield silent NaN ratios
+        let lib = generate_library(&[(4, 4), (8, 8)], 0);
+        let m = zero_energy_manifest();
+        let em = EnergyModel::new(&m, &lib);
+        let exact = lib.exact(4, 4).unwrap();
+        let sel = vec![exact];
+        let err = em.ratio_vs_exact(&sel).unwrap_err();
+        assert!(format!("{err:#}").contains("ratio undefined"), "{err:#}");
+        let err = em.ratio_vs_8bit(&sel).unwrap_err();
+        assert!(format!("{err:#}").contains("ratio undefined"), "{err:#}");
+        // absolute energies still compute (they are well-defined zeros)
+        assert_eq!(em.model_energy_exact().unwrap(), 0.0);
+        assert_eq!(em.model_energy(&sel), 0.0);
     }
 
     #[test]

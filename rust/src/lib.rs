@@ -50,6 +50,17 @@
 //! (`tests/kernel_equivalence.rs`), and `fames bench --json` embeds
 //! per-kernel timings plus invocation counters.
 //!
+//! # Serving
+//!
+//! `fames serve` ([`serve`]) runs the system as a long-lived daemon: a
+//! dependency-free TCP listener answers newline-delimited JSON requests
+//! (`evaluate` / `energy` / `select` / `status` / `shutdown`) against N
+//! warmed model sessions, batching concurrent requests into `util::par`
+//! waves over the fused kernel paths. Responses are **bit-identical to the
+//! equivalent direct [`pipeline::Session`] calls** at every worker count
+//! (`tests/serve_smoke.rs`); `fames bench` reports serve throughput at
+//! 1/8/64 concurrent clients.
+//!
 //! # Incremental runs
 //!
 //! The pipeline is an explicit stage graph ([`pipeline::stages`]) whose
@@ -81,6 +92,7 @@ pub mod rng;
 pub mod runtime;
 pub mod select;
 pub mod sensitivity;
+pub mod serve;
 pub mod store;
 pub mod tensor;
 pub mod train;

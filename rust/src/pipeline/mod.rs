@@ -175,6 +175,21 @@ pub fn ensure_trained(session: &mut Session, cfg: &FamesConfig) -> Result<f64> {
     Ok(dt)
 }
 
+/// Open a session ready to answer evaluation requests: worker count set,
+/// parameters loaded from the per-model cache (or pre-trained into it),
+/// activation ranges initialized — exactly the state the pipeline
+/// establishes before its first evaluation. This is the serving layer's
+/// per-model warm-up ([`crate::serve::Registry`] calls it once per
+/// configured model), and the reference state for the serve smoke test's
+/// bit-identity diffs.
+pub fn warm_session(rt: Arc<Runtime>, cfg: &FamesConfig) -> Result<Session> {
+    let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
+    session.jobs = cfg.jobs;
+    ensure_trained(&mut session, cfg)?;
+    session.init_act_ranges()?;
+    Ok(session)
+}
+
 /// Build the MCKP instance from a precomputed Ω table and solve it.
 /// Table rows must align with `library.for_bits(...)` ordering (they do
 /// when built by `sensitivity::estimate_table`).

@@ -15,21 +15,43 @@ use crate::tensor::TensorStore;
 
 /// Asymmetric uniform quantization of a slice to `bits`; returns the MSE
 /// (the sensitivity proxy) and the scale used.
+///
+/// Non-finite weights (NaN/±∞ from a poisoned checkpoint) are excluded
+/// from both the range fold and the MSE average — previously a single NaN
+/// left `lo = f32::MAX` / `hi = f32::MIN` and produced a garbage negative
+/// range. A slice with **no** finite weight returns the sentinel
+/// `(f64::INFINITY, 1.0)`: downstream the infinite MSE makes every MCKP
+/// choice built from it infeasible (see the `select` module's
+/// NaN-as-infeasible contract), so a poisoned layer can never be picked.
 pub fn quantize_mse(w: &[f32], bits: u32) -> (f64, f32) {
     if w.is_empty() {
         return (0.0, 1.0);
     }
-    let lo = w.iter().cloned().fold(f32::MAX, f32::min);
-    let hi = w.iter().cloned().fold(f32::MIN, f32::max);
+    let mut lo = f32::MAX;
+    let mut hi = f32::MIN;
+    let mut n_finite = 0usize;
+    for &v in w {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+            n_finite += 1;
+        }
+    }
+    if n_finite == 0 {
+        return (f64::INFINITY, 1.0);
+    }
     let levels = ((1u64 << bits) - 1) as f32;
     let s = ((hi - lo) / levels).max(1e-12);
     let mut mse = 0.0f64;
     for &v in w {
+        if !v.is_finite() {
+            continue;
+        }
         let code = ((v - lo) / s).round().clamp(0.0, levels);
         let deq = s * code + lo;
         mse += ((v - deq) as f64).powi(2);
     }
-    (mse / w.len() as f64, s)
+    (mse / n_finite as f64, s)
 }
 
 /// One proposed per-layer bitwidth assignment.
@@ -104,5 +126,43 @@ mod tests {
         let (mse, s) = quantize_mse(&w, 2);
         assert!(mse < 1e-12);
         assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_slice_has_zero_mse_and_positive_scale() {
+        let w = [0.75f32; 64];
+        let (mse, s) = quantize_mse(&w, 4);
+        assert!(mse < 1e-12, "constant slice must quantize losslessly (mse {mse})");
+        assert!(s > 0.0 && s.is_finite());
+    }
+
+    #[test]
+    fn nan_poisoned_slice_matches_its_finite_subset() {
+        let clean: Vec<f32> = (0..100).map(|i| (i as f32) / 33.0 - 1.5).collect();
+        let mut poisoned = clean.clone();
+        poisoned[7] = f32::NAN;
+        poisoned[50] = f32::INFINITY;
+        poisoned[93] = f32::NEG_INFINITY;
+        let finite: Vec<f32> = poisoned.iter().cloned().filter(|v| v.is_finite()).collect();
+        let (want_mse, want_s) = quantize_mse(&finite, 3);
+        let (mse, s) = quantize_mse(&poisoned, 3);
+        assert!(mse.is_finite() && mse >= 0.0, "poisoned slice gave mse {mse}");
+        assert_eq!(mse.to_bits(), want_mse.to_bits());
+        assert_eq!(s.to_bits(), want_s.to_bits());
+    }
+
+    #[test]
+    fn all_non_finite_slice_returns_infeasible_sentinel() {
+        for w in [
+            vec![f32::NAN; 8],
+            vec![f32::INFINITY; 8],
+            vec![f32::NEG_INFINITY, f32::INFINITY, f32::NAN],
+        ] {
+            let (mse, s) = quantize_mse(&w, 4);
+            assert!(mse.is_infinite() && mse > 0.0, "want +inf sentinel, got {mse}");
+            assert_eq!(s, 1.0);
+        }
+        // empty stays a harmless zero (no weights ⇒ nothing to quantize)
+        assert_eq!(quantize_mse(&[], 4), (0.0, 1.0));
     }
 }

@@ -173,6 +173,20 @@ impl Runtime {
             .map(|(p, e)| (p.clone(), e.stats()))
             .collect()
     }
+
+    /// Summed stats across every cached executable — the serving layer's
+    /// cheap health metric (`fames serve`'s `status` response).
+    pub fn total_stats(&self) -> ExecStats {
+        let cache = self.cache.lock().unwrap();
+        let mut agg = ExecStats::default();
+        for e in cache.values() {
+            let s = e.stats();
+            agg.calls += s.calls;
+            agg.total_secs += s.total_secs;
+            agg.compile_secs += s.compile_secs;
+        }
+        agg
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +236,9 @@ mod tests {
         let out = exe.run(&inputs).unwrap();
         assert_eq!(out.len(), m.layers.len());
         assert_eq!(exe.stats().calls, 1);
+        let agg = rt.total_stats();
+        assert_eq!(agg.calls, 1, "aggregate must see the one run");
+        assert!(agg.total_secs >= 0.0);
         let _ = std::fs::remove_dir_all(&root);
     }
 

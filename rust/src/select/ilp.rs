@@ -19,6 +19,20 @@
 //! Values may be negative (an AppMul can *reduce* estimated loss); costs are
 //! non-negative energies. A greedy heuristic (`solve_greedy`) provides the
 //! incumbent and a fallback, and is also used by the ablation benches.
+//!
+//! # NaN / ∞ contract
+//!
+//! At 2-bit widths the error-model-driven Ω estimates can be NaN (poisoned
+//! estimation rows propagate NaN losses by design since the kernel-layer
+//! PR). The solvers treat any candidate with a non-finite value or cost as
+//! **infeasible — never selected, never a panic**: poisoned candidates are
+//! excluded from the greedy picks, the dominance filter, the convex hull,
+//! the LP bound and the branch-and-bound DFS, so the solution over a
+//! poisoned problem equals the solution over the same problem with those
+//! candidates removed. Every float ordering goes through [`f64::total_cmp`].
+//! A layer whose candidates are *all* poisoned makes the problem
+//! infeasible, which is reported as an `Err` (the old code panicked inside
+//! `partial_cmp().unwrap()` on the first NaN instead).
 
 use anyhow::{bail, Result};
 
@@ -42,6 +56,13 @@ pub struct Solution {
     pub optimal: bool,
     /// Search statistics (nodes expanded).
     pub nodes: u64,
+}
+
+/// A candidate is selectable only when both coordinates are finite; NaN/∞
+/// entries (poisoned Ω estimates, overflowed PDP costs) are skipped by
+/// every solver below instead of panicking inside a float comparison.
+fn feasible(c: &Choice) -> bool {
+    c.cost.is_finite() && c.value.is_finite()
 }
 
 fn totals(problem: &[Vec<Choice>], picks: &[usize]) -> (f64, f64) {
@@ -70,15 +91,16 @@ fn totals(problem: &[Vec<Choice>], picks: &[usize]) -> (f64, f64) {
 /// assert!(s.total_cost <= 2.0);
 /// ```
 pub fn solve_greedy(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
-    validate(problem)?;
+    validate(problem, budget)?;
     let mut picks: Vec<usize> = problem
         .iter()
         .map(|layer| {
             layer
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.value.partial_cmp(&b.1.value).unwrap())
-                .unwrap()
+                .filter(|(_, c)| feasible(c))
+                .min_by(|a, b| a.1.value.total_cmp(&b.1.value))
+                .expect("validate guarantees a feasible choice per layer")
                 .0
         })
         .collect();
@@ -97,7 +119,7 @@ pub fn solve_greedy(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
         for (k, layer) in problem.iter().enumerate() {
             let cur = layer[picks[k]];
             for (i, ch) in layer.iter().enumerate() {
-                if ch.cost >= cur.cost {
+                if !feasible(ch) || ch.cost >= cur.cost {
                     continue;
                 }
                 let dv = ch.value - cur.value; // ≥ usually
@@ -140,23 +162,19 @@ struct Hull {
 }
 
 /// Dominance filter + lower convex hull (in cost-value plane, value
-/// decreasing with cost).
+/// decreasing with cost). NaN/∞ candidates never enter the hull.
 fn lower_hull(layer: &[Choice]) -> Vec<Hull> {
     let mut pts: Vec<Hull> = layer
         .iter()
         .enumerate()
+        .filter(|(_, c)| feasible(c))
         .map(|(i, c)| Hull {
             orig: i,
             cost: c.cost,
             value: c.value,
         })
         .collect();
-    pts.sort_by(|a, b| {
-        a.cost
-            .partial_cmp(&b.cost)
-            .unwrap()
-            .then(a.value.partial_cmp(&b.value).unwrap())
-    });
+    pts.sort_by(|a, b| a.cost.total_cmp(&b.cost).then(a.value.total_cmp(&b.value)));
     // dominance: keep strictly decreasing value as cost increases
     let mut dom: Vec<Hull> = Vec::new();
     for p in pts {
@@ -206,7 +224,7 @@ fn lp_bound(hulls: &[Vec<Hull>], from: usize, slack: f64) -> f64 {
     if rem < 0.0 {
         return f64::INFINITY; // infeasible even at cheapest
     }
-    segs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap()); // most negative first
+    segs.sort_by(|a, b| a.0.total_cmp(&b.0)); // most negative first
     for (slope, dc) in segs {
         if rem <= 0.0 {
             break;
@@ -220,7 +238,7 @@ fn lp_bound(hulls: &[Vec<Hull>], from: usize, slack: f64) -> f64 {
 
 /// Exact branch-and-bound MCKP solve.
 pub fn solve_exact(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
-    validate(problem)?;
+    validate(problem, budget)?;
     // incumbent from greedy (if feasible)
     let mut best_value = f64::INFINITY;
     let mut best_picks: Option<Vec<usize>> = None;
@@ -246,13 +264,14 @@ pub fn solve_exact(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
             let mut pts: Vec<Hull> = problem[k]
                 .iter()
                 .enumerate()
+                .filter(|(_, c)| feasible(c))
                 .map(|(i, c)| Hull {
                     orig: i,
                     cost: c.cost,
                     value: c.value,
                 })
                 .collect();
-            pts.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+            pts.sort_by(|a, b| a.cost.total_cmp(&b.cost));
             let mut keep: Vec<Hull> = Vec::new();
             for p in pts {
                 if keep.last().map_or(true, |l| p.value < l.value) {
@@ -352,6 +371,9 @@ pub fn solve_exact(problem: &[Vec<Choice>], budget: f64) -> Result<Solution> {
 
 /// Brute-force reference (tests/benches only; exponential).
 pub fn solve_brute(problem: &[Vec<Choice>], budget: f64) -> Option<Solution> {
+    if budget.is_nan() {
+        return None; // same rejection the real solvers report as Err
+    }
     let mut best: Option<(f64, Vec<usize>)> = None;
     let mut picks = vec![0usize; problem.len()];
     fn rec(
@@ -373,6 +395,9 @@ pub fn solve_brute(problem: &[Vec<Choice>], budget: f64) -> Option<Solution> {
             return;
         }
         for i in 0..problem[k].len() {
+            if !feasible(&problem[k][i]) {
+                continue; // same NaN-as-infeasible contract as the real solvers
+            }
             picks[k] = i;
             rec(
                 k + 1,
@@ -398,7 +423,13 @@ pub fn solve_brute(problem: &[Vec<Choice>], budget: f64) -> Option<Solution> {
     })
 }
 
-fn validate(problem: &[Vec<Choice>]) -> Result<()> {
+fn validate(problem: &[Vec<Choice>], budget: f64) -> Result<()> {
+    // a NaN budget would make every cost-vs-budget comparison false and
+    // silently disable the constraint (greedy would return its
+    // unconstrained picks, the DFS its unconstrained optimum)
+    if budget.is_nan() {
+        bail!("budget is NaN — the energy constraint would be silently ignored");
+    }
     if problem.is_empty() {
         bail!("empty problem");
     }
@@ -407,9 +438,14 @@ fn validate(problem: &[Vec<Choice>]) -> Result<()> {
             bail!("layer {k} has no choices");
         }
         for c in layer {
-            if c.cost < 0.0 || !c.cost.is_finite() || !c.value.is_finite() {
+            // a *finite* negative cost is malformed input; non-finite
+            // entries are merely infeasible candidates (handled below)
+            if c.cost < 0.0 && c.cost.is_finite() {
                 bail!("layer {k}: invalid choice {c:?}");
             }
+        }
+        if !layer.iter().any(feasible) {
+            bail!("layer {k}: every choice is NaN/∞-poisoned — no feasible candidate");
         }
     }
     Ok(())
@@ -548,6 +584,117 @@ mod tests {
         assert!(solve_exact(&[vec![]], 1.0).is_err());
         let bad = vec![vec![Choice { cost: -1.0, value: 0.0 }]];
         assert!(solve_exact(&bad, 1.0).is_err());
+    }
+
+    #[test]
+    fn nan_budget_is_rejected_not_silently_unconstrained() {
+        // NaN compares false with everything, so an unchecked NaN budget
+        // would disable the knapsack constraint entirely
+        let problem =
+            vec![vec![Choice { cost: 5.0, value: 0.0 }, Choice { cost: 1.0, value: 3.0 }]];
+        assert!(solve_exact(&problem, f64::NAN).is_err());
+        assert!(solve_greedy(&problem, f64::NAN).is_err());
+        assert!(solve_brute(&problem, f64::NAN).is_none());
+        // +inf stays a legal "unconstrained" budget
+        let s = solve_exact(&problem, f64::INFINITY).unwrap();
+        assert_eq!(s.picks, vec![0]);
+    }
+
+    #[test]
+    fn nan_candidates_are_excluded_not_panicked_on() {
+        // poisoning random candidates must be equivalent to deleting them
+        for seed in 200..240u64 {
+            let mut rng = Pcg::seeded(seed);
+            let layers = 2 + rng.below(3);
+            let choices = 3 + rng.below(4);
+            let mut problem = random_problem(&mut rng, layers, choices);
+            let mut clean: Vec<Vec<Choice>> = Vec::new();
+            for layer in problem.iter_mut() {
+                let mut kept = Vec::new();
+                for (i, c) in layer.iter_mut().enumerate() {
+                    // poison ~1/3 of the candidates, alternating NaN Ω and
+                    // NaN/∞ PDP cost; candidate 0 always stays feasible so
+                    // no layer ends up fully poisoned
+                    if i > 0 && rng.chance(0.33) {
+                        match rng.below(3) {
+                            0 => c.value = f64::NAN,
+                            1 => c.cost = f64::NAN,
+                            _ => c.cost = f64::INFINITY,
+                        }
+                    } else {
+                        kept.push(*c);
+                    }
+                }
+                clean.push(kept);
+            }
+            let min_cost: f64 = clean
+                .iter()
+                .map(|l| l.iter().map(|c| c.cost).fold(f64::MAX, f64::min))
+                .sum();
+            let budget = min_cost * 1.7;
+            let poisoned_g = solve_greedy(&problem, budget).unwrap();
+            let clean_g = solve_greedy(&clean, budget).unwrap();
+            assert_eq!(poisoned_g.total_value, clean_g.total_value, "greedy seed {seed}");
+            let poisoned_e = solve_exact(&problem, budget).unwrap();
+            let clean_e = solve_exact(&clean, budget).unwrap();
+            assert!(
+                (poisoned_e.total_value - clean_e.total_value).abs() < 1e-9,
+                "exact seed {seed}: {} vs {}",
+                poisoned_e.total_value,
+                clean_e.total_value
+            );
+            // the chosen candidates themselves must be finite
+            for (k, &i) in poisoned_e.picks.iter().enumerate() {
+                let c = problem[k][i];
+                assert!(c.cost.is_finite() && c.value.is_finite(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn fully_poisoned_layer_is_infeasible_not_a_panic() {
+        let problem = vec![
+            vec![Choice { cost: 1.0, value: 0.5 }],
+            vec![
+                Choice { cost: f64::NAN, value: 0.0 },
+                Choice { cost: 1.0, value: f64::NAN },
+                Choice { cost: f64::INFINITY, value: 0.0 },
+            ],
+        ];
+        let err = solve_exact(&problem, 100.0).unwrap_err();
+        assert!(format!("{err:#}").contains("poisoned"), "{err:#}");
+        assert!(solve_greedy(&problem, 100.0).is_err());
+    }
+
+    #[test]
+    fn nan_poisoned_exact_still_matches_brute_force() {
+        for seed in 300..330u64 {
+            let mut rng = Pcg::seeded(seed);
+            let layers = 1 + rng.below(3);
+            let choices = 2 + rng.below(4);
+            let mut problem = random_problem(&mut rng, layers, choices);
+            for layer in problem.iter_mut() {
+                // one poisoned candidate per layer (keeps the rest feasible)
+                layer.push(Choice { cost: 0.01, value: f64::NAN });
+            }
+            let min_cost: f64 = problem
+                .iter()
+                .map(|l| {
+                    l.iter()
+                        .filter(|c| c.cost.is_finite() && c.value.is_finite())
+                        .map(|c| c.cost)
+                        .fold(f64::MAX, f64::min)
+                })
+                .sum();
+            let budget = min_cost * rng.range_f64(1.0, 2.0);
+            match (solve_brute(&problem, budget), solve_exact(&problem, budget)) {
+                (Some(w), Ok(g)) => {
+                    assert!((g.total_value - w.total_value).abs() < 1e-9, "seed {seed}");
+                }
+                (None, Err(_)) => {}
+                (w, g) => panic!("seed {seed}: feasibility mismatch {w:?} vs {g:?}"),
+            }
+        }
     }
 
     #[test]

@@ -6,6 +6,24 @@
 //!   Table II / Fig. 3 comparisons;
 //! * uniform selection (same AppMul index everywhere) lives in the
 //!   experiment drivers (Fig. 5(a,b) baseline).
+//!
+//! # NaN-as-infeasible contract
+//!
+//! Poisoned inputs are a first-class signal in this repo (NaN losses from
+//! poisoned rows, NaN Ω estimates at extreme bitwidths), and the selection
+//! layer is the sink where they all arrive. Both solvers share one
+//! contract, pinned by `tests/select_robustness.rs`:
+//!
+//! * a candidate with a non-finite Ω value or PDP cost is **infeasible**:
+//!   it is never selected, and the solution equals the solution of the
+//!   same problem with that candidate deleted;
+//! * an NSGA-II individual with a non-finite objective sorts into a
+//!   synthetic last front and cannot enter the returned Pareto front while
+//!   any finite individual exists;
+//! * all float orderings use [`f64::total_cmp`] — no
+//!   `partial_cmp().unwrap()` panics anywhere in the select path;
+//! * only a layer whose candidates are *all* poisoned turns into an
+//!   `Err` (the problem is genuinely infeasible).
 
 pub mod ilp;
 pub mod nsga;

@@ -58,21 +58,40 @@ pub fn dominates(a: Objectives, b: Objectives) -> bool {
     (a.0 <= b.0 && a.1 <= b.1) && (a.0 < b.0 || a.1 < b.1)
 }
 
+/// Both objectives are finite (a NaN/∞ objective marks a poisoned
+/// evaluation — e.g. a NaN loss from a poisoned estimation batch).
+fn finite(o: Objectives) -> bool {
+    o.0.is_finite() && o.1.is_finite()
+}
+
 /// Fast non-dominated sort: returns front index per individual (0 = best).
+///
+/// Individuals with a NaN/∞ objective are **infeasible**: NaN compares
+/// false against everything, so under plain Pareto dominance a poisoned
+/// individual would be "non-dominated" and pollute front 0. Instead they
+/// are all assigned one synthetic *last* front (after every finite front),
+/// which makes environmental selection and tournament picks treat them as
+/// strictly worst — they can only survive when the whole population is
+/// poisoned.
 pub fn non_dominated_sort(objs: &[Objectives]) -> Vec<usize> {
     let n = objs.len();
     let mut dominated_by = vec![0usize; n];
     let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
     for i in 0..n {
+        if !finite(objs[i]) {
+            continue;
+        }
         for j in 0..n {
-            if i != j && dominates(objs[i], objs[j]) {
+            if i != j && finite(objs[j]) && dominates(objs[i], objs[j]) {
                 dominates_list[i].push(j);
                 dominated_by[j] += 1;
             }
         }
     }
     let mut front = vec![usize::MAX; n];
-    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut current: Vec<usize> = (0..n)
+        .filter(|&i| finite(objs[i]) && dominated_by[i] == 0)
+        .collect();
     let mut f = 0;
     while !current.is_empty() {
         let mut next = Vec::new();
@@ -88,6 +107,12 @@ pub fn non_dominated_sort(objs: &[Objectives]) -> Vec<usize> {
         current = next;
         f += 1;
     }
+    // every poisoned individual lands in one shared last front
+    for (i, o) in objs.iter().enumerate() {
+        if !finite(*o) {
+            front[i] = f;
+        }
+    }
     front
 }
 
@@ -101,7 +126,9 @@ pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
     for obj_idx in 0..2 {
         let get = |i: usize| if obj_idx == 0 { objs[front[i]].0 } else { objs[front[i]].1 };
         let mut order: Vec<usize> = (0..m).collect();
-        order.sort_by(|&a, &b| get(a).partial_cmp(&get(b)).unwrap());
+        // total_cmp: a NaN objective inside a (fully poisoned) front must
+        // sort deterministically, not panic
+        order.sort_by(|&a, &b| get(a).total_cmp(&get(b)));
         dist[order[0]] = f64::INFINITY;
         dist[order[m - 1]] = f64::INFINITY;
         let span = (get(order[m - 1]) - get(order[0])).max(1e-12);
@@ -118,6 +145,10 @@ pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
 /// must be a pure function of the genome.
 /// Returns the final population's first Pareto front, plus the number of
 /// fitness evaluations spent (the Table II runtime driver).
+///
+/// Genomes whose fitness comes back NaN/∞ are treated as infeasible (see
+/// [`non_dominated_sort`]): they are never part of the returned front
+/// unless *every* individual of the final population is poisoned.
 pub fn run<F: Fn(&Genome) -> Objectives + Sync>(
     n_choices: &[usize],
     cfg: &NsgaConfig,
@@ -197,7 +228,7 @@ pub fn run<F: Fn(&Genome) -> Objectives + Sync>(
             } else {
                 let dist = crowding_distance(&objs, &members);
                 let mut order: Vec<usize> = (0..members.len()).collect();
-                order.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+                order.sort_by(|&a, &b| dist[b].total_cmp(&dist[a]));
                 for &w in &order {
                     if new_pop.len() >= cfg.population {
                         break;
@@ -244,6 +275,62 @@ mod tests {
         assert_eq!(fronts[2], 0);
         assert_eq!(fronts[4], 1); // dominated by (2,2)
         assert_eq!(fronts[3], 2); // dominated by (3,3) too
+    }
+
+    #[test]
+    fn nan_objectives_sort_into_the_last_front() {
+        let objs = vec![
+            (1.0, 1.0),
+            (f64::NAN, 0.0),
+            (2.0, 2.0),
+            (0.5, f64::INFINITY),
+            (f64::NAN, f64::NAN),
+        ];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts[0], 0);
+        assert_eq!(fronts[2], 1);
+        let last = fronts.iter().max().copied().unwrap();
+        assert!(last >= 2);
+        for &i in &[1usize, 3, 4] {
+            assert_eq!(fronts[i], last, "poisoned individual {i} must be last");
+        }
+    }
+
+    #[test]
+    fn poisoned_genomes_never_reach_the_front() {
+        // fitness is NaN whenever gene 0 is 0 — the returned front must
+        // contain only finite-objective individuals, with no panic anywhere
+        let n_choices = vec![3usize; 4];
+        let cfg = NsgaConfig {
+            population: 12,
+            generations: 6,
+            seed: 5,
+            ..Default::default()
+        };
+        let (front, _) = run(&n_choices, &cfg, |g| {
+            if g[0] == 0 {
+                (f64::NAN, f64::NAN)
+            } else {
+                (g.iter().sum::<usize>() as f64, g[0] as f64)
+            }
+        });
+        assert!(!front.is_empty());
+        for ind in &front {
+            assert!(
+                ind.objectives.0.is_finite() && ind.objectives.1.is_finite(),
+                "poisoned genome {:?} survived into the front",
+                ind.genome
+            );
+            assert_ne!(ind.genome[0], 0);
+        }
+    }
+
+    #[test]
+    fn crowding_distance_tolerates_nan_without_panicking() {
+        let objs = vec![(f64::NAN, 1.0), (1.0, f64::NAN), (2.0, 2.0), (3.0, 1.5)];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&objs, &front);
+        assert_eq!(d.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Request batcher — coalesces concurrent requests into `util::par` waves.
+//!
+//! Connection readers enqueue parsed compute requests ([`Job`]s) into one
+//! shared FIFO; a single dispatcher thread drains up to `max_batch` jobs at
+//! a time and scores the whole wave through `util::par::par_map`, so N
+//! concurrent clients turn into one fused batched invocation of the kernel
+//! layer per wave (each worker drives the native backend's fused
+//! LUT/GEMM kernels, checking buffers out of the per-executable
+//! `kernel::Scratch` pool). Per-request results are exactly the direct
+//! `Session` call — batching changes *when* a request runs, never *what*
+//! it computes — which is the serving layer's bit-identity guarantee.
+//!
+//! Shutdown drains: `close()` wakes the dispatcher, but `next_wave` keeps
+//! handing out queued jobs until the FIFO is empty, so every accepted
+//! request is answered before the serve loop exits.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+
+use super::codec::Request;
+
+/// One queued compute request plus its connection's outbound line channel.
+pub struct Job {
+    pub request: Request,
+    pub reply: Sender<String>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Shared FIFO + condvar (no external deps; `std` primitives only).
+pub struct Batcher {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    /// Most jobs one wave may carry (CLI `max_batch=`).
+    pub max_batch: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Batcher {
+        Batcher {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Enqueue a job; `false` when the batcher is already closed (the
+    /// caller should answer with a shutting-down error instead).
+    pub fn enqueue(&self, job: Job) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        if q.closed {
+            return false;
+        }
+        q.jobs.push_back(job);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Block until at least one job is queued (or the batcher closes with
+    /// an empty queue — then `None`). Drains up to `max_batch` jobs.
+    pub fn next_wave(&self) -> Option<Vec<Job>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.jobs.is_empty() {
+                let n = q.jobs.len().min(self.max_batch);
+                return Some(q.jobs.drain(..n).collect());
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Stop accepting; queued jobs still drain through `next_wave`.
+    pub fn close(&self) {
+        self.queue.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently queued (the `status` response's queue depth).
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().jobs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::codec::{parse_request, Request};
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn job(id: i64) -> (Job, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let request: Request =
+            parse_request(&format!(r#"{{"id":{id},"op":"status"}}"#)).unwrap();
+        (Job { request, reply: tx }, rx)
+    }
+
+    #[test]
+    fn waves_respect_fifo_order_and_max_batch() {
+        let b = Batcher::new(2);
+        let mut rxs = Vec::new();
+        for id in 0..5 {
+            let (j, rx) = job(id);
+            assert!(b.enqueue(j));
+            rxs.push(rx);
+        }
+        assert_eq!(b.pending(), 5);
+        let ids = |wave: &[Job]| wave.iter().map(|j| j.request.id).collect::<Vec<_>>();
+        assert_eq!(ids(&b.next_wave().unwrap()), vec![0, 1]);
+        assert_eq!(ids(&b.next_wave().unwrap()), vec![2, 3]);
+        assert_eq!(ids(&b.next_wave().unwrap()), vec![4]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn close_drains_queued_jobs_then_ends() {
+        let b = Batcher::new(8);
+        let (j, _rx) = job(1);
+        assert!(b.enqueue(j));
+        b.close();
+        let (j2, _rx2) = job(2);
+        assert!(!b.enqueue(j2), "closed batcher must reject new jobs");
+        assert_eq!(b.next_wave().unwrap().len(), 1, "queued job drains after close");
+        assert!(b.next_wave().is_none(), "empty + closed ends the dispatcher");
+    }
+
+    #[test]
+    fn next_wave_blocks_until_work_arrives() {
+        let b = Arc::new(Batcher::new(4));
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || b2.next_wave().map(|w| w.len()));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let (j, _rx) = job(7);
+        assert!(b.enqueue(j));
+        assert_eq!(waiter.join().unwrap(), Some(1));
+    }
+}

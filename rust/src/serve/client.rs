@@ -1,0 +1,87 @@
+//! Blocking NDJSON client for `fames serve` — used by the smoke tests, the
+//! serve bench, and as the embedding reference implementation.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::json::Json;
+
+/// One connection to a serve daemon.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to fames serve at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().context("cloning client stream")?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Fire one request line without waiting (pipelining).
+    pub fn send(&mut self, req: &Json) -> Result<()> {
+        let mut line = req.compact();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("writing request")
+    }
+
+    /// Read one response line.
+    pub fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading response")?;
+        ensure!(n > 0, "connection closed by server");
+        Json::parse(line.trim()).context("response is not valid JSON")
+    }
+
+    /// One request, one response (single outstanding call).
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Pipeline several requests and return the responses matched back to
+    /// request order by `id` (waves may interleave responses).
+    pub fn call_many(&mut self, reqs: &[Json]) -> Result<Vec<Json>> {
+        for r in reqs {
+            self.send(r)?;
+        }
+        let mut by_id: BTreeMap<i64, Json> = BTreeMap::new();
+        for _ in reqs {
+            let resp = self.recv()?;
+            let id = resp.get("id")?.as_i64()?;
+            by_id.insert(id, resp);
+        }
+        reqs.iter()
+            .map(|r| {
+                let id = r.get("id")?.as_i64()?;
+                by_id.remove(&id).with_context(|| format!("no response for id {id}"))
+            })
+            .collect()
+    }
+
+    /// `result` payload of a successful response; `Err` with the server's
+    /// message on `ok: false`.
+    pub fn expect_ok(resp: &Json) -> Result<&Json> {
+        if resp.get("ok")?.as_bool()? {
+            resp.get("result")
+        } else {
+            anyhow::bail!(
+                "server error (id {}): {}",
+                resp.get("id")?.as_i64().unwrap_or(-1),
+                resp.get("error")?.as_str().unwrap_or("?")
+            )
+        }
+    }
+
+    /// Convenience: request a clean shutdown and return the ack payload.
+    pub fn shutdown(&mut self, id: i64) -> Result<Json> {
+        let resp = self.call(&Json::obj().with("id", id).with("op", "shutdown"))?;
+        Self::expect_ok(&resp).map(|j| j.clone())
+    }
+}

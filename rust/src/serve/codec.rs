@@ -1,0 +1,236 @@
+//! Wire codec for `fames serve` — newline-delimited JSON on [`Json`].
+//!
+//! One request object per line, one response object per line. Every request
+//! carries a caller-chosen integer `id` which the response echoes, so
+//! responses can stream back in any order (the batcher answers whole waves;
+//! a pipelined connection may interleave waves).
+//!
+//! ```text
+//! → {"id":1,"op":"evaluate","model":"resnet8/w4a4","batches":2}
+//! ← {"id":1,"ok":true,"result":{"accuracy":0.53125,"loss":1.73,"samples":128}}
+//! → {"id":2,"op":"oops"}
+//! ← {"id":2,"ok":false,"error":"unknown op 'oops'"}
+//! ```
+//!
+//! Floats cross the wire through the crate's JSON writer, which round-trips
+//! every **finite** f64 bit-exactly — that is what makes the serve smoke
+//! test's "responses == direct `Session` calls" diffs exact string
+//! comparisons. JSON has no NaN, so non-finite numbers serialize as `null`;
+//! symmetrically, a `null` inside an `omega` row parses back as `f64::NAN`
+//! (poisoned Ω entries survive the wire and hit the solvers' NaN-as-
+//! infeasible contract instead of a parse error).
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::pipeline::EvalResult;
+use crate::select::Solution;
+
+/// Protocol tag reported by `status`.
+pub const PROTOCOL: &str = "fames-serve-v1";
+
+/// A parsed request body.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Evaluate `batches` held-out eval batches (server-side cap:
+    /// `serve::MAX_EVAL_BATCHES`); with `selection`, under an explicit
+    /// per-layer AppMul pick (indices into `Library::for_bits` order) via
+    /// the non-mutating `Session::evaluate_with`.
+    Evaluate {
+        batches: usize,
+        selection: Option<Vec<usize>>,
+    },
+    /// Energy of a per-layer AppMul selection: absolute PDP·mults plus the
+    /// ratios vs the exact same-bitwidth model and the 8×8 baseline.
+    Energy { selection: Vec<usize> },
+    /// Solve the MCKP over a caller-provided Ω table (rows aligned with
+    /// `Library::for_bits` order) under `r_energy` × exact-model energy.
+    Select { r_energy: f64, omega: Vec<Vec<f64>> },
+    /// Server health: loaded models, request counters, queue depth.
+    Status,
+    /// Stop accepting, drain the queue, exit the serve loop.
+    Shutdown,
+}
+
+/// One wire request: `id` (echoed), optional model routing key, op.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: i64,
+    /// `<model>/<cfg>` routing key; may be omitted when exactly one model
+    /// is loaded.
+    pub model: Option<String>,
+    pub op: Op,
+}
+
+/// Parse one request line. The `id` is extracted first and leniently so
+/// that even a malformed body can be answered with the right echo
+/// ([`request_id`] is the fallback used by the connection loop).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line).context("request is not valid JSON")?;
+    let id = j.get("id").and_then(|v| v.as_i64()).context("request needs an integer 'id'")?;
+    let model = match j.opt("model") {
+        Some(m) => Some(m.as_str().context("'model' must be a string")?.to_string()),
+        None => None,
+    };
+    let op = match j.get("op")?.as_str().context("'op' must be a string")? {
+        "evaluate" => Op::Evaluate {
+            batches: match j.opt("batches") {
+                Some(b) => b.as_usize().context("'batches'")?,
+                None => 1,
+            },
+            selection: match j.opt("selection") {
+                Some(s) => Some(s.as_usize_vec().context("'selection'")?),
+                None => None,
+            },
+        },
+        "energy" => Op::Energy {
+            selection: j.get("selection")?.as_usize_vec().context("'selection'")?,
+        },
+        "select" => Op::Select {
+            r_energy: j.get("r_energy")?.as_f64().context("'r_energy'")?,
+            omega: j
+                .get("omega")?
+                .as_arr()
+                .context("'omega' must be an array of per-layer rows")?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .context("each omega row must be an array")?
+                        .iter()
+                        .map(omega_entry)
+                        .collect::<Result<Vec<f64>>>()
+                })
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "status" => Op::Status,
+        "shutdown" => Op::Shutdown,
+        other => bail!("unknown op '{other}' (evaluate|energy|select|status|shutdown)"),
+    };
+    Ok(Request { id, model, op })
+}
+
+/// `null` ⇒ NaN (the writer's image of a non-finite float); numbers pass.
+fn omega_entry(v: &Json) -> Result<f64> {
+    match v {
+        Json::Null => Ok(f64::NAN),
+        other => other.as_f64().context("omega entries must be numbers or null"),
+    }
+}
+
+/// Best-effort id extraction from a possibly malformed line, for error
+/// echoes; -1 when there is none to find.
+pub fn request_id(line: &str) -> i64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("id").and_then(|v| v.as_i64()).ok())
+        .unwrap_or(-1)
+}
+
+/// Successful response envelope.
+pub fn ok_response(id: i64, result: Json) -> Json {
+    Json::obj().with("id", id).with("ok", true).with("result", result)
+}
+
+/// Error response envelope.
+pub fn err_response(id: i64, error: &str) -> Json {
+    Json::obj().with("id", id).with("ok", false).with("error", error)
+}
+
+/// Encode an evaluation result. Shared by the server and the smoke test's
+/// direct-`Session` reference side, so bit-identity is a string compare.
+pub fn eval_json(r: &EvalResult) -> Json {
+    Json::obj()
+        .with("loss", r.loss)
+        .with("accuracy", r.accuracy)
+        .with("samples", r.samples)
+}
+
+/// Encode an MCKP solution plus the chosen AppMul name per layer.
+pub fn solution_json(s: &Solution, names: &[String]) -> Json {
+    Json::obj()
+        .with("picks", s.picks.as_slice())
+        .with("names", names.to_vec())
+        .with("total_cost", s.total_cost)
+        .with("total_value", s.total_value)
+        .with("optimal", s.optimal)
+        .with("nodes", s.nodes as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_op() {
+        let r = parse_request(r#"{"id":7,"op":"evaluate","model":"m/c","batches":3}"#).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.model.as_deref(), Some("m/c"));
+        assert!(matches!(r.op, Op::Evaluate { batches: 3, selection: None }));
+
+        let r = parse_request(r#"{"id":1,"op":"evaluate","selection":[0,2,1]}"#).unwrap();
+        match r.op {
+            Op::Evaluate { batches, selection } => {
+                assert_eq!(batches, 1, "batches defaults to 1");
+                assert_eq!(selection.unwrap(), vec![0, 2, 1]);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let r = parse_request(r#"{"id":2,"op":"energy","selection":[1,1]}"#).unwrap();
+        assert!(matches!(r.op, Op::Energy { .. }));
+
+        let r =
+            parse_request(r#"{"id":3,"op":"select","r_energy":0.7,"omega":[[0.1,null],[0.2]]}"#)
+                .unwrap();
+        match r.op {
+            Op::Select { r_energy, omega } => {
+                assert_eq!(r_energy, 0.7);
+                assert!(omega[0][1].is_nan(), "null must decode as NaN");
+                assert_eq!(omega[1], vec![0.2]);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        assert!(matches!(parse_request(r#"{"id":4,"op":"status"}"#).unwrap().op, Op::Status));
+        assert!(matches!(
+            parse_request(r#"{"id":5,"op":"shutdown"}"#).unwrap().op,
+            Op::Shutdown
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_context() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"status"}"#).is_err(), "id is required");
+        assert!(parse_request(r#"{"id":1}"#).is_err(), "op is required");
+        assert!(parse_request(r#"{"id":1,"op":"frobnicate"}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"select","r_energy":0.5,"omega":[["x"]]}"#).is_err());
+        assert_eq!(request_id(r#"{"id":42,"op":"?"}"#), 42);
+        assert_eq!(request_id("garbage"), -1);
+    }
+
+    #[test]
+    fn envelopes_echo_id_and_flag() {
+        let ok = ok_response(9, Json::obj().with("x", 1usize));
+        assert_eq!(ok.get("id").unwrap().as_i64().unwrap(), 9);
+        assert!(ok.get("ok").unwrap().as_bool().unwrap());
+        let err = err_response(3, "boom");
+        assert!(!err.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(err.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+
+    #[test]
+    fn eval_json_preserves_finite_bits_and_nulls_nan() {
+        let r = EvalResult { loss: 0.1 + 0.2, accuracy: 1.0 / 3.0, samples: 64 };
+        let j = eval_json(&r);
+        let back = Json::parse(&j.compact()).unwrap();
+        assert_eq!(back.get("loss").unwrap().as_f64().unwrap().to_bits(), r.loss.to_bits());
+        assert_eq!(
+            back.get("accuracy").unwrap().as_f64().unwrap().to_bits(),
+            r.accuracy.to_bits()
+        );
+        let poisoned = EvalResult { loss: f64::NAN, accuracy: 0.0, samples: 64 };
+        let s = eval_json(&poisoned).compact();
+        assert!(s.contains("\"loss\":null"), "{s}");
+    }
+}

@@ -1,0 +1,438 @@
+//! `fames serve` — a concurrent batched evaluation daemon (the repo's
+//! first request-driven workload).
+//!
+//! Dependency-free serving stack: a std [`TcpListener`] accepts newline-
+//! delimited JSON connections ([`codec`]), a [`registry::Registry`] holds N
+//! warmed model sessions with per-model routing, and a [`batcher::Batcher`]
+//! coalesces concurrent requests into `util::par` waves — the worker pool
+//! drives the same fused kernel paths (shared `kernel::Scratch` arenas,
+//! `OnceLock` coefficient caches) a direct `Session` call would.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//! client ──line──▶ reader thread ──Job──▶ Batcher FIFO
+//!                   (parse, route            │ drain ≤ max_batch
+//!                    status/shutdown         ▼
+//!                    answered inline)   dispatcher thread
+//!                                       par_map wave (util::par)
+//!                                       ┌─────────┬─────────┐
+//!                                       evaluate  energy  select
+//!                                       (Session) (EnergyModel) (MCKP)
+//!                                            │
+//! client ◀──line── writer thread ◀──mpsc─────┘  (id-tagged responses)
+//! ```
+//!
+//! # Bit-identity guarantee
+//!
+//! Batching changes *when* a request runs, never *what* it computes: each
+//! wave entry is handled by exactly the call an embedder would make on the
+//! warmed `Session` (`evaluate` / `evaluate_with`), on `EnergyModel`, or on
+//! `select::solve_exact` — all of which are bit-deterministic at every
+//! worker count (`tests/par_equivalence.rs`). Responses therefore compare
+//! byte-for-byte against direct-call references at `--jobs` 1/4/auto
+//! (`tests/serve_smoke.rs` pins this over the wire).
+//!
+//! Shutdown is graceful: `{"op":"shutdown"}` is acked immediately, the
+//! listener stops accepting, the batcher drains every queued request, and
+//! [`Server::run`] returns.
+
+pub mod batcher;
+pub mod client;
+pub mod codec;
+pub mod registry;
+
+pub use client::Client;
+pub use codec::{Op, Request, PROTOCOL};
+pub use registry::{ModelEntry, Registry};
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use batcher::{Batcher, Job};
+
+/// Most eval batches one `evaluate` request may ask for. Waves run to
+/// completion before the next one starts, so an unbounded request would
+/// head-of-line-block every other client for its whole duration — a
+/// one-line unauthenticated DoS without this cap.
+pub const MAX_EVAL_BATCHES: usize = 1024;
+
+use crate::energy::EnergyModel;
+use crate::json::Json;
+use crate::pipeline::FamesConfig;
+use crate::runtime::Runtime;
+use crate::select::{self, Choice};
+use crate::util::par;
+
+/// Serving configuration (CLI `fames serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 asks the OS for a free port (tests/bench).
+    pub addr: String,
+    /// `<model>/<cfg>` specs to warm and route to.
+    pub models: Vec<String>,
+    /// Most requests one dispatcher wave may carry.
+    pub max_batch: usize,
+    /// Artifact root, seed, jobs, training and cache knobs shared by every
+    /// model entry.
+    pub base: FamesConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let base = FamesConfig::default();
+        ServeConfig {
+            addr: "127.0.0.1:4271".to_string(),
+            models: vec![format!("{}/{}", base.model, base.cfg)],
+            max_batch: 16,
+            base,
+        }
+    }
+}
+
+/// Per-op request counters (status + bench assertions).
+#[derive(Default)]
+pub struct Stats {
+    pub evaluate: AtomicU64,
+    pub energy: AtomicU64,
+    pub select: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Stats {
+    fn count(&self, op: &Op) {
+        match op {
+            Op::Evaluate { .. } => self.evaluate.fetch_add(1, Ordering::Relaxed),
+            Op::Energy { .. } => self.energy.fetch_add(1, Ordering::Relaxed),
+            Op::Select { .. } => self.select.fetch_add(1, Ordering::Relaxed),
+            Op::Status | Op::Shutdown => 0,
+        };
+    }
+
+    pub fn total(&self) -> u64 {
+        self.evaluate.load(Ordering::Relaxed)
+            + self.energy.load(Ordering::Relaxed)
+            + self.select.load(Ordering::Relaxed)
+    }
+}
+
+/// State shared by the accept loop, connection threads and the dispatcher.
+struct Shared {
+    registry: Registry,
+    rt: Arc<Runtime>,
+    batcher: Batcher,
+    stats: Stats,
+    stop: AtomicBool,
+    addr: SocketAddr,
+    started: Instant,
+    jobs: usize,
+}
+
+impl Shared {
+    fn status_json(&self) -> Json {
+        let exec = self.rt.total_stats();
+        let mut models = Json::arr();
+        for e in self.registry.entries() {
+            models.push(
+                Json::obj()
+                    .with("key", e.key.as_str())
+                    .with("layers", e.session.art.manifest.layers.len())
+                    .with("warm_secs", e.warm_secs)
+                    .with(
+                        "library",
+                        match e.lib_hit {
+                            Some(true) => "hit",
+                            Some(false) => "miss",
+                            None => "off",
+                        },
+                    ),
+            );
+        }
+        Json::obj()
+            .with("protocol", PROTOCOL)
+            .with("backend", self.rt.platform())
+            .with("models", models)
+            .with("uptime_secs", self.started.elapsed().as_secs_f64())
+            .with("pending", self.batcher.pending())
+            .with("max_batch", self.batcher.max_batch)
+            .with("jobs", par::effective_jobs(self.jobs))
+            .with(
+                "requests",
+                Json::obj()
+                    .with("evaluate", self.stats.evaluate.load(Ordering::Relaxed) as usize)
+                    .with("energy", self.stats.energy.load(Ordering::Relaxed) as usize)
+                    .with("select", self.stats.select.load(Ordering::Relaxed) as usize)
+                    .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize)
+                    .with("total", self.stats.total() as usize),
+            )
+            .with(
+                "exec",
+                Json::obj()
+                    .with("calls", exec.calls as usize)
+                    .with("total_secs", exec.total_secs),
+            )
+    }
+
+    fn begin_shutdown(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return; // already shutting down
+        }
+        self.batcher.close();
+        // the accept loop blocks in `accept`; poke it awake so it can see
+        // the stop flag and exit
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A bound, warmed serve daemon. `bind` does all the expensive work
+/// (session warm-up, library characterization); `run` is the accept loop.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Warm every configured model and bind the listener.
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let rt = Arc::new(Runtime::from_env()?);
+        let registry = Registry::open(rt.clone(), &cfg.base, &cfg.models)?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding fames serve to {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                registry,
+                rt,
+                batcher: Batcher::new(cfg.max_batch),
+                stats: Stats::default(),
+                stop: AtomicBool::new(false),
+                addr,
+                started: Instant::now(),
+                jobs: cfg.base.jobs,
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// The warmed model registry (CLI startup table, tests).
+    pub fn registry(&self) -> &Registry {
+        &self.shared.registry
+    }
+
+    /// Serve until a `shutdown` request: accept connections, batch compute
+    /// requests, answer inline ops. Returns only after the queue has
+    /// drained **and** every connection's writer has flushed its final
+    /// responses, so a caller may exit the process immediately.
+    pub fn run(self) -> Result<()> {
+        let shared = self.shared;
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::spawn(move || dispatch_loop(&shared))
+        };
+        // (reader thread handle, read-half clone used to unblock it)
+        let mut conns: Vec<(std::thread::JoinHandle<()>, TcpStream)> = Vec::new();
+        for stream in self.listener.incoming() {
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            // reap finished connections so a long-lived daemon does not
+            // accumulate one JoinHandle per connection ever accepted
+            conns.retain(|(h, _)| !h.is_finished());
+            let clone = stream.try_clone();
+            let shared = shared.clone();
+            let handle = std::thread::spawn(move || serve_connection(stream, &shared));
+            match clone {
+                Ok(c) => conns.push((handle, c)),
+                Err(_) => drop(handle), // can't unblock it later; detach
+            }
+        }
+        // `begin_shutdown` already closed the batcher; wait for the queue
+        // to drain so every accepted request is answered
+        dispatcher.join().expect("serve: dispatcher panicked");
+        // unblock readers stuck in read_line (a client holding its
+        // connection open must not wedge shutdown): closing the read half
+        // EOFs the reader, which drops its sender; the writer then drains
+        // and flushes every remaining queued response before exiting
+        for (_, stream) in &conns {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        for (handle, _) in conns {
+            let _ = handle.join();
+        }
+        Ok(())
+    }
+}
+
+/// Dispatcher: drain request waves and score each wave as one parallel
+/// `util::par` map — the "batch concurrent requests into fused kernel
+/// invocations" half of the serving layer.
+fn dispatch_loop(shared: &Shared) {
+    while let Some(wave) = shared.batcher.next_wave() {
+        let mut requests = Vec::with_capacity(wave.len());
+        let mut replies = Vec::with_capacity(wave.len());
+        for job in wave {
+            requests.push(job.request);
+            replies.push(job.reply);
+        }
+        let lines = par::par_map(&requests, shared.jobs, |_, req| {
+            let resp = match handle_compute(shared, req) {
+                Ok(result) => codec::ok_response(req.id, result),
+                Err(e) => {
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    codec::err_response(req.id, &format!("{e:#}"))
+                }
+            };
+            resp.compact()
+        });
+        for (reply, line) in replies.iter().zip(lines) {
+            let _ = reply.send(line); // a vanished client is not an error
+        }
+    }
+}
+
+/// Score one compute request against its routed model entry. Every arm is
+/// exactly the call an embedder would make directly — the bit-identity
+/// contract of the serving layer.
+fn handle_compute(shared: &Shared, req: &Request) -> Result<Json> {
+    let entry = shared.registry.get(req.model.as_deref())?;
+    match &req.op {
+        Op::Evaluate { batches, selection } => {
+            anyhow::ensure!(
+                (1..=MAX_EVAL_BATCHES).contains(batches),
+                "batches must be in 1..={MAX_EVAL_BATCHES} (got {batches})"
+            );
+            let r = match selection {
+                None => entry.session.evaluate(*batches)?,
+                Some(picks) => {
+                    let e_list = entry.selection_tensors(picks)?;
+                    entry.session.evaluate_with(&e_list, *batches)?
+                }
+            };
+            Ok(codec::eval_json(&r))
+        }
+        Op::Energy { selection } => {
+            let sel = entry.resolve_selection(selection)?;
+            let em = EnergyModel::new(&entry.session.art.manifest, &entry.library);
+            let names: Vec<String> = sel.iter().map(|am| am.name.clone()).collect();
+            Ok(Json::obj()
+                .with("energy", em.model_energy(&sel))
+                .with("ratio_vs_exact", em.ratio_vs_exact(&sel)?)
+                .with("ratio_vs_8bit", em.ratio_vs_8bit(&sel)?)
+                .with("names", names))
+        }
+        Op::Select { r_energy, omega } => {
+            let manifest = &entry.session.art.manifest;
+            anyhow::ensure!(
+                omega.len() == manifest.layers.len(),
+                "omega has {} rows, model '{}' has {} layers",
+                omega.len(),
+                entry.key,
+                manifest.layers.len()
+            );
+            let em = EnergyModel::new(manifest, &entry.library);
+            let mut problem: Vec<Vec<Choice>> = Vec::with_capacity(manifest.layers.len());
+            let mut names: Vec<Vec<String>> = Vec::with_capacity(manifest.layers.len());
+            for (k, layer) in manifest.layers.iter().enumerate() {
+                let muls = entry.library.for_bits(layer.a_bits, layer.w_bits);
+                anyhow::ensure!(
+                    omega[k].len() == muls.len(),
+                    "omega row {k} has {} entries, library has {} candidates",
+                    omega[k].len(),
+                    muls.len()
+                );
+                problem.push(
+                    muls.iter()
+                        .zip(&omega[k])
+                        .map(|(am, &v)| Choice { cost: em.layer_energy(layer, am), value: v })
+                        .collect(),
+                );
+                names.push(muls.iter().map(|m| m.name.clone()).collect());
+            }
+            let budget = r_energy * em.model_energy_exact()?;
+            let sol = select::solve_exact(&problem, budget)?;
+            let picked: Vec<String> = sol
+                .picks
+                .iter()
+                .enumerate()
+                .map(|(k, &i)| names[k][i].clone())
+                .collect();
+            Ok(codec::solution_json(&sol, &picked))
+        }
+        Op::Status | Op::Shutdown => unreachable!("inline ops never reach the batcher"),
+    }
+}
+
+/// Per-connection reader: parse lines, answer `status`/`shutdown` inline,
+/// enqueue compute ops. A paired writer thread owns the outbound half so
+/// batcher waves and inline answers can interleave safely.
+fn serve_connection(stream: TcpStream, shared: &Shared) {
+    use std::io::{BufRead, BufReader, BufWriter, Write};
+
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_half);
+        for line in rx {
+            if w.write_all(line.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush())
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // EOF / reset
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match codec::parse_request(trimmed) {
+            Err(e) => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let id = codec::request_id(trimmed);
+                let _ = tx.send(codec::err_response(id, &format!("{e:#}")).compact());
+            }
+            Ok(req) => match req.op {
+                Op::Status => {
+                    let _ = tx.send(codec::ok_response(req.id, shared.status_json()).compact());
+                }
+                Op::Shutdown => {
+                    let _ = tx.send(
+                        codec::ok_response(req.id, Json::obj().with("stopping", true)).compact(),
+                    );
+                    shared.begin_shutdown();
+                }
+                _ => {
+                    shared.stats.count(&req.op);
+                    let id = req.id;
+                    if !shared.batcher.enqueue(Job { request: req, reply: tx.clone() }) {
+                        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                        let err = codec::err_response(id, "server is shutting down");
+                        let _ = tx.send(err.compact());
+                    }
+                }
+            },
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+}

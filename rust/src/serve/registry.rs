@@ -1,0 +1,181 @@
+//! Model registry — the serving layer's warm per-model state.
+//!
+//! One [`ModelEntry`] per configured `<model>/<cfg>` spec: a fully warmed
+//! [`Session`] (parameters loaded or pre-trained, activation ranges
+//! initialized) plus the AppMul [`Library`] covering its manifest, loaded
+//! through the PR 3 artifact store when one is enabled — so a restarted
+//! daemon skips both training and library characterization.
+//!
+//! Entries are immutable once warmed: every request handler works through
+//! `&Session` (`evaluate` / `evaluate_with` never mutate session state),
+//! which is what lets the batcher score concurrent requests against one
+//! shared entry without locks.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::appmul::{AppMul, Library};
+use crate::pipeline::{self, FamesConfig, Session};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// One warmed model: routing key, session, candidate library.
+pub struct ModelEntry {
+    /// Routing key, `<model>/<cfg>`.
+    pub key: String,
+    pub session: Session,
+    pub library: Library,
+    /// Library stage cache outcome (`Some(true)` = store hit).
+    pub lib_hit: Option<bool>,
+    /// Wall-clock spent warming this entry (train/load + ranges + library).
+    pub warm_secs: f64,
+}
+
+impl ModelEntry {
+    /// Per-layer candidate lists in `Library::for_bits` order — the index
+    /// space every wire `selection` refers to.
+    pub fn choices(&self) -> Vec<Vec<&AppMul>> {
+        self.session
+            .art
+            .manifest
+            .layers
+            .iter()
+            .map(|l| self.library.for_bits(l.a_bits, l.w_bits))
+            .collect()
+    }
+
+    /// Resolve a wire selection (per-layer candidate indices) to AppMuls.
+    pub fn resolve_selection(&self, picks: &[usize]) -> Result<Vec<&AppMul>> {
+        let layers = &self.session.art.manifest.layers;
+        ensure!(
+            picks.len() == layers.len(),
+            "selection has {} picks, model '{}' has {} layers",
+            picks.len(),
+            self.key,
+            layers.len()
+        );
+        layers
+            .iter()
+            .zip(picks)
+            .map(|(l, &i)| {
+                let muls = self.library.for_bits(l.a_bits, l.w_bits);
+                ensure!(
+                    i < muls.len(),
+                    "layer {}: pick {i} out of range ({} candidates)",
+                    l.name,
+                    muls.len()
+                );
+                Ok(muls[i])
+            })
+            .collect()
+    }
+
+    /// E-tensor list for a wire selection (the `evaluate_with` input).
+    pub fn selection_tensors(&self, picks: &[usize]) -> Result<Vec<Tensor>> {
+        Ok(self.resolve_selection(picks)?.iter().map(|am| am.error_tensor()).collect())
+    }
+}
+
+/// All loaded models, keyed by `<model>/<cfg>`.
+pub struct Registry {
+    entries: BTreeMap<String, Arc<ModelEntry>>,
+}
+
+impl Registry {
+    /// Warm every configured model spec. Specs are `<model>/<cfg>` (a `:`
+    /// separator is also accepted); each is opened against `base` with the
+    /// model/cfg fields swapped in, so `base` carries the artifact root,
+    /// seed, worker count, training and cache knobs for all of them.
+    pub fn open(rt: Arc<Runtime>, base: &FamesConfig, specs: &[String]) -> Result<Registry> {
+        ensure!(!specs.is_empty(), "no models configured (pass models=<model>/<cfg>[,...])");
+        let mut entries = BTreeMap::new();
+        for spec in specs {
+            let (model, cfg_name) = split_spec(spec)?;
+            let key = format!("{model}/{cfg_name}");
+            if entries.contains_key(&key) {
+                bail!("model '{key}' configured twice");
+            }
+            let cfg = FamesConfig {
+                model: model.to_string(),
+                cfg: cfg_name.to_string(),
+                ..base.clone()
+            };
+            let t0 = Instant::now();
+            let session = pipeline::warm_session(rt.clone(), &cfg)
+                .with_context(|| format!("warming model '{key}'"))?;
+            let store = cfg.store();
+            let prep =
+                pipeline::prepare_library(&session.art.manifest, cfg.seed, store.as_ref(), cfg.jobs)
+                    .with_context(|| format!("preparing library for '{key}'"))?;
+            entries.insert(
+                key.clone(),
+                Arc::new(ModelEntry {
+                    key,
+                    session,
+                    library: prep.library,
+                    lib_hit: prep.hit,
+                    warm_secs: t0.elapsed().as_secs_f64(),
+                }),
+            );
+        }
+        Ok(Registry { entries })
+    }
+
+    /// Route a request to a model. `None` is allowed only when exactly one
+    /// model is loaded (the single-model convenience).
+    pub fn get(&self, key: Option<&str>) -> Result<&Arc<ModelEntry>> {
+        match key {
+            Some(k) => self.entries.get(k).with_context(|| {
+                format!("unknown model '{k}' (loaded: {})", self.keys().join(", "))
+            }),
+            None if self.entries.len() == 1 => Ok(self.entries.values().next().unwrap()),
+            None => bail!(
+                "request names no model and {} are loaded — pass \"model\":\"<model>/<cfg>\"",
+                self.entries.len()
+            ),
+        }
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &Arc<ModelEntry>> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Split `<model>/<cfg>` (or `<model>:<cfg>`).
+fn split_spec(spec: &str) -> Result<(&str, &str)> {
+    let (m, c) = spec
+        .split_once('/')
+        .or_else(|| spec.split_once(':'))
+        .with_context(|| format!("model spec '{spec}' must be <model>/<cfg>"))?;
+    ensure!(!m.is_empty() && !c.is_empty(), "model spec '{spec}' must be <model>/<cfg>");
+    Ok((m, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_splitting() {
+        assert_eq!(split_spec("resnet8/w4a4").unwrap(), ("resnet8", "w4a4"));
+        assert_eq!(split_spec("vgg11:w2a2").unwrap(), ("vgg11", "w2a2"));
+        assert!(split_spec("resnet8").is_err());
+        assert!(split_spec("/w4a4").is_err());
+        assert!(split_spec("resnet8/").is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! End-to-end NaN robustness of the selection path.
+//!
+//! PR 4 made NaN a first-class signal (poisoned rows yield NaN losses and
+//! counted misses), and this suite pins the downstream half of that
+//! contract: NaN Ω entries and NaN/∞ PDP costs flowing into a **real**
+//! MCKP instance (synthetic manifest × generated AppMul library) must be
+//! treated as infeasible candidates — excluded from the solution, never a
+//! panic — by the greedy and exact MCKP solvers and by NSGA-II, at
+//! `jobs` 1/4/auto with bit-identical results.
+
+use std::path::PathBuf;
+
+use fames::appmul::{generate_library, Library};
+use fames::energy::EnergyModel;
+use fames::pipeline;
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+use fames::runtime::{ArtifactSet, Manifest};
+use fames::select::{self, nsga, Choice};
+use fames::sensitivity::PerturbTable;
+
+fn synthetic_manifest(tag: &str) -> (PathBuf, Manifest) {
+    let root = std::env::temp_dir().join(format!("fames-selrob-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let dir = write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    let manifest = ArtifactSet::open(dir).unwrap().manifest;
+    (root, manifest)
+}
+
+fn test_library() -> Library {
+    generate_library(&[(4, 4), (3, 3), (2, 2)], 0)
+}
+
+/// A deterministic fake Ω table aligned with `Library::for_bits` order.
+fn omega_table(manifest: &Manifest, lib: &Library) -> PerturbTable {
+    let values: Vec<Vec<f64>> = manifest
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(k, l)| {
+            (0..lib.for_bits(l.a_bits, l.w_bits).len())
+                .map(|i| 0.05 * (k as f64 + 1.0) + 0.013 * i as f64)
+                .collect()
+        })
+        .collect();
+    let names: Vec<Vec<String>> = manifest
+        .layers
+        .iter()
+        .map(|l| {
+            lib.for_bits(l.a_bits, l.w_bits)
+                .iter()
+                .map(|m| m.name.clone())
+                .collect()
+        })
+        .collect();
+    PerturbTable { values, names, base_loss: 1.0, estimate_secs: 0.0 }
+}
+
+/// Reference: delete the poisoned candidates outright, solve, and map the
+/// picks back to the original index space.
+fn filtered_reference(
+    manifest: &Manifest,
+    lib: &Library,
+    em: &EnergyModel,
+    poison_cost: impl Fn(usize, usize, f64) -> f64,
+    omega: &[Vec<f64>],
+    budget: f64,
+) -> (select::Solution, Vec<usize>) {
+    let mut problem: Vec<Vec<Choice>> = Vec::new();
+    let mut idx_map: Vec<Vec<usize>> = Vec::new();
+    for (k, layer) in manifest.layers.iter().enumerate() {
+        let muls = lib.for_bits(layer.a_bits, layer.w_bits);
+        let mut row = Vec::new();
+        let mut map = Vec::new();
+        for (i, am) in muls.iter().enumerate() {
+            let cost = poison_cost(k, i, em.layer_energy(layer, am));
+            let value = omega[k][i];
+            if cost.is_finite() && value.is_finite() {
+                row.push(Choice { cost, value });
+                map.push(i);
+            }
+        }
+        problem.push(row);
+        idx_map.push(map);
+    }
+    let sol = select::solve_exact(&problem, budget).unwrap();
+    let orig_picks: Vec<usize> =
+        sol.picks.iter().enumerate().map(|(k, &p)| idx_map[k][p]).collect();
+    (sol, orig_picks)
+}
+
+#[test]
+fn nan_omega_entries_are_excluded_at_jobs_1_4_auto() {
+    let (root, manifest) = synthetic_manifest("omega");
+    let lib = test_library();
+    let em = EnergyModel::new(&manifest, &lib);
+
+    let mut table = omega_table(&manifest, &lib);
+    // poison one or two entries per layer (never the whole row)
+    for (k, row) in table.values.iter_mut().enumerate() {
+        let n = row.len();
+        row[k % n] = f64::NAN;
+        if n > 2 {
+            row[(k + 2) % n] = f64::NAN;
+        }
+    }
+    let r_energy = 0.7;
+    let budget = r_energy * em.model_energy_exact().unwrap();
+    let (want, want_picks) =
+        filtered_reference(&manifest, &lib, &em, |_, _, c| c, &table.values, budget);
+
+    let mut solutions = Vec::new();
+    for jobs in [1usize, 4, 0] {
+        let (_choices, sol) =
+            pipeline::select_ilp_jobs(&table, &em, &lib, r_energy, jobs).unwrap();
+        assert_eq!(sol.picks, want_picks, "jobs={jobs}");
+        assert_eq!(
+            sol.total_value.to_bits(),
+            want.total_value.to_bits(),
+            "jobs={jobs}: value diverged"
+        );
+        assert!(sol.total_cost <= budget + 1e-9, "jobs={jobs}: budget violated");
+        for (k, &i) in sol.picks.iter().enumerate() {
+            assert!(
+                table.values[k][i].is_finite(),
+                "jobs={jobs}: layer {k} picked a poisoned candidate"
+            );
+        }
+        solutions.push(sol);
+    }
+    // bit-identical across worker counts
+    assert_eq!(solutions[0], solutions[1]);
+    assert_eq!(solutions[0], solutions[2]);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn nan_pdp_costs_are_excluded_by_both_solvers() {
+    let (root, manifest) = synthetic_manifest("cost");
+    let lib = test_library();
+    let em = EnergyModel::new(&manifest, &lib);
+    let table = omega_table(&manifest, &lib);
+
+    // poison PDP-derived costs: NaN on one candidate per layer, +inf on a
+    // second where the row is long enough
+    let poison = |k: usize, i: usize, cost: f64| -> f64 {
+        let n = table.values[k].len();
+        if i == (k + 1) % n {
+            f64::NAN
+        } else if n > 2 && i == (k + 3) % n {
+            f64::INFINITY
+        } else {
+            cost
+        }
+    };
+    let mut problem: Vec<Vec<Choice>> = Vec::new();
+    for (k, layer) in manifest.layers.iter().enumerate() {
+        let muls = lib.for_bits(layer.a_bits, layer.w_bits);
+        problem.push(
+            muls.iter()
+                .enumerate()
+                .map(|(i, am)| Choice {
+                    cost: poison(k, i, em.layer_energy(layer, am)),
+                    value: table.values[k][i],
+                })
+                .collect(),
+        );
+    }
+    let budget = 0.7 * em.model_energy_exact().unwrap();
+    let (want_exact, want_picks) =
+        filtered_reference(&manifest, &lib, &em, poison, &table.values, budget);
+
+    // exact: identical to the delete-the-poison reference
+    let got_exact = select::solve_exact(&problem, budget).unwrap();
+    assert_eq!(got_exact.picks, want_picks);
+    assert_eq!(got_exact.total_value.to_bits(), want_exact.total_value.to_bits());
+
+    // greedy: feasible, poison-free, and no worse than on the clean set
+    let got_greedy = select::solve_greedy(&problem, budget).unwrap();
+    assert!(got_greedy.total_cost <= budget + 1e-9);
+    for (k, &i) in got_greedy.picks.iter().enumerate() {
+        assert!(problem[k][i].cost.is_finite() && problem[k][i].value.is_finite());
+    }
+    // exact ≤ greedy (optimality ordering survives the poisoning)
+    assert!(got_exact.total_value <= got_greedy.total_value + 1e-9);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn nsga_front_is_poison_free_and_jobs_invariant() {
+    let (root, manifest) = synthetic_manifest("nsga");
+    let lib = test_library();
+    let table = omega_table(&manifest, &lib);
+    let n_choices: Vec<usize> = manifest
+        .layers
+        .iter()
+        .map(|l| lib.for_bits(l.a_bits, l.w_bits).len())
+        .collect();
+    let mults: Vec<f64> = manifest.layers.iter().map(|l| l.mults_per_image as f64).collect();
+
+    // fitness: Σ Ω (loss proxy) vs Σ pdp·mults — except any genome whose
+    // layer-0 gene is 0 evaluates to NaN (a poisoned candidate)
+    let eval = |g: &nsga::Genome| -> (f64, f64) {
+        if g[0] == 0 {
+            return (f64::NAN, f64::NAN);
+        }
+        let loss: f64 = g.iter().enumerate().map(|(k, &i)| table.values[k][i]).sum();
+        let energy: f64 = g
+            .iter()
+            .enumerate()
+            .map(|(k, &i)| {
+                let l = &manifest.layers[k];
+                lib.for_bits(l.a_bits, l.w_bits)[i].pdp * mults[k]
+            })
+            .sum();
+        (loss, energy)
+    };
+
+    let run_at = |jobs: usize| {
+        let cfg = nsga::NsgaConfig {
+            population: 12,
+            generations: 5,
+            seed: 3,
+            jobs,
+            ..Default::default()
+        };
+        nsga::run(&n_choices, &cfg, eval)
+    };
+    let (front1, evals1) = run_at(1);
+    assert!(!front1.is_empty());
+    for ind in &front1 {
+        assert!(
+            ind.objectives.0.is_finite() && ind.objectives.1.is_finite(),
+            "poisoned genome {:?} reached the front",
+            ind.genome
+        );
+        assert_ne!(ind.genome[0], 0, "the poisoned gene survived");
+    }
+    for jobs in [4usize, 0] {
+        let (frontj, evalsj) = run_at(jobs);
+        assert_eq!(evals1, evalsj, "jobs={jobs}");
+        assert_eq!(front1.len(), frontj.len(), "jobs={jobs}");
+        for (a, b) in front1.iter().zip(&frontj) {
+            assert_eq!(a.genome, b.genome, "jobs={jobs}");
+            assert_eq!(a.objectives, b.objectives, "jobs={jobs}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

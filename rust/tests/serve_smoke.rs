@@ -1,0 +1,329 @@
+//! `fames serve` smoke suite — the daemon against a synthetic artifact set.
+//!
+//! Starts the real server (loopback, OS-assigned port), fires concurrent
+//! `evaluate` / `energy` / `select` requests from the wire client, and
+//! diffs every response **byte-for-byte** against the equivalent direct
+//! `Session` / `EnergyModel` / `solve_exact` calls — at `jobs` 1, 4 and
+//! auto — then asserts a clean drain-and-shutdown. The `select` request
+//! carries a NaN-poisoned Ω entry (as wire `null`), exercising the solver
+//! NaN-as-infeasible contract over the protocol.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fames::energy::EnergyModel;
+use fames::json::Json;
+use fames::pipeline::{self, FamesConfig};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+use fames::runtime::Runtime;
+use fames::select;
+use fames::serve::{codec, Client, ServeConfig, Server};
+
+fn setup_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-serve-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    root
+}
+
+fn base_cfg(root: &std::path::Path) -> FamesConfig {
+    FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: 200,
+        train_lr: 0.02,
+        ..FamesConfig::default()
+    }
+}
+
+#[test]
+fn serve_matches_direct_session_at_jobs_1_4_auto_and_shuts_down_cleanly() {
+    let root = setup_root("smoke");
+    let base = base_cfg(&root);
+    // warm the parameter cache once so the server and the reference
+    // session load bit-identical parameters
+    {
+        let rt = Arc::new(Runtime::native());
+        pipeline::warm_session(rt, &base).unwrap();
+    }
+
+    // ---- direct-call references (the bit-identity targets) ----
+    let rt = Arc::new(Runtime::native());
+    let direct = pipeline::warm_session(rt, &base).unwrap();
+    let lib = pipeline::prepare_library(&direct.art.manifest, base.seed, None, 0)
+        .unwrap()
+        .library;
+    let manifest = direct.art.manifest.clone();
+
+    let want_eval = codec::eval_json(&direct.evaluate(2).unwrap()).compact();
+
+    // explicit per-layer selection: the last `for_bits` candidate per layer
+    let picks: Vec<usize> = manifest
+        .layers
+        .iter()
+        .map(|l| lib.for_bits(l.a_bits, l.w_bits).len() - 1)
+        .collect();
+    let e_list: Vec<_> = manifest
+        .layers
+        .iter()
+        .zip(&picks)
+        .map(|(l, &i)| lib.for_bits(l.a_bits, l.w_bits)[i].error_tensor())
+        .collect();
+    let want_eval_sel = codec::eval_json(&direct.evaluate_with(&e_list, 1).unwrap()).compact();
+
+    let em = EnergyModel::new(&manifest, &lib);
+    let sel: Vec<_> = manifest
+        .layers
+        .iter()
+        .zip(&picks)
+        .map(|(l, &i)| lib.for_bits(l.a_bits, l.w_bits)[i])
+        .collect();
+    let want_energy = Json::obj()
+        .with("energy", em.model_energy(&sel))
+        .with("ratio_vs_exact", em.ratio_vs_exact(&sel).unwrap())
+        .with("ratio_vs_8bit", em.ratio_vs_8bit(&sel).unwrap())
+        .with("names", sel.iter().map(|m| m.name.clone()).collect::<Vec<String>>())
+        .compact();
+
+    // select request: deterministic Ω with one NaN-poisoned entry (crosses
+    // the wire as null and must be treated as infeasible, not a panic)
+    let omega: Vec<Vec<f64>> = manifest
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(k, l)| {
+            (0..lib.for_bits(l.a_bits, l.w_bits).len())
+                .map(|i| {
+                    if k == 0 && i == 1 {
+                        f64::NAN
+                    } else {
+                        0.05 * (k as f64 + 1.0) + 0.013 * i as f64
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let r_energy = 0.7;
+    let problem: Vec<Vec<select::Choice>> = manifest
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(k, l)| {
+            lib.for_bits(l.a_bits, l.w_bits)
+                .iter()
+                .zip(&omega[k])
+                .map(|(am, &v)| select::Choice { cost: em.layer_energy(l, am), value: v })
+                .collect()
+        })
+        .collect();
+    let budget = r_energy * em.model_energy_exact().unwrap();
+    let want_sol = select::solve_exact(&problem, budget).unwrap();
+    let picked_names: Vec<String> = want_sol
+        .picks
+        .iter()
+        .enumerate()
+        .map(|(k, &i)| {
+            lib.for_bits(manifest.layers[k].a_bits, manifest.layers[k].w_bits)[i]
+                .name
+                .clone()
+        })
+        .collect();
+    assert!(
+        want_sol.picks[0] != 1,
+        "sanity: the poisoned candidate must not be the reference pick"
+    );
+    let want_select = codec::solution_json(&want_sol, &picked_names).compact();
+
+    let eval_req = |id: i64| {
+        Json::obj()
+            .with("id", id)
+            .with("op", "evaluate")
+            .with("model", "resnet8/w4a4")
+            .with("batches", 2usize)
+    };
+    let select_req = |id: i64, omega: &[Vec<f64>]| {
+        Json::obj()
+            .with("id", id)
+            .with("op", "select")
+            .with("model", "resnet8/w4a4")
+            .with("r_energy", r_energy)
+            .with("omega", omega.to_vec())
+    };
+    let energy_req = |id: i64, picks: &[usize]| {
+        Json::obj()
+            .with("id", id)
+            .with("op", "energy")
+            .with("model", "resnet8/w4a4")
+            .with("selection", picks)
+    };
+
+    for jobs in [1usize, 4, 0] {
+        let scfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            models: vec!["resnet8/w4a4".to_string()],
+            max_batch: 4,
+            base: FamesConfig { jobs, ..base.clone() },
+        };
+        let server = Server::bind(&scfg).unwrap();
+        let addr = server.local_addr().to_string();
+        let daemon = std::thread::spawn(move || server.run());
+
+        // 4 concurrent clients, each pipelining evaluate + select + energy
+        let handles: Vec<_> = (0..4i64)
+            .map(|c| {
+                let addr = addr.clone();
+                let want_eval = want_eval.clone();
+                let want_select = want_select.clone();
+                let want_energy = want_energy.clone();
+                let omega = omega.clone();
+                let picks = picks.clone();
+                let eval_req = eval_req.clone();
+                let select_req = select_req.clone();
+                let energy_req = energy_req.clone();
+                std::thread::spawn(move || {
+                    let mut cl = Client::connect(&addr).unwrap();
+                    let reqs = vec![
+                        eval_req(c * 10),
+                        select_req(c * 10 + 1, &omega),
+                        energy_req(c * 10 + 2, &picks),
+                    ];
+                    let resps = cl.call_many(&reqs).unwrap();
+                    assert_eq!(
+                        Client::expect_ok(&resps[0]).unwrap().compact(),
+                        want_eval,
+                        "client {c}: evaluate diverged from the direct Session call"
+                    );
+                    assert_eq!(
+                        Client::expect_ok(&resps[1]).unwrap().compact(),
+                        want_select,
+                        "client {c}: select diverged from direct solve_exact"
+                    );
+                    assert_eq!(
+                        Client::expect_ok(&resps[2]).unwrap().compact(),
+                        want_energy,
+                        "client {c}: energy diverged from direct EnergyModel"
+                    );
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        // single client: selection-evaluate, status, routing error, shutdown
+        let mut cl = Client::connect(&addr).unwrap();
+        let resp = cl
+            .call(
+                &Json::obj()
+                    .with("id", 900)
+                    .with("op", "evaluate")
+                    .with("batches", 1usize)
+                    .with("selection", picks.as_slice()),
+            )
+            .unwrap();
+        assert_eq!(
+            Client::expect_ok(&resp).unwrap().compact(),
+            want_eval_sel,
+            "jobs={jobs}: selection-evaluate diverged from evaluate_with"
+        );
+
+        let status = cl.call(&Json::obj().with("id", 901).with("op", "status")).unwrap();
+        let st = Client::expect_ok(&status).unwrap();
+        assert_eq!(st.get("protocol").unwrap().as_str().unwrap(), "fames-serve-v1");
+        assert_eq!(st.get("backend").unwrap().as_str().unwrap(), "native");
+        let total = st.get("requests").unwrap().get("total").unwrap().as_usize().unwrap();
+        assert!(total >= 13, "status saw only {total} requests");
+
+        // unknown model: error response, not a dead connection
+        let resp = cl
+            .call(&Json::obj().with("id", 902).with("op", "evaluate").with("model", "nope/x"))
+            .unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+
+        // malformed request: error echo with the request id
+        let resp = cl.call(&Json::obj().with("id", 903)).unwrap();
+        assert_eq!(resp.get("id").unwrap().as_i64().unwrap(), 903);
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+
+        // oversized batches: rejected (head-of-line-blocking DoS guard)
+        let resp = cl
+            .call(
+                &Json::obj()
+                    .with("id", 905)
+                    .with("op", "evaluate")
+                    .with("batches", 1_000_000_000usize),
+            )
+            .unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("batches"));
+
+        // clean shutdown: ack, drain, run() returns Ok
+        let ack = cl.shutdown(904).unwrap();
+        assert!(ack.get("stopping").unwrap().as_bool().unwrap());
+        drop(cl);
+        daemon.join().unwrap().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn serve_routes_across_multiple_models() {
+    let root = setup_root("multi");
+    // two artifact sets under one root
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet14", "w3a3")).unwrap();
+    let base = base_cfg(&root);
+
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string(), "resnet14/w3a3".to_string()],
+        max_batch: 8,
+        base: base.clone(),
+    };
+    let server = Server::bind(&scfg).unwrap();
+    assert_eq!(server.registry().len(), 2);
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+
+    // references for both models (params were trained by bind; the cache
+    // makes these sessions bit-identical to the server's)
+    let mut wants = Vec::new();
+    for (model, cfg_name) in [("resnet8", "w4a4"), ("resnet14", "w3a3")] {
+        let cfg = FamesConfig {
+            model: model.to_string(),
+            cfg: cfg_name.to_string(),
+            ..base.clone()
+        };
+        let rt = Arc::new(Runtime::native());
+        let s = pipeline::warm_session(rt, &cfg).unwrap();
+        wants.push(codec::eval_json(&s.evaluate(1).unwrap()).compact());
+    }
+
+    let mut cl = Client::connect(&addr).unwrap();
+    for (i, key) in ["resnet8/w4a4", "resnet14/w3a3"].iter().enumerate() {
+        let resp = cl
+            .call(
+                &Json::obj()
+                    .with("id", i as i64)
+                    .with("op", "evaluate")
+                    .with("model", *key)
+                    .with("batches", 1usize),
+            )
+            .unwrap();
+        assert_eq!(
+            Client::expect_ok(&resp).unwrap().compact(),
+            wants[i],
+            "model {key} routed to the wrong session"
+        );
+    }
+    // with two models loaded, an un-routed request is an error
+    let resp = cl
+        .call(&Json::obj().with("id", 9).with("op", "evaluate").with("batches", 1usize))
+        .unwrap();
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+
+    cl.shutdown(10).unwrap();
+    drop(cl);
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
