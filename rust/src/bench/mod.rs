@@ -490,7 +490,8 @@ impl ServeLevel {
 }
 
 /// `fames serve` throughput snapshot: requests/sec at 1/8/64 concurrent
-/// clients, plus the daemon warm-up cost.
+/// clients, plus the daemon warm-up cost and the overload/saturation
+/// profile.
 #[derive(Clone, Debug)]
 pub struct ServeBench {
     /// First `Server::bind` wall-clock (trains + characterizes: the cold
@@ -499,6 +500,43 @@ pub struct ServeBench {
     /// Last `Server::bind` wall-clock (everything loads from caches).
     pub startup_warm_secs: f64,
     pub levels: Vec<ServeLevel>,
+    /// Overload profile against deliberately tiny admission caps.
+    pub saturation: Option<SaturationBench>,
+}
+
+/// One concurrency level of the saturation bench: what happened to every
+/// request fired at a server with tiny admission caps.
+#[derive(Clone, Debug)]
+pub struct SaturationLevel {
+    pub clients: usize,
+    /// Requests fired (clients × per-client requests).
+    pub requests: usize,
+    /// Answered `ok:true`.
+    pub ok: usize,
+    /// Explicitly shed (`"shed":true` — gate or queue refusals).
+    pub shed: usize,
+    /// Answered `ok:false` without the shed flag.
+    pub errors: usize,
+    /// Unanswered (connection died before an answer; shed-and-closed
+    /// connections count their unsent tail here).
+    pub dropped: usize,
+    /// Successful requests per second of wall-clock at this level.
+    pub rps: f64,
+    /// Median successful-request latency (ms, per-call round trip).
+    pub p50_ms: f64,
+    /// 99th-percentile successful-request latency (ms).
+    pub p99_ms: f64,
+}
+
+/// Saturation/overload bench: a server with deliberately tiny caps
+/// (`max_conns`/`max_pending`) is flooded at rising concurrency; every
+/// request must be accounted for as ok, shed, error or dropped — the
+/// "bounded under any load" contract, measured.
+#[derive(Clone, Debug)]
+pub struct SaturationBench {
+    pub max_conns: usize,
+    pub max_pending: usize,
+    pub levels: Vec<SaturationLevel>,
 }
 
 /// Measure `fames serve` end to end: a real daemon on a loopback port, a
@@ -536,6 +574,7 @@ pub fn run_serve_bench_full(cfg: &BenchConfig) -> Result<ServeBench> {
             models: vec!["resnet8/w4a4".to_string()],
             max_batch: 16,
             base: base.clone(),
+            ..ServeConfig::default()
         };
         let t0 = Instant::now();
         let server = Server::bind(&scfg).context("serve bench: bind")?;
@@ -586,8 +625,118 @@ pub fn run_serve_bench_full(cfg: &BenchConfig) -> Result<ServeBench> {
             .context("serve bench: daemon run")?;
         levels.push(ServeLevel { clients, requests: clients * per_client, cold_rps, warm_rps });
     }
+    // same artifact root, so the saturation server binds warm
+    let saturation = Some(run_saturation_bench(&base, cfg)?);
     let _ = std::fs::remove_dir_all(&root);
-    Ok(ServeBench { startup_cold_secs, startup_warm_secs, levels })
+    Ok(ServeBench { startup_cold_secs, startup_warm_secs, levels, saturation })
+}
+
+/// Flood one warm daemon with deliberately tiny admission caps at rising
+/// concurrency (1/8/64/256 clients) and account for every request. The
+/// caps guarantee explicit sheds at the top level — the bench (and the CI
+/// gate on its snapshot) proves overload degrades into fast, explicit
+/// refusals rather than unbounded queueing.
+pub fn run_saturation_bench(base: &FamesConfig, cfg: &BenchConfig) -> Result<SaturationBench> {
+    use crate::serve::{Client, ServeConfig, Server};
+
+    // small on purpose: 256 clients must overflow both gates
+    let max_conns = 96usize;
+    let max_pending = 16usize;
+    let per_client = if cfg.quick { 2 } else { 4 };
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 8,
+        max_conns,
+        max_pending,
+        base: base.clone(),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&scfg).context("saturation bench: bind")?;
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let mut levels = Vec::new();
+    for &clients in &[1usize, 8, 64, 256] {
+        let t = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> (usize, usize, usize, usize, Vec<f64>) {
+                    let (mut ok, mut shed, mut errors) = (0usize, 0usize, 0usize);
+                    let mut lats = Vec::with_capacity(per_client);
+                    let Ok(mut cl) = Client::connect(&addr) else {
+                        return (0, 0, 0, per_client, lats);
+                    };
+                    for r in 0..per_client {
+                        let req = Json::obj()
+                            .with("id", (c * 10_000 + r) as i64)
+                            .with("op", "evaluate")
+                            .with("model", "resnet8/w4a4")
+                            .with("batches", 1usize);
+                        let t0 = Instant::now();
+                        let Ok(resp) = cl.call(&req) else {
+                            // connection shed/evicted: the unanswered tail
+                            return (ok, shed, errors, per_client - r, lats);
+                        };
+                        let is_ok = resp.get("ok").and_then(|j| j.as_bool()).unwrap_or(false);
+                        let is_shed =
+                            resp.get("shed").and_then(|j| j.as_bool()).unwrap_or(false);
+                        if is_ok {
+                            ok += 1;
+                            lats.push(t0.elapsed().as_secs_f64() * 1e3);
+                        } else if is_shed {
+                            shed += 1;
+                        } else {
+                            errors += 1;
+                        }
+                    }
+                    (ok, shed, errors, 0, lats)
+                })
+            })
+            .collect();
+        let (mut ok, mut shed, mut errors, mut dropped) = (0usize, 0usize, 0usize, 0usize);
+        let mut lats: Vec<f64> = Vec::new();
+        for h in handles {
+            let (o, s, e, d, mut l) = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("saturation bench: client thread panicked"))?;
+            ok += o;
+            shed += s;
+            errors += e;
+            dropped += d;
+            lats.append(&mut l);
+        }
+        let wall = t.elapsed().as_secs_f64().max(1e-9);
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let pct = |q: f64| -> f64 {
+            if lats.is_empty() {
+                0.0
+            } else {
+                lats[((lats.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        levels.push(SaturationLevel {
+            clients,
+            requests: clients * per_client,
+            ok,
+            shed,
+            errors,
+            dropped,
+            rps: ok as f64 / wall,
+            p50_ms: pct(0.50),
+            p99_ms: pct(0.99),
+        });
+    }
+
+    let mut cl = Client::connect(&addr).context("saturation bench: shutdown connect")?;
+    cl.shutdown(-9)?;
+    drop(cl);
+    daemon
+        .join()
+        .map_err(|_| anyhow::anyhow!("saturation bench: daemon panicked"))?
+        .context("saturation bench: daemon run")?;
+    Ok(SaturationBench { max_conns, max_pending, levels })
 }
 
 // ---- snapshot JSON + cross-PR comparison ----
@@ -667,13 +816,35 @@ pub fn snapshot_json_full(
                     .with("warm_rps", l.warm_rps),
             );
         }
-        doc.set(
-            "serve",
-            Json::obj()
-                .with("startup_cold_secs", sb.startup_cold_secs)
-                .with("startup_warm_secs", sb.startup_warm_secs)
-                .with("levels", arr),
-        );
+        let mut serve_doc = Json::obj()
+            .with("startup_cold_secs", sb.startup_cold_secs)
+            .with("startup_warm_secs", sb.startup_warm_secs)
+            .with("levels", arr);
+        if let Some(sat) = &sb.saturation {
+            let mut sarr = Json::arr();
+            for l in &sat.levels {
+                sarr.push(
+                    Json::obj()
+                        .with("clients", l.clients)
+                        .with("requests", l.requests)
+                        .with("ok", l.ok)
+                        .with("shed", l.shed)
+                        .with("errors", l.errors)
+                        .with("dropped", l.dropped)
+                        .with("rps", l.rps)
+                        .with("p50_ms", l.p50_ms)
+                        .with("p99_ms", l.p99_ms),
+                );
+            }
+            serve_doc.set(
+                "saturation",
+                Json::obj()
+                    .with("max_conns", sat.max_conns)
+                    .with("max_pending", sat.max_pending)
+                    .with("levels", sarr),
+            );
+        }
+        doc.set("serve", serve_doc);
     }
     if let Some(ks) = kernels {
         let mut arr = Json::arr();
@@ -763,8 +934,44 @@ pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
             deltas.push(StageDelta { name, old_secs: *old_secs, new_secs });
         }
     }
+    // saturation throughput gates ride along as synthetic per-request
+    // stages (secs/request = 1/rps), so the same REGRESSION_TOLERANCE
+    // verdict machinery covers overload throughput too
+    let old_sat = saturation_times(old);
+    for (clients, new_secs) in saturation_times(new) {
+        if let Some((_, old_secs)) = old_sat.iter().find(|(c, _)| *c == clients) {
+            deltas.push(StageDelta {
+                name: format!("serve.saturation.c{clients}"),
+                old_secs: *old_secs,
+                new_secs,
+            });
+        }
+    }
     ensure!(!deltas.is_empty(), "snapshots share no stages");
     Ok(deltas)
+}
+
+/// `(clients, secs-per-successful-request)` rows of a snapshot's
+/// `serve.saturation` section; empty when the section is absent (older
+/// snapshots compare on stages alone).
+fn saturation_times(doc: &Json) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let Some(levels) = doc
+        .opt("serve")
+        .and_then(|s| s.opt("saturation"))
+        .and_then(|s| s.opt("levels"))
+        .and_then(|l| l.as_arr().ok())
+    else {
+        return out;
+    };
+    for l in levels {
+        let Ok(clients) = l.get("clients").and_then(|j| j.as_usize()) else { continue };
+        let Ok(rps) = l.get("rps").and_then(|j| j.as_f64()) else { continue };
+        if rps > 0.0 {
+            out.push((clients, 1.0 / rps));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -866,6 +1073,21 @@ mod tests {
             startup_cold_secs: 2.0,
             startup_warm_secs: 0.4,
             levels: vec![ServeLevel { clients: 8, requests: 16, cold_rps: 40.0, warm_rps: 80.0 }],
+            saturation: Some(SaturationBench {
+                max_conns: 96,
+                max_pending: 16,
+                levels: vec![SaturationLevel {
+                    clients: 256,
+                    requests: 512,
+                    ok: 300,
+                    shed: 200,
+                    errors: 0,
+                    dropped: 12,
+                    rps: 150.0,
+                    p50_ms: 4.0,
+                    p99_ms: 40.0,
+                }],
+            }),
         };
         let j = snapshot_json_full(&stages, None, None, Some(&sb), &cfg);
         let s = j.get("serve").unwrap();
@@ -874,8 +1096,58 @@ mod tests {
         assert_eq!(levels[0].get("clients").unwrap().as_usize().unwrap(), 8);
         assert_eq!(levels[0].get("warm_rps").unwrap().as_f64().unwrap(), 80.0);
         assert_eq!(sb.levels[0].speedup(), 2.0);
+        let sat = s.get("saturation").unwrap();
+        assert_eq!(sat.get("max_conns").unwrap().as_usize().unwrap(), 96);
+        let sl = &sat.get("levels").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sl.get("shed").unwrap().as_usize().unwrap(), 200);
+        assert_eq!(sl.get("rps").unwrap().as_f64().unwrap(), 150.0);
         // the plain snapshot has no serve section
         assert!(snapshot_json(&stages, &cfg).opt("serve").is_none());
+    }
+
+    #[test]
+    fn compare_covers_saturation_levels_and_tolerates_their_absence() {
+        let mk = |stage_secs: f64, rps: f64| {
+            let stages =
+                vec![StageResult { name: "library_generation", serial_secs: 1.0, parallel_secs: stage_secs }];
+            let sb = ServeBench {
+                startup_cold_secs: 1.0,
+                startup_warm_secs: 0.5,
+                levels: vec![],
+                saturation: Some(SaturationBench {
+                    max_conns: 96,
+                    max_pending: 16,
+                    levels: vec![SaturationLevel {
+                        clients: 256,
+                        requests: 512,
+                        ok: 400,
+                        shed: 100,
+                        errors: 0,
+                        dropped: 12,
+                        rps,
+                        p50_ms: 1.0,
+                        p99_ms: 2.0,
+                    }],
+                }),
+            };
+            snapshot_json_full(&stages, None, None, Some(&sb), &BenchConfig { jobs: 1, quick: true })
+        };
+        let old = mk(0.5, 100.0);
+        let new = mk(0.5, 200.0); // twice the overload throughput
+        let deltas = compare_snapshots(&old, &new).unwrap();
+        let sat = deltas
+            .iter()
+            .find(|d| d.name == "serve.saturation.c256")
+            .expect("saturation delta present");
+        assert!((sat.speedup() - 2.0).abs() < 1e-9, "1/rps halved → 2× speedup");
+        assert!(!sat.is_regression());
+        // old snapshots without the section still compare on stages alone
+        let plain = snapshot_json(
+            &[StageResult { name: "library_generation", serial_secs: 1.0, parallel_secs: 0.5 }],
+            &BenchConfig { jobs: 1, quick: true },
+        );
+        let deltas = compare_snapshots(&plain, &new).unwrap();
+        assert!(deltas.iter().all(|d| !d.name.starts_with("serve.saturation")));
     }
 
     #[test]

@@ -48,10 +48,15 @@ COMMANDS
                (honors artifacts=, --cache-dir; gc removes every entry)
   serve        long-running evaluation daemon: newline-delimited JSON over
                TCP (ops: evaluate | energy | select | status | shutdown)
-               (addr=127.0.0.1:4271  models=<model>/<cfg>[,...]
-                max_batch=16, plus the common keys below; concurrent
-                requests are batched into parallel waves and answers are
-                bit-identical to direct Session calls at every jobs=)
+               plus an optional HTTP/1.1 gateway onto the same engine
+               (addr=127.0.0.1:4271  http=127.0.0.1:8471
+                models=<model>/<cfg>[,...]  max_batch=16
+                max_conns=1024  max_pending=4096  max_line=1048576
+                write_timeout_ms=10000  --http-log, plus the common keys
+                below; concurrent requests are batched into parallel
+                waves and answers are bit-identical to direct Session
+                calls at every jobs=; over capacity the daemon sheds
+                explicitly — \"shed\":true lines / HTTP 503 + Retry-After)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
                fig5c | all   (writes results/<id>.csv)
   help         this text
@@ -411,30 +416,88 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             ]);
         }
         st.print();
+        if let Some(sat) = &serve.saturation {
+            let mut at = Table::new(
+                format!(
+                    "saturation under tiny caps (max_conns {}, max_pending {})",
+                    sat.max_conns, sat.max_pending
+                ),
+                &["clients", "requests", "ok", "shed", "dropped", "req/s", "p50", "p99"],
+            );
+            for l in &sat.levels {
+                at.row(vec![
+                    l.clients.to_string(),
+                    l.requests.to_string(),
+                    l.ok.to_string(),
+                    l.shed.to_string(),
+                    (l.dropped + l.errors).to_string(),
+                    format!("{:.1}", l.rps),
+                    format!("{:.1}ms", l.p50_ms),
+                    format!("{:.1}ms", l.p99_ms),
+                ]);
+            }
+            at.print();
+        }
     }
     Ok(0)
 }
 
 fn cmd_serve(args: &[String]) -> Result<i32> {
-    let mut addr = "127.0.0.1:4271".to_string();
+    let defaults = crate::serve::ServeConfig::default();
+    let mut addr = defaults.addr.clone();
+    let mut http_addr: Option<String> = None;
     let mut models: Option<Vec<String>> = None;
-    let mut max_batch = 16usize;
+    let mut max_batch = defaults.max_batch;
+    let mut max_conns = defaults.max_conns;
+    let mut max_pending = defaults.max_pending;
+    let mut max_line = defaults.max_line;
+    let mut write_timeout_ms = defaults.write_timeout_ms;
+    let mut access_log = false;
     let mut kv = Vec::new();
     for a in args {
+        if a == "--http-log" || a == "http_log" {
+            access_log = true;
+            continue;
+        }
         match a.strip_prefix("--").unwrap_or(a.as_str()).split_once('=') {
             Some(("addr", v)) => addr = v.to_string(),
+            Some(("http", v)) => http_addr = Some(v.to_string()),
             Some(("models", v)) => {
                 models = Some(v.split(',').map(|s| s.trim().to_string()).collect())
             }
             Some(("max_batch", v)) | Some(("max-batch", v)) => {
                 max_batch = v.parse().context("max_batch")?
             }
+            Some(("max_conns", v)) | Some(("max-conns", v)) => {
+                max_conns = v.parse().context("max_conns")?
+            }
+            Some(("max_pending", v)) | Some(("max-pending", v)) => {
+                max_pending = v.parse().context("max_pending")?
+            }
+            Some(("max_line", v)) | Some(("max-line", v)) => {
+                max_line = v.parse().context("max_line")?
+            }
+            Some(("write_timeout_ms", v)) | Some(("write-timeout-ms", v)) => {
+                write_timeout_ms = v.parse().context("write_timeout_ms")?
+            }
+            Some(("http_log", v)) | Some(("http-log", v)) => access_log = v != "0",
             _ => kv.push(a.clone()),
         }
     }
     let base = base_config(&kv)?;
     let models = models.unwrap_or_else(|| vec![format!("{}/{}", base.model, base.cfg)]);
-    let scfg = crate::serve::ServeConfig { addr, models, max_batch, base };
+    let scfg = crate::serve::ServeConfig {
+        addr,
+        http_addr,
+        models,
+        max_batch,
+        max_conns,
+        max_pending,
+        max_line,
+        write_timeout_ms,
+        access_log,
+        base,
+    };
     println!("== fames serve ({}) ==", crate::serve::PROTOCOL);
     let server = crate::serve::Server::bind(&scfg)?;
     let mut t = Table::new("models", &["key", "layers", "warm (s)", "library"]);
@@ -461,6 +524,13 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
         "listening on {shared_addr} (max_batch {max_batch}, jobs {}) — send \
          {{\"id\":0,\"op\":\"shutdown\"}} to stop",
         par::effective_jobs(scfg.base.jobs)
+    );
+    if let Some(h) = server.http_local_addr() {
+        println!("http gateway on {h} (POST /v1/evaluate|energy|select, GET /v1/status)");
+    }
+    println!(
+        "admission: max_conns {max_conns}, max_pending {max_pending}, \
+         max_line {max_line} B, write_timeout {write_timeout_ms} ms"
     );
     server.run()?;
     println!("fames serve: drained and stopped");

@@ -11,6 +11,12 @@ use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
+/// Most container levels (`{`/`[`) a document may nest. The parser is
+/// non-recursive (explicit work stack), so this is a policy knob against
+/// pathological inputs — the artifact store, config loader and serve wire
+/// path all share this parser — not a stack-overflow guard by accident.
+pub const MAX_DEPTH: usize = 128;
+
 /// A JSON value. Object keys are ordered (BTreeMap) for deterministic output.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -181,6 +187,13 @@ impl Json {
         out
     }
 
+    /// Append the compact serialization to an existing buffer — the
+    /// streaming half of the serve wire encoder, which reuses one buffer
+    /// per connection instead of allocating a `String` per response part.
+    pub fn write_compact_into(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     /// Pretty 2-space-indented serialization.
     pub fn pretty(&self) -> String {
         let mut out = String::new();
@@ -245,7 +258,7 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_num(out: &mut String, n: f64) {
+pub(crate) fn write_num(out: &mut String, n: f64) {
     if !n.is_finite() {
         // JSON has no NaN/Inf; clamp deterministically and loudly.
         out.push_str("null");
@@ -264,7 +277,7 @@ fn write_num(out: &mut String, n: f64) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -310,17 +323,123 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Parse one value. Non-recursive: open containers live on an explicit
+    /// frame stack bounded by [`MAX_DEPTH`], so pathologically nested input
+    /// is a clean `Err` instead of a stack overflow — this parser backs the
+    /// artifact store, the config loader and the serve wire fallback path.
     fn value(&mut self) -> Result<Json> {
-        self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => bail!("unexpected {:?} at offset {}", other.map(|c| c as char), self.pos),
+        enum Frame {
+            Arr(Vec<Json>),
+            /// Map under construction plus the key awaiting its value.
+            Obj(BTreeMap<String, Json>, String),
+        }
+        let mut stack: Vec<Frame> = Vec::new();
+        loop {
+            // parse the head of the next value; container opens push a
+            // frame and loop back around for their first element
+            self.skip_ws();
+            let mut done: Json = match self.peek() {
+                Some(b'{') => {
+                    if stack.len() >= MAX_DEPTH {
+                        bail!("nesting deeper than {MAX_DEPTH} at offset {}", self.pos);
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        Json::Obj(BTreeMap::new())
+                    } else {
+                        let key = self.string()?;
+                        self.skip_ws();
+                        self.expect(b':')?;
+                        stack.push(Frame::Obj(BTreeMap::new(), key));
+                        continue;
+                    }
+                }
+                Some(b'[') => {
+                    if stack.len() >= MAX_DEPTH {
+                        bail!("nesting deeper than {MAX_DEPTH} at offset {}", self.pos);
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        Json::Arr(Vec::new())
+                    } else {
+                        stack.push(Frame::Arr(Vec::new()));
+                        continue;
+                    }
+                }
+                Some(b'"') => Json::Str(self.string()?),
+                Some(b't') => self.lit("true", Json::Bool(true))?,
+                Some(b'f') => self.lit("false", Json::Bool(false))?,
+                Some(b'n') => self.lit("null", Json::Null)?,
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number()?,
+                other => {
+                    bail!("unexpected {:?} at offset {}", other.map(|c| c as char), self.pos)
+                }
+            };
+            // fold the completed value into the innermost open container;
+            // closing a container completes *it* as a value, hence the loop
+            loop {
+                let Some(top) = stack.last_mut() else {
+                    return Ok(done);
+                };
+                let is_obj = match top {
+                    Frame::Arr(a) => {
+                        a.push(done);
+                        false
+                    }
+                    Frame::Obj(m, key) => {
+                        let k = std::mem::take(key);
+                        m.insert(k, done);
+                        true
+                    }
+                };
+                self.skip_ws();
+                let sep = self.peek();
+                match (is_obj, sep) {
+                    (false, Some(b',')) => {
+                        self.pos += 1;
+                        break; // next array element
+                    }
+                    (false, Some(b']')) => {
+                        self.pos += 1;
+                        match stack.pop() {
+                            Some(Frame::Arr(a)) => done = Json::Arr(a),
+                            _ => unreachable!("array frame on top"),
+                        }
+                    }
+                    (true, Some(b',')) => {
+                        self.pos += 1;
+                        self.skip_ws();
+                        let k = self.string()?;
+                        self.skip_ws();
+                        self.expect(b':')?;
+                        if let Some(Frame::Obj(_, key)) = stack.last_mut() {
+                            *key = k;
+                        }
+                        break; // next object value
+                    }
+                    (true, Some(b'}')) => {
+                        self.pos += 1;
+                        match stack.pop() {
+                            Some(Frame::Obj(m, _)) => done = Json::Obj(m),
+                            _ => unreachable!("object frame on top"),
+                        }
+                    }
+                    (false, other) => bail!(
+                        "expected ',' or ']', found {:?} at {}",
+                        other.map(|c| c as char),
+                        self.pos
+                    ),
+                    (true, other) => bail!(
+                        "expected ',' or '}}', found {:?} at {}",
+                        other.map(|c| c as char),
+                        self.pos
+                    ),
+                }
+            }
         }
     }
 
@@ -330,55 +449,6 @@ impl<'a> Parser<'a> {
             Ok(v)
         } else {
             bail!("invalid literal at offset {}", self.pos)
-        }
-    }
-
-    fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
-        let mut m = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Json::Obj(m));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let v = self.value()?;
-            m.insert(key, v);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.pos += 1,
-                Some(b'}') => {
-                    self.pos += 1;
-                    return Ok(Json::Obj(m));
-                }
-                other => bail!("expected ',' or '}}', found {:?} at {}", other.map(|c| c as char), self.pos),
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
-        let mut a = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Json::Arr(a));
-        }
-        loop {
-            a.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.pos += 1,
-                Some(b']') => {
-                    self.pos += 1;
-                    return Ok(Json::Arr(a));
-                }
-                other => bail!("expected ',' or ']', found {:?} at {}", other.map(|c| c as char), self.pos),
-            }
         }
     }
 
@@ -574,6 +644,39 @@ mod tests {
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse(r#""\ud83d""#).is_err()); // lone surrogate
+    }
+
+    #[test]
+    fn pathological_nesting_is_a_clean_error() {
+        // a recursive parser would blow the stack on these; the iterative
+        // one must return Err without touching more than MAX_DEPTH frames
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+        let mut deep_obj = String::new();
+        for _ in 0..50_000 {
+            deep_obj.push_str("{\"k\":");
+        }
+        assert!(Json::parse(&deep_obj).is_err());
+
+        // exactly at the bound parses; one past it is rejected loudly
+        let at = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&at).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&over).unwrap_err();
+        assert!(format!("{err:#}").contains("nesting"), "{err:#}");
+        // mixed object/array nesting hits the same bound
+        let mut mixed = String::new();
+        for _ in 0..(MAX_DEPTH / 2 + 1) {
+            mixed.push_str("{\"k\":[");
+        }
+        assert!(Json::parse(&mixed).is_err());
+    }
+
+    #[test]
+    fn write_compact_into_appends() {
+        let j = Json::obj().with("a", 1usize);
+        let mut buf = String::from("prefix:");
+        j.write_compact_into(&mut buf);
+        assert_eq!(buf, format!("prefix:{}", j.compact()));
     }
 
     #[test]

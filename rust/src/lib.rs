@@ -52,14 +52,21 @@
 //!
 //! # Serving
 //!
-//! `fames serve` ([`serve`]) runs the system as a long-lived daemon: a
-//! dependency-free TCP listener answers newline-delimited JSON requests
-//! (`evaluate` / `energy` / `select` / `status` / `shutdown`) against N
-//! warmed model sessions, batching concurrent requests into `util::par`
-//! waves over the fused kernel paths. Responses are **bit-identical to the
-//! equivalent direct [`pipeline::Session`] calls** at every worker count
-//! (`tests/serve_smoke.rs`); `fames bench` reports serve throughput at
-//! 1/8/64 concurrent clients.
+//! `fames serve` ([`serve`]) runs the system as a long-lived daemon with
+//! two dependency-free front doors — newline-delimited JSON over TCP, and
+//! an optional HTTP/1.1 gateway ([`serve::http`]: `POST
+//! /v1/{evaluate,energy,select}`, `GET /v1/status`) — over one engine:
+//! requests decode through the single-pass zero-tree [`serve::wire`] path
+//! (depth- and length-bounded, panic-free), queue per client behind an
+//! admission gate ([`serve::admission`]: connection cap, bounded backlog
+//! with explicit `"shed":true` / 503 answers, slow-client eviction), and
+//! batch round-robin into `util::par` waves over the fused kernel paths.
+//! Responses are **bit-identical to the equivalent direct
+//! [`pipeline::Session`] calls** at every worker count
+//! (`tests/serve_smoke.rs`; `tests/serve_adversarial.rs` pins the
+//! never-panic/always-answer contract under hostile input and overload);
+//! `fames bench` reports serve throughput at 1/8/64 concurrent clients
+//! plus a saturation profile at 1/8/64/256 clients against tiny caps.
 //!
 //! # Incremental runs
 //!

@@ -1,79 +1,155 @@
-//! Request batcher — coalesces concurrent requests into `util::par` waves.
+//! Request batcher — coalesces concurrent requests into `util::par` waves,
+//! with admission control and per-client fairness.
 //!
-//! Connection readers enqueue parsed compute requests ([`Job`]s) into one
-//! shared FIFO; a single dispatcher thread drains up to `max_batch` jobs at
-//! a time and scores the whole wave through `util::par::par_map`, so N
-//! concurrent clients turn into one fused batched invocation of the kernel
-//! layer per wave (each worker drives the native backend's fused
-//! LUT/GEMM kernels, checking buffers out of the per-executable
-//! `kernel::Scratch` pool). Per-request results are exactly the direct
-//! `Session` call — batching changes *when* a request runs, never *what*
-//! it computes — which is the serving layer's bit-identity guarantee.
+//! Connection readers enqueue parsed compute requests ([`Job`]s); a single
+//! dispatcher thread drains up to `max_batch` jobs at a time and scores the
+//! whole wave through `util::par::par_map`, so N concurrent clients turn
+//! into one fused batched invocation of the kernel layer per wave. Per-
+//! request results are exactly the direct `Session` call — batching changes
+//! *when* a request runs, never *what* it computes — which is the serving
+//! layer's bit-identity guarantee.
+//!
+//! # Bounded queue (load shedding)
+//!
+//! The queue holds at most `max_pending` jobs across all clients. Past
+//! that, [`Batcher::enqueue`] returns [`Enqueue::Shed`] and the caller
+//! answers with an explicit retry-able shed response instead of queueing
+//! unbounded work — the backpressure half of `serve::admission`.
+//!
+//! # Round-robin fairness
+//!
+//! Jobs are queued **per client** and waves are filled by cycling over
+//! client queues (one job per client per rotation, resuming after the last
+//! served client). A connection pipelining hundreds of requests therefore
+//! cannot starve another client: the second client's first request joins
+//! the very next wave rather than queueing behind the flood. With a single
+//! client the rotation degenerates to the old FIFO order, so response
+//! bytes and ordering are unchanged for the existing tests.
 //!
 //! Shutdown drains: `close()` wakes the dispatcher, but `next_wave` keeps
-//! handing out queued jobs until the FIFO is empty, so every accepted
+//! handing out queued jobs until every queue is empty, so every accepted
 //! request is answered before the serve loop exits.
 
-use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Bound;
 use std::sync::{Condvar, Mutex};
 
 use super::codec::Request;
+use super::ReplySink;
 
-/// One queued compute request plus its connection's outbound line channel.
+/// One queued compute request, its originating client (fairness key) and
+/// the sink its response goes back through.
 pub struct Job {
+    /// Connection id assigned at accept time — the round-robin key.
+    pub client: u64,
     pub request: Request,
-    pub reply: Sender<String>,
+    pub sink: ReplySink,
+}
+
+/// Outcome of [`Batcher::enqueue`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Enqueue {
+    /// Queued; the dispatcher will answer through the job's sink.
+    Ok,
+    /// Queue full — the caller must send an explicit shed response.
+    Shed,
+    /// Batcher closed (shutdown in progress) — answer shutting-down.
+    Closed,
 }
 
 struct QueueState {
-    jobs: VecDeque<Job>,
+    /// Per-client FIFO queues, keyed by connection id.
+    queues: BTreeMap<u64, VecDeque<Job>>,
+    /// Total queued jobs across all clients (the `max_pending` gauge).
+    pending: usize,
+    /// Round-robin cursor: the next wave slot goes to the first client id
+    /// strictly greater than this (wrapping to the smallest).
+    cursor: u64,
     closed: bool,
 }
 
-/// Shared FIFO + condvar (no external deps; `std` primitives only).
+/// Shared queues + condvar (no external deps; `std` primitives only).
 pub struct Batcher {
     queue: Mutex<QueueState>,
     cv: Condvar,
     /// Most jobs one wave may carry (CLI `max_batch=`).
     pub max_batch: usize,
+    /// Most jobs queued across all clients (CLI `max_pending=`).
+    pub max_pending: usize,
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize) -> Batcher {
+    pub fn new(max_batch: usize, max_pending: usize) -> Batcher {
         Batcher {
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            queue: Mutex::new(QueueState {
+                queues: BTreeMap::new(),
+                pending: 0,
+                cursor: 0,
+                closed: false,
+            }),
             cv: Condvar::new(),
             max_batch: max_batch.max(1),
+            max_pending: max_pending.max(1),
         }
     }
 
-    /// Enqueue a job; `false` when the batcher is already closed (the
-    /// caller should answer with a shutting-down error instead).
-    pub fn enqueue(&self, job: Job) -> bool {
+    /// Enqueue a job on its client's queue, shedding past `max_pending`.
+    pub fn enqueue(&self, job: Job) -> Enqueue {
         let mut q = self.queue.lock().unwrap();
         if q.closed {
-            return false;
+            return Enqueue::Closed;
         }
-        q.jobs.push_back(job);
+        if q.pending >= self.max_pending {
+            return Enqueue::Shed;
+        }
+        q.queues.entry(job.client).or_default().push_back(job);
+        q.pending += 1;
         self.cv.notify_all();
-        true
+        Enqueue::Ok
     }
 
     /// Block until at least one job is queued (or the batcher closes with
-    /// an empty queue — then `None`). Drains up to `max_batch` jobs.
+    /// empty queues — then `None`). Fills a wave of up to `max_batch` jobs
+    /// round-robin across clients.
     pub fn next_wave(&self) -> Option<Vec<Job>> {
         let mut q = self.queue.lock().unwrap();
         loop {
-            if !q.jobs.is_empty() {
-                let n = q.jobs.len().min(self.max_batch);
-                return Some(q.jobs.drain(..n).collect());
+            if q.pending > 0 {
+                return Some(Self::drain_wave(&mut q, self.max_batch));
             }
             if q.closed {
                 return None;
             }
             q = self.cv.wait(q).unwrap();
         }
+    }
+
+    /// One job per client per rotation, resuming after `cursor`, cycling
+    /// until the wave is full or the queues are empty.
+    fn drain_wave(q: &mut QueueState, max_batch: usize) -> Vec<Job> {
+        let mut wave = Vec::with_capacity(max_batch.min(q.pending));
+        while wave.len() < max_batch && q.pending > 0 {
+            let key = q
+                .queues
+                .range((Bound::Excluded(q.cursor), Bound::Unbounded))
+                .next()
+                .map(|(k, _)| *k)
+                .or_else(|| q.queues.keys().next().copied());
+            let Some(key) = key else { break };
+            q.cursor = key;
+            let mut emptied = false;
+            if let Some(jobs) = q.queues.get_mut(&key) {
+                if let Some(job) = jobs.pop_front() {
+                    wave.push(job);
+                    q.pending -= 1;
+                }
+                emptied = jobs.is_empty();
+            }
+            if emptied {
+                q.queues.remove(&key);
+            }
+        }
+        wave
     }
 
     /// Stop accepting; queued jobs still drain through `next_wave`.
@@ -84,31 +160,31 @@ impl Batcher {
 
     /// Jobs currently queued (the `status` response's queue depth).
     pub fn pending(&self) -> usize {
-        self.queue.lock().unwrap().jobs.len()
+        self.queue.lock().unwrap().pending
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::codec::{parse_request, Request};
+    use super::super::ReplySink;
     use super::*;
     use std::sync::mpsc;
     use std::sync::Arc;
 
-    fn job(id: i64) -> (Job, mpsc::Receiver<String>) {
-        let (tx, rx) = mpsc::channel();
-        let request: Request =
-            parse_request(&format!(r#"{{"id":{id},"op":"status"}}"#)).unwrap();
-        (Job { request, reply: tx }, rx)
+    fn job(client: u64, id: i64) -> (Job, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::sync_channel(64);
+        let request: Request = parse_request(&format!(r#"{{"id":{id},"op":"status"}}"#)).unwrap();
+        (Job { client, request, sink: ReplySink::Line { tx, conn: None } }, rx)
     }
 
     #[test]
-    fn waves_respect_fifo_order_and_max_batch() {
-        let b = Batcher::new(2);
+    fn single_client_waves_keep_fifo_order_and_max_batch() {
+        let b = Batcher::new(2, 1024);
         let mut rxs = Vec::new();
         for id in 0..5 {
-            let (j, rx) = job(id);
-            assert!(b.enqueue(j));
+            let (j, rx) = job(1, id);
+            assert_eq!(b.enqueue(j), Enqueue::Ok);
             rxs.push(rx);
         }
         assert_eq!(b.pending(), 5);
@@ -120,25 +196,68 @@ mod tests {
     }
 
     #[test]
+    fn waves_interleave_clients_round_robin() {
+        let b = Batcher::new(4, 1024);
+        let mut rxs = Vec::new();
+        // client 1 floods six requests before client 2's single request
+        for id in 0..6 {
+            let (j, rx) = job(1, id);
+            assert_eq!(b.enqueue(j), Enqueue::Ok);
+            rxs.push(rx);
+        }
+        let (j, rx) = job(2, 100);
+        assert_eq!(b.enqueue(j), Enqueue::Ok);
+        rxs.push(rx);
+
+        let wave = b.next_wave().unwrap();
+        let ids: Vec<i64> = wave.iter().map(|j| j.request.id).collect();
+        assert!(
+            ids.contains(&100),
+            "client 2's request must ride the first wave despite the flood (got {ids:?})"
+        );
+        // rotation: one job per client per cycle, flood fills the rest
+        assert_eq!(ids, vec![0, 100, 1, 2]);
+        // remaining flood drains in FIFO order
+        let rest: Vec<i64> =
+            b.next_wave().unwrap().iter().map(|j| j.request.id).collect();
+        assert_eq!(rest, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_past_max_pending() {
+        let b = Batcher::new(8, 2);
+        let (j1, _r1) = job(1, 1);
+        let (j2, _r2) = job(2, 2);
+        assert_eq!(b.enqueue(j1), Enqueue::Ok);
+        assert_eq!(b.enqueue(j2), Enqueue::Ok);
+        let (j3, _r3) = job(3, 3);
+        assert_eq!(b.enqueue(j3), Enqueue::Shed, "third job exceeds max_pending=2");
+        // draining makes room again
+        assert_eq!(b.next_wave().unwrap().len(), 2);
+        let (j4, _r4) = job(3, 4);
+        assert_eq!(b.enqueue(j4), Enqueue::Ok);
+    }
+
+    #[test]
     fn close_drains_queued_jobs_then_ends() {
-        let b = Batcher::new(8);
-        let (j, _rx) = job(1);
-        assert!(b.enqueue(j));
+        let b = Batcher::new(8, 1024);
+        let (j, _rx) = job(1, 1);
+        assert_eq!(b.enqueue(j), Enqueue::Ok);
         b.close();
-        let (j2, _rx2) = job(2);
-        assert!(!b.enqueue(j2), "closed batcher must reject new jobs");
+        let (j2, _rx2) = job(1, 2);
+        assert_eq!(b.enqueue(j2), Enqueue::Closed, "closed batcher must reject new jobs");
         assert_eq!(b.next_wave().unwrap().len(), 1, "queued job drains after close");
         assert!(b.next_wave().is_none(), "empty + closed ends the dispatcher");
     }
 
     #[test]
     fn next_wave_blocks_until_work_arrives() {
-        let b = Arc::new(Batcher::new(4));
+        let b = Arc::new(Batcher::new(4, 1024));
         let b2 = b.clone();
         let waiter = std::thread::spawn(move || b2.next_wave().map(|w| w.len()));
         std::thread::sleep(std::time::Duration::from_millis(30));
-        let (j, _rx) = job(7);
-        assert!(b.enqueue(j));
+        let (j, _rx) = job(1, 7);
+        assert_eq!(b.enqueue(j), Enqueue::Ok);
         assert_eq!(waiter.join().unwrap(), Some(1));
     }
 }

@@ -1,13 +1,55 @@
 //! Blocking NDJSON client for `fames serve` — used by the smoke tests, the
 //! serve bench, and as the embedding reference implementation.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::json::Json;
+
+/// Per-request verdict from [`Client::call_many_outcomes`]: unlike
+/// [`Client::call_many`], overload and error responses surface here per
+/// id instead of failing the whole pipeline.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// `ok:true` — the `result` payload.
+    Ok(Json),
+    /// `ok:false` — the server's message; `shed` marks an explicit,
+    /// retry-able overload refusal rather than a request defect.
+    Err { error: String, shed: bool },
+    /// The connection died (or the response was unmatchable) before this
+    /// request was answered.
+    Lost,
+}
+
+impl Outcome {
+    /// Explicitly shed by admission control — safe to retry.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Err { shed: true, .. })
+    }
+}
+
+/// Classify one response envelope.
+fn outcome_of(resp: &Json) -> Outcome {
+    if resp.get("ok").and_then(|j| j.as_bool()).unwrap_or(false) {
+        match resp.get("result") {
+            Ok(r) => Outcome::Ok(r.clone()),
+            Err(_) => Outcome::Err { error: "ok response without result".to_string(), shed: false },
+        }
+    } else {
+        let error = resp
+            .get("error")
+            .ok()
+            .and_then(|j| j.as_str().ok())
+            .unwrap_or("?")
+            .to_string();
+        let shed = resp.get("shed").and_then(|j| j.as_bool()).unwrap_or(false);
+        Outcome::Err { error, shed }
+    }
+}
 
 /// One connection to a serve daemon.
 pub struct Client {
@@ -63,6 +105,71 @@ impl Client {
                 by_id.remove(&id).with_context(|| format!("no response for id {id}"))
             })
             .collect()
+    }
+
+    /// Pipeline several requests and return one [`Outcome`] per request,
+    /// in request order. Never fails as a whole: sheds and server errors
+    /// come back per id, a dead connection marks the unanswered tail
+    /// [`Outcome::Lost`], and a connection-level shed (the gate's `id:-1`
+    /// refusal line) marks every unanswered request shed so callers can
+    /// retry.
+    pub fn call_many_outcomes(&mut self, reqs: &[Json]) -> Vec<Outcome> {
+        let mut sent = 0usize;
+        for r in reqs {
+            if self.send(r).is_err() {
+                break; // answered prefix still drains below
+            }
+            sent += 1;
+        }
+        let want: Vec<Option<i64>> =
+            reqs.iter().map(|r| r.get("id").and_then(|j| j.as_i64()).ok()).collect();
+        let want_set: BTreeSet<i64> = want.iter().flatten().copied().collect();
+        let mut by_id: BTreeMap<i64, Outcome> = BTreeMap::new();
+        let mut conn_shed: Option<String> = None;
+        for _ in 0..sent {
+            let Ok(resp) = self.recv() else { break };
+            let id = resp.get("id").and_then(|j| j.as_i64()).unwrap_or(i64::MIN);
+            if want_set.contains(&id) {
+                by_id.insert(id, outcome_of(&resp));
+            } else if let Outcome::Err { error, shed: true } = outcome_of(&resp) {
+                // the admission gate answers with one id:-1 shed line and
+                // closes — it refuses the whole connection, not one id
+                conn_shed = Some(error);
+            }
+        }
+        want.into_iter()
+            .map(|id| match id.and_then(|id| by_id.remove(&id)) {
+                Some(o) => o,
+                None => match &conn_shed {
+                    Some(error) => Outcome::Err { error: error.clone(), shed: true },
+                    None => Outcome::Lost,
+                },
+            })
+            .collect()
+    }
+
+    /// [`Client::call_many_outcomes`], retrying each shed request once
+    /// after `backoff` — the reference polite-client loop for overload:
+    /// back off, resend only what was shed, splice results back in
+    /// request order.
+    pub fn call_many_retry_shed(&mut self, reqs: &[Json], backoff: Duration) -> Vec<Outcome> {
+        let mut outcomes = self.call_many_outcomes(reqs);
+        let retry_idx: Vec<usize> = outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_shed())
+            .map(|(i, _)| i)
+            .collect();
+        if retry_idx.is_empty() {
+            return outcomes;
+        }
+        std::thread::sleep(backoff);
+        let retry_reqs: Vec<Json> = retry_idx.iter().map(|&i| reqs[i].clone()).collect();
+        let retried = self.call_many_outcomes(&retry_reqs);
+        for (slot, out) in retry_idx.into_iter().zip(retried) {
+            outcomes[slot] = out;
+        }
+        outcomes
     }
 
     /// `result` payload of a successful response; `Err` with the server's

@@ -1,0 +1,428 @@
+//! HTTP/1.1 gateway for `fames serve` — typed routes over the same engine
+//! as the NDJSON front door, std `TcpListener` only (no new dependencies).
+//!
+//! # Routes
+//!
+//! | Method | Path           | Body                         | Success payload            |
+//! |--------|----------------|------------------------------|----------------------------|
+//! | POST   | `/v1/evaluate` | `{"batches":..,"selection":..}` | NDJSON ok envelope      |
+//! | POST   | `/v1/energy`   | `{"selection":[..]}`         | NDJSON ok envelope         |
+//! | POST   | `/v1/select`   | `{"r_energy":..,"omega":..}` | NDJSON ok envelope         |
+//! | GET    | `/v1/status`   | —                            | bare status object         |
+//!
+//! POST bodies are the NDJSON request objects minus `"op"` (the route
+//! supplies it; an explicit `"op"` must match the route). Bodies decode
+//! through the same zero-alloc [`wire`] path as request lines, and success
+//! payloads are the byte-identical NDJSON envelopes — one engine, one
+//! wire format, two transports.
+//!
+//! # Errors and overload
+//!
+//! Errors are structured: `{"error":{"code":..,"detail":..,"message":..},
+//! "id":..,"ok":false}` with a machine-readable `code` (`bad_request`,
+//! `unknown_model`, `overloaded`, `shutting_down`, ...). Overload maps to
+//! 503 + `Retry-After` (queue full or connection cap), oversized bodies to
+//! 413, unknown routes to 404. Each admitted connection holds one
+//! [`admission::Gate`] slot for its keep-alive lifetime; read/write
+//! timeouts evict idle or stuck clients so slots always come back.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::json;
+
+use super::{admission, batcher, wire, ComputeOut, ReplySink, Shared, WaveResult};
+
+/// Most bytes in one request/header line (the request body is bounded
+/// separately, by `ServeConfig::max_line`).
+const MAX_HEADER_LINE: usize = 8192;
+/// Most headers one request may carry.
+const MAX_HEADERS: usize = 100;
+
+/// One parsed response's metadata: status line + connection handling.
+struct Outcome {
+    status: u16,
+    reason: &'static str,
+    /// Add `Retry-After` (503 sheds).
+    retry_after: bool,
+    /// Close the connection after answering (desync or client request).
+    close: bool,
+}
+
+impl Outcome {
+    fn ok() -> Outcome {
+        Outcome { status: 200, reason: "OK", retry_after: false, close: false }
+    }
+
+    fn err(status: u16, reason: &'static str) -> Outcome {
+        Outcome { status, reason, retry_after: false, close: false }
+    }
+}
+
+/// Accept loop for the HTTP listener: gate admission, one thread per
+/// connection, joined before returning (mirrors the NDJSON loop in
+/// `Server::run`).
+pub(crate) fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    let mut conns: Vec<(std::thread::JoinHandle<()>, TcpStream)> = Vec::new();
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        conns.retain(|(h, _)| !h.is_finished());
+        let Some(guard) = shared.gate.try_enter() else {
+            refuse_connection(stream);
+            continue;
+        };
+        let client_id = shared.clients.fetch_add(1, Ordering::Relaxed);
+        let clone = stream.try_clone();
+        let shared2 = shared.clone();
+        let handle = std::thread::spawn(move || {
+            serve_http_connection(stream, &shared2, client_id, guard);
+        });
+        match clone {
+            Ok(c) => conns.push((handle, c)),
+            Err(_) => drop(handle),
+        }
+    }
+    for (_, stream) in &conns {
+        let _ = stream.shutdown(std::net::Shutdown::Read);
+    }
+    for (handle, _) in conns {
+        let _ = handle.join();
+    }
+}
+
+/// Answer a gate-refused connection with one 503 and close, off-thread so
+/// a client that never reads cannot stall the accept loop.
+fn refuse_connection(stream: TcpStream) {
+    std::thread::spawn(move || {
+        let mut s = stream;
+        let _ = s.set_write_timeout(Some(Duration::from_millis(1000)));
+        let mut body = String::new();
+        error_body_into(&mut body, -1, "overloaded", "connection limit reached", admission::OVERLOADED_CONNS);
+        let out = Outcome { status: 503, reason: "Service Unavailable", retry_after: true, close: true };
+        let _ = write_response(&mut s, &out, &body);
+    });
+}
+
+/// Serve one keep-alive HTTP connection: parse request + headers with
+/// bounded lines, route, decode the body through the zero-alloc wire path,
+/// rendezvous with the dispatcher, answer. Single-threaded per connection
+/// — requests on one connection are serial by protocol.
+fn serve_http_connection(
+    stream: TcpStream,
+    shared: &Shared,
+    client_id: u64,
+    _guard: admission::ConnGuard,
+) {
+    let timeout = Duration::from_millis(shared.write_timeout_ms);
+    let _ = stream.set_write_timeout(Some(timeout));
+    // idle keep-alive clients are evicted too: an admission slot must not
+    // be parked forever by a silent peer
+    let _ = stream.set_read_timeout(Some(timeout));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut writer = BufWriter::new(write_half);
+    let mut reader = BufReader::new(stream);
+    let mut line: Vec<u8> = Vec::new();
+    let mut body_buf: Vec<u8> = Vec::new();
+    // reusable per-connection response buffer (the streaming encoder
+    // appends into it; no per-request allocation on the happy path)
+    let mut resp = String::with_capacity(256);
+
+    loop {
+        // -- request line (skip stray blank lines between requests) --
+        let req_line = loop {
+            match wire::read_line_bounded(&mut reader, &mut line, MAX_HEADER_LINE) {
+                Err(_) | Ok(wire::LineRead::Eof) => return,
+                Ok(wire::LineRead::Oversized) => {
+                    error_body_into(&mut resp, -1, "bad_request", "request line too long", "");
+                    let out = Outcome { close: true, ..Outcome::err(431, "Request Header Fields Too Large") };
+                    let _ = write_response(&mut writer, &out, &resp);
+                    return;
+                }
+                Ok(wire::LineRead::Line) => {}
+            }
+            let Ok(text) = std::str::from_utf8(&line) else {
+                error_body_into(&mut resp, -1, "bad_request", "request line is not valid UTF-8", "");
+                let out = Outcome { close: true, ..Outcome::err(400, "Bad Request") };
+                let _ = write_response(&mut writer, &out, &resp);
+                return;
+            };
+            let text = text.trim_end_matches('\r');
+            if !text.is_empty() {
+                break text.to_string();
+            }
+        };
+        let started = Instant::now();
+        let mut parts = req_line.split(' ').filter(|p| !p.is_empty());
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("HTTP/1.1").to_string();
+        // ignore the query string; routes are path-only
+        let path = target.split('?').next().unwrap_or("").to_string();
+
+        // -- headers --
+        let mut content_length: Option<usize> = None;
+        let mut connection_close = version == "HTTP/1.0";
+        let mut expect_continue = false;
+        let mut chunked = false;
+        let mut header_count = 0usize;
+        let headers_ok = loop {
+            match wire::read_line_bounded(&mut reader, &mut line, MAX_HEADER_LINE) {
+                Err(_) | Ok(wire::LineRead::Eof) => return,
+                Ok(wire::LineRead::Oversized) => break false,
+                Ok(wire::LineRead::Line) => {}
+            }
+            let Ok(text) = std::str::from_utf8(&line) else { break false };
+            let text = text.trim_end_matches('\r');
+            if text.is_empty() {
+                break true; // end of headers
+            }
+            header_count += 1;
+            if header_count > MAX_HEADERS {
+                break false;
+            }
+            let Some((name, value)) = text.split_once(':') else { continue };
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            match name.as_str() {
+                "content-length" => content_length = value.parse::<usize>().ok(),
+                "connection" => {
+                    let v = value.to_ascii_lowercase();
+                    if v.contains("close") {
+                        connection_close = true;
+                    } else if v.contains("keep-alive") {
+                        connection_close = false;
+                    }
+                }
+                "transfer-encoding" => chunked = true,
+                "expect" => expect_continue = value.to_ascii_lowercase().contains("100-continue"),
+                _ => {}
+            }
+        };
+        if !headers_ok {
+            error_body_into(&mut resp, -1, "bad_request", "malformed or oversized headers", "");
+            let out = Outcome { close: true, ..Outcome::err(431, "Request Header Fields Too Large") };
+            let _ = write_response(&mut writer, &out, &resp);
+            return;
+        }
+        if chunked {
+            error_body_into(&mut resp, -1, "bad_request", "chunked transfer encoding is not supported", "send Content-Length");
+            let out = Outcome { close: true, ..Outcome::err(501, "Not Implemented") };
+            let _ = write_response(&mut writer, &out, &resp);
+            return;
+        }
+
+        // -- body (POST only) --
+        let body: String = if method == "POST" {
+            let Some(len) = content_length else {
+                error_body_into(&mut resp, -1, "bad_request", "POST requires Content-Length", "");
+                let out = Outcome { close: true, ..Outcome::err(411, "Length Required") };
+                let _ = write_response(&mut writer, &out, &resp);
+                return;
+            };
+            if len > shared.max_line {
+                shared.stats.oversized.fetch_add(1, Ordering::Relaxed);
+                // drain a moderately oversized body so the close is a
+                // clean FIN (closing with unread data RSTs the socket and
+                // can destroy the 413 before the client reads it); a
+                // hugely oversized body is not worth the read
+                let drainable = len <= shared.max_line.saturating_mul(4);
+                if drainable {
+                    let mut left = len;
+                    let mut sink = [0u8; 8192];
+                    while left > 0 {
+                        let n = sink.len().min(left);
+                        if reader.read_exact(&mut sink[..n]).is_err() {
+                            break;
+                        }
+                        left -= n;
+                    }
+                }
+                let detail = format!("body is {len} bytes, limit is {}", shared.max_line);
+                error_body_into(&mut resp, -1, "payload_too_large", "request body exceeds the line limit", &detail);
+                let out = Outcome { close: true, ..Outcome::err(413, "Payload Too Large") };
+                let _ = write_response(&mut writer, &out, &resp);
+                return;
+            }
+            if expect_continue {
+                if writer.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").and_then(|_| writer.flush()).is_err() {
+                    return;
+                }
+            }
+            body_buf.resize(len, 0);
+            if reader.read_exact(&mut body_buf).is_err() {
+                return; // truncated body / reset / timeout
+            }
+            match std::str::from_utf8(&body_buf) {
+                Ok(s) => s.to_string(),
+                Err(_) => {
+                    error_body_into(&mut resp, -1, "bad_request", "request body is not valid UTF-8", "");
+                    let out = Outcome::err(400, "Bad Request");
+                    if write_response(&mut writer, &out, &resp).is_err() || connection_close {
+                        return;
+                    }
+                    log_access(shared, client_id, &method, &path, 400, resp.len(), started);
+                    continue;
+                }
+            }
+        } else {
+            String::new()
+        };
+
+        // -- route + dispatch --
+        shared.stats.http.fetch_add(1, Ordering::Relaxed);
+        let mut out = match (method.as_str(), path.as_str()) {
+            ("GET", "/v1/status") => {
+                resp.clear();
+                shared.status_json().write_compact_into(&mut resp);
+                Outcome::ok()
+            }
+            ("POST", "/v1/evaluate") => dispatch(shared, client_id, &body, "evaluate", &mut resp),
+            ("POST", "/v1/energy") => dispatch(shared, client_id, &body, "energy", &mut resp),
+            ("POST", "/v1/select") => dispatch(shared, client_id, &body, "select", &mut resp),
+            ("GET" | "POST", _) => {
+                let detail = format!("no route for {method} {path}");
+                error_body_into(&mut resp, -1, "not_found", "unknown route", &detail);
+                Outcome::err(404, "Not Found")
+            }
+            _ => {
+                error_body_into(&mut resp, -1, "method_not_allowed", "use GET or POST", &method);
+                Outcome::err(405, "Method Not Allowed")
+            }
+        };
+        out.close = out.close || connection_close;
+        let write_ok = write_response(&mut writer, &out, &resp).is_ok();
+        log_access(shared, client_id, &method, &path, out.status, resp.len(), started);
+        if !write_ok || out.close {
+            return;
+        }
+    }
+}
+
+/// Decode one POST body on the zero-alloc wire path, enqueue it, and wait
+/// for the dispatcher's answer (rendezvous channel, capacity 1). Fills
+/// `resp` with the response body and returns the HTTP outcome.
+fn dispatch(
+    shared: &Shared,
+    client_id: u64,
+    body: &str,
+    route_op: &str,
+    resp: &mut String,
+) -> Outcome {
+    let req = match wire::decode_body(body, route_op) {
+        Ok(req) => req,
+        Err(e) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            error_body_into(resp, -1, "bad_request", "request body could not be decoded", &format!("{e:#}"));
+            return Outcome::err(400, "Bad Request");
+        }
+    };
+    shared.stats.count(&req.op);
+    let id = req.id;
+    let (tx, rx) = mpsc::sync_channel::<WaveResult>(1);
+    let job = batcher::Job { client: client_id, request: req, sink: ReplySink::Http(tx) };
+    match shared.batcher.enqueue(job) {
+        batcher::Enqueue::Ok => {}
+        batcher::Enqueue::Shed => {
+            shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+            error_body_into(resp, id, "overloaded", "request queue is full", admission::OVERLOADED_QUEUE);
+            return Outcome { status: 503, reason: "Service Unavailable", retry_after: true, close: false };
+        }
+        batcher::Enqueue::Closed => {
+            error_body_into(resp, id, "shutting_down", "server is shutting down", "");
+            return Outcome::err(503, "Service Unavailable");
+        }
+    }
+    match rx.recv() {
+        Ok(Ok(ComputeOut::Eval(r))) => {
+            resp.clear();
+            wire::eval_ok_into(resp, id, &r);
+            Outcome::ok()
+        }
+        Ok(Ok(ComputeOut::Other(j))) => {
+            resp.clear();
+            wire::ok_into(resp, id, &j);
+            Outcome::ok()
+        }
+        Ok(Err(msg)) => {
+            // `unknown model '...'` comes from registry routing: a client
+            // addressing error, not a request-shape one
+            if msg.starts_with("unknown model") {
+                error_body_into(resp, id, "unknown_model", "no such model is being served", &msg);
+                Outcome::err(404, "Not Found")
+            } else {
+                error_body_into(resp, id, "bad_request", "request was rejected", &msg);
+                Outcome::err(400, "Bad Request")
+            }
+        }
+        Err(_) => {
+            error_body_into(resp, id, "internal", "dispatcher exited before answering", "");
+            Outcome::err(500, "Internal Server Error")
+        }
+    }
+}
+
+/// Fill `buf` with a structured error body:
+/// `{"error":{"code":..,"detail":..,"message":..},"id":..,"ok":false}`
+/// (keys in the writer's sorted order; `detail` omitted when empty).
+fn error_body_into(buf: &mut String, id: i64, code: &str, message: &str, detail: &str) {
+    buf.clear();
+    buf.push_str("{\"error\":{\"code\":");
+    json::write_escaped(buf, code);
+    if !detail.is_empty() {
+        buf.push_str(",\"detail\":");
+        json::write_escaped(buf, detail);
+    }
+    buf.push_str(",\"message\":");
+    json::write_escaped(buf, message);
+    buf.push_str("},\"id\":");
+    json::write_num(buf, id as f64);
+    buf.push_str(",\"ok\":false}");
+}
+
+/// Write one full response: status line, JSON content headers, optional
+/// `Retry-After`, explicit connection disposition, body.
+fn write_response<W: Write>(w: &mut W, out: &Outcome, body: &str) -> std::io::Result<()> {
+    let mut head = String::with_capacity(160);
+    head.push_str("HTTP/1.1 ");
+    head.push_str(&out.status.to_string());
+    head.push(' ');
+    head.push_str(out.reason);
+    head.push_str("\r\nContent-Type: application/json\r\nContent-Length: ");
+    head.push_str(&body.len().to_string());
+    head.push_str("\r\n");
+    if out.retry_after {
+        head.push_str("Retry-After: ");
+        head.push_str(&admission::RETRY_AFTER_SECS.to_string());
+        head.push_str("\r\n");
+    }
+    head.push_str(if out.close { "Connection: close\r\n\r\n" } else { "Connection: keep-alive\r\n\r\n" });
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Structured per-request access log (stderr, `key=value` fields), gated
+/// on `ServeConfig::access_log`.
+fn log_access(
+    shared: &Shared,
+    client_id: u64,
+    method: &str,
+    path: &str,
+    status: u16,
+    resp_bytes: usize,
+    started: Instant,
+) {
+    if !shared.access_log {
+        return;
+    }
+    eprintln!(
+        "serve-http client={client_id} method={method} path={path} status={status} bytes={resp_bytes} dur_ms={:.2}",
+        started.elapsed().as_secs_f64() * 1e3
+    );
+}

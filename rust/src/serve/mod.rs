@@ -1,26 +1,39 @@
 //! `fames serve` — a concurrent batched evaluation daemon (the repo's
 //! first request-driven workload).
 //!
-//! Dependency-free serving stack: a std [`TcpListener`] accepts newline-
-//! delimited JSON connections ([`codec`]), a [`registry::Registry`] holds N
-//! warmed model sessions with per-model routing, and a [`batcher::Batcher`]
-//! coalesces concurrent requests into `util::par` waves — the worker pool
-//! drives the same fused kernel paths (shared `kernel::Scratch` arenas,
-//! `OnceLock` coefficient caches) a direct `Session` call would.
+//! Dependency-free serving stack with two front doors over one engine:
+//! a std [`TcpListener`] accepts newline-delimited JSON connections
+//! (decoded by the zero-alloc [`wire`] path; [`codec`] remains the tree-
+//! based reference implementation), an optional HTTP/1.1 gateway
+//! ([`http`]) maps typed routes onto the same decoder, a
+//! [`registry::Registry`] holds N warmed model sessions with per-model
+//! routing, and a [`batcher::Batcher`] coalesces concurrent requests into
+//! `util::par` waves — the worker pool drives the same fused kernel paths
+//! (shared `kernel::Scratch` arenas, `OnceLock` coefficient caches) a
+//! direct `Session` call would. [`admission`] keeps all of it bounded:
+//! connection cap, bounded queue with explicit load-shed responses, and
+//! slow-client eviction.
 //!
 //! # Request lifecycle
 //!
 //! ```text
-//! client ──line──▶ reader thread ──Job──▶ Batcher FIFO
-//!                   (parse, route            │ drain ≤ max_batch
-//!                    status/shutdown         ▼
-//!                    answered inline)   dispatcher thread
-//!                                       par_map wave (util::par)
-//!                                       ┌─────────┬─────────┐
-//!                                       evaluate  energy  select
-//!                                       (Session) (EnergyModel) (MCKP)
-//!                                            │
-//! client ◀──line── writer thread ◀──mpsc─────┘  (id-tagged responses)
+//!                      admission::Gate (max_conns; over cap → shed, close)
+//!                           │
+//! NDJSON client ──line──▶ reader thread ── wire::decode_line ──Job──▶
+//! HTTP client ──POST /v1/*─▶ http thread ── wire::decode_body ──Job──▶
+//!                                                  │
+//!                              Batcher: per-client queues (≤ max_pending,
+//!                                       over → "shed":true / HTTP 503)
+//!                                                  │ round-robin wave
+//!                                                  ▼
+//!                                         dispatcher thread
+//!                                         par_map wave (util::par)
+//!                                         ┌─────────┬─────────┐
+//!                                         evaluate  energy  select
+//!                                         (Session) (EnergyModel) (MCKP)
+//!                                                  │
+//! client ◀── writer thread ◀── bounded sink ◀──────┘ (full/timeout →
+//!                                                     evict connection)
 //! ```
 //!
 //! # Bit-identity guarantee
@@ -29,27 +42,31 @@
 //! wave entry is handled by exactly the call an embedder would make on the
 //! warmed `Session` (`evaluate` / `evaluate_with`), on `EnergyModel`, or on
 //! `select::solve_exact` — all of which are bit-deterministic at every
-//! worker count (`tests/par_equivalence.rs`). Responses therefore compare
-//! byte-for-byte against direct-call references at `--jobs` 1/4/auto
-//! (`tests/serve_smoke.rs` pins this over the wire).
+//! worker count (`tests/par_equivalence.rs`). Responses stream out through
+//! [`wire`]'s encoder, byte-identical to the tree codec's output, and
+//! therefore compare byte-for-byte against direct-call references at
+//! `--jobs` 1/4/auto (`tests/serve_smoke.rs` pins this over the wire).
 //!
-//! Shutdown is graceful: `{"op":"shutdown"}` is acked immediately, the
-//! listener stops accepting, the batcher drains every queued request, and
+//! Shutdown is graceful: `{"op":"shutdown"}` is acked immediately, both
+//! listeners stop accepting, the batcher drains every queued request, and
 //! [`Server::run`] returns.
 
+pub mod admission;
 pub mod batcher;
 pub mod client;
 pub mod codec;
+pub mod http;
 pub mod registry;
+pub mod wire;
 
-pub use client::Client;
+pub use client::{Client, Outcome};
 pub use codec::{Op, Request, PROTOCOL};
 pub use registry::{ModelEntry, Registry};
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -61,9 +78,14 @@ use batcher::{Batcher, Job};
 /// one-line unauthenticated DoS without this cap.
 pub const MAX_EVAL_BATCHES: usize = 1024;
 
+/// Responses that may queue for one NDJSON connection whose client is not
+/// reading them. Past this, the dispatcher evicts the connection rather
+/// than blocking a wave (see [`ReplySink::deliver`]).
+const REPLY_BUFFER: usize = 256;
+
 use crate::energy::EnergyModel;
 use crate::json::Json;
-use crate::pipeline::FamesConfig;
+use crate::pipeline::{EvalResult, FamesConfig};
 use crate::runtime::Runtime;
 use crate::select::{self, Choice};
 use crate::util::par;
@@ -71,12 +93,30 @@ use crate::util::par;
 /// Serving configuration (CLI `fames serve`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Bind address; port 0 asks the OS for a free port (tests/bench).
+    /// NDJSON bind address; port 0 asks the OS for a free port
+    /// (tests/bench).
     pub addr: String,
+    /// Optional HTTP/1.1 gateway bind address (CLI `http=`); `None`
+    /// serves NDJSON only.
+    pub http_addr: Option<String>,
     /// `<model>/<cfg>` specs to warm and route to.
     pub models: Vec<String>,
     /// Most requests one dispatcher wave may carry.
     pub max_batch: usize,
+    /// Admission: most simultaneously served connections (NDJSON + HTTP
+    /// combined); over the cap, connections get one shed response and
+    /// close.
+    pub max_conns: usize,
+    /// Admission: most queued-but-undispatched compute requests; over it,
+    /// new requests are shed with an explicit retry hint.
+    pub max_pending: usize,
+    /// Most bytes one NDJSON request line (or HTTP body) may carry.
+    pub max_line: usize,
+    /// Per-flush write timeout (ms); a client that cannot drain its
+    /// responses within it is evicted instead of stalling its writer.
+    pub write_timeout_ms: u64,
+    /// Structured per-request access log (HTTP gateway) on stderr.
+    pub access_log: bool,
     /// Artifact root, seed, jobs, training and cache knobs shared by every
     /// model entry.
     pub base: FamesConfig,
@@ -87,8 +127,14 @@ impl Default for ServeConfig {
         let base = FamesConfig::default();
         ServeConfig {
             addr: "127.0.0.1:4271".to_string(),
+            http_addr: None,
             models: vec![format!("{}/{}", base.model, base.cfg)],
             max_batch: 16,
+            max_conns: 1024,
+            max_pending: 4096,
+            max_line: 1 << 20,
+            write_timeout_ms: 10_000,
+            access_log: false,
             base,
         }
     }
@@ -101,6 +147,14 @@ pub struct Stats {
     pub energy: AtomicU64,
     pub select: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests refused by the bounded queue (explicit shed responses).
+    pub shed: AtomicU64,
+    /// Connections evicted for not draining their responses.
+    pub evicted: AtomicU64,
+    /// Lines refused for exceeding `max_line`.
+    pub oversized: AtomicU64,
+    /// Requests served through the HTTP gateway (also counted per-op).
+    pub http: AtomicU64,
 }
 
 impl Stats {
@@ -120,7 +174,80 @@ impl Stats {
     }
 }
 
-/// State shared by the accept loop, connection threads and the dispatcher.
+/// Typed dispatcher output: `evaluate` streams through the zero-tree
+/// encoder; the colder ops carry their (small) payload tree.
+pub enum ComputeOut {
+    Eval(EvalResult),
+    Other(Json),
+}
+
+/// Per-job dispatcher verdict: the op's output or the error-envelope
+/// message.
+pub type WaveResult = std::result::Result<ComputeOut, String>;
+
+/// Write-half handle used to evict a connection from outside its own
+/// threads (dispatcher on sink overflow, writer on flush timeout).
+pub struct ConnHandle {
+    stream: TcpStream,
+}
+
+impl ConnHandle {
+    fn new(stream: TcpStream) -> ConnHandle {
+        ConnHandle { stream }
+    }
+
+    /// Tear the connection down; both halves unblock with errors/EOF.
+    fn evict(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Where a dispatched job's response goes back out.
+pub enum ReplySink {
+    /// NDJSON connection: a pre-encoded response line into the writer
+    /// thread's bounded channel. `conn` (when available) lets the
+    /// dispatcher evict a stalled client instead of blocking the wave.
+    Line {
+        tx: mpsc::SyncSender<String>,
+        conn: Option<Arc<ConnHandle>>,
+    },
+    /// HTTP request thread, rendezvous-waiting for exactly one result.
+    Http(mpsc::SyncSender<WaveResult>),
+}
+
+impl ReplySink {
+    /// Deliver one job's outcome. Never blocks the dispatcher: a full
+    /// NDJSON sink means the client has [`REPLY_BUFFER`] unread responses
+    /// queued and gets evicted; an HTTP sink is a rendezvous with a
+    /// waiting thread.
+    fn deliver(self, id: i64, out: WaveResult, stats: &Stats) {
+        match self {
+            ReplySink::Line { tx, conn } => {
+                let line = match &out {
+                    Ok(ComputeOut::Eval(r)) => wire::eval_ok_line(id, r),
+                    Ok(ComputeOut::Other(j)) => wire::ok_line(id, j),
+                    Err(msg) => wire::err_line(id, msg),
+                };
+                match tx.try_send(line) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        stats.evicted.fetch_add(1, Ordering::Relaxed);
+                        if let Some(c) = conn {
+                            c.evict();
+                        }
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {} // client gone
+                }
+            }
+            ReplySink::Http(tx) => {
+                let _ = tx.send(out); // capacity 1, receiver is waiting
+            }
+        }
+    }
+}
+
+/// State shared by the accept loops, connection threads and the
+/// dispatcher. (Child modules — `http` — reach it as `super::Shared`.)
 struct Shared {
     registry: Registry,
     rt: Arc<Runtime>,
@@ -128,8 +255,15 @@ struct Shared {
     stats: Stats,
     stop: AtomicBool,
     addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
     started: Instant,
     jobs: usize,
+    gate: Arc<admission::Gate>,
+    max_line: usize,
+    write_timeout_ms: u64,
+    access_log: bool,
+    /// Monotonic connection ids — the batcher's fairness keys.
+    clients: AtomicU64,
 }
 
 impl Shared {
@@ -167,7 +301,19 @@ impl Shared {
                     .with("energy", self.stats.energy.load(Ordering::Relaxed) as usize)
                     .with("select", self.stats.select.load(Ordering::Relaxed) as usize)
                     .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize)
+                    .with("http", self.stats.http.load(Ordering::Relaxed) as usize)
                     .with("total", self.stats.total() as usize),
+            )
+            .with(
+                "admission",
+                Json::obj()
+                    .with("active_conns", self.gate.active())
+                    .with("max_conns", self.gate.max_conns())
+                    .with("max_pending", self.batcher.max_pending)
+                    .with("shed_conns", self.gate.shed_total() as usize)
+                    .with("shed_requests", self.stats.shed.load(Ordering::Relaxed) as usize)
+                    .with("evicted", self.stats.evicted.load(Ordering::Relaxed) as usize)
+                    .with("oversized", self.stats.oversized.load(Ordering::Relaxed) as usize),
             )
             .with(
                 "exec",
@@ -182,9 +328,12 @@ impl Shared {
             return; // already shutting down
         }
         self.batcher.close();
-        // the accept loop blocks in `accept`; poke it awake so it can see
-        // the stop flag and exit
+        // the accept loops block in `accept`; poke them awake so they can
+        // see the stop flag and exit
         let _ = TcpStream::connect(self.addr);
+        if let Some(addr) = self.http_addr {
+            let _ = TcpStream::connect(addr);
+        }
     }
 }
 
@@ -192,35 +341,59 @@ impl Shared {
 /// (session warm-up, library characterization); `run` is the accept loop.
 pub struct Server {
     listener: TcpListener,
+    http_listener: Option<TcpListener>,
     shared: Arc<Shared>,
 }
 
 impl Server {
-    /// Warm every configured model and bind the listener.
+    /// Warm every configured model and bind the listener(s).
     pub fn bind(cfg: &ServeConfig) -> Result<Server> {
         let rt = Arc::new(Runtime::from_env()?);
         let registry = Registry::open(rt.clone(), &cfg.base, &cfg.models)?;
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding fames serve to {}", cfg.addr))?;
         let addr = listener.local_addr()?;
+        let http_listener = match &cfg.http_addr {
+            Some(a) => Some(
+                TcpListener::bind(a)
+                    .with_context(|| format!("binding fames serve http to {a}"))?,
+            ),
+            None => None,
+        };
+        let http_addr = match &http_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
         Ok(Server {
             listener,
+            http_listener,
             shared: Arc::new(Shared {
                 registry,
                 rt,
-                batcher: Batcher::new(cfg.max_batch),
+                batcher: Batcher::new(cfg.max_batch, cfg.max_pending),
                 stats: Stats::default(),
                 stop: AtomicBool::new(false),
                 addr,
+                http_addr,
                 started: Instant::now(),
                 jobs: cfg.base.jobs,
+                gate: Arc::new(admission::Gate::new(cfg.max_conns)),
+                max_line: cfg.max_line.max(64),
+                write_timeout_ms: cfg.write_timeout_ms.max(1),
+                access_log: cfg.access_log,
+                clients: AtomicU64::new(0),
             }),
         })
     }
 
-    /// The bound address (resolves port 0).
+    /// The bound NDJSON address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.shared.addr
+    }
+
+    /// The bound HTTP gateway address, when one is configured.
+    pub fn http_local_addr(&self) -> Option<SocketAddr> {
+        self.shared.http_addr
     }
 
     /// The warmed model registry (CLI startup table, tests).
@@ -228,16 +401,23 @@ impl Server {
         &self.shared.registry
     }
 
-    /// Serve until a `shutdown` request: accept connections, batch compute
-    /// requests, answer inline ops. Returns only after the queue has
-    /// drained **and** every connection's writer has flushed its final
-    /// responses, so a caller may exit the process immediately.
+    /// Serve until a `shutdown` request: accept connections (through the
+    /// admission gate), batch compute requests, answer inline ops. Returns
+    /// only after the queue has drained **and** every connection's writer
+    /// has flushed its final responses, so a caller may exit the process
+    /// immediately.
     pub fn run(self) -> Result<()> {
         let shared = self.shared;
         let dispatcher = {
             let shared = shared.clone();
             std::thread::spawn(move || dispatch_loop(&shared))
         };
+        // the HTTP gateway runs its own accept loop and joins its
+        // connection threads before returning
+        let http_accept = self.http_listener.map(|l| {
+            let shared = shared.clone();
+            std::thread::spawn(move || http::accept_loop(l, &shared))
+        });
         // (reader thread handle, read-half clone used to unblock it)
         let mut conns: Vec<(std::thread::JoinHandle<()>, TcpStream)> = Vec::new();
         for stream in self.listener.incoming() {
@@ -248,9 +428,16 @@ impl Server {
             // reap finished connections so a long-lived daemon does not
             // accumulate one JoinHandle per connection ever accepted
             conns.retain(|(h, _)| !h.is_finished());
+            let Some(guard) = shared.gate.try_enter() else {
+                refuse_connection(stream);
+                continue;
+            };
+            let client_id = shared.clients.fetch_add(1, Ordering::Relaxed);
             let clone = stream.try_clone();
-            let shared = shared.clone();
-            let handle = std::thread::spawn(move || serve_connection(stream, &shared));
+            let shared2 = shared.clone();
+            let handle = std::thread::spawn(move || {
+                serve_connection(stream, &shared2, client_id, guard)
+            });
             match clone {
                 Ok(c) => conns.push((handle, c)),
                 Err(_) => drop(handle), // can't unblock it later; detach
@@ -259,7 +446,7 @@ impl Server {
         // `begin_shutdown` already closed the batcher; wait for the queue
         // to drain so every accepted request is answered
         dispatcher.join().expect("serve: dispatcher panicked");
-        // unblock readers stuck in read_line (a client holding its
+        // unblock readers stuck in their line read (a client holding its
         // connection open must not wedge shutdown): closing the read half
         // EOFs the reader, which drops its sender; the writer then drains
         // and flushes every remaining queued response before exiting
@@ -269,8 +456,25 @@ impl Server {
         for (handle, _) in conns {
             let _ = handle.join();
         }
+        if let Some(h) = http_accept {
+            let _ = h.join();
+        }
         Ok(())
     }
+}
+
+/// Answer a gate-refused NDJSON connection with one shed line and close.
+/// Runs on a throwaway thread so a client that never reads cannot stall
+/// the accept loop.
+fn refuse_connection(stream: TcpStream) {
+    std::thread::spawn(move || {
+        use std::io::Write;
+        let mut s = stream;
+        let _ = s.set_write_timeout(Some(Duration::from_millis(1000)));
+        let mut line = wire::shed_line(-1, admission::OVERLOADED_CONNS);
+        line.push('\n');
+        let _ = s.write_all(line.as_bytes());
+    });
 }
 
 /// Dispatcher: drain request waves and score each wave as one parallel
@@ -279,23 +483,19 @@ impl Server {
 fn dispatch_loop(shared: &Shared) {
     while let Some(wave) = shared.batcher.next_wave() {
         let mut requests = Vec::with_capacity(wave.len());
-        let mut replies = Vec::with_capacity(wave.len());
+        let mut sinks = Vec::with_capacity(wave.len());
         for job in wave {
             requests.push(job.request);
-            replies.push(job.reply);
+            sinks.push(job.sink);
         }
-        let lines = par::par_map(&requests, shared.jobs, |_, req| {
-            let resp = match handle_compute(shared, req) {
-                Ok(result) => codec::ok_response(req.id, result),
-                Err(e) => {
-                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                    codec::err_response(req.id, &format!("{e:#}"))
-                }
-            };
-            resp.compact()
+        let outs: Vec<WaveResult> = par::par_map(&requests, shared.jobs, |_, req| {
+            handle_compute(shared, req).map_err(|e| format!("{e:#}"))
         });
-        for (reply, line) in replies.iter().zip(lines) {
-            let _ = reply.send(line); // a vanished client is not an error
+        for ((req, sink), out) in requests.iter().zip(sinks).zip(outs) {
+            if out.is_err() {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            sink.deliver(req.id, out, &shared.stats);
         }
     }
 }
@@ -303,7 +503,7 @@ fn dispatch_loop(shared: &Shared) {
 /// Score one compute request against its routed model entry. Every arm is
 /// exactly the call an embedder would make directly — the bit-identity
 /// contract of the serving layer.
-fn handle_compute(shared: &Shared, req: &Request) -> Result<Json> {
+fn handle_compute(shared: &Shared, req: &Request) -> Result<ComputeOut> {
     let entry = shared.registry.get(req.model.as_deref())?;
     match &req.op {
         Op::Evaluate { batches, selection } => {
@@ -318,17 +518,19 @@ fn handle_compute(shared: &Shared, req: &Request) -> Result<Json> {
                     entry.session.evaluate_with(&e_list, *batches)?
                 }
             };
-            Ok(codec::eval_json(&r))
+            Ok(ComputeOut::Eval(r))
         }
         Op::Energy { selection } => {
             let sel = entry.resolve_selection(selection)?;
             let em = EnergyModel::new(&entry.session.art.manifest, &entry.library);
             let names: Vec<String> = sel.iter().map(|am| am.name.clone()).collect();
-            Ok(Json::obj()
-                .with("energy", em.model_energy(&sel))
-                .with("ratio_vs_exact", em.ratio_vs_exact(&sel)?)
-                .with("ratio_vs_8bit", em.ratio_vs_8bit(&sel)?)
-                .with("names", names))
+            Ok(ComputeOut::Other(
+                Json::obj()
+                    .with("energy", em.model_energy(&sel))
+                    .with("ratio_vs_exact", em.ratio_vs_exact(&sel)?)
+                    .with("ratio_vs_8bit", em.ratio_vs_8bit(&sel)?)
+                    .with("names", names),
+            ))
         }
         Op::Select { r_energy, omega } => {
             let manifest = &entry.session.art.manifest;
@@ -366,20 +568,31 @@ fn handle_compute(shared: &Shared, req: &Request) -> Result<Json> {
                 .enumerate()
                 .map(|(k, &i)| names[k][i].clone())
                 .collect();
-            Ok(codec::solution_json(&sol, &picked))
+            Ok(ComputeOut::Other(codec::solution_json(&sol, &picked)))
         }
         Op::Status | Op::Shutdown => unreachable!("inline ops never reach the batcher"),
     }
 }
 
-/// Per-connection reader: parse lines, answer `status`/`shutdown` inline,
-/// enqueue compute ops. A paired writer thread owns the outbound half so
-/// batcher waves and inline answers can interleave safely.
-fn serve_connection(stream: TcpStream, shared: &Shared) {
-    use std::io::{BufRead, BufReader, BufWriter, Write};
+/// Per-connection reader: decode lines through the bounded reader and the
+/// zero-alloc wire path, answer `status`/`shutdown` inline, enqueue
+/// compute ops (shedding when the queue is full). A paired writer thread
+/// owns the outbound half so batcher waves and inline answers can
+/// interleave safely; its bounded channel plus the write timeout are what
+/// evict slow clients.
+fn serve_connection(
+    stream: TcpStream,
+    shared: &Shared,
+    client_id: u64,
+    _guard: admission::ConnGuard,
+) {
+    use std::io::{BufReader, BufWriter, Write};
 
+    let conn = stream.try_clone().ok().map(|s| Arc::new(ConnHandle::new(s)));
     let Ok(write_half) = stream.try_clone() else { return };
-    let (tx, rx) = mpsc::channel::<String>();
+    let _ = write_half.set_write_timeout(Some(Duration::from_millis(shared.write_timeout_ms)));
+    let (tx, rx) = mpsc::sync_channel::<String>(REPLY_BUFFER);
+    let writer_conn = conn.clone();
     let writer = std::thread::spawn(move || {
         let mut w = BufWriter::new(write_half);
         for line in rx {
@@ -388,46 +601,90 @@ fn serve_connection(stream: TcpStream, shared: &Shared) {
                 .and_then(|_| w.flush())
                 .is_err()
             {
+                // flush timeout or reset: tear the connection down so the
+                // reader unblocks too (slow-client eviction)
+                if let Some(c) = &writer_conn {
+                    c.evict();
+                }
                 break;
             }
         }
     });
 
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => break, // EOF / reset
-            Ok(_) => {}
+        match wire::read_line_bounded(&mut reader, &mut buf, shared.max_line) {
+            Err(_) => break, // reset / evicted
+            Ok(wire::LineRead::Eof) => break,
+            Ok(wire::LineRead::Oversized) => {
+                shared.stats.oversized.fetch_add(1, Ordering::Relaxed);
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("request line exceeds {} bytes", shared.max_line);
+                if tx.send(wire::err_line(-1, &msg)).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Ok(wire::LineRead::Line) => {}
         }
-        let trimmed = line.trim();
+        let Ok(text) = std::str::from_utf8(&buf) else {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            if tx.send(wire::err_line(-1, "request line is not valid UTF-8")).is_err() {
+                break;
+            }
+            continue;
+        };
+        let trimmed = text.trim();
         if trimmed.is_empty() {
             continue;
         }
-        match codec::parse_request(trimmed) {
+        match wire::decode_line(trimmed) {
             Err(e) => {
                 shared.stats.errors.fetch_add(1, Ordering::Relaxed);
                 let id = codec::request_id(trimmed);
-                let _ = tx.send(codec::err_response(id, &format!("{e:#}")).compact());
+                if tx.send(wire::err_line(id, &format!("{e:#}"))).is_err() {
+                    break;
+                }
             }
             Ok(req) => match req.op {
                 Op::Status => {
-                    let _ = tx.send(codec::ok_response(req.id, shared.status_json()).compact());
+                    let line = wire::ok_line(req.id, &shared.status_json());
+                    if tx.send(line).is_err() {
+                        break;
+                    }
                 }
                 Op::Shutdown => {
-                    let _ = tx.send(
-                        codec::ok_response(req.id, Json::obj().with("stopping", true)).compact(),
-                    );
+                    let line = wire::ok_line(req.id, &Json::obj().with("stopping", true));
+                    let sent = tx.send(line);
                     shared.begin_shutdown();
+                    if sent.is_err() {
+                        break;
+                    }
                 }
                 _ => {
                     shared.stats.count(&req.op);
                     let id = req.id;
-                    if !shared.batcher.enqueue(Job { request: req, reply: tx.clone() }) {
-                        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                        let err = codec::err_response(id, "server is shutting down");
-                        let _ = tx.send(err.compact());
+                    let job = Job {
+                        client: client_id,
+                        request: req,
+                        sink: ReplySink::Line { tx: tx.clone(), conn: conn.clone() },
+                    };
+                    match shared.batcher.enqueue(job) {
+                        batcher::Enqueue::Ok => {}
+                        batcher::Enqueue::Shed => {
+                            shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                            let line = wire::shed_line(id, admission::OVERLOADED_QUEUE);
+                            if tx.send(line).is_err() {
+                                break;
+                            }
+                        }
+                        batcher::Enqueue::Closed => {
+                            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                            if tx.send(wire::err_line(id, "server is shutting down")).is_err() {
+                                break;
+                            }
+                        }
                     }
                 }
             },

@@ -1,0 +1,950 @@
+//! Zero-alloc wire path for `fames serve` — the streaming half of the
+//! NDJSON protocol.
+//!
+//! [`codec`] defines the protocol in terms of [`Json`] trees: readable,
+//! obviously correct, and the *reference* implementation the tests diff
+//! against. But building a `BTreeMap`-backed tree per request line means
+//! one allocation per key, per string and per array element — pure churn
+//! on the serving hot path, where the request shape is fixed and tiny.
+//! This module is the production decoder/encoder:
+//!
+//! * [`decode_line`] / [`decode_body`] lex a request **in one pass over
+//!   the input bytes** straight into the existing [`Request`]/[`Op`]
+//!   structs. Strings borrow from the input buffer (`Cow`) unless they
+//!   contain escapes; numbers are parsed in place with the same grammar
+//!   as the tree parser; unknown fields are *validated and skipped*
+//!   through an explicit, [`json::MAX_DEPTH`]-bounded state machine —
+//!   no recursion, no intermediate values, no panics.
+//! * [`ok_into`] / [`eval_ok_into`] / [`err_into`] / [`shed_into`] stream
+//!   response envelopes into a reusable buffer, byte-identical to
+//!   `codec::ok_response(..).compact()` (pinned by unit tests here and by
+//!   the string-equality diffs in `tests/serve_smoke.rs`).
+//! * [`read_line_bounded`] replaces `BufRead::read_line`'s unbounded
+//!   `String` growth with a hard per-line byte cap: an oversized line is
+//!   consumed (the connection stays in sync) but reported as
+//!   [`LineRead::Oversized`] so the server can answer with a clean error
+//!   instead of ballooning memory.
+//!
+//! # Parity contract
+//!
+//! For every input line, `decode_line` accepts **iff** `codec::parse_request`
+//! accepts, and produces the same `Request` (the differential corpus and
+//! whole-prefix sweeps below hold the two implementations to that). The
+//! codec stays as the executable spec; this module is the fast path wired
+//! into `serve_connection` and the HTTP gateway.
+
+use std::borrow::Cow;
+use std::io::{self, BufRead};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Json};
+use crate::pipeline::EvalResult;
+
+use super::codec::{Op, Request};
+
+// ---------------------------------------------------------------------------
+// bounded line reader
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`read_line_bounded`] call.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineRead {
+    /// Clean end of stream (no pending bytes).
+    Eof,
+    /// One line is in the buffer (without its `\n`; a final unterminated
+    /// line before EOF also lands here, matching `read_line`).
+    Line,
+    /// The line exceeded the cap. Its bytes were consumed through the
+    /// terminating newline (or EOF) so the stream stays line-synced, but
+    /// the buffer is empty — answer with an error and keep serving.
+    Oversized,
+}
+
+/// Read one `\n`-terminated line into `buf` (cleared first), holding the
+/// buffer to at most `max` bytes. Unlike `BufRead::read_line`, a hostile
+/// megabyte-line costs `max` bytes of memory, not the line's length —
+/// the remainder is drained chunk-by-chunk from the `BufRead`'s fixed
+/// internal buffer and discarded.
+pub fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> io::Result<LineRead> {
+    buf.clear();
+    let mut oversized = false;
+    loop {
+        let (consumed, done) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                // EOF: a pending partial line still counts as a line
+                return Ok(if oversized {
+                    LineRead::Oversized
+                } else if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    if !oversized {
+                        if buf.len() + i > max {
+                            oversized = true;
+                            buf.clear();
+                        } else {
+                            buf.extend_from_slice(&chunk[..i]);
+                        }
+                    }
+                    (i + 1, true)
+                }
+                None => {
+                    if !oversized {
+                        if buf.len() + chunk.len() > max {
+                            oversized = true;
+                            buf.clear();
+                        } else {
+                            buf.extend_from_slice(chunk);
+                        }
+                    }
+                    (chunk.len(), false)
+                }
+            }
+        };
+        r.consume(consumed);
+        if done {
+            return Ok(if oversized { LineRead::Oversized } else { LineRead::Line });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decoder
+// ---------------------------------------------------------------------------
+
+/// Decode one NDJSON request line (the `op` comes from the `"op"` field).
+/// Single pass, zero intermediate tree; see the module docs for the parity
+/// contract with `codec::parse_request`.
+pub fn decode_line(line: &str) -> Result<Request> {
+    let f = scan_fields(line.as_bytes())?;
+    finish(f, None)
+}
+
+/// Decode an HTTP request body for the route-determined op (`"evaluate"`,
+/// `"energy"`, `"select"`). Differences from [`decode_line`]: `"id"` is
+/// optional (defaults to 0 — HTTP responses are not multiplexed), and an
+/// `"op"` field, if present, must agree with the route.
+pub fn decode_body(body: &str, route_op: &str) -> Result<Request> {
+    let f = scan_fields(body.as_bytes())?;
+    finish(f, Some(route_op))
+}
+
+/// Top-level request fields, each either absent, parsed, or present with
+/// the wrong shape (`Err`). Type errors are *deferred*: a wrong-typed
+/// field only fails the request if the op actually consumes it — exactly
+/// the behavior of the tree codec, which ignores unknown and unused keys.
+#[derive(Default)]
+struct Fields<'a> {
+    id: Option<std::result::Result<i64, String>>,
+    op: Option<std::result::Result<Cow<'a, str>, String>>,
+    model: Option<std::result::Result<Cow<'a, str>, String>>,
+    batches: Option<std::result::Result<usize, String>>,
+    selection: Option<std::result::Result<Vec<usize>, String>>,
+    r_energy: Option<std::result::Result<f64, String>>,
+    omega: Option<std::result::Result<Vec<Vec<f64>>, String>>,
+}
+
+/// One pass over the object: known keys go through their typed parser
+/// (falling back to validate-and-skip on shape mismatch so the error can
+/// be deferred), unknown keys are validated and skipped. Duplicate keys:
+/// last one wins (`BTreeMap::insert` parity).
+fn scan_fields(bytes: &[u8]) -> Result<Fields<'_>> {
+    let mut lx = Lex { b: bytes, pos: 0 };
+    let mut f = Fields::default();
+    lx.skip_ws();
+    if lx.peek() != Some(b'{') {
+        bail!("request is not a JSON object");
+    }
+    lx.pos += 1;
+    lx.skip_ws();
+    if lx.peek() == Some(b'}') {
+        lx.pos += 1;
+    } else {
+        loop {
+            lx.skip_ws();
+            let key = lx.string()?;
+            lx.skip_ws();
+            lx.expect(b':')?;
+            lx.skip_ws();
+            match key.as_ref() {
+                "id" => f.id = Some(lx.typed(|l| l.int_scalar())?),
+                "op" => f.op = Some(lx.typed(|l| l.string())?),
+                "model" => f.model = Some(lx.typed(|l| l.string())?),
+                "batches" => f.batches = Some(lx.typed(|l| l.usize_scalar())?),
+                "selection" => f.selection = Some(lx.typed(|l| l.usize_vec())?),
+                "r_energy" => f.r_energy = Some(lx.typed(|l| l.num_scalar())?),
+                "omega" => f.omega = Some(lx.typed(|l| l.omega_table())?),
+                _ => lx.skip_value()?,
+            }
+            lx.skip_ws();
+            match lx.peek() {
+                Some(b',') => lx.pos += 1,
+                Some(b'}') => {
+                    lx.pos += 1;
+                    break;
+                }
+                other => bail!(
+                    "expected ',' or '}}', found {:?} at offset {}",
+                    other.map(|c| c as char),
+                    lx.pos
+                ),
+            }
+        }
+    }
+    lx.skip_ws();
+    if lx.pos != lx.b.len() {
+        bail!("trailing characters at offset {}", lx.pos);
+    }
+    Ok(f)
+}
+
+/// Assemble the `Request`, raising any deferred type error the op needs.
+fn finish(f: Fields<'_>, route_op: Option<&str>) -> Result<Request> {
+    let id = match (f.id, route_op) {
+        (Some(Ok(id)), _) => id,
+        (None, Some(_)) => 0,
+        (Some(Err(e)), _) => bail!("request needs an integer 'id': {e}"),
+        (None, None) => bail!("request needs an integer 'id'"),
+    };
+    let model = match f.model {
+        None => None,
+        Some(Ok(m)) => Some(m.into_owned()),
+        Some(Err(e)) => bail!("'model' must be a string: {e}"),
+    };
+    let op_name: &str = match (&f.op, route_op) {
+        (Some(Ok(o)), None) => o.as_ref(),
+        (Some(Ok(o)), Some(r)) => {
+            anyhow::ensure!(o.as_ref() == r, "body op '{o}' does not match route op '{r}'");
+            r
+        }
+        (None, Some(r)) => r,
+        (Some(Err(e)), _) => bail!("'op' must be a string: {e}"),
+        (None, None) => bail!("missing key 'op'"),
+    };
+    let op = match op_name {
+        "evaluate" => Op::Evaluate {
+            batches: match f.batches {
+                None => 1,
+                Some(Ok(b)) => b,
+                Some(Err(e)) => bail!("'batches': {e}"),
+            },
+            selection: match f.selection {
+                None => None,
+                Some(Ok(s)) => Some(s),
+                Some(Err(e)) => bail!("'selection': {e}"),
+            },
+        },
+        "energy" => Op::Energy {
+            selection: match f.selection {
+                None => bail!("missing key 'selection'"),
+                Some(Ok(s)) => s,
+                Some(Err(e)) => bail!("'selection': {e}"),
+            },
+        },
+        "select" => Op::Select {
+            r_energy: match f.r_energy {
+                None => bail!("missing key 'r_energy'"),
+                Some(Ok(v)) => v,
+                Some(Err(e)) => bail!("'r_energy': {e}"),
+            },
+            omega: match f.omega {
+                None => bail!("missing key 'omega'"),
+                Some(Ok(o)) => o,
+                Some(Err(e)) => bail!("'omega': {e}"),
+            },
+        },
+        "status" => Op::Status,
+        "shutdown" => Op::Shutdown,
+        other => bail!("unknown op '{other}' (evaluate|energy|select|status|shutdown)"),
+    };
+    Ok(Request { id, model, op })
+}
+
+/// Byte lexer over one request line. Mirrors the grammar of
+/// `json::Parser` exactly (same number scan, same escape handling, same
+/// error conditions) so accept/reject parity holds input-for-input.
+struct Lex<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lex<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at offset {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )
+        }
+    }
+
+    /// Run a typed sub-parser; on shape mismatch, rewind and validate-skip
+    /// the value instead, deferring the error message for [`finish`]. A
+    /// value that is not even well-formed JSON still fails immediately.
+    fn typed<T>(
+        &mut self,
+        parse: impl FnOnce(&mut Lex<'a>) -> Result<T>,
+    ) -> Result<std::result::Result<T, String>> {
+        let start = self.pos;
+        match parse(self) {
+            Ok(v) => Ok(Ok(v)),
+            Err(e) => {
+                self.pos = start;
+                self.skip_value()?;
+                Ok(Err(format!("{e:#}")))
+            }
+        }
+    }
+
+    /// Parse a JSON string, borrowing from the input when it carries no
+    /// escapes (the common case for `op`/`model`/keys). Escape and
+    /// control-character handling is byte-for-byte the tree parser's.
+    fn string(&mut self) -> Result<Cow<'a, str>> {
+        // copy the slice out of `self` so returned borrows carry 'a, not
+        // the lifetime of this &mut call
+        let b: &'a [u8] = self.b;
+        self.expect(b'"')?;
+        let start = self.pos;
+        // fast path: a plain run ending at the closing quote borrows
+        while let Some(c) = self.peek() {
+            if c == b'"' {
+                let s = std::str::from_utf8(&b[start..self.pos]).context("invalid utf8 in string")?;
+                self.pos += 1;
+                return Ok(Cow::Borrowed(s));
+            }
+            if c == b'\\' || c < 0x20 {
+                break;
+            }
+            self.pos += 1;
+        }
+        // slow path: unescape into an owned buffer
+        let mut s = String::new();
+        s.push_str(std::str::from_utf8(&b[start..self.pos]).context("invalid utf8 in string")?);
+        loop {
+            let run = self.pos;
+            while let Some(c) = self.peek() {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            s.push_str(std::str::from_utf8(&b[run..self.pos]).context("invalid utf8 in string")?);
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Cow::Owned(s));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().context("eof in escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate");
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            s.push(char::from_u32(cp).context("invalid codepoint")?);
+                        }
+                        c => bail!("invalid escape '\\{}'", c as char),
+                    }
+                }
+                Some(c) => bail!("control character {c:#x} in string"),
+                None => bail!("eof in string"),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.b.len() {
+            bail!("eof in \\u escape");
+        }
+        let s = std::str::from_utf8(&self.b[self.pos..self.pos + 4])?;
+        let v = u32::from_str_radix(s, 16).context("invalid \\u escape")?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    /// Number scan with the tree parser's exact grammar (`-`? digits* `.`?
+    /// digits* exponent?), validated by `f64::from_str` — so `1.`, `01`
+    /// and `1e999` behave identically on both paths.
+    fn number(&mut self) -> Result<f64> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos])?;
+        s.parse().with_context(|| format!("invalid number '{s}'"))
+    }
+
+    fn lit(&mut self, word: &str) -> Result<()> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            bail!("invalid literal at offset {}", self.pos)
+        }
+    }
+
+    // ---- typed field parsers (Json::as_* conversion parity) ----
+
+    fn num_scalar(&mut self) -> Result<f64> {
+        self.skip_ws();
+        match self.peek() {
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!(
+                "expected number, found {:?} at offset {}",
+                other.map(|c| c as char),
+                self.pos
+            ),
+        }
+    }
+
+    fn int_scalar(&mut self) -> Result<i64> {
+        let n = self.num_scalar()?;
+        if n.fract() != 0.0 {
+            bail!("expected integer, got {n}");
+        }
+        Ok(n as i64)
+    }
+
+    fn usize_scalar(&mut self) -> Result<usize> {
+        let n = self.num_scalar()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    /// `[usize, ...]` — the `selection` field.
+    fn usize_vec(&mut self) -> Result<Vec<usize>> {
+        self.skip_ws();
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(v);
+        }
+        loop {
+            v.push(self.usize_scalar()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(v);
+                }
+                other => bail!(
+                    "expected ',' or ']', found {:?} at offset {}",
+                    other.map(|c| c as char),
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    /// `[[f64|null, ...], ...]` — the Ω table, `null` decoding as NaN
+    /// (the writer's image of a non-finite float; see the codec docs).
+    fn omega_table(&mut self) -> Result<Vec<Vec<f64>>> {
+        self.skip_ws();
+        self.expect(b'[').context("'omega' must be an array of per-layer rows")?;
+        let mut rows = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(rows);
+        }
+        loop {
+            self.skip_ws();
+            rows.push(self.omega_row()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(rows);
+                }
+                other => bail!(
+                    "expected ',' or ']', found {:?} at offset {}",
+                    other.map(|c| c as char),
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    fn omega_row(&mut self) -> Result<Vec<f64>> {
+        self.expect(b'[').context("each omega row must be an array")?;
+        let mut row = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(row);
+        }
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'n') => {
+                    self.lit("null")?;
+                    row.push(f64::NAN);
+                }
+                Some(c) if c == b'-' || c.is_ascii_digit() => row.push(self.number()?),
+                other => bail!(
+                    "omega entries must be numbers or null (found {:?} at offset {})",
+                    other.map(|c| c as char),
+                    self.pos
+                ),
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(row);
+                }
+                other => bail!(
+                    "expected ',' or ']', found {:?} at offset {}",
+                    other.map(|c| c as char),
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    /// Validate and discard one JSON value without building anything.
+    /// Containers live on a fixed `[u8; MAX_DEPTH]` stack (1 = array,
+    /// 2 = object) — the same depth bound as the tree parser, so the two
+    /// paths accept identical inputs.
+    fn skip_value(&mut self) -> Result<()> {
+        const MAX_DEPTH: usize = json::MAX_DEPTH;
+        let mut stack = [0u8; MAX_DEPTH];
+        let mut depth = 0usize;
+        'value: loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'{') => {
+                    if depth >= MAX_DEPTH {
+                        bail!("nesting deeper than {MAX_DEPTH} at offset {}", self.pos);
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1; // empty object completes as a value
+                    } else {
+                        self.string()?;
+                        self.skip_ws();
+                        self.expect(b':')?;
+                        stack[depth] = 2;
+                        depth += 1;
+                        continue 'value;
+                    }
+                }
+                Some(b'[') => {
+                    if depth >= MAX_DEPTH {
+                        bail!("nesting deeper than {MAX_DEPTH} at offset {}", self.pos);
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                    } else {
+                        stack[depth] = 1;
+                        depth += 1;
+                        continue 'value;
+                    }
+                }
+                Some(b'"') => {
+                    self.string()?;
+                }
+                Some(b't') => self.lit("true")?,
+                Some(b'f') => self.lit("false")?,
+                Some(b'n') => self.lit("null")?,
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    self.number()?;
+                }
+                other => {
+                    bail!("unexpected {:?} at offset {}", other.map(|c| c as char), self.pos)
+                }
+            }
+            // a value just completed; unwind separators and closers
+            loop {
+                if depth == 0 {
+                    return Ok(());
+                }
+                self.skip_ws();
+                let in_obj = stack[depth - 1] == 2;
+                match (in_obj, self.peek()) {
+                    (false, Some(b',')) => {
+                        self.pos += 1;
+                        continue 'value;
+                    }
+                    (false, Some(b']')) => {
+                        self.pos += 1;
+                        depth -= 1;
+                    }
+                    (true, Some(b',')) => {
+                        self.pos += 1;
+                        self.skip_ws();
+                        self.string()?;
+                        self.skip_ws();
+                        self.expect(b':')?;
+                        continue 'value;
+                    }
+                    (true, Some(b'}')) => {
+                        self.pos += 1;
+                        depth -= 1;
+                    }
+                    (false, other) => bail!(
+                        "expected ',' or ']', found {:?} at {}",
+                        other.map(|c| c as char),
+                        self.pos
+                    ),
+                    (true, other) => bail!(
+                        "expected ',' or '}}', found {:?} at {}",
+                        other.map(|c| c as char),
+                        self.pos
+                    ),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streaming response encoder
+// ---------------------------------------------------------------------------
+
+/// Append a success envelope: `{"id":N,"ok":true,"result":<json>}` —
+/// byte-identical to `codec::ok_response(id, result).compact()`.
+pub fn ok_into(buf: &mut String, id: i64, result: &Json) {
+    buf.push_str("{\"id\":");
+    json::write_num(buf, id as f64);
+    buf.push_str(",\"ok\":true,\"result\":");
+    result.write_compact_into(buf);
+    buf.push('}');
+}
+
+/// Append a successful `evaluate` response with **no** intermediate tree:
+/// the payload keys stream out in the codec's (sorted) order.
+pub fn eval_ok_into(buf: &mut String, id: i64, r: &EvalResult) {
+    buf.push_str("{\"id\":");
+    json::write_num(buf, id as f64);
+    buf.push_str(",\"ok\":true,\"result\":{\"accuracy\":");
+    json::write_num(buf, r.accuracy);
+    buf.push_str(",\"loss\":");
+    json::write_num(buf, r.loss);
+    buf.push_str(",\"samples\":");
+    json::write_num(buf, r.samples as f64);
+    buf.push_str("}}");
+}
+
+/// Append an error envelope: `{"error":"..","id":N,"ok":false}` —
+/// byte-identical to `codec::err_response(id, error).compact()`.
+pub fn err_into(buf: &mut String, id: i64, error: &str) {
+    buf.push_str("{\"error\":");
+    json::write_escaped(buf, error);
+    buf.push_str(",\"id\":");
+    json::write_num(buf, id as f64);
+    buf.push_str(",\"ok\":false}");
+}
+
+/// Append a load-shed envelope — an error response whose `"shed":true`
+/// marks it as explicitly retry-able overload, not a request defect.
+pub fn shed_into(buf: &mut String, id: i64, error: &str) {
+    buf.push_str("{\"error\":");
+    json::write_escaped(buf, error);
+    buf.push_str(",\"id\":");
+    json::write_num(buf, id as f64);
+    buf.push_str(",\"ok\":false,\"shed\":true}");
+}
+
+/// [`ok_into`] as a fresh `String` (cold paths, tests).
+pub fn ok_line(id: i64, result: &Json) -> String {
+    let mut buf = String::with_capacity(64);
+    ok_into(&mut buf, id, result);
+    buf
+}
+
+/// [`eval_ok_into`] as a fresh `String`.
+pub fn eval_ok_line(id: i64, r: &EvalResult) -> String {
+    let mut buf = String::with_capacity(96);
+    eval_ok_into(&mut buf, id, r);
+    buf
+}
+
+/// [`err_into`] as a fresh `String`.
+pub fn err_line(id: i64, error: &str) -> String {
+    let mut buf = String::with_capacity(64 + error.len());
+    err_into(&mut buf, id, error);
+    buf
+}
+
+/// [`shed_into`] as a fresh `String`.
+pub fn shed_line(id: i64, error: &str) -> String {
+    let mut buf = String::with_capacity(64 + error.len());
+    shed_into(&mut buf, id, error);
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::codec;
+    use super::*;
+
+    /// Valid and invalid request lines alike must get the same verdict —
+    /// and, when accepted, the same `Request` — from the streaming decoder
+    /// and the tree codec.
+    #[test]
+    fn decoder_matches_codec_on_corpus() {
+        let deep_ok = format!(
+            r#"{{"id":1,"op":"status","x":{}5{}}}"#,
+            "[".repeat(100),
+            "]".repeat(100)
+        );
+        let deep_err = format!(
+            r#"{{"id":1,"op":"status","x":{}5{}}}"#,
+            "[".repeat(200),
+            "]".repeat(200)
+        );
+        let corpus: Vec<String> = vec![
+            // the happy paths
+            r#"{"id":7,"op":"evaluate","model":"m/c","batches":3}"#.into(),
+            r#"{"id":1,"op":"evaluate","selection":[0,2,1]}"#.into(),
+            r#"{"id":2,"op":"energy","selection":[1,1]}"#.into(),
+            r#"{"id":3,"op":"select","r_energy":0.7,"omega":[[0.1,null],[0.2]]}"#.into(),
+            r#"{"id":4,"op":"status"}"#.into(),
+            r#"{"id":5,"op":"shutdown"}"#.into(),
+            // whitespace, duplicates (last wins), escaped keys and values
+            "  {\"id\" :\t9 , \"op\" : \"status\" }  ".into(),
+            r#"{"id":1,"id":2,"op":"status"}"#.into(),
+            r#"{"id":8,"op":"status"}"#.into(),
+            r#"{"id":1,"op":"evaluate","model":"mA/c\n😀"}"#.into(),
+            // unknown keys with arbitrary nested values are skipped
+            r#"{"id":1,"op":"status","x":{"a":[1,{"b":null}],"c":"s"},"y":[],"z":true}"#.into(),
+            // wrong-typed fields the op does not consume are ignored
+            r#"{"id":1,"op":"status","batches":"z","omega":5,"selection":{"a":1},"r_energy":[1]}"#
+                .into(),
+            // number grammar corners (accepted by f64::from_str)
+            r#"{"id":1,"op":"evaluate","batches":1e2}"#.into(),
+            r#"{"id":1,"op":"select","r_energy":1e999,"omega":[]}"#.into(),
+            r#"{"id":-3,"op":"status"}"#.into(),
+            // rejections: both sides must refuse
+            "".into(),
+            "not json".into(),
+            "5".into(),
+            "[]".into(),
+            r#"{"op":"status"}"#.into(),
+            r#"{"id":1}"#.into(),
+            r#"{"id":1,"op":"frobnicate"}"#.into(),
+            r#"{"id":2.5,"op":"status"}"#.into(),
+            r#"{"id":1e999,"op":"status"}"#.into(),
+            r#"{"id":"x","op":"status"}"#.into(),
+            r#"{"id":1,"op":5}"#.into(),
+            r#"{"id":1,"op":"status","model":7}"#.into(),
+            r#"{"id":1,"op":"evaluate","batches":-2}"#.into(),
+            r#"{"id":1,"op":"evaluate","batches":2.5}"#.into(),
+            r#"{"id":1,"op":"evaluate","selection":[1,]}"#.into(),
+            r#"{"id":1,"op":"energy"}"#.into(),
+            r#"{"id":1,"op":"select","r_energy":0.5,"omega":[["x"]]}"#.into(),
+            r#"{"id":1,"op":"select","omega":[]}"#.into(),
+            r#"{"id":1,"op":"status"} trailing"#.into(),
+            r#"{"id":1,"op":"status",}"#.into(),
+            r#"{"id":1 "op":"status"}"#.into(),
+            r#"{"id":1,"op":"sta\qtus"}"#.into(),
+            "{\"id\":1,\"op\":\"sta\ttus\"}".into(),
+            deep_ok,
+            deep_err,
+        ];
+        for line in &corpus {
+            let reference = codec::parse_request(line);
+            let fast = decode_line(line);
+            assert_eq!(
+                reference.is_ok(),
+                fast.is_ok(),
+                "verdict divergence on {line:?}: codec={reference:?} wire={fast:?}"
+            );
+            if let (Ok(a), Ok(b)) = (&reference, &fast) {
+                // Debug compare: Request holds NaN-bearing f64s, and NaN
+                // formats identically on both sides
+                assert_eq!(format!("{a:?}"), format!("{b:?}"), "value divergence on {line:?}");
+            }
+        }
+    }
+
+    /// Every proper prefix of a valid line is malformed; both decoders
+    /// must agree on each one (truncated-line robustness).
+    #[test]
+    fn decoder_matches_codec_on_every_prefix() {
+        let line = r#"{"id":12,"op":"select","model":"m/c","r_energy":0.75,"omega":[[0.1,null,3e-2],[1,2]],"x":{"k":[true,false,null,"sA"]}}"#;
+        assert!(decode_line(line).is_ok());
+        for end in 0..line.len() {
+            if !line.is_char_boundary(end) {
+                continue;
+            }
+            let p = &line[..end];
+            assert_eq!(
+                codec::parse_request(p).is_ok(),
+                decode_line(p).is_ok(),
+                "prefix verdict divergence at {end}: {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_body_defaults_id_and_checks_route_op() {
+        let r = decode_body(r#"{"batches":2,"model":"m/c"}"#, "evaluate").unwrap();
+        assert_eq!(r.id, 0);
+        assert_eq!(r.model.as_deref(), Some("m/c"));
+        assert!(matches!(r.op, Op::Evaluate { batches: 2, selection: None }));
+
+        let r = decode_body(r#"{"id":5,"selection":[0,1]}"#, "energy").unwrap();
+        assert_eq!(r.id, 5);
+        assert!(matches!(r.op, Op::Energy { .. }));
+
+        // body op must agree with the route when present
+        assert!(decode_body(r#"{"op":"energy","selection":[0]}"#, "evaluate").is_err());
+        let r = decode_body(r#"{"op":"evaluate"}"#, "evaluate").unwrap();
+        assert!(matches!(r.op, Op::Evaluate { batches: 1, selection: None }));
+
+        // route ops still validate their required fields
+        assert!(decode_body("{}", "select").is_err());
+        assert!(decode_body(r#"{"r_energy":0.5,"omega":[[0.1]]}"#, "select").is_ok());
+    }
+
+    #[test]
+    fn encoder_is_byte_identical_to_codec() {
+        let r = EvalResult { loss: 0.1 + 0.2, accuracy: 1.0 / 3.0, samples: 64 };
+        assert_eq!(eval_ok_line(7, &r), codec::ok_response(7, codec::eval_json(&r)).compact());
+        let poisoned = EvalResult { loss: f64::NAN, accuracy: 0.0, samples: 0 };
+        assert_eq!(
+            eval_ok_line(-1, &poisoned),
+            codec::ok_response(-1, codec::eval_json(&poisoned)).compact()
+        );
+
+        let payload = Json::obj()
+            .with("names", vec!["mul8s_1kv8".to_string(), "exact".to_string()])
+            .with("energy", 1.25e-3)
+            .with("optimal", true);
+        assert_eq!(ok_line(3, &payload), codec::ok_response(3, payload.clone()).compact());
+
+        let msg = "bad \"quote\", tab\t, newline\n, unicode ☃";
+        assert_eq!(err_line(-1, msg), codec::err_response(-1, msg).compact());
+
+        // shed = the error envelope plus a trailing "shed":true
+        assert_eq!(
+            shed_line(5, "overloaded"),
+            codec::err_response(5, "overloaded").with("shed", true).compact()
+        );
+    }
+
+    #[test]
+    fn encode_into_reuses_the_buffer() {
+        let mut buf = String::new();
+        err_into(&mut buf, 1, "a");
+        let first = buf.clone();
+        buf.clear();
+        err_into(&mut buf, 1, "a");
+        assert_eq!(buf, first);
+        buf.clear();
+        ok_into(&mut buf, 2, &Json::obj().with("k", 1usize));
+        assert_eq!(buf, codec::ok_response(2, Json::obj().with("k", 1usize)).compact());
+    }
+
+    #[test]
+    fn read_line_bounded_splits_and_caps() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+
+        let mut r = Cursor::new(&b"short\nlonger line here\npartial"[..]);
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 1024).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"short");
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 1024).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"longer line here");
+        // unterminated final line still comes through (read_line parity)
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 1024).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"partial");
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 1024).unwrap(), LineRead::Eof);
+
+        // oversize: consumed through the newline, next line unharmed
+        let mut r = Cursor::new(&b"0123456789\nok\n"[..]);
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 4).unwrap(), LineRead::Oversized);
+        assert!(buf.is_empty());
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 4).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"ok");
+
+        // a line of exactly `max` bytes is allowed
+        let mut r = Cursor::new(&b"abcd\nabcde\n"[..]);
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 4).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"abcd");
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 4).unwrap(), LineRead::Oversized);
+
+        // oversized unterminated tail before EOF
+        let mut r = Cursor::new(&b"012345"[..]);
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 3).unwrap(), LineRead::Oversized);
+        assert_eq!(read_line_bounded(&mut r, &mut buf, 3).unwrap(), LineRead::Eof);
+    }
+}

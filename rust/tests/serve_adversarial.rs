@@ -1,0 +1,461 @@
+//! Adversarial wire-path suite for `fames serve` — hostile inputs against
+//! the NDJSON front door, the HTTP gateway and the admission layer.
+//!
+//! The contract under test: a serve daemon **never panics and never goes
+//! silent**. Every accepted byte stream gets either its result, an error
+//! envelope, or an explicit shed response — for truncated JSON, deep
+//! nesting, huge numbers, invalid UTF-8, oversized lines and half-closed
+//! sockets alike — and overload sheds explicitly at both the connection
+//! gate and the bounded queue.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fames::json::Json;
+use fames::pipeline::{self, FamesConfig};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+use fames::runtime::Runtime;
+use fames::serve::{codec, Client, Outcome, ServeConfig, Server};
+
+fn setup_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-adv-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    root
+}
+
+fn base_cfg(root: &std::path::Path) -> FamesConfig {
+    FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: 60,
+        train_lr: 0.02,
+        ..FamesConfig::default()
+    }
+}
+
+fn spawn_server(scfg: &ServeConfig) -> (String, Option<String>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(scfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let http = server.http_local_addr().map(|a| a.to_string());
+    let daemon = std::thread::spawn(move || server.run());
+    (addr, http, daemon)
+}
+
+/// Send raw bytes as one line, read one response line back.
+fn roundtrip(r: &mut BufReader<TcpStream>, w: &mut TcpStream, bytes: &[u8]) -> Json {
+    w.write_all(bytes).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "server went silent on {bytes:?}");
+    Json::parse(line.trim()).expect("response must be valid JSON")
+}
+
+#[test]
+fn hostile_lines_always_get_an_answer_and_never_kill_the_daemon() {
+    let root = setup_root("hostile");
+    let base = base_cfg(&root);
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 4,
+        max_line: 4096,
+        base,
+        ..ServeConfig::default()
+    };
+    let (addr, _, daemon) = spawn_server(&scfg);
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // truncated / malformed JSON: error envelope, id echoed when parseable
+    for bad in [
+        &b"{\"id\":1,\"op\":\"evaluate\",\"batches\":"[..],
+        b"{\"id\":2,\"op\":",
+        b"not json at all",
+        b"[1,2,3]",
+        b"{}",
+        b"{\"id\":3}",
+    ] {
+        let resp = roundtrip(&mut r, &mut w, bad);
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{bad:?} must be refused");
+    }
+
+    // nesting past json::MAX_DEPTH: bounded decoders refuse, no stack risk
+    let mut deep = String::from("{\"id\":4,\"op\":\"status\",\"x\":");
+    for _ in 0..(fames::json::MAX_DEPTH + 16) {
+        deep.push('[');
+    }
+    for _ in 0..(fames::json::MAX_DEPTH + 16) {
+        deep.push(']');
+    }
+    deep.push('}');
+    let resp = roundtrip(&mut r, &mut w, deep.as_bytes());
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "deep nesting must be refused");
+
+    // huge numbers: 1e999 overflows f64 to inf — typed fields reject it
+    for huge in [
+        &b"{\"id\":1e999,\"op\":\"status\"}"[..],
+        b"{\"id\":5,\"op\":\"evaluate\",\"batches\":1e999}",
+        b"{\"id\":6,\"op\":\"evaluate\",\"batches\":184467440737095516151}",
+    ] {
+        let resp = roundtrip(&mut r, &mut w, huge);
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{huge:?} must be refused");
+    }
+
+    // invalid UTF-8 bytes: answered (id -1), connection stays usable
+    let resp = roundtrip(&mut r, &mut w, b"{\"id\":7,\"op\":\xff\xfe}");
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(resp.get("id").unwrap().as_i64().unwrap(), -1);
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("UTF-8"));
+
+    // oversized line: explicit refusal, then the connection resyncs
+    let oversized = format!("{{\"id\":8,\"op\":\"status\",\"pad\":\"{}\"}}", "x".repeat(8192));
+    let resp = roundtrip(&mut r, &mut w, oversized.as_bytes());
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("exceeds"));
+
+    // after all of the abuse, the same connection still serves status
+    let resp = roundtrip(&mut r, &mut w, b"{\"id\":9,\"op\":\"status\"}");
+    assert!(resp.get("ok").unwrap().as_bool().unwrap());
+    let st = resp.get("result").unwrap();
+    assert!(st.get("admission").unwrap().get("oversized").unwrap().as_usize().unwrap() >= 1);
+
+    // half-closed socket: request then FIN — the answer still arrives
+    {
+        let s2 = TcpStream::connect(&addr).unwrap();
+        let mut w2 = s2.try_clone().unwrap();
+        let mut r2 = BufReader::new(s2);
+        w2.write_all(b"{\"id\":20,\"op\":\"status\"}\n").unwrap();
+        w2.flush().unwrap();
+        r2.get_ref().shutdown(std::net::Shutdown::Write).unwrap();
+        let mut line = String::new();
+        assert!(r2.read_line(&mut line).unwrap() > 0, "half-closed socket got no answer");
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("id").unwrap().as_i64().unwrap(), 20);
+        assert!(resp.get("ok").unwrap().as_bool().unwrap());
+        line.clear();
+        assert_eq!(r2.read_line(&mut line).unwrap(), 0, "connection must close after FIN");
+    }
+
+    let resp = roundtrip(&mut r, &mut w, b"{\"id\":10,\"op\":\"shutdown\"}");
+    assert!(resp.get("ok").unwrap().as_bool().unwrap());
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Minimal HTTP/1.1 client: one request, full response (Connection: close).
+fn http_roundtrip(addr: &str, request: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut buf = String::new();
+    BufReader::new(s).read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("response must have a header block");
+    let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+    (status, head.to_string(), body.to_string())
+}
+
+fn post(path: &str, body: &str) -> String {
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+#[test]
+fn http_gateway_serves_the_same_bytes_and_maps_errors_to_status_codes() {
+    let root = setup_root("http");
+    let base = base_cfg(&root);
+    // warm the parameter cache so the direct reference below is
+    // bit-identical to the server's session
+    {
+        let rt = Arc::new(Runtime::native());
+        pipeline::warm_session(rt, &base).unwrap();
+    }
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_addr: Some("127.0.0.1:0".to_string()),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 4,
+        max_line: 4096,
+        base: base.clone(),
+        ..ServeConfig::default()
+    };
+    let (addr, http, daemon) = spawn_server(&scfg);
+    let http = http.expect("http gateway configured");
+
+    // the HTTP success payload is the NDJSON envelope, byte for byte
+    let rt = Arc::new(Runtime::native());
+    let direct = pipeline::warm_session(rt, &base).unwrap();
+    let want = codec::ok_response(0, codec::eval_json(&direct.evaluate(1).unwrap())).compact();
+    let (status, _, body) =
+        http_roundtrip(&http, &post("/v1/evaluate", r#"{"batches":1,"model":"resnet8/w4a4"}"#));
+    assert_eq!(status, 200);
+    assert_eq!(body, want, "HTTP evaluate payload diverged from the NDJSON envelope");
+
+    // explicit id + matching op in the body are honored
+    let (status, _, body) = http_roundtrip(
+        &http,
+        &post("/v1/evaluate", r#"{"id":42,"op":"evaluate","batches":1,"model":"resnet8/w4a4"}"#),
+    );
+    assert_eq!(status, 200);
+    let resp = Json::parse(&body).unwrap();
+    assert_eq!(resp.get("id").unwrap().as_i64().unwrap(), 42);
+
+    // op/route mismatch is a 400 with a structured error
+    let (status, _, body) =
+        http_roundtrip(&http, &post("/v1/energy", r#"{"op":"evaluate","batches":1}"#));
+    assert_eq!(status, 400);
+    let err = Json::parse(&body).unwrap();
+    assert_eq!(err.get("error").unwrap().get("code").unwrap().as_str().unwrap(), "bad_request");
+
+    // unknown model routes to 404 / unknown_model
+    let (status, _, body) =
+        http_roundtrip(&http, &post("/v1/evaluate", r#"{"batches":1,"model":"nope/x"}"#));
+    assert_eq!(status, 404);
+    let err = Json::parse(&body).unwrap();
+    assert_eq!(err.get("error").unwrap().get("code").unwrap().as_str().unwrap(), "unknown_model");
+
+    // unknown route: 404 / not_found
+    let (status, _, body) = http_roundtrip(&http, &post("/v1/nope", "{}"));
+    assert_eq!(status, 404);
+    let err = Json::parse(&body).unwrap();
+    assert_eq!(err.get("error").unwrap().get("code").unwrap().as_str().unwrap(), "not_found");
+
+    // malformed body: 400, daemon survives
+    let (status, _, _) = http_roundtrip(&http, &post("/v1/evaluate", "{\"batches\":"));
+    assert_eq!(status, 400);
+
+    // oversized body: 413 and an explicit refusal
+    let big = format!("{{\"batches\":1,\"pad\":\"{}\"}}", "x".repeat(8192));
+    let (status, head, _) = http_roundtrip(&http, &post("/v1/evaluate", &big));
+    assert_eq!(status, 413);
+    assert!(head.contains("Connection: close"));
+
+    // status over HTTP: bare status object from the same daemon
+    let (status, _, body) = http_roundtrip(
+        &http,
+        "GET /v1/status HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 200);
+    let st = Json::parse(&body).unwrap();
+    assert_eq!(st.get("protocol").unwrap().as_str().unwrap(), "fames-serve-v1");
+    assert!(st.get("requests").unwrap().get("http").unwrap().as_usize().unwrap() >= 7);
+    assert!(st.get("admission").unwrap().get("oversized").unwrap().as_usize().unwrap() >= 1);
+
+    // keep-alive: two requests on one connection (Content-Length framing)
+    {
+        let mut s = TcpStream::connect(&http).unwrap();
+        let req = "GET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n";
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        for _ in 0..2 {
+            s.write_all(req.as_bytes()).unwrap();
+            let mut content_length = 0usize;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                assert!(r.read_line(&mut line).unwrap() > 0);
+                let t = line.trim();
+                if t.is_empty() {
+                    break;
+                }
+                if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+                    content_length = v.trim().parse().unwrap();
+                }
+            }
+            let mut body = vec![0u8; content_length];
+            r.read_exact(&mut body).unwrap();
+            let st = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert_eq!(st.get("protocol").unwrap().as_str().unwrap(), "fames-serve-v1");
+        }
+    }
+
+    // NDJSON door still shuts the whole daemon down (both listeners)
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.shutdown(99).unwrap();
+    drop(cl);
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn overload_sheds_explicitly_and_retry_helper_resends_only_sheds() {
+    let root = setup_root("shed");
+    let base = base_cfg(&root);
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 1,
+        max_pending: 1,
+        base,
+        ..ServeConfig::default()
+    };
+    let (addr, _, daemon) = spawn_server(&scfg);
+
+    let reqs: Vec<Json> = (0..12i64)
+        .map(|id| {
+            Json::obj()
+                .with("id", id)
+                .with("op", "evaluate")
+                .with("model", "resnet8/w4a4")
+                .with("batches", 1usize)
+        })
+        .collect();
+    let mut cl = Client::connect(&addr).unwrap();
+    let outcomes = cl.call_many_outcomes(&reqs);
+    assert_eq!(outcomes.len(), reqs.len());
+    let ok = outcomes.iter().filter(|o| matches!(o, Outcome::Ok(_))).count();
+    let shed = outcomes.iter().filter(|o| o.is_shed()).count();
+    let lost = outcomes.iter().filter(|o| matches!(o, Outcome::Lost)).count();
+    assert!(ok >= 1, "a 1-deep queue still serves something");
+    assert!(shed >= 1, "12 pipelined requests against max_pending=1 must shed");
+    assert_eq!(lost, 0, "every request must be answered, not dropped");
+
+    // the retry helper resends only the shed ids and keeps request order
+    let outcomes = cl.call_many_retry_shed(&reqs, Duration::from_millis(50));
+    assert_eq!(outcomes.len(), reqs.len());
+    assert!(
+        outcomes.iter().all(|o| !matches!(o, Outcome::Lost)),
+        "retry must never lose a request"
+    );
+
+    // queue sheds are visible in the admission telemetry
+    let resp = cl.call(&Json::obj().with("id", 500).with("op", "status")).unwrap();
+    let st = Client::expect_ok(&resp).unwrap();
+    assert!(st.get("admission").unwrap().get("shed_requests").unwrap().as_usize().unwrap() >= 1);
+
+    cl.shutdown(501).unwrap();
+    drop(cl);
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn connection_gate_refuses_with_one_shed_line_then_frees_the_slot() {
+    let root = setup_root("gate");
+    let base = base_cfg(&root);
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 4,
+        max_conns: 1,
+        base,
+        ..ServeConfig::default()
+    };
+    let (addr, _, daemon) = spawn_server(&scfg);
+
+    // occupy the only slot with a live, working connection
+    let mut holder = Client::connect(&addr).unwrap();
+    let resp = holder.call(&Json::obj().with("id", 1).with("op", "status")).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap());
+
+    // the second connection gets exactly one shed line, then EOF
+    {
+        let s = TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0, "refused connection must be told why");
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("id").unwrap().as_i64().unwrap(), -1);
+        assert!(resp.get("shed").unwrap().as_bool().unwrap());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("connection limit"));
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "gate refusal must close");
+    }
+
+    // dropping the holder frees the slot (guard drop may lag the close)
+    drop(holder);
+    let mut cl = None;
+    for _ in 0..100 {
+        let mut c = Client::connect(&addr).unwrap();
+        if let Ok(resp) = c.call(&Json::obj().with("id", 2).with("op", "status")) {
+            if resp.get("ok").map(|j| j.as_bool().unwrap_or(false)).unwrap_or(false) {
+                cl = Some(c);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let mut cl = cl.expect("slot never came back after the holder disconnected");
+    let st = Client::expect_ok(
+        &cl.call(&Json::obj().with("id", 3).with("op", "status")).unwrap(),
+    )
+    .unwrap()
+    .clone();
+    assert!(st.get("admission").unwrap().get("shed_conns").unwrap().as_usize().unwrap() >= 1);
+
+    cl.shutdown(4).unwrap();
+    drop(cl);
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn round_robin_keeps_a_flooded_daemon_fair_to_new_clients() {
+    let root = setup_root("fair");
+    let base = base_cfg(&root);
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 4,
+        base,
+        ..ServeConfig::default()
+    };
+    let (addr, _, daemon) = spawn_server(&scfg);
+
+    let flood_n = 48usize;
+    let flood_addr = addr.clone();
+    let flooder = std::thread::spawn(move || {
+        let mut cl = Client::connect(&flood_addr).unwrap();
+        let reqs: Vec<Json> = (0..flood_n as i64)
+            .map(|id| {
+                Json::obj()
+                    .with("id", id)
+                    .with("op", "evaluate")
+                    .with("model", "resnet8/w4a4")
+                    .with("batches", 1usize)
+            })
+            .collect();
+        let t = Instant::now();
+        let outcomes = cl.call_many_outcomes(&reqs);
+        assert!(
+            outcomes.iter().all(|o| matches!(o, Outcome::Ok(_))),
+            "flood within max_pending must fully succeed"
+        );
+        t.elapsed()
+    });
+
+    // let the flood queue up, then ask for one answer as a new client
+    std::thread::sleep(Duration::from_millis(100));
+    let mut victim = Client::connect(&addr).unwrap();
+    let t = Instant::now();
+    let resp = victim
+        .call(
+            &Json::obj()
+                .with("id", 9000)
+                .with("op", "evaluate")
+                .with("model", "resnet8/w4a4")
+                .with("batches", 1usize),
+        )
+        .unwrap();
+    let victim_wait = t.elapsed();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap());
+
+    let flood_total = flooder.join().unwrap();
+    // round-robin puts the victim into the next wave; FIFO would park it
+    // behind the whole flood (≈ flood_total). Generous margin: it must
+    // beat the flood's total drain time.
+    assert!(
+        victim_wait < flood_total,
+        "victim waited {victim_wait:?}, flood drained in {flood_total:?} — starved"
+    );
+
+    victim.shutdown(9001).unwrap();
+    drop(victim);
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -163,6 +163,7 @@ fn serve_matches_direct_session_at_jobs_1_4_auto_and_shuts_down_cleanly() {
             models: vec!["resnet8/w4a4".to_string()],
             max_batch: 4,
             base: FamesConfig { jobs, ..base.clone() },
+            ..ServeConfig::default()
         };
         let server = Server::bind(&scfg).unwrap();
         let addr = server.local_addr().to_string();
@@ -233,6 +234,11 @@ fn serve_matches_direct_session_at_jobs_1_4_auto_and_shuts_down_cleanly() {
         assert_eq!(st.get("backend").unwrap().as_str().unwrap(), "native");
         let total = st.get("requests").unwrap().get("total").unwrap().as_usize().unwrap();
         assert!(total >= 13, "status saw only {total} requests");
+        // admission telemetry: present, and quiet under a polite load
+        let adm = st.get("admission").unwrap();
+        assert!(adm.get("max_conns").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(adm.get("shed_requests").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(adm.get("evicted").unwrap().as_usize().unwrap(), 0);
 
         // unknown model: error response, not a dead connection
         let resp = cl
@@ -279,6 +285,7 @@ fn serve_routes_across_multiple_models() {
         models: vec!["resnet8/w4a4".to_string(), "resnet14/w3a3".to_string()],
         max_batch: 8,
         base: base.clone(),
+        ..ServeConfig::default()
     };
     let server = Server::bind(&scfg).unwrap();
     assert_eq!(server.registry().len(), 2);
