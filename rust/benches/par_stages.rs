@@ -12,13 +12,15 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick" || a == "--smoke");
     let cfg = BenchConfig { jobs: 0, quick };
     let stages = run_stages(&cfg)?;
+    println!("protocol: {}", fames::bench::stage_protocol(&stages));
     for s in &stages {
         println!(
-            "{:32} serial {:>10} | parallel {:>10} | speedup {:>5.2}x",
+            "{:32} serial {:>10} | parallel {:>10} | speedup {:>5.2}x | spread {:>4.0}%",
             s.name,
-            fames::util::fmt_secs(s.serial_secs),
-            fames::util::fmt_secs(s.parallel_secs),
-            s.speedup()
+            fames::util::fmt_secs(s.serial_secs()),
+            fames::util::fmt_secs(s.parallel_secs()),
+            s.speedup(),
+            s.parallel.rel_spread() * 100.0
         );
     }
     println!("{}", snapshot_json(&stages, &cfg).compact());

@@ -23,6 +23,19 @@
 //! per-kernel fused-vs-reference timings ([`run_kernel_bench`]), and
 //! `fames serve` throughput at 1/8/64 concurrent clients
 //! ([`run_serve_bench_full`]).
+//!
+//! ## Timing protocol
+//!
+//! Repeatable measurements are **median-of-N** ([`TimingStats`]): each
+//! timed body runs N times and the reported seconds are the median sample
+//! — robust to one-off outliers (page faults, scheduler preemption) where
+//! best-of-N is flattering and mean-of-N is noisy. Every snapshot entry
+//! records its own `reps` and relative dispersion (`(max−min)/median`),
+//! stages too expensive to repeat record an honest `reps = 1`, and the
+//! top-level `protocol` object names the protocol that produced each
+//! section. `fames bench --compare` widens its regression tolerance by the
+//! recorded dispersion ([`StageDelta::tolerance`]) instead of flagging a
+//! noisy stage — or demanding padded baselines.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -32,7 +45,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::appmul::{generate_for_bits_jobs, generate_library_jobs};
 use crate::calibrate::CalibConfig;
 use crate::json::Json;
-use crate::kernel::{counters, gemm, lut, Scratch};
+use crate::kernel::{counters, gemm, lut, KernelMode, Scratch};
 use crate::pipeline::{self, FamesConfig, Session};
 use crate::runtime::backend::native::{write_synthetic_artifacts, NativeBackend, SyntheticSpec};
 use crate::runtime::Runtime;
@@ -47,8 +60,14 @@ use crate::util::par;
 pub const SCHEMA: &str = "fames-bench-v1";
 
 /// A stage counts as regressed in `fames bench --compare` when it got more
-/// than this fraction slower.
+/// than this fraction slower (plus any recorded dispersion, see
+/// [`StageDelta::tolerance`]).
 pub const REGRESSION_TOLERANCE: f64 = 0.10;
+
+/// Upper bound on how much recorded dispersion can widen the `--compare`
+/// tolerance: a stage whose samples span ±200% must not become
+/// un-regressable, so the credit is capped here.
+pub const MAX_DISPERSION_CREDIT: f64 = 0.50;
 
 /// Bench knobs.
 #[derive(Clone, Debug, Default)]
@@ -59,64 +78,127 @@ pub struct BenchConfig {
     pub quick: bool,
 }
 
-/// One stage's serial-vs-parallel timing.
+/// One measurement's sample statistics: `reps` wall-clock samples reduced
+/// to median/min/max. The median is the reported number; min/max record
+/// the dispersion so snapshots carry their own error bars.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingStats {
+    pub reps: usize,
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl TimingStats {
+    /// Reduce raw samples (seconds) to median-of-N stats. Even `N` takes
+    /// the mean of the two middle samples; an empty slice yields all-zero
+    /// stats so the math stays total.
+    pub fn from_samples(samples: &[f64]) -> TimingStats {
+        if samples.is_empty() {
+            return TimingStats { reps: 0, median_secs: 0.0, min_secs: 0.0, max_secs: 0.0 };
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let n = s.len();
+        let median = if n % 2 == 1 { s[n / 2] } else { 0.5 * (s[n / 2 - 1] + s[n / 2]) };
+        TimingStats { reps: n, median_secs: median, min_secs: s[0], max_secs: s[n - 1] }
+    }
+
+    /// A single sample: stages too expensive to repeat record an honest
+    /// `reps = 1` (spread 0) instead of a fabricated distribution.
+    pub fn single(secs: f64) -> TimingStats {
+        TimingStats { reps: 1, median_secs: secs, min_secs: secs, max_secs: secs }
+    }
+
+    /// Relative dispersion `(max − min) / median`; 0 for `reps < 2` or a
+    /// degenerate zero median.
+    pub fn rel_spread(&self) -> f64 {
+        if self.reps < 2 || self.median_secs <= 0.0 {
+            0.0
+        } else {
+            (self.max_secs - self.min_secs) / self.median_secs
+        }
+    }
+}
+
+/// One stage's serial-vs-parallel timing (median-of-N per side).
 #[derive(Clone, Debug)]
 pub struct StageResult {
     pub name: &'static str,
-    pub serial_secs: f64,
-    pub parallel_secs: f64,
+    pub serial: TimingStats,
+    pub parallel: TimingStats,
 }
 
 impl StageResult {
+    /// Single-sample stage (test fixtures; single-shot stages).
+    pub fn flat(name: &'static str, serial_secs: f64, parallel_secs: f64) -> StageResult {
+        StageResult {
+            name,
+            serial: TimingStats::single(serial_secs),
+            parallel: TimingStats::single(parallel_secs),
+        }
+    }
+
+    /// Median serial wall-clock.
+    pub fn serial_secs(&self) -> f64 {
+        self.serial.median_secs
+    }
+
+    /// Median parallel wall-clock.
+    pub fn parallel_secs(&self) -> f64 {
+        self.parallel.median_secs
+    }
+
     /// Serial / parallel wall-clock ratio (> 1 means the parallel path won).
     pub fn speedup(&self) -> f64 {
-        if self.parallel_secs > 0.0 {
-            self.serial_secs / self.parallel_secs
+        if self.parallel_secs() > 0.0 {
+            self.serial_secs() / self.parallel_secs()
         } else {
             0.0
         }
     }
 }
 
-/// Best-of-`reps` wall-clock of fallible `f`; the first error aborts the
+/// Median-of-`reps` wall-clock of fallible `f`; the first error aborts the
 /// stage (a failing stage must fail the bench, not report the wall-clock
 /// of its error path).
-fn time_best_of<F>(reps: usize, mut f: F) -> Result<f64>
+fn time_median_of<F>(reps: usize, mut f: F) -> Result<TimingStats>
 where
     F: FnMut() -> Result<()>,
 {
-    let mut best = f64::MAX;
+    let mut samples = Vec::with_capacity(reps.max(1));
     for _ in 0..reps.max(1) {
         let t = Instant::now();
         f()?;
-        best = best.min(t.elapsed().as_secs_f64());
+        samples.push(t.elapsed().as_secs_f64());
     }
-    Ok(best)
+    Ok(TimingStats::from_samples(&samples))
 }
 
 /// Run every stage serial-vs-parallel and collect the timings.
 pub fn run_stages(cfg: &BenchConfig) -> Result<Vec<StageResult>> {
     let jobs = par::effective_jobs(cfg.jobs);
     // workload sizes: full runs use 7-bit LUTs (16 384-entry E vectors);
-    // quick runs shrink to 5-bit so the CI smoke lane stays in seconds
+    // quick runs shrink to 5-bit so the CI smoke lane stays in seconds.
+    // `reps` is the median-of-N sample count for the repeatable stages.
     let (lib_bits, est_bits, iters, eval_batch, pop, gens, reps) = if cfg.quick {
-        (5u32, 5u32, 2usize, 128usize, 6usize, 1usize, 1usize)
+        (5u32, 5u32, 2usize, 128usize, 6usize, 1usize, 3usize)
     } else {
-        (7, 7, 6, 512, 8, 2, 2)
+        (7, 7, 6, 512, 8, 2, 5)
     };
     let mut stages: Vec<StageResult> = Vec::new();
 
     // 1. AppMul library generation (candidate netlist simulation);
     // black_box: the call is pure, keep release builds from eliding it
-    let serial_secs = time_best_of(reps, || {
+    let serial = time_median_of(reps, || {
         std::hint::black_box(generate_for_bits_jobs(lib_bits, lib_bits, 0, 1));
         Ok(())
     })?;
-    let parallel_secs = time_best_of(reps, || {
+    let parallel = time_median_of(reps, || {
         std::hint::black_box(generate_for_bits_jobs(lib_bits, lib_bits, 0, jobs));
         Ok(())
     })?;
-    stages.push(StageResult { name: "library_generation", serial_secs, parallel_secs });
+    stages.push(StageResult { name: "library_generation", serial, parallel });
 
     // shared synthetic model: 4 substitutable layers at the chosen bitwidth
     let root = std::env::temp_dir().join(format!("fames-bench-{}", std::process::id()));
@@ -148,26 +230,27 @@ pub fn run_stages(cfg: &BenchConfig) -> Result<Vec<StageResult>> {
 
     // 2. per-layer power iteration (paper Eq. 12)
     let mode = HessianMode::Rank1 { iters };
-    let serial_secs = time_best_of(reps, || {
+    let serial = time_median_of(reps, || {
         Estimator::compute(&mut serial_s, 1, mode).map(|_| ()).context("estimator (serial)")
     })?;
-    let parallel_secs = time_best_of(reps, || {
+    let parallel = time_median_of(reps, || {
         Estimator::compute(&mut par_s, 1, mode).map(|_| ()).context("estimator (parallel)")
     })?;
-    stages.push(StageResult { name: "estimator_power_iteration", serial_secs, parallel_secs });
+    stages.push(StageResult { name: "estimator_power_iteration", serial, parallel });
 
-    // 3. Ω table with batched exact-HVP quadratics (paper §IV-C2)
-    let serial_secs = time_best_of(1, || {
+    // 3. Ω table with batched exact-HVP quadratics (paper §IV-C2) — too
+    //    expensive to repeat; records an honest reps = 1
+    let serial = time_median_of(1, || {
         estimate_table(&mut serial_s, &library, 1, HessianMode::Exact)
             .map(|_| ())
             .context("omega table (serial)")
     })?;
-    let parallel_secs = time_best_of(1, || {
+    let parallel = time_median_of(1, || {
         estimate_table(&mut par_s, &library, 1, HessianMode::Exact)
             .map(|_| ())
             .context("omega table (parallel)")
     })?;
-    stages.push(StageResult { name: "omega_table_exact", serial_secs, parallel_secs });
+    stages.push(StageResult { name: "omega_table_exact", serial, parallel });
 
     // 4. NSGA population evaluation (GA-baseline candidate scoring); the
     //    backend stays serial so only the population-wave workers vary
@@ -215,18 +298,19 @@ pub fn run_stages(cfg: &BenchConfig) -> Result<Vec<StageResult>> {
         }
         Ok(dt)
     };
-    let serial_secs = ga_secs(&serial_s, 1)?;
-    let parallel_secs = ga_secs(&serial_s, jobs)?;
-    stages.push(StageResult { name: "nsga_population_eval", serial_secs, parallel_secs });
+    // single-shot (the GA loop is its own repetition); honest reps = 1
+    let serial = TimingStats::single(ga_secs(&serial_s, 1)?);
+    let parallel = TimingStats::single(ga_secs(&serial_s, jobs)?);
+    stages.push(StageResult { name: "nsga_population_eval", serial, parallel });
 
     // 5. native-backend batch execution (parallel eval batches)
-    let serial_secs = time_best_of(reps, || {
+    let serial = time_median_of(reps, || {
         serial_s.evaluate(2).map(|_| ()).context("native exec (serial)")
     })?;
-    let parallel_secs = time_best_of(reps, || {
+    let parallel = time_median_of(reps, || {
         par_s.evaluate(2).map(|_| ()).context("native exec (parallel)")
     })?;
-    stages.push(StageResult { name: "native_batch_exec", serial_secs, parallel_secs });
+    stages.push(StageResult { name: "native_batch_exec", serial, parallel });
 
     let _ = std::fs::remove_dir_all(&root);
     Ok(stages)
@@ -323,24 +407,59 @@ pub fn run_cache_bench(cfg: &BenchConfig) -> Result<CacheBench> {
 
 // ---- per-kernel micro-bench (the kernel layer's payoff) ----
 
-/// One fused kernel's wall-clock vs its reference formulation.
+/// One fused kernel's wall-clock vs its reference formulation
+/// (median-of-N each side), plus a nominal work model so snapshots report
+/// achieved GB/s and multiplies/s rather than raw seconds alone.
 #[derive(Clone, Debug)]
 pub struct KernelBench {
     pub name: &'static str,
-    /// Reference (naive / float-path) wall-clock.
-    pub reference_secs: f64,
-    /// Fused/blocked kernel wall-clock.
-    pub kernel_secs: f64,
+    /// Reference (naive / float-path / scalar-exact) timing.
+    pub reference: TimingStats,
+    /// Fused/blocked/wide kernel timing.
+    pub kernel: TimingStats,
     /// Kernel-counter increments observed while timing the fused side —
     /// proof the fused path actually ran (asserted by the CI bench lane).
     pub calls: u64,
+    /// Bytes touched per timed run under the nominal work model (each
+    /// input read once, each output written once).
+    pub bytes_per_run: f64,
+    /// Multiply(-accumulate) operations per timed run.
+    pub mults_per_run: f64,
 }
 
 impl KernelBench {
+    /// Median reference wall-clock.
+    pub fn reference_secs(&self) -> f64 {
+        self.reference.median_secs
+    }
+
+    /// Median kernel wall-clock.
+    pub fn kernel_secs(&self) -> f64 {
+        self.kernel.median_secs
+    }
+
     /// Reference / kernel wall-clock ratio (> 1 means the kernel won).
     pub fn speedup(&self) -> f64 {
-        if self.kernel_secs > 0.0 {
-            self.reference_secs / self.kernel_secs
+        if self.kernel_secs() > 0.0 {
+            self.reference_secs() / self.kernel_secs()
+        } else {
+            0.0
+        }
+    }
+
+    /// Achieved memory throughput of the fused side (GB/s, nominal model).
+    pub fn gb_per_sec(&self) -> f64 {
+        if self.kernel_secs() > 0.0 {
+            self.bytes_per_run / self.kernel_secs() / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Achieved multiply throughput of the fused side (mults/s).
+    pub fn mults_per_sec(&self) -> f64 {
+        if self.kernel_secs() > 0.0 {
+            self.mults_per_run / self.kernel_secs()
         } else {
             0.0
         }
@@ -350,8 +469,10 @@ impl KernelBench {
 /// Time each kernel of [`crate::kernel`] against its reference
 /// formulation: blocked GEMM vs the naive triple loop, the fused
 /// integer-domain LUT-GEMM vs the float dequantize-multiply-inject path it
-/// replaces, and the fused penalty / Σv² reductions vs their two-pass f64
-/// forms. Self-contained synthetic workloads (`--quick` shrinks them).
+/// replaces, the fused penalty / Σv² reductions vs their two-pass f64
+/// forms, and the 8-lane wide LUT-GEMM vs its scalar exact twin on the
+/// u8-packed ≤4-bit path. Self-contained synthetic workloads (`--quick`
+/// shrinks them); every timing is median-of-`reps`.
 pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
     let (bsz, d, nc, m, kdim, n, len, reps) = if cfg.quick {
         (128usize, 192usize, 10usize, 32usize, 128usize, 32usize, 1usize << 12, 3usize)
@@ -369,19 +490,26 @@ pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
     let b = normals(nc);
     let x = normals(bsz * d);
     let mut z = vec![0f64; bsz * nc];
-    let reference_secs = time_best_of(reps, || {
+    let reference = time_median_of(reps, || {
         gemm::gemm_bias_naive(&w, &b, &x, d, nc, &mut z);
         std::hint::black_box(&z);
         Ok(())
     })?;
     let c0 = counters::snapshot();
-    let kernel_secs = time_best_of(reps, || {
+    let kernel = time_median_of(reps, || {
         gemm::gemm_bias(&w, &b, &x, d, nc, &mut z);
         std::hint::black_box(&z);
         Ok(())
     })?;
     let calls = counters::snapshot().since(&c0).gemm_blocked;
-    out.push(KernelBench { name: "gemm_bias_blocked", reference_secs, kernel_secs, calls });
+    out.push(KernelBench {
+        name: "gemm_bias_blocked",
+        reference,
+        kernel,
+        calls,
+        bytes_per_run: ((nc * d + nc + bsz * d) * 4 + bsz * nc * 8) as f64,
+        mults_per_run: (bsz * nc * d) as f64,
+    });
 
     // 2. fused integer LUT-GEMM vs the float dequantize+error-inject path
     let (a_bits, w_bits) = (4u32, 4u32);
@@ -402,7 +530,11 @@ pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
     let wg = normals(kdim * n);
     let scratch = Scratch::new();
     let mut prod = vec![0f32; m * n];
-    let reference_secs = time_best_of(reps, || {
+    // nominal LUT-GEMM work model: f32 operands + output touched once,
+    // m·n·k fused multiply(-via-LUT) ops
+    let lut_bytes = ((m * kdim + kdim * n + m * n) * 4) as f64;
+    let lut_mults = (m * kdim * n) as f64;
+    let reference = time_median_of(reps, || {
         // the float path: per-element quantize, dequantized multiply, f32
         // error-tensor injection — what `lut_gemm` collapses into integer ops
         for i in 0..m {
@@ -421,19 +553,75 @@ pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
         Ok(())
     })?;
     let c0 = counters::snapshot();
-    let kernel_secs = time_best_of(reps, || {
+    let kernel = time_median_of(reps, || {
         lut::lut_gemm(&xg, &wg, m, kdim, n, xq, wq, view, &scratch, &mut prod)?;
         std::hint::black_box(&prod);
         Ok(())
     })?;
     let calls = counters::snapshot().since(&c0).lut_gemm;
-    out.push(KernelBench { name: "lut_gemm_fused_int", reference_secs, kernel_secs, calls });
+    out.push(KernelBench {
+        name: "lut_gemm_fused_int",
+        reference,
+        kernel,
+        calls,
+        bytes_per_run: lut_bytes,
+        mults_per_run: lut_mults,
+    });
 
-    // 3. fused analytic penalty vs two separate dot passes
+    // 3. 8-lane wide LUT-GEMM vs its scalar exact twin on the u8-packed
+    //    ≤4-bit path (a_bits + w_bits ≤ 8 → one-byte pre-shifted codes).
+    //    Both sides are bit-identical (the differential suite proves it),
+    //    so this isolates the cost of the formulation alone.
+    let reference = time_median_of(reps, || {
+        lut::lut_gemm_with_mode(
+            &xg,
+            &wg,
+            m,
+            kdim,
+            n,
+            xq,
+            wq,
+            view,
+            &scratch,
+            &mut prod,
+            KernelMode::Exact,
+        )?;
+        std::hint::black_box(&prod);
+        Ok(())
+    })?;
+    let c0 = counters::snapshot();
+    let kernel = time_median_of(reps, || {
+        lut::lut_gemm_with_mode(
+            &xg,
+            &wg,
+            m,
+            kdim,
+            n,
+            xq,
+            wq,
+            view,
+            &scratch,
+            &mut prod,
+            KernelMode::Wide,
+        )?;
+        std::hint::black_box(&prod);
+        Ok(())
+    })?;
+    let calls = counters::snapshot().since(&c0).lut_gemm_wide;
+    out.push(KernelBench {
+        name: "lut_gemm_wide_u8",
+        reference,
+        kernel,
+        calls,
+        bytes_per_run: lut_bytes,
+        mults_per_run: lut_mults,
+    });
+
+    // 4. fused analytic penalty vs two separate dot passes
     let g = normals(len);
     let h: Vec<f32> = normals(len).iter().map(|v| v.abs()).collect();
     let e: Vec<f32> = (0..len).map(|i| ((i % 31) as f32) - 15.0).collect();
-    let reference_secs = time_best_of(reps, || {
+    let reference = time_median_of(reps, || {
         let first: f64 = g.iter().zip(&e).map(|(&gv, &ev)| gv as f64 * ev as f64).sum();
         let quad: f64 =
             h.iter().zip(&e).map(|(&hv, &ev)| hv as f64 * ev as f64 * ev as f64).sum();
@@ -441,25 +629,39 @@ pub fn run_kernel_bench(cfg: &BenchConfig) -> Result<Vec<KernelBench>> {
         Ok(())
     })?;
     let c0 = counters::snapshot();
-    let kernel_secs = time_best_of(reps, || {
+    let kernel = time_median_of(reps, || {
         std::hint::black_box(lut::penalty(&g, &h, &e));
         Ok(())
     })?;
     let calls = counters::snapshot().since(&c0).lut_fused;
-    out.push(KernelBench { name: "penalty_fused", reference_secs, kernel_secs, calls });
+    out.push(KernelBench {
+        name: "penalty_fused",
+        reference,
+        kernel,
+        calls,
+        bytes_per_run: (3 * len * 4) as f64,
+        mults_per_run: (3 * len) as f64,
+    });
 
-    // 4. integer-domain Σv² vs the f64 chain (error tensors are integral)
-    let reference_secs = time_best_of(reps, || {
+    // 5. integer-domain Σv² vs the f64 chain (error tensors are integral)
+    let reference = time_median_of(reps, || {
         std::hint::black_box(e.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>());
         Ok(())
     })?;
     let c0 = counters::snapshot();
-    let kernel_secs = time_best_of(reps, || {
+    let kernel = time_median_of(reps, || {
         std::hint::black_box(lut::sq_sum(&e));
         Ok(())
     })?;
     let calls = counters::snapshot().since(&c0).lut_fused;
-    out.push(KernelBench { name: "sq_sum_int", reference_secs, kernel_secs, calls });
+    out.push(KernelBench {
+        name: "sq_sum_int",
+        reference,
+        kernel,
+        calls,
+        bytes_per_run: (len * 4) as f64,
+        mults_per_run: len as f64,
+    });
 
     Ok(out)
 }
@@ -741,6 +943,22 @@ pub fn run_saturation_bench(base: &FamesConfig, cfg: &BenchConfig) -> Result<Sat
 
 // ---- snapshot JSON + cross-PR comparison ----
 
+/// Record which measurement protocol produced a snapshot section under the
+/// top-level `protocol` object (`fames bench` prints the same strings, so
+/// a committed `BENCH_*.json` always says how its numbers were taken).
+fn add_protocol(doc: &mut Json, section: &str, protocol: String) {
+    let mut proto = doc.opt("protocol").cloned().unwrap_or_else(Json::obj);
+    proto.set(section, protocol.as_str());
+    doc.set("protocol", proto);
+}
+
+/// Human-readable protocol tag of the stage section (`median-of-N`; the
+/// per-stage `reps` fields record the single-shot exceptions).
+pub fn stage_protocol(stages: &[StageResult]) -> String {
+    let reps = stages.iter().map(|s| s.serial.reps.max(s.parallel.reps)).max().unwrap_or(1);
+    format!("median-of-{reps} serial-vs-parallel (per-stage reps recorded)")
+}
+
 /// The machine-readable snapshot (`fames bench --json`).
 pub fn snapshot_json(stages: &[StageResult], cfg: &BenchConfig) -> Json {
     snapshot_json_with_cache(stages, None, cfg)
@@ -757,9 +975,12 @@ pub fn snapshot_json_with_cache(
         arr.push(
             Json::obj()
                 .with("name", s.name)
-                .with("serial_secs", s.serial_secs)
-                .with("parallel_secs", s.parallel_secs)
-                .with("speedup", s.speedup()),
+                .with("serial_secs", s.serial_secs())
+                .with("parallel_secs", s.parallel_secs())
+                .with("speedup", s.speedup())
+                .with("reps", s.serial.reps.max(s.parallel.reps))
+                .with("serial_spread", s.serial.rel_spread())
+                .with("parallel_spread", s.parallel.rel_spread()),
         );
     }
     let mut doc = Json::obj()
@@ -768,6 +989,7 @@ pub fn snapshot_json_with_cache(
         .with("jobs", par::effective_jobs(cfg.jobs))
         .with("quick", cfg.quick)
         .with("stages", arr);
+    add_protocol(&mut doc, "stages", stage_protocol(stages));
     if let Some(cache) = cache {
         let mut carr = Json::arr();
         for s in &cache.stages {
@@ -788,6 +1010,7 @@ pub fn snapshot_json_with_cache(
                 .with("speedup", cache.speedup())
                 .with("stages", carr),
         );
+        add_protocol(&mut doc, "cache", "single-pass cold-vs-warm pipeline".to_string());
     }
     doc
 }
@@ -845,6 +1068,7 @@ pub fn snapshot_json_full(
             );
         }
         doc.set("serve", serve_doc);
+        add_protocol(&mut doc, "serve", "two-round wall-clock cold-vs-warm".to_string());
     }
     if let Some(ks) = kernels {
         let mut arr = Json::arr();
@@ -852,13 +1076,19 @@ pub fn snapshot_json_full(
             arr.push(
                 Json::obj()
                     .with("name", k.name)
-                    .with("reference_secs", k.reference_secs)
-                    .with("kernel_secs", k.kernel_secs)
+                    .with("reference_secs", k.reference_secs())
+                    .with("kernel_secs", k.kernel_secs())
                     .with("speedup", k.speedup())
-                    .with("calls", k.calls as usize),
+                    .with("calls", k.calls as usize)
+                    .with("reps", k.kernel.reps)
+                    .with("spread", k.kernel.rel_spread())
+                    .with("gb_per_sec", k.gb_per_sec())
+                    .with("mults_per_sec", k.mults_per_sec()),
             );
         }
         doc.set("kernels", arr);
+        let reps = ks.iter().map(|k| k.kernel.reps).max().unwrap_or(1);
+        add_protocol(&mut doc, "kernels", format!("median-of-{reps} fused-vs-reference"));
     }
     let c = counters::snapshot();
     doc.set(
@@ -867,7 +1097,8 @@ pub fn snapshot_json_full(
             .with("gemm_blocked", c.gemm_blocked as usize)
             .with("softmax_fused", c.softmax_fused as usize)
             .with("lut_fused", c.lut_fused as usize)
-            .with("lut_gemm", c.lut_gemm as usize),
+            .with("lut_gemm", c.lut_gemm as usize)
+            .with("lut_gemm_wide", c.lut_gemm_wide as usize),
     );
     doc
 }
@@ -878,6 +1109,11 @@ pub struct StageDelta {
     pub name: String,
     pub old_secs: f64,
     pub new_secs: f64,
+    /// Recorded relative dispersion (`(max−min)/median`) of each side's
+    /// sample set; 0 for snapshots predating the dispersion fields (their
+    /// comparisons fall back to the flat tolerance).
+    pub old_spread: f64,
+    pub new_spread: f64,
 }
 
 impl StageDelta {
@@ -890,14 +1126,23 @@ impl StageDelta {
         }
     }
 
+    /// Regression threshold for this stage: the flat
+    /// [`REGRESSION_TOLERANCE`] widened by the larger recorded dispersion
+    /// of the two snapshots (capped at [`MAX_DISPERSION_CREDIT`]). A noisy
+    /// stage earns slack from its own measured spread — honest medians can
+    /// be committed as baselines without padding them.
+    pub fn tolerance(&self) -> f64 {
+        REGRESSION_TOLERANCE + self.old_spread.max(self.new_spread).min(MAX_DISPERSION_CREDIT)
+    }
+
     pub fn is_regression(&self) -> bool {
-        self.new_secs > self.old_secs * (1.0 + REGRESSION_TOLERANCE)
+        self.new_secs > self.old_secs * (1.0 + self.tolerance())
     }
 
     pub fn verdict(&self) -> &'static str {
         if self.is_regression() {
             "REGRESSED"
-        } else if self.old_secs > self.new_secs * (1.0 + REGRESSION_TOLERANCE) {
+        } else if self.old_secs > self.new_secs * (1.0 + self.tolerance()) {
             "faster"
         } else {
             "~same"
@@ -905,9 +1150,16 @@ impl StageDelta {
     }
 }
 
+/// Per-stage dispersion field of a snapshot stage entry; 0 when absent
+/// (pre-dispersion snapshots keep comparing at the flat tolerance).
+fn stage_spread(s: &Json) -> f64 {
+    s.opt("parallel_spread").and_then(|j| j.as_f64().ok()).unwrap_or(0.0)
+}
+
 /// Diff two `fames-bench-v1` snapshots by stage name (parallel wall
 /// clock). Stages present in only one snapshot are skipped — the trajectory
-/// comparison covers the common set.
+/// comparison covers the common set. Each side's recorded dispersion rides
+/// along so the regression verdict can widen with measured noise.
 pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
     for (label, doc) in [("old", old), ("new", new)] {
         let schema = doc.get("schema")?.as_str()?;
@@ -915,14 +1167,15 @@ pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
             bail!("{label} snapshot has schema '{schema}', expected '{SCHEMA}'");
         }
     }
-    let old_times: Vec<(String, f64)> = old
+    let old_times: Vec<(String, f64, f64)> = old
         .get("stages")?
         .as_arr()?
         .iter()
-        .map(|s| -> Result<(String, f64)> {
+        .map(|s| -> Result<(String, f64, f64)> {
             Ok((
                 s.get("name")?.as_str()?.to_string(),
                 s.get("parallel_secs")?.as_f64()?,
+                stage_spread(s),
             ))
         })
         .collect::<Result<_>>()?;
@@ -930,13 +1183,20 @@ pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
     for s in new.get("stages")?.as_arr()? {
         let name = s.get("name")?.as_str()?.to_string();
         let new_secs = s.get("parallel_secs")?.as_f64()?;
-        if let Some((_, old_secs)) = old_times.iter().find(|(n, _)| n == &name) {
-            deltas.push(StageDelta { name, old_secs: *old_secs, new_secs });
+        let new_spread = stage_spread(s);
+        if let Some((_, old_secs, old_spread)) = old_times.iter().find(|(n, _, _)| n == &name) {
+            deltas.push(StageDelta {
+                name,
+                old_secs: *old_secs,
+                new_secs,
+                old_spread: *old_spread,
+                new_spread,
+            });
         }
     }
     // saturation throughput gates ride along as synthetic per-request
-    // stages (secs/request = 1/rps), so the same REGRESSION_TOLERANCE
-    // verdict machinery covers overload throughput too
+    // stages (secs/request = 1/rps), so the same tolerance machinery
+    // covers overload throughput too (no recorded dispersion there)
     let old_sat = saturation_times(old);
     for (clients, new_secs) in saturation_times(new) {
         if let Some((_, old_secs)) = old_sat.iter().find(|(c, _)| *c == clients) {
@@ -944,6 +1204,8 @@ pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
                 name: format!("serve.saturation.c{clients}"),
                 old_secs: *old_secs,
                 new_secs,
+                old_spread: 0.0,
+                new_spread: 0.0,
             });
         }
     }
@@ -981,8 +1243,8 @@ mod tests {
     #[test]
     fn snapshot_shape_is_stable() {
         let stages = vec![
-            StageResult { name: "library_generation", serial_secs: 1.0, parallel_secs: 0.5 },
-            StageResult { name: "native_batch_exec", serial_secs: 2.0, parallel_secs: 1.0 },
+            StageResult::flat("library_generation", 1.0, 0.5),
+            StageResult::flat("native_batch_exec", 2.0, 1.0),
         ];
         let cfg = BenchConfig { jobs: 2, quick: true };
         let j = snapshot_json(&stages, &cfg);
@@ -991,26 +1253,67 @@ mod tests {
         let arr = j.get("stages").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         for s in arr {
-            for key in ["name", "serial_secs", "parallel_secs", "speedup"] {
+            for key in [
+                "name",
+                "serial_secs",
+                "parallel_secs",
+                "speedup",
+                "reps",
+                "serial_spread",
+                "parallel_spread",
+            ] {
                 assert!(s.opt(key).is_some(), "missing {key}");
             }
         }
         assert_eq!(arr[0].get("speedup").unwrap().as_f64().unwrap(), 2.0);
+        // the snapshot names the protocol that produced its sections
+        let proto = j.get("protocol").unwrap();
+        let ps = proto.get("stages").unwrap().as_str().unwrap();
+        assert!(ps.starts_with("median-of-"), "stage protocol tag: {ps}");
     }
 
     #[test]
     fn speedup_handles_zero_division() {
-        let s = StageResult { name: "x", serial_secs: 1.0, parallel_secs: 0.0 };
+        let s = StageResult::flat("x", 1.0, 0.0);
         assert_eq!(s.speedup(), 0.0);
     }
 
     #[test]
+    fn timing_stats_median_min_max_and_spread() {
+        // odd N: true median, not best-of
+        let t = TimingStats::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!((t.reps, t.median_secs, t.min_secs, t.max_secs), (3, 2.0, 1.0, 3.0));
+        assert!((t.rel_spread() - 1.0).abs() < 1e-12);
+        // even N: mean of the two middle samples
+        let t = TimingStats::from_samples(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.median_secs, 2.5);
+        // N = 1 and all-equal: zero dispersion, sane median
+        let one = TimingStats::from_samples(&[0.7]);
+        assert_eq!((one.reps, one.median_secs), (1, 0.7));
+        assert_eq!(one.rel_spread(), 0.0);
+        let flat = TimingStats::from_samples(&[0.2, 0.2, 0.2, 0.2, 0.2]);
+        assert_eq!(flat.median_secs, 0.2);
+        assert_eq!(flat.rel_spread(), 0.0);
+        // empty input stays total
+        let z = TimingStats::from_samples(&[]);
+        assert_eq!((z.reps, z.median_secs, z.rel_spread()), (0, 0.0, 0.0));
+        assert_eq!(TimingStats::single(1.5).reps, 1);
+    }
+
+    #[test]
+    fn median_protocol_is_robust_to_outliers() {
+        // one 100× outlier moves best-of not at all and the mean by 33×;
+        // the median is what the protocol reports
+        let t = TimingStats::from_samples(&[1.0, 1.0, 100.0]);
+        assert_eq!(t.median_secs, 1.0);
+        assert_eq!(t.max_secs, 100.0);
+        // ... and the dispersion records that the run was noisy
+        assert!(t.rel_spread() > 50.0);
+    }
+
+    #[test]
     fn cache_section_is_additive_and_shaped() {
-        let stages = vec![StageResult {
-            name: "library_generation",
-            serial_secs: 1.0,
-            parallel_secs: 0.5,
-        }];
+        let stages = vec![StageResult::flat("library_generation", 1.0, 0.5)];
         let cfg = BenchConfig { jobs: 1, quick: true };
         let cache = CacheBench {
             cold_secs: 2.0,
@@ -1029,22 +1332,24 @@ mod tests {
         assert_eq!(c.get("speedup").unwrap().as_f64().unwrap(), 4.0);
         let carr = c.get("stages").unwrap().as_arr().unwrap();
         assert_eq!(carr[0].get("warm").unwrap().as_str().unwrap(), "hit");
-        // the plain snapshot has no cache section
-        assert!(snapshot_json(&stages, &cfg).opt("cache").is_none());
+        // the cache section names its protocol
+        assert!(j.get("protocol").unwrap().opt("cache").is_some());
+        // the plain snapshot has no cache section (and no cache protocol)
+        let plain = snapshot_json(&stages, &cfg);
+        assert!(plain.opt("cache").is_none());
+        assert!(plain.get("protocol").unwrap().opt("cache").is_none());
     }
 
     #[test]
     fn full_snapshot_adds_kernels_and_counters_sections() {
-        let stages = vec![StageResult {
-            name: "library_generation",
-            serial_secs: 1.0,
-            parallel_secs: 0.5,
-        }];
+        let stages = vec![StageResult::flat("library_generation", 1.0, 0.5)];
         let kernels = vec![KernelBench {
             name: "gemm_bias_blocked",
-            reference_secs: 1.0,
-            kernel_secs: 0.25,
+            reference: TimingStats::from_samples(&[1.0, 1.0, 1.2]),
+            kernel: TimingStats::from_samples(&[0.25, 0.25, 0.30]),
             calls: 8,
+            bytes_per_run: 1e6,
+            mults_per_run: 2e6,
         }];
         let cfg = BenchConfig { jobs: 1, quick: true };
         let j = snapshot_json_full(&stages, None, Some(&kernels), None, &cfg);
@@ -1053,21 +1358,24 @@ mod tests {
         assert_eq!(karr.len(), 1);
         assert_eq!(karr[0].get("speedup").unwrap().as_f64().unwrap(), 4.0);
         assert_eq!(karr[0].get("calls").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(karr[0].get("reps").unwrap().as_usize().unwrap(), 3);
+        // work-model rates: 1e6 B / 0.25 s = 0.004 GB/s; 2e6 / 0.25 = 8e6/s
+        assert!((karr[0].get("gb_per_sec").unwrap().as_f64().unwrap() - 0.004).abs() < 1e-12);
+        assert!((karr[0].get("mults_per_sec").unwrap().as_f64().unwrap() - 8e6).abs() < 1e-3);
+        assert!(karr[0].get("spread").unwrap().as_f64().unwrap() > 0.0);
         let kc = j.get("kernel_counters").unwrap();
-        for key in ["gemm_blocked", "softmax_fused", "lut_fused", "lut_gemm"] {
+        for key in ["gemm_blocked", "softmax_fused", "lut_fused", "lut_gemm", "lut_gemm_wide"] {
             assert!(kc.opt(key).is_some(), "missing counter {key}");
         }
+        let kp = j.get("protocol").unwrap().get("kernels").unwrap().as_str().unwrap().to_string();
+        assert!(kp.starts_with("median-of-3"), "kernel protocol tag: {kp}");
         // the plain snapshots stay shaped as before (no kernels key)
         assert!(snapshot_json(&stages, &cfg).opt("kernels").is_none());
     }
 
     #[test]
     fn serve_section_is_additive_and_shaped() {
-        let stages = vec![StageResult {
-            name: "library_generation",
-            serial_secs: 1.0,
-            parallel_secs: 0.5,
-        }];
+        let stages = vec![StageResult::flat("library_generation", 1.0, 0.5)];
         let cfg = BenchConfig { jobs: 1, quick: true };
         let sb = ServeBench {
             startup_cold_secs: 2.0,
@@ -1108,8 +1416,7 @@ mod tests {
     #[test]
     fn compare_covers_saturation_levels_and_tolerates_their_absence() {
         let mk = |stage_secs: f64, rps: f64| {
-            let stages =
-                vec![StageResult { name: "library_generation", serial_secs: 1.0, parallel_secs: stage_secs }];
+            let stages = vec![StageResult::flat("library_generation", 1.0, stage_secs)];
             let sb = ServeBench {
                 startup_cold_secs: 1.0,
                 startup_warm_secs: 0.5,
@@ -1143,7 +1450,7 @@ mod tests {
         assert!(!sat.is_regression());
         // old snapshots without the section still compare on stages alone
         let plain = snapshot_json(
-            &[StageResult { name: "library_generation", serial_secs: 1.0, parallel_secs: 0.5 }],
+            &[StageResult::flat("library_generation", 1.0, 0.5)],
             &BenchConfig { jobs: 1, quick: true },
         );
         let deltas = compare_snapshots(&plain, &new).unwrap();
@@ -1154,13 +1461,20 @@ mod tests {
     fn kernel_bench_runs_and_counts_fused_calls() {
         let cfg = BenchConfig { jobs: 1, quick: true };
         let ks = run_kernel_bench(&cfg).unwrap();
-        assert!(ks.len() >= 4, "expected ≥ 4 kernel benches, got {}", ks.len());
+        assert!(ks.len() >= 5, "expected ≥ 5 kernel benches, got {}", ks.len());
         let mut names: Vec<&str> = ks.iter().map(|k| k.name).collect();
         names.dedup();
         assert_eq!(names.len(), ks.len(), "kernel names must be unique");
+        assert!(
+            names.contains(&"lut_gemm_wide_u8"),
+            "the wide-vs-exact LUT GEMM entry is missing: {names:?}"
+        );
         for k in &ks {
-            assert!(k.reference_secs >= 0.0 && k.kernel_secs >= 0.0, "{}", k.name);
+            assert!(k.reference_secs() >= 0.0 && k.kernel_secs() >= 0.0, "{}", k.name);
             assert!(k.calls > 0, "fused path of {} was never exercised", k.name);
+            assert!(k.kernel.reps >= 3, "{}: median protocol needs ≥ 3 reps", k.name);
+            assert!(k.bytes_per_run > 0.0 && k.mults_per_run > 0.0, "{}", k.name);
+            assert!(k.gb_per_sec().is_finite() && k.mults_per_sec().is_finite(), "{}", k.name);
         }
     }
 
@@ -1211,10 +1525,64 @@ mod tests {
 
     #[test]
     fn delta_verdict_tolerance_band() {
-        let same = StageDelta { name: "s".into(), old_secs: 1.0, new_secs: 1.05 };
+        let flat = |old_secs: f64, new_secs: f64| StageDelta {
+            name: "s".into(),
+            old_secs,
+            new_secs,
+            old_spread: 0.0,
+            new_spread: 0.0,
+        };
+        let same = flat(1.0, 1.05);
         assert_eq!(same.verdict(), "~same");
         assert!(!same.is_regression());
-        let zero = StageDelta { name: "z".into(), old_secs: 1.0, new_secs: 0.0 };
+        let zero = flat(1.0, 0.0);
         assert_eq!(zero.speedup(), 0.0);
+    }
+
+    #[test]
+    fn dispersion_credit_widens_tolerance_and_is_capped() {
+        // 30% slower with no recorded dispersion: a regression
+        let tight = StageDelta {
+            name: "s".into(),
+            old_secs: 1.0,
+            new_secs: 1.3,
+            old_spread: 0.0,
+            new_spread: 0.0,
+        };
+        assert!(tight.is_regression());
+        assert!((tight.tolerance() - REGRESSION_TOLERANCE).abs() < 1e-12);
+        // same delta, but either side recorded 35% spread: within noise
+        let noisy = StageDelta { new_spread: 0.35, ..tight.clone() };
+        assert!((noisy.tolerance() - 0.45).abs() < 1e-12);
+        assert!(!noisy.is_regression());
+        assert_eq!(noisy.verdict(), "~same");
+        // the credit caps: absurd spread can't make a stage un-regressable
+        let wild = StageDelta { old_spread: 5.0, new_secs: 1.7, ..tight };
+        assert!((wild.tolerance() - (REGRESSION_TOLERANCE + MAX_DISPERSION_CREDIT)).abs() < 1e-12);
+        assert!(wild.is_regression(), "1.7 > 1.6 even with the capped credit");
+    }
+
+    #[test]
+    fn compare_reads_dispersion_fields_and_tolerates_their_absence() {
+        // new-format snapshot: stages carry parallel_spread
+        let stages = vec![StageResult {
+            name: "library_generation",
+            serial: TimingStats::from_samples(&[1.0, 1.1, 1.2]),
+            parallel: TimingStats::from_samples(&[0.50, 0.55, 0.70]),
+        }];
+        let cfg = BenchConfig { jobs: 1, quick: true };
+        let with_spread = snapshot_json(&stages, &cfg);
+        // 30% slower than the recorded 0.55 median, but the old snapshot's
+        // (0.70−0.50)/0.55 ≈ 36% spread widens the tolerance past it
+        let slower = snapshot_json(&[StageResult::flat("library_generation", 1.0, 0.715)], &cfg);
+        let deltas = compare_snapshots(&with_spread, &slower).unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert!(deltas[0].old_spread > 0.30, "spread came through: {:?}", deltas[0]);
+        assert!(!deltas[0].is_regression());
+        // legacy snapshots without spread fields: flat tolerance applies
+        let old = snap(&[("library_generation", 0.55)]);
+        let deltas = compare_snapshots(&old, &slower).unwrap();
+        assert_eq!((deltas[0].old_spread, deltas[0].new_spread), (0.0, 0.0));
+        assert!(deltas[0].is_regression(), "30% slower at flat tolerance");
     }
 }

@@ -41,9 +41,14 @@ COMMANDS
                (model=resnet8 cfg=w4a4 out=artifacts)
   library      print the AppMul library (bits=4 or bits=4x8)
   bits         HAWQ-like mixed-precision proposal (budget=0.1 vs 8-bit)
-  bench        serial-vs-parallel + cold-vs-warm perf snapshot per stage
+  bench        serial-vs-parallel + cold-vs-warm perf snapshot per stage;
+               timings are median-of-N with recorded dispersion, kernels
+               also report GB/s and mults/s under a nominal work model
                (--json machine-readable, --quick smoke sizes, out=PATH,
-                --compare=OLD.json [vs=NEW.json] to diff snapshots)
+                mode=exact|wide|fast kernel dispatch for this run,
+                --compare=OLD.json [vs=NEW.json] to diff snapshots; the
+                regression verdict widens with each stage's recorded
+                dispersion, so honest medians work as baselines)
   cache        artifact-store maintenance: cache ls | stat | gc
                (honors artifacts=, --cache-dir; gc removes every entry)
   serve        long-running evaluation daemon: newline-delimited JSON over
@@ -76,6 +81,10 @@ ENVIRONMENT
                               a build with --features pjrt plus real XLA)
   FAMES_ARTIFACTS=PATH        artifact root override
   FAMES_JOBS=N                worker-thread default when jobs= is not given
+  FAMES_KERNEL_MODE=exact|wide|fast
+                              kernel dispatch mode (default wide; exact and
+                              wide are bit-identical, fast is opt-in and
+                              verified against the exact twin in tests)
 ";
 
 /// Run the CLI. Returns a process exit code.
@@ -266,9 +275,14 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
                 Some(("out", v)) => out = Some(v.to_string()),
                 Some(("compare", v)) => compare = Some(v.to_string()),
                 Some(("vs", v)) => vs = Some(v.to_string()),
+                Some(("mode", v)) => {
+                    let mode = crate::kernel::KernelMode::parse(v)
+                        .with_context(|| format!("mode '{v}' (expected exact|wide|fast)"))?;
+                    crate::kernel::set_kernel_mode(mode);
+                }
                 _ => bail!(
                     "bench takes --json, --quick, jobs=N, out=PATH, \
-                     --compare=OLD.json, vs=NEW.json (got '{a}')"
+                     mode=exact|wide|fast, --compare=OLD.json, vs=NEW.json (got '{a}')"
                 ),
             },
         }
@@ -354,16 +368,29 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
     if json {
         println!("{}", doc.pretty());
     } else {
+        // which protocol produced each section (the JSON carries the same
+        // strings under the top-level "protocol" object)
+        println!(
+            "protocol: stages {}; cache single-pass cold-vs-warm; kernels \
+             median-of-{}; serve two-round wall-clock",
+            crate::bench::stage_protocol(&stages),
+            kernels.iter().map(|k| k.kernel.reps).max().unwrap_or(1),
+        );
         let mut t = Table::new(
-            format!("fames bench (jobs = {})", par::effective_jobs(bcfg.jobs)),
-            &["stage", "serial", "parallel", "speedup"],
+            format!(
+                "fames bench (jobs = {}, kernel mode = {})",
+                par::effective_jobs(bcfg.jobs),
+                crate::kernel::kernel_mode().name()
+            ),
+            &["stage", "serial", "parallel", "speedup", "spread"],
         );
         for s in &stages {
             t.row(vec![
                 s.name.to_string(),
-                crate::util::fmt_secs(s.serial_secs),
-                crate::util::fmt_secs(s.parallel_secs),
+                crate::util::fmt_secs(s.serial_secs()),
+                crate::util::fmt_secs(s.parallel_secs()),
                 format!("{:.2}×", s.speedup()),
+                format!("{:.0}%", s.parallel.rel_spread() * 100.0),
             ]);
         }
         t.print();
@@ -385,15 +412,17 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
         }
         ct.print();
         let mut kt = Table::new(
-            "per-kernel timings (fused vs reference)",
-            &["kernel", "reference", "fused", "speedup", "calls"],
+            "per-kernel timings (fused vs reference, median-of-N)",
+            &["kernel", "reference", "fused", "speedup", "GB/s", "Mmult/s", "calls"],
         );
         for k in &kernels {
             kt.row(vec![
                 k.name.to_string(),
-                crate::util::fmt_secs(k.reference_secs),
-                crate::util::fmt_secs(k.kernel_secs),
+                crate::util::fmt_secs(k.reference_secs()),
+                crate::util::fmt_secs(k.kernel_secs()),
                 format!("{:.2}×", k.speedup()),
+                format!("{:.2}", k.gb_per_sec()),
+                format!("{:.1}", k.mults_per_sec() / 1e6),
                 k.calls.to_string(),
             ]);
         }

@@ -14,7 +14,7 @@
 //!   *visit order of outputs*, never an output's own chain, which is what
 //!   keeps `jobs`-equivalence and warm-cache bit-identity intact.
 
-use super::{argmax_f64, counters, logsumexp};
+use super::{argmax_f64, counters, logsumexp, wide, KernelMode};
 
 /// `out[s·nc + i] = b[i] + Σ_k w[i·d + k] · x[s·d + k]`, f64 accumulation
 /// in ascending k, cache-blocked over k ([`crate::kernel::K_BLOCK`]).
@@ -26,7 +26,28 @@ use super::{argmax_f64, counters, logsumexp};
 /// # Panics
 /// Debug-asserts the shape contract; callers validate sizes at the
 /// executable boundary.
+///
+/// Dispatches on the process-global [`KernelMode`]: the ascending-k f64
+/// chain **is** the bit-identity contract, so `Exact` and `Wide` both run
+/// the blocked scalar kernel; only the opt-in `Fast` mode substitutes the
+/// lane-striped tree formulation ([`wide::gemm_bias_fast`]).
 pub fn gemm_bias(w: &[f32], b: &[f32], x: &[f32], d: usize, nc: usize, out: &mut [f64]) {
+    gemm_bias_with_mode(w, b, x, d, nc, out, super::kernel_mode())
+}
+
+/// [`gemm_bias`] with an explicit [`KernelMode`].
+pub fn gemm_bias_with_mode(
+    w: &[f32],
+    b: &[f32],
+    x: &[f32],
+    d: usize,
+    nc: usize,
+    out: &mut [f64],
+    mode: KernelMode,
+) {
+    if mode == KernelMode::Fast {
+        return wide::gemm_bias_fast(w, b, x, d, nc, out);
+    }
     debug_assert_eq!(w.len(), nc * d, "gemm_bias: w is nc×d");
     debug_assert_eq!(b.len(), nc, "gemm_bias: b has nc entries");
     if nc == 0 {
@@ -95,9 +116,21 @@ pub fn gemm_bias_naive(w: &[f32], b: &[f32], x: &[f32], d: usize, nc: usize, out
 /// ~`nc` flops of useful work. Callers count fused-softmax work once per
 /// chunk instead ([`mark_softmax_chunk`]).
 pub fn xent_row(row: &[f64], label: usize) -> (f64, bool) {
-    let lse = logsumexp(row);
+    xent_row_with_mode(row, label, super::kernel_mode())
+}
+
+/// [`xent_row`] with an explicit [`KernelMode`]. The wide row max and
+/// argmax are bit-identical to the scalar folds (total-order max is
+/// order-free), so `Wide` and `Fast` both dispatch them; `Exact` keeps the
+/// scalar reference loops.
+pub fn xent_row_with_mode(row: &[f64], label: usize, mode: KernelMode) -> (f64, bool) {
+    let (lse, am) = if mode == KernelMode::Exact {
+        (logsumexp(row), argmax_f64(row))
+    } else {
+        (wide::logsumexp_wide(row), wide::argmax_f64_wide(row))
+    };
     let loss = lse - row[label];
-    let hit = match argmax_f64(row) {
+    let hit = match am {
         Some(p) => p == label && row[p].is_finite(),
         None => false,
     };

@@ -32,7 +32,7 @@
 
 use anyhow::{ensure, Result};
 
-use super::{counters, Scratch};
+use super::{counters, wide, KernelMode, Scratch};
 
 /// Row-tile height of [`lut_gemm`] (outputs per x-row block).
 pub const LUT_TILE_M: usize = 32;
@@ -104,6 +104,17 @@ pub fn err_stats(lut: LutView) -> ErrStats {
 /// (|e| < 2²⁴), so this is bit-identical to the float `error_slice()` dot
 /// it replaces.
 pub fn err_dot(lut: LutView, v: &[f32]) -> Result<f64> {
+    err_dot_with_mode(lut, v, super::kernel_mode())
+}
+
+/// [`err_dot`] with an explicit [`KernelMode`]. The ascending-index f64
+/// chain is the contract, so `Exact` and `Wide` share the scalar body;
+/// `Fast` dispatches the lane-striped tree formulation (error-bounded, not
+/// bit-identical).
+pub fn err_dot_with_mode(lut: LutView, v: &[f32], mode: KernelMode) -> Result<f64> {
+    if mode == KernelMode::Fast {
+        return wide::err_dot_fast(lut, v);
+    }
     ensure!(
         v.len() == lut.lut.len(),
         "err_dot: vector length {} != LUT length {}",
@@ -122,6 +133,15 @@ pub fn err_dot(lut: LutView, v: &[f32]) -> Result<f64> {
 /// one ascending-index pass — bit-identical to the historical two-accumulator
 /// scalar loop of the native backend.
 pub fn penalty(g: &[f32], h: &[f32], e: &[f32]) -> f64 {
+    penalty_with_mode(g, h, e, super::kernel_mode())
+}
+
+/// [`penalty`] with an explicit [`KernelMode`]; `Fast` takes the
+/// lane-striped formulation, `Exact`/`Wide` the scalar f64 chains.
+pub fn penalty_with_mode(g: &[f32], h: &[f32], e: &[f32], mode: KernelMode) -> f64 {
+    if mode == KernelMode::Fast {
+        return wide::penalty_fast(g, h, e);
+    }
     debug_assert_eq!(g.len(), e.len());
     debug_assert_eq!(h.len(), e.len());
     counters::lut_fused_inc();
@@ -139,6 +159,15 @@ pub fn penalty(g: &[f32], h: &[f32], e: &[f32]) -> f64 {
 /// chain, operation order `((0.5·h)·r)·r` — the native backend's historical
 /// form, preserved bit-exactly).
 pub fn quad_form(h: &[f32], r: &[f32]) -> f64 {
+    quad_form_with_mode(h, r, super::kernel_mode())
+}
+
+/// [`quad_form`] with an explicit [`KernelMode`]; `Fast` takes the
+/// lane-striped formulation, `Exact`/`Wide` the scalar f64 chain.
+pub fn quad_form_with_mode(h: &[f32], r: &[f32], mode: KernelMode) -> f64 {
+    if mode == KernelMode::Fast {
+        return wide::quad_form_fast(h, r);
+    }
     debug_assert_eq!(h.len(), r.len());
     counters::lut_fused_inc();
     let mut acc = 0f64;
@@ -157,6 +186,16 @@ pub fn quad_form(h: &[f32], r: &[f32]) -> f64 {
 /// representable integers too). Anything else falls back to that f64 chain
 /// unchanged.
 pub fn sq_sum(v: &[f32]) -> f64 {
+    sq_sum_with_mode(v, super::kernel_mode())
+}
+
+/// [`sq_sum`] with an explicit [`KernelMode`]. The integer fast path is
+/// order-free, so the wide formulation is bit-identical — `Wide` **and**
+/// `Fast` both dispatch it; `Exact` keeps the scalar reference.
+pub fn sq_sum_with_mode(v: &[f32], mode: KernelMode) -> f64 {
+    if mode != KernelMode::Exact {
+        return wide::sq_sum_wide(v);
+    }
     counters::lut_fused_inc();
     let mut integral = true;
     let mut max_abs = 0f32;
@@ -186,10 +225,18 @@ pub fn sq_sum(v: &[f32]) -> f64 {
 /// Affine dequantization of one fused output: with `x̂ = s_x·a + lo_x` and
 /// `ŵ = s_w·w + lo_w`,
 /// `Σ x̂·ŵ = s_x s_w Σlut + s_x lo_w Σa + s_w lo_x Σw + K·lo_x·lo_w`
-/// (the LUT standing in for `a·w`). Shared by the blocked kernel and its
-/// naive twin so the expression — and hence the bits — cannot drift apart.
+/// (the LUT standing in for `a·w`). Shared by the blocked kernel, its
+/// naive twin and the wide lane-striped path ([`super::wide`]) so the
+/// expression — and hence the bits — cannot drift apart.
 #[inline]
-fn dequant(s_lut: i64, s_a: i64, s_w: i64, kdim: usize, xq: QuantGrid, wq: QuantGrid) -> f32 {
+pub(crate) fn dequant(
+    s_lut: i64,
+    s_a: i64,
+    s_w: i64,
+    kdim: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+) -> f32 {
     let sx = xq.step() as f64;
     let lox = xq.lo as f64;
     let sw = wq.step() as f64;
@@ -239,7 +286,7 @@ impl QuantGrid {
     }
 }
 
-fn check_lut_gemm_shapes(
+pub(crate) fn check_lut_gemm_shapes(
     x: &[f32],
     w: &[f32],
     m: usize,
@@ -280,6 +327,12 @@ fn check_lut_gemm_shapes(
 /// Σ w)` in `i64` and each output is dequantized exactly once at the tile
 /// edge. Integer sums are order-free, so the tiled kernel is bit-identical
 /// to [`lut_gemm_naive`].
+///
+/// Dispatches on the process-global [`KernelMode`]: `Exact` runs the scalar
+/// tile loop below, `Wide`/`Fast` the lane-striped
+/// [`wide::lut_gemm_wide`] — bit-identical either way (integer
+/// accumulation), so the mode is purely a throughput knob here.
+#[allow(clippy::too_many_arguments)]
 pub fn lut_gemm(
     x: &[f32],
     w: &[f32],
@@ -292,6 +345,28 @@ pub fn lut_gemm(
     scratch: &Scratch,
     out: &mut [f32],
 ) -> Result<()> {
+    lut_gemm_with_mode(x, w, m, kdim, n, xq, wq, lut, scratch, out, super::kernel_mode())
+}
+
+/// [`lut_gemm`] with an explicit [`KernelMode`] (the differential suite and
+/// the bench drive both formulations side by side through this).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_gemm_with_mode(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kdim: usize,
+    n: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+    lut: LutView,
+    scratch: &Scratch,
+    out: &mut [f32],
+    mode: KernelMode,
+) -> Result<()> {
+    if mode != KernelMode::Exact {
+        return wide::lut_gemm_wide(x, w, m, kdim, n, xq, wq, lut, scratch, out);
+    }
     check_lut_gemm_shapes(x, w, m, kdim, n, xq, wq, lut, out)?;
     counters::lut_gemm_inc();
     // quantize once: x codes row-major, w codes packed transposed (n × kdim)

@@ -31,17 +31,133 @@
 //! callers that fan out over `util::par` keep the bit-identical-at-every-
 //! `--jobs` contract. `tests/kernel_equivalence.rs` pins both properties.
 //!
+//! # Kernel modes
+//!
+//! Every kernel family now carries up to three formulations behind the
+//! [`KernelMode`] seam:
+//!
+//! * [`KernelMode::Exact`] — the original scalar loops, the reference
+//!   semantics;
+//! * [`KernelMode::Wide`] (default) — 8/16-lane autovectorization-friendly
+//!   inner loops ([`wide`]) restricted to kernels whose accumulation is
+//!   order-free (integer sums, total-order max), so results stay
+//!   **bit-identical** to `Exact`. Kernels with ascending-index f64 chains
+//!   (`gemm_bias`, the fused float reductions) keep their exact scalar
+//!   bodies in `Wide`;
+//! * [`KernelMode::Fast`] — opt-in lane-striped f64 formulations with
+//!   fixed-shape reduction trees. `Fast` changes the accumulation order and
+//!   is therefore **never** silently substituted: it is only reachable via
+//!   the `FAMES_KERNEL_MODE=fast` env knob or an explicit
+//!   `*_with_mode(..)` call, and `tests/kernel_differential.rs` verifies it
+//!   against the exact twin as an error-bounded oracle (and bitwise against
+//!   its own scalar lane-twin).
+//!
 //! # Counters
 //!
 //! Each kernel family bumps a process-wide invocation counter
 //! ([`counters`]); `fames bench --json` embeds a snapshot so CI can assert
-//! the fused paths are actually exercised, not silently bypassed.
+//! the fused paths are actually exercised, not silently bypassed. The wide
+//! LUT GEMM has its own counter (`lut_gemm_wide`) so CI can additionally
+//! prove the wide dispatch ran rather than quietly falling back to scalar.
 
 pub mod gemm;
 pub mod lut;
+pub mod wide;
 
 use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU8, Ordering as AtomicOrdering};
 use std::sync::Mutex;
+
+/// Which kernel formulation the process-global entry points dispatch to.
+///
+/// `Exact` and `Wide` are interchangeable by contract — `Wide` only takes a
+/// wide path where it can prove bit-identity (order-free integer / total-
+/// order reductions) — so flipping between them can never change results.
+/// `Fast` is an explicit opt-in that trades the ascending-index f64 chains
+/// for fixed-shape lane-reduction trees; it is validated against `Exact` as
+/// an error-bounded oracle, never assumed equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Scalar reference loops (PR 4 semantics).
+    Exact,
+    /// Lane-striped loops for order-free kernels; bit-identical to `Exact`.
+    Wide,
+    /// Lane-striped f64 reduction trees; error-bounded, not bit-identical.
+    Fast,
+}
+
+const MODE_EXACT: u8 = 0;
+const MODE_WIDE: u8 = 1;
+const MODE_FAST: u8 = 2;
+/// Sentinel: the global mode cell has not consulted the environment yet.
+const MODE_UNSET: u8 = 0xff;
+
+static KERNEL_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+impl KernelMode {
+    fn to_u8(self) -> u8 {
+        match self {
+            KernelMode::Exact => MODE_EXACT,
+            KernelMode::Wide => MODE_WIDE,
+            KernelMode::Fast => MODE_FAST,
+        }
+    }
+
+    fn from_u8(v: u8) -> KernelMode {
+        match v {
+            MODE_EXACT => KernelMode::Exact,
+            MODE_FAST => KernelMode::Fast,
+            _ => KernelMode::Wide,
+        }
+    }
+
+    /// Parse a mode name as accepted by `FAMES_KERNEL_MODE` and the bench
+    /// CLI (`exact` | `wide` | `fast`, case-insensitive).
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" | "scalar" => Some(KernelMode::Exact),
+            "wide" => Some(KernelMode::Wide),
+            "fast" => Some(KernelMode::Fast),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (bench JSON, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Exact => "exact",
+            KernelMode::Wide => "wide",
+            KernelMode::Fast => "fast",
+        }
+    }
+}
+
+/// The process-global kernel mode used by the plain entry points
+/// (`lut_gemm`, `gemm_bias`, …). Defaults to [`KernelMode::Wide`]; the
+/// first read honors `FAMES_KERNEL_MODE` (`exact`/`wide`/`fast`,
+/// unrecognized values fall back to `wide`). Tests that need a specific
+/// mode should call the `*_with_mode` variants instead of mutating the
+/// global — the test harness is multi-threaded.
+pub fn kernel_mode() -> KernelMode {
+    let v = KERNEL_MODE.load(AtomicOrdering::Relaxed);
+    if v != MODE_UNSET {
+        return KernelMode::from_u8(v);
+    }
+    let initial = std::env::var("FAMES_KERNEL_MODE")
+        .ok()
+        .and_then(|s| KernelMode::parse(&s))
+        .unwrap_or(KernelMode::Wide);
+    // Racing first-reads resolve the env var to the same value; whichever
+    // store wins, the observed mode is identical.
+    KERNEL_MODE.store(initial.to_u8(), AtomicOrdering::Relaxed);
+    initial
+}
+
+/// Override the process-global kernel mode (the bench CLI's `mode=` knob).
+/// Production code paths should not call this; prefer `*_with_mode`.
+pub fn set_kernel_mode(mode: KernelMode) {
+    KERNEL_MODE.store(mode.to_u8(), AtomicOrdering::Relaxed);
+}
 
 /// Columns of one k-block in the blocked GEMM kernels. The block partition
 /// only affects *which* outputs are touched when — every output's f64
@@ -63,6 +179,7 @@ pub mod counters {
     static SOFTMAX_FUSED: AtomicU64 = AtomicU64::new(0);
     static LUT_FUSED: AtomicU64 = AtomicU64::new(0);
     static LUT_GEMM: AtomicU64 = AtomicU64::new(0);
+    static LUT_GEMM_WIDE: AtomicU64 = AtomicU64::new(0);
 
     pub(crate) fn gemm_blocked_inc() {
         GEMM_BLOCKED.fetch_add(1, Ordering::Relaxed);
@@ -80,6 +197,10 @@ pub mod counters {
         LUT_GEMM.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(crate) fn lut_gemm_wide_inc() {
+        LUT_GEMM_WIDE.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A point-in-time snapshot of every kernel counter.
     #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
     pub struct KernelCounters {
@@ -92,6 +213,10 @@ pub mod counters {
         pub lut_fused: u64,
         /// Fused integer LUT-GEMM invocations (`kernel::lut::lut_gemm`).
         pub lut_gemm: u64,
+        /// LUT-GEMM invocations that dispatched the wide lane-striped path
+        /// (`kernel::wide::lut_gemm_wide`); a subset of `lut_gemm`. CI uses
+        /// this to prove the wide path ran, not just that a mode was set.
+        pub lut_gemm_wide: u64,
     }
 
     impl KernelCounters {
@@ -103,12 +228,14 @@ pub mod counters {
                 softmax_fused: self.softmax_fused.saturating_sub(earlier.softmax_fused),
                 lut_fused: self.lut_fused.saturating_sub(earlier.lut_fused),
                 lut_gemm: self.lut_gemm.saturating_sub(earlier.lut_gemm),
+                lut_gemm_wide: self.lut_gemm_wide.saturating_sub(earlier.lut_gemm_wide),
             }
         }
 
         /// Sum of all counters (quick "did any kernel run" probe).
         pub fn total(&self) -> u64 {
             self.gemm_blocked + self.softmax_fused + self.lut_fused + self.lut_gemm
+                + self.lut_gemm_wide
         }
     }
 
@@ -119,6 +246,7 @@ pub mod counters {
             softmax_fused: SOFTMAX_FUSED.load(Ordering::Relaxed),
             lut_fused: LUT_FUSED.load(Ordering::Relaxed),
             lut_gemm: LUT_GEMM.load(Ordering::Relaxed),
+            lut_gemm_wide: LUT_GEMM_WIDE.load(Ordering::Relaxed),
         }
     }
 
@@ -129,6 +257,7 @@ pub mod counters {
         SOFTMAX_FUSED.store(0, Ordering::Relaxed);
         LUT_FUSED.store(0, Ordering::Relaxed);
         LUT_GEMM.store(0, Ordering::Relaxed);
+        LUT_GEMM_WIDE.store(0, Ordering::Relaxed);
     }
 }
 
@@ -157,6 +286,7 @@ pub mod counters {
 pub struct Scratch {
     f64_pool: Mutex<Vec<Vec<f64>>>,
     u16_pool: Mutex<Vec<Vec<u16>>>,
+    u8_pool: Mutex<Vec<Vec<u8>>>,
 }
 
 /// Maximum parked buffers per pool; returns beyond this are dropped so a
@@ -205,6 +335,16 @@ impl Scratch {
         ScratchU16 { buf, pool: self }
     }
 
+    /// Check out a zero-filled u8 buffer of exactly `len` elements (the
+    /// packed ≤4-bit code blocks of [`wide::lut_gemm_wide`] — half the
+    /// index bandwidth of the u16 blocks).
+    pub fn u8_buf(&self, len: usize) -> ScratchU8<'_> {
+        let mut buf = take_buf(&self.u8_pool, len);
+        buf.clear();
+        buf.resize(len, 0);
+        ScratchU8 { buf, pool: self }
+    }
+
     /// Number of f64 buffers currently parked in the pool (diagnostics).
     pub fn pooled_f64(&self) -> usize {
         self.f64_pool.lock().unwrap_or_else(|e| e.into_inner()).len()
@@ -213,6 +353,11 @@ impl Scratch {
     /// Number of u16 buffers currently parked in the pool (diagnostics).
     pub fn pooled_u16(&self) -> usize {
         self.u16_pool.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Number of u8 buffers currently parked in the pool (diagnostics).
+    pub fn pooled_u8(&self) -> usize {
+        self.u8_pool.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 
@@ -266,6 +411,32 @@ impl DerefMut for ScratchU16<'_> {
 impl Drop for ScratchU16<'_> {
     fn drop(&mut self) {
         park_buf(&self.pool.u16_pool, std::mem::take(&mut self.buf));
+    }
+}
+
+/// A checked-out u8 scratch buffer; see [`ScratchF64`].
+pub struct ScratchU8<'a> {
+    buf: Vec<u8>,
+    pool: &'a Scratch,
+}
+
+impl Deref for ScratchU8<'_> {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl DerefMut for ScratchU8<'_> {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchU8<'_> {
+    fn drop(&mut self) {
+        park_buf(&self.pool.u8_pool, std::mem::take(&mut self.buf));
     }
 }
 
@@ -386,14 +557,60 @@ mod tests {
     #[test]
     fn counter_snapshots_diff_saturating() {
         use super::counters::KernelCounters;
-        let a = KernelCounters { gemm_blocked: 5, softmax_fused: 1, lut_fused: 2, lut_gemm: 0 };
-        let b = KernelCounters { gemm_blocked: 9, softmax_fused: 1, lut_fused: 7, lut_gemm: 3 };
+        let a = KernelCounters {
+            gemm_blocked: 5,
+            softmax_fused: 1,
+            lut_fused: 2,
+            lut_gemm: 0,
+            lut_gemm_wide: 0,
+        };
+        let b = KernelCounters {
+            gemm_blocked: 9,
+            softmax_fused: 1,
+            lut_fused: 7,
+            lut_gemm: 3,
+            lut_gemm_wide: 2,
+        };
         let d = b.since(&a);
         assert_eq!(d.gemm_blocked, 4);
         assert_eq!(d.softmax_fused, 0);
         assert_eq!(d.lut_fused, 5);
         assert_eq!(d.lut_gemm, 3);
-        assert_eq!(d.total(), 12);
+        assert_eq!(d.lut_gemm_wide, 2);
+        assert_eq!(d.total(), 14);
         assert_eq!(a.since(&b).gemm_blocked, 0, "saturating");
+    }
+
+    #[test]
+    fn kernel_mode_parses_and_names_round_trip() {
+        for m in [KernelMode::Exact, KernelMode::Wide, KernelMode::Fast] {
+            assert_eq!(KernelMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("WIDE"), Some(KernelMode::Wide));
+        assert_eq!(KernelMode::parse("scalar"), Some(KernelMode::Exact));
+        assert_eq!(KernelMode::parse(" fast "), Some(KernelMode::Fast));
+        assert_eq!(KernelMode::parse("turbo"), None);
+    }
+
+    #[test]
+    fn global_kernel_mode_defaults_to_a_valid_mode() {
+        // Other tests in this process may have called set_kernel_mode; we
+        // only assert the cell always resolves to a real mode (and that the
+        // default, absent overrides, is bit-identity-safe).
+        let m = kernel_mode();
+        assert!(matches!(m, KernelMode::Exact | KernelMode::Wide | KernelMode::Fast));
+    }
+
+    #[test]
+    fn u8_scratch_pool_zeroes_and_reuses() {
+        let s = Scratch::new();
+        {
+            let mut b = s.u8_buf(9);
+            b[8] = 0x5a;
+        }
+        assert_eq!(s.pooled_u8(), 1);
+        let again = s.u8_buf(4);
+        assert_eq!(s.pooled_u8(), 0);
+        assert!(again.iter().all(|&v| v == 0));
     }
 }

@@ -1,0 +1,666 @@
+//! Lane-striped (8-wide) kernel formulations.
+//!
+//! Every loop here is written so the optimizer can keep the lane arrays in
+//! vector registers: fixed-size `[_; LANES]` accumulators, straight-line
+//! lane bodies with no cross-lane dependency, and a **fixed-shape binary
+//! reduction tree** at the end. The module splits into two families with
+//! very different correctness contracts:
+//!
+//! * **Bit-identical wide kernels** — [`lut_gemm_wide`], [`sq_sum_wide`],
+//!   [`logsumexp_wide`], [`argmax_f64_wide`]. These stripe only order-free
+//!   reductions (`i64` sums, IEEE total-order max), so they are provably
+//!   bit-identical to their scalar twins in `lut.rs` / `mod.rs` for every
+//!   input, including NaN/±inf. [`KernelMode::Wide`](super::KernelMode)
+//!   dispatches to them unconditionally.
+//! * **Fast kernels** — [`gemm_bias_fast`], [`err_dot_fast`],
+//!   [`penalty_fast`], [`quad_form_fast`]. These stripe f64 chains, which
+//!   *changes the accumulation order*: each is paired with a `*_fast_ref`
+//!   scalar twin performing the **identical lane arithmetic** (bitwise
+//!   testable) and is validated against the exact kernel as an
+//!   error-bounded oracle in `tests/kernel_differential.rs`. They are only
+//!   reachable through [`KernelMode::Fast`](super::KernelMode) — never a
+//!   silent substitution.
+//!
+//! # u8 code packing
+//!
+//! For ≤4-bit layers (`a_bits + w_bits ≤ 8` — the paper's 2–4-bit regime)
+//! [`lut_gemm_wide`] packs operand codes into `u8` blocks instead of `u16`,
+//! halving the index-stream bandwidth of the inner loop. The `x` codes are
+//! stored **pre-shifted** (`a << w_bits`), so the packed LUT index is a
+//! single `or` per element; `Σa` is recovered exactly from the shifted sum
+//! (`Σ(a << s) >> s = Σa` — the shift distributes over the sum of
+//! non-negative terms).
+
+use anyhow::Result;
+
+use super::lut::{check_lut_gemm_shapes, dequant, LutView, QuantGrid};
+use super::{counters, Scratch};
+
+/// Accumulator lanes per stripe. Eight i64/f64 lanes fill one AVX-512
+/// register or two NEON/AVX2 registers — wide enough to expose ILP, small
+/// enough that ragged tails stay cheap.
+pub const LANES: usize = 8;
+
+/// Fixed-shape binary reduction tree over eight i64 lanes:
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. Integer addition is
+/// order-free, so the tree exists for throughput, not semantics.
+#[inline]
+fn tree8_i64(l: [i64; LANES]) -> i64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Fixed-shape binary reduction tree over eight f64 lanes. This shape is
+/// part of the `Fast` kernels' contract: the `*_fast_ref` twins reduce with
+/// the same tree, so wide-vs-twin comparisons are bitwise.
+#[inline]
+fn tree8_f64(l: [f64; LANES]) -> f64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// One fused inner product over pre-shifted code rows: returns
+/// `(Σ lut, Σ (a << w_bits), Σ w)` in `i64`. Generic over the packed code
+/// width (`u8` for ≤4-bit layers, `u16` otherwise); the loop body is eight
+/// independent gather+add lanes.
+#[inline]
+fn fused_dot_wide<C: Copy + Into<usize>>(xr: &[C], wr: &[C], table: &[i64]) -> (i64, i64, i64) {
+    debug_assert_eq!(xr.len(), wr.len());
+    let main = xr.len() / LANES * LANES;
+    let mut l_lut = [0i64; LANES];
+    let mut l_a = [0i64; LANES];
+    let mut l_w = [0i64; LANES];
+    for (xc, wc) in xr[..main].chunks_exact(LANES).zip(wr[..main].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let xi: usize = xc[l].into();
+            let wi: usize = wc[l].into();
+            l_lut[l] += table[xi | wi];
+            l_a[l] += xi as i64;
+            l_w[l] += wi as i64;
+        }
+    }
+    let mut s_lut = tree8_i64(l_lut);
+    let mut s_a = tree8_i64(l_a);
+    let mut s_w = tree8_i64(l_w);
+    for (x, w) in xr[main..].iter().zip(&wr[main..]) {
+        let xi: usize = (*x).into();
+        let wi: usize = (*w).into();
+        s_lut += table[xi | wi];
+        s_a += xi as i64;
+        s_w += wi as i64;
+    }
+    (s_lut, s_a, s_w)
+}
+
+/// Lane-striped twin of [`super::lut::lut_gemm`] — **bit-identical** to the
+/// scalar kernel and to `lut_gemm_naive` for every input.
+///
+/// The accumulators are `i64` (order-free), so striping the k loop across
+/// eight lanes and reducing with a fixed-shape tree cannot change any
+/// output bit; the dequantization is the exact shared expression from
+/// `lut.rs`. When `a_bits + w_bits ≤ 8` the operand codes are packed into
+/// `u8` blocks (pre-shifted `x`, see the module docs) to halve the index
+/// bandwidth; wider LUTs use pre-shifted `u16` blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_gemm_wide(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    kdim: usize,
+    n: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+    lut: LutView,
+    scratch: &Scratch,
+    out: &mut [f32],
+) -> Result<()> {
+    check_lut_gemm_shapes(x, w, m, kdim, n, xq, wq, lut, out)?;
+    counters::lut_gemm_inc();
+    counters::lut_gemm_wide_inc();
+    let w_shift = lut.w_bits;
+    let table = lut.lut;
+    let packed_u8 = lut.a_bits + lut.w_bits <= 8;
+    if packed_u8 {
+        // ≤4-bit regime: pre-shifted u8 x codes, u8 w codes (transposed)
+        let mut x_codes = scratch.u8_buf(m * kdim);
+        for (c, &v) in x_codes.iter_mut().zip(x) {
+            *c = (xq.code(v) as u8) << w_shift;
+        }
+        let mut w_codes = scratch.u8_buf(kdim * n);
+        for j in 0..n {
+            let col = &mut w_codes[j * kdim..(j + 1) * kdim];
+            for (k, c) in col.iter_mut().enumerate() {
+                *c = wq.code(w[k * n + j]) as u8;
+            }
+        }
+        lut_gemm_tiles(&x_codes, &w_codes, m, kdim, n, xq, wq, w_shift, table, out);
+    } else {
+        let mut x_codes = scratch.u16_buf(m * kdim);
+        for (c, &v) in x_codes.iter_mut().zip(x) {
+            *c = xq.code(v) << w_shift;
+        }
+        let mut w_codes = scratch.u16_buf(kdim * n);
+        for j in 0..n {
+            let col = &mut w_codes[j * kdim..(j + 1) * kdim];
+            for (k, c) in col.iter_mut().enumerate() {
+                *c = wq.code(w[k * n + j]);
+            }
+        }
+        lut_gemm_tiles(&x_codes, &w_codes, m, kdim, n, xq, wq, w_shift, table, out);
+    }
+    Ok(())
+}
+
+/// The shared tile walk of [`lut_gemm_wide`]: same `LUT_TILE_M × LUT_TILE_N`
+/// output tiling as the scalar kernel (tiling only orders output visits —
+/// integer chains are order-free anyway), wide fused dot per output.
+#[allow(clippy::too_many_arguments)]
+fn lut_gemm_tiles<C: Copy + Into<usize>>(
+    x_codes: &[C],
+    w_codes: &[C],
+    m: usize,
+    kdim: usize,
+    n: usize,
+    xq: QuantGrid,
+    wq: QuantGrid,
+    w_shift: u32,
+    table: &[i64],
+    out: &mut [f32],
+) {
+    use super::lut::{LUT_TILE_M, LUT_TILE_N};
+    for i0 in (0..m).step_by(LUT_TILE_M) {
+        let i1 = (i0 + LUT_TILE_M).min(m);
+        for j0 in (0..n).step_by(LUT_TILE_N) {
+            let j1 = (j0 + LUT_TILE_N).min(n);
+            for i in i0..i1 {
+                let xr = &x_codes[i * kdim..(i + 1) * kdim];
+                for j in j0..j1 {
+                    let wc = &w_codes[j * kdim..(j + 1) * kdim];
+                    let (s_lut, s_as, s_w) = fused_dot_wide(xr, wc, table);
+                    // x codes are stored pre-shifted; the shift distributes
+                    // over the non-negative sum, so this recovers Σa exactly
+                    let s_a = s_as >> w_shift;
+                    out[i * n + j] = dequant(s_lut, s_a, s_w, kdim, xq, wq);
+                }
+            }
+        }
+    }
+}
+
+/// Lane-striped twin of [`super::lut::sq_sum`] — **bit-identical**.
+///
+/// The integer fast path (the error-tensor case) stripes its exact `i64`
+/// accumulation across eight lanes; the non-integral fallback is the same
+/// ascending-index f64 chain as the scalar kernel, untouched, because that
+/// chain's order is the contract.
+pub fn sq_sum_wide(v: &[f32]) -> f64 {
+    counters::lut_fused_inc();
+    let mut integral = true;
+    let mut max_abs = 0f32;
+    for &x in v {
+        if x.fract() != 0.0 {
+            integral = false;
+            break;
+        }
+        max_abs = max_abs.max(x.abs());
+    }
+    if integral {
+        let ma = max_abs as f64;
+        if ma * ma * v.len().max(1) as f64 < 9.0e15 {
+            let main = v.len() / LANES * LANES;
+            let mut lanes = [0i64; LANES];
+            for chunk in v[..main].chunks_exact(LANES) {
+                for l in 0..LANES {
+                    let xi = chunk[l] as i64;
+                    lanes[l] += xi * xi;
+                }
+            }
+            let mut acc = tree8_i64(lanes);
+            for &x in &v[main..] {
+                let xi = x as i64;
+                acc += xi * xi;
+            }
+            return acc as f64;
+        }
+    }
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Lane-striped row max under IEEE total order — **bit-identical** to the
+/// scalar fold in [`super::logsumexp`] (total-order max is associative and
+/// commutative, so lane-striping plus a fixed tree reduce selects the same
+/// value, NaN included).
+#[inline]
+fn total_order_max_wide(row: &[f64]) -> f64 {
+    #[inline]
+    fn to_max(a: f64, b: f64) -> f64 {
+        if b.total_cmp(&a) == std::cmp::Ordering::Greater {
+            b
+        } else {
+            a
+        }
+    }
+    let main = row.len() / LANES * LANES;
+    let mut lanes = [f64::NEG_INFINITY; LANES];
+    for chunk in row[..main].chunks_exact(LANES) {
+        for l in 0..LANES {
+            lanes[l] = to_max(lanes[l], chunk[l]);
+        }
+    }
+    let mut m = to_max(
+        to_max(to_max(lanes[0], lanes[1]), to_max(lanes[2], lanes[3])),
+        to_max(to_max(lanes[4], lanes[5]), to_max(lanes[6], lanes[7])),
+    );
+    for &v in &row[main..] {
+        m = to_max(m, v);
+    }
+    m
+}
+
+/// Wide twin of [`super::logsumexp`] — **bit-identical**. Only the row max
+/// is lane-striped (order-free under total order); the stabilized `Σ exp`
+/// stays the scalar ascending-index chain, whose order is the contract.
+pub fn logsumexp_wide(row: &[f64]) -> f64 {
+    let m = total_order_max_wide(row);
+    if m.is_nan() {
+        return f64::NAN;
+    }
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
+}
+
+/// Wide twin of [`super::argmax_f64`] — **bit-identical** ("first maximum
+/// wins", NaN sorts above every number). Lane `l` scans indices
+/// `l, l+LANES, …`; the cross-lane combine prefers the greater value in
+/// total order and the smaller index on exact ties, which reproduces the
+/// scalar first-max-wins scan for every input.
+pub fn argmax_f64_wide(row: &[f64]) -> Option<usize> {
+    if row.is_empty() {
+        return None;
+    }
+    if row.len() < LANES {
+        return super::argmax_f64(row);
+    }
+    let main = row.len() / LANES * LANES;
+    // seed each lane with its first element (not a -inf sentinel: an
+    // all--inf lane must still report a real index), then scan the rest
+    let mut best_v = [0f64; LANES];
+    let mut best_i = [0usize; LANES];
+    for l in 0..LANES {
+        best_v[l] = row[l];
+        best_i[l] = l;
+    }
+    for (c, chunk) in row[LANES..main].chunks_exact(LANES).enumerate() {
+        for l in 0..LANES {
+            // strictly-greater keeps the earliest index per lane
+            if chunk[l].total_cmp(&best_v[l]) == std::cmp::Ordering::Greater {
+                best_v[l] = chunk[l];
+                best_i[l] = (c + 1) * LANES + l;
+            }
+        }
+    }
+    let mut bv = best_v[0];
+    let mut bi = best_i[0];
+    for l in 1..LANES {
+        match best_v[l].total_cmp(&bv) {
+            std::cmp::Ordering::Greater => {
+                bv = best_v[l];
+                bi = best_i[l];
+            }
+            std::cmp::Ordering::Equal if best_i[l] < bi => bi = best_i[l],
+            _ => {}
+        }
+    }
+    for (off, &v) in row[main..].iter().enumerate() {
+        if v.total_cmp(&bv) == std::cmp::Ordering::Greater {
+            bv = v;
+            bi = main + off;
+        }
+    }
+    Some(bi)
+}
+
+// ---------------------------------------------------------------------------
+// Fast kernels: lane-striped f64 chains. NOT bit-identical to the exact
+// kernels — reachable only via KernelMode::Fast, each paired with a scalar
+// `*_fast_ref` twin computing the identical lane arithmetic.
+// ---------------------------------------------------------------------------
+
+/// `Fast` formulation of [`super::gemm::gemm_bias`]: the k loop of each
+/// output is striped across eight f64 lanes (`acc[l] += w[k0+l]·x[k0+l]`),
+/// reduced with the fixed tree and added to the bias, tail in ascending
+/// order. Error-bounded vs the exact kernel; bitwise equal to
+/// [`gemm_bias_fast_ref`].
+pub fn gemm_bias_fast(w: &[f32], b: &[f32], x: &[f32], d: usize, nc: usize, out: &mut [f64]) {
+    debug_assert_eq!(w.len(), nc * d, "gemm_bias_fast: w is nc×d");
+    debug_assert_eq!(b.len(), nc, "gemm_bias_fast: b has nc entries");
+    if nc == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % nc, 0, "gemm_bias_fast: out is S×nc");
+    let samples = out.len() / nc;
+    debug_assert_eq!(x.len(), samples * d, "gemm_bias_fast: x is S×d");
+    counters::gemm_blocked_inc();
+    let main = d / LANES * LANES;
+    for s in 0..samples {
+        let x_row = &x[s * d..(s + 1) * d];
+        let z_row = &mut out[s * nc..(s + 1) * nc];
+        for (i, z) in z_row.iter_mut().enumerate() {
+            let w_row = &w[i * d..(i + 1) * d];
+            let mut lanes = [0f64; LANES];
+            for (wc, xc) in
+                w_row[..main].chunks_exact(LANES).zip(x_row[..main].chunks_exact(LANES))
+            {
+                for l in 0..LANES {
+                    lanes[l] += wc[l] as f64 * xc[l] as f64;
+                }
+            }
+            let mut acc = b[i] as f64 + tree8_f64(lanes);
+            for (wv, xv) in w_row[main..].iter().zip(&x_row[main..]) {
+                acc += *wv as f64 * *xv as f64;
+            }
+            *z = acc;
+        }
+    }
+}
+
+/// Scalar twin of [`gemm_bias_fast`]: the same lane partial sums computed
+/// one lane at a time, same tree reduce, same tail — bitwise equal to the
+/// wide version for every input (IEEE ops are deterministic; only the
+/// instruction schedule differs).
+pub fn gemm_bias_fast_ref(w: &[f32], b: &[f32], x: &[f32], d: usize, nc: usize, out: &mut [f64]) {
+    debug_assert_eq!(w.len(), nc * d);
+    debug_assert_eq!(b.len(), nc);
+    if nc == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % nc, 0);
+    let samples = out.len() / nc;
+    debug_assert_eq!(x.len(), samples * d);
+    let main = d / LANES * LANES;
+    for s in 0..samples {
+        let x_row = &x[s * d..(s + 1) * d];
+        let z_row = &mut out[s * nc..(s + 1) * nc];
+        for (i, z) in z_row.iter_mut().enumerate() {
+            let w_row = &w[i * d..(i + 1) * d];
+            let mut lanes = [0f64; LANES];
+            for l in 0..LANES {
+                let mut k = l;
+                while k < main {
+                    lanes[l] += w_row[k] as f64 * x_row[k] as f64;
+                    k += LANES;
+                }
+            }
+            let mut acc = b[i] as f64 + tree8_f64(lanes);
+            for k in main..d {
+                acc += w_row[k] as f64 * x_row[k] as f64;
+            }
+            *z = acc;
+        }
+    }
+}
+
+/// `Fast` formulation of [`super::lut::err_dot`]: lane-striped
+/// `Σ v[i]·e_i` with the integer error generated from the packed index as
+/// in the exact kernel. Error-bounded vs exact; bitwise equal to
+/// [`err_dot_fast_ref`].
+pub fn err_dot_fast(lut: LutView, v: &[f32]) -> Result<f64> {
+    anyhow::ensure!(
+        v.len() == lut.lut.len(),
+        "err_dot_fast: vector length {} != LUT length {}",
+        v.len(),
+        lut.lut.len()
+    );
+    counters::lut_fused_inc();
+    let main = v.len() / LANES * LANES;
+    let mut lanes = [0f64; LANES];
+    for (c, chunk) in v[..main].chunks_exact(LANES).enumerate() {
+        for l in 0..LANES {
+            let i = c * LANES + l;
+            lanes[l] += chunk[l] as f64 * lut.err_at(i) as f64;
+        }
+    }
+    let mut acc = tree8_f64(lanes);
+    for (off, &vi) in v[main..].iter().enumerate() {
+        acc += vi as f64 * lut.err_at(main + off) as f64;
+    }
+    Ok(acc)
+}
+
+/// Scalar twin of [`err_dot_fast`] (identical lane arithmetic).
+pub fn err_dot_fast_ref(lut: LutView, v: &[f32]) -> Result<f64> {
+    anyhow::ensure!(
+        v.len() == lut.lut.len(),
+        "err_dot_fast_ref: vector length {} != LUT length {}",
+        v.len(),
+        lut.lut.len()
+    );
+    let main = v.len() / LANES * LANES;
+    let mut lanes = [0f64; LANES];
+    for l in 0..LANES {
+        let mut i = l;
+        while i < main {
+            lanes[l] += v[i] as f64 * lut.err_at(i) as f64;
+            i += LANES;
+        }
+    }
+    let mut acc = tree8_f64(lanes);
+    for i in main..v.len() {
+        acc += v[i] as f64 * lut.err_at(i) as f64;
+    }
+    Ok(acc)
+}
+
+/// `Fast` formulation of [`super::lut::penalty`]: both accumulators
+/// lane-striped, reduced with the fixed tree, combined as
+/// `first + 0.5·quad` exactly like the exact kernel. Bitwise equal to
+/// [`penalty_fast_ref`].
+pub fn penalty_fast(g: &[f32], h: &[f32], e: &[f32]) -> f64 {
+    debug_assert_eq!(g.len(), e.len());
+    debug_assert_eq!(h.len(), e.len());
+    counters::lut_fused_inc();
+    let main = e.len() / LANES * LANES;
+    let mut l_first = [0f64; LANES];
+    let mut l_quad = [0f64; LANES];
+    for (c, ec) in e[..main].chunks_exact(LANES).enumerate() {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let ev = ec[l] as f64;
+            l_first[l] += g[base + l] as f64 * ev;
+            l_quad[l] += h[base + l] as f64 * ev * ev;
+        }
+    }
+    let mut first = tree8_f64(l_first);
+    let mut quad = tree8_f64(l_quad);
+    for (off, &ev) in e[main..].iter().enumerate() {
+        let i = main + off;
+        let ev = ev as f64;
+        first += g[i] as f64 * ev;
+        quad += h[i] as f64 * ev * ev;
+    }
+    first + 0.5 * quad
+}
+
+/// Scalar twin of [`penalty_fast`] (identical lane arithmetic).
+pub fn penalty_fast_ref(g: &[f32], h: &[f32], e: &[f32]) -> f64 {
+    debug_assert_eq!(g.len(), e.len());
+    debug_assert_eq!(h.len(), e.len());
+    let main = e.len() / LANES * LANES;
+    let mut l_first = [0f64; LANES];
+    let mut l_quad = [0f64; LANES];
+    for l in 0..LANES {
+        let mut i = l;
+        while i < main {
+            let ev = e[i] as f64;
+            l_first[l] += g[i] as f64 * ev;
+            l_quad[l] += h[i] as f64 * ev * ev;
+            i += LANES;
+        }
+    }
+    let mut first = tree8_f64(l_first);
+    let mut quad = tree8_f64(l_quad);
+    for i in main..e.len() {
+        let ev = e[i] as f64;
+        first += g[i] as f64 * ev;
+        quad += h[i] as f64 * ev * ev;
+    }
+    first + 0.5 * quad
+}
+
+/// `Fast` formulation of [`super::lut::quad_form`]: lane-striped
+/// `Σ ½ h[i]·r[i]²` with the exact kernel's per-term operation order
+/// (`((0.5·h)·r)·r`). Bitwise equal to [`quad_form_fast_ref`].
+pub fn quad_form_fast(h: &[f32], r: &[f32]) -> f64 {
+    debug_assert_eq!(h.len(), r.len());
+    counters::lut_fused_inc();
+    let main = r.len() / LANES * LANES;
+    let mut lanes = [0f64; LANES];
+    for (c, rc) in r[..main].chunks_exact(LANES).enumerate() {
+        let base = c * LANES;
+        for l in 0..LANES {
+            lanes[l] += 0.5 * h[base + l] as f64 * rc[l] as f64 * rc[l] as f64;
+        }
+    }
+    let mut acc = tree8_f64(lanes);
+    for (off, &rv) in r[main..].iter().enumerate() {
+        acc += 0.5 * h[main + off] as f64 * rv as f64 * rv as f64;
+    }
+    acc
+}
+
+/// Scalar twin of [`quad_form_fast`] (identical lane arithmetic).
+pub fn quad_form_fast_ref(h: &[f32], r: &[f32]) -> f64 {
+    debug_assert_eq!(h.len(), r.len());
+    let main = r.len() / LANES * LANES;
+    let mut lanes = [0f64; LANES];
+    for l in 0..LANES {
+        let mut i = l;
+        while i < main {
+            lanes[l] += 0.5 * h[i] as f64 * r[i] as f64 * r[i] as f64;
+            i += LANES;
+        }
+    }
+    let mut acc = tree8_f64(lanes);
+    for i in main..r.len() {
+        acc += 0.5 * h[i] as f64 * r[i] as f64 * r[i] as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lut::{self, LutView, QuantGrid};
+    use super::super::{argmax_f64, gemm, logsumexp, Scratch};
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn trunc_lut(a_bits: u32, w_bits: u32) -> Vec<i64> {
+        let (qa, qw) = (1usize << a_bits, 1usize << w_bits);
+        let mut out = Vec::with_capacity(qa * qw);
+        for a in 0..qa {
+            for w in 0..qw {
+                out.push(((a * w) & !1) as i64);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn wide_lut_gemm_is_bit_identical_u8_and_u16_paths() {
+        let scratch = Scratch::new();
+        // (4,4) → u8-packed path; (5,5) → u16 path
+        for (a_bits, w_bits) in [(4u32, 4u32), (2, 2), (5, 5)] {
+            let table = trunc_lut(a_bits, w_bits);
+            let view = LutView { lut: &table, a_bits, w_bits };
+            let xq = QuantGrid::new(0.21, -0.4, a_bits);
+            let wq = QuantGrid::new(0.13, -0.2, w_bits);
+            for (m, kdim, n) in [(1, 1, 1), (5, 33, 7), (33, 65, 65), (7, 8, 9)] {
+                let x: Vec<f32> = (0..m * kdim).map(|i| ((i as f32) * 0.013).sin()).collect();
+                let w: Vec<f32> =
+                    (0..kdim * n).map(|i| ((i as f32) * 0.007).cos() * 0.4).collect();
+                let mut wide = vec![0f32; m * n];
+                let mut scalar = vec![-1f32; m * n];
+                lut_gemm_wide(&x, &w, m, kdim, n, xq, wq, view, &scratch, &mut wide).unwrap();
+                lut::lut_gemm_naive(&x, &w, m, kdim, n, xq, wq, view, &mut scalar).unwrap();
+                for (i, (a, b)) in wide.iter().zip(&scalar).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "bits=({a_bits},{w_bits}) m={m} k={kdim} n={n} out[{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_sq_sum_logsumexp_argmax_are_bit_identical() {
+        let mut rng = Pcg::seeded(7);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 257] {
+            let ints: Vec<f32> = (0..len).map(|_| (rng.below(199) as f32) - 99.0).collect();
+            assert_eq!(sq_sum_wide(&ints).to_bits(), lut::sq_sum(&ints).to_bits(), "len={len}");
+            let floats: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            assert_eq!(sq_sum_wide(&floats).to_bits(), lut::sq_sum(&floats).to_bits());
+            let row: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            assert_eq!(logsumexp_wide(&row).to_bits(), logsumexp(&row).to_bits());
+            assert_eq!(argmax_f64_wide(&row), argmax_f64(&row));
+        }
+        // poisoned rows stay loud and identical
+        let poison = [1.0, f64::NAN, 3.0, f64::INFINITY, -1.0, 2.0, 0.0, -3.0, 4.0];
+        assert!(logsumexp_wide(&poison).is_nan());
+        assert_eq!(argmax_f64_wide(&poison), argmax_f64(&poison));
+        let ties = [5.0f64, 1.0, 5.0, 5.0, 2.0, 5.0, 0.0, 5.0, 5.0, 5.0];
+        assert_eq!(argmax_f64_wide(&ties), Some(0), "first max wins across lanes");
+        let all_ninf = vec![f64::NEG_INFINITY; 19];
+        assert_eq!(argmax_f64_wide(&all_ninf), argmax_f64(&all_ninf));
+        assert_eq!(argmax_f64_wide(&all_ninf), Some(0));
+    }
+
+    #[test]
+    fn fast_kernels_match_their_scalar_twins_bitwise() {
+        let mut rng = Pcg::seeded(11);
+        for d in [1usize, 7, 8, 9, 31, 64, 100] {
+            let (s, nc) = (3usize, 4usize);
+            let w: Vec<f32> = (0..nc * d).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..nc).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> = (0..s * d).map(|_| rng.normal() as f32).collect();
+            let mut fast = vec![0f64; s * nc];
+            let mut twin = vec![1f64; s * nc];
+            gemm_bias_fast(&w, &b, &x, d, nc, &mut fast);
+            gemm_bias_fast_ref(&w, &b, &x, d, nc, &mut twin);
+            for (a, r) in fast.iter().zip(&twin) {
+                assert_eq!(a.to_bits(), r.to_bits(), "d={d}");
+            }
+            let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let h: Vec<f32> = (0..d).map(|_| rng.uniform() as f32).collect();
+            let e: Vec<f32> = (0..d).map(|_| (rng.below(17) as f32) - 8.0).collect();
+            assert_eq!(penalty_fast(&g, &h, &e).to_bits(), penalty_fast_ref(&g, &h, &e).to_bits());
+            assert_eq!(quad_form_fast(&h, &e).to_bits(), quad_form_fast_ref(&h, &e).to_bits());
+        }
+        let table = trunc_lut(3, 3);
+        let view = LutView { lut: &table, a_bits: 3, w_bits: 3 };
+        let v: Vec<f32> = (0..table.len()).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert_eq!(
+            err_dot_fast(view, &v).unwrap().to_bits(),
+            err_dot_fast_ref(view, &v).unwrap().to_bits()
+        );
+        assert!(err_dot_fast(view, &v[1..]).is_err());
+    }
+
+    #[test]
+    fn fast_kernels_stay_close_to_exact() {
+        let mut rng = Pcg::seeded(23);
+        let d = 257usize;
+        let (s, nc) = (2usize, 3usize);
+        let w: Vec<f32> = (0..nc * d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..nc).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..s * d).map(|_| rng.normal() as f32).collect();
+        let mut fast = vec![0f64; s * nc];
+        let mut exact = vec![0f64; s * nc];
+        gemm_bias_fast(&w, &b, &x, d, nc, &mut fast);
+        gemm::gemm_bias_naive(&w, &b, &x, d, nc, &mut exact);
+        for (a, r) in fast.iter().zip(&exact) {
+            assert!((a - r).abs() <= 1e-9 * (1.0 + r.abs()), "fast {a} vs exact {r}");
+        }
+    }
+}

@@ -30,6 +30,16 @@
 //! caches of its per-layer coefficient tables — no per-batch `Vec` churn,
 //! no RNG regeneration per invocation, bit-identical outputs throughout
 //! (`tests/kernel_equivalence.rs`).
+//!
+//! The backend calls the kernels' plain entry points (`gemm_bias`,
+//! `lut_gemm`, `penalty`, `sq_sum`, `quad_form`, `xent_row`), which
+//! dispatch through the process-wide [`crate::kernel::KernelMode`]. The
+//! default `Wide` mode is bit-identical to `Exact` by contract (the
+//! order-free reductions lane-stripe, the f64 ascending-index chains keep
+//! their scalar bodies), so everything above — including the cache
+//! fingerprints, which deliberately exclude the mode — holds at any mode a
+//! deployment selects; `tests/kernel_differential.rs` drives this backend
+//! across modes × jobs to pin it.
 
 use std::path::{Path, PathBuf};
 use std::sync::OnceLock;

@@ -158,7 +158,12 @@ impl Estimator {
     /// fused integer-domain LUT dots ([`AppMul::err_dot`]): the error
     /// operand is generated from the packed LUT index, never materialized
     /// as an f32 tensor, and the result is bit-identical to the float
-    /// `error_slice()` formulation it replaced.
+    /// `error_slice()` formulation it replaced. `err_dot` is an f64
+    /// ascending-index chain, so the global
+    /// [`crate::kernel::KernelMode`] leaves it bit-exact in `Exact` and
+    /// `Wide`; only the opt-in `Fast` mode lane-stripes it, and the Ω
+    /// table fingerprints are insensitive to that choice by design (the
+    /// differential suite pins the `Fast` bound instead).
     pub fn perturbation(&self, layer: usize, am: &AppMul) -> Result<f64> {
         let le = &self.layers[layer];
         let e_len = am.lut.len();

@@ -1,8 +1,11 @@
 //! Small shared utilities: timers, stats, csv, quantiles, FNV-1a hashing
-//! ([`hash`]) and the scoped-parallelism primitives ([`par`]).
+//! ([`hash`]), the scoped-parallelism primitives ([`par`]) and the
+//! deterministic test-corpus generator shared by the equivalence and
+//! differential suites ([`testgen`]).
 
 pub mod hash;
 pub mod par;
+pub mod testgen;
 
 use std::time::Instant;
 

@@ -1,0 +1,268 @@
+//! Deterministic test-corpus generation for the kernel suites.
+//!
+//! `tests/kernel_equivalence.rs`, `tests/par_equivalence.rs` and
+//! `tests/kernel_differential.rs` all need the same raw material: GEMM
+//! shapes with ragged tile remainders, lengths straddling block-size
+//! boundaries, every low-bit-width pair down to 2×2, synthetic multiplier
+//! LUTs, and input vectors from hostile value classes (denormals, extreme
+//! magnitudes, NaN/±inf poison). Before this module each suite grew its own
+//! ad-hoc list; now there is one seeded, dependency-free generator — same
+//! seed, same corpus, forever — so a shape that breaks one suite is
+//! automatically in all of them.
+//!
+//! Everything here is driven by [`crate::rng::Pcg`] (no `std::time`, no
+//! host entropy): the corpus is a pure function of the seed.
+
+use crate::rng::Pcg;
+
+/// Lengths that straddle a blocking boundary: `1`, `B−1`, `B`, `B+1`,
+/// `2B−1`, `2B`, `2B+1` (deduplicated, ascending). Every blocked kernel
+/// must survive each of these — the `±1` cases are where off-by-one bugs
+/// live.
+pub fn boundary_lens(block: usize) -> Vec<usize> {
+    let b = block.max(1);
+    let mut v = vec![1, b - 1, b, b + 1, 2 * b - 1, 2 * b, 2 * b + 1];
+    v.retain(|&x| x > 0);
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// The curated ragged GEMM shapes `(m, kdim, n)` every suite starts from:
+/// singletons, shapes straddling `LUT_TILE_M`/`LUT_TILE_N`/`K_BLOCK`, and
+/// odd remainders against all of them at once.
+pub fn ragged_gemm_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),
+        (5, 33, 7),
+        (31, 17, 63),
+        (32, 64, 64),
+        (33, 65, 65),
+        (5, 189, 7),
+        (2, 257, 3),
+        (33, 100, 65),
+    ]
+}
+
+/// `count` additional seeded random shapes with every dimension biased
+/// toward tile/block boundaries (dimension ∈ [1, 2·block+1]).
+pub fn random_gemm_shapes(seed: u64, count: usize) -> Vec<(usize, usize, usize)> {
+    let mut rng = Pcg::seeded(seed ^ 0x7e57_6e5e);
+    let dim = |rng: &mut Pcg, block: usize| -> usize {
+        // half the draws land within ±1 of a multiple of the block size
+        if rng.chance(0.5) {
+            let mult = 1 + rng.below(2);
+            let base = block * mult;
+            let off = rng.below(3) as i64 - 1; // −1, 0, +1
+            (base as i64 + off).max(1) as usize
+        } else {
+            1 + rng.below(2 * block + 1)
+        }
+    };
+    (0..count)
+        .map(|_| {
+            let m = dim(&mut rng, crate::kernel::lut::LUT_TILE_M);
+            let k = dim(&mut rng, 64); // keep k moderate; K_BLOCK=256 cases are in the curated set
+            let n = dim(&mut rng, crate::kernel::lut::LUT_TILE_N);
+            (m, k, n)
+        })
+        .collect()
+}
+
+/// Every bit-width pair the paper's regime cares about, down to 2×2, plus
+/// one >8-bit-sum pair so the u16 (non-u8-packed) wide path is always
+/// covered.
+pub fn bit_pairs() -> Vec<(u32, u32)> {
+    let mut v = Vec::new();
+    for a in 2u32..=4 {
+        for w in 2u32..=4 {
+            v.push((a, w));
+        }
+    }
+    v.push((5, 5)); // a+w = 10 > 8 → u16 code path
+    v
+}
+
+/// Exact multiplier LUT (`lut[(a << w_bits) | w] = a·w`).
+pub fn exact_lut(a_bits: u32, w_bits: u32) -> Vec<i64> {
+    let (qa, qw) = (1usize << a_bits, 1usize << w_bits);
+    let mut lut = Vec::with_capacity(qa * qw);
+    for a in 0..qa {
+        for w in 0..qw {
+            lut.push((a * w) as i64);
+        }
+    }
+    lut
+}
+
+/// Deterministic approximate LUT: truncates the low bit of each exact
+/// product (the classic broken-carry approximation).
+pub fn trunc_lut(a_bits: u32, w_bits: u32) -> Vec<i64> {
+    exact_lut(a_bits, w_bits).into_iter().map(|v| v & !1).collect()
+}
+
+/// Seeded approximate LUT: exact products perturbed by bounded signed noise
+/// (±`max_err`), so error statistics vary across seeds without ever leaving
+/// the integer domain.
+pub fn noisy_lut(a_bits: u32, w_bits: u32, max_err: i64, seed: u64) -> Vec<i64> {
+    let mut rng = Pcg::seeded(seed ^ 0x1a7_u64 ^ (((a_bits as u64) << 8) | w_bits as u64));
+    exact_lut(a_bits, w_bits)
+        .into_iter()
+        .map(|v| {
+            let e = rng.below((2 * max_err + 1) as usize) as i64 - max_err;
+            (v + e).max(0)
+        })
+        .collect()
+}
+
+/// Hostile input classes for the differential corpus. `Normal` is the
+/// baseline; the rest target specific failure modes: flush-to-zero bugs
+/// (`Denormal`), overflow in intermediate products (`Extreme`), silent
+/// poison swallowing (`NanPoisoned` / `InfPoisoned`), and integer-typed
+/// data (`SmallInt` — the error-tensor case with exact integer fast paths).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueClass {
+    Normal,
+    SmallInt,
+    Denormal,
+    Extreme,
+    NanPoisoned,
+    InfPoisoned,
+}
+
+/// All value classes, in a fixed order (iterate this in corpus sweeps).
+pub const VALUE_CLASSES: [ValueClass; 6] = [
+    ValueClass::Normal,
+    ValueClass::SmallInt,
+    ValueClass::Denormal,
+    ValueClass::Extreme,
+    ValueClass::NanPoisoned,
+    ValueClass::InfPoisoned,
+];
+
+/// A seeded f32 vector from one value class. Poisoned classes plant at
+/// least one payload (NaN or alternating ±inf) at a seeded position of
+/// every 16-element window, on top of normal data.
+pub fn fill_f32(rng: &mut Pcg, n: usize, class: ValueClass) -> Vec<f32> {
+    let mut v: Vec<f32> = match class {
+        ValueClass::SmallInt => (0..n).map(|_| rng.below(199) as f32 - 99.0).collect(),
+        ValueClass::Denormal => (0..n)
+            .map(|_| f32::MIN_POSITIVE * (rng.uniform() as f32) * 0.5)
+            .collect(),
+        ValueClass::Extreme => (0..n)
+            .map(|_| {
+                let mag = 10f32.powi(30 + rng.below(8) as i32 - 4);
+                if rng.chance(0.5) {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect(),
+        _ => (0..n).map(|_| rng.normal() as f32).collect(),
+    };
+    match class {
+        ValueClass::NanPoisoned => poison(rng, &mut v, f32::NAN, f32::NAN),
+        ValueClass::InfPoisoned => poison(rng, &mut v, f32::INFINITY, f32::NEG_INFINITY),
+        _ => {}
+    }
+    v
+}
+
+/// f64 twin of [`fill_f32`] (logit-row kernels).
+pub fn fill_f64(rng: &mut Pcg, n: usize, class: ValueClass) -> Vec<f64> {
+    let mut v: Vec<f64> = match class {
+        ValueClass::SmallInt => (0..n).map(|_| rng.below(199) as f64 - 99.0).collect(),
+        ValueClass::Denormal => (0..n).map(|_| f64::MIN_POSITIVE * rng.uniform() * 0.5).collect(),
+        ValueClass::Extreme => (0..n)
+            .map(|_| {
+                let mag = 10f64.powi(300 + rng.below(8) as i32 - 4);
+                if rng.chance(0.5) {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect(),
+        _ => (0..n).map(|_| rng.normal()).collect(),
+    };
+    match class {
+        ValueClass::NanPoisoned => poison(rng, &mut v, f64::NAN, f64::NAN),
+        ValueClass::InfPoisoned => poison(rng, &mut v, f64::INFINITY, f64::NEG_INFINITY),
+        _ => {}
+    }
+    v
+}
+
+fn poison<T: Copy>(rng: &mut Pcg, v: &mut [T], even: T, odd: T) {
+    for (w, window) in v.chunks_mut(16).enumerate() {
+        let at = rng.below(window.len());
+        window[at] = if w % 2 == 0 { even } else { odd };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_lens_cover_plus_minus_one() {
+        assert_eq!(boundary_lens(4), vec![1, 3, 4, 5, 7, 8, 9]);
+        assert_eq!(boundary_lens(1), vec![1, 2, 3]);
+        let k = boundary_lens(256);
+        assert!(k.contains(&255) && k.contains(&257) && k.contains(&511) && k.contains(&513));
+    }
+
+    #[test]
+    fn corpus_is_deterministic_per_seed() {
+        assert_eq!(random_gemm_shapes(9, 6), random_gemm_shapes(9, 6));
+        assert_ne!(random_gemm_shapes(9, 6), random_gemm_shapes(10, 6));
+        let mut a = Pcg::seeded(3);
+        let mut b = Pcg::seeded(3);
+        for class in VALUE_CLASSES {
+            let va = fill_f32(&mut a, 40, class);
+            let vb = fill_f32(&mut b, 40, class);
+            assert_eq!(va.len(), vb.len());
+            for (x, y) in va.iter().zip(&vb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{class:?}");
+            }
+        }
+        assert_eq!(noisy_lut(3, 3, 4, 7), noisy_lut(3, 3, 4, 7));
+        assert_ne!(noisy_lut(3, 3, 4, 7), noisy_lut(3, 3, 4, 8));
+    }
+
+    #[test]
+    fn shapes_never_degenerate() {
+        for (m, k, n) in ragged_gemm_shapes().into_iter().chain(random_gemm_shapes(1, 32)) {
+            assert!(m >= 1 && k >= 1 && n >= 1, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn bit_pairs_cover_two_by_two_and_the_u16_path() {
+        let pairs = bit_pairs();
+        assert!(pairs.contains(&(2, 2)), "the paper's 2-bit floor");
+        assert!(pairs.contains(&(4, 4)));
+        assert!(pairs.iter().any(|&(a, w)| a + w > 8), "u16 code path");
+        assert_eq!(pairs.len(), 10);
+    }
+
+    #[test]
+    fn poisoned_classes_actually_poison_and_luts_are_exact() {
+        let mut rng = Pcg::seeded(5);
+        let v = fill_f32(&mut rng, 64, ValueClass::NanPoisoned);
+        assert!(v.iter().any(|x| x.is_nan()));
+        let w = fill_f32(&mut rng, 64, ValueClass::InfPoisoned);
+        assert!(w.iter().any(|x| x.is_infinite() && *x > 0.0));
+        assert!(w.iter().any(|x| x.is_infinite() && *x < 0.0));
+        let d = fill_f32(&mut rng, 64, ValueClass::Denormal);
+        assert!(d.iter().all(|x| x.abs() < f32::MIN_POSITIVE));
+        let lut = exact_lut(2, 2);
+        assert_eq!(lut.len(), 16);
+        assert_eq!(lut[0b1111], 9, "3·3 at the packed corner");
+        assert!(trunc_lut(3, 3).iter().all(|v| v % 2 == 0));
+        for (e, n) in exact_lut(3, 3).iter().zip(noisy_lut(3, 3, 2, 1)) {
+            assert!((n - e).abs() <= 2 && n >= 0);
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! The kernel differential suite: every kernel pair (wide vs. scalar vs.
+//! naive) driven over the deterministic seed-swept corpus from
+//! `util::testgen`.
+//!
+//! Contract under test, per `kernel::KernelMode`:
+//!
+//! * `Exact` vs `Wide` — **bitwise equality** on every shape, bit-width
+//!   pair (down to 2×2), and hostile value class (denormals, extreme
+//!   magnitudes, NaN/±inf poison), because `Wide` only stripes order-free
+//!   reductions;
+//! * `Fast` vs its scalar lane-twin — **bitwise equality** (same arithmetic
+//!   DAG, different instruction schedule);
+//! * `Fast` vs `Exact` — pinned error bounds (the exact twin is the
+//!   oracle), with NaN/±inf poison required to stay loud in both;
+//! * the native backend end-to-end at `--jobs` 1 / 4 / auto — bit-identical
+//!   between `Exact` and `Wide` at every worker count.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use fames::kernel::lut::{self, LutView, QuantGrid, LUT_TILE_M, LUT_TILE_N};
+use fames::kernel::{self, gemm, wide, KernelMode, Scratch};
+use fames::rng::Pcg;
+use fames::runtime::backend::native::{
+    input_offset, template_inputs, write_synthetic_artifacts, NativeBackend, SyntheticSpec,
+};
+use fames::runtime::{ArtifactSet, Runtime};
+use fames::tensor::Tensor;
+use fames::util::testgen::{
+    self, bit_pairs, boundary_lens, fill_f32, fill_f64, ragged_gemm_shapes, random_gemm_shapes,
+    ValueClass, VALUE_CLASSES,
+};
+
+/// Guards the tests that flip the process-global kernel mode (this binary's
+/// tests run on a threaded harness; the global must not change under a
+/// concurrent reader). Kernel-level tests use `*_with_mode` and never need
+/// this.
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn assert_bits_f32(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: out[{i}] {x} vs {y}");
+    }
+}
+
+/// Error-bounded comparison for the `Fast` oracle checks: NaN must match
+/// NaN, infinities must match in sign, finite values must agree to a
+/// relative bound against the provided magnitude scale.
+fn assert_close(fast: f64, exact: f64, scale: f64, rel: f64, ctx: &str) {
+    if exact.is_nan() {
+        assert!(fast.is_nan(), "{ctx}: exact NaN but fast {fast}");
+        return;
+    }
+    if exact.is_infinite() {
+        assert!(
+            fast == exact || fast.is_nan(),
+            "{ctx}: exact {exact} but fast {fast} (inf may degrade to NaN under reassociation)"
+        );
+        return;
+    }
+    let tol = rel * (1.0 + exact.abs().max(scale));
+    assert!(
+        (fast - exact).abs() <= tol || fast.is_nan() && scale.is_nan(),
+        "{ctx}: |{fast} - {exact}| > {tol}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Exact vs Wide: bitwise, full corpus
+// ---------------------------------------------------------------------------
+
+/// The tentpole acceptance test: wide LUT GEMM is bit-identical to the
+/// scalar kernel AND the naive twin across every seed-swept shape, every
+/// bit-width pair down to 2×2 (u8-packed) and up through the u16 path, on
+/// every value class.
+#[test]
+fn lut_gemm_wide_scalar_naive_trichotomy_over_corpus() {
+    let scratch = Scratch::new();
+    let mut shapes = ragged_gemm_shapes();
+    shapes.extend(random_gemm_shapes(0xd1ff, 8));
+    for (a_bits, w_bits) in bit_pairs() {
+        let table = testgen::noisy_lut(a_bits, w_bits, 3, 0xfa3e);
+        let view = LutView { lut: &table, a_bits, w_bits };
+        let xq = QuantGrid::new(0.17, -0.6, a_bits);
+        let wq = QuantGrid::new(0.09, -0.2, w_bits);
+        let mut rng = Pcg::seeded(0x5eed ^ ((a_bits as u64) << 32 | w_bits as u64));
+        for &(m, kdim, n) in &shapes {
+            for class in [ValueClass::Normal, ValueClass::Denormal, ValueClass::NanPoisoned] {
+                let x = fill_f32(&mut rng, m * kdim, class);
+                let w = fill_f32(&mut rng, kdim * n, class);
+                let mut wide_out = vec![0f32; m * n];
+                let mut scalar_out = vec![-1f32; m * n];
+                let mut naive_out = vec![1f32; m * n];
+                lut::lut_gemm_with_mode(
+                    &x, &w, m, kdim, n, xq, wq, view, &scratch, &mut wide_out, KernelMode::Wide,
+                )
+                .unwrap();
+                lut::lut_gemm_with_mode(
+                    &x, &w, m, kdim, n, xq, wq, view, &scratch, &mut scalar_out, KernelMode::Exact,
+                )
+                .unwrap();
+                lut::lut_gemm_naive(&x, &w, m, kdim, n, xq, wq, view, &mut naive_out).unwrap();
+                let ctx = format!("bits=({a_bits},{w_bits}) m={m} k={kdim} n={n} {class:?}");
+                assert_bits_f32(&wide_out, &scalar_out, &format!("{ctx} wide-vs-scalar"));
+                assert_bits_f32(&scalar_out, &naive_out, &format!("{ctx} scalar-vs-naive"));
+            }
+        }
+    }
+}
+
+/// The wide dispatch counter must actually tick when the wide path runs —
+/// this is what the CI bench lane keys off.
+#[test]
+fn wide_dispatch_is_counted() {
+    let scratch = Scratch::new();
+    let table = testgen::trunc_lut(2, 2);
+    let view = LutView { lut: &table, a_bits: 2, w_bits: 2 };
+    let q = QuantGrid::new(0.25, 0.0, 2);
+    let x = vec![0.3f32; 6];
+    let w = vec![0.7f32; 6];
+    let mut out = vec![0f32; 9];
+    let before = kernel::counters::snapshot();
+    lut::lut_gemm_with_mode(&x, &w, 3, 2, 3, q, q, view, &scratch, &mut out, KernelMode::Wide)
+        .unwrap();
+    // delta-based with >=: other tests in this binary may bump the
+    // process-wide counters concurrently
+    let delta = kernel::counters::snapshot().since(&before);
+    assert!(delta.lut_gemm_wide >= 1, "wide path must bump its own counter: {delta:?}");
+    assert!(delta.lut_gemm >= delta.lut_gemm_wide, "family counter covers wide: {delta:?}");
+}
+
+/// Order-free reductions (sq_sum, logsumexp, argmax, xent_row): wide vs
+/// scalar bitwise over boundary lengths × every value class.
+#[test]
+fn order_free_reductions_wide_scalar_bitwise_over_classes() {
+    let mut rng = Pcg::seeded(0xcafe);
+    let mut lens = boundary_lens(wide::LANES);
+    lens.extend(boundary_lens(64));
+    lens.push(0);
+    for &len in &lens {
+        for class in VALUE_CLASSES {
+            let v32 = fill_f32(&mut rng, len, class);
+            assert_eq!(
+                lut::sq_sum_with_mode(&v32, KernelMode::Wide).to_bits(),
+                lut::sq_sum_with_mode(&v32, KernelMode::Exact).to_bits(),
+                "sq_sum len={len} {class:?}"
+            );
+            let row = fill_f64(&mut rng, len, class);
+            assert_eq!(
+                wide::logsumexp_wide(&row).to_bits(),
+                kernel::logsumexp(&row).to_bits(),
+                "logsumexp len={len} {class:?}"
+            );
+            assert_eq!(
+                wide::argmax_f64_wide(&row),
+                kernel::argmax_f64(&row),
+                "argmax len={len} {class:?}"
+            );
+            if !row.is_empty() {
+                let label = rng.below(row.len());
+                let (le, he) = gemm::xent_row_with_mode(&row, label, KernelMode::Exact);
+                let (lw, hw) = gemm::xent_row_with_mode(&row, label, KernelMode::Wide);
+                assert_eq!(le.to_bits(), lw.to_bits(), "xent len={len} {class:?}");
+                assert_eq!(he, hw, "xent hit len={len} {class:?}");
+            }
+        }
+    }
+}
+
+/// Exact/Wide share the scalar body for the f64-chain kernels — pin that
+/// (a silent wide substitution here would break the ascending-order
+/// contract).
+#[test]
+fn f64_chain_kernels_identical_in_exact_and_wide_modes() {
+    let mut rng = Pcg::seeded(0xabcd);
+    let table = testgen::noisy_lut(3, 3, 2, 9);
+    let view = LutView { lut: &table, a_bits: 3, w_bits: 3 };
+    for class in VALUE_CLASSES {
+        let d = 100;
+        let (s, nc) = (2usize, 3usize);
+        let w = fill_f32(&mut rng, nc * d, class);
+        let b = fill_f32(&mut rng, nc, class);
+        let x = fill_f32(&mut rng, s * d, class);
+        let mut ex = vec![0f64; s * nc];
+        let mut wi = vec![1f64; s * nc];
+        gemm::gemm_bias_with_mode(&w, &b, &x, d, nc, &mut ex, KernelMode::Exact);
+        gemm::gemm_bias_with_mode(&w, &b, &x, d, nc, &mut wi, KernelMode::Wide);
+        for (a, r) in ex.iter().zip(&wi) {
+            assert_eq!(a.to_bits(), r.to_bits(), "gemm_bias {class:?}");
+        }
+        let g = fill_f32(&mut rng, table.len(), class);
+        let h = fill_f32(&mut rng, table.len(), class);
+        let e = fill_f32(&mut rng, table.len(), class);
+        assert_eq!(
+            lut::penalty_with_mode(&g, &h, &e, KernelMode::Exact).to_bits(),
+            lut::penalty_with_mode(&g, &h, &e, KernelMode::Wide).to_bits(),
+            "penalty {class:?}"
+        );
+        assert_eq!(
+            lut::quad_form_with_mode(&h, &e, KernelMode::Exact).to_bits(),
+            lut::quad_form_with_mode(&h, &e, KernelMode::Wide).to_bits(),
+            "quad_form {class:?}"
+        );
+        assert_eq!(
+            lut::err_dot_with_mode(view, &g, KernelMode::Exact).unwrap().to_bits(),
+            lut::err_dot_with_mode(view, &g, KernelMode::Wide).unwrap().to_bits(),
+            "err_dot {class:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast: bitwise vs lane-twin, error-bounded vs Exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fast_kernels_bitwise_vs_twin_and_bounded_vs_exact() {
+    let mut rng = Pcg::seeded(0xfade);
+    let mut lens = boundary_lens(wide::LANES);
+    lens.extend([100, 257]);
+    for &d in &lens {
+        for class in [ValueClass::Normal, ValueClass::SmallInt, ValueClass::NanPoisoned] {
+            let (s, nc) = (2usize, 3usize);
+            let w = fill_f32(&mut rng, nc * d, class);
+            let b = fill_f32(&mut rng, nc, ValueClass::Normal);
+            let x = fill_f32(&mut rng, s * d, class);
+            let mut fast = vec![0f64; s * nc];
+            let mut twin = vec![1f64; s * nc];
+            let mut exact = vec![2f64; s * nc];
+            gemm::gemm_bias_with_mode(&w, &b, &x, d, nc, &mut fast, KernelMode::Fast);
+            wide::gemm_bias_fast_ref(&w, &b, &x, d, nc, &mut twin);
+            gemm::gemm_bias_with_mode(&w, &b, &x, d, nc, &mut exact, KernelMode::Exact);
+            for (i, (f, t)) in fast.iter().zip(&twin).enumerate() {
+                assert_eq!(f.to_bits(), t.to_bits(), "twin d={d} {class:?} out[{i}]");
+            }
+            for s_i in 0..s {
+                for i in 0..nc {
+                    // scale: the row's absolute-term mass bounds the
+                    // reassociation error of an 8-lane tree vs a chain
+                    let x_row = &x[s_i * d..(s_i + 1) * d];
+                    let mass: f64 = w[i * d..(i + 1) * d]
+                        .iter()
+                        .zip(x_row)
+                        .map(|(&wv, &xv)| (wv as f64 * xv as f64).abs())
+                        .sum();
+                    assert_close(
+                        fast[s_i * nc + i],
+                        exact[s_i * nc + i],
+                        mass,
+                        1e-12,
+                        &format!("gemm_bias fast d={d} {class:?}"),
+                    );
+                }
+            }
+            let g = fill_f32(&mut rng, d, class);
+            let h = fill_f32(&mut rng, d, ValueClass::Normal);
+            let e = fill_f32(&mut rng, d, ValueClass::SmallInt);
+            let p_fast = lut::penalty_with_mode(&g, &h, &e, KernelMode::Fast);
+            assert_eq!(p_fast.to_bits(), wide::penalty_fast_ref(&g, &h, &e).to_bits());
+            let p_exact = lut::penalty_with_mode(&g, &h, &e, KernelMode::Exact);
+            let p_mass: f64 = e
+                .iter()
+                .enumerate()
+                .map(|(i, &ev)| {
+                    let ev = ev as f64;
+                    (g[i] as f64 * ev).abs() + 0.5 * (h[i] as f64 * ev * ev).abs()
+                })
+                .sum();
+            assert_close(p_fast, p_exact, p_mass, 1e-12, &format!("penalty d={d} {class:?}"));
+            let q_fast = lut::quad_form_with_mode(&h, &e, KernelMode::Fast);
+            assert_eq!(q_fast.to_bits(), wide::quad_form_fast_ref(&h, &e).to_bits());
+            let q_exact = lut::quad_form_with_mode(&h, &e, KernelMode::Exact);
+            let q_mass: f64 =
+                h.iter().zip(&e).map(|(&hv, &rv)| (0.5 * hv as f64 * rv as f64 * rv as f64).abs()).sum();
+            assert_close(q_fast, q_exact, q_mass, 1e-12, &format!("quad_form d={d} {class:?}"));
+        }
+    }
+    // err_dot over real LUT lengths
+    for (a_bits, w_bits) in [(2u32, 2u32), (4, 4)] {
+        let table = testgen::noisy_lut(a_bits, w_bits, 3, 5);
+        let view = LutView { lut: &table, a_bits, w_bits };
+        for class in [ValueClass::Normal, ValueClass::NanPoisoned] {
+            let v = fill_f32(&mut rng, table.len(), class);
+            let f = lut::err_dot_with_mode(view, &v, KernelMode::Fast).unwrap();
+            assert_eq!(f.to_bits(), wide::err_dot_fast_ref(view, &v).unwrap().to_bits());
+            let ex = lut::err_dot_with_mode(view, &v, KernelMode::Exact).unwrap();
+            let mass: f64 = v
+                .iter()
+                .enumerate()
+                .map(|(i, &vi)| (vi as f64 * view.err_at(i) as f64).abs())
+                .sum();
+            assert_close(f, ex, mass, 1e-12, &format!("err_dot bits=({a_bits},{w_bits}) {class:?}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exhaustive tile-remainder sweeps at block-size ±1 (satellite: the ragged-
+// edge hazard class)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gemm_bias_remainders_at_k_block_boundaries() {
+    let mut rng = Pcg::seeded(0xb10c);
+    for d in boundary_lens(kernel::K_BLOCK) {
+        let (s, nc) = (2usize, 3usize);
+        let w: Vec<f32> = (0..nc * d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..nc).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..s * d).map(|_| rng.normal() as f32).collect();
+        let mut blocked = vec![0f64; s * nc];
+        let mut naive = vec![1f64; s * nc];
+        gemm::gemm_bias_with_mode(&w, &b, &x, d, nc, &mut blocked, KernelMode::Exact);
+        gemm::gemm_bias_naive(&w, &b, &x, d, nc, &mut naive);
+        for (i, (a, r)) in blocked.iter().zip(&naive).enumerate() {
+            assert_eq!(a.to_bits(), r.to_bits(), "d={d} out[{i}]");
+        }
+    }
+}
+
+#[test]
+fn lut_gemm_remainders_at_every_tile_boundary() {
+    let scratch = Scratch::new();
+    let table = testgen::trunc_lut(3, 3);
+    let view = LutView { lut: &table, a_bits: 3, w_bits: 3 };
+    let xq = QuantGrid::new(0.2, -0.5, 3);
+    let wq = QuantGrid::new(0.11, -0.3, 3);
+    let mut rng = Pcg::seeded(0x71de);
+    // full cross-product of m at LUT_TILE_M±1 × n at LUT_TILE_N±1, plus a
+    // lane-boundary sweep over kdim at LANES±1 — exhaustive where PR 4 only
+    // sampled
+    for &m in &boundary_lens(LUT_TILE_M) {
+        for &n in &boundary_lens(LUT_TILE_N) {
+            let kdim = 5;
+            let x: Vec<f32> = (0..m * kdim).map(|_| rng.normal() as f32 * 0.4).collect();
+            let w: Vec<f32> = (0..kdim * n).map(|_| rng.normal() as f32 * 0.4).collect();
+            let mut wide_out = vec![0f32; m * n];
+            let mut naive_out = vec![1f32; m * n];
+            lut::lut_gemm_with_mode(
+                &x, &w, m, kdim, n, xq, wq, view, &scratch, &mut wide_out, KernelMode::Wide,
+            )
+            .unwrap();
+            lut::lut_gemm_naive(&x, &w, m, kdim, n, xq, wq, view, &mut naive_out).unwrap();
+            assert_bits_f32(&wide_out, &naive_out, &format!("m={m} n={n} k={kdim}"));
+        }
+    }
+    for &kdim in &boundary_lens(wide::LANES) {
+        let (m, n) = (3usize, 2usize);
+        let x: Vec<f32> = (0..m * kdim).map(|_| rng.normal() as f32 * 0.4).collect();
+        let w: Vec<f32> = (0..kdim * n).map(|_| rng.normal() as f32 * 0.4).collect();
+        let mut wide_out = vec![0f32; m * n];
+        let mut scalar_out = vec![1f32; m * n];
+        lut::lut_gemm_with_mode(
+            &x, &w, m, kdim, n, xq, wq, view, &scratch, &mut wide_out, KernelMode::Wide,
+        )
+        .unwrap();
+        lut::lut_gemm_with_mode(
+            &x, &w, m, kdim, n, xq, wq, view, &scratch, &mut scalar_out, KernelMode::Exact,
+        )
+        .unwrap();
+        assert_bits_f32(&wide_out, &scalar_out, &format!("lane boundary k={kdim}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the native backend at jobs 1/4/auto × Exact/Wide
+// ---------------------------------------------------------------------------
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-kdiff-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    root
+}
+
+/// Backend outputs must be bit-identical across `--jobs` 1/4/auto AND
+/// across Exact/Wide (the production entry points dispatch on the global
+/// mode, so this also proves the default-Wide rollout cannot change
+/// results).
+#[test]
+fn native_backend_bit_identical_across_jobs_and_modes() {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let root = tmp_root("modes");
+    let spec = SyntheticSpec {
+        model: "diffnet".to_string(),
+        cfg: "w4a4".to_string(),
+        layer_bits: vec![(4, 4), (2, 2)],
+        num_classes: 10,
+        image_shape: [3, 7, 9],
+        train_batch: 17,
+        eval_batch: 33,
+    };
+    let dir = write_synthetic_artifacts(&root, &spec).unwrap();
+    let set = ArtifactSet::open(&dir).unwrap();
+    let m = &set.manifest;
+    let prior = kernel::kernel_mode();
+    for exe in ["fwd", "grad_e", "quad_e"] {
+        let mut inputs = template_inputs(m, exe).unwrap();
+        if let Ok(at) = input_offset(m, exe, "e_list") {
+            inputs[at] = Tensor::full(&[m.layers[0].e_len()], 3.0);
+        }
+        let path = set.exe_path(exe).unwrap();
+        // reference: jobs=1, Exact
+        kernel::set_kernel_mode(KernelMode::Exact);
+        let rt1 = Arc::new(Runtime::with_backend(Box::new(NativeBackend::new(3).with_jobs(1))));
+        let want = rt1.load(&path).unwrap().run(&inputs).unwrap();
+        for mode in [KernelMode::Exact, KernelMode::Wide] {
+            kernel::set_kernel_mode(mode);
+            for jobs in [1usize, 4, 0] {
+                let rt = Arc::new(Runtime::with_backend(Box::new(
+                    NativeBackend::new(3).with_jobs(jobs),
+                )));
+                let out = rt.load(&path).unwrap().run(&inputs).unwrap();
+                assert_eq!(out.len(), want.len(), "{exe} jobs={jobs} {mode:?}");
+                for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                    assert_eq!(a, b, "{exe} jobs={jobs} {mode:?} output {i}");
+                }
+            }
+        }
+    }
+    kernel::set_kernel_mode(prior);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The env knob must parse every documented value (the CI kernel-verify
+/// lane sets it).
+#[test]
+fn kernel_mode_env_values_parse() {
+    for (s, want) in [
+        ("exact", KernelMode::Exact),
+        ("wide", KernelMode::Wide),
+        ("fast", KernelMode::Fast),
+        ("WIDE", KernelMode::Wide),
+    ] {
+        assert_eq!(KernelMode::parse(s), Some(want));
+    }
+    assert_eq!(KernelMode::parse(""), None);
+}

@@ -13,6 +13,7 @@ use std::sync::Arc;
 use fames::appmul::generate_library;
 use fames::kernel::{self, counters, gemm, lut, Scratch};
 use fames::rng::Pcg;
+use fames::util::testgen::{boundary_lens, ragged_gemm_shapes};
 use fames::runtime::backend::native::{
     input_offset, template_inputs, write_synthetic_artifacts, NativeBackend, SyntheticSpec,
 };
@@ -47,7 +48,11 @@ fn odd_spec() -> SyntheticSpec {
 #[test]
 fn gemm_blocked_matches_naive_on_odd_shapes() {
     let mut rng = Pcg::seeded(0xbeef);
-    for (samples, nc, d) in [(17, 10, 189), (1, 1, 1), (3, 7, 255), (2, 5, 257), (33, 10, 512)] {
+    // the shared corpus supplies the k-block boundary sweep (±1 at K_BLOCK
+    // and 2·K_BLOCK) on top of the historical odd shapes
+    let mut cases = vec![(17usize, 10usize, 189usize), (1, 1, 1), (33, 10, 512)];
+    cases.extend(boundary_lens(kernel::K_BLOCK).into_iter().map(|d| (3usize, 7usize, d)));
+    for (samples, nc, d) in cases {
         let w: Vec<f32> = (0..nc * d).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..nc).map(|_| rng.normal() as f32).collect();
         let x: Vec<f32> = (0..samples * d).map(|_| rng.normal() as f32).collect();
@@ -73,8 +78,10 @@ fn lut_gemm_blocked_matches_naive_on_real_luts() {
         let view = am.lut_view();
         let xq = lut::QuantGrid::new(0.09, -0.1, am.a_bits);
         let wq = lut::QuantGrid::new(0.06, -0.3, am.w_bits);
-        // odd remainders vs LUT_TILE_M (32) and LUT_TILE_N (64)
-        for (m, kdim, n) in [(33, 45, 65), (5, 189, 7), (32, 64, 64)] {
+        // the shared ragged corpus: odd remainders vs LUT_TILE_M (32),
+        // LUT_TILE_N (64) and the lane width, same shapes as the
+        // differential suite
+        for (m, kdim, n) in ragged_gemm_shapes() {
             let x: Vec<f32> = (0..m * kdim).map(|_| rng.normal() as f32 * 0.5).collect();
             let w: Vec<f32> = (0..kdim * n).map(|_| rng.normal() as f32 * 0.3).collect();
             let mut blocked = vec![0f32; m * n];

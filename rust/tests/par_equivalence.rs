@@ -21,6 +21,7 @@ use fames::runtime::Runtime;
 use fames::sensitivity::{Estimator, HessianMode};
 use fames::tensor::Tensor;
 use fames::util::par;
+use fames::util::testgen::{self, ragged_gemm_shapes};
 
 fn tmp_root(tag: &str) -> PathBuf {
     let root = std::env::temp_dir().join(format!("fames-pareq-{}-{tag}", std::process::id()));
@@ -200,6 +201,50 @@ fn evaluate_with_matches_set_selection_evaluate() {
     // wrong arity is rejected
     assert!(s.evaluate_with(&[], 1).is_err());
     let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The wide LUT GEMM over the shared `testgen` corpus, fanned out over
+/// `par_map` workers sharing one scratch arena: results must be
+/// bit-identical at every worker count (and identical to the serial run) —
+/// the kernel-mode seam must not interact with the parallel contract.
+#[test]
+fn lut_gemm_corpus_is_bit_identical_across_par_workers() {
+    use fames::kernel::{lut, KernelMode, Scratch};
+    use fames::rng::Pcg;
+    let table = testgen::trunc_lut(4, 4);
+    let view = lut::LutView { lut: &table, a_bits: 4, w_bits: 4 };
+    let xq = lut::QuantGrid::new(0.1, -0.4, 4);
+    let wq = lut::QuantGrid::new(0.07, -0.1, 4);
+    let mut rng = Pcg::seeded(0x9a9);
+    let cases: Vec<(usize, usize, usize, Vec<f32>, Vec<f32>)> = ragged_gemm_shapes()
+        .into_iter()
+        .map(|(m, k, n)| {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.5).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.3).collect();
+            (m, k, n, x, w)
+        })
+        .collect();
+    let run = |jobs: usize, mode: KernelMode| -> Vec<Vec<f32>> {
+        let scratch = Scratch::new();
+        par::par_map(&cases, jobs, |_, (m, k, n, x, w)| {
+            let mut out = vec![0f32; m * n];
+            lut::lut_gemm_with_mode(x, w, *m, *k, *n, xq, wq, view, &scratch, &mut out, mode)
+                .unwrap();
+            out
+        })
+    };
+    let serial = run(1, KernelMode::Wide);
+    for jobs in [4usize, 0] {
+        for mode in [KernelMode::Exact, KernelMode::Wide] {
+            let outs = run(jobs, mode);
+            assert_eq!(outs.len(), serial.len());
+            for (c, (a, b)) in outs.iter().zip(&serial).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "case {c} out[{i}] jobs={jobs} {mode:?}");
+                }
+            }
+        }
+    }
 }
 
 /// `fames bench --json --quick` snapshot: stable shape, all stages present,
