@@ -704,6 +704,9 @@ pub struct ServeBench {
     pub levels: Vec<ServeLevel>,
     /// Overload profile against deliberately tiny admission caps.
     pub saturation: Option<SaturationBench>,
+    /// Cluster-mode profile: routed aggregate throughput at 1/2/4 shards,
+    /// router forwarding overhead, cold-vs-handoff shard spin-up.
+    pub fleet: Option<FleetBench>,
 }
 
 /// One concurrency level of the saturation bench: what happened to every
@@ -830,7 +833,9 @@ pub fn run_serve_bench_full(cfg: &BenchConfig) -> Result<ServeBench> {
     // same artifact root, so the saturation server binds warm
     let saturation = Some(run_saturation_bench(&base, cfg)?);
     let _ = std::fs::remove_dir_all(&root);
-    Ok(ServeBench { startup_cold_secs, startup_warm_secs, levels, saturation })
+    // the fleet section is expensive; `fames bench` attaches it explicitly
+    // via `run_fleet_bench` so embedders of this function don't pay for it
+    Ok(ServeBench { startup_cold_secs, startup_warm_secs, levels, saturation, fleet: None })
 }
 
 /// Flood one warm daemon with deliberately tiny admission caps at rising
@@ -939,6 +944,313 @@ pub fn run_saturation_bench(base: &FamesConfig, cfg: &BenchConfig) -> Result<Sat
         .map_err(|_| anyhow::anyhow!("saturation bench: daemon panicked"))?
         .context("saturation bench: daemon run")?;
     Ok(SaturationBench { max_conns, max_pending, levels })
+}
+
+// ---- sharded fleet bench (cluster mode's payoff) ----
+
+/// Aggregate routed throughput at one fleet size.
+#[derive(Clone, Debug)]
+pub struct FleetLevel {
+    pub shards: usize,
+    /// Requests fired through the router (clients × per-client requests).
+    pub requests: usize,
+    /// Answered `ok:true` end to end.
+    pub ok: usize,
+    /// Explicitly shed somewhere on the path (router or shard).
+    pub shed: usize,
+    /// Successful requests per second of wall-clock at this fleet size.
+    pub rps: f64,
+}
+
+/// Cluster-mode snapshot (`fames bench`'s `serve.fleet` section):
+/// aggregate req/s through the consistent-hash router at 1/2/4 shards
+/// against a single-node baseline, per-request router overhead
+/// (routed-vs-direct p50/p99), and cold-vs-handoff shard spin-up.
+#[derive(Clone, Debug)]
+pub struct FleetBench {
+    /// Distinct `<model>/<cfg>` routing keys in play.
+    pub keys: usize,
+    /// The same load against one daemon hosting every key, no router —
+    /// the scaling baseline.
+    pub single_rps: f64,
+    pub levels: Vec<FleetLevel>,
+    /// Per-request round trip through the router at 1 shard...
+    pub router_p50_ms: f64,
+    pub router_p99_ms: f64,
+    /// ...and direct to that shard for the same key: the difference is
+    /// the router's forwarding overhead.
+    pub direct_p50_ms: f64,
+    pub direct_p99_ms: f64,
+    /// Fresh-root `Server::bind` with no peers: trains from scratch.
+    pub spinup_cold_secs: f64,
+    /// Fresh-root bind with `peers=` at a warm shard — the warm-handoff
+    /// path (artifacts pulled over the wire instead of recomputed).
+    pub spinup_handoff_secs: f64,
+    /// The handoff bind really did pull trained parameters from the peer.
+    pub handoff_params_from_store: bool,
+    /// ...and hit on the peer's library artifact.
+    pub handoff_library_hit: bool,
+}
+
+/// Measure cluster mode end to end: real shard daemons on loopback ports,
+/// a real router in front, eight `<model>/<cfg>` routing keys spread by
+/// the same [`crate::serve::Ring`] the router uses. Shards share one
+/// artifact root (every bind after the first warms from the caches — the
+/// restart path), while the spin-up probes get fresh roots so cold really
+/// trains and handoff really fetches from a peer.
+pub fn run_fleet_bench(cfg: &BenchConfig) -> Result<FleetBench> {
+    use crate::serve::{Client, Outcome, Ring, RouterConfig, ServeConfig, Server};
+    use std::net::TcpListener;
+
+    let root = std::env::temp_dir().join(format!("fames-bench-fleet-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+    let mut keys: Vec<String> = Vec::new();
+    for model in ["resnet8", "resnet14"] {
+        for mcfg in ["w8a8", "w4a4", "w3a3", "w2a2"] {
+            write_synthetic_artifacts(&root, &SyntheticSpec::small(model, mcfg))?;
+            keys.push(format!("{model}/{mcfg}"));
+        }
+    }
+    let base = FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: if cfg.quick { 60 } else { 200 },
+        train_lr: 0.02,
+        jobs: cfg.jobs,
+        ..FamesConfig::default()
+    };
+    let (clients, per_client) = if cfg.quick { (8usize, 4usize) } else { (16, 8) };
+
+    // load generator: `clients` threads, each pipelining `per_client`
+    // evaluates round-robin across the routing keys
+    let flood = |addr: &str| -> Result<(usize, usize, f64)> {
+        let t = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.to_string();
+                let keys = keys.clone();
+                std::thread::spawn(move || -> (usize, usize) {
+                    let Ok(mut cl) = Client::connect(&addr) else { return (0, 0) };
+                    let reqs: Vec<Json> = (0..per_client)
+                        .map(|r| {
+                            Json::obj()
+                                .with("id", (c * 10_000 + r) as i64)
+                                .with("op", "evaluate")
+                                .with("model", keys[(c + r) % keys.len()].as_str())
+                                .with("batches", 1usize)
+                        })
+                        .collect();
+                    let outs = cl.call_many_outcomes(&reqs);
+                    let ok = outs.iter().filter(|o| matches!(o, Outcome::Ok(_))).count();
+                    let shed = outs.iter().filter(|o| o.is_shed()).count();
+                    (ok, shed)
+                })
+            })
+            .collect();
+        let (mut ok, mut shed) = (0usize, 0usize);
+        for h in handles {
+            let (o, s) =
+                h.join().map_err(|_| anyhow::anyhow!("fleet bench: client thread panicked"))?;
+            ok += o;
+            shed += s;
+        }
+        Ok((ok, shed, ok as f64 / t.elapsed().as_secs_f64().max(1e-9)))
+    };
+    // per-request round-trip latency percentiles against one endpoint
+    let latency = |addr: &str, key: &str, n: usize| -> Result<(f64, f64)> {
+        let mut cl = Client::connect(addr)?;
+        let mut lats = Vec::with_capacity(n);
+        for i in 0..n {
+            let req = Json::obj()
+                .with("id", 500_000 + i as i64)
+                .with("op", "evaluate")
+                .with("model", key)
+                .with("batches", 1usize);
+            let t0 = Instant::now();
+            let resp = cl.call(&req)?;
+            Client::expect_ok(&resp)?;
+            lats.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let pct = |q: f64| lats[((lats.len() - 1) as f64 * q).round() as usize];
+        Ok((pct(0.50), pct(0.99)))
+    };
+
+    // single-node baseline: one daemon hosts every key, no router. The
+    // first bind trains both models; every later bind in this bench warms
+    // from the shared root's caches.
+    let single_rps = {
+        let scfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            models: keys.clone(),
+            max_batch: 16,
+            base: base.clone(),
+            ..ServeConfig::default()
+        };
+        let server = Server::bind(&scfg).context("fleet bench: single-node bind")?;
+        let addr = server.local_addr().to_string();
+        let daemon = std::thread::spawn(move || server.run());
+        let (_, _, cold) = flood(&addr)?;
+        let (_, _, warm) = flood(&addr)?;
+        let mut cl = Client::connect(&addr)?;
+        cl.shutdown(-9)?;
+        drop(cl);
+        daemon
+            .join()
+            .map_err(|_| anyhow::anyhow!("fleet bench: single-node daemon panicked"))?
+            .context("fleet bench: single-node run")?;
+        cold.max(warm)
+    };
+
+    let lat_reps = if cfg.quick { 20 } else { 60 };
+    let mut levels = Vec::new();
+    let (mut router_p50_ms, mut router_p99_ms) = (0.0, 0.0);
+    let (mut direct_p50_ms, mut direct_p99_ms) = (0.0, 0.0);
+    for &nshards in &[1usize, 2, 4] {
+        // pre-bind every shard listener so the ring geometry (which needs
+        // real addresses) is known before any daemon warms
+        let mut listeners = Vec::new();
+        let mut addrs: Vec<String> = Vec::new();
+        for _ in 0..nshards {
+            let l = TcpListener::bind("127.0.0.1:0").context("fleet bench: shard bind")?;
+            addrs.push(l.local_addr()?.to_string());
+            listeners.push(l);
+        }
+        let ring = Ring::new(addrs.clone());
+        let mut shard_handles = Vec::new();
+        for (i, l) in listeners.into_iter().enumerate() {
+            // host exactly the keys the ring assigns here (an idle shard
+            // still hosts one key so bind has a model to warm)
+            let mut mine: Vec<String> =
+                keys.iter().filter(|k| ring.route(k) == i).cloned().collect();
+            if mine.is_empty() {
+                mine.push(keys[0].clone());
+            }
+            let scfg = ServeConfig {
+                addr: addrs[i].clone(),
+                models: mine,
+                max_batch: 16,
+                base: base.clone(),
+                ..ServeConfig::default()
+            };
+            let server = Server::bind_on(&scfg, l, None).context("fleet bench: shard warm")?;
+            shard_handles.push(std::thread::spawn(move || server.run()));
+        }
+        let rcfg = RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: addrs.clone(),
+            ..RouterConfig::default()
+        };
+        let router = crate::serve::Router::bind(&rcfg).context("fleet bench: router bind")?;
+        let raddr = router.local_addr().to_string();
+        let router_handle = std::thread::spawn(move || router.run());
+
+        let _ = flood(&raddr)?; // warm the pools and per-process caches
+        let (ok, shed, rps) = flood(&raddr)?;
+        levels.push(FleetLevel { shards: nshards, requests: clients * per_client, ok, shed, rps });
+        if nshards == 1 {
+            // router overhead: same key, routed vs direct to its shard
+            let (p50, p99) = latency(&raddr, &keys[0], lat_reps)?;
+            (router_p50_ms, router_p99_ms) = (p50, p99);
+            let (p50, p99) = latency(&addrs[0], &keys[0], lat_reps)?;
+            (direct_p50_ms, direct_p99_ms) = (p50, p99);
+        }
+
+        // stop the router first (it holds pooled shard connections), then
+        // every shard directly
+        let mut cl = Client::connect(&raddr)?;
+        cl.shutdown(-1)?;
+        drop(cl);
+        router_handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("fleet bench: router panicked"))?
+            .context("fleet bench: router run")?;
+        for (a, h) in addrs.iter().zip(shard_handles) {
+            let mut cl = Client::connect(a)?;
+            cl.shutdown(-1)?;
+            drop(cl);
+            h.join()
+                .map_err(|_| anyhow::anyhow!("fleet bench: shard panicked"))?
+                .with_context(|| format!("fleet bench: shard {a} run"))?;
+        }
+    }
+
+    // spin-up: a replacement shard warming from scratch vs through the
+    // handoff path. The peer serves `artifact_get` from the shared root.
+    let peer_cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec![keys[0].clone()],
+        max_batch: 16,
+        base: base.clone(),
+        ..ServeConfig::default()
+    };
+    let peer = Server::bind(&peer_cfg).context("fleet bench: peer bind")?;
+    let peer_addr = peer.local_addr().to_string();
+    let peer_handle = std::thread::spawn(move || peer.run());
+    let spin = |peers: Vec<String>, tag: &str| -> Result<(f64, bool, bool)> {
+        let sroot = std::env::temp_dir()
+            .join(format!("fames-bench-fleet-spin-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&sroot);
+        std::fs::create_dir_all(&sroot)?;
+        write_synthetic_artifacts(&sroot, &SyntheticSpec::small("resnet8", "w8a8"))?;
+        let bcfg = FamesConfig {
+            artifact_root: sroot.to_string_lossy().into_owned(),
+            remote_peers: peers,
+            ..base.clone()
+        };
+        let scfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            models: vec![keys[0].clone()],
+            max_batch: 16,
+            base: bcfg,
+            ..ServeConfig::default()
+        };
+        let t0 = Instant::now();
+        let server = Server::bind(&scfg).with_context(|| format!("fleet bench: {tag} bind"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        let entry = server
+            .registry()
+            .entries()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("fleet bench: {tag} bind warmed no model"))?;
+        let params_store = entry.params_source == pipeline::ParamsSource::Store;
+        let lib_hit = entry.lib_hit == Some(true);
+        let addr = server.local_addr().to_string();
+        let h = std::thread::spawn(move || server.run());
+        let mut cl = Client::connect(&addr)?;
+        cl.shutdown(-2)?;
+        drop(cl);
+        h.join()
+            .map_err(|_| anyhow::anyhow!("fleet bench: spin-up daemon panicked"))?
+            .with_context(|| format!("fleet bench: {tag} run"))?;
+        let _ = std::fs::remove_dir_all(&sroot);
+        Ok((secs, params_store, lib_hit))
+    };
+    let (spinup_cold_secs, _, _) = spin(Vec::new(), "cold")?;
+    let (spinup_handoff_secs, handoff_params_from_store, handoff_library_hit) =
+        spin(vec![peer_addr.clone()], "handoff")?;
+
+    let mut cl = Client::connect(&peer_addr)?;
+    cl.shutdown(-3)?;
+    drop(cl);
+    peer_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("fleet bench: peer panicked"))?
+        .context("fleet bench: peer run")?;
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(FleetBench {
+        keys: keys.len(),
+        single_rps,
+        levels,
+        router_p50_ms,
+        router_p99_ms,
+        direct_p50_ms,
+        direct_p99_ms,
+        spinup_cold_secs,
+        spinup_handoff_secs,
+        handoff_params_from_store,
+        handoff_library_hit,
+    })
 }
 
 // ---- snapshot JSON + cross-PR comparison ----
@@ -1067,8 +1379,44 @@ pub fn snapshot_json_full(
                     .with("levels", sarr),
             );
         }
+        if let Some(f) = &sb.fleet {
+            let mut farr = Json::arr();
+            for l in &f.levels {
+                farr.push(
+                    Json::obj()
+                        .with("shards", l.shards)
+                        .with("requests", l.requests)
+                        .with("ok", l.ok)
+                        .with("shed", l.shed)
+                        .with("rps", l.rps),
+                );
+            }
+            serve_doc.set(
+                "fleet",
+                Json::obj()
+                    .with("keys", f.keys)
+                    .with("single_rps", f.single_rps)
+                    .with("levels", farr)
+                    .with("router_p50_ms", f.router_p50_ms)
+                    .with("router_p99_ms", f.router_p99_ms)
+                    .with("direct_p50_ms", f.direct_p50_ms)
+                    .with("direct_p99_ms", f.direct_p99_ms)
+                    .with("spinup_cold_secs", f.spinup_cold_secs)
+                    .with("spinup_handoff_secs", f.spinup_handoff_secs)
+                    .with("handoff_params_from_store", f.handoff_params_from_store)
+                    .with("handoff_library_hit", f.handoff_library_hit),
+            );
+        }
+        let has_fleet = sb.fleet.is_some();
         doc.set("serve", serve_doc);
         add_protocol(&mut doc, "serve", "two-round wall-clock cold-vs-warm".to_string());
+        if has_fleet {
+            add_protocol(
+                &mut doc,
+                "fleet",
+                "routed aggregate wall-clock at 1/2/4 shards vs single node".to_string(),
+            );
+        }
     }
     if let Some(ks) = kernels {
         let mut arr = Json::arr();
@@ -1209,6 +1557,20 @@ pub fn compare_snapshots(old: &Json, new: &Json) -> Result<Vec<StageDelta>> {
             });
         }
     }
+    // fleet throughput gates likewise: secs/request = 1/rps per shard
+    // count, so a cluster-mode slowdown shows up as a stage regression
+    let old_fleet = fleet_times(old);
+    for (shards, new_secs) in fleet_times(new) {
+        if let Some((_, old_secs)) = old_fleet.iter().find(|(s, _)| *s == shards) {
+            deltas.push(StageDelta {
+                name: format!("serve.fleet.s{shards}"),
+                old_secs: *old_secs,
+                new_secs,
+                old_spread: 0.0,
+                new_spread: 0.0,
+            });
+        }
+    }
     ensure!(!deltas.is_empty(), "snapshots share no stages");
     Ok(deltas)
 }
@@ -1231,6 +1593,29 @@ fn saturation_times(doc: &Json) -> Vec<(usize, f64)> {
         let Ok(rps) = l.get("rps").and_then(|j| j.as_f64()) else { continue };
         if rps > 0.0 {
             out.push((clients, 1.0 / rps));
+        }
+    }
+    out
+}
+
+/// `(shards, secs-per-successful-request)` rows of a snapshot's
+/// `serve.fleet` section; empty when the section is absent (pre-cluster
+/// snapshots compare without the fleet gates).
+fn fleet_times(doc: &Json) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let Some(levels) = doc
+        .opt("serve")
+        .and_then(|s| s.opt("fleet"))
+        .and_then(|s| s.opt("levels"))
+        .and_then(|l| l.as_arr().ok())
+    else {
+        return out;
+    };
+    for l in levels {
+        let Ok(shards) = l.get("shards").and_then(|j| j.as_usize()) else { continue };
+        let Ok(rps) = l.get("rps").and_then(|j| j.as_f64()) else { continue };
+        if rps > 0.0 {
+            out.push((shards, 1.0 / rps));
         }
     }
     out
@@ -1396,6 +1781,7 @@ mod tests {
                     p99_ms: 40.0,
                 }],
             }),
+            fleet: Some(test_fleet(300.0)),
         };
         let j = snapshot_json_full(&stages, None, None, Some(&sb), &cfg);
         let s = j.get("serve").unwrap();
@@ -1409,8 +1795,54 @@ mod tests {
         let sl = &sat.get("levels").unwrap().as_arr().unwrap()[0];
         assert_eq!(sl.get("shed").unwrap().as_usize().unwrap(), 200);
         assert_eq!(sl.get("rps").unwrap().as_f64().unwrap(), 150.0);
+        // the fleet section rides inside serve, fully shaped
+        let fleet = s.get("fleet").unwrap();
+        assert_eq!(fleet.get("keys").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(fleet.get("single_rps").unwrap().as_f64().unwrap(), 100.0);
+        let fl = &fleet.get("levels").unwrap().as_arr().unwrap()[0];
+        assert_eq!(fl.get("shards").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(fl.get("rps").unwrap().as_f64().unwrap(), 300.0);
+        assert!(fleet.get("handoff_params_from_store").unwrap().as_bool().unwrap());
+        assert!(
+            fleet.get("spinup_handoff_secs").unwrap().as_f64().unwrap()
+                < fleet.get("spinup_cold_secs").unwrap().as_f64().unwrap()
+        );
+        assert!(j.get("protocol").unwrap().opt("fleet").is_some());
         // the plain snapshot has no serve section
         assert!(snapshot_json(&stages, &cfg).opt("serve").is_none());
+    }
+
+    #[test]
+    fn compare_covers_fleet_levels_and_tolerates_their_absence() {
+        let mk = |rps: f64| {
+            let stages = vec![StageResult::flat("library_generation", 1.0, 0.5)];
+            let sb = ServeBench {
+                startup_cold_secs: 1.0,
+                startup_warm_secs: 0.5,
+                levels: vec![],
+                saturation: None,
+                fleet: Some(test_fleet(rps)),
+            };
+            snapshot_json_full(&stages, None, None, Some(&sb), &BenchConfig { jobs: 1, quick: true })
+        };
+        let old = mk(150.0);
+        let new = mk(300.0); // twice the routed throughput
+        let deltas = compare_snapshots(&old, &new).unwrap();
+        let fl = deltas.iter().find(|d| d.name == "serve.fleet.s4").expect("fleet delta");
+        assert!((fl.speedup() - 2.0).abs() < 1e-9, "1/rps halved → 2× speedup");
+        assert!(!fl.is_regression());
+        // a fleet slowdown past tolerance is a regression like any stage
+        let slower = mk(100.0);
+        let deltas = compare_snapshots(&old, &slower).unwrap();
+        let fl = deltas.iter().find(|d| d.name == "serve.fleet.s4").unwrap();
+        assert!(fl.is_regression());
+        // snapshots without the section still compare on stages alone
+        let plain = snapshot_json(
+            &[StageResult::flat("library_generation", 1.0, 0.5)],
+            &BenchConfig { jobs: 1, quick: true },
+        );
+        let deltas = compare_snapshots(&plain, &new).unwrap();
+        assert!(deltas.iter().all(|d| !d.name.starts_with("serve.fleet")));
     }
 
     #[test]
@@ -1436,6 +1868,7 @@ mod tests {
                         p99_ms: 2.0,
                     }],
                 }),
+                fleet: None,
             };
             snapshot_json_full(&stages, None, None, Some(&sb), &BenchConfig { jobs: 1, quick: true })
         };
@@ -1475,6 +1908,22 @@ mod tests {
             assert!(k.kernel.reps >= 3, "{}: median protocol needs ≥ 3 reps", k.name);
             assert!(k.bytes_per_run > 0.0 && k.mults_per_run > 0.0, "{}", k.name);
             assert!(k.gb_per_sec().is_finite() && k.mults_per_sec().is_finite(), "{}", k.name);
+        }
+    }
+
+    fn test_fleet(rps: f64) -> FleetBench {
+        FleetBench {
+            keys: 8,
+            single_rps: 100.0,
+            levels: vec![FleetLevel { shards: 4, requests: 128, ok: 128, shed: 0, rps }],
+            router_p50_ms: 1.5,
+            router_p99_ms: 6.0,
+            direct_p50_ms: 1.0,
+            direct_p99_ms: 4.0,
+            spinup_cold_secs: 3.0,
+            spinup_handoff_secs: 0.4,
+            handoff_params_from_store: true,
+            handoff_library_hit: true,
         }
     }
 

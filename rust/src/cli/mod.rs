@@ -50,9 +50,11 @@ COMMANDS
                 regression verdict widens with each stage's recorded
                 dispersion, so honest medians work as baselines)
   cache        artifact-store maintenance: cache ls | stat | gc
-               (honors artifacts=, --cache-dir; gc removes every entry)
+               (honors artifacts=, --cache-dir; ls kind=NAME filters to
+                one artifact kind; gc removes every entry)
   serve        long-running evaluation daemon: newline-delimited JSON over
-               TCP (ops: evaluate | energy | select | status | shutdown)
+               TCP (ops: evaluate | energy | select | artifact_get |
+               artifact_put | status | shutdown)
                plus an optional HTTP/1.1 gateway onto the same engine
                (addr=127.0.0.1:4271  http=127.0.0.1:8471
                 models=<model>/<cfg>[,...]  max_batch=16
@@ -62,6 +64,12 @@ COMMANDS
                 waves and answers are bit-identical to direct Session
                 calls at every jobs=; over capacity the daemon sheds
                 explicitly — \"shed\":true lines / HTTP 503 + Retry-After)
+               router mode: route=host:port[,...] turns the process into
+               a consistent-hash router over those shard daemons — one
+               NDJSON + HTTP endpoint, requests forwarded by <model>/<cfg>
+               with per-shard connection pools (pool=16), failover to ring
+               successors when a shard dies, and end-to-end shed semantics
+               (connect_timeout_ms=500 io_timeout_ms=10000 tune probing)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
                fig5c | all   (writes results/<id>.csv)
   help         this text
@@ -75,6 +83,10 @@ COMMON KEYS
                          (0 = auto-detect; outputs are identical either way)
   --cache-dir=PATH       artifact-store location (default artifacts/cache)
   --no-cache             disable the artifact store (recompute everything)
+  peers=host:port[,...]  fleet peers consulted by the store's remote
+                         read-through tier on local misses (warm handoff:
+                         a fresh shard pulls calibrated artifacts and
+                         trained parameters instead of recomputing)
 
 ENVIRONMENT
   FAMES_BACKEND=native|pjrt   execution backend (default native; pjrt needs
@@ -353,7 +365,8 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
     let stages = crate::bench::run_stages(&bcfg)?;
     let cache = crate::bench::run_cache_bench(&bcfg)?;
     let kernels = crate::bench::run_kernel_bench(&bcfg)?;
-    let serve = crate::bench::run_serve_bench_full(&bcfg)?;
+    let mut serve = crate::bench::run_serve_bench_full(&bcfg)?;
+    serve.fleet = Some(crate::bench::run_fleet_bench(&bcfg).context("fleet bench")?);
     let doc = crate::bench::snapshot_json_full(
         &stages,
         Some(&cache),
@@ -467,6 +480,34 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             }
             at.print();
         }
+        if let Some(f) = &serve.fleet {
+            let mut ft = Table::new(
+                format!(
+                    "sharded fleet ({} keys; router p50 {:.1}ms vs direct {:.1}ms; \
+                     spin-up cold {} / handoff {})",
+                    f.keys,
+                    f.router_p50_ms,
+                    f.direct_p50_ms,
+                    crate::util::fmt_secs(f.spinup_cold_secs),
+                    crate::util::fmt_secs(f.spinup_handoff_secs)
+                ),
+                &["shards", "requests", "ok", "shed", "req/s", "vs single"],
+            );
+            for l in &f.levels {
+                ft.row(vec![
+                    l.shards.to_string(),
+                    l.requests.to_string(),
+                    l.ok.to_string(),
+                    l.shed.to_string(),
+                    format!("{:.1}", l.rps),
+                    format!(
+                        "{:.2}×",
+                        if f.single_rps > 0.0 { l.rps / f.single_rps } else { 0.0 }
+                    ),
+                ]);
+            }
+            ft.print();
+        }
     }
     Ok(0)
 }
@@ -482,6 +523,11 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
     let mut max_line = defaults.max_line;
     let mut write_timeout_ms = defaults.write_timeout_ms;
     let mut access_log = false;
+    let router_defaults = crate::serve::RouterConfig::default();
+    let mut route: Option<Vec<String>> = None;
+    let mut pool_per_shard = router_defaults.pool_per_shard;
+    let mut connect_timeout_ms = router_defaults.connect_timeout_ms;
+    let mut io_timeout_ms = router_defaults.io_timeout_ms;
     let mut kv = Vec::new();
     for a in args {
         if a == "--http-log" || a == "http_log" {
@@ -491,6 +537,22 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
         match a.strip_prefix("--").unwrap_or(a.as_str()).split_once('=') {
             Some(("addr", v)) => addr = v.to_string(),
             Some(("http", v)) => http_addr = Some(v.to_string()),
+            Some(("route", v)) => {
+                route = Some(
+                    v.split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .map(str::to_string)
+                        .collect(),
+                )
+            }
+            Some(("pool", v)) => pool_per_shard = v.parse().context("pool")?,
+            Some(("connect_timeout_ms", v)) | Some(("connect-timeout-ms", v)) => {
+                connect_timeout_ms = v.parse().context("connect_timeout_ms")?
+            }
+            Some(("io_timeout_ms", v)) | Some(("io-timeout-ms", v)) => {
+                io_timeout_ms = v.parse().context("io_timeout_ms")?
+            }
             Some(("models", v)) => {
                 models = Some(v.split(',').map(|s| s.trim().to_string()).collect())
             }
@@ -513,6 +575,51 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
             _ => kv.push(a.clone()),
         }
     }
+
+    // route= turns this process into the fleet router: no models, no
+    // engine — just the ring, the pools, and both front doors.
+    if let Some(shards) = route {
+        if !kv.is_empty() {
+            bail!(
+                "router mode forwards requests; model/config keys belong on \
+                 the shard daemons (got '{}')",
+                kv.join(" ")
+            );
+        }
+        let rcfg = crate::serve::RouterConfig {
+            addr,
+            http_addr,
+            shards,
+            pool_per_shard,
+            max_conns,
+            max_line,
+            write_timeout_ms,
+            connect_timeout_ms,
+            io_timeout_ms,
+        };
+        println!("== fames serve router ({}) ==", crate::serve::PROTOCOL);
+        let router = crate::serve::Router::bind(&rcfg)?;
+        let mut t = Table::new(
+            format!("ring ({} virtual nodes per shard)", crate::serve::ring::VNODES),
+            &["index", "shard"],
+        );
+        for (i, s) in router.ring().shards().iter().enumerate() {
+            t.row(vec![i.to_string(), s.clone()]);
+        }
+        t.print();
+        println!(
+            "routing on {} (pool {pool_per_shard}/shard, max_conns {max_conns}) — \
+             send {{\"id\":0,\"op\":\"shutdown\"}} to stop the router",
+            router.local_addr()
+        );
+        if let Some(h) = router.http_local_addr() {
+            println!("http gateway on {h} (POST /v1/evaluate|energy|select, GET /v1/status)");
+        }
+        router.run()?;
+        println!("fames serve router: stopped");
+        return Ok(0);
+    }
+
     let base = base_config(&kv)?;
     let models = models.unwrap_or_else(|| vec![format!("{}/{}", base.model, base.cfg)]);
     let scfg = crate::serve::ServeConfig {
@@ -529,9 +636,9 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
     };
     println!("== fames serve ({}) ==", crate::serve::PROTOCOL);
     let server = crate::serve::Server::bind(&scfg)?;
-    let mut t = Table::new("models", &["key", "layers", "warm (s)", "library"]);
+    let mut t = Table::new("models", &["key", "layers", "warm (s)", "library", "params"]);
     // bind() warmed every entry; show what startup cost and whether the
-    // artifact store paid off
+    // artifact store (local or a fleet peer, for params) paid off
     let shared_addr = server.local_addr();
     {
         let reg = server.registry();
@@ -544,6 +651,11 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
                     Some(true) => "hit".into(),
                     Some(false) => "miss".into(),
                     None => "off".into(),
+                },
+                match e.params_source {
+                    pipeline::ParamsSource::StateFile => "state_file".into(),
+                    pipeline::ParamsSource::Store => "store".into(),
+                    pipeline::ParamsSource::Trained => "trained".into(),
                 },
             ]);
         }
@@ -568,19 +680,35 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
 
 fn cmd_cache(args: &[String]) -> Result<i32> {
     let sub = args.first().map(String::as_str).unwrap_or("stat");
-    let rest = &args[1.min(args.len())..];
-    let cfg = base_config(rest)?;
+    // kind= is cache-specific, not a config key — pull it out before
+    // base_config sees (and rejects) it
+    let mut kind: Option<String> = None;
+    let mut rest = Vec::new();
+    for a in &args[1.min(args.len())..] {
+        match a.strip_prefix("--").unwrap_or(a.as_str()).split_once('=') {
+            Some(("kind", v)) => kind = Some(v.to_string()),
+            _ => rest.push(a.clone()),
+        }
+    }
+    if kind.is_some() && sub != "ls" {
+        bail!("kind= only applies to cache ls (got cache {sub})");
+    }
+    let cfg = base_config(&rest)?;
     let Some(store) = cfg.store() else {
         println!("artifact store disabled (--no-cache)");
         return Ok(0);
     };
     match sub {
         "ls" => {
-            let entries = store.entries();
-            let mut t = Table::new(
-                format!("cache entries ({})", store.root().display()),
-                &["kind", "fingerprint", "bytes"],
-            );
+            let mut entries = store.entries();
+            if let Some(k) = &kind {
+                entries.retain(|e| &e.kind == k);
+            }
+            let title = match &kind {
+                Some(k) => format!("cache entries ({}, kind={k})", store.root().display()),
+                None => format!("cache entries ({})", store.root().display()),
+            };
+            let mut t = Table::new(title, &["kind", "fingerprint", "bytes"]);
             for e in &entries {
                 t.row(vec![e.kind.clone(), e.fingerprint.clone(), e.bytes.to_string()]);
             }

@@ -47,6 +47,14 @@ pub fn apply_kv(cfg: &mut FamesConfig, key: &str, value: &str) -> Result<()> {
                 other => bail!("no_cache must be a boolean (got '{other}')"),
             }
         }
+        "peers" => {
+            cfg.remote_peers = value
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        }
         "calib_epochs" => cfg.calib.epochs = vu()?,
         "calib_samples" => cfg.calib.samples = vu()?,
         "calib_lr" => cfg.calib.lr = vf()? as f32,
@@ -160,6 +168,10 @@ mod tests {
         assert!(cfg2.no_cache);
         apply_args(&mut cfg2, &["no_cache=false".to_string()]).unwrap();
         assert!(!cfg2.no_cache);
+        apply_args(&mut cfg2, &["peers=a:9001, b:9002,".to_string()]).unwrap();
+        assert_eq!(cfg2.remote_peers, vec!["a:9001".to_string(), "b:9002".to_string()]);
+        apply_args(&mut cfg2, &["peers=".to_string()]).unwrap();
+        assert!(cfg2.remote_peers.is_empty());
         assert!(apply_kv(&mut cfg2, "no_cache", "maybe").is_err());
         // resolution: override wins, else <artifact_root>/cache
         let mut cfg3 = FamesConfig { artifact_root: "arts".into(), ..FamesConfig::default() };

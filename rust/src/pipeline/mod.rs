@@ -61,6 +61,10 @@ pub struct FamesConfig {
     /// Disable the artifact store entirely (every stage recomputes and
     /// nothing is persisted). CLI: `--no-cache`.
     pub no_cache: bool,
+    /// Fleet peers (`host:port` NDJSON addresses) consulted by the store's
+    /// remote read-through tier on local misses — the cluster-mode warm
+    /// handoff substrate. CLI: `peers=a:1,b:2`; empty = local-only store.
+    pub remote_peers: Vec<String>,
 }
 
 impl Default for FamesConfig {
@@ -80,6 +84,7 @@ impl Default for FamesConfig {
             jobs: 0,
             cache_dir: None,
             no_cache: false,
+            remote_peers: Vec::new(),
         }
     }
 }
@@ -98,12 +103,19 @@ impl FamesConfig {
     }
 
     /// The artifact store for this config; `None` when `no_cache` is set.
+    /// With `remote_peers` configured, the store carries the remote
+    /// read-through tier: every stage's local miss consults the fleet
+    /// before recomputing.
     pub fn store(&self) -> Option<Store> {
         if self.no_cache {
+            return None;
+        }
+        let remote = if self.remote_peers.is_empty() {
             None
         } else {
-            Some(Store::open(self.effective_cache_dir()))
-        }
+            Some(crate::store::remote::RemoteTier::new(self.remote_peers.clone()))
+        };
+        Some(Store::open(self.effective_cache_dir()).with_remote(remote))
     }
 }
 
@@ -149,15 +161,71 @@ impl PipelineReport {
     }
 }
 
+/// Where a warm session's parameters came from (`fames serve` status
+/// reports this per model; the fleet smoke lane asserts handoff on it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamsSource {
+    /// Loaded from `<artifact_root>/state/<model>.fmt`.
+    StateFile,
+    /// Fetched from the artifact store by config fingerprint — locally or
+    /// from a fleet peer through the remote tier (warm handoff).
+    Store,
+    /// Pre-trained in this process (and persisted for the next one).
+    Trained,
+}
+
+/// Config-keyed store address of a model's trained parameters. Training is
+/// deterministic in `(model, seed, train_steps, train_lr)` on the
+/// synthetic data stream and independent of the artifact root, so one
+/// shard's training is every shard's cache hit.
+pub fn params_fingerprint(cfg: &FamesConfig) -> Fingerprint {
+    FingerprintBuilder::new("params")
+        .str("model", &cfg.model)
+        .u64("seed", cfg.seed)
+        .u64("train_steps", cfg.train_steps as u64)
+        .f64("train_lr", cfg.train_lr as f64)
+        .finish()
+}
+
 /// Ensure the session has trained parameters: load the per-model cache or
 /// pre-train + save. Returns training wall-clock (0 when cached).
 pub fn ensure_trained(session: &mut Session, cfg: &FamesConfig) -> Result<f64> {
+    Ok(ensure_trained_report(session, cfg)?.0)
+}
+
+/// [`ensure_trained`] plus where the parameters came from. Resolution
+/// order: the binary state file, then the artifact store (whose remote
+/// tier makes this the cluster warm-handoff path — a fresh shard pulls a
+/// peer's trained parameters instead of recomputing), then training.
+pub fn ensure_trained_report(
+    session: &mut Session,
+    cfg: &FamesConfig,
+) -> Result<(f64, ParamsSource)> {
     let path = Session::state_path(&cfg.artifact_root, &cfg.model);
     if path.exists() {
         session
             .load_params(&path)
             .with_context(|| format!("loading cached params {}", path.display()))?;
-        return Ok(0.0);
+        return Ok((0.0, ParamsSource::StateFile));
+    }
+    let store = cfg.store();
+    let fp = params_fingerprint(cfg);
+    if let Some(store) = &store {
+        if let Some(payload) = store.get(codec::PARAMS_KIND, codec::PARAMS_VERSION, fp) {
+            match codec::params_from_json(&payload)
+                .and_then(|params| session.install_params(params))
+            {
+                Ok(()) => {
+                    // seed the state file too, so the *next* process on
+                    // this root skips even the store lookup
+                    let _ = session.save_params(&path);
+                    return Ok((0.0, ParamsSource::Store));
+                }
+                Err(e) => {
+                    eprintln!("  cache: discarding undecodable params entry {fp}: {e:#}")
+                }
+            }
+        }
     }
     let t0 = std::time::Instant::now();
     let losses = session.train(cfg.train_steps, cfg.train_lr)?;
@@ -172,7 +240,17 @@ pub fn ensure_trained(session: &mut Session, cfg: &FamesConfig) -> Result<f64> {
         cfg.model, cfg.train_steps, dt, tail
     );
     session.save_params(&path)?;
-    Ok(dt)
+    if let Some(store) = &store {
+        match codec::params_to_json(&session.params) {
+            Ok(payload) => {
+                if let Err(e) = store.put(codec::PARAMS_KIND, codec::PARAMS_VERSION, fp, payload) {
+                    eprintln!("  cache: failed to persist params entry {fp}: {e:#}");
+                }
+            }
+            Err(e) => eprintln!("  cache: params not persistable: {e:#}"),
+        }
+    }
+    Ok((dt, ParamsSource::Trained))
 }
 
 /// Open a session ready to answer evaluation requests: worker count set,
@@ -183,11 +261,23 @@ pub fn ensure_trained(session: &mut Session, cfg: &FamesConfig) -> Result<f64> {
 /// configured model), and the reference state for the serve smoke test's
 /// bit-identity diffs.
 pub fn warm_session(rt: Arc<Runtime>, cfg: &FamesConfig) -> Result<Session> {
+    Ok(warm_session_report(rt, cfg)?.0)
+}
+
+/// How a session's warm-up resolved (serve status / fleet assertions).
+#[derive(Clone, Copy, Debug)]
+pub struct WarmReport {
+    pub params: ParamsSource,
+    pub train_secs: f64,
+}
+
+/// [`warm_session`] plus the provenance report.
+pub fn warm_session_report(rt: Arc<Runtime>, cfg: &FamesConfig) -> Result<(Session, WarmReport)> {
     let mut session = Session::open(rt, &cfg.artifact_root, &cfg.model, &cfg.cfg, cfg.seed)?;
     session.jobs = cfg.jobs;
-    ensure_trained(&mut session, cfg)?;
+    let (train_secs, params) = ensure_trained_report(&mut session, cfg)?;
     session.init_act_ranges()?;
-    Ok(session)
+    Ok((session, WarmReport { params, train_secs }))
 }
 
 /// Build the MCKP instance from a precomputed Ω table and solve it.

@@ -145,7 +145,13 @@ impl Session {
     }
 
     pub fn load_params(&mut self, path: impl AsRef<Path>) -> Result<()> {
-        let store = TensorStore::load(path)?;
+        self.install_params(TensorStore::load(path)?)
+    }
+
+    /// Install a parameter set after validating every tensor against the
+    /// manifest — shared by the file loader and the cluster warm-handoff
+    /// path (parameters fetched from a fleet peer's artifact store).
+    pub fn install_params(&mut self, store: TensorStore) -> Result<()> {
         for p in &self.art.manifest.params {
             let t = store.get(&p.name)?;
             if t.shape() != p.shape.as_slice() {

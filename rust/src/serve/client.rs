@@ -9,6 +9,35 @@ use std::time::Duration;
 use anyhow::{ensure, Context, Result};
 
 use crate::json::Json;
+use crate::util::hash::Fnv64;
+
+/// Most retry rounds [`Client::call_many_retry_shed`] will spend on
+/// requests the server keeps shedding; past it, the surviving shed
+/// outcomes are returned to the caller as-is.
+pub const SHED_RETRY_BUDGET: u32 = 4;
+
+/// Upper bound on any one backoff sleep, jitter included — the
+/// exponential schedule stops doubling here.
+pub const SHED_BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Backoff before retry round `attempt` (0-based): `base << attempt`
+/// capped at [`SHED_BACKOFF_CAP`], plus a deterministic jitter in
+/// `[0, base/2)` hashed from the shed request ids and the attempt number.
+/// Jitter keeps a fleet of polite clients that were shed together from
+/// resending in lockstep, and hashing (FNV, no `rand`) keeps the client
+/// bit-reproducible: the same shed set retries on the same schedule.
+fn shed_backoff(base: Duration, attempt: u32, shed_ids: &[i64]) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.min(16)).min(SHED_BACKOFF_CAP);
+    let mut h = Fnv64::new();
+    h.write_str("fames-shed-backoff");
+    h.write_u64(attempt as u64);
+    for &id in shed_ids {
+        h.write_i64(id);
+    }
+    let half = (base.as_nanos() as u64 / 2).max(1);
+    let jitter = Duration::from_nanos(h.finish() % half);
+    exp.saturating_add(jitter).min(SHED_BACKOFF_CAP)
+}
 
 /// Per-request verdict from [`Client::call_many_outcomes`]: unlike
 /// [`Client::call_many`], overload and error responses surface here per
@@ -148,26 +177,35 @@ impl Client {
             .collect()
     }
 
-    /// [`Client::call_many_outcomes`], retrying each shed request once
-    /// after `backoff` — the reference polite-client loop for overload:
-    /// back off, resend only what was shed, splice results back in
-    /// request order.
-    pub fn call_many_retry_shed(&mut self, reqs: &[Json], backoff: Duration) -> Vec<Outcome> {
+    /// [`Client::call_many_outcomes`], retrying shed requests — the
+    /// reference polite-client loop for overload: back off, resend only
+    /// what was shed, splice results back in request order. Backoff is
+    /// exponential from `base` with deterministic per-attempt jitter
+    /// (see [`shed_backoff`]), and the loop gives up after
+    /// [`SHED_RETRY_BUDGET`] rounds, returning the surviving shed
+    /// outcomes so the caller sees exactly what the server refused.
+    pub fn call_many_retry_shed(&mut self, reqs: &[Json], base: Duration) -> Vec<Outcome> {
         let mut outcomes = self.call_many_outcomes(reqs);
-        let retry_idx: Vec<usize> = outcomes
-            .iter()
-            .enumerate()
-            .filter(|(_, o)| o.is_shed())
-            .map(|(i, _)| i)
-            .collect();
-        if retry_idx.is_empty() {
-            return outcomes;
-        }
-        std::thread::sleep(backoff);
-        let retry_reqs: Vec<Json> = retry_idx.iter().map(|&i| reqs[i].clone()).collect();
-        let retried = self.call_many_outcomes(&retry_reqs);
-        for (slot, out) in retry_idx.into_iter().zip(retried) {
-            outcomes[slot] = out;
+        for attempt in 0..SHED_RETRY_BUDGET {
+            let retry_idx: Vec<usize> = outcomes
+                .iter()
+                .enumerate()
+                .filter(|(_, o)| o.is_shed())
+                .map(|(i, _)| i)
+                .collect();
+            if retry_idx.is_empty() {
+                break;
+            }
+            let shed_ids: Vec<i64> = retry_idx
+                .iter()
+                .filter_map(|&i| reqs[i].get("id").and_then(|j| j.as_i64()).ok())
+                .collect();
+            std::thread::sleep(shed_backoff(base, attempt, &shed_ids));
+            let retry_reqs: Vec<Json> = retry_idx.iter().map(|&i| reqs[i].clone()).collect();
+            let retried = self.call_many_outcomes(&retry_reqs);
+            for (slot, out) in retry_idx.into_iter().zip(retried) {
+                outcomes[slot] = out;
+            }
         }
         outcomes
     }
@@ -190,5 +228,41 @@ impl Client {
     pub fn shutdown(&mut self, id: i64) -> Result<Json> {
         let resp = self.call(&Json::obj().with("id", id).with("op", "shutdown"))?;
         Self::expect_ok(&resp).map(|j| j.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_then_caps() {
+        let base = Duration::from_millis(10);
+        let mut prev = Duration::ZERO;
+        for attempt in 0..SHED_RETRY_BUDGET {
+            let d = shed_backoff(base, attempt, &[1, 2, 3]);
+            // At least the un-jittered exponential floor, never past cap.
+            let floor = base.saturating_mul(1 << attempt).min(SHED_BACKOFF_CAP);
+            assert!(d >= floor, "attempt {attempt}: {d:?} < floor {floor:?}");
+            assert!(d <= SHED_BACKOFF_CAP, "attempt {attempt}: {d:?} over cap");
+            assert!(d >= prev || d == SHED_BACKOFF_CAP);
+            prev = d;
+        }
+        // A huge attempt count stays pinned at the cap (no shift overflow).
+        assert_eq!(shed_backoff(base, 40, &[7]), SHED_BACKOFF_CAP);
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_and_bounded() {
+        let base = Duration::from_millis(100);
+        let a = shed_backoff(base, 0, &[10, 11]);
+        let b = shed_backoff(base, 0, &[10, 11]);
+        assert_eq!(a, b, "same shed set, same attempt ⇒ same sleep");
+        // Different shed sets (or attempts) spread out within [0, base/2).
+        let c = shed_backoff(base, 0, &[10, 12]);
+        assert!(a >= base && a < base + base / 2);
+        assert!(c >= base && c < base + base / 2);
+        // Zero base never panics (jitter modulus is clamped to ≥ 1).
+        assert_eq!(shed_backoff(Duration::ZERO, 0, &[]), Duration::ZERO);
     }
 }

@@ -46,6 +46,14 @@ pub enum Op {
     /// Solve the MCKP over a caller-provided Ω table (rows aligned with
     /// `Library::for_bits` order) under `r_energy` × exact-model energy.
     Select { r_energy: f64, omega: Vec<Vec<f64>> },
+    /// Fetch one artifact-store envelope by `<kind>/<fingerprint>` from
+    /// this daemon's **local** store tier (peers never chain). The result
+    /// is `{"envelope":<envelope>|null}` — null means a clean miss.
+    ArtifactGet { kind: String, fingerprint: String },
+    /// Offer one full store envelope for replication. The receiving daemon
+    /// re-validates every header (schema/kind/version/fingerprint) before
+    /// writing, so a corrupt peer cannot poison the store.
+    ArtifactPut { kind: String, envelope: Json },
     /// Server health: loaded models, request counters, queue depth.
     Status,
     /// Stop accepting, drain the queue, exit the serve loop.
@@ -102,9 +110,23 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 })
                 .collect::<Result<Vec<_>>>()?,
         },
+        "artifact_get" => Op::ArtifactGet {
+            kind: j.get("kind")?.as_str().context("'kind' must be a string")?.to_string(),
+            fingerprint: j
+                .get("fingerprint")?
+                .as_str()
+                .context("'fingerprint' must be a string")?
+                .to_string(),
+        },
+        "artifact_put" => Op::ArtifactPut {
+            kind: j.get("kind")?.as_str().context("'kind' must be a string")?.to_string(),
+            envelope: j.get("envelope")?.clone(),
+        },
         "status" => Op::Status,
         "shutdown" => Op::Shutdown,
-        other => bail!("unknown op '{other}' (evaluate|energy|select|status|shutdown)"),
+        other => bail!(
+            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|status|shutdown)"
+        ),
     };
     Ok(Request { id, model, op })
 }
@@ -191,6 +213,28 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
+        let r = parse_request(r#"{"id":6,"op":"artifact_get","kind":"library","fingerprint":"00deadbeef00cafe"}"#)
+            .unwrap();
+        match r.op {
+            Op::ArtifactGet { kind, fingerprint } => {
+                assert_eq!(kind, "library");
+                assert_eq!(fingerprint, "00deadbeef00cafe");
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let r = parse_request(
+            r#"{"id":7,"op":"artifact_put","kind":"library","envelope":{"schema":"fames-store-v1","payload":[1,2]}}"#,
+        )
+        .unwrap();
+        match r.op {
+            Op::ArtifactPut { kind, envelope } => {
+                assert_eq!(kind, "library");
+                assert_eq!(envelope.get("schema").unwrap().as_str().unwrap(), "fames-store-v1");
+            }
+            other => panic!("{other:?}"),
+        }
+
         assert!(matches!(parse_request(r#"{"id":4,"op":"status"}"#).unwrap().op, Op::Status));
         assert!(matches!(
             parse_request(r#"{"id":5,"op":"shutdown"}"#).unwrap().op,
@@ -205,6 +249,9 @@ mod tests {
         assert!(parse_request(r#"{"id":1}"#).is_err(), "op is required");
         assert!(parse_request(r#"{"id":1,"op":"frobnicate"}"#).is_err());
         assert!(parse_request(r#"{"id":1,"op":"select","r_energy":0.5,"omega":[["x"]]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"artifact_get","kind":"library"}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"artifact_get","fingerprint":5,"kind":"k"}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"artifact_put","kind":"library"}"#).is_err());
         assert_eq!(request_id(r#"{"id":42,"op":"?"}"#), 42);
         assert_eq!(request_id("garbage"), -1);
     }

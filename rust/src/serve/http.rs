@@ -43,21 +43,23 @@ const MAX_HEADER_LINE: usize = 8192;
 const MAX_HEADERS: usize = 100;
 
 /// One parsed response's metadata: status line + connection handling.
-struct Outcome {
-    status: u16,
-    reason: &'static str,
+/// (`pub(crate)` so the router's HTTP front door reuses the exact same
+/// response-writing machinery.)
+pub(crate) struct Outcome {
+    pub(crate) status: u16,
+    pub(crate) reason: &'static str,
     /// Add `Retry-After` (503 sheds).
-    retry_after: bool,
+    pub(crate) retry_after: bool,
     /// Close the connection after answering (desync or client request).
-    close: bool,
+    pub(crate) close: bool,
 }
 
 impl Outcome {
-    fn ok() -> Outcome {
+    pub(crate) fn ok() -> Outcome {
         Outcome { status: 200, reason: "OK", retry_after: false, close: false }
     }
 
-    fn err(status: u16, reason: &'static str) -> Outcome {
+    pub(crate) fn err(status: u16, reason: &'static str) -> Outcome {
         Outcome { status, reason, retry_after: false, close: false }
     }
 }
@@ -370,7 +372,7 @@ fn dispatch(
 /// Fill `buf` with a structured error body:
 /// `{"error":{"code":..,"detail":..,"message":..},"id":..,"ok":false}`
 /// (keys in the writer's sorted order; `detail` omitted when empty).
-fn error_body_into(buf: &mut String, id: i64, code: &str, message: &str, detail: &str) {
+pub(crate) fn error_body_into(buf: &mut String, id: i64, code: &str, message: &str, detail: &str) {
     buf.clear();
     buf.push_str("{\"error\":{\"code\":");
     json::write_escaped(buf, code);
@@ -387,7 +389,7 @@ fn error_body_into(buf: &mut String, id: i64, code: &str, message: &str, detail:
 
 /// Write one full response: status line, JSON content headers, optional
 /// `Retry-After`, explicit connection disposition, body.
-fn write_response<W: Write>(w: &mut W, out: &Outcome, body: &str) -> std::io::Result<()> {
+pub(crate) fn write_response<W: Write>(w: &mut W, out: &Outcome, body: &str) -> std::io::Result<()> {
     let mut head = String::with_capacity(160);
     head.push_str("HTTP/1.1 ");
     head.push_str(&out.status.to_string());

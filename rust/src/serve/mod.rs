@@ -57,11 +57,15 @@ pub mod client;
 pub mod codec;
 pub mod http;
 pub mod registry;
+pub mod ring;
+pub mod router;
 pub mod wire;
 
 pub use client::{Client, Outcome};
 pub use codec::{Op, Request, PROTOCOL};
 pub use registry::{ModelEntry, Registry};
+pub use ring::Ring;
+pub use router::{Router, RouterConfig};
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -155,6 +159,8 @@ pub struct Stats {
     pub oversized: AtomicU64,
     /// Requests served through the HTTP gateway (also counted per-op).
     pub http: AtomicU64,
+    /// Artifact replication ops (`artifact_get` + `artifact_put`).
+    pub artifact: AtomicU64,
 }
 
 impl Stats {
@@ -163,6 +169,9 @@ impl Stats {
             Op::Evaluate { .. } => self.evaluate.fetch_add(1, Ordering::Relaxed),
             Op::Energy { .. } => self.energy.fetch_add(1, Ordering::Relaxed),
             Op::Select { .. } => self.select.fetch_add(1, Ordering::Relaxed),
+            Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
+                self.artifact.fetch_add(1, Ordering::Relaxed)
+            }
             Op::Status | Op::Shutdown => 0,
         };
     }
@@ -251,6 +260,9 @@ impl ReplySink {
 struct Shared {
     registry: Registry,
     rt: Arc<Runtime>,
+    /// Local artifact-store tier answering `artifact_get`/`artifact_put`
+    /// (peers replicate through it); `None` when caching is disabled.
+    store: Option<crate::store::Store>,
     batcher: Batcher,
     stats: Stats,
     stop: AtomicBool,
@@ -283,6 +295,14 @@ impl Shared {
                             Some(false) => "miss",
                             None => "off",
                         },
+                    )
+                    .with(
+                        "params",
+                        match e.params_source {
+                            crate::pipeline::ParamsSource::StateFile => "state_file",
+                            crate::pipeline::ParamsSource::Store => "store",
+                            crate::pipeline::ParamsSource::Trained => "trained",
+                        },
                     ),
             );
         }
@@ -302,6 +322,7 @@ impl Shared {
                     .with("select", self.stats.select.load(Ordering::Relaxed) as usize)
                     .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize)
                     .with("http", self.stats.http.load(Ordering::Relaxed) as usize)
+                    .with("artifact", self.stats.artifact.load(Ordering::Relaxed) as usize)
                     .with("total", self.stats.total() as usize),
             )
             .with(
@@ -348,11 +369,8 @@ pub struct Server {
 impl Server {
     /// Warm every configured model and bind the listener(s).
     pub fn bind(cfg: &ServeConfig) -> Result<Server> {
-        let rt = Arc::new(Runtime::from_env()?);
-        let registry = Registry::open(rt.clone(), &cfg.base, &cfg.models)?;
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding fames serve to {}", cfg.addr))?;
-        let addr = listener.local_addr()?;
         let http_listener = match &cfg.http_addr {
             Some(a) => Some(
                 TcpListener::bind(a)
@@ -360,6 +378,21 @@ impl Server {
             ),
             None => None,
         };
+        Server::bind_on(cfg, listener, http_listener)
+    }
+
+    /// Warm every configured model behind **pre-bound** listeners. Fleet
+    /// orchestration (bench, tests) binds all shard ports first — so every
+    /// peer address is known before any shard starts warming — then hands
+    /// each listener over here; no shard races another's port assignment.
+    pub fn bind_on(
+        cfg: &ServeConfig,
+        listener: TcpListener,
+        http_listener: Option<TcpListener>,
+    ) -> Result<Server> {
+        let rt = Arc::new(Runtime::from_env()?);
+        let registry = Registry::open(rt.clone(), &cfg.base, &cfg.models)?;
+        let addr = listener.local_addr()?;
         let http_addr = match &http_listener {
             Some(l) => Some(l.local_addr()?),
             None => None,
@@ -369,6 +402,7 @@ impl Server {
             http_listener,
             shared: Arc::new(Shared {
                 registry,
+                store: cfg.base.store(),
                 rt,
                 batcher: Batcher::new(cfg.max_batch, cfg.max_pending),
                 stats: Stats::default(),
@@ -570,7 +604,32 @@ fn handle_compute(shared: &Shared, req: &Request) -> Result<ComputeOut> {
                 .collect();
             Ok(ComputeOut::Other(codec::solution_json(&sol, &picked)))
         }
-        Op::Status | Op::Shutdown => unreachable!("inline ops never reach the batcher"),
+        Op::Status | Op::Shutdown | Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
+            unreachable!("inline ops never reach the batcher")
+        }
+    }
+}
+
+/// Answer one artifact replication op from the daemon's **local** store
+/// tier (disk I/O only — no `Session`, so it runs inline on the reader
+/// thread like `status`; and `get_local`/`envelope_local` never consult
+/// this daemon's own peers, so fleet fetches cannot cycle).
+fn handle_artifact(shared: &Shared, req: &Request) -> Result<Json> {
+    let store =
+        shared.store.as_ref().context("artifact store is disabled on this daemon (no_cache)")?;
+    match &req.op {
+        Op::ArtifactGet { kind, fingerprint } => {
+            let fp = crate::store::Fingerprint::from_hex(fingerprint)
+                .with_context(|| format!("malformed fingerprint {fingerprint:?}"))?;
+            anyhow::ensure!(crate::store::kind_is_safe(kind), "unsafe store kind {kind:?}");
+            let env = store.envelope_local(kind, fp);
+            Ok(Json::obj().with("envelope", env.unwrap_or(Json::Null)))
+        }
+        Op::ArtifactPut { kind, envelope } => {
+            let fp = store.put_envelope(kind, envelope)?;
+            Ok(Json::obj().with("fingerprint", fp.hex()))
+        }
+        _ => unreachable!("handle_artifact only takes artifact ops"),
     }
 }
 
@@ -659,6 +718,19 @@ fn serve_connection(
                     let sent = tx.send(line);
                     shared.begin_shutdown();
                     if sent.is_err() {
+                        break;
+                    }
+                }
+                Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
+                    shared.stats.count(&req.op);
+                    let line = match handle_artifact(shared, &req) {
+                        Ok(result) => wire::ok_line(req.id, &result),
+                        Err(e) => {
+                            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                            wire::err_line(req.id, &format!("{e:#}"))
+                        }
+                    };
+                    if tx.send(line).is_err() {
                         break;
                     }
                 }

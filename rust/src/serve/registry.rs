@@ -18,7 +18,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::appmul::{AppMul, Library};
-use crate::pipeline::{self, FamesConfig, Session};
+use crate::pipeline::{self, FamesConfig, ParamsSource, Session};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -30,6 +30,9 @@ pub struct ModelEntry {
     pub library: Library,
     /// Library stage cache outcome (`Some(true)` = store hit).
     pub lib_hit: Option<bool>,
+    /// Where the trained parameters came from (state file / store /
+    /// trained here) — `Store` on a fresh root means warm handoff worked.
+    pub params_source: ParamsSource,
     /// Wall-clock spent warming this entry (train/load + ranges + library).
     pub warm_secs: f64,
 }
@@ -104,7 +107,7 @@ impl Registry {
                 ..base.clone()
             };
             let t0 = Instant::now();
-            let session = pipeline::warm_session(rt.clone(), &cfg)
+            let (session, warm) = pipeline::warm_session_report(rt.clone(), &cfg)
                 .with_context(|| format!("warming model '{key}'"))?;
             let store = cfg.store();
             let prep =
@@ -117,6 +120,7 @@ impl Registry {
                     session,
                     library: prep.library,
                     lib_hit: prep.hit,
+                    params_source: warm.params,
                     warm_secs: t0.elapsed().as_secs_f64(),
                 }),
             );

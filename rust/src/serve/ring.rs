@@ -1,0 +1,201 @@
+//! Consistent-hash ring for the sharded serve fleet.
+//!
+//! Each shard (identified by its `host:port` address) owns a fixed number
+//! of virtual nodes; the ring is the sorted list of their hash points. A
+//! routing key — the wire request's `<model>/<cfg>` — maps to the first
+//! point clockwise from its own hash, so every router instance built from
+//! the same shard list computes the same assignment with no coordination.
+//!
+//! Virtual nodes keep the load split even when shard counts are small
+//! (with one point per shard, a 2-shard ring can be arbitrarily lopsided),
+//! and they bound reshuffling: adding or removing one shard only moves the
+//! keys that hashed into its arcs, roughly `1/N` of the keyspace.
+//!
+//! Hashing is [`crate::util::hash::Fnv64`] with length-prefixed writes, so
+//! point positions are a stable part of the wire contract: a key routes to
+//! the same shard across processes, restarts, and releases.
+
+use crate::util::hash::Fnv64;
+
+/// Virtual nodes per shard. Fixed (not configurable) so that every router
+/// and test in the fleet agrees on the ring geometry.
+pub const VNODES: usize = 64;
+
+/// An immutable consistent-hash ring over shard addresses.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// Shard addresses in the order given at construction; `route` returns
+    /// indices into this list.
+    shards: Vec<String>,
+    /// Sorted `(point, shard index)` pairs, `VNODES` per shard.
+    points: Vec<(u64, usize)>,
+}
+
+fn point_hash(addr: &str, vnode: usize) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str("fames-ring-shard");
+    h.write_str(addr);
+    h.write_u64(vnode as u64);
+    h.finish()
+}
+
+fn key_hash(key: &str) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str("fames-ring-key");
+    h.write_str(key);
+    h.finish()
+}
+
+impl Ring {
+    /// Build a ring over the given shard addresses. Order is preserved for
+    /// index reporting but does not affect key placement (points depend
+    /// only on the address strings).
+    pub fn new<S: Into<String>>(shards: impl IntoIterator<Item = S>) -> Ring {
+        let shards: Vec<String> = shards.into_iter().map(Into::into).collect();
+        let mut points = Vec::with_capacity(shards.len() * VNODES);
+        for (i, addr) in shards.iter().enumerate() {
+            for v in 0..VNODES {
+                points.push((point_hash(addr, v), i));
+            }
+        }
+        // Ties broken by shard index so duplicate addresses still yield a
+        // deterministic ring.
+        points.sort_unstable();
+        Ring { shards, points }
+    }
+
+    pub fn shards(&self) -> &[String] {
+        &self.shards
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Index (into `shards`) of the first ring point at or clockwise from
+    /// the key's hash. Panics on an empty ring.
+    pub fn route(&self, key: &str) -> usize {
+        assert!(!self.points.is_empty(), "route on an empty ring");
+        let h = key_hash(key);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[if i == self.points.len() { 0 } else { i }].1
+    }
+
+    /// Shard address a key routes to.
+    pub fn route_addr(&self, key: &str) -> &str {
+        &self.shards[self.route(key)]
+    }
+
+    /// All distinct shards in ring order starting from the key's primary —
+    /// the failover sequence. Every shard appears exactly once, so walking
+    /// the list tries the whole fleet.
+    pub fn successors(&self, key: &str) -> Vec<usize> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let h = key_hash(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = vec![false; self.shards.len()];
+        let mut order = Vec::with_capacity(self.shards.len());
+        for k in 0..self.points.len() {
+            let (_, shard) = self.points[(start + k) % self.points.len()];
+            if !seen[shard] {
+                seen[shard] = true;
+                order.push(shard);
+                if order.len() == self.shards.len() {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9100 + i)).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_order_independent() {
+        let a = Ring::new(addrs(4));
+        let mut rev = addrs(4);
+        rev.reverse();
+        let b = Ring::new(rev);
+        for i in 0..200 {
+            let key = format!("model{i}/w4a4");
+            assert_eq!(a.route_addr(&key), b.route_addr(&key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let r = Ring::new(["127.0.0.1:9100"]);
+        for i in 0..50 {
+            assert_eq!(r.route(&format!("k{i}")), 0);
+        }
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let r = Ring::new(addrs(4));
+        let mut counts = [0usize; 4];
+        let n = 4000;
+        for i in 0..n {
+            counts[r.route(&format!("model{i}/cfg{}", i % 7))] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            // Fair share is 1000; virtual nodes should keep every shard
+            // within a loose 2x band.
+            assert!(c > n / 8 && c < n / 2, "shard {i} got {c} of {n}");
+        }
+    }
+
+    #[test]
+    fn removing_a_shard_only_moves_its_keys() {
+        let full = Ring::new(addrs(4));
+        let reduced = Ring::new(addrs(3)); // drops shard index 3
+        let mut moved = 0;
+        let n = 2000;
+        for i in 0..n {
+            let key = format!("m{i}/c");
+            let before = full.route_addr(&key).to_string();
+            let after = reduced.route_addr(&key).to_string();
+            if before != after {
+                // Only keys that lived on the removed shard may move.
+                assert_eq!(before, full.shards()[3], "key {key} moved off a surviving shard");
+                moved += 1;
+            }
+        }
+        // Roughly 1/4 of keys should move, never the majority.
+        assert!(moved > n / 10 && moved < n / 2, "moved {moved} of {n}");
+    }
+
+    #[test]
+    fn successors_cover_all_shards_once() {
+        let r = Ring::new(addrs(4));
+        for i in 0..50 {
+            let key = format!("m{i}/c");
+            let order = r.successors(&key);
+            assert_eq!(order.len(), 4);
+            assert_eq!(order[0], r.route(&key));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn empty_ring_has_no_successors() {
+        let r = Ring::new(Vec::<String>::new());
+        assert!(r.is_empty());
+        assert!(r.successors("k").is_empty());
+    }
+}

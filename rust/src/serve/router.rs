@@ -1,0 +1,973 @@
+//! Fleet router — one endpoint in front of N sharded serve daemons.
+//!
+//! The router presents the same two front doors as a single daemon (NDJSON
+//! lines + the HTTP/1.1 gateway) and forwards every compute and artifact
+//! request to the shard that owns its `<model>/<cfg>` key on the
+//! consistent-hash [`Ring`]. Forwarding is byte-transparent on the NDJSON
+//! path: the client's request line goes to the shard verbatim and the
+//! shard's response line comes back verbatim, so routed responses are
+//! byte-identical to a direct single-node call (`tests/serve_fleet.rs`
+//! pins this).
+//!
+//! # Pools, failure, and shed semantics
+//!
+//! Each shard gets one bounded connection [`Pool`] (at most
+//! `pool_per_shard` concurrent leases; idle connections are reused). A
+//! transport failure — connect refused, write/read error, response
+//! timeout — puts the shard on a short cooldown and the request fails over
+//! to the ring's successor shards in order. Overload semantics are
+//! preserved end to end, never hidden:
+//!
+//! * a shard's *request* shed (`"shed":true` with the request id) relays
+//!   verbatim — the client sees exactly what the shard said;
+//! * a shard's *connection* refusal (the gate's `id:-1` line) is
+//!   translated to a shed response carrying the request's id, because the
+//!   refusal applies to the router↔shard connection, not the client's;
+//! * a failover shard that does not serve the key's model answers
+//!   "unknown model" — the router translates that to a shed too (the
+//!   owning shard is down; the request is retryable, not defective);
+//! * when every shard is unreachable the router sheds explicitly rather
+//!   than hanging.
+//!
+//! `status` is answered by the router itself (fleet view: per-shard
+//! forward counts and health). `shutdown` stops the router only — shards
+//! are independent processes with their own lifecycles.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+use super::codec::{self, Op, Request, PROTOCOL};
+use super::http::{error_body_into, write_response, Outcome as HttpOutcome};
+use super::ring::Ring;
+use super::{admission, wire};
+
+/// Cap on one forwarded response line (artifact envelopes can be large).
+const MAX_FORWARD_RESPONSE: usize = 64 << 20;
+
+/// How long a shard stays out of rotation after a transport failure.
+const DOWN_COOLDOWN: Duration = Duration::from_millis(500);
+
+/// Shed message when no shard could answer a request.
+pub const ALL_SHARDS_DOWN: &str = "no shard reachable for this key; retry shortly";
+
+/// Shed message when the key's owning shard is down and the failover
+/// shard does not serve the model.
+pub const OWNER_DOWN: &str = "owning shard is unavailable; retry shortly";
+
+/// Router configuration (CLI `fames serve route=...`).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// NDJSON bind address; port 0 asks the OS for a free port.
+    pub addr: String,
+    /// Optional HTTP/1.1 front door bind address.
+    pub http_addr: Option<String>,
+    /// Shard NDJSON addresses — the ring's membership, order-insensitive.
+    pub shards: Vec<String>,
+    /// Most concurrent router→shard connections per shard.
+    pub pool_per_shard: usize,
+    /// Admission: most simultaneously served client connections.
+    pub max_conns: usize,
+    /// Most bytes one client request line (or HTTP body) may carry.
+    pub max_line: usize,
+    /// Per-flush write timeout toward clients (ms).
+    pub write_timeout_ms: u64,
+    /// Shard TCP connect timeout (ms).
+    pub connect_timeout_ms: u64,
+    /// Shard request round-trip timeout (ms) — also the pool-lease wait.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            addr: "127.0.0.1:4270".to_string(),
+            http_addr: None,
+            shards: Vec::new(),
+            pool_per_shard: 16,
+            max_conns: 1024,
+            max_line: 1 << 20,
+            write_timeout_ms: 10_000,
+            connect_timeout_ms: 500,
+            io_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// Router-side request counters (status + bench assertions).
+#[derive(Default)]
+pub struct RouterStats {
+    /// Requests answered by a shard (primary or failover).
+    pub forwarded: AtomicU64,
+    /// Requests that failed over past their primary shard.
+    pub rerouted: AtomicU64,
+    /// Requests the router itself shed (all shards down, owner down,
+    /// translated connection refusals).
+    pub shed: AtomicU64,
+    /// Malformed requests bounced at the router.
+    pub errors: AtomicU64,
+}
+
+/// One shard's bounded connection pool. Leases are capped; idle
+/// connections are reused; a transport failure drops the connection (a
+/// half-written stream can never be reused — it would desync request and
+/// response framing) and puts the shard on a cooldown.
+struct Pool {
+    addr: String,
+    cap: usize,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    forwarded: AtomicU64,
+}
+
+#[derive(Default)]
+struct PoolState {
+    idle: Vec<TcpStream>,
+    leased: usize,
+    down_until: Option<Instant>,
+}
+
+/// Lease accounting guard: always returns the slot (and optionally a
+/// healthy connection) to the pool, whatever path exits `round_trip`.
+struct Permit<'a> {
+    pool: &'a Pool,
+    put_back: Option<TcpStream>,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        let mut st = self.pool.state.lock().unwrap();
+        st.leased -= 1;
+        if let Some(s) = self.put_back.take() {
+            if st.idle.len() < self.pool.cap {
+                st.idle.push(s);
+            }
+        }
+        drop(st);
+        self.pool.cv.notify_one();
+    }
+}
+
+impl Pool {
+    fn new(addr: String, cap: usize, connect_timeout: Duration, io_timeout: Duration) -> Pool {
+        Pool {
+            addr,
+            cap: cap.max(1),
+            connect_timeout,
+            io_timeout,
+            state: Mutex::new(PoolState::default()),
+            cv: Condvar::new(),
+            forwarded: AtomicU64::new(0),
+        }
+    }
+
+    fn is_down(&self) -> bool {
+        matches!(self.state.lock().unwrap().down_until, Some(t) if Instant::now() < t)
+    }
+
+    /// Acquire a lease (bounded by `cap`, waiting at most `io_timeout`)
+    /// plus an idle connection when one is available.
+    fn acquire(&self) -> Result<(Permit<'_>, Option<TcpStream>)> {
+        let mut st = self.state.lock().unwrap();
+        let deadline = Instant::now() + self.io_timeout;
+        loop {
+            if let Some(t) = st.down_until {
+                if Instant::now() < t {
+                    bail!("shard {} is cooling down after a failure", self.addr);
+                }
+            }
+            if st.leased < self.cap {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("connection pool to shard {} is exhausted", self.addr);
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        st.leased += 1;
+        let idle = st.idle.pop();
+        Ok((Permit { pool: self, put_back: None }, idle))
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let sock: SocketAddr = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving shard address {}", self.addr))?
+            .next()
+            .with_context(|| format!("shard address {} resolves to nothing", self.addr))?;
+        let s = TcpStream::connect_timeout(&sock, self.connect_timeout)
+            .with_context(|| format!("connecting to shard {}", self.addr))?;
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(Some(self.io_timeout));
+        let _ = s.set_write_timeout(Some(self.io_timeout));
+        Ok(s)
+    }
+
+    /// One request line → one response line. A stale pooled connection
+    /// (closed by the shard since it was pooled) is retried once on a
+    /// fresh connection before the shard is declared down.
+    fn round_trip(&self, line: &str) -> Result<String> {
+        let (mut permit, idle) = self.acquire()?;
+        if let Some(s) = idle {
+            if let Ok(resp) = exchange(&s, line) {
+                if reusable(&resp) {
+                    permit.put_back = Some(s);
+                }
+                self.mark_up();
+                self.forwarded.fetch_add(1, Ordering::Relaxed);
+                return Ok(resp);
+            }
+            // fall through: the pooled connection was stale
+        }
+        let s = match self.connect() {
+            Ok(s) => s,
+            Err(e) => {
+                self.mark_down();
+                return Err(e);
+            }
+        };
+        match exchange(&s, line) {
+            Ok(resp) => {
+                if reusable(&resp) {
+                    permit.put_back = Some(s);
+                }
+                self.mark_up();
+                self.forwarded.fetch_add(1, Ordering::Relaxed);
+                Ok(resp)
+            }
+            Err(e) => {
+                self.mark_down();
+                Err(e).with_context(|| format!("forwarding to shard {}", self.addr))
+            }
+        }
+    }
+
+    fn mark_down(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.down_until = Some(Instant::now() + DOWN_COOLDOWN);
+        st.idle.clear(); // pooled connections to a failing shard are suspect
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn mark_up(&self) {
+        self.state.lock().unwrap().down_until = None;
+    }
+}
+
+/// Write one line, read one line. Serial per connection by construction
+/// (one lease = one in-flight request), so a fresh `BufReader` cannot
+/// strand buffered bytes.
+fn exchange(stream: &TcpStream, line: &str) -> std::io::Result<String> {
+    let mut w = stream;
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    match wire::read_line_bounded(&mut reader, &mut buf, MAX_FORWARD_RESPONSE)? {
+        wire::LineRead::Line => String::from_utf8(buf)
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-UTF-8 response")),
+        wire::LineRead::Eof => {
+            Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "shard closed connection"))
+        }
+        wire::LineRead::Oversized => {
+            Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "oversized shard response"))
+        }
+    }
+}
+
+/// May this shard connection serve another request? A connection-level
+/// refusal (`id:-1` shed) is followed by the shard closing the socket, so
+/// it must not go back in the pool. (Substring check: a false negative
+/// just costs one reconnect; a false positive is repaired by the stale
+/// retry in `round_trip`.)
+fn reusable(resp: &str) -> bool {
+    !resp.contains("\"id\":-1,\"ok\":false")
+}
+
+/// Did the shard answer with the gate's connection-refusal line?
+fn is_conn_refusal(resp: &str) -> bool {
+    if !resp.contains("\"id\":-1,\"ok\":false") {
+        return false;
+    }
+    let Ok(j) = Json::parse(resp) else { return false };
+    j.get("id").and_then(|v| v.as_i64()).map(|id| id == -1).unwrap_or(false)
+        && j.get("shed").and_then(|v| v.as_bool()).unwrap_or(false)
+}
+
+/// Extract the error message iff this is an "unknown model" rejection.
+fn unknown_model_error(resp: &str) -> Option<String> {
+    if !resp.contains("unknown model") {
+        return None;
+    }
+    let j = Json::parse(resp).ok()?;
+    if j.get("ok").and_then(|v| v.as_bool()).ok()? {
+        return None;
+    }
+    let err = j.get("error").ok()?.as_str().ok()?;
+    err.starts_with("unknown model").then(|| err.to_string())
+}
+
+/// State shared by the router's accept loops and connection threads.
+struct RouterShared {
+    ring: Ring,
+    pools: Vec<Pool>,
+    stats: RouterStats,
+    stop: AtomicBool,
+    addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
+    started: Instant,
+    gate: Arc<admission::Gate>,
+    max_line: usize,
+    write_timeout_ms: u64,
+}
+
+impl RouterShared {
+    /// Route one raw request line to its shard fleet and return the
+    /// response line to relay. Always answers: failures shed explicitly.
+    fn forward(&self, key: &str, id: i64, line: &str) -> String {
+        let order = self.ring.successors(key);
+        let mut failed_over = false;
+        for &shard in &order {
+            let resp = match self.pools[shard].round_trip(line) {
+                Ok(r) => r,
+                Err(_) => {
+                    failed_over = true;
+                    continue;
+                }
+            };
+            self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+            if is_conn_refusal(&resp) {
+                // the shard refused the router's *connection*; re-scope
+                // the shed to this request so the client can retry it
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                return wire::shed_line(id, admission::OVERLOADED_CONNS);
+            }
+            if failed_over {
+                self.stats.rerouted.fetch_add(1, Ordering::Relaxed);
+                if unknown_model_error(&resp).is_some() {
+                    // the failover shard does not serve this key — the
+                    // owner is down, which is overload, not a bad request
+                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    return wire::shed_line(id, OWNER_DOWN);
+                }
+            }
+            return resp;
+        }
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        wire::shed_line(id, ALL_SHARDS_DOWN)
+    }
+
+    fn status_json(&self) -> Json {
+        let mut shards = Json::arr();
+        for (i, p) in self.pools.iter().enumerate() {
+            shards.push(
+                Json::obj()
+                    .with("addr", self.ring.shards()[i].as_str())
+                    .with("forwarded", p.forwarded.load(Ordering::Relaxed) as usize)
+                    .with("down", p.is_down()),
+            );
+        }
+        Json::obj()
+            .with("protocol", PROTOCOL)
+            .with("role", "router")
+            .with("shards", shards)
+            .with("uptime_secs", self.started.elapsed().as_secs_f64())
+            .with(
+                "requests",
+                Json::obj()
+                    .with("forwarded", self.stats.forwarded.load(Ordering::Relaxed) as usize)
+                    .with("rerouted", self.stats.rerouted.load(Ordering::Relaxed) as usize)
+                    .with("shed", self.stats.shed.load(Ordering::Relaxed) as usize)
+                    .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize),
+            )
+            .with(
+                "admission",
+                Json::obj()
+                    .with("active_conns", self.gate.active())
+                    .with("max_conns", self.gate.max_conns())
+                    .with("shed_conns", self.gate.shed_total() as usize),
+            )
+    }
+
+    fn begin_shutdown(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = TcpStream::connect(self.addr);
+        if let Some(addr) = self.http_addr {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+}
+
+/// A bound fleet router. `bind` is cheap (no model warming — shards own
+/// that); `run` serves until a `shutdown` request.
+pub struct Router {
+    listener: TcpListener,
+    http_listener: Option<TcpListener>,
+    shared: Arc<RouterShared>,
+}
+
+impl Router {
+    pub fn bind(cfg: &RouterConfig) -> Result<Router> {
+        anyhow::ensure!(!cfg.shards.is_empty(), "router needs at least one shard (route=...)");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding fames route to {}", cfg.addr))?;
+        let http_listener = match &cfg.http_addr {
+            Some(a) => Some(
+                TcpListener::bind(a).with_context(|| format!("binding fames route http to {a}"))?,
+            ),
+            None => None,
+        };
+        let addr = listener.local_addr()?;
+        let http_addr = match &http_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+        let connect_timeout = Duration::from_millis(cfg.connect_timeout_ms.max(1));
+        let io_timeout = Duration::from_millis(cfg.io_timeout_ms.max(1));
+        let pools = cfg
+            .shards
+            .iter()
+            .map(|a| Pool::new(a.clone(), cfg.pool_per_shard, connect_timeout, io_timeout))
+            .collect();
+        Ok(Router {
+            listener,
+            http_listener,
+            shared: Arc::new(RouterShared {
+                ring: Ring::new(cfg.shards.clone()),
+                pools,
+                stats: RouterStats::default(),
+                stop: AtomicBool::new(false),
+                addr,
+                http_addr,
+                started: Instant::now(),
+                gate: Arc::new(admission::Gate::new(cfg.max_conns)),
+                max_line: cfg.max_line.max(64),
+                write_timeout_ms: cfg.write_timeout_ms.max(1),
+            }),
+        })
+    }
+
+    /// The bound NDJSON address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// The bound HTTP front-door address, when configured.
+    pub fn http_local_addr(&self) -> Option<SocketAddr> {
+        self.shared.http_addr
+    }
+
+    /// The routing ring (startup table, tests).
+    pub fn ring(&self) -> &Ring {
+        &self.shared.ring
+    }
+
+    /// Serve until a `shutdown` request. Mirrors `Server::run` minus the
+    /// batcher: the router holds no model state, so connections forward
+    /// synchronously and independently.
+    pub fn run(self) -> Result<()> {
+        let shared = self.shared;
+        let http_accept = self.http_listener.map(|l| {
+            let shared = shared.clone();
+            std::thread::spawn(move || http_accept_loop(l, &shared))
+        });
+        let mut conns: Vec<(std::thread::JoinHandle<()>, TcpStream)> = Vec::new();
+        for stream in self.listener.incoming() {
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            conns.retain(|(h, _)| !h.is_finished());
+            let Some(guard) = shared.gate.try_enter() else {
+                refuse_connection(stream);
+                continue;
+            };
+            let clone = stream.try_clone();
+            let shared2 = shared.clone();
+            let handle = std::thread::spawn(move || route_connection(stream, &shared2, guard));
+            match clone {
+                Ok(c) => conns.push((handle, c)),
+                Err(_) => drop(handle),
+            }
+        }
+        for (_, stream) in &conns {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        for (handle, _) in conns {
+            let _ = handle.join();
+        }
+        if let Some(h) = http_accept {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Answer a gate-refused NDJSON connection with one shed line and close
+/// (same contract as the daemon's refusal).
+fn refuse_connection(stream: TcpStream) {
+    std::thread::spawn(move || {
+        let mut s = stream;
+        let _ = s.set_write_timeout(Some(Duration::from_millis(1000)));
+        let mut line = wire::shed_line(-1, admission::OVERLOADED_CONNS);
+        line.push('\n');
+        let _ = s.write_all(line.as_bytes());
+    });
+}
+
+/// The ring key for one request: the model spec when given, else the
+/// single-model convenience key (every router instance agrees, so the
+/// convenience still lands on one deterministic shard).
+fn route_key(req: &Request) -> &str {
+    req.model.as_deref().unwrap_or("")
+}
+
+/// One NDJSON client connection: decode for routing, forward raw lines,
+/// relay raw responses. Serial per connection — a pipelining client's
+/// responses come back in request order.
+fn route_connection(stream: TcpStream, shared: &RouterShared, _guard: admission::ConnGuard) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(shared.write_timeout_ms)));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut writer = BufWriter::new(write_half);
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut send = |w: &mut BufWriter<TcpStream>, line: &str| -> bool {
+        w.write_all(line.as_bytes())
+            .and_then(|_| w.write_all(b"\n"))
+            .and_then(|_| w.flush())
+            .is_ok()
+    };
+    loop {
+        match wire::read_line_bounded(&mut reader, &mut buf, shared.max_line) {
+            Err(_) | Ok(wire::LineRead::Eof) => return,
+            Ok(wire::LineRead::Oversized) => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("request line exceeds {} bytes", shared.max_line);
+                if !send(&mut writer, &wire::err_line(-1, &msg)) {
+                    return;
+                }
+                continue;
+            }
+            Ok(wire::LineRead::Line) => {}
+        }
+        let Ok(text) = std::str::from_utf8(&buf) else {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            if !send(&mut writer, &wire::err_line(-1, "request line is not valid UTF-8")) {
+                return;
+            }
+            continue;
+        };
+        let trimmed = text.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let line = match wire::decode_line(trimmed) {
+            Err(e) => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let id = codec::request_id(trimmed);
+                if !send(&mut writer, &wire::err_line(id, &format!("{e:#}"))) {
+                    return;
+                }
+                continue;
+            }
+            Ok(req) => match req.op {
+                Op::Status => wire::ok_line(req.id, &shared.status_json()),
+                Op::Shutdown => {
+                    let ack = wire::ok_line(req.id, &Json::obj().with("stopping", true));
+                    let ok = send(&mut writer, &ack);
+                    shared.begin_shutdown();
+                    if !ok {
+                        return;
+                    }
+                    continue;
+                }
+                _ => shared.forward(route_key(&req), req.id, trimmed),
+            },
+        };
+        if !send(&mut writer, &line) {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP front door
+// ---------------------------------------------------------------------------
+
+/// Accept loop for the router's HTTP listener (mirrors the daemon's).
+fn http_accept_loop(listener: TcpListener, shared: &Arc<RouterShared>) {
+    let mut conns: Vec<(std::thread::JoinHandle<()>, TcpStream)> = Vec::new();
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        conns.retain(|(h, _)| !h.is_finished());
+        let Some(guard) = shared.gate.try_enter() else {
+            refuse_http_connection(stream);
+            continue;
+        };
+        let clone = stream.try_clone();
+        let shared2 = shared.clone();
+        let handle = std::thread::spawn(move || route_http_connection(stream, &shared2, guard));
+        match clone {
+            Ok(c) => conns.push((handle, c)),
+            Err(_) => drop(handle),
+        }
+    }
+    for (_, stream) in &conns {
+        let _ = stream.shutdown(std::net::Shutdown::Read);
+    }
+    for (handle, _) in conns {
+        let _ = handle.join();
+    }
+}
+
+fn refuse_http_connection(stream: TcpStream) {
+    std::thread::spawn(move || {
+        let mut s = stream;
+        let _ = s.set_write_timeout(Some(Duration::from_millis(1000)));
+        let mut body = String::new();
+        error_body_into(
+            &mut body,
+            -1,
+            "overloaded",
+            "connection limit reached",
+            admission::OVERLOADED_CONNS,
+        );
+        let out = HttpOutcome { status: 503, reason: "Service Unavailable", retry_after: true, close: true };
+        let _ = write_response(&mut s, &out, &body);
+    });
+}
+
+/// Serve one keep-alive HTTP connection on the router: parse, decode the
+/// body through the wire path, re-encode as a canonical NDJSON line,
+/// forward over the ring, and map the response envelope onto HTTP status
+/// codes (200 / 503 shed + `Retry-After` / 404 unknown model / 400).
+/// Success and error bodies are the NDJSON envelopes themselves.
+fn route_http_connection(stream: TcpStream, shared: &RouterShared, _guard: admission::ConnGuard) {
+    const MAX_HEADER_LINE: usize = 8192;
+    let timeout = Duration::from_millis(shared.write_timeout_ms);
+    let _ = stream.set_write_timeout(Some(timeout));
+    let _ = stream.set_read_timeout(Some(timeout));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut writer = BufWriter::new(write_half);
+    let mut reader = BufReader::new(stream);
+    let mut line: Vec<u8> = Vec::new();
+    let mut body_buf: Vec<u8> = Vec::new();
+    let mut resp = String::with_capacity(256);
+
+    loop {
+        // -- request line --
+        let req_line = loop {
+            match wire::read_line_bounded(&mut reader, &mut line, MAX_HEADER_LINE) {
+                Err(_) | Ok(wire::LineRead::Eof) => return,
+                Ok(wire::LineRead::Oversized) => {
+                    error_body_into(&mut resp, -1, "bad_request", "request line too long", "");
+                    let out = HttpOutcome {
+                        close: true,
+                        ..HttpOutcome::err(431, "Request Header Fields Too Large")
+                    };
+                    let _ = write_response(&mut writer, &out, &resp);
+                    return;
+                }
+                Ok(wire::LineRead::Line) => {}
+            }
+            let Ok(text) = std::str::from_utf8(&line) else { return };
+            let text = text.trim_end_matches('\r');
+            if !text.is_empty() {
+                break text.to_string();
+            }
+        };
+        let mut parts = req_line.split(' ').filter(|p| !p.is_empty());
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("HTTP/1.1").to_string();
+        let path = target.split('?').next().unwrap_or("").to_string();
+
+        // -- headers --
+        let mut content_length: Option<usize> = None;
+        let mut connection_close = version == "HTTP/1.0";
+        let mut expect_continue = false;
+        let headers_ok = loop {
+            match wire::read_line_bounded(&mut reader, &mut line, MAX_HEADER_LINE) {
+                Err(_) | Ok(wire::LineRead::Eof) => return,
+                Ok(wire::LineRead::Oversized) => break false,
+                Ok(wire::LineRead::Line) => {}
+            }
+            let Ok(text) = std::str::from_utf8(&line) else { break false };
+            let text = text.trim_end_matches('\r');
+            if text.is_empty() {
+                break true;
+            }
+            let Some((name, value)) = text.split_once(':') else { continue };
+            let value = value.trim();
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => content_length = value.parse::<usize>().ok(),
+                "connection" => {
+                    let v = value.to_ascii_lowercase();
+                    if v.contains("close") {
+                        connection_close = true;
+                    } else if v.contains("keep-alive") {
+                        connection_close = false;
+                    }
+                }
+                "expect" => expect_continue = value.to_ascii_lowercase().contains("100-continue"),
+                _ => {}
+            }
+        };
+        if !headers_ok {
+            error_body_into(&mut resp, -1, "bad_request", "malformed or oversized headers", "");
+            let out =
+                HttpOutcome { close: true, ..HttpOutcome::err(431, "Request Header Fields Too Large") };
+            let _ = write_response(&mut writer, &out, &resp);
+            return;
+        }
+
+        // -- body --
+        let body: String = if method == "POST" {
+            let Some(len) = content_length else {
+                error_body_into(&mut resp, -1, "bad_request", "POST requires Content-Length", "");
+                let out = HttpOutcome { close: true, ..HttpOutcome::err(411, "Length Required") };
+                let _ = write_response(&mut writer, &out, &resp);
+                return;
+            };
+            if len > shared.max_line {
+                let detail = format!("body is {len} bytes, limit is {}", shared.max_line);
+                error_body_into(&mut resp, -1, "payload_too_large", "request body exceeds the line limit", &detail);
+                let out = HttpOutcome { close: true, ..HttpOutcome::err(413, "Payload Too Large") };
+                let _ = write_response(&mut writer, &out, &resp);
+                return;
+            }
+            if expect_continue
+                && writer.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").and_then(|_| writer.flush()).is_err()
+            {
+                return;
+            }
+            body_buf.resize(len, 0);
+            if reader.read_exact(&mut body_buf).is_err() {
+                return;
+            }
+            match std::str::from_utf8(&body_buf) {
+                Ok(s) => s.to_string(),
+                Err(_) => {
+                    error_body_into(&mut resp, -1, "bad_request", "request body is not valid UTF-8", "");
+                    let out = HttpOutcome::err(400, "Bad Request");
+                    if write_response(&mut writer, &out, &resp).is_err() || connection_close {
+                        return;
+                    }
+                    continue;
+                }
+            }
+        } else {
+            String::new()
+        };
+
+        // -- route --
+        let mut out = match (method.as_str(), path.as_str()) {
+            ("GET", "/v1/status") => {
+                resp.clear();
+                shared.status_json().write_compact_into(&mut resp);
+                HttpOutcome::ok()
+            }
+            ("POST", "/v1/evaluate") => http_forward(shared, &body, "evaluate", &mut resp),
+            ("POST", "/v1/energy") => http_forward(shared, &body, "energy", &mut resp),
+            ("POST", "/v1/select") => http_forward(shared, &body, "select", &mut resp),
+            ("GET" | "POST", _) => {
+                let detail = format!("no route for {method} {path}");
+                error_body_into(&mut resp, -1, "not_found", "unknown route", &detail);
+                HttpOutcome::err(404, "Not Found")
+            }
+            _ => {
+                error_body_into(&mut resp, -1, "method_not_allowed", "use GET or POST", &method);
+                HttpOutcome::err(405, "Method Not Allowed")
+            }
+        };
+        out.close = out.close || connection_close;
+        let write_ok = write_response(&mut writer, &out, &resp).is_ok();
+        if !write_ok || out.close {
+            return;
+        }
+    }
+}
+
+/// Decode one HTTP body, forward it over the ring as a canonical NDJSON
+/// line, and translate the response envelope to an HTTP outcome.
+fn http_forward(shared: &RouterShared, body: &str, route_op: &str, resp: &mut String) -> HttpOutcome {
+    let req = match wire::decode_body(body, route_op) {
+        Ok(req) => req,
+        Err(e) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            error_body_into(resp, -1, "bad_request", "request body could not be decoded", &format!("{e:#}"));
+            return HttpOutcome::err(400, "Bad Request");
+        }
+    };
+    let line = request_line(&req);
+    let answer = shared.forward(route_key(&req), req.id, &line);
+    resp.clear();
+    resp.push_str(&answer);
+    let Ok(j) = Json::parse(&answer) else {
+        error_body_into(resp, req.id, "internal", "shard response was not valid JSON", "");
+        return HttpOutcome::err(500, "Internal Server Error");
+    };
+    if j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false) {
+        return HttpOutcome::ok();
+    }
+    if j.get("shed").and_then(|v| v.as_bool()).unwrap_or(false) {
+        return HttpOutcome { status: 503, reason: "Service Unavailable", retry_after: true, close: false };
+    }
+    let err = j.get("error").ok().and_then(|v| v.as_str().ok()).unwrap_or("");
+    if err.starts_with("unknown model") {
+        HttpOutcome::err(404, "Not Found")
+    } else {
+        HttpOutcome::err(400, "Bad Request")
+    }
+}
+
+/// Re-encode a decoded request as a canonical NDJSON line (the HTTP front
+/// door's bridge onto the line protocol). Non-finite Ω entries cross as
+/// `null`, which the shard's decoder reads back as NaN — the same image
+/// the tree codec uses — so `decode_line(request_line(r)) == r`.
+fn request_line(req: &Request) -> String {
+    let mut j = Json::obj().with("id", req.id);
+    if let Some(m) = &req.model {
+        j = j.with("model", m.as_str());
+    }
+    j = match &req.op {
+        Op::Evaluate { batches, selection } => {
+            let mut j = j.with("op", "evaluate").with("batches", *batches);
+            if let Some(s) = selection {
+                j = j.with("selection", s.as_slice());
+            }
+            j
+        }
+        Op::Energy { selection } => j.with("op", "energy").with("selection", selection.as_slice()),
+        Op::Select { r_energy, omega } => {
+            let rows: Vec<Json> = omega
+                .iter()
+                .map(|row| Json::Arr(row.iter().map(|&v| Json::from(v)).collect()))
+                .collect();
+            j.with("op", "select").with("r_energy", *r_energy).with("omega", Json::Arr(rows))
+        }
+        Op::ArtifactGet { kind, fingerprint } => j
+            .with("op", "artifact_get")
+            .with("kind", kind.as_str())
+            .with("fingerprint", fingerprint.as_str()),
+        Op::ArtifactPut { kind, envelope } => {
+            j.with("op", "artifact_put").with("kind", kind.as_str()).with("envelope", envelope.clone())
+        }
+        Op::Status => j.with("op", "status"),
+        Op::Shutdown => j.with("op", "shutdown"),
+    };
+    j.compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_line_round_trips_through_the_decoder() {
+        let cases = vec![
+            Request { id: 7, model: Some("m/c".into()), op: Op::Evaluate { batches: 3, selection: None } },
+            Request {
+                id: 1,
+                model: None,
+                op: Op::Evaluate { batches: 1, selection: Some(vec![0, 2, 1]) },
+            },
+            Request { id: 2, model: Some("a/b".into()), op: Op::Energy { selection: vec![1, 1] } },
+            Request {
+                id: 3,
+                model: None,
+                op: Op::Select { r_energy: 0.7, omega: vec![vec![0.1, f64::NAN], vec![0.2]] },
+            },
+            Request {
+                id: 4,
+                model: None,
+                op: Op::ArtifactGet { kind: "library".into(), fingerprint: "00deadbeef00cafe".into() },
+            },
+            Request {
+                id: 5,
+                model: None,
+                op: Op::ArtifactPut {
+                    kind: "k".into(),
+                    envelope: Json::obj().with("schema", "fames-store-v1").with("payload", 1i64),
+                },
+            },
+        ];
+        for req in cases {
+            let line = request_line(&req);
+            let back = wire::decode_line(&line).expect(&line);
+            // NaN-bearing requests compare via Debug (NaN != NaN).
+            assert_eq!(format!("{req:?}"), format!("{back:?}"), "round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn shard_response_classifiers() {
+        let conn_shed = wire::shed_line(-1, admission::OVERLOADED_CONNS);
+        assert!(is_conn_refusal(&conn_shed));
+        assert!(!reusable(&conn_shed));
+
+        let req_shed = wire::shed_line(9, admission::OVERLOADED_QUEUE);
+        assert!(!is_conn_refusal(&req_shed));
+        assert!(reusable(&req_shed));
+
+        let ok = wire::ok_line(3, &Json::obj().with("accuracy", 0.5));
+        assert!(!is_conn_refusal(&ok));
+        assert!(reusable(&ok));
+        assert!(unknown_model_error(&ok).is_none());
+
+        let unknown = wire::err_line(4, "unknown model 'x/y' (loaded: a/b)");
+        assert!(unknown_model_error(&unknown).is_some());
+        let other_err = wire::err_line(4, "selection has 3 picks, model has 2 layers");
+        assert!(unknown_model_error(&other_err).is_none());
+    }
+
+    #[test]
+    fn pool_cooldown_fails_fast() {
+        // Nothing listens on this address; the first round trip marks the
+        // shard down, the second fails fast on the cooldown.
+        let p = Pool::new(
+            "127.0.0.1:1".to_string(),
+            2,
+            Duration::from_millis(50),
+            Duration::from_millis(100),
+        );
+        assert!(p.round_trip("{\"id\":1,\"op\":\"status\"}").is_err());
+        assert!(p.is_down());
+        let err = p.round_trip("{\"id\":1,\"op\":\"status\"}").unwrap_err();
+        assert!(format!("{err:#}").contains("cooling down"), "{err:#}");
+    }
+
+    #[test]
+    fn router_sheds_when_all_shards_are_down() {
+        let cfg = RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: vec!["127.0.0.1:1".to_string()],
+            connect_timeout_ms: 50,
+            io_timeout_ms: 100,
+            ..RouterConfig::default()
+        };
+        let r = Router::bind(&cfg).unwrap();
+        let line = r.shared.forward("m/c", 42, "{\"id\":42,\"op\":\"status\"}");
+        assert!(line.contains("\"shed\":true"), "{line}");
+        assert!(line.contains("\"id\":42"), "{line}");
+        assert_eq!(r.shared.stats.shed.load(Ordering::Relaxed), 1);
+    }
+}

@@ -156,6 +156,9 @@ struct Fields<'a> {
     selection: Option<std::result::Result<Vec<usize>, String>>,
     r_energy: Option<std::result::Result<f64, String>>,
     omega: Option<std::result::Result<Vec<Vec<f64>>, String>>,
+    kind: Option<std::result::Result<Cow<'a, str>, String>>,
+    fingerprint: Option<std::result::Result<Cow<'a, str>, String>>,
+    envelope: Option<std::result::Result<Json, String>>,
 }
 
 /// One pass over the object: known keys go through their typed parser
@@ -188,6 +191,9 @@ fn scan_fields(bytes: &[u8]) -> Result<Fields<'_>> {
                 "selection" => f.selection = Some(lx.typed(|l| l.usize_vec())?),
                 "r_energy" => f.r_energy = Some(lx.typed(|l| l.num_scalar())?),
                 "omega" => f.omega = Some(lx.typed(|l| l.omega_table())?),
+                "kind" => f.kind = Some(lx.typed(|l| l.string())?),
+                "fingerprint" => f.fingerprint = Some(lx.typed(|l| l.string())?),
+                "envelope" => f.envelope = Some(lx.typed(|l| l.json_value())?),
                 _ => lx.skip_value()?,
             }
             lx.skip_ws();
@@ -267,9 +273,35 @@ fn finish(f: Fields<'_>, route_op: Option<&str>) -> Result<Request> {
                 Some(Err(e)) => bail!("'omega': {e}"),
             },
         },
+        "artifact_get" => Op::ArtifactGet {
+            kind: match f.kind {
+                None => bail!("missing key 'kind'"),
+                Some(Ok(k)) => k.into_owned(),
+                Some(Err(e)) => bail!("'kind' must be a string: {e}"),
+            },
+            fingerprint: match f.fingerprint {
+                None => bail!("missing key 'fingerprint'"),
+                Some(Ok(fp)) => fp.into_owned(),
+                Some(Err(e)) => bail!("'fingerprint' must be a string: {e}"),
+            },
+        },
+        "artifact_put" => Op::ArtifactPut {
+            kind: match f.kind {
+                None => bail!("missing key 'kind'"),
+                Some(Ok(k)) => k.into_owned(),
+                Some(Err(e)) => bail!("'kind' must be a string: {e}"),
+            },
+            envelope: match f.envelope {
+                None => bail!("missing key 'envelope'"),
+                Some(Ok(v)) => v,
+                Some(Err(e)) => bail!("'envelope': {e}"),
+            },
+        },
         "status" => Op::Status,
         "shutdown" => Op::Shutdown,
-        other => bail!("unknown op '{other}' (evaluate|energy|select|status|shutdown)"),
+        other => bail!(
+            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|status|shutdown)"
+        ),
     };
     Ok(Request { id, model, op })
 }
@@ -575,6 +607,18 @@ impl<'a> Lex<'a> {
         }
     }
 
+    /// Parse one arbitrary JSON value (the `envelope` field) by validating
+    /// its span with [`Lex::skip_value`] and handing the exact slice to the
+    /// tree parser — the only field whose shape is open-ended, so the tree
+    /// is the right representation (it round-trips to the store unchanged).
+    fn json_value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.pos;
+        self.skip_value()?;
+        let s = std::str::from_utf8(&self.b[start..self.pos]).context("invalid utf8 in value")?;
+        Json::parse(s)
+    }
+
     /// Validate and discard one JSON value without building anything.
     /// Containers live on a fixed `[u8; MAX_DEPTH]` stack (1 = array,
     /// 2 = object) — the same depth bound as the tree parser, so the two
@@ -778,6 +822,12 @@ mod tests {
             r#"{"id":3,"op":"select","r_energy":0.7,"omega":[[0.1,null],[0.2]]}"#.into(),
             r#"{"id":4,"op":"status"}"#.into(),
             r#"{"id":5,"op":"shutdown"}"#.into(),
+            r#"{"id":6,"op":"artifact_get","kind":"library","fingerprint":"00deadbeef00cafe"}"#
+                .into(),
+            r#"{"id":7,"op":"artifact_put","kind":"library","envelope":{"schema":"fames-store-v1","version":1,"payload":{"a":[1,null,"s"],"b":true}}}"#
+                .into(),
+            r#"{"id":8,"op":"artifact_put","kind":"k","envelope":[1,2,3]}"#.into(),
+            r#"{"id":9,"op":"artifact_put","kind":"k","envelope":null}"#.into(),
             // whitespace, duplicates (last wins), escaped keys and values
             "  {\"id\" :\t9 , \"op\" : \"status\" }  ".into(),
             r#"{"id":1,"id":2,"op":"status"}"#.into(),
@@ -811,6 +861,14 @@ mod tests {
             r#"{"id":1,"op":"energy"}"#.into(),
             r#"{"id":1,"op":"select","r_energy":0.5,"omega":[["x"]]}"#.into(),
             r#"{"id":1,"op":"select","omega":[]}"#.into(),
+            r#"{"id":1,"op":"artifact_get","kind":"library"}"#.into(),
+            r#"{"id":1,"op":"artifact_get","fingerprint":"00"}"#.into(),
+            r#"{"id":1,"op":"artifact_get","kind":5,"fingerprint":"00"}"#.into(),
+            r#"{"id":1,"op":"artifact_get","kind":"k","fingerprint":[1]}"#.into(),
+            r#"{"id":1,"op":"artifact_put","kind":"k"}"#.into(),
+            r#"{"id":1,"op":"artifact_put","kind":"k","envelope":{"x":}}"#.into(),
+            // wrong-typed artifact fields unused by the op are ignored
+            r#"{"id":1,"op":"status","kind":5,"fingerprint":[],"envelope":{"a":1}}"#.into(),
             r#"{"id":1,"op":"status"} trailing"#.into(),
             r#"{"id":1,"op":"status",}"#.into(),
             r#"{"id":1 "op":"status"}"#.into(),

@@ -18,6 +18,7 @@ use crate::json::Json;
 use crate::select::Solution;
 use crate::sensitivity::PerturbTable;
 use crate::store::Fingerprint;
+use crate::tensor::{Tensor, TensorStore};
 use crate::util::hash::Fnv64;
 
 pub const LIBRARY_KIND: &str = "library";
@@ -31,6 +32,9 @@ pub const SOLUTION_VERSION: u32 = 1;
 
 pub const CALIB_KIND: &str = "calibration";
 pub const CALIB_VERSION: u32 = 1;
+
+pub const PARAMS_KIND: &str = "params";
+pub const PARAMS_VERSION: u32 = 1;
 
 // ---- AppMul library (including LUT payloads) ----
 
@@ -174,6 +178,49 @@ pub fn solution_from_json(j: &Json) -> Result<Solution> {
         optimal: j.get("optimal")?.as_bool()?,
         nodes: nodes as u64,
     })
+}
+
+// ---- trained parameters (cluster warm handoff) ----
+
+/// Serialize a trained parameter set for replication. Every f32 crosses
+/// the wire as its exact f64 image (shortest-roundtrip formatting parses
+/// back to the same f64, which narrows back to the same f32), so a peer's
+/// parameters are bit-identical to local training. Non-finite values are
+/// rejected — JSON would null them — and the caller simply doesn't
+/// persist (a poisoned parameter set is not worth replicating).
+pub fn params_to_json(params: &TensorStore) -> Result<Json> {
+    let mut tensors = Json::arr();
+    for (name, t) in params.iter() {
+        ensure!(
+            t.data().iter().all(|v| v.is_finite()),
+            "non-finite value in parameter '{name}' cannot cross the JSON boundary"
+        );
+        tensors.push(
+            Json::obj()
+                .with("name", name.as_str())
+                .with("shape", t.shape())
+                .with("data", Json::Arr(t.data().iter().map(|&v| Json::from(v as f64)).collect())),
+        );
+    }
+    Ok(Json::obj().with("tensors", tensors))
+}
+
+pub fn params_from_json(j: &Json) -> Result<TensorStore> {
+    let mut params = TensorStore::new();
+    for (i, t) in j.get("tensors")?.as_arr()?.iter().enumerate() {
+        let ctx = || format!("params tensor {i}");
+        let name = t.get("name")?.as_str().with_context(ctx)?;
+        let shape = t.get("shape")?.as_usize_vec().with_context(ctx)?;
+        let data: Vec<f32> = t
+            .get("data")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_f64()? as f32))
+            .collect::<Result<_>>()
+            .with_context(ctx)?;
+        params.insert(name.to_string(), Tensor::new(shape, data).with_context(ctx)?);
+    }
+    Ok(params)
 }
 
 // ---- calibration outcome ----

@@ -30,9 +30,11 @@
 //! same bit pattern for every finite value.
 
 pub mod codec;
+pub mod remote;
 
 use std::fmt;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
@@ -139,15 +141,66 @@ pub struct StoreStat {
     pub by_kind: Vec<(String, usize, u64)>,
 }
 
-/// A content-addressed store rooted at one directory.
+/// A store kind name that is safe to join into a path (wire-facing APIs
+/// reject anything else — `kind` arrives over the network in cluster mode
+/// and must never traverse outside the store root).
+pub fn kind_is_safe(kind: &str) -> bool {
+    !kind.is_empty()
+        && kind.len() <= 64
+        && kind.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+/// Validate a full envelope document against an expected address. Returns
+/// the payload on success; any header mismatch is `None` (a miss), exactly
+/// the local `get` contract — shared by the local read path and the remote
+/// tier so a corrupt peer response is indistinguishable from a cache miss.
+fn validate_envelope<'a>(
+    doc: &'a Json,
+    kind: &str,
+    version: u32,
+    fp: Fingerprint,
+) -> Option<&'a Json> {
+    let header_ok = |key: &str, want: &str| {
+        doc.opt(key).and_then(|v| v.as_str().ok()).map(|s| s == want).unwrap_or(false)
+    };
+    if !header_ok("schema", ENVELOPE_SCHEMA)
+        || !header_ok("kind", kind)
+        || !header_ok("fingerprint", &fp.hex())
+        || doc.opt("version").and_then(|v| v.as_usize().ok()) != Some(version as usize)
+    {
+        return None;
+    }
+    doc.opt("payload")
+}
+
+/// A content-addressed store rooted at one directory, with an optional
+/// remote read-through tier: a local miss consults fleet peers by
+/// fingerprint (see [`remote::RemoteTier`]) and caches verified hits
+/// locally, so warm artifacts replicate instead of being recomputed.
 pub struct Store {
     root: PathBuf,
+    remote: Option<remote::RemoteTier>,
 }
+
+/// Process-wide sequence for temp-file names: two threads `put`ting the
+/// same entry concurrently must not share a temp path, or one thread's
+/// rename could publish the other's half-written bytes.
+static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl Store {
     /// Bind a store to a directory (created lazily on first `put`).
     pub fn open(root: impl Into<PathBuf>) -> Store {
-        Store { root: root.into() }
+        Store { root: root.into(), remote: None }
+    }
+
+    /// Attach (or detach) the remote read-through tier.
+    pub fn with_remote(mut self, remote: Option<remote::RemoteTier>) -> Store {
+        self.remote = remote;
+        self
+    }
+
+    pub fn remote(&self) -> Option<&remote::RemoteTier> {
+        self.remote.as_ref()
     }
 
     pub fn root(&self) -> &Path {
@@ -158,24 +211,72 @@ impl Store {
         self.root.join(kind).join(format!("{}.json", fp.hex()))
     }
 
-    /// Load an entry's payload. Returns `None` on a miss — including a
-    /// missing file, unparseable JSON, a wrong envelope schema/kind, a
-    /// stale codec `version`, or a fingerprint mismatch. Cache corruption
-    /// degrades to recomputation, never to an error.
+    /// Load an entry's payload, consulting the remote tier on a local
+    /// miss. A verified remote hit is cached locally (write failures are
+    /// ignored — read-through still serves). Returns `None` only when
+    /// every tier misses; corruption anywhere degrades to recomputation,
+    /// never to an error.
     pub fn get(&self, kind: &str, version: u32, fp: Fingerprint) -> Option<Json> {
+        if let Some(payload) = self.get_local(kind, version, fp) {
+            return Some(payload);
+        }
+        let payload = self.remote.as_ref()?.fetch(kind, version, fp)?;
+        let _ = self.put(kind, version, fp, payload.clone());
+        Some(payload)
+    }
+
+    /// Load an entry's payload from the local tier only. Returns `None` on
+    /// a miss — including a missing file, unparseable JSON, a wrong
+    /// envelope schema/kind, a stale codec `version`, or a fingerprint
+    /// mismatch. This is also what a daemon answers `artifact_get` from,
+    /// so peers can never chain fetches through each other.
+    pub fn get_local(&self, kind: &str, version: u32, fp: Fingerprint) -> Option<Json> {
         let path = self.entry_path(kind, fp);
         let doc = Json::load(&path).ok()?;
+        validate_envelope(&doc, kind, version, fp).cloned()
+    }
+
+    /// Load a full envelope document from the local tier for replication
+    /// (`artifact_get` service path). Headers are checked except
+    /// `version` — the *requesting* side validates version against its own
+    /// codec, so a newer peer can still serve an older fleet's misses.
+    pub fn envelope_local(&self, kind: &str, fp: Fingerprint) -> Option<Json> {
+        if !kind_is_safe(kind) {
+            return None;
+        }
+        let doc = Json::load(&self.entry_path(kind, fp)).ok()?;
         let header_ok = |key: &str, want: &str| {
             doc.opt(key).and_then(|v| v.as_str().ok()).map(|s| s == want).unwrap_or(false)
         };
         if !header_ok("schema", ENVELOPE_SCHEMA)
             || !header_ok("kind", kind)
             || !header_ok("fingerprint", &fp.hex())
-            || doc.opt("version").and_then(|v| v.as_usize().ok()) != Some(version as usize)
+            || doc.opt("version").and_then(|v| v.as_usize().ok()).is_none()
         {
             return None;
         }
-        doc.opt("payload").cloned()
+        doc.opt("payload")?;
+        Some(doc)
+    }
+
+    /// Accept a full envelope offered by a peer (`artifact_put` service
+    /// path): every header is re-validated here — schema, safe kind
+    /// matching the request, well-formed fingerprint, version, payload —
+    /// before anything touches disk, so a corrupt or hostile peer cannot
+    /// poison the store.
+    pub fn put_envelope(&self, kind: &str, envelope: &Json) -> Result<Fingerprint> {
+        anyhow::ensure!(kind_is_safe(kind), "unsafe store kind {kind:?}");
+        let schema = envelope.get("schema")?.as_str().context("'schema' must be a string")?;
+        anyhow::ensure!(schema == ENVELOPE_SCHEMA, "unknown envelope schema {schema:?}");
+        let env_kind = envelope.get("kind")?.as_str().context("'kind' must be a string")?;
+        anyhow::ensure!(env_kind == kind, "envelope kind {env_kind:?} does not match {kind:?}");
+        let version = envelope.get("version")?.as_usize().context("'version'")?;
+        let fp_hex = envelope.get("fingerprint")?.as_str().context("'fingerprint'")?;
+        let fp = Fingerprint::from_hex(fp_hex)
+            .with_context(|| format!("malformed fingerprint {fp_hex:?}"))?;
+        let payload = envelope.get("payload").context("envelope has no payload")?;
+        self.put(kind, version as u32, fp, payload.clone())?;
+        Ok(fp)
     }
 
     /// Persist an entry (compact JSON, temp-file + rename for atomicity).
@@ -190,7 +291,12 @@ impl Store {
             .with("version", version as usize)
             .with("fingerprint", fp.hex())
             .with("payload", payload);
-        let tmp = parent.join(format!("{}.tmp{}", fp.hex(), std::process::id()));
+        let tmp = parent.join(format!(
+            "{}.tmp{}-{}",
+            fp.hex(),
+            std::process::id(),
+            PUT_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, doc.compact())
             .with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, &path)

@@ -1,0 +1,180 @@
+//! Remote read-through tier for the artifact store — fetch-by-fingerprint
+//! over the `fames serve` NDJSON wire protocol.
+//!
+//! In cluster mode every daemon serves two extra ops from its **local**
+//! store tier (never chaining to its own peers, so fetches cannot cycle):
+//!
+//! ```text
+//! → {"id":0,"op":"artifact_get","kind":"library","fingerprint":"00ab.."}
+//! ← {"id":0,"ok":true,"result":{"envelope":{..full envelope..}}}   (hit)
+//! ← {"id":0,"ok":true,"result":{"envelope":null}}                  (miss)
+//! → {"id":0,"op":"artifact_put","kind":"library","envelope":{..}}
+//! ← {"id":0,"ok":true,"result":{"fingerprint":"00ab.."}}
+//! ```
+//!
+//! [`RemoteTier::fetch`] tries peers in order and returns the first
+//! response whose envelope passes the **full local validation** (schema,
+//! kind, version, fingerprint — the same checks `Store::get_local`
+//! applies to disk bytes). A corrupt, mis-addressed or truncated peer
+//! response is skipped exactly like a miss; a down peer is a transport
+//! error, also skipped. When every tier misses the caller recomputes —
+//! the remote tier can therefore never make a pipeline *wrong*, only
+//! faster.
+//!
+//! All sockets are bounded: connect/read/write timeouts plus a hard cap
+//! on the response line, so one stuck peer delays a warm-up by at most
+//! `peers × io_timeout` and can never balloon memory.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+use crate::serve::wire::{read_line_bounded, LineRead};
+
+use super::{validate_envelope, Fingerprint, ENVELOPE_SCHEMA};
+
+/// Hard cap on one peer response line. Artifact envelopes (library tables,
+/// Ω rows, calibration state, serialized params) are compact JSON; 64 MiB
+/// is far above any real payload and far below a memory-pressure problem.
+const MAX_RESPONSE_LINE: usize = 64 << 20;
+
+/// Cumulative counters for one tier (exposed via `status`/logs so
+/// operators can see whether handoff is actually replicating).
+#[derive(Debug, Default)]
+pub struct RemoteStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    /// Transport failures and validation rejections combined — anything
+    /// that made a peer unusable for one fetch.
+    pub errors: AtomicU64,
+}
+
+/// An ordered list of fleet peers to consult on local store misses.
+pub struct RemoteTier {
+    peers: Vec<String>,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+    stats: RemoteStats,
+}
+
+impl RemoteTier {
+    /// A tier over `host:port` peer addresses, tried in order.
+    pub fn new(peers: Vec<String>) -> RemoteTier {
+        RemoteTier {
+            peers,
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(5000),
+            stats: RemoteStats::default(),
+        }
+    }
+
+    /// Override the per-peer connect / read / write timeouts.
+    pub fn with_timeouts(mut self, connect: Duration, io: Duration) -> RemoteTier {
+        self.connect_timeout = connect;
+        self.io_timeout = io;
+        self
+    }
+
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+
+    pub fn stats(&self) -> &RemoteStats {
+        &self.stats
+    }
+
+    /// Fetch one payload by address, trying peers in order. Returns the
+    /// first envelope that passes full validation against the requested
+    /// `<kind>/<version>/<fingerprint>`; `None` when every peer misses,
+    /// fails, or serves something corrupt.
+    pub fn fetch(&self, kind: &str, version: u32, fp: Fingerprint) -> Option<Json> {
+        let req = Json::obj()
+            .with("id", 0i64)
+            .with("op", "artifact_get")
+            .with("kind", kind)
+            .with("fingerprint", fp.hex());
+        let line = req.compact();
+        for peer in &self.peers {
+            match self.call(peer, &line) {
+                Ok(result) => match result.opt("envelope") {
+                    Some(env) if !matches!(env, Json::Null) => {
+                        match validate_envelope(env, kind, version, fp) {
+                            Some(payload) => {
+                                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                                return Some(payload.clone());
+                            }
+                            None => {
+                                // served bytes that fail validation: treat
+                                // the peer as corrupt for this entry
+                                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    _ => {
+                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+                Err(_) => {
+                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        None
+    }
+
+    /// Offer one entry to every peer (best-effort replication push).
+    /// Returns how many peers acknowledged the write.
+    pub fn offer(&self, kind: &str, version: u32, fp: Fingerprint, payload: &Json) -> usize {
+        let envelope = Json::obj()
+            .with("schema", ENVELOPE_SCHEMA)
+            .with("kind", kind)
+            .with("version", version as usize)
+            .with("fingerprint", fp.hex())
+            .with("payload", payload.clone());
+        let req = Json::obj()
+            .with("id", 0i64)
+            .with("op", "artifact_put")
+            .with("kind", kind)
+            .with("envelope", envelope);
+        let line = req.compact();
+        self.peers.iter().filter(|peer| self.call(peer, &line).is_ok()).count()
+    }
+
+    /// One request/response round-trip with a peer: bounded connect,
+    /// bounded I/O, bounded response line. Returns the `result` object of
+    /// an `ok:true` response; everything else is an error.
+    fn call(&self, peer: &str, line: &str) -> Result<Json> {
+        let addr = peer
+            .to_socket_addrs()
+            .with_context(|| format!("resolving peer {peer:?}"))?
+            .next()
+            .with_context(|| format!("peer {peer:?} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&addr, self.connect_timeout)
+            .with_context(|| format!("connecting to peer {peer}"))?;
+        stream.set_read_timeout(Some(self.io_timeout))?;
+        stream.set_write_timeout(Some(self.io_timeout))?;
+        let mut writer = stream.try_clone().context("cloning peer stream")?;
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut buf = Vec::new();
+        match read_line_bounded(&mut reader, &mut buf, MAX_RESPONSE_LINE)? {
+            LineRead::Line => {}
+            LineRead::Eof => anyhow::bail!("peer {peer} closed without answering"),
+            LineRead::Oversized => anyhow::bail!("peer {peer} response exceeds the line cap"),
+        }
+        let text = std::str::from_utf8(&buf).context("peer response is not UTF-8")?;
+        let resp = Json::parse(text).context("peer response is not valid JSON")?;
+        anyhow::ensure!(
+            resp.opt("ok").and_then(|v| v.as_bool().ok()) == Some(true),
+            "peer {peer} answered an error: {}",
+            resp.opt("error").and_then(|v| v.as_str().ok().map(str::to_string)).unwrap_or_default()
+        );
+        resp.opt("result").cloned().context("peer response has no result")
+    }
+}

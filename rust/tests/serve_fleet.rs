@@ -1,0 +1,352 @@
+//! Cluster-mode fleet suite — a consistent-hash router in front of
+//! sharded `fames serve` daemons, against synthetic artifacts.
+//!
+//! Pins the three cluster-mode contracts end to end:
+//!
+//! 1. **Fleet equivalence** — responses routed through the router to a
+//!    2-shard fleet are byte-identical to direct `Session` calls, at
+//!    `jobs` 1, 4 and auto (the single-node guarantee survives sharding).
+//! 2. **Failure semantics** — killing a shard mid-load either re-routes
+//!    to a surviving replica (same bytes) or sheds explicitly with
+//!    `"shed":true`; no request hangs and no id is lost.
+//! 3. **Warm handoff** — a replacement shard warms by pulling calibrated
+//!    artifacts (params + library) from a peer through the remote store
+//!    tier instead of recomputing, and stays bit-identical.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use fames::json::Json;
+use fames::pipeline::{self, FamesConfig, ParamsSource};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+use fames::runtime::Runtime;
+use fames::serve::{codec, Client, Outcome, Ring, Router, RouterConfig, ServeConfig, Server};
+
+/// Two models so routing is observable: distinct params, distinct bytes.
+const KEYS: [&str; 2] = ["resnet8/w4a4", "resnet14/w3a3"];
+
+fn setup_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-fleet-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    for key in KEYS {
+        let (model, cfg) = key.split_once('/').unwrap();
+        write_synthetic_artifacts(&root, &SyntheticSpec::small(model, cfg)).unwrap();
+    }
+    root
+}
+
+fn base_cfg(root: &std::path::Path) -> FamesConfig {
+    FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: 200,
+        train_lr: 0.02,
+        ..FamesConfig::default()
+    }
+}
+
+fn cfg_for(base: &FamesConfig, key: &str) -> FamesConfig {
+    let (model, cfg) = key.split_once('/').unwrap();
+    FamesConfig { model: model.to_string(), cfg: cfg.to_string(), ..base.clone() }
+}
+
+/// Direct-call reference bytes per key (the bit-identity targets). Also
+/// warms the parameter cache so every shard loads identical parameters.
+fn direct_wants(base: &FamesConfig) -> Vec<String> {
+    KEYS.iter()
+        .map(|key| {
+            let rt = Arc::new(Runtime::native());
+            let s = pipeline::warm_session(rt, &cfg_for(base, key)).unwrap();
+            codec::eval_json(&s.evaluate(1).unwrap()).compact()
+        })
+        .collect()
+}
+
+fn eval_req(id: i64, key: &str) -> Json {
+    Json::obj().with("id", id).with("op", "evaluate").with("model", key).with("batches", 1usize)
+}
+
+/// A running router + shard fleet. `shard_models[i]` picks what shard `i`
+/// hosts: ring-assigned keys (real partition) or full replication.
+struct Fleet {
+    router_addr: String,
+    shard_addrs: Vec<String>,
+    shard_daemons: Vec<JoinHandle<anyhow::Result<()>>>,
+    router_daemon: JoinHandle<anyhow::Result<()>>,
+}
+
+fn spawn_fleet(base: &FamesConfig, nshards: usize, replicate_all: bool) -> Fleet {
+    // Pre-bind every shard port so the ring is known before any warm-up.
+    let listeners: Vec<TcpListener> =
+        (0..nshards).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let shard_addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let ring = Ring::new(shard_addrs.clone());
+
+    let mut shard_daemons = Vec::new();
+    for (i, listener) in listeners.into_iter().enumerate() {
+        let models: Vec<String> = if replicate_all {
+            KEYS.iter().map(|k| k.to_string()).collect()
+        } else {
+            let mine: Vec<String> =
+                KEYS.iter().filter(|k| ring.route(k) == i).map(|k| k.to_string()).collect();
+            if mine.is_empty() {
+                vec![KEYS[0].to_string()]
+            } else {
+                mine
+            }
+        };
+        let scfg = ServeConfig {
+            addr: shard_addrs[i].clone(),
+            models,
+            max_batch: 4,
+            base: base.clone(),
+            ..ServeConfig::default()
+        };
+        let server = Server::bind_on(&scfg, listener, None).unwrap();
+        shard_daemons.push(std::thread::spawn(move || server.run()));
+    }
+
+    let rcfg = RouterConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: shard_addrs.clone(),
+        ..RouterConfig::default()
+    };
+    let router = Router::bind(&rcfg).unwrap();
+    let router_addr = router.local_addr().to_string();
+    let router_daemon = std::thread::spawn(move || router.run());
+    Fleet { router_addr, shard_addrs, shard_daemons, router_daemon }
+}
+
+impl Fleet {
+    /// Stop the router first (it holds pooled shard connections), then
+    /// any shard daemon that is still up.
+    fn shutdown(self) {
+        let Fleet { router_addr, shard_addrs, shard_daemons, router_daemon } = self;
+        let mut cl = Client::connect(&router_addr).unwrap();
+        let ack = cl.shutdown(-1).unwrap();
+        assert!(ack.get("stopping").unwrap().as_bool().unwrap());
+        drop(cl);
+        router_daemon.join().unwrap().unwrap();
+        for (addr, daemon) in shard_addrs.iter().zip(shard_daemons) {
+            if let Ok(mut cl) = Client::connect(addr) {
+                let _ = cl.shutdown(-2);
+            }
+            daemon.join().unwrap().unwrap();
+        }
+    }
+}
+
+#[test]
+fn routed_fleet_matches_direct_session_at_jobs_1_4_auto() {
+    let root = setup_root("equiv");
+    let base = base_cfg(&root);
+    let wants = direct_wants(&base);
+
+    for jobs in [1usize, 4, 0] {
+        let fleet = spawn_fleet(&FamesConfig { jobs, ..base.clone() }, 2, false);
+
+        // Two concurrent clients, each pipelining both keys twice.
+        let handles: Vec<_> = (0..2i64)
+            .map(|c| {
+                let addr = fleet.router_addr.clone();
+                let wants = wants.clone();
+                std::thread::spawn(move || {
+                    let mut cl = Client::connect(&addr).unwrap();
+                    let mut reqs = Vec::new();
+                    for r in 0..4i64 {
+                        reqs.push(eval_req(c * 100 + r, KEYS[(r % 2) as usize]));
+                    }
+                    let resps = cl.call_many(&reqs).unwrap();
+                    for (r, resp) in resps.iter().enumerate() {
+                        assert_eq!(
+                            Client::expect_ok(resp).unwrap().compact(),
+                            wants[r % 2],
+                            "client {c} jobs={jobs}: routed {} diverged from direct Session",
+                            KEYS[r % 2]
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        // The router answers `status` itself and accounted every forward.
+        let mut cl = Client::connect(&fleet.router_addr).unwrap();
+        let status = cl.call(&Json::obj().with("id", 500).with("op", "status")).unwrap();
+        let st = Client::expect_ok(&status).unwrap();
+        assert_eq!(st.get("role").unwrap().as_str().unwrap(), "router");
+        let reqs = st.get("requests").unwrap();
+        assert!(reqs.get("forwarded").unwrap().as_usize().unwrap() >= 8);
+        assert_eq!(reqs.get("shed").unwrap().as_usize().unwrap(), 0);
+        drop(cl);
+
+        fleet.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn killing_a_shard_reroutes_to_replica_then_sheds_when_fleet_is_down() {
+    let root = setup_root("kill");
+    let base = base_cfg(&root);
+    let wants = direct_wants(&base);
+
+    // Full replication: every shard hosts every key, so failover has a
+    // live replica to land on.
+    let fleet = spawn_fleet(&base, 2, true);
+    let ring = Ring::new(fleet.shard_addrs.clone());
+
+    // Baseline through the router: both keys answer with reference bytes.
+    let mut cl = Client::connect(&fleet.router_addr).unwrap();
+    for (i, key) in KEYS.iter().enumerate() {
+        let resp = cl.call(&eval_req(i as i64, key)).unwrap();
+        assert_eq!(Client::expect_ok(&resp).unwrap().compact(), wants[i]);
+    }
+
+    // Kill KEYS[0]'s primary owner directly (the router never forwards
+    // shutdown — it acks and stops only itself).
+    let owner = ring.route(KEYS[0]);
+    let mut k = Client::connect(&fleet.shard_addrs[owner]).unwrap();
+    k.shutdown(-3).unwrap();
+    drop(k);
+
+    // Mid-load after the kill: every request is still answered — either
+    // re-routed to the replica (same bytes) or shed explicitly. No id is
+    // ever Lost and nothing hangs.
+    let reqs: Vec<Json> = (0..8i64).map(|r| eval_req(100 + r, KEYS[(r % 2) as usize])).collect();
+    let outcomes = cl.call_many_outcomes(&reqs);
+    assert_eq!(outcomes.len(), reqs.len());
+    let mut ok = 0usize;
+    for (r, out) in outcomes.iter().enumerate() {
+        match out {
+            Outcome::Ok(result) => {
+                assert_eq!(
+                    result.compact(),
+                    wants[r % 2],
+                    "re-routed {} diverged from direct Session",
+                    KEYS[r % 2]
+                );
+                ok += 1;
+            }
+            Outcome::Err { shed, error } => {
+                assert!(*shed, "request {r} failed without shed:true ({error})");
+            }
+            Outcome::Lost => panic!("request {r} was lost (no response at all)"),
+        }
+    }
+    // The surviving replica serves both keys, so at minimum the key it
+    // primarily owns keeps answering.
+    assert!(ok >= 4, "only {ok}/8 requests answered ok after losing one shard");
+    let status = cl.call(&Json::obj().with("id", 900).with("op", "status")).unwrap();
+    let st = Client::expect_ok(&status).unwrap();
+    assert!(
+        st.get("requests").unwrap().get("rerouted").unwrap().as_usize().unwrap() >= 1,
+        "router never recorded a failover"
+    );
+    drop(cl);
+
+    // Kill the survivor too: everything sheds explicitly, nothing hangs.
+    let survivor = 1 - owner;
+    let mut k = Client::connect(&fleet.shard_addrs[survivor]).unwrap();
+    k.shutdown(-4).unwrap();
+    drop(k);
+    let mut cl = Client::connect(&fleet.router_addr).unwrap();
+    let reqs: Vec<Json> = (0..4i64).map(|r| eval_req(200 + r, KEYS[(r % 2) as usize])).collect();
+    let outcomes = cl.call_many_outcomes(&reqs);
+    assert_eq!(outcomes.len(), reqs.len());
+    for (r, out) in outcomes.iter().enumerate() {
+        assert!(out.is_shed(), "request {r} not shed with the whole fleet down: {out:?}");
+    }
+    drop(cl);
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn replacement_shard_warms_via_handoff_and_stays_bit_identical() {
+    let root = setup_root("handoff");
+    let base = base_cfg(&root);
+    let wants = direct_wants(&base);
+
+    // Peer daemon: warmed the usual way, its store now holds calibrated
+    // params + characterized libraries for both keys.
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: KEYS.iter().map(|k| k.to_string()).collect(),
+        max_batch: 4,
+        base: base.clone(),
+        ..ServeConfig::default()
+    };
+    let peer = Server::bind(&scfg).unwrap();
+    let peer_addr = peer.local_addr().to_string();
+    let peer_daemon = std::thread::spawn(move || peer.run());
+
+    // Replacement shard: fresh root (no state files, empty store), with
+    // the peer configured as its remote tier. Warm-up must fetch instead
+    // of recomputing.
+    let root2 = std::env::temp_dir().join(format!("fames-fleet-{}-fresh", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root2);
+    std::fs::create_dir_all(&root2).unwrap();
+    for key in KEYS {
+        let (model, cfg) = key.split_once('/').unwrap();
+        write_synthetic_artifacts(&root2, &SyntheticSpec::small(model, cfg)).unwrap();
+    }
+    let base2 = FamesConfig {
+        artifact_root: root2.to_string_lossy().into_owned(),
+        remote_peers: vec![peer_addr.clone()],
+        ..base.clone()
+    };
+    let rcfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: KEYS.iter().map(|k| k.to_string()).collect(),
+        max_batch: 4,
+        base: base2,
+        ..ServeConfig::default()
+    };
+    let replacement = Server::bind(&rcfg).unwrap();
+
+    // Zero recompute: every stage came out of the (remote-backed) store.
+    for entry in replacement.registry().entries() {
+        assert_eq!(
+            entry.params_source,
+            ParamsSource::Store,
+            "{}: params were retrained instead of pulled from the peer",
+            entry.key
+        );
+        assert_eq!(
+            entry.lib_hit,
+            Some(true),
+            "{}: library was recharacterized instead of pulled from the peer",
+            entry.key
+        );
+    }
+
+    // And the handed-off shard answers bit-identically to the original.
+    let raddr = replacement.local_addr().to_string();
+    let daemon = std::thread::spawn(move || replacement.run());
+    let mut cl = Client::connect(&raddr).unwrap();
+    for (i, key) in KEYS.iter().enumerate() {
+        let resp = cl.call(&eval_req(300 + i as i64, key)).unwrap();
+        assert_eq!(
+            Client::expect_ok(&resp).unwrap().compact(),
+            wants[i],
+            "{key}: handed-off shard diverged from the original"
+        );
+    }
+    cl.shutdown(-5).unwrap();
+    drop(cl);
+    daemon.join().unwrap().unwrap();
+
+    let mut cl = Client::connect(&peer_addr).unwrap();
+    cl.shutdown(-6).unwrap();
+    drop(cl);
+    peer_daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&root2);
+}

@@ -230,6 +230,110 @@ fn store_rejects_old_schema_versions_and_corruption() {
     let _ = std::fs::remove_dir_all(store.root());
 }
 
+// ---- concurrency: same-entry races must never tear a reader ----
+
+#[test]
+fn concurrent_same_entry_puts_never_tear_concurrent_gets() {
+    use std::sync::Arc;
+
+    fn payload_of(tag: usize) -> Json {
+        Json::obj().with("tag", tag).with("blob", vec![tag; 512])
+    }
+
+    let store = Arc::new(tmp_store("race"));
+    let fp = Fingerprint(0xace);
+    // seed the entry so readers never observe a true miss — from here on,
+    // every get must return a fully-formed payload, never a torn write
+    store.put("race_kind", 1, fp, payload_of(0)).unwrap();
+    let writers: Vec<_> = (0..4usize)
+        .map(|w| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    store.put("race_kind", 1, fp, payload_of(w % 2)).unwrap();
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..4usize)
+        .map(|_| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                for _ in 0..400 {
+                    let payload = store
+                        .get("race_kind", 1, fp)
+                        .expect("entry must stay readable through same-entry races");
+                    let tag = payload.get("tag").unwrap().as_usize().unwrap();
+                    assert!(tag < 2, "unknown writer tag {tag}");
+                    let blob = payload.get("blob").unwrap().as_usize_vec().unwrap();
+                    assert_eq!(blob.len(), 512);
+                    assert!(
+                        blob.iter().all(|&b| b == tag),
+                        "payload mixes two writes (tag {tag})"
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in writers.into_iter().chain(readers) {
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+// ---- remote tier: corrupt peer responses are rejected, never cached ----
+
+#[test]
+fn remote_fetch_rejects_corrupt_envelope_and_falls_back_to_recompute() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    use fames::store::remote::RemoteTier;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fp = Fingerprint(0xbeef);
+    // a peer that always answers with a doctored envelope: right kind and
+    // version, wrong fingerprint — bytes that don't match their address
+    let server = std::thread::spawn(move || {
+        for _ in 0..2 {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("artifact_get"), "unexpected request: {line}");
+            let env = Json::obj()
+                .with("schema", "fames-store-v1")
+                .with("kind", "perturb_table")
+                .with("version", 1usize)
+                .with("fingerprint", Fingerprint(0xdead).hex())
+                .with("payload", Json::obj().with("evil", true));
+            let resp = Json::obj()
+                .with("id", 0i64)
+                .with("ok", true)
+                .with("result", Json::obj().with("envelope", env));
+            let mut w = stream;
+            w.write_all(resp.compact().as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+        }
+    });
+
+    let tier = RemoteTier::new(vec![addr.clone()]);
+    assert!(
+        tier.fetch("perturb_table", 1, fp).is_none(),
+        "an envelope whose fingerprint doesn't match the request must be rejected"
+    );
+    assert_eq!(tier.stats().errors.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // through the Store: local miss + corrupt remote = a plain miss (the
+    // caller recomputes), and nothing corrupt lands in the local cache
+    let store = tmp_store("remote-corrupt").with_remote(Some(RemoteTier::new(vec![addr])));
+    assert!(store.get("perturb_table", 1, fp).is_none());
+    assert!(store.entries().is_empty(), "corrupt remote bytes must never be cached");
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
 #[test]
 fn decoded_library_is_usable_by_the_selection_path() {
     // end-to-end sanity: a decoded library serves for_bits/find/exact and
