@@ -38,7 +38,7 @@
 //! noisy stage — or demanding padded baselines.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -962,10 +962,52 @@ pub struct FleetLevel {
     pub rps: f64,
 }
 
+/// Rolling-restart drill (`serve.fleet.rolling_restart`): traffic
+/// continuity while one of three `replication=2` shards is killed and
+/// restarted behind a fast-probing router, plus the probe-recovery time.
+#[derive(Clone, Debug)]
+pub struct RollingRestartBench {
+    /// Routed req/s with all three shards up.
+    pub steady_rps: f64,
+    /// Routed req/s over the window where the victim is down — replicas
+    /// answer its keys, the polite client retries in-flight sheds.
+    pub outage_rps: f64,
+    pub outage_requests: usize,
+    pub outage_ok: usize,
+    /// Requests that still ended as explicit sheds after retries.
+    pub outage_shed: usize,
+    /// Silently lost requests across the drill — the invariant; must be 0.
+    pub lost: usize,
+    /// Kill-to-`liveness:"up"`: the rebind (warming from peer replicas)
+    /// plus the prober noticing the shard answers again.
+    pub reentry_secs: f64,
+    /// The restarted shard warmed every model from peer replicas
+    /// (`params_source=Store`, `lib_hit`) instead of retraining.
+    pub warm_reentry: bool,
+}
+
+/// Hedging payoff (`serve.fleet.hedged_p99`): tail latency for a key whose
+/// owning shard is deliberately slowed by a seeded [`crate::serve::FaultPlan`],
+/// measured with hedging disabled and enabled.
+#[derive(Clone, Debug)]
+pub struct HedgedTailBench {
+    /// Injected delay on the slow owner (hits ~1/3 of its responses).
+    pub slow_delay_ms: u64,
+    pub unhedged_p50_ms: f64,
+    pub unhedged_p99_ms: f64,
+    pub hedged_p50_ms: f64,
+    pub hedged_p99_ms: f64,
+    /// Requests the router duplicated to the first warm successor...
+    pub hedged: usize,
+    /// ...and how many of those races the successor won.
+    pub hedge_wins: usize,
+}
+
 /// Cluster-mode snapshot (`fames bench`'s `serve.fleet` section):
 /// aggregate req/s through the consistent-hash router at 1/2/4 shards
 /// against a single-node baseline, per-request router overhead
-/// (routed-vs-direct p50/p99), and cold-vs-handoff shard spin-up.
+/// (routed-vs-direct p50/p99), cold-vs-handoff shard spin-up, and the
+/// liveness drills (rolling restart, hedged tail).
 #[derive(Clone, Debug)]
 pub struct FleetBench {
     /// Distinct `<model>/<cfg>` routing keys in play.
@@ -990,6 +1032,12 @@ pub struct FleetBench {
     pub handoff_params_from_store: bool,
     /// ...and hit on the peer's library artifact.
     pub handoff_library_hit: bool,
+    /// Kill-one-of-three continuity drill (`None` only in hand-built
+    /// fixtures; the real bench always runs it).
+    pub rolling_restart: Option<RollingRestartBench>,
+    /// Slow-owner tail drill; `None` when the ring happens to put every
+    /// key on one shard (no fleet median to hedge against).
+    pub hedged_p99: Option<HedgedTailBench>,
 }
 
 /// Measure cluster mode end to end: real shard daemons on loopback ports,
@@ -1237,6 +1285,290 @@ pub fn run_fleet_bench(cfg: &BenchConfig) -> Result<FleetBench> {
         .join()
         .map_err(|_| anyhow::anyhow!("fleet bench: peer panicked"))?
         .context("fleet bench: peer run")?;
+
+    // rolling-restart drill: three replicated shards behind a fast-probing
+    // router; kill one mid-traffic, restart it on the same port from a
+    // fresh root, and time the prober bringing it back warm.
+    let rolling_restart = {
+        let mut listeners = Vec::new();
+        let mut addrs: Vec<String> = Vec::new();
+        for _ in 0..3 {
+            let l = TcpListener::bind("127.0.0.1:0").context("restart drill: shard bind")?;
+            addrs.push(l.local_addr()?.to_string());
+            listeners.push(l);
+        }
+        let mut shard_handles = Vec::new();
+        for (i, l) in listeners.into_iter().enumerate() {
+            let peers: Vec<String> = addrs
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, a)| a.clone())
+                .collect();
+            let scfg = ServeConfig {
+                addr: addrs[i].clone(),
+                models: keys.clone(),
+                max_batch: 16,
+                base: FamesConfig { remote_peers: peers, replication: 2, ..base.clone() },
+                ..ServeConfig::default()
+            };
+            let server = Server::bind_on(&scfg, l, None).context("restart drill: shard warm")?;
+            shard_handles.push(Some(std::thread::spawn(move || server.run())));
+        }
+        let rcfg = RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: addrs.clone(),
+            down_cooldown_ms: 100,
+            probe_interval_ms: 100,
+            ..RouterConfig::default()
+        };
+        let router = crate::serve::Router::bind(&rcfg).context("restart drill: router bind")?;
+        let raddr = router.local_addr().to_string();
+        let router_handle = std::thread::spawn(move || router.run());
+
+        // the polite client: redial anything Lost once, retry sheds with
+        // capped backoff — what a production caller of the fleet runs
+        let drill_flood = |addr: &str| -> Result<(usize, usize, usize, f64)> {
+            let t = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let addr = addr.to_string();
+                    let keys = keys.clone();
+                    std::thread::spawn(move || -> (usize, usize, usize) {
+                        let Ok(mut cl) = Client::connect(&addr) else {
+                            return (0, 0, per_client);
+                        };
+                        let reqs: Vec<Json> = (0..per_client)
+                            .map(|r| {
+                                Json::obj()
+                                    .with("id", (c * 10_000 + r) as i64)
+                                    .with("op", "evaluate")
+                                    .with("model", keys[(c + r) % keys.len()].as_str())
+                                    .with("batches", 1usize)
+                            })
+                            .collect();
+                        let outs = cl.call_many_retry_shed(&reqs, Duration::from_millis(5));
+                        let ok = outs.iter().filter(|o| matches!(o, Outcome::Ok(_))).count();
+                        let shed = outs.iter().filter(|o| o.is_shed()).count();
+                        let lost = outs.iter().filter(|o| matches!(o, Outcome::Lost)).count();
+                        (ok, shed, lost)
+                    })
+                })
+                .collect();
+            let (mut ok, mut shed, mut lost) = (0usize, 0usize, 0usize);
+            for h in handles {
+                let (o, s, l) = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("restart drill: client thread panicked"))?;
+                ok += o;
+                shed += s;
+                lost += l;
+            }
+            Ok((ok, shed, lost, ok as f64 / t.elapsed().as_secs_f64().max(1e-9)))
+        };
+        let _ = drill_flood(&raddr)?; // warm the router pools
+        let (_, _, steady_lost, steady_rps) = drill_flood(&raddr)?;
+
+        // kill shard 0 and keep the load coming: the router fails its keys
+        // over to the replicas, the client retries whatever shed in flight
+        let victim = 0usize;
+        let mut cl = Client::connect(&addrs[victim])?;
+        cl.shutdown(-4)?;
+        drop(cl);
+        shard_handles[victim]
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| anyhow::anyhow!("restart drill: victim panicked"))?
+            .context("restart drill: victim run")?;
+        let (outage_ok, outage_shed, outage_lost, outage_rps) = drill_flood(&raddr)?;
+
+        // restart on the same port from a fresh root: every model must
+        // warm from the replicas its peers hold, never retrain
+        let rroot = std::env::temp_dir()
+            .join(format!("fames-bench-fleet-restart-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&rroot);
+        std::fs::create_dir_all(&rroot)?;
+        for key in &keys {
+            let (model, mcfg) = key.split_once('/').unwrap();
+            write_synthetic_artifacts(&rroot, &SyntheticSpec::small(model, mcfg))?;
+        }
+        let peers: Vec<String> = addrs
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| j != victim)
+            .map(|(_, a)| a.clone())
+            .collect();
+        let scfg = ServeConfig {
+            addr: addrs[victim].clone(),
+            models: keys.clone(),
+            max_batch: 16,
+            base: FamesConfig {
+                artifact_root: rroot.to_string_lossy().into_owned(),
+                remote_peers: peers,
+                replication: 2,
+                ..base.clone()
+            },
+            ..ServeConfig::default()
+        };
+        let t0 = Instant::now();
+        let server = Server::bind(&scfg).context("restart drill: rebind")?;
+        let warm_reentry = server.registry().entries().all(|e| {
+            e.params_source == pipeline::ParamsSource::Store && e.lib_hit == Some(true)
+        });
+        shard_handles[victim] = Some(std::thread::spawn(move || server.run()));
+        let reentry_secs = loop {
+            let mut cl = Client::connect(&raddr)?;
+            let resp = cl.call(&Json::obj().with("id", 998).with("op", "status"))?;
+            let live = Client::expect_ok(&resp)?
+                .get("shards")?
+                .as_arr()?
+                .get(victim)
+                .and_then(|s| s.opt("liveness"))
+                .and_then(|l| l.as_str().ok())
+                .unwrap_or("")
+                .to_string();
+            drop(cl);
+            if live == "up" {
+                break t0.elapsed().as_secs_f64();
+            }
+            ensure!(
+                t0.elapsed() < Duration::from_secs(60),
+                "restart drill: shard never re-entered (stuck at {live:?})"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        };
+
+        let mut cl = Client::connect(&raddr)?;
+        cl.shutdown(-5)?;
+        drop(cl);
+        router_handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("restart drill: router panicked"))?
+            .context("restart drill: router run")?;
+        for (a, h) in addrs.iter().zip(shard_handles) {
+            if let Some(h) = h {
+                let mut cl = Client::connect(a)?;
+                cl.shutdown(-5)?;
+                drop(cl);
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("restart drill: shard panicked"))?
+                    .with_context(|| format!("restart drill: shard {a} run"))?;
+            }
+        }
+        let _ = std::fs::remove_dir_all(&rroot);
+        Some(RollingRestartBench {
+            steady_rps,
+            outage_rps,
+            outage_requests: clients * per_client,
+            outage_ok,
+            outage_shed,
+            lost: steady_lost + outage_lost,
+            reentry_secs,
+            warm_reentry,
+        })
+    };
+
+    // hedging drill: two shards both host the probe key and a decoy the
+    // other shard owns (so the fleet median has data); the probe key's
+    // owner is slowed by a seeded fault plan, and the same tail is
+    // measured with hedging off and on.
+    let hedged_p99 = {
+        // must dominate one evaluate's compute on any hardware, or the
+        // owner's p99 never clears the hedge threshold over the median
+        const DELAY_MS: u64 = 2000;
+        let mut listeners = Vec::new();
+        let mut addrs: Vec<String> = Vec::new();
+        for _ in 0..2 {
+            let l = TcpListener::bind("127.0.0.1:0").context("hedge drill: shard bind")?;
+            addrs.push(l.local_addr()?.to_string());
+            listeners.push(l);
+        }
+        let ring = Ring::new(addrs.clone());
+        let slow = ring.route(&keys[0]);
+        let fast_key = keys.iter().find(|k| ring.route(k) != slow).cloned();
+        match fast_key {
+            // all eight keys landed on one shard — nothing to hedge toward
+            None => None,
+            Some(fast_key) => {
+                let plan = Arc::new(
+                    crate::serve::FaultPlan::parse(&format!(
+                        "seed=1;delay_every=3;delay_ms={DELAY_MS}"
+                    ))
+                    .expect("static fault spec"),
+                );
+                let models = vec![keys[0].clone(), fast_key.clone()];
+                let mut shard_handles = Vec::new();
+                for (i, l) in listeners.into_iter().enumerate() {
+                    let scfg = ServeConfig {
+                        addr: addrs[i].clone(),
+                        models: models.clone(),
+                        max_batch: 16,
+                        fault: (i == slow).then(|| plan.clone()),
+                        base: base.clone(),
+                        ..ServeConfig::default()
+                    };
+                    let server =
+                        Server::bind_on(&scfg, l, None).context("hedge drill: shard warm")?;
+                    shard_handles.push(std::thread::spawn(move || server.run()));
+                }
+                // one routed tail measurement at a given hedge threshold
+                // (0 disables); returns p50/p99 and the hedge counters
+                let tail = |threshold: f64| -> Result<(f64, f64, usize, usize)> {
+                    let rcfg = RouterConfig {
+                        addr: "127.0.0.1:0".to_string(),
+                        shards: addrs.clone(),
+                        hedge_threshold: threshold,
+                        ..RouterConfig::default()
+                    };
+                    let router =
+                        crate::serve::Router::bind(&rcfg).context("hedge drill: router bind")?;
+                    let raddr = router.local_addr().to_string();
+                    let handle = std::thread::spawn(move || router.run());
+                    // prime both pools' latency windows past the hedge
+                    // trigger's minimum sample count
+                    let _ = latency(&raddr, &fast_key, 10)?;
+                    let _ = latency(&raddr, &keys[0], 10)?;
+                    let (p50, p99) = latency(&raddr, &keys[0], lat_reps)?;
+                    let mut cl = Client::connect(&raddr)?;
+                    let resp = cl.call(&Json::obj().with("id", 997).with("op", "status"))?;
+                    let reqs = Client::expect_ok(&resp)?.get("requests")?.clone();
+                    cl.shutdown(-6)?;
+                    drop(cl);
+                    handle
+                        .join()
+                        .map_err(|_| anyhow::anyhow!("hedge drill: router panicked"))?
+                        .context("hedge drill: router run")?;
+                    Ok((
+                        p50,
+                        p99,
+                        reqs.get("hedged")?.as_usize()?,
+                        reqs.get("hedge_wins")?.as_usize()?,
+                    ))
+                };
+                let (unhedged_p50_ms, unhedged_p99_ms, _, _) = tail(0.0)?;
+                let (hedged_p50_ms, hedged_p99_ms, hedged, hedge_wins) = tail(1.5)?;
+                for (a, h) in addrs.iter().zip(shard_handles) {
+                    let mut cl = Client::connect(a)?;
+                    cl.shutdown(-6)?;
+                    drop(cl);
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("hedge drill: shard panicked"))?
+                        .with_context(|| format!("hedge drill: shard {a} run"))?;
+                }
+                Some(HedgedTailBench {
+                    slow_delay_ms: DELAY_MS,
+                    unhedged_p50_ms,
+                    unhedged_p99_ms,
+                    hedged_p50_ms,
+                    hedged_p99_ms,
+                    hedged,
+                    hedge_wins,
+                })
+            }
+        }
+    };
+
     let _ = std::fs::remove_dir_all(&root);
     Ok(FleetBench {
         keys: keys.len(),
@@ -1250,6 +1582,8 @@ pub fn run_fleet_bench(cfg: &BenchConfig) -> Result<FleetBench> {
         spinup_handoff_secs,
         handoff_params_from_store,
         handoff_library_hit,
+        rolling_restart,
+        hedged_p99,
     })
 }
 
@@ -1391,21 +1725,46 @@ pub fn snapshot_json_full(
                         .with("rps", l.rps),
                 );
             }
-            serve_doc.set(
-                "fleet",
-                Json::obj()
-                    .with("keys", f.keys)
-                    .with("single_rps", f.single_rps)
-                    .with("levels", farr)
-                    .with("router_p50_ms", f.router_p50_ms)
-                    .with("router_p99_ms", f.router_p99_ms)
-                    .with("direct_p50_ms", f.direct_p50_ms)
-                    .with("direct_p99_ms", f.direct_p99_ms)
-                    .with("spinup_cold_secs", f.spinup_cold_secs)
-                    .with("spinup_handoff_secs", f.spinup_handoff_secs)
-                    .with("handoff_params_from_store", f.handoff_params_from_store)
-                    .with("handoff_library_hit", f.handoff_library_hit),
-            );
+            let mut fleet_doc = Json::obj()
+                .with("keys", f.keys)
+                .with("single_rps", f.single_rps)
+                .with("levels", farr)
+                .with("router_p50_ms", f.router_p50_ms)
+                .with("router_p99_ms", f.router_p99_ms)
+                .with("direct_p50_ms", f.direct_p50_ms)
+                .with("direct_p99_ms", f.direct_p99_ms)
+                .with("spinup_cold_secs", f.spinup_cold_secs)
+                .with("spinup_handoff_secs", f.spinup_handoff_secs)
+                .with("handoff_params_from_store", f.handoff_params_from_store)
+                .with("handoff_library_hit", f.handoff_library_hit);
+            if let Some(r) = &f.rolling_restart {
+                fleet_doc.set(
+                    "rolling_restart",
+                    Json::obj()
+                        .with("steady_rps", r.steady_rps)
+                        .with("outage_rps", r.outage_rps)
+                        .with("outage_requests", r.outage_requests)
+                        .with("outage_ok", r.outage_ok)
+                        .with("outage_shed", r.outage_shed)
+                        .with("lost", r.lost)
+                        .with("reentry_secs", r.reentry_secs)
+                        .with("warm_reentry", r.warm_reentry),
+                );
+            }
+            if let Some(h) = &f.hedged_p99 {
+                fleet_doc.set(
+                    "hedged_p99",
+                    Json::obj()
+                        .with("slow_delay_ms", h.slow_delay_ms as usize)
+                        .with("unhedged_p50_ms", h.unhedged_p50_ms)
+                        .with("unhedged_p99_ms", h.unhedged_p99_ms)
+                        .with("hedged_p50_ms", h.hedged_p50_ms)
+                        .with("hedged_p99_ms", h.hedged_p99_ms)
+                        .with("hedged", h.hedged)
+                        .with("hedge_wins", h.hedge_wins),
+                );
+            }
+            serve_doc.set("fleet", fleet_doc);
         }
         let has_fleet = sb.fleet.is_some();
         doc.set("serve", serve_doc);
@@ -1414,7 +1773,9 @@ pub fn snapshot_json_full(
             add_protocol(
                 &mut doc,
                 "fleet",
-                "routed aggregate wall-clock at 1/2/4 shards vs single node".to_string(),
+                "routed aggregate wall-clock at 1/2/4 shards vs single node \
+                 + rolling-restart and hedged-tail drills"
+                    .to_string(),
             );
         }
     }
@@ -1807,6 +2168,19 @@ mod tests {
             fleet.get("spinup_handoff_secs").unwrap().as_f64().unwrap()
                 < fleet.get("spinup_cold_secs").unwrap().as_f64().unwrap()
         );
+        // ... and carries both liveness drills, fully shaped
+        let rr = fleet.get("rolling_restart").unwrap();
+        assert_eq!(rr.get("lost").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(rr.get("outage_ok").unwrap().as_usize().unwrap(), 120);
+        assert!(rr.get("warm_reentry").unwrap().as_bool().unwrap());
+        assert!(rr.get("reentry_secs").unwrap().as_f64().unwrap() > 0.0);
+        let hp = fleet.get("hedged_p99").unwrap();
+        assert_eq!(hp.get("slow_delay_ms").unwrap().as_usize().unwrap(), 2000);
+        assert!(
+            hp.get("hedged_p99_ms").unwrap().as_f64().unwrap()
+                < hp.get("unhedged_p99_ms").unwrap().as_f64().unwrap()
+        );
+        assert!(hp.get("hedge_wins").unwrap().as_usize().unwrap() > 0);
         assert!(j.get("protocol").unwrap().opt("fleet").is_some());
         // the plain snapshot has no serve section
         assert!(snapshot_json(&stages, &cfg).opt("serve").is_none());
@@ -1924,6 +2298,25 @@ mod tests {
             spinup_handoff_secs: 0.4,
             handoff_params_from_store: true,
             handoff_library_hit: true,
+            rolling_restart: Some(RollingRestartBench {
+                steady_rps: 220.0,
+                outage_rps: 160.0,
+                outage_requests: 128,
+                outage_ok: 120,
+                outage_shed: 8,
+                lost: 0,
+                reentry_secs: 0.9,
+                warm_reentry: true,
+            }),
+            hedged_p99: Some(HedgedTailBench {
+                slow_delay_ms: 2000,
+                unhedged_p50_ms: 5.0,
+                unhedged_p99_ms: 2010.0,
+                hedged_p50_ms: 5.0,
+                hedged_p99_ms: 9.0,
+                hedged: 40,
+                hedge_wins: 18,
+            }),
         }
     }
 

@@ -54,7 +54,7 @@ COMMANDS
                 one artifact kind; gc removes every entry)
   serve        long-running evaluation daemon: newline-delimited JSON over
                TCP (ops: evaluate | energy | select | artifact_get |
-               artifact_put | status | shutdown)
+               artifact_put | health | status | shutdown)
                plus an optional HTTP/1.1 gateway onto the same engine
                (addr=127.0.0.1:4271  http=127.0.0.1:8471
                 models=<model>/<cfg>[,...]  max_batch=16
@@ -67,9 +67,15 @@ COMMANDS
                router mode: route=host:port[,...] turns the process into
                a consistent-hash router over those shard daemons — one
                NDJSON + HTTP endpoint, requests forwarded by <model>/<cfg>
-               with per-shard connection pools (pool=16), failover to ring
-               successors when a shard dies, and end-to-end shed semantics
-               (connect_timeout_ms=500 io_timeout_ms=10000 tune probing)
+               with per-shard connection pools (pool=16), liveness-driven
+               membership (a prober dials each shard's health op; one
+               missed probe = suspect, two = down and ejected until
+               probes recover), failover to ring successors, request
+               hedging against the first warm successor when the owner's
+               p99 looks slow, and end-to-end shed semantics
+               (connect_timeout_ms=500 io_timeout_ms=10000
+                down_cooldown_ms=500 probe_interval_ms=500
+                hedge_threshold=3.0, <=0 disables hedging)
   experiment   table2 | table3 | table4 | fig2 | fig3 | fig4 | fig5ab |
                fig5c | all   (writes results/<id>.csv)
   help         this text
@@ -87,6 +93,10 @@ COMMON KEYS
                          read-through tier on local misses (warm handoff:
                          a fresh shard pulls calibrated artifacts and
                          trained parameters instead of recomputing)
+  replication=N          copies per completed stage artifact: one local
+                         plus N-1 pushed to its ring successors among
+                         peers= (default 1 = local-only; push-based
+                         warming keeps failover shards warm up front)
 
 ENVIRONMENT
   FAMES_BACKEND=native|pjrt   execution backend (default native; pjrt needs
@@ -97,6 +107,11 @@ ENVIRONMENT
                               kernel dispatch mode (default wide; exact and
                               wide are bit-identical, fast is opt-in and
                               verified against the exact twin in tests)
+  FAMES_FAULT=SPEC            opt-in deterministic fault injection on a
+                              serve daemon (chaos drills; never set in
+                              production). SPEC keys, ';'- or ','-joined:
+                              seed=N delay_ms=N delay_every=N drop_every=N
+                              truncate_every=N refuse_every=N kill_after=N
 ";
 
 /// Run the CLI. Returns a process exit code.
@@ -507,6 +522,27 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
                 ]);
             }
             ft.print();
+            if let Some(r) = &f.rolling_restart {
+                println!(
+                    "  rolling restart: {:.1} → {:.1} req/s during the outage \
+                     ({} ok / {} shed / {} lost of {}); re-entry {} ({})",
+                    r.steady_rps,
+                    r.outage_rps,
+                    r.outage_ok,
+                    r.outage_shed,
+                    r.lost,
+                    r.outage_requests,
+                    crate::util::fmt_secs(r.reentry_secs),
+                    if r.warm_reentry { "warm from replicas" } else { "RETRAINED" }
+                );
+            }
+            if let Some(h) = &f.hedged_p99 {
+                println!(
+                    "  hedged tail (+{}ms on the owner): p99 {:.1}ms → {:.1}ms \
+                     ({} hedged, {} wins)",
+                    h.slow_delay_ms, h.unhedged_p99_ms, h.hedged_p99_ms, h.hedged, h.hedge_wins
+                );
+            }
         }
     }
     Ok(0)
@@ -528,6 +564,9 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
     let mut pool_per_shard = router_defaults.pool_per_shard;
     let mut connect_timeout_ms = router_defaults.connect_timeout_ms;
     let mut io_timeout_ms = router_defaults.io_timeout_ms;
+    let mut down_cooldown_ms = router_defaults.down_cooldown_ms;
+    let mut probe_interval_ms = router_defaults.probe_interval_ms;
+    let mut hedge_threshold = router_defaults.hedge_threshold;
     let mut kv = Vec::new();
     for a in args {
         if a == "--http-log" || a == "http_log" {
@@ -552,6 +591,15 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
             }
             Some(("io_timeout_ms", v)) | Some(("io-timeout-ms", v)) => {
                 io_timeout_ms = v.parse().context("io_timeout_ms")?
+            }
+            Some(("down_cooldown_ms", v)) | Some(("down-cooldown-ms", v)) => {
+                down_cooldown_ms = v.parse().context("down_cooldown_ms")?
+            }
+            Some(("probe_interval_ms", v)) | Some(("probe-interval-ms", v)) => {
+                probe_interval_ms = v.parse().context("probe_interval_ms")?
+            }
+            Some(("hedge_threshold", v)) | Some(("hedge-threshold", v)) => {
+                hedge_threshold = v.parse().context("hedge_threshold")?
             }
             Some(("models", v)) => {
                 models = Some(v.split(',').map(|s| s.trim().to_string()).collect())
@@ -596,6 +644,9 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
             write_timeout_ms,
             connect_timeout_ms,
             io_timeout_ms,
+            down_cooldown_ms,
+            probe_interval_ms,
+            hedge_threshold,
         };
         println!("== fames serve router ({}) ==", crate::serve::PROTOCOL);
         let router = crate::serve::Router::bind(&rcfg)?;
@@ -608,9 +659,11 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
         }
         t.print();
         println!(
-            "routing on {} (pool {pool_per_shard}/shard, max_conns {max_conns}) — \
+            "routing on {} (pool {pool_per_shard}/shard, max_conns {max_conns}, \
+             probe every {} ms, hedge_threshold {hedge_threshold}) — \
              send {{\"id\":0,\"op\":\"shutdown\"}} to stop the router",
-            router.local_addr()
+            router.local_addr(),
+            probe_interval_ms.max(down_cooldown_ms)
         );
         if let Some(h) = router.http_local_addr() {
             println!("http gateway on {h} (POST /v1/evaluate|energy|select, GET /v1/status)");
@@ -622,6 +675,12 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
 
     let base = base_config(&kv)?;
     let models = models.unwrap_or_else(|| vec![format!("{}/{}", base.model, base.cfg)]);
+    // opt-in chaos: a fault plan in the environment arms the daemon's
+    // deterministic fault-injection layer (drills only)
+    let fault = crate::serve::FaultPlan::from_env()?.map(std::sync::Arc::new);
+    if let Some(f) = &fault {
+        println!("!! fault injection armed from ${}: {f:?}", crate::serve::fault::FAULT_ENV);
+    }
     let scfg = crate::serve::ServeConfig {
         addr,
         http_addr,
@@ -633,6 +692,7 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
         write_timeout_ms,
         access_log,
         base,
+        fault,
     };
     println!("== fames serve ({}) ==", crate::serve::PROTOCOL);
     let server = crate::serve::Server::bind(&scfg)?;

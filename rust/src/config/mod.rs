@@ -55,6 +55,13 @@ pub fn apply_kv(cfg: &mut FamesConfig, key: &str, value: &str) -> Result<()> {
                 .map(str::to_string)
                 .collect()
         }
+        "replication" => {
+            let r = vu()?;
+            if r == 0 {
+                bail!("replication must be >= 1 (1 = local-only, N = local + N-1 peer copies)");
+            }
+            cfg.replication = r;
+        }
         "calib_epochs" => cfg.calib.epochs = vu()?,
         "calib_samples" => cfg.calib.samples = vu()?,
         "calib_lr" => cfg.calib.lr = vf()? as f32,
@@ -173,6 +180,11 @@ mod tests {
         apply_args(&mut cfg2, &["peers=".to_string()]).unwrap();
         assert!(cfg2.remote_peers.is_empty());
         assert!(apply_kv(&mut cfg2, "no_cache", "maybe").is_err());
+        assert_eq!(cfg2.replication, 1, "default is local-only");
+        apply_args(&mut cfg2, &["replication=2".to_string()]).unwrap();
+        assert_eq!(cfg2.replication, 2);
+        assert!(apply_kv(&mut cfg2, "replication", "0").is_err(), "zero copies is nonsense");
+        assert!(apply_kv(&mut cfg2, "replication", "two").is_err());
         // resolution: override wins, else <artifact_root>/cache
         let mut cfg3 = FamesConfig { artifact_root: "arts".into(), ..FamesConfig::default() };
         assert!(cfg3.effective_cache_dir().ends_with("cache"));

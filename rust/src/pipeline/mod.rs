@@ -65,6 +65,12 @@ pub struct FamesConfig {
     /// remote read-through tier on local misses — the cluster-mode warm
     /// handoff substrate. CLI: `peers=a:1,b:2`; empty = local-only store.
     pub remote_peers: Vec<String>,
+    /// Copies each completed stage artifact should exist in across the
+    /// fleet: one local plus `replication - 1` pushed to the entry's ring
+    /// successors among `remote_peers` (push-based warming — replicas are
+    /// warm before a router ever fails over to them). CLI:
+    /// `replication=N`; 1 (the default) writes locally only.
+    pub replication: usize,
 }
 
 impl Default for FamesConfig {
@@ -85,6 +91,7 @@ impl Default for FamesConfig {
             cache_dir: None,
             no_cache: false,
             remote_peers: Vec::new(),
+            replication: 1,
         }
     }
 }
@@ -115,7 +122,11 @@ impl FamesConfig {
         } else {
             Some(crate::store::remote::RemoteTier::new(self.remote_peers.clone()))
         };
-        Some(Store::open(self.effective_cache_dir()).with_remote(remote))
+        Some(
+            Store::open(self.effective_cache_dir())
+                .with_remote(remote)
+                .with_replication(self.replication),
+        )
     }
 }
 

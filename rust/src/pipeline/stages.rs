@@ -120,7 +120,10 @@ impl StageGraph {
         }
         let v = compute()?;
         if let Some(store) = &self.store {
-            if let Err(e) = store.put(kind, version, fp, encode(&v)) {
+            // stage completion is the one write path that replicates: the
+            // entry's ring successors are pushed warm copies so failover
+            // targets answer from their own store, not a recompute
+            if let Err(e) = store.put_replicated(kind, version, fp, encode(&v)) {
                 // a read-only or full cache dir must not fail the pipeline
                 eprintln!("  cache: failed to persist {kind} entry {fp}: {e:#}");
             }

@@ -37,6 +37,12 @@ use std::sync::Arc;
 pub const OVERLOADED_CONNS: &str = "overloaded: connection limit reached, retry later";
 /// Shed message for a request refused by the bounded queue.
 pub const OVERLOADED_QUEUE: &str = "overloaded: request queue is full, retry later";
+/// Shed message for a request that arrived while the daemon drains for
+/// shutdown. Shed (not a hard error) because a retry against the fleet —
+/// or the same address after a rolling restart — is expected to succeed;
+/// the router additionally treats it as a failover signal and re-routes
+/// to a ring successor instead of relaying it.
+pub const DRAINING: &str = "server is shutting down";
 /// `Retry-After` hint (seconds) on HTTP 503 shed responses.
 pub const RETRY_AFTER_SECS: u64 = 1;
 

@@ -82,6 +82,7 @@ fn outcome_of(resp: &Json) -> Outcome {
 
 /// One connection to a serve daemon.
 pub struct Client {
+    addr: String,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
@@ -92,7 +93,15 @@ impl Client {
             .with_context(|| format!("connecting to fames serve at {addr}"))?;
         let _ = stream.set_nodelay(true);
         let writer = stream.try_clone().context("cloning client stream")?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client { addr: addr.to_string(), reader: BufReader::new(stream), writer })
+    }
+
+    /// Replace a dead connection with a fresh one to the same address —
+    /// the [`Outcome::Lost`] retry path (a router stays up across shard
+    /// restarts; only this client↔router socket needs redialing).
+    pub fn reconnect(&mut self) -> Result<()> {
+        *self = Client::connect(&self.addr)?;
+        Ok(())
     }
 
     /// Fire one request line without waiting (pipelining).
@@ -184,17 +193,34 @@ impl Client {
     /// (see [`shed_backoff`]), and the loop gives up after
     /// [`SHED_RETRY_BUDGET`] rounds, returning the surviving shed
     /// outcomes so the caller sees exactly what the server refused.
+    ///
+    /// [`Outcome::Lost`] is *not* terminal: once per call, lost requests
+    /// are retried too, on a fresh connection to the same address and
+    /// within the same capped-backoff budget — a fleet router that failed
+    /// over mid-wave (or a shard finishing a rolling restart) answers the
+    /// redial. Still lost after that one extra dial ⇒ returned as `Lost`.
     pub fn call_many_retry_shed(&mut self, reqs: &[Json], base: Duration) -> Vec<Outcome> {
         let mut outcomes = self.call_many_outcomes(reqs);
+        let mut lost_retry_used = false;
         for attempt in 0..SHED_RETRY_BUDGET {
+            let retry_lost = !lost_retry_used
+                && outcomes.iter().any(|o| matches!(o, Outcome::Lost));
             let retry_idx: Vec<usize> = outcomes
                 .iter()
                 .enumerate()
-                .filter(|(_, o)| o.is_shed())
+                .filter(|(_, o)| o.is_shed() || (retry_lost && matches!(o, Outcome::Lost)))
                 .map(|(i, _)| i)
                 .collect();
             if retry_idx.is_empty() {
                 break;
+            }
+            if retry_lost {
+                // the old socket is dead (or desynced); retrying Lost ids
+                // on it would only lose them again
+                lost_retry_used = true;
+                if self.reconnect().is_err() {
+                    break;
+                }
             }
             let shed_ids: Vec<i64> = retry_idx
                 .iter()
@@ -264,5 +290,60 @@ mod tests {
         assert!(c >= base && c < base + base / 2);
         // Zero base never panics (jitter modulus is clamped to ≥ 1).
         assert_eq!(shed_backoff(Duration::ZERO, 0, &[]), Duration::ZERO);
+    }
+
+    #[test]
+    fn lost_requests_are_retried_once_on_a_fresh_connection() {
+        use crate::serve::codec::request_id;
+        use std::net::TcpListener;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // conn 1: answer at most the first request, then slam shut —
+            // everything unanswered goes Lost on the client
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            if r.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                let resp =
+                    format!("{{\"id\":{},\"ok\":true,\"result\":{{\"n\":1}}}}\n", request_id(line.trim()));
+                let _ = s.write_all(resp.as_bytes());
+            }
+            drop(s);
+            // conn 2 (the Lost redial): answer everything until EOF
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            while r.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                let resp =
+                    format!("{{\"id\":{},\"ok\":true,\"result\":{{\"n\":2}}}}\n", request_id(line.trim()));
+                if s.write_all(resp.as_bytes()).is_err() {
+                    break;
+                }
+                line.clear();
+            }
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        let reqs = vec![
+            Json::obj().with("id", 1i64).with("op", "status"),
+            Json::obj().with("id", 2i64).with("op", "status"),
+        ];
+        let out = c.call_many_retry_shed(&reqs, Duration::from_millis(1));
+        // id 2 was lost when conn 1 died; the one-shot Lost retry redials
+        // and recovers it within the same call.
+        match &out[1] {
+            Outcome::Ok(j) => {
+                assert_eq!(j.get("n").unwrap().as_i64().unwrap(), 2, "answered by the redial")
+            }
+            other => panic!("lost request was not recovered: {other:?}"),
+        }
+        assert!(
+            !matches!(out[0], Outcome::Lost),
+            "id 1 must be answered on conn 1 or recovered by the redial: {:?}",
+            out[0]
+        );
+        server.join().unwrap();
     }
 }

@@ -54,6 +54,10 @@ pub enum Op {
     /// re-validates every header (schema/kind/version/fingerprint) before
     /// writing, so a corrupt peer cannot poison the store.
     ArtifactPut { kind: String, envelope: Json },
+    /// Cheap liveness probe, answered inline on the reader thread:
+    /// generation counter, warm-model set, queue depth, wave p99. The
+    /// router's membership prober lives on this op.
+    Health,
     /// Server health: loaded models, request counters, queue depth.
     Status,
     /// Stop accepting, drain the queue, exit the serve loop.
@@ -122,10 +126,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
             kind: j.get("kind")?.as_str().context("'kind' must be a string")?.to_string(),
             envelope: j.get("envelope")?.clone(),
         },
+        "health" => Op::Health,
         "status" => Op::Status,
         "shutdown" => Op::Shutdown,
         other => bail!(
-            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|status|shutdown)"
+            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|health|status|shutdown)"
         ),
     };
     Ok(Request { id, model, op })
@@ -235,6 +240,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
+        assert!(matches!(parse_request(r#"{"id":8,"op":"health"}"#).unwrap().op, Op::Health));
         assert!(matches!(parse_request(r#"{"id":4,"op":"status"}"#).unwrap().op, Op::Status));
         assert!(matches!(
             parse_request(r#"{"id":5,"op":"shutdown"}"#).unwrap().op,

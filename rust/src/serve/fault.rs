@@ -1,0 +1,218 @@
+//! Deterministic, seed-driven fault injection for the serve wire layer.
+//!
+//! A [`FaultPlan`] is a compact schedule of injected failures — response
+//! drops, delays and truncations, connection refusals, and a
+//! kill-after-N-requests switch — every decision hashed (FNV, no `rand`)
+//! from the plan seed and a monotone event counter. Two servers given the
+//! same spec replay the *exact same* failure schedule, which is what lets
+//! the chaos suite assert byte-level outcomes instead of probabilities.
+//!
+//! Production binaries never inject faults unless the operator opts in
+//! via the [`FAULT_ENV`] environment variable (`FAMES_FAULT=spec`); tests
+//! and benches attach a plan directly on [`crate::serve::ServeConfig`].
+//!
+//! Spec grammar: `;`- or `,`-separated `key=value` pairs, e.g.
+//! `seed=42;delay_ms=100;delay_every=1;kill_after=200`. Keys:
+//!
+//! | key             | meaning                                              |
+//! |-----------------|------------------------------------------------------|
+//! | `seed`          | schedule seed (default 0)                            |
+//! | `delay_every`   | delay ~1/N response lines by `delay_ms` (0 = never)  |
+//! | `delay_ms`      | injected response delay in ms (default 100)          |
+//! | `drop_every`    | silently drop ~1/N response lines (0 = never)        |
+//! | `truncate_every`| cut ~1/N response lines mid-byte + kill the conn     |
+//! | `refuse_every`  | close ~1/N accepted connections without a byte       |
+//! | `kill_after`    | begin shutdown after N decoded requests (0 = never)  |
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::hash::Fnv64;
+
+/// Environment variable a production daemon reads its fault spec from.
+pub const FAULT_ENV: &str = "FAMES_FAULT";
+
+/// What the writer should do with the next response line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseAction {
+    /// No fault scheduled for this line.
+    Deliver,
+    /// Sleep before delivering (tail-latency injection).
+    Delay(Duration),
+    /// Never send the line; the connection stays open (the peer times out).
+    Drop,
+    /// Send only a prefix of the line, no newline, then kill the connection.
+    Truncate,
+}
+
+/// A deterministic failure schedule (see module docs for the spec grammar).
+///
+/// The per-event counters live in the plan, so one plan drives one server:
+/// event `n`'s verdict is `FNV(seed, domain, n) % every == 0`, replayable
+/// run-to-run and independent of thread interleaving *given the same
+/// per-event ordinals*.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    delay_ms: u64,
+    delay_every: u64,
+    drop_every: u64,
+    truncate_every: u64,
+    refuse_every: u64,
+    kill_after: u64,
+    responses: AtomicU64,
+    conns: AtomicU64,
+    requests: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs). Unknown keys are rejected so
+    /// a typo can't silently disable the schedule.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { delay_ms: 100, ..FaultPlan::default() };
+        for part in spec.split([';', ',']).map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("fault spec `{part}`: expected key=value"))?;
+            let v: u64 = value
+                .trim()
+                .parse()
+                .with_context(|| format!("fault spec `{part}`: value is not an integer"))?;
+            match key.trim() {
+                "seed" => plan.seed = v,
+                "delay_ms" => plan.delay_ms = v,
+                "delay_every" => plan.delay_every = v,
+                "drop_every" => plan.drop_every = v,
+                "truncate_every" => plan.truncate_every = v,
+                "refuse_every" => plan.refuse_every = v,
+                "kill_after" => plan.kill_after = v,
+                other => bail!(
+                    "fault spec: unknown key `{other}` \
+                     (seed|delay_ms|delay_every|drop_every|truncate_every|refuse_every|kill_after)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The opt-in production path: `Some(plan)` iff [`FAULT_ENV`] is set.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULT_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => {
+                Ok(Some(Self::parse(&spec).with_context(|| format!("parsing ${FAULT_ENV}"))?))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Does event `n` of `domain` fire under a 1-in-`every` schedule?
+    fn fires(&self, domain: &str, n: u64, every: u64) -> bool {
+        match every {
+            0 => false,
+            1 => true,
+            _ => {
+                let mut h = Fnv64::new();
+                h.write_str("fames-fault");
+                h.write_u64(self.seed);
+                h.write_str(domain);
+                h.write_u64(n);
+                h.finish() % every == 0
+            }
+        }
+    }
+
+    /// Verdict for the next response line (drop > truncate > delay).
+    pub fn response_action(&self) -> ResponseAction {
+        let n = self.responses.fetch_add(1, Ordering::Relaxed);
+        if self.fires("drop", n, self.drop_every) {
+            ResponseAction::Drop
+        } else if self.fires("truncate", n, self.truncate_every) {
+            ResponseAction::Truncate
+        } else if self.fires("delay", n, self.delay_every) {
+            ResponseAction::Delay(Duration::from_millis(self.delay_ms))
+        } else {
+            ResponseAction::Deliver
+        }
+    }
+
+    /// Should the next accepted connection be closed without a byte?
+    pub fn refuse_conn(&self) -> bool {
+        let n = self.conns.fetch_add(1, Ordering::Relaxed);
+        self.fires("refuse", n, self.refuse_every)
+    }
+
+    /// Count one decoded request; `true` exactly once, on request number
+    /// `kill_after` — the caller begins a clean shutdown.
+    pub fn note_request(&self) -> bool {
+        if self.kill_after == 0 {
+            return false;
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed) + 1 == self.kill_after
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec_and_rejects_typos() {
+        let p = FaultPlan::parse(
+            "seed=42; delay_ms=100, delay_every=3;drop_every=5;truncate_every=7;\
+             refuse_every=9;kill_after=200",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.delay_ms, 100);
+        assert_eq!(p.delay_every, 3);
+        assert_eq!(p.kill_after, 200);
+        assert!(FaultPlan::parse("dropevery=5").is_err(), "unknown key must be rejected");
+        assert!(FaultPlan::parse("drop_every=x").is_err(), "non-integer must be rejected");
+        assert!(FaultPlan::parse("drop_every").is_err(), "bare key must be rejected");
+        // Empty spec is a valid no-op plan.
+        let noop = FaultPlan::parse("").unwrap();
+        assert_eq!(noop.response_action(), ResponseAction::Deliver);
+        assert!(!noop.refuse_conn());
+        assert!(!noop.note_request());
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let spec = "seed=7;delay_every=3;drop_every=5;truncate_every=11;refuse_every=4";
+        let a = FaultPlan::parse(spec).unwrap();
+        let b = FaultPlan::parse(spec).unwrap();
+        let run = |p: &FaultPlan| -> (Vec<ResponseAction>, Vec<bool>) {
+            ((0..200).map(|_| p.response_action()).collect(), (0..50).map(|_| p.refuse_conn()).collect())
+        };
+        assert_eq!(run(&a), run(&b), "same spec must replay the same schedule");
+        // A different seed produces a different schedule (with these odds,
+        // 200 events colliding would mean the hash is ignoring the seed).
+        let c = FaultPlan::parse("seed=8;delay_every=3;drop_every=5;truncate_every=11").unwrap();
+        assert_ne!(run(&a).0, run(&c).0);
+        // The schedule actually fires: roughly 1/3 + 1/5 + 1/11 of events.
+        let fired = run(&FaultPlan::parse(spec).unwrap())
+            .0
+            .iter()
+            .filter(|a| **a != ResponseAction::Deliver)
+            .count();
+        assert!(fired > 20, "schedule fired only {fired}/200 events");
+    }
+
+    #[test]
+    fn kill_after_fires_exactly_once_at_n() {
+        let p = FaultPlan::parse("kill_after=5").unwrap();
+        let verdicts: Vec<bool> = (0..10).map(|_| p.note_request()).collect();
+        assert_eq!(verdicts, vec![false, false, false, false, true, false, false, false, false, false]);
+    }
+
+    #[test]
+    fn every_one_fires_always() {
+        let p = FaultPlan::parse("refuse_every=1").unwrap();
+        assert!((0..10).all(|_| p.refuse_conn()));
+        let p = FaultPlan::parse("delay_every=1;delay_ms=17").unwrap();
+        assert!((0..10)
+            .all(|_| p.response_action() == ResponseAction::Delay(Duration::from_millis(17))));
+    }
+}

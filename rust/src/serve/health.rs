@@ -1,0 +1,330 @@
+//! Liveness: shard health snapshots and the router's membership view.
+//!
+//! Each shard answers a cheap `health` op inline on its reader thread —
+//! a generation counter (changes across restarts), the warm-model set,
+//! the batcher queue depth, and the p99 of recent dispatch waves. The
+//! router probes every shard on a jittered interval and folds the
+//! answers into a [`Membership`]: `Up` shards route normally, a shard
+//! that misses one probe turns [`Liveness::Suspect`] (still routed, its
+//! first successor is probed out of band so the failover target's view
+//! is fresh), and a second consecutive miss turns it [`Liveness::Down`]
+//! — ejected from routing until probes recover. This replaces the
+//! failure-triggered down-cooldown guesswork with an always-on signal:
+//! a dead shard is discovered by the prober, not by the first request
+//! unlucky enough to hit it.
+//!
+//! Routing consults an immutable [`View`] snapshot, so the order a key
+//! sees is a pure function of the view generation — the property the
+//! churn tests pin.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::json::Json;
+use crate::util::hash::Fnv64;
+
+/// Consecutive missed probes after which a shard is ejected (`Down`).
+pub const MISSES_TO_DOWN: u32 = 2;
+
+// ---- shard side ----
+
+/// Bounded window of recent dispatch-wave latencies — the daemon's p99
+/// source for `health` responses. Lock-guarded; the dispatcher records
+/// one sample per wave, so contention is nil.
+#[derive(Debug)]
+pub struct WaveWindow {
+    cap: usize,
+    lats: Mutex<VecDeque<f64>>,
+}
+
+impl WaveWindow {
+    pub fn new(cap: usize) -> WaveWindow {
+        WaveWindow { cap: cap.max(1), lats: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Record one wave's wall-clock in milliseconds.
+    pub fn record(&self, ms: f64) {
+        let mut lats = self.lats.lock().unwrap();
+        if lats.len() == self.cap {
+            lats.pop_front();
+        }
+        lats.push_back(ms);
+    }
+
+    /// Samples currently held (0..=cap).
+    pub fn len(&self) -> usize {
+        self.lats.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// p99 of the window, 0.0 while empty (a fresh shard is not slow).
+    pub fn p99_ms(&self) -> f64 {
+        let lats = self.lats.lock().unwrap();
+        if lats.is_empty() {
+            return 0.0;
+        }
+        let mut sorted: Vec<f64> = lats.iter().copied().collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        sorted[((sorted.len() - 1) as f64 * 0.99).round() as usize]
+    }
+}
+
+/// The `health` op's result payload.
+pub fn health_json(generation: u64, warm: &[String], queue_depth: usize, p99_ms: f64) -> Json {
+    let mut models = Json::arr();
+    for key in warm {
+        models.push(key.as_str());
+    }
+    Json::obj()
+        .with("generation", generation as f64)
+        .with("p99_ms", p99_ms)
+        .with("queue_depth", queue_depth)
+        .with("warm", models)
+}
+
+// ---- router side ----
+
+/// Per-shard liveness as the prober sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Liveness {
+    /// Answering probes; routed normally.
+    Up,
+    /// Missed one probe; still routed, first successor pre-warned.
+    Suspect,
+    /// Missed [`MISSES_TO_DOWN`] consecutive probes; ejected from routing
+    /// until a probe succeeds again.
+    Down,
+}
+
+impl Liveness {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Liveness::Up => "up",
+            Liveness::Suspect => "suspect",
+            Liveness::Down => "down",
+        }
+    }
+}
+
+/// What a successful probe reported (a decoded `health` result).
+#[derive(Clone, Debug, Default)]
+pub struct ProbeReport {
+    /// The shard's generation counter — a change means it restarted.
+    pub generation: u64,
+    /// Batcher queue depth at probe time.
+    pub queue_depth: usize,
+    /// p99 of the shard's recent dispatch waves, milliseconds.
+    pub p99_ms: f64,
+    /// Warm `<model>/<cfg>` keys.
+    pub warm: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+struct MemberState {
+    liveness: Liveness,
+    missed: u32,
+    report: ProbeReport,
+}
+
+/// An immutable membership snapshot. Routing over a `View` is a pure
+/// function: the same `(generation, key)` always yields the same order,
+/// and no `Down` shard ever appears in it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct View {
+    states: Vec<Liveness>,
+    generation: u64,
+}
+
+impl View {
+    /// Build a view directly from liveness states (tests and the prober).
+    pub fn from_states(states: Vec<Liveness>, generation: u64) -> View {
+        View { states, generation }
+    }
+
+    /// The view generation: bumped on every liveness transition.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn liveness(&self, shard: usize) -> Liveness {
+        self.states.get(shard).copied().unwrap_or(Liveness::Up)
+    }
+
+    /// Eject `Down` shards from a ring successor order, preserving it
+    /// otherwise. An empty result means the whole fleet is down — the
+    /// caller sheds explicitly rather than dialing known-dead shards.
+    pub fn filter_order(&self, order: &[usize]) -> Vec<usize> {
+        order.iter().copied().filter(|&s| self.liveness(s) != Liveness::Down).collect()
+    }
+}
+
+/// The router's mutable membership: per-shard liveness driven by probe
+/// results, plus a view generation that bumps on every transition.
+#[derive(Debug)]
+pub struct Membership {
+    members: Mutex<Vec<MemberState>>,
+    generation: AtomicU64,
+}
+
+impl Membership {
+    /// All shards start `Up`: the fleet is assumed alive until a probe
+    /// says otherwise, so requests flow before the first probe lands.
+    pub fn new(n: usize) -> Membership {
+        let member =
+            MemberState { liveness: Liveness::Up, missed: 0, report: ProbeReport::default() };
+        Membership { members: Mutex::new(vec![member; n]), generation: AtomicU64::new(0) }
+    }
+
+    /// Record a successful probe. Returns `true` when the shard
+    /// *transitioned* back to `Up` (i.e. it was Suspect/Down — the
+    /// recovery the rolling-restart path waits for).
+    pub fn probe_ok(&self, shard: usize, report: ProbeReport) -> bool {
+        let mut members = self.members.lock().unwrap();
+        let Some(m) = members.get_mut(shard) else { return false };
+        let recovered = m.liveness != Liveness::Up;
+        m.missed = 0;
+        m.report = report;
+        m.liveness = Liveness::Up;
+        if recovered {
+            self.generation.fetch_add(1, Ordering::Relaxed);
+        }
+        recovered
+    }
+
+    /// Record a missed probe and return the shard's new liveness
+    /// (`Suspect` on the first consecutive miss, `Down` from the
+    /// [`MISSES_TO_DOWN`]th on).
+    pub fn probe_missed(&self, shard: usize) -> Liveness {
+        let mut members = self.members.lock().unwrap();
+        let Some(m) = members.get_mut(shard) else { return Liveness::Down };
+        m.missed = m.missed.saturating_add(1);
+        let next = if m.missed >= MISSES_TO_DOWN { Liveness::Down } else { Liveness::Suspect };
+        if m.liveness != next {
+            m.liveness = next;
+            self.generation.fetch_add(1, Ordering::Relaxed);
+        }
+        next
+    }
+
+    pub fn liveness(&self, shard: usize) -> Liveness {
+        self.members.lock().unwrap().get(shard).map_or(Liveness::Up, |m| m.liveness)
+    }
+
+    /// Immutable snapshot for routing decisions.
+    pub fn view(&self) -> View {
+        let members = self.members.lock().unwrap();
+        View {
+            states: members.iter().map(|m| m.liveness).collect(),
+            generation: self.generation.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Last probe report (router status / diagnostics).
+    pub fn report(&self, shard: usize) -> Option<ProbeReport> {
+        self.members.lock().unwrap().get(shard).map(|m| m.report.clone())
+    }
+}
+
+/// Deterministic probe jitter in `[0, period/4)`, hashed from the shard
+/// index and the probe tick — same idiom as the client's shed backoff:
+/// spreads a fleet of probers without `rand`, replayable run-to-run.
+pub fn probe_jitter(period: Duration, shard: usize, tick: u64) -> Duration {
+    let mut h = Fnv64::new();
+    h.write_str("fames-probe-jitter");
+    h.write_u64(shard as u64);
+    h.write_u64(tick);
+    let quarter = (period.as_nanos() as u64 / 4).max(1);
+    Duration::from_nanos(h.finish() % quarter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transitions_follow_the_state_machine() {
+        let m = Membership::new(2);
+        assert_eq!(m.liveness(0), Liveness::Up);
+        let g0 = m.view().generation();
+
+        // One miss: Suspect (still routed), generation bumps once.
+        assert_eq!(m.probe_missed(0), Liveness::Suspect);
+        assert_eq!(m.liveness(0), Liveness::Suspect);
+        let g1 = m.view().generation();
+        assert_eq!(g1, g0 + 1);
+
+        // Second consecutive miss: Down. Further misses don't bump.
+        assert_eq!(m.probe_missed(0), Liveness::Down);
+        let g2 = m.view().generation();
+        assert_eq!(g2, g1 + 1);
+        assert_eq!(m.probe_missed(0), Liveness::Down);
+        assert_eq!(m.view().generation(), g2, "repeat misses are not transitions");
+
+        // Probe recovery: back to Up, one more bump, recovery reported.
+        assert!(m.probe_ok(0, ProbeReport::default()));
+        assert_eq!(m.liveness(0), Liveness::Up);
+        assert_eq!(m.view().generation(), g2 + 1);
+        // A steady-state OK is not a transition.
+        assert!(!m.probe_ok(0, ProbeReport::default()));
+        assert_eq!(m.view().generation(), g2 + 1);
+        // Shard 1 was never touched.
+        assert_eq!(m.liveness(1), Liveness::Up);
+    }
+
+    #[test]
+    fn filter_order_ejects_down_and_preserves_order() {
+        let view = View::from_states(
+            vec![Liveness::Up, Liveness::Down, Liveness::Suspect, Liveness::Down],
+            9,
+        );
+        assert_eq!(view.filter_order(&[2, 1, 0, 3]), vec![2, 0]);
+        assert_eq!(view.filter_order(&[1, 3]), Vec::<usize>::new());
+        assert_eq!(view.generation(), 9);
+    }
+
+    #[test]
+    fn wave_window_p99_is_bounded_and_sorted() {
+        let w = WaveWindow::new(4);
+        assert_eq!(w.p99_ms(), 0.0);
+        for ms in [5.0, 1.0, 9.0, 3.0] {
+            w.record(ms);
+        }
+        assert_eq!(w.p99_ms(), 9.0);
+        // Capacity: the oldest sample (5.0) falls out, max is now 9.0 → 9.0
+        // still; push two more so 9.0 leaves too.
+        w.record(2.0);
+        w.record(2.0);
+        assert_eq!(w.p99_ms(), 9.0);
+        w.record(2.0);
+        assert_eq!(w.p99_ms(), 3.0);
+    }
+
+    #[test]
+    fn probe_jitter_is_deterministic_and_bounded() {
+        let period = Duration::from_millis(200);
+        let a = probe_jitter(period, 1, 7);
+        assert_eq!(a, probe_jitter(period, 1, 7));
+        for shard in 0..8 {
+            for tick in 0..32 {
+                assert!(probe_jitter(period, shard, tick) < period / 4);
+            }
+        }
+        // Zero period never panics.
+        assert_eq!(probe_jitter(Duration::ZERO, 0, 0), Duration::ZERO);
+    }
+
+    #[test]
+    fn health_json_shape() {
+        let j = health_json(3, &["resnet8/w4a4".to_string()], 2, 1.5);
+        assert_eq!(j.get("generation").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("p99_ms").unwrap().as_f64().unwrap(), 1.5);
+        let warm = j.get("warm").unwrap().as_str_vec().unwrap();
+        assert_eq!(warm, vec!["resnet8/w4a4".to_string()]);
+    }
+}

@@ -55,6 +55,8 @@ pub mod admission;
 pub mod batcher;
 pub mod client;
 pub mod codec;
+pub mod fault;
+pub mod health;
 pub mod http;
 pub mod registry;
 pub mod ring;
@@ -63,6 +65,8 @@ pub mod wire;
 
 pub use client::{Client, Outcome};
 pub use codec::{Op, Request, PROTOCOL};
+pub use fault::FaultPlan;
+pub use health::{Liveness, Membership};
 pub use registry::{ModelEntry, Registry};
 pub use ring::Ring;
 pub use router::{Router, RouterConfig};
@@ -121,6 +125,9 @@ pub struct ServeConfig {
     pub write_timeout_ms: u64,
     /// Structured per-request access log (HTTP gateway) on stderr.
     pub access_log: bool,
+    /// Deterministic fault-injection schedule (chaos tests/benches attach
+    /// one directly; the CLI reads `FAMES_FAULT`). `None` = no injection.
+    pub fault: Option<Arc<fault::FaultPlan>>,
     /// Artifact root, seed, jobs, training and cache knobs shared by every
     /// model entry.
     pub base: FamesConfig,
@@ -139,6 +146,7 @@ impl Default for ServeConfig {
             max_line: 1 << 20,
             write_timeout_ms: 10_000,
             access_log: false,
+            fault: None,
             base,
         }
     }
@@ -172,7 +180,7 @@ impl Stats {
             Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
                 self.artifact.fetch_add(1, Ordering::Relaxed)
             }
-            Op::Status | Op::Shutdown => 0,
+            Op::Health | Op::Status | Op::Shutdown => 0,
         };
     }
 
@@ -276,6 +284,14 @@ struct Shared {
     access_log: bool,
     /// Monotonic connection ids — the batcher's fairness keys.
     clients: AtomicU64,
+    /// Process generation reported by `health` — changes across restarts,
+    /// so the router's prober can tell "recovered" from "replaced".
+    generation: u64,
+    /// Recent dispatch-wave latencies — the `health` p99 source.
+    waves: health::WaveWindow,
+    /// Injected failure schedule (tests/chaos only; `None` in production
+    /// unless the operator set `FAMES_FAULT`).
+    fault: Option<Arc<fault::FaultPlan>>,
 }
 
 impl Shared {
@@ -309,6 +325,7 @@ impl Shared {
         Json::obj()
             .with("protocol", PROTOCOL)
             .with("backend", self.rt.platform())
+            .with("generation", self.generation as f64)
             .with("models", models)
             .with("uptime_secs", self.started.elapsed().as_secs_f64())
             .with("pending", self.batcher.pending())
@@ -416,6 +433,12 @@ impl Server {
                 write_timeout_ms: cfg.write_timeout_ms.max(1),
                 access_log: cfg.access_log,
                 clients: AtomicU64::new(0),
+                generation: std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_millis() as u64)
+                    .unwrap_or(0),
+                waves: health::WaveWindow::new(256),
+                fault: cfg.fault.clone(),
             }),
         })
     }
@@ -459,6 +482,14 @@ impl Server {
                 break;
             }
             let Ok(stream) = stream else { continue };
+            // injected refuse-accept: close without a byte, so the peer
+            // sees connect-then-EOF (the crashed-shard signature)
+            if let Some(f) = &shared.fault {
+                if f.refuse_conn() {
+                    drop(stream);
+                    continue;
+                }
+            }
             // reap finished connections so a long-lived daemon does not
             // accumulate one JoinHandle per connection ever accepted
             conns.retain(|(h, _)| !h.is_finished());
@@ -516,6 +547,7 @@ fn refuse_connection(stream: TcpStream) {
 /// invocations" half of the serving layer.
 fn dispatch_loop(shared: &Shared) {
     while let Some(wave) = shared.batcher.next_wave() {
+        let t0 = Instant::now();
         let mut requests = Vec::with_capacity(wave.len());
         let mut sinks = Vec::with_capacity(wave.len());
         for job in wave {
@@ -531,6 +563,8 @@ fn dispatch_loop(shared: &Shared) {
             }
             sink.deliver(req.id, out, &shared.stats);
         }
+        // wave latency feeds the `health` p99 the router probes on
+        shared.waves.record(t0.elapsed().as_secs_f64() * 1e3);
     }
 }
 
@@ -604,7 +638,7 @@ fn handle_compute(shared: &Shared, req: &Request) -> Result<ComputeOut> {
                 .collect();
             Ok(ComputeOut::Other(codec::solution_json(&sol, &picked)))
         }
-        Op::Status | Op::Shutdown | Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
+        Op::Health | Op::Status | Op::Shutdown | Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
             unreachable!("inline ops never reach the batcher")
         }
     }
@@ -652,9 +686,28 @@ fn serve_connection(
     let _ = write_half.set_write_timeout(Some(Duration::from_millis(shared.write_timeout_ms)));
     let (tx, rx) = mpsc::sync_channel::<String>(REPLY_BUFFER);
     let writer_conn = conn.clone();
+    let writer_fault = shared.fault.clone();
     let writer = std::thread::spawn(move || {
         let mut w = BufWriter::new(write_half);
         for line in rx {
+            // injected wire faults on the response path: the schedule is
+            // deterministic per plan, so the chaos suite replays exactly
+            if let Some(f) = &writer_fault {
+                match f.response_action() {
+                    fault::ResponseAction::Deliver => {}
+                    fault::ResponseAction::Delay(d) => std::thread::sleep(d),
+                    fault::ResponseAction::Drop => continue,
+                    fault::ResponseAction::Truncate => {
+                        let _ = w
+                            .write_all(&line.as_bytes()[..line.len() / 2])
+                            .and_then(|_| w.flush());
+                        if let Some(c) = &writer_conn {
+                            c.evict();
+                        }
+                        break;
+                    }
+                }
+            }
             if w.write_all(line.as_bytes())
                 .and_then(|_| w.write_all(b"\n"))
                 .and_then(|_| w.flush())
@@ -706,7 +759,26 @@ fn serve_connection(
                     break;
                 }
             }
-            Ok(req) => match req.op {
+            Ok(req) => {
+                if let Some(f) = &shared.fault {
+                    if f.note_request() {
+                        // kill-after-N fired: drain and exit, exactly like
+                        // an operator-initiated shutdown
+                        shared.begin_shutdown();
+                    }
+                }
+                match req.op {
+                Op::Health => {
+                    let body = health::health_json(
+                        shared.generation,
+                        &shared.registry.keys(),
+                        shared.batcher.pending(),
+                        shared.waves.p99_ms(),
+                    );
+                    if tx.send(wire::ok_line(req.id, &body)).is_err() {
+                        break;
+                    }
+                }
                 Op::Status => {
                     let line = wire::ok_line(req.id, &shared.status_json());
                     if tx.send(line).is_err() {
@@ -752,14 +824,18 @@ fn serve_connection(
                             }
                         }
                         batcher::Enqueue::Closed => {
-                            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                            if tx.send(wire::err_line(id, "server is shutting down")).is_err() {
+                            // shed, not a hard error: a retry against the
+                            // fleet (or this address post-restart) succeeds,
+                            // and the router fails over on this message
+                            shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                            if tx.send(wire::shed_line(id, admission::DRAINING)).is_err() {
                                 break;
                             }
                         }
                     }
                 }
-            },
+            }
+            }
         }
     }
     drop(tx);

@@ -198,4 +198,59 @@ mod tests {
         assert!(r.is_empty());
         assert!(r.successors("k").is_empty());
     }
+
+    /// Property test: routing under membership churn. For every subset of
+    /// live members (all 2^n liveness assignments of a 5-shard ring,
+    /// i.e. every reachable [`View`]) and a sweep of keys:
+    ///
+    /// * the filtered order never contains a `Down` shard;
+    /// * the filtered order is exactly the ring successor order with the
+    ///   `Down` shards deleted (churn never *reorders* the failover walk);
+    /// * routing is a pure function of `(view, key)` — recomputing with an
+    ///   equal view yields an identical order, and a view generation bump
+    ///   with identical states changes nothing but the generation.
+    #[test]
+    fn filtered_routing_is_pure_and_never_hits_down_members() {
+        use crate::serve::health::{Liveness, View};
+
+        let n = 5;
+        let ring = Ring::new(addrs(n));
+        for mask in 0u32..(1 << n) {
+            let states: Vec<Liveness> = (0..n)
+                .map(|i| {
+                    if mask & (1 << i) != 0 {
+                        Liveness::Up
+                    } else {
+                        Liveness::Down
+                    }
+                })
+                .collect();
+            let view = View::from_states(states.clone(), mask as u64);
+            for k in 0..40 {
+                let key = format!("model{k}/w{}a{}", k % 9, k % 5);
+                let full = ring.successors(&key);
+                let live = view.filter_order(&full);
+
+                // No Down member is ever routed to.
+                for &s in &live {
+                    assert_ne!(view.liveness(s), Liveness::Down, "mask {mask:b} key {key}");
+                }
+                // Exactly the live members, in unchanged ring order.
+                let expect: Vec<usize> = full
+                    .iter()
+                    .copied()
+                    .filter(|&s| mask & (1 << s) != 0)
+                    .collect();
+                assert_eq!(live, expect, "mask {mask:b} key {key}");
+                assert_eq!(live.len() as u32, mask.count_ones());
+
+                // Purity: same view ⇒ same order; a generation bump with
+                // the same states changes nothing about routing.
+                let again = View::from_states(states.clone(), mask as u64);
+                assert_eq!(again.filter_order(&full), live);
+                let bumped = View::from_states(states.clone(), mask as u64 + 1000);
+                assert_eq!(bumped.filter_order(&full), live);
+            }
+        }
+    }
 }

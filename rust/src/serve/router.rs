@@ -29,14 +29,36 @@
 //! * when every shard is unreachable the router sheds explicitly rather
 //!   than hanging.
 //!
+//! # Liveness-driven membership
+//!
+//! A prober thread dials every shard's `health` op on a jittered interval
+//! and folds the answers into a [`Membership`] view (`Up` → `Suspect` on
+//! one miss → `Down` on the second). Routing filters the ring successor
+//! order through the current view, so requests stop dialing a dead shard
+//! as soon as the prober notices — the failure-triggered down-cooldown
+//! remains only as a fast-path backstop between probes. A shard whose
+//! request queue is draining for shutdown answers a `"shed":true` line
+//! carrying [`admission::DRAINING`]; the router treats that as a failover
+//! signal (try the successor) rather than relaying it, which is what makes
+//! rolling restarts invisible to clients.
+//!
+//! # Request hedging
+//!
+//! When the owner's rolling p99 (router-observed round trips) exceeds
+//! `hedge_threshold` × the fleet median, a hedgeable request (evaluate /
+//! energy / select — pure computations, bit-identical across replicas by
+//! the store contract) is duplicated to the first live successor and the
+//! first non-shed answer wins. The loser's reply is drained and counted,
+//! never delivered, so clients still see exactly one response per id.
+//!
 //! `status` is answered by the router itself (fleet view: per-shard
-//! forward counts and health). `shutdown` stops the router only — shards
-//! are independent processes with their own lifecycles.
+//! forward counts, liveness, and latency). `shutdown` stops the router
+//! only — shards are independent processes with their own lifecycles.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -44,6 +66,7 @@ use anyhow::{bail, Context, Result};
 use crate::json::Json;
 
 use super::codec::{self, Op, Request, PROTOCOL};
+use super::health::{self, Liveness, Membership, ProbeReport};
 use super::http::{error_body_into, write_response, Outcome as HttpOutcome};
 use super::ring::Ring;
 use super::{admission, wire};
@@ -51,8 +74,12 @@ use super::{admission, wire};
 /// Cap on one forwarded response line (artifact envelopes can be large).
 const MAX_FORWARD_RESPONSE: usize = 64 << 20;
 
-/// How long a shard stays out of rotation after a transport failure.
-const DOWN_COOLDOWN: Duration = Duration::from_millis(500);
+/// Request id on prober-originated `health` lines (never echoes a client).
+const PROBE_ID: i64 = -7;
+
+/// Rolling round-trip samples a pool must hold before its p99 may trigger
+/// hedging (a couple of slow cold calls should not).
+const HEDGE_MIN_SAMPLES: usize = 8;
 
 /// Shed message when no shard could answer a request.
 pub const ALL_SHARDS_DOWN: &str = "no shard reachable for this key; retry shortly";
@@ -82,6 +109,17 @@ pub struct RouterConfig {
     pub connect_timeout_ms: u64,
     /// Shard request round-trip timeout (ms) — also the pool-lease wait.
     pub io_timeout_ms: u64,
+    /// How long a shard stays out of rotation after a transport failure
+    /// (ms). Membership supersedes this for liveness; the cooldown remains
+    /// the fast-path backstop between probes, and its value is the floor
+    /// of the probe interval.
+    pub down_cooldown_ms: u64,
+    /// Membership probe interval (ms); the effective period is
+    /// `max(probe_interval_ms, down_cooldown_ms)`, jittered per shard.
+    pub probe_interval_ms: u64,
+    /// Hedge a request when the owner's rolling p99 exceeds this multiple
+    /// of the fleet median round trip. `<= 0` disables hedging.
+    pub hedge_threshold: f64,
 }
 
 impl Default for RouterConfig {
@@ -96,6 +134,9 @@ impl Default for RouterConfig {
             write_timeout_ms: 10_000,
             connect_timeout_ms: 500,
             io_timeout_ms: 10_000,
+            down_cooldown_ms: 500,
+            probe_interval_ms: 500,
+            hedge_threshold: 3.0,
         }
     }
 }
@@ -112,6 +153,14 @@ pub struct RouterStats {
     pub shed: AtomicU64,
     /// Malformed requests bounced at the router.
     pub errors: AtomicU64,
+    /// Requests duplicated to a successor because the owner looked slow.
+    pub hedged: AtomicU64,
+    /// Hedged requests whose *successor* answer was delivered.
+    pub hedge_wins: AtomicU64,
+    /// Hedge loser replies drained (counted, never delivered).
+    pub hedge_drained: AtomicU64,
+    /// Membership probes sent.
+    pub probes: AtomicU64,
 }
 
 /// One shard's bounded connection pool. Leases are capped; idle
@@ -123,9 +172,12 @@ struct Pool {
     cap: usize,
     connect_timeout: Duration,
     io_timeout: Duration,
+    cooldown: Duration,
     state: Mutex<PoolState>,
     cv: Condvar,
     forwarded: AtomicU64,
+    /// Rolling router-observed round-trip latencies (the hedging signal).
+    window: health::WaveWindow,
 }
 
 #[derive(Default)]
@@ -157,15 +209,23 @@ impl Drop for Permit<'_> {
 }
 
 impl Pool {
-    fn new(addr: String, cap: usize, connect_timeout: Duration, io_timeout: Duration) -> Pool {
+    fn new(
+        addr: String,
+        cap: usize,
+        connect_timeout: Duration,
+        io_timeout: Duration,
+        cooldown: Duration,
+    ) -> Pool {
         Pool {
             addr,
             cap: cap.max(1),
             connect_timeout,
             io_timeout,
+            cooldown,
             state: Mutex::new(PoolState::default()),
             cv: Condvar::new(),
             forwarded: AtomicU64::new(0),
+            window: health::WaveWindow::new(128),
         }
     }
 
@@ -214,10 +274,22 @@ impl Pool {
         Ok(s)
     }
 
-    /// One request line → one response line. A stale pooled connection
-    /// (closed by the shard since it was pooled) is retried once on a
-    /// fresh connection before the shard is declared down.
+    /// One request line → one response line, with the round trip recorded
+    /// into the rolling latency window (successful trips only — failures
+    /// feed the cooldown and the membership prober instead).
     fn round_trip(&self, line: &str) -> Result<String> {
+        let t0 = Instant::now();
+        let out = self.round_trip_inner(line);
+        if out.is_ok() {
+            self.window.record(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        out
+    }
+
+    /// A stale pooled connection (closed by the shard since it was pooled)
+    /// is retried once on a fresh connection before the shard is declared
+    /// down.
+    fn round_trip_inner(&self, line: &str) -> Result<String> {
         let (mut permit, idle) = self.acquire()?;
         if let Some(s) = idle {
             if let Ok(resp) = exchange(&s, line) {
@@ -255,7 +327,7 @@ impl Pool {
 
     fn mark_down(&self) {
         let mut st = self.state.lock().unwrap();
-        st.down_until = Some(Instant::now() + DOWN_COOLDOWN);
+        st.down_until = Some(Instant::now() + self.cooldown);
         st.idle.clear(); // pooled connections to a failing shard are suspect
         drop(st);
         self.cv.notify_all();
@@ -306,6 +378,21 @@ fn is_conn_refusal(resp: &str) -> bool {
         && j.get("shed").and_then(|v| v.as_bool()).unwrap_or(false)
 }
 
+/// Did the shard answer "I'm draining for shutdown"? That shed carries the
+/// request's id but is a *failover* signal to the router: the successor
+/// (warm, by replication) answers instead, so a rolling restart never
+/// surfaces to the client.
+fn is_draining(resp: &str) -> bool {
+    if !resp.contains(admission::DRAINING) {
+        return false;
+    }
+    let Ok(j) = Json::parse(resp) else { return false };
+    !j.get("ok").and_then(|v| v.as_bool()).unwrap_or(true)
+        && j.get("shed").and_then(|v| v.as_bool()).unwrap_or(false)
+        && j.get("error").ok().and_then(|v| v.as_str().ok().map(str::to_string)).as_deref()
+            == Some(admission::DRAINING)
+}
+
 /// Extract the error message iff this is an "unknown model" rejection.
 fn unknown_model_error(resp: &str) -> Option<String> {
     if !resp.contains("unknown model") {
@@ -324,6 +411,7 @@ struct RouterShared {
     ring: Ring,
     pools: Vec<Pool>,
     stats: RouterStats,
+    membership: Membership,
     stop: AtomicBool,
     addr: SocketAddr,
     http_addr: Option<SocketAddr>,
@@ -331,13 +419,34 @@ struct RouterShared {
     gate: Arc<admission::Gate>,
     max_line: usize,
     write_timeout_ms: u64,
+    probe_period: Duration,
+    probe_timeout: Duration,
+    hedge_threshold: f64,
 }
 
 impl RouterShared {
     /// Route one raw request line to its shard fleet and return the
     /// response line to relay. Always answers: failures shed explicitly.
-    fn forward(&self, key: &str, id: i64, line: &str) -> String {
-        let order = self.ring.successors(key);
+    ///
+    /// The ring successor order is filtered through the current membership
+    /// view first, so `Down` shards are never dialed; `hedgeable` requests
+    /// may additionally race the owner against its first live successor
+    /// when the owner's tail looks slow.
+    fn forward(self: &Arc<Self>, key: &str, id: i64, line: &str, hedgeable: bool) -> String {
+        let view = self.membership.view();
+        let order = view.filter_order(&self.ring.successors(key));
+        if order.is_empty() {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return wire::shed_line(id, ALL_SHARDS_DOWN);
+        }
+        if hedgeable && order.len() >= 2 && self.should_hedge(order[0]) {
+            if let Some(resp) = self.hedged_round_trip(order[0], order[1], line) {
+                self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+                return resp;
+            }
+            // both legs shed or failed: fall through to the sequential
+            // walk (the ops are pure, so a re-send is harmless)
+        }
         let mut failed_over = false;
         for &shard in &order {
             let resp = match self.pools[shard].round_trip(line) {
@@ -347,6 +456,11 @@ impl RouterShared {
                     continue;
                 }
             };
+            if is_draining(&resp) {
+                // the shard is shutting down; its replica answers instead
+                failed_over = true;
+                continue;
+            }
             self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
             if is_conn_refusal(&resp) {
                 // the shard refused the router's *connection*; re-scope
@@ -369,14 +483,80 @@ impl RouterShared {
         wire::shed_line(id, ALL_SHARDS_DOWN)
     }
 
+    /// Should a request owned by `owner` be hedged? Yes when the owner's
+    /// rolling p99 exceeds `hedge_threshold` × the fleet median (over
+    /// pools with data), with a minimum sample count so cold starts don't
+    /// trigger it.
+    fn should_hedge(&self, owner: usize) -> bool {
+        if self.hedge_threshold <= 0.0 {
+            return false;
+        }
+        let pool = &self.pools[owner];
+        if pool.window.len() < HEDGE_MIN_SAMPLES {
+            return false;
+        }
+        let mut p99s: Vec<f64> = self
+            .pools
+            .iter()
+            .filter(|p| !p.window.is_empty())
+            .map(|p| p.window.p99_ms())
+            .collect();
+        if p99s.len() < 2 {
+            return false; // no fleet to compare against
+        }
+        p99s.sort_by(|a, b| a.total_cmp(b));
+        let median = p99s[(p99s.len() - 1) / 2];
+        median > 0.0 && pool.window.p99_ms() > self.hedge_threshold * median
+    }
+
+    /// Race `owner` against `successor` for one request line and deliver
+    /// the first useful answer. The loser's reply is drained by its own
+    /// thread (its send fails once a winner is taken) and counted — never
+    /// delivered, so the client sees exactly one response per id. Safe
+    /// because hedgeable ops are pure and replicas are bit-identical.
+    /// `None` when both legs shed, drained, or failed.
+    fn hedged_round_trip(self: &Arc<Self>, owner: usize, successor: usize, line: &str) -> Option<String> {
+        self.stats.hedged.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel::<(usize, String)>();
+        for (leg, shard) in [(0usize, owner), (1usize, successor)] {
+            let me = self.clone();
+            let tx = tx.clone();
+            let line = line.to_string();
+            std::thread::spawn(move || {
+                if let Ok(resp) = me.pools[shard].round_trip(&line) {
+                    if tx.send((leg, resp)).is_err() {
+                        me.stats.hedge_drained.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((leg, resp)) = rx.recv() {
+            if is_conn_refusal(&resp) || is_draining(&resp) {
+                continue; // this leg can't answer; wait for the other
+            }
+            if leg == 1 && unknown_model_error(&resp).is_some() {
+                continue; // cold successor without the replica: owner only
+            }
+            if leg == 1 {
+                self.stats.hedge_wins.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some(resp);
+        }
+        None
+    }
+
     fn status_json(&self) -> Json {
+        let view = self.membership.view();
         let mut shards = Json::arr();
         for (i, p) in self.pools.iter().enumerate() {
             shards.push(
                 Json::obj()
                     .with("addr", self.ring.shards()[i].as_str())
                     .with("forwarded", p.forwarded.load(Ordering::Relaxed) as usize)
-                    .with("down", p.is_down()),
+                    .with("down", p.is_down())
+                    .with("liveness", view.liveness(i).as_str())
+                    .with("p99_ms", p.window.p99_ms()),
             );
         }
         Json::obj()
@@ -385,12 +565,24 @@ impl RouterShared {
             .with("shards", shards)
             .with("uptime_secs", self.started.elapsed().as_secs_f64())
             .with(
+                "membership",
+                Json::obj()
+                    .with("generation", view.generation() as usize)
+                    .with("probes", self.stats.probes.load(Ordering::Relaxed) as usize),
+            )
+            .with(
                 "requests",
                 Json::obj()
                     .with("forwarded", self.stats.forwarded.load(Ordering::Relaxed) as usize)
                     .with("rerouted", self.stats.rerouted.load(Ordering::Relaxed) as usize)
                     .with("shed", self.stats.shed.load(Ordering::Relaxed) as usize)
-                    .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize),
+                    .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize)
+                    .with("hedged", self.stats.hedged.load(Ordering::Relaxed) as usize)
+                    .with("hedge_wins", self.stats.hedge_wins.load(Ordering::Relaxed) as usize)
+                    .with(
+                        "hedge_drained",
+                        self.stats.hedge_drained.load(Ordering::Relaxed) as usize,
+                    ),
             )
             .with(
                 "admission",
@@ -438,11 +630,13 @@ impl Router {
         };
         let connect_timeout = Duration::from_millis(cfg.connect_timeout_ms.max(1));
         let io_timeout = Duration::from_millis(cfg.io_timeout_ms.max(1));
-        let pools = cfg
+        let cooldown = Duration::from_millis(cfg.down_cooldown_ms.max(1));
+        let pools: Vec<Pool> = cfg
             .shards
             .iter()
-            .map(|a| Pool::new(a.clone(), cfg.pool_per_shard, connect_timeout, io_timeout))
+            .map(|a| Pool::new(a.clone(), cfg.pool_per_shard, connect_timeout, io_timeout, cooldown))
             .collect();
+        let nshards = pools.len();
         Ok(Router {
             listener,
             http_listener,
@@ -450,6 +644,7 @@ impl Router {
                 ring: Ring::new(cfg.shards.clone()),
                 pools,
                 stats: RouterStats::default(),
+                membership: Membership::new(nshards),
                 stop: AtomicBool::new(false),
                 addr,
                 http_addr,
@@ -457,6 +652,11 @@ impl Router {
                 gate: Arc::new(admission::Gate::new(cfg.max_conns)),
                 max_line: cfg.max_line.max(64),
                 write_timeout_ms: cfg.write_timeout_ms.max(1),
+                probe_period: Duration::from_millis(
+                    cfg.probe_interval_ms.max(cfg.down_cooldown_ms).max(1),
+                ),
+                probe_timeout: connect_timeout,
+                hedge_threshold: cfg.hedge_threshold,
             }),
         })
     }
@@ -481,6 +681,10 @@ impl Router {
     /// synchronously and independently.
     pub fn run(self) -> Result<()> {
         let shared = self.shared;
+        let prober = {
+            let shared = shared.clone();
+            std::thread::spawn(move || prober_loop(&shared))
+        };
         let http_accept = self.http_listener.map(|l| {
             let shared = shared.clone();
             std::thread::spawn(move || http_accept_loop(l, &shared))
@@ -513,7 +717,79 @@ impl Router {
         if let Some(h) = http_accept {
             let _ = h.join();
         }
+        let _ = prober.join();
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Membership prober
+// ---------------------------------------------------------------------------
+
+/// Dial one shard's `health` op directly (bypassing the pool so a cooldown
+/// never hides a recovery) and decode the report.
+fn probe_shard(addr: &str, timeout: Duration) -> Option<ProbeReport> {
+    let sock: SocketAddr = addr.to_socket_addrs().ok()?.next()?;
+    let s = TcpStream::connect_timeout(&sock, timeout).ok()?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(timeout));
+    let _ = s.set_write_timeout(Some(timeout));
+    let line = Json::obj().with("id", PROBE_ID).with("op", "health").compact();
+    let resp = exchange(&s, &line).ok()?;
+    let j = Json::parse(&resp).ok()?;
+    if !j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false) {
+        return None;
+    }
+    let r = j.get("result").ok()?;
+    Some(ProbeReport {
+        generation: r.get("generation").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        queue_depth: r.get("queue_depth").and_then(|v| v.as_usize()).unwrap_or(0),
+        p99_ms: r.get("p99_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        warm: r.get("warm").and_then(|v| v.as_str_vec()).unwrap_or_default(),
+    })
+}
+
+/// Probe one shard and fold the outcome into the membership view. On a
+/// recovery the pool's failure cooldown is cleared too, so routing resumes
+/// the moment the prober sees the shard again. Returns the new liveness.
+fn probe_once(shared: &RouterShared, shard: usize) -> Liveness {
+    shared.stats.probes.fetch_add(1, Ordering::Relaxed);
+    match probe_shard(&shared.pools[shard].addr, shared.probe_timeout) {
+        Some(report) => {
+            if shared.membership.probe_ok(shard, report) {
+                shared.pools[shard].mark_up();
+            }
+            Liveness::Up
+        }
+        None => shared.membership.probe_missed(shard),
+    }
+}
+
+/// The router's probe loop: every shard, every `probe_period` (plus a
+/// deterministic per-shard jitter so a fleet of routers never probes in
+/// lockstep). A shard that just turned `Suspect` gets its first successor
+/// probed out of band — the failover target's liveness is fresh before
+/// any request needs it.
+fn prober_loop(shared: &Arc<RouterShared>) {
+    let n = shared.pools.len();
+    let mut tick: u64 = 0;
+    while !shared.stop.load(Ordering::SeqCst) {
+        for shard in 0..n {
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            if probe_once(shared, shard) == Liveness::Suspect && n > 1 {
+                probe_once(shared, (shard + 1) % n);
+            }
+        }
+        tick += 1;
+        // stop-aware sleep in small slices so shutdown is prompt
+        let mut left = shared.probe_period + health::probe_jitter(shared.probe_period, 0, tick);
+        while left > Duration::ZERO && !shared.stop.load(Ordering::SeqCst) {
+            let slice = left.min(Duration::from_millis(50));
+            std::thread::sleep(slice);
+            left = left.saturating_sub(slice);
+        }
     }
 }
 
@@ -536,10 +812,17 @@ fn route_key(req: &Request) -> &str {
     req.model.as_deref().unwrap_or("")
 }
 
+/// May this op be hedged? Only pure computations whose replicas answer
+/// bit-identically — artifact ops mutate or read shard-local stores, and
+/// control ops never leave the router.
+fn hedgeable(op: &Op) -> bool {
+    matches!(op, Op::Evaluate { .. } | Op::Energy { .. } | Op::Select { .. })
+}
+
 /// One NDJSON client connection: decode for routing, forward raw lines,
 /// relay raw responses. Serial per connection — a pipelining client's
 /// responses come back in request order.
-fn route_connection(stream: TcpStream, shared: &RouterShared, _guard: admission::ConnGuard) {
+fn route_connection(stream: TcpStream, shared: &Arc<RouterShared>, _guard: admission::ConnGuard) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_write_timeout(Some(Duration::from_millis(shared.write_timeout_ms)));
     let Ok(write_half) = stream.try_clone() else { return };
@@ -596,7 +879,7 @@ fn route_connection(stream: TcpStream, shared: &RouterShared, _guard: admission:
                     }
                     continue;
                 }
-                _ => shared.forward(route_key(&req), req.id, trimmed),
+                _ => shared.forward(route_key(&req), req.id, trimmed, hedgeable(&req.op)),
             },
         };
         if !send(&mut writer, &line) {
@@ -660,7 +943,11 @@ fn refuse_http_connection(stream: TcpStream) {
 /// forward over the ring, and map the response envelope onto HTTP status
 /// codes (200 / 503 shed + `Retry-After` / 404 unknown model / 400).
 /// Success and error bodies are the NDJSON envelopes themselves.
-fn route_http_connection(stream: TcpStream, shared: &RouterShared, _guard: admission::ConnGuard) {
+fn route_http_connection(
+    stream: TcpStream,
+    shared: &Arc<RouterShared>,
+    _guard: admission::ConnGuard,
+) {
     const MAX_HEADER_LINE: usize = 8192;
     let timeout = Duration::from_millis(shared.write_timeout_ms);
     let _ = stream.set_write_timeout(Some(timeout));
@@ -808,7 +1095,12 @@ fn route_http_connection(stream: TcpStream, shared: &RouterShared, _guard: admis
 
 /// Decode one HTTP body, forward it over the ring as a canonical NDJSON
 /// line, and translate the response envelope to an HTTP outcome.
-fn http_forward(shared: &RouterShared, body: &str, route_op: &str, resp: &mut String) -> HttpOutcome {
+fn http_forward(
+    shared: &Arc<RouterShared>,
+    body: &str,
+    route_op: &str,
+    resp: &mut String,
+) -> HttpOutcome {
     let req = match wire::decode_body(body, route_op) {
         Ok(req) => req,
         Err(e) => {
@@ -818,7 +1110,7 @@ fn http_forward(shared: &RouterShared, body: &str, route_op: &str, resp: &mut St
         }
     };
     let line = request_line(&req);
-    let answer = shared.forward(route_key(&req), req.id, &line);
+    let answer = shared.forward(route_key(&req), req.id, &line, hedgeable(&req.op));
     resp.clear();
     resp.push_str(&answer);
     let Ok(j) = Json::parse(&answer) else {
@@ -871,6 +1163,7 @@ fn request_line(req: &Request) -> String {
         Op::ArtifactPut { kind, envelope } => {
             j.with("op", "artifact_put").with("kind", kind.as_str()).with("envelope", envelope.clone())
         }
+        Op::Health => j.with("op", "health"),
         Op::Status => j.with("op", "status"),
         Op::Shutdown => j.with("op", "shutdown"),
     };
@@ -948,6 +1241,7 @@ mod tests {
             2,
             Duration::from_millis(50),
             Duration::from_millis(100),
+            Duration::from_millis(500),
         );
         assert!(p.round_trip("{\"id\":1,\"op\":\"status\"}").is_err());
         assert!(p.is_down());
@@ -965,9 +1259,70 @@ mod tests {
             ..RouterConfig::default()
         };
         let r = Router::bind(&cfg).unwrap();
-        let line = r.shared.forward("m/c", 42, "{\"id\":42,\"op\":\"status\"}");
+        let line = r.shared.forward("m/c", 42, "{\"id\":42,\"op\":\"status\"}", false);
         assert!(line.contains("\"shed\":true"), "{line}");
         assert!(line.contains("\"id\":42"), "{line}");
         assert_eq!(r.shared.stats.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn draining_classifier_matches_only_the_drain_shed() {
+        assert!(is_draining(&wire::shed_line(7, admission::DRAINING)));
+        assert!(!is_draining(&wire::shed_line(7, admission::OVERLOADED_QUEUE)));
+        assert!(!is_draining(&wire::err_line(7, admission::DRAINING)), "non-shed error relays");
+        assert!(!is_draining(&wire::ok_line(7, &Json::obj().with("x", 1i64))));
+    }
+
+    #[test]
+    fn membership_ejects_down_shards_from_routing() {
+        let cfg = RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            connect_timeout_ms: 50,
+            io_timeout_ms: 100,
+            ..RouterConfig::default()
+        };
+        let r = Router::bind(&cfg).unwrap();
+        // Mark every shard Down via missed probes: forward must shed
+        // immediately, without dialing anything (no cooldown needed).
+        for shard in 0..2 {
+            for _ in 0..health::MISSES_TO_DOWN {
+                r.shared.membership.probe_missed(shard);
+            }
+        }
+        let t0 = Instant::now();
+        let line = r.shared.forward("m/c", 9, "{\"id\":9,\"op\":\"status\"}", false);
+        assert!(line.contains(ALL_SHARDS_DOWN), "{line}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "ejected shards must not be dialed (took {:?})",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn should_hedge_needs_samples_a_fleet_and_a_slow_owner() {
+        let cfg = RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            shards: vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            hedge_threshold: 3.0,
+            ..RouterConfig::default()
+        };
+        let r = Router::bind(&cfg).unwrap();
+        assert!(!r.shared.should_hedge(0), "empty windows never hedge");
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            r.shared.pools[0].window.record(100.0);
+            r.shared.pools[1].window.record(1.0);
+        }
+        assert!(r.shared.should_hedge(0), "owner p99 100ms vs median 1ms");
+        assert!(!r.shared.should_hedge(1), "the fast shard is not hedged");
+        // Disabled threshold switches it all off.
+        let cfg = RouterConfig { hedge_threshold: 0.0, ..cfg };
+        let r2 = Router::bind(&cfg).unwrap();
+        for _ in 0..HEDGE_MIN_SAMPLES {
+            r2.shared.pools[0].window.record(100.0);
+            r2.shared.pools[1].window.record(1.0);
+        }
+        assert!(!r2.shared.should_hedge(0));
     }
 }

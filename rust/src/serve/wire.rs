@@ -297,10 +297,11 @@ fn finish(f: Fields<'_>, route_op: Option<&str>) -> Result<Request> {
                 Some(Err(e)) => bail!("'envelope': {e}"),
             },
         },
+        "health" => Op::Health,
         "status" => Op::Status,
         "shutdown" => Op::Shutdown,
         other => bail!(
-            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|status|shutdown)"
+            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|health|status|shutdown)"
         ),
     };
     Ok(Request { id, model, op })
@@ -822,6 +823,8 @@ mod tests {
             r#"{"id":3,"op":"select","r_energy":0.7,"omega":[[0.1,null],[0.2]]}"#.into(),
             r#"{"id":4,"op":"status"}"#.into(),
             r#"{"id":5,"op":"shutdown"}"#.into(),
+            r#"{"id":10,"op":"health"}"#.into(),
+            r#"{"id":11,"op":"health","model":"m/c"}"#.into(),
             r#"{"id":6,"op":"artifact_get","kind":"library","fingerprint":"00deadbeef00cafe"}"#
                 .into(),
             r#"{"id":7,"op":"artifact_put","kind":"library","envelope":{"schema":"fames-store-v1","version":1,"payload":{"a":[1,null,"s"],"b":true}}}"#

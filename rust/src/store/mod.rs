@@ -180,6 +180,9 @@ fn validate_envelope<'a>(
 pub struct Store {
     root: PathBuf,
     remote: Option<remote::RemoteTier>,
+    /// Total copies a stage-completion write should end up with: one
+    /// local plus `replication - 1` ring-successor peers.
+    replication: usize,
 }
 
 /// Process-wide sequence for temp-file names: two threads `put`ting the
@@ -190,13 +193,24 @@ static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
 impl Store {
     /// Bind a store to a directory (created lazily on first `put`).
     pub fn open(root: impl Into<PathBuf>) -> Store {
-        Store { root: root.into(), remote: None }
+        Store { root: root.into(), remote: None, replication: 1 }
     }
 
     /// Attach (or detach) the remote read-through tier.
     pub fn with_remote(mut self, remote: Option<remote::RemoteTier>) -> Store {
         self.remote = remote;
         self
+    }
+
+    /// Set the replication factor for [`Store::put_replicated`] (clamped
+    /// to ≥ 1; 1 means local-only, the default).
+    pub fn with_replication(mut self, replication: usize) -> Store {
+        self.replication = replication.max(1);
+        self
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
     }
 
     pub fn remote(&self) -> Option<&remote::RemoteTier> {
@@ -277,6 +291,29 @@ impl Store {
         let payload = envelope.get("payload").context("envelope has no payload")?;
         self.put(kind, version as u32, fp, payload.clone())?;
         Ok(fp)
+    }
+
+    /// Persist an entry locally, then push copies to the `replication - 1`
+    /// ring-successor peers (best-effort; an unreachable replica degrades
+    /// to a read-through fetch later, never to an error). This is the
+    /// **stage completion** write path only — plain [`Store::put`] never
+    /// replicates, so the read-through cache fill and the `artifact_put`
+    /// service path cannot re-broadcast entries around the fleet.
+    /// Returns how many replicas acknowledged.
+    pub fn put_replicated(
+        &self,
+        kind: &str,
+        version: u32,
+        fp: Fingerprint,
+        payload: Json,
+    ) -> Result<usize> {
+        self.put(kind, version, fp, payload.clone())?;
+        let extra = self.replication.saturating_sub(1);
+        if extra == 0 {
+            return Ok(0);
+        }
+        let Some(remote) = &self.remote else { return Ok(0) };
+        Ok(remote.offer_replicas(kind, version, fp, &payload, extra))
     }
 
     /// Persist an entry (compact JSON, temp-file + rename for atomicity).

@@ -33,6 +33,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::json::Json;
+use crate::serve::ring::Ring;
 use crate::serve::wire::{read_line_bounded, LineRead};
 
 use super::{validate_envelope, Fingerprint, ENVELOPE_SCHEMA};
@@ -126,22 +127,56 @@ impl RemoteTier {
         None
     }
 
-    /// Offer one entry to every peer (best-effort replication push).
-    /// Returns how many peers acknowledged the write.
-    pub fn offer(&self, kind: &str, version: u32, fp: Fingerprint, payload: &Json) -> usize {
+    /// The `artifact_put` request line offering one full envelope.
+    fn put_line(&self, kind: &str, version: u32, fp: Fingerprint, payload: &Json) -> String {
         let envelope = Json::obj()
             .with("schema", ENVELOPE_SCHEMA)
             .with("kind", kind)
             .with("version", version as usize)
             .with("fingerprint", fp.hex())
             .with("payload", payload.clone());
-        let req = Json::obj()
+        Json::obj()
             .with("id", 0i64)
             .with("op", "artifact_put")
             .with("kind", kind)
-            .with("envelope", envelope);
-        let line = req.compact();
+            .with("envelope", envelope)
+            .compact()
+    }
+
+    /// Offer one entry to every peer (best-effort replication push).
+    /// Returns how many peers acknowledged the write.
+    pub fn offer(&self, kind: &str, version: u32, fp: Fingerprint, payload: &Json) -> usize {
+        let line = self.put_line(kind, version, fp, payload);
         self.peers.iter().filter(|peer| self.call(peer, &line).is_ok()).count()
+    }
+
+    /// Offer one entry to the first `replicas` peers in consistent-hash
+    /// ring order for its `<kind>/<fingerprint>` key — the N-way
+    /// replication push that runs at stage completion, so the shards a
+    /// router fails over to are warm *before* any request is routed to
+    /// them. Every producer with the same peer list picks the same
+    /// replica set (the ring is deterministic), which is what makes a
+    /// replica hit re-validatable read-your-writes rather than luck.
+    /// Returns how many replicas acknowledged.
+    pub fn offer_replicas(
+        &self,
+        kind: &str,
+        version: u32,
+        fp: Fingerprint,
+        payload: &Json,
+        replicas: usize,
+    ) -> usize {
+        if replicas == 0 || self.peers.is_empty() {
+            return 0;
+        }
+        let ring = Ring::new(self.peers.clone());
+        let order = ring.successors(&format!("{kind}/{}", fp.hex()));
+        let line = self.put_line(kind, version, fp, payload);
+        order
+            .iter()
+            .take(replicas)
+            .filter(|&&i| self.call(&self.peers[i], &line).is_ok())
+            .count()
     }
 
     /// One request/response round-trip with a peer: bounded connect,

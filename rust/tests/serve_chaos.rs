@@ -1,0 +1,388 @@
+//! Chaos suite — deterministic fault schedules against a live fleet.
+//!
+//! Every test arms a seeded [`FaultPlan`] (kills, drops, truncations,
+//! delays) on one shard of a routed fleet and then asserts *invariants*,
+//! not probabilities:
+//!
+//! 1. **No silent loss** — every request id comes back, either `ok:true`
+//!    with bytes identical to a direct `Session`, or an explicit
+//!    `"shed":true` refusal. Zero [`Outcome::Lost`] after the client's
+//!    one-shot redial.
+//! 2. **Probe re-entry** — a shard killed by its own fault plan and then
+//!    restarted on the same address re-enters the fleet through the
+//!    router's health prober (status shows `liveness:"up"` again) and
+//!    serves identical bytes.
+//! 3. **Warm replicas** — the restarted shard warms from its peers
+//!    (`params_source=Store`, `lib_hit`), never recomputing; and the
+//!    stage-completion replication push actually lands entries on ring
+//!    successors over the wire.
+//!
+//! The schedules replay exactly (FNV over seed + event ordinals), which
+//! is what makes these assertions safe to gate CI on.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use fames::json::Json;
+use fames::pipeline::{self, FamesConfig, ParamsSource};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+use fames::runtime::Runtime;
+use fames::serve::{
+    codec, Client, FaultPlan, Outcome, Router, RouterConfig, ServeConfig, Server,
+};
+use fames::store::{remote::RemoteTier, FingerprintBuilder, Store};
+
+const KEYS: [&str; 2] = ["resnet8/w4a4", "resnet14/w3a3"];
+
+fn setup_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-chaos-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    for key in KEYS {
+        let (model, cfg) = key.split_once('/').unwrap();
+        write_synthetic_artifacts(&root, &SyntheticSpec::small(model, cfg)).unwrap();
+    }
+    root
+}
+
+fn base_cfg(root: &std::path::Path) -> FamesConfig {
+    FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: 200,
+        train_lr: 0.02,
+        ..FamesConfig::default()
+    }
+}
+
+fn cfg_for(base: &FamesConfig, key: &str) -> FamesConfig {
+    let (model, cfg) = key.split_once('/').unwrap();
+    FamesConfig { model: model.to_string(), cfg: cfg.to_string(), ..base.clone() }
+}
+
+/// Direct-call reference bytes per key; also warms the shared store so
+/// every shard binds all-hit.
+fn direct_wants(base: &FamesConfig) -> Vec<String> {
+    KEYS.iter()
+        .map(|key| {
+            let rt = Arc::new(Runtime::native());
+            let s = pipeline::warm_session(rt, &cfg_for(base, key)).unwrap();
+            codec::eval_json(&s.evaluate(1).unwrap()).compact()
+        })
+        .collect()
+}
+
+fn eval_req(id: i64, key: &str) -> Json {
+    Json::obj().with("id", id).with("op", "evaluate").with("model", key).with("batches", 1usize)
+}
+
+/// A routed fleet where each shard hosts every key, carries the other
+/// shards as remote peers (`replication=2`), and shard `i` runs under
+/// `faults[i]`. The router probes fast so tests converge quickly.
+struct ChaosFleet {
+    router_addr: String,
+    shard_addrs: Vec<String>,
+    shard_daemons: Vec<Option<JoinHandle<anyhow::Result<()>>>>,
+    router_daemon: JoinHandle<anyhow::Result<()>>,
+}
+
+fn spawn_chaos_fleet(
+    base: &FamesConfig,
+    nshards: usize,
+    faults: Vec<Option<Arc<FaultPlan>>>,
+) -> ChaosFleet {
+    assert_eq!(faults.len(), nshards);
+    let listeners: Vec<TcpListener> =
+        (0..nshards).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let shard_addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+
+    let mut shard_daemons = Vec::new();
+    for (i, (listener, fault)) in listeners.into_iter().zip(faults).enumerate() {
+        let peers: Vec<String> =
+            shard_addrs.iter().enumerate().filter(|&(j, _)| j != i).map(|(_, a)| a.clone()).collect();
+        let scfg = ServeConfig {
+            addr: shard_addrs[i].clone(),
+            models: KEYS.iter().map(|k| k.to_string()).collect(),
+            max_batch: 4,
+            fault,
+            base: FamesConfig { remote_peers: peers, replication: 2, ..base.clone() },
+            ..ServeConfig::default()
+        };
+        let server = Server::bind_on(&scfg, listener, None).unwrap();
+        shard_daemons.push(Some(std::thread::spawn(move || server.run())));
+    }
+
+    let rcfg = RouterConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards: shard_addrs.clone(),
+        connect_timeout_ms: 250,
+        io_timeout_ms: 2000,
+        down_cooldown_ms: 100,
+        probe_interval_ms: 100,
+        ..RouterConfig::default()
+    };
+    let router = Router::bind(&rcfg).unwrap();
+    let router_addr = router.local_addr().to_string();
+    let router_daemon = std::thread::spawn(move || router.run());
+    ChaosFleet { router_addr, shard_addrs, shard_daemons, router_daemon }
+}
+
+impl ChaosFleet {
+    fn status(&self) -> Json {
+        let mut cl = Client::connect(&self.router_addr).unwrap();
+        let resp = cl.call(&Json::obj().with("id", 999).with("op", "status")).unwrap();
+        Client::expect_ok(&resp).unwrap().clone()
+    }
+
+    /// Poll router status until shard `i` reports the wanted liveness.
+    fn wait_for_liveness(&self, i: usize, want: &str, timeout: Duration) {
+        let t0 = Instant::now();
+        loop {
+            let st = self.status();
+            let shards = st.get("shards").unwrap();
+            let live = shards
+                .as_arr()
+                .unwrap()
+                .get(i)
+                .and_then(|s| s.get("liveness").ok())
+                .and_then(|l| l.as_str().ok().map(str::to_string))
+                .unwrap_or_default();
+            if live == want {
+                return;
+            }
+            assert!(
+                t0.elapsed() < timeout,
+                "shard {i} never reached liveness {want:?} (stuck at {live:?}) in {timeout:?}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    fn shutdown(self) {
+        let ChaosFleet { router_addr, shard_addrs, shard_daemons, router_daemon } = self;
+        let mut cl = Client::connect(&router_addr).unwrap();
+        cl.shutdown(-1).unwrap();
+        drop(cl);
+        router_daemon.join().unwrap().unwrap();
+        for (addr, daemon) in shard_addrs.iter().zip(shard_daemons) {
+            if let Ok(mut cl) = Client::connect(addr) {
+                let _ = cl.shutdown(-2);
+            }
+            if let Some(d) = daemon {
+                d.join().unwrap().unwrap();
+            }
+        }
+    }
+}
+
+/// Assert the chaos invariant over one outcome set: nothing Lost, every
+/// success bit-identical to the direct reference, every failure an
+/// explicit shed. Returns the ok count.
+fn assert_no_silent_loss(outcomes: &[Outcome], wants: &[String]) -> usize {
+    let mut ok = 0usize;
+    for (r, out) in outcomes.iter().enumerate() {
+        match out {
+            Outcome::Ok(result) => {
+                assert_eq!(
+                    result.compact(),
+                    wants[r % 2],
+                    "request {r}: bytes diverged from the direct Session under faults"
+                );
+                ok += 1;
+            }
+            Outcome::Err { shed, error } => {
+                assert!(*shed, "request {r} failed without shed:true ({error})");
+            }
+            Outcome::Lost => panic!("request {r} was silently lost"),
+        }
+    }
+    ok
+}
+
+#[test]
+fn seeded_kill_mid_load_loses_nothing_and_the_shard_reenters_warm() {
+    let root = setup_root("kill");
+    let base = base_cfg(&root);
+    let wants = direct_wants(&base);
+
+    // Shard 0 kills itself (clean drain) on its 5th decoded request —
+    // probes included, so the kill lands early in the load wave.
+    let victim = 0usize;
+    let plan = Arc::new(FaultPlan::parse("kill_after=5").unwrap());
+    let fleet = spawn_chaos_fleet(&base, 3, vec![Some(plan), None, None]);
+
+    // Mid-load kill: the drain turns into DRAINING sheds, the router
+    // fails those over to warm successors, and the polite client retries
+    // anything that still shed. Nothing may be Lost.
+    let mut cl = Client::connect(&fleet.router_addr).unwrap();
+    let reqs: Vec<Json> = (0..24i64).map(|r| eval_req(r, KEYS[(r % 2) as usize])).collect();
+    let outcomes = cl.call_many_retry_shed(&reqs, Duration::from_millis(10));
+    assert_eq!(outcomes.len(), reqs.len());
+    let ok = assert_no_silent_loss(&outcomes, &wants);
+    assert!(ok >= reqs.len() / 2, "only {ok}/{} answered with two shards warm", reqs.len());
+
+    // The prober notices the corpse and ejects it from routing.
+    fleet.wait_for_liveness(victim, "down", Duration::from_secs(10));
+
+    // Restart on the same address from a *fresh* root: the only warm
+    // state it can find is what its peers replicated. No recompute.
+    let root2 = std::env::temp_dir().join(format!("fames-chaos-{}-kill-2", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root2);
+    std::fs::create_dir_all(&root2).unwrap();
+    for key in KEYS {
+        let (model, cfg) = key.split_once('/').unwrap();
+        write_synthetic_artifacts(&root2, &SyntheticSpec::small(model, cfg)).unwrap();
+    }
+    let peers: Vec<String> = fleet
+        .shard_addrs
+        .iter()
+        .enumerate()
+        .filter(|&(j, _)| j != victim)
+        .map(|(_, a)| a.clone())
+        .collect();
+    let scfg = ServeConfig {
+        addr: fleet.shard_addrs[victim].clone(),
+        models: KEYS.iter().map(|k| k.to_string()).collect(),
+        max_batch: 4,
+        base: FamesConfig {
+            artifact_root: root2.to_string_lossy().into_owned(),
+            remote_peers: peers,
+            replication: 2,
+            ..base.clone()
+        },
+        ..ServeConfig::default()
+    };
+    // The old daemon has fully exited before its port is rebound.
+    let mut fleet = fleet;
+    fleet.shard_daemons[victim].take().unwrap().join().unwrap().unwrap();
+    let replacement = Server::bind(&scfg).unwrap();
+    for entry in replacement.registry().entries() {
+        assert_eq!(
+            entry.params_source,
+            ParamsSource::Store,
+            "{}: restarted shard retrained instead of pulling the replica",
+            entry.key
+        );
+        assert_eq!(
+            entry.lib_hit,
+            Some(true),
+            "{}: restarted shard recharacterized instead of pulling the replica",
+            entry.key
+        );
+    }
+    fleet.shard_daemons[victim] = Some(std::thread::spawn(move || replacement.run()));
+
+    // Probe recovery brings it back without operator action ...
+    fleet.wait_for_liveness(victim, "up", Duration::from_secs(10));
+    let st = fleet.status();
+    assert!(
+        st.get("membership").unwrap().get("probes").unwrap().as_usize().unwrap() >= 1,
+        "recovery must have come through the prober"
+    );
+
+    // ... and the re-entered shard answers bit-identically.
+    let reqs: Vec<Json> = (100..116i64).map(|r| eval_req(r, KEYS[(r % 2) as usize])).collect();
+    let outcomes = cl.call_many_retry_shed(&reqs, Duration::from_millis(10));
+    let ok = assert_no_silent_loss(&outcomes, &wants);
+    assert_eq!(ok, reqs.len(), "healed fleet must answer everything");
+    drop(cl);
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&root2);
+}
+
+#[test]
+fn seeded_wire_faults_are_contained_by_the_router() {
+    let root = setup_root("wire");
+    let base = base_cfg(&root);
+    let wants = direct_wants(&base);
+
+    // Shard 0 mangles its wire: ~1/3 of response lines delayed, ~1/4
+    // truncated mid-byte, ~1/5 silently dropped. Same seed ⇒ same
+    // schedule, run after run.
+    let plan = Arc::new(
+        FaultPlan::parse("seed=7;delay_every=3;delay_ms=25;truncate_every=4;drop_every=5")
+            .unwrap(),
+    );
+    let fleet = spawn_chaos_fleet(&base, 2, vec![Some(plan), None]);
+
+    let mut cl = Client::connect(&fleet.router_addr).unwrap();
+    let reqs: Vec<Json> = (0..16i64).map(|r| eval_req(r, KEYS[(r % 2) as usize])).collect();
+    let outcomes = cl.call_many_retry_shed(&reqs, Duration::from_millis(10));
+    assert_eq!(outcomes.len(), reqs.len());
+    let ok = assert_no_silent_loss(&outcomes, &wants);
+    // The clean shard replicates every key, so the router's failover
+    // keeps the answer rate high even with shard 0 misbehaving.
+    assert!(ok >= reqs.len() / 2, "only {ok}/{} survived the wire faults", reqs.len());
+
+    // The router absorbed the damage: it saw shard errors, not the client.
+    let st = fleet.status();
+    let reqs_j = st.get("requests").unwrap();
+    assert!(reqs_j.get("forwarded").unwrap().as_usize().unwrap() >= ok);
+    drop(cl);
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn stage_completion_pushes_warm_replicas_onto_the_ring() {
+    // One live daemon is the replica target; a producer store with
+    // replication=2 must land its entry there at put time, so a later
+    // reader (fresh store, same peer) hits without the producer being up.
+    let root = setup_root("repl");
+    let base = base_cfg(&root);
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec![KEYS[0].to_string()],
+        max_batch: 4,
+        base: base.clone(),
+        ..ServeConfig::default()
+    };
+    let daemon = Server::bind(&scfg).unwrap();
+    let daemon_addr = daemon.local_addr().to_string();
+    let handle = std::thread::spawn(move || daemon.run());
+
+    let produce_root =
+        std::env::temp_dir().join(format!("fames-chaos-{}-repl-prod", std::process::id()));
+    let _ = std::fs::remove_dir_all(&produce_root);
+    let fp = FingerprintBuilder::new("chaos-replica").u64("n", 1).finish();
+    let payload = Json::obj().with("v", 42usize);
+    let producer = Store::open(&produce_root)
+        .with_remote(Some(RemoteTier::new(vec![daemon_addr.clone()])))
+        .with_replication(2);
+    let acks = producer.put_replicated("numbers", 1, fp, payload.clone()).unwrap();
+    assert_eq!(acks, 1, "the single peer must acknowledge the replica push");
+
+    // Read-your-writes through a different store: the entry is served
+    // from the daemon's local tier, fingerprint re-validated on the way.
+    let read_root =
+        std::env::temp_dir().join(format!("fames-chaos-{}-repl-read", std::process::id()));
+    let _ = std::fs::remove_dir_all(&read_root);
+    let reader =
+        Store::open(&read_root).with_remote(Some(RemoteTier::new(vec![daemon_addr.clone()])));
+    let got = reader.get("numbers", 1, fp).expect("replica must be readable from the peer");
+    assert_eq!(got.compact(), payload.compact(), "replica bytes must round-trip exactly");
+
+    // replication=1 is local-only: no peer traffic at all.
+    let solo = Store::open(&produce_root)
+        .with_remote(Some(RemoteTier::new(vec![daemon_addr.clone()])))
+        .with_replication(1);
+    let fp2 = FingerprintBuilder::new("chaos-replica").u64("n", 2).finish();
+    assert_eq!(solo.put_replicated("numbers", 1, fp2, payload).unwrap(), 0);
+    let reader2 =
+        Store::open(&read_root).with_remote(Some(RemoteTier::new(vec![daemon_addr.clone()])));
+    assert!(reader2.get("numbers", 1, fp2).is_none(), "local-only put must not replicate");
+
+    let mut cl = Client::connect(&daemon_addr).unwrap();
+    cl.shutdown(-3).unwrap();
+    drop(cl);
+    handle.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&produce_root);
+    let _ = std::fs::remove_dir_all(&read_root);
+}
