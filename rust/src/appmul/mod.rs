@@ -176,6 +176,14 @@ impl AppMul {
         (self.err_stats.sq_sum as f64 / self.err.len().max(1) as f64).sqrt()
     }
 
+    /// Mean *signed* error of the matrix, from the cached integer Σe —
+    /// O(1). Positive means the multiplier overshoots on average, negative
+    /// undershoots: the pairing signal for positive/negative multiplier
+    /// selection (arXiv 2107.09366).
+    pub fn err_mean(&self) -> f64 {
+        self.err_stats.sum as f64 / self.err.len().max(1) as f64
+    }
+
     /// `Σ v[i] · E[i]` through the fused integer-domain kernel: the error
     /// operand is generated from the packed LUT index inside the loop —
     /// bit-identical to a float dot over [`AppMul::error_slice`], without
@@ -254,6 +262,8 @@ mod tests {
         assert_eq!(stats.max_abs, ma);
         let want_rms = (sq as f64 / e.len() as f64).sqrt();
         assert_eq!(am.err_rms().to_bits(), want_rms.to_bits());
+        let want_mean = sum as f64 / e.len() as f64;
+        assert_eq!(am.err_mean().to_bits(), want_mean.to_bits());
         // err_dot through the integer kernel == float dot over the slice
         let v: Vec<f32> = (0..e.len()).map(|i| (i as f32 * 0.01).sin()).collect();
         let want: f64 = v

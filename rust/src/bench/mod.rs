@@ -704,9 +704,30 @@ pub struct ServeBench {
     pub levels: Vec<ServeLevel>,
     /// Overload profile against deliberately tiny admission caps.
     pub saturation: Option<SaturationBench>,
+    /// Live operating-point swap latency, in-front vs off-front.
+    pub reconfigure: Option<ReconfigureBench>,
     /// Cluster-mode profile: routed aggregate throughput at 1/2/4 shards,
     /// router forwarding overhead, cold-vs-handoff shard spin-up.
     pub fleet: Option<FleetBench>,
+}
+
+/// Swap-latency drill (`serve.reconfigure`): a warm adaptive daemon takes
+/// one budget change inside its precomputed Pareto front (pure cache hit +
+/// swap) and one outside it (select + calibrate re-run on a scratch
+/// session), both timed end to end over the wire.
+#[derive(Clone, Debug)]
+pub struct ReconfigureBench {
+    /// Pareto points precomputed at warm-up.
+    pub front_points: usize,
+    /// Wall-clock of the in-front budget change.
+    pub warm_swap_secs: f64,
+    /// Wall-clock of the off-front budget change.
+    pub cold_swap_secs: f64,
+    /// Resolution source the daemon reported for the in-front swap
+    /// (must be `pareto`).
+    pub warm_source: String,
+    /// Resolution source for the off-front swap (`store` or `computed`).
+    pub cold_source: String,
 }
 
 /// One concurrency level of the saturation bench: what happened to every
@@ -832,10 +853,77 @@ pub fn run_serve_bench_full(cfg: &BenchConfig) -> Result<ServeBench> {
     }
     // same artifact root, so the saturation server binds warm
     let saturation = Some(run_saturation_bench(&base, cfg)?);
+    let reconfigure = Some(run_reconfigure_bench(&base).context("reconfigure bench")?);
     let _ = std::fs::remove_dir_all(&root);
     // the fleet section is expensive; `fames bench` attaches it explicitly
     // via `run_fleet_bench` so embedders of this function don't pay for it
-    Ok(ServeBench { startup_cold_secs, startup_warm_secs, levels, saturation, fleet: None })
+    Ok(ServeBench {
+        startup_cold_secs,
+        startup_warm_secs,
+        levels,
+        saturation,
+        reconfigure,
+        fleet: None,
+    })
+}
+
+/// Time live operating-point swaps on one warm adaptive daemon: warm-up
+/// sweeps a two-point Pareto front, then a budget change onto the other
+/// front point (in-front: cache hit + swap) and one off the grid
+/// (off-front: the select + calibrate tail re-runs) are measured over the
+/// NDJSON wire. Shares the serve bench's artifact root, so the daemon
+/// binds warm.
+pub fn run_reconfigure_bench(base: &FamesConfig) -> Result<ReconfigureBench> {
+    use crate::serve::{Client, ServeConfig, Server};
+
+    let base = FamesConfig { pareto_grid: vec![0.55, 0.7], r_energy: 0.7, ..base.clone() };
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 8,
+        base,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&scfg).context("reconfigure bench: bind")?;
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let mut cl = Client::connect(&addr)?;
+    let swap = |cl: &mut Client, id: i64, r: f64| -> Result<(f64, String)> {
+        let req = Json::obj()
+            .with("id", id)
+            .with("op", "reconfigure")
+            .with("model", "resnet8/w4a4")
+            .with("delta", Json::obj().with("r_energy", r));
+        let t0 = Instant::now();
+        let resp = cl.call(&req)?;
+        let secs = t0.elapsed().as_secs_f64();
+        Client::expect_ok(&resp)?;
+        let source = resp.get("result")?.get("source")?.as_str()?.to_string();
+        Ok((secs, source))
+    };
+    // in-front: 0.7 → 0.55, both swept at warm-up
+    let (warm_swap_secs, warm_source) = swap(&mut cl, 1, 0.55)?;
+    // off-front: 0.62 is not on the grid — the mobile tail re-runs
+    let (cold_swap_secs, cold_source) = swap(&mut cl, 2, 0.62)?;
+
+    let status = cl.call(&Json::obj().with("id", 3).with("op", "status"))?;
+    let front_points = status
+        .get("result")?
+        .get("models")?
+        .as_arr()?
+        .first()
+        .context("reconfigure bench: no models in status")?
+        .get("pareto")?
+        .get("points")?
+        .as_usize()?;
+    cl.shutdown(-9)?;
+    drop(cl);
+    daemon
+        .join()
+        .map_err(|_| anyhow::anyhow!("reconfigure bench: daemon panicked"))?
+        .context("reconfigure bench: daemon run")?;
+    Ok(ReconfigureBench { front_points, warm_swap_secs, cold_swap_secs, warm_source, cold_source })
 }
 
 /// Flood one warm daemon with deliberately tiny admission caps at rising
@@ -1713,6 +1801,17 @@ pub fn snapshot_json_full(
                     .with("levels", sarr),
             );
         }
+        if let Some(r) = &sb.reconfigure {
+            serve_doc.set(
+                "reconfigure",
+                Json::obj()
+                    .with("front_points", r.front_points)
+                    .with("warm_swap_secs", r.warm_swap_secs)
+                    .with("cold_swap_secs", r.cold_swap_secs)
+                    .with("warm_source", r.warm_source.as_str())
+                    .with("cold_source", r.cold_source.as_str()),
+            );
+        }
         if let Some(f) = &sb.fleet {
             let mut farr = Json::arr();
             for l in &f.levels {
@@ -1767,8 +1866,18 @@ pub fn snapshot_json_full(
             serve_doc.set("fleet", fleet_doc);
         }
         let has_fleet = sb.fleet.is_some();
+        let has_reconfigure = sb.reconfigure.is_some();
         doc.set("serve", serve_doc);
         add_protocol(&mut doc, "serve", "two-round wall-clock cold-vs-warm".to_string());
+        if has_reconfigure {
+            add_protocol(
+                &mut doc,
+                "reconfigure",
+                "single-shot live swaps on one warm daemon: in-front (Pareto hit) \
+                 vs off-front (select+calibrate re-run)"
+                    .to_string(),
+            );
+        }
         if has_fleet {
             add_protocol(
                 &mut doc,
@@ -2142,6 +2251,13 @@ mod tests {
                     p99_ms: 40.0,
                 }],
             }),
+            reconfigure: Some(ReconfigureBench {
+                front_points: 2,
+                warm_swap_secs: 0.002,
+                cold_swap_secs: 1.5,
+                warm_source: "pareto".to_string(),
+                cold_source: "computed".to_string(),
+            }),
             fleet: Some(test_fleet(300.0)),
         };
         let j = snapshot_json_full(&stages, None, None, Some(&sb), &cfg);
@@ -2156,6 +2272,15 @@ mod tests {
         let sl = &sat.get("levels").unwrap().as_arr().unwrap()[0];
         assert_eq!(sl.get("shed").unwrap().as_usize().unwrap(), 200);
         assert_eq!(sl.get("rps").unwrap().as_f64().unwrap(), 150.0);
+        // the reconfigure section rides inside serve, fully shaped
+        let rc = s.get("reconfigure").unwrap();
+        assert_eq!(rc.get("front_points").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(rc.get("warm_source").unwrap().as_str().unwrap(), "pareto");
+        assert_eq!(rc.get("cold_source").unwrap().as_str().unwrap(), "computed");
+        assert!(
+            rc.get("warm_swap_secs").unwrap().as_f64().unwrap()
+                < rc.get("cold_swap_secs").unwrap().as_f64().unwrap()
+        );
         // the fleet section rides inside serve, fully shaped
         let fleet = s.get("fleet").unwrap();
         assert_eq!(fleet.get("keys").unwrap().as_usize().unwrap(), 8);
@@ -2195,6 +2320,7 @@ mod tests {
                 startup_warm_secs: 0.5,
                 levels: vec![],
                 saturation: None,
+                reconfigure: None,
                 fleet: Some(test_fleet(rps)),
             };
             snapshot_json_full(&stages, None, None, Some(&sb), &BenchConfig { jobs: 1, quick: true })
@@ -2242,6 +2368,7 @@ mod tests {
                         p99_ms: 2.0,
                     }],
                 }),
+                reconfigure: None,
                 fleet: None,
             };
             snapshot_json_full(&stages, None, None, Some(&sb), &BenchConfig { jobs: 1, quick: true })

@@ -11,6 +11,7 @@
 //!   bench       serial-vs-parallel + cold-vs-warm perf snapshot
 //!               (`--json` for machines, `--compare` to diff snapshots)
 //!   cache       artifact-store maintenance (ls | stat | gc)
+//!   sweep       precompute the Pareto front of selections over a budget grid
 //!   serve       long-running batched evaluation daemon (NDJSON over TCP)
 //!   experiment  reproduce a paper table/figure (table2|table3|table4|
 //!               fig2|fig3|fig4|fig5ab|fig5c|all)
@@ -52,9 +53,13 @@ COMMANDS
   cache        artifact-store maintenance: cache ls | stat | gc
                (honors artifacts=, --cache-dir; ls kind=NAME filters to
                 one artifact kind; gc removes every entry)
+  sweep        precompute + store the Pareto front of selections over an
+               r_energy grid (pareto=0.5,0.6,0.7 plus the common keys; the
+               front is one store artifact, replicated like any other, so
+               warm daemons answer in-front reconfigures as cache hits)
   serve        long-running evaluation daemon: newline-delimited JSON over
-               TCP (ops: evaluate | energy | select | artifact_get |
-               artifact_put | health | status | shutdown)
+               TCP (ops: evaluate | energy | select | reconfigure |
+               artifact_get | artifact_put | health | status | shutdown)
                plus an optional HTTP/1.1 gateway onto the same engine
                (addr=127.0.0.1:4271  http=127.0.0.1:8471
                 models=<model>/<cfg>[,...]  max_batch=16
@@ -63,7 +68,12 @@ COMMANDS
                 below; concurrent requests are batched into parallel
                 waves and answers are bit-identical to direct Session
                 calls at every jobs=; over capacity the daemon sheds
-                explicitly — \"shed\":true lines / HTTP 503 + Retry-After)
+                explicitly — \"shed\":true lines / HTTP 503 + Retry-After;
+                with pareto=GRID the daemon precomputes the selection
+                front at warm-up and serves an active operating point
+                whose fingerprint tags every evaluate response; a
+                reconfigure delta over r_energy/calib knobs re-runs only
+                select+calibrate and hot-swaps between waves)
                router mode: route=host:port[,...] turns the process into
                a consistent-hash router over those shard daemons — one
                NDJSON + HTTP endpoint, requests forwarded by <model>/<cfg>
@@ -83,6 +93,8 @@ COMMANDS
 COMMON KEYS
   model=resnet8|resnet14|resnet20|vgg11|squeezenet   cfg=w8a8|w4a4|w3a3|w2a2|mixed
   artifacts=PATH  seed=N  r_energy=0.7  est_batches=2  hessian=exact|rank1|off
+  pareto=R1,R2,...  r_energy grid for the precomputed selection front
+                    (sweep command and adaptive serve; sorted + deduped)
   eval_batches=4  train_steps=500  train_lr=0.05
   calib_epochs=3  calib_samples=256  calib_lr=0.1  q_step=0.02  q_max=0.3
   jobs=N (or --jobs=N)   worker threads for the parallel stages
@@ -131,6 +143,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "bits" => cmd_bits(rest),
         "bench" => cmd_bench(rest),
         "cache" => cmd_cache(rest),
+        "sweep" => cmd_sweep(rest),
         "serve" => cmd_serve(rest),
         "experiment" => crate::experiments::run_cli(rest),
         other => {
@@ -265,7 +278,10 @@ fn cmd_library(args: &[String]) -> Result<i32> {
     let lib = generate_library(&[(a_bits, w_bits)], seed);
     let mut t = Table::new(
         format!("AppMul library {a_bits}x{w_bits} (seed {seed})"),
-        &["name", "family", "pdp", "energy_fj", "delay_ps", "area_um2", "gates", "mred", "er", "wce"],
+        &[
+            "name", "family", "pdp", "energy_fj", "delay_ps", "area_um2", "gates", "mred", "er",
+            "wce", "err_mean",
+        ],
     );
     for m in lib.for_bits(a_bits, w_bits) {
         t.row(vec![
@@ -279,6 +295,9 @@ fn cmd_library(args: &[String]) -> Result<i32> {
             format!("{:.4}", m.metrics.mred),
             format!("{:.3}", m.metrics.er),
             m.metrics.wce.to_string(),
+            // signed error direction: + overshoots, − undershoots (the
+            // positive/negative pairing signal)
+            format!("{:+.4}", m.err_mean()),
         ]);
     }
     t.print();
@@ -495,6 +514,17 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             }
             at.print();
         }
+        if let Some(r) = &serve.reconfigure {
+            println!(
+                "  live reconfigure ({} front points): in-front swap {} ({}) \
+                 vs off-front {} ({})",
+                r.front_points,
+                crate::util::fmt_secs(r.warm_swap_secs),
+                r.warm_source,
+                crate::util::fmt_secs(r.cold_swap_secs),
+                r.cold_source
+            );
+        }
         if let Some(f) = &serve.fleet {
             let mut ft = Table::new(
                 format!(
@@ -545,6 +575,52 @@ fn cmd_bench(args: &[String]) -> Result<i32> {
             }
         }
     }
+    Ok(0)
+}
+
+fn cmd_sweep(args: &[String]) -> Result<i32> {
+    let cfg = base_config(args)?;
+    anyhow::ensure!(
+        !cfg.pareto_grid.is_empty(),
+        "sweep needs a budget grid: pareto=0.5,0.6,0.7[,...]"
+    );
+    let rt = Arc::new(crate::runtime::Runtime::from_env()?);
+    println!(
+        "== FAMES sweep: {} / {} over {} budgets ==",
+        cfg.model,
+        cfg.cfg,
+        cfg.pareto_grid.len()
+    );
+    if !cfg.no_cache {
+        println!("  artifact store: {}", cfg.effective_cache_dir());
+    }
+    let mut session = pipeline::warm_session(rt, &cfg)?;
+    let store = cfg.store();
+    let prep =
+        pipeline::prepare_library(&session.art.manifest, cfg.seed, store.as_ref(), cfg.jobs)?;
+    let sweep = pipeline::active::sweep_pareto(&mut session, &prep.library, prep.fingerprint, &cfg)?;
+    let cache = match sweep.hit {
+        Some(true) => "hit",
+        Some(false) => "miss",
+        None => "off",
+    };
+    let mut t = Table::new(
+        format!("pareto front {} ({cache}, {} s)", sweep.fingerprint.hex(), f3(sweep.secs)),
+        &["r_energy", "selection", "energy vs exact", "picks"],
+    );
+    for p in &sweep.front.points {
+        t.row(vec![
+            format!("{}", p.r_energy),
+            p.fingerprint.hex(),
+            f3(p.energy_ratio_exact),
+            p.names.join(","),
+        ]);
+    }
+    t.print();
+    println!(
+        "reconfigure to any budget above is a cache hit + swap on a warm \
+         daemon (POST /v1/reconfigure {{\"delta\":{{\"r_energy\":R}}}})"
+    );
     Ok(0)
 }
 
@@ -666,7 +742,7 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
             probe_interval_ms.max(down_cooldown_ms)
         );
         if let Some(h) = router.http_local_addr() {
-            println!("http gateway on {h} (POST /v1/evaluate|energy|select, GET /v1/status)");
+            println!("http gateway on {h} (POST /v1/evaluate|energy|select|reconfigure, GET /v1/status)");
         }
         router.run()?;
         println!("fames serve router: stopped");
@@ -696,7 +772,8 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
     };
     println!("== fames serve ({}) ==", crate::serve::PROTOCOL);
     let server = crate::serve::Server::bind(&scfg)?;
-    let mut t = Table::new("models", &["key", "layers", "warm (s)", "library", "params"]);
+    let mut t =
+        Table::new("models", &["key", "layers", "warm (s)", "library", "params", "active", "pareto"]);
     // bind() warmed every entry; show what startup cost and whether the
     // artifact store (local or a fleet peer, for params) paid off
     let shared_addr = server.local_addr();
@@ -717,6 +794,14 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
                     pipeline::ParamsSource::Store => "store".into(),
                     pipeline::ParamsSource::Trained => "trained".into(),
                 },
+                match e.active_fingerprint() {
+                    Some(fp) => fp.hex(),
+                    None => "-".into(),
+                },
+                match &e.pareto {
+                    Some(f) => format!("{} pts", f.points.len()),
+                    None => "-".into(),
+                },
             ]);
         }
     }
@@ -727,7 +812,7 @@ fn cmd_serve(args: &[String]) -> Result<i32> {
         par::effective_jobs(scfg.base.jobs)
     );
     if let Some(h) = server.http_local_addr() {
-        println!("http gateway on {h} (POST /v1/evaluate|energy|select, GET /v1/status)");
+        println!("http gateway on {h} (POST /v1/evaluate|energy|select|reconfigure, GET /v1/status)");
     }
     println!(
         "admission: max_conns {max_conns}, max_pending {max_pending}, \

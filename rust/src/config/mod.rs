@@ -62,6 +62,23 @@ pub fn apply_kv(cfg: &mut FamesConfig, key: &str, value: &str) -> Result<()> {
             }
             cfg.replication = r;
         }
+        "pareto" => {
+            let mut grid: Vec<f64> = Vec::new();
+            for part in value.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let r = part
+                    .parse::<f64>()
+                    .with_context(|| format!("'{part}' is not a number (for pareto)"))?;
+                if !r.is_finite() || r <= 0.0 {
+                    bail!("pareto grid values must be finite and > 0 (got '{part}')");
+                }
+                grid.push(r);
+            }
+            // canonical form: sorted + bit-deduped, so the same set of
+            // budgets always fingerprints identically
+            grid.sort_by(|a, b| a.total_cmp(b));
+            grid.dedup_by(|a, b| a.to_bits() == b.to_bits());
+            cfg.pareto_grid = grid;
+        }
         "calib_epochs" => cfg.calib.epochs = vu()?,
         "calib_samples" => cfg.calib.samples = vu()?,
         "calib_lr" => cfg.calib.lr = vf()? as f32,
@@ -193,6 +210,19 @@ mod tests {
         assert_eq!(cfg3.effective_cache_dir(), "/elsewhere");
         cfg3.no_cache = true;
         assert!(cfg3.store().is_none());
+    }
+
+    #[test]
+    fn pareto_grid_parses_sorted_and_deduped() {
+        let mut cfg = FamesConfig::default();
+        assert!(cfg.pareto_grid.is_empty(), "default is no precomputation");
+        apply_args(&mut cfg, &["pareto=0.7, 0.5,0.6,0.5".to_string()]).unwrap();
+        assert_eq!(cfg.pareto_grid, vec![0.5, 0.6, 0.7]);
+        apply_args(&mut cfg, &["pareto=".to_string()]).unwrap();
+        assert!(cfg.pareto_grid.is_empty());
+        assert!(apply_kv(&mut cfg, "pareto", "0.5,zero").is_err());
+        assert!(apply_kv(&mut cfg, "pareto", "-0.5").is_err());
+        assert!(apply_kv(&mut cfg, "pareto", "inf").is_err());
     }
 
     #[test]

@@ -1,0 +1,499 @@
+//! The swappable operating point of a warm model — adaptive serving's
+//! core refactor.
+//!
+//! A warm serve session splits into two halves. The *immutable* half —
+//! trained parameters, the AppMul library, the Ω perturbation table — is
+//! expensive, shared, and independent of the energy budget. The *mobile*
+//! half — the per-layer multiplier selection plus its calibration — is
+//! exactly what moves when an operator changes `r_energy` or a
+//! calibration knob. [`ActiveSelection`] is that mobile half as a
+//! self-contained, fingerprint-tagged value: E tensors, calibrated
+//! activation scales, LWC bounds, and the `calibrate` stage fingerprint
+//! that names the operating point. The serve layer swaps
+//! `Arc<ActiveSelection>` handles between batch waves; evaluation goes
+//! through [`Session::evaluate_operating_point`], which never mutates the
+//! shared session, so every response is bit-reproducible against the
+//! fingerprint it reports.
+//!
+//! [`activate`] produces the handle by running the incremental stage
+//! graph on the *mobile* stages only (estimate → select → calibrate, each
+//! store-cached by fingerprint), reusing the caller's warm session for
+//! execution and restoring its state afterwards. [`sweep_pareto`]
+//! precomputes a whole grid of operating points — the energy/accuracy
+//! Pareto front (arXiv 1711.00215 motivates the front as the first-class
+//! artifact) — and persists it under the `pareto` store kind, replicated
+//! to ring successors, so a live budget change within the front is a pure
+//! cache hit + swap on every shard.
+
+use anyhow::{ensure, Result};
+
+use crate::appmul::{AppMul, Library};
+use crate::calibrate;
+use crate::energy::EnergyModel;
+use crate::runtime::Manifest;
+use crate::sensitivity;
+use crate::store::{codec, Fingerprint, FingerprintBuilder, Store};
+use crate::tensor::Tensor;
+
+use super::{
+    calibrate_fingerprint, estimate_fingerprint, select_fingerprint, select_ilp_jobs,
+    selection_tensors, FamesConfig, Session, StageGraph, StageRun,
+};
+
+/// One complete, swappable operating point: the selection and its
+/// calibration, tagged with the fingerprints that identify them.
+#[derive(Clone, Debug)]
+pub struct ActiveSelection {
+    /// The energy budget this selection was solved for.
+    pub r_energy: f64,
+    /// Per-layer pick index into `library.for_bits(...)` rows.
+    pub picks: Vec<usize>,
+    /// Chosen AppMul name per layer.
+    pub names: Vec<String>,
+    /// The `select` stage fingerprint (estimate + budget).
+    pub select_fp: Fingerprint,
+    /// The `calibrate` stage fingerprint — the **operating-point
+    /// identity** reported in every response served under this handle.
+    pub fingerprint: Fingerprint,
+    /// Per-layer flattened error tensors (the E injection).
+    pub e_list: Vec<Tensor>,
+    /// Calibrated activation quant state `(s_x, b_x)` per layer.
+    pub act_q: Vec<(f32, f32)>,
+    /// Calibrated LWC `(γ, β)` per layer.
+    pub lwc: Vec<(f32, f32)>,
+    /// Energy of the selection / exact same-bitwidth model.
+    pub energy_ratio_exact: f64,
+}
+
+/// An activation outcome: the handle plus the stage-graph records of the
+/// mobile stages (estimate/select/calibrate) that produced it. The
+/// immutable stages (library/train) never re-run on this path — the serve
+/// layer reports them as reused from the warm entry.
+#[derive(Clone, Debug)]
+pub struct Activation {
+    pub selection: ActiveSelection,
+    pub stages: Vec<StageRun>,
+}
+
+/// Build an [`ActiveSelection`] for `cfg` by running the mobile stages
+/// through the incremental stage graph: estimate (Ω table), select
+/// (MCKP/ILP), calibrate — each loaded from the store on a fingerprint
+/// match, computed and persisted (replicated) otherwise.
+///
+/// The session is used as the executor and is restored to its entry
+/// quant state on success, so a shared warm session stays pristine and
+/// repeated activations (the Pareto sweep) are independent. The stage
+/// ordering and fingerprint chain are byte-for-byte the ones
+/// `pipeline::run` uses, which is what makes a warm daemon's swap
+/// bit-identical to a cold daemon started at the same config.
+pub fn activate(
+    session: &mut Session,
+    library: &Library,
+    lib_fp: Fingerprint,
+    cfg: &FamesConfig,
+) -> Result<Activation> {
+    let saved = (session.e_list.clone(), session.act_q.clone(), session.lwc.clone());
+    let mut graph = StageGraph::new(cfg.store());
+
+    let row_lens: Vec<usize> = session
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| library.for_bits(l.a_bits, l.w_bits).len())
+        .collect();
+
+    let manifest_hash = crate::util::hash::hash_file(session.art.dir.join("manifest.json"))?;
+    let est_fp = estimate_fingerprint(cfg, lib_fp, manifest_hash, session.params.content_hash());
+    let table = graph.stage(
+        "estimate",
+        codec::TABLE_KIND,
+        codec::TABLE_VERSION,
+        est_fp,
+        |j| {
+            let table = codec::table_from_json(j)?;
+            ensure!(
+                table.values.len() == row_lens.len(),
+                "cached Ω table has {} layers, model has {}",
+                table.values.len(),
+                row_lens.len()
+            );
+            for (k, row) in table.values.iter().enumerate() {
+                ensure!(
+                    row.len() == row_lens[k],
+                    "cached Ω table row {k} has {} entries, library has {}",
+                    row.len(),
+                    row_lens[k]
+                );
+            }
+            Ok(table)
+        },
+        codec::table_to_json,
+        || {
+            sensitivity::estimate_table(&mut *session, library, cfg.est_batches, cfg.hessian)
+                .map(|(_est, table)| table)
+        },
+    )?;
+
+    let energy = EnergyModel::new(&session.art.manifest, library);
+    let sel_fp = select_fingerprint(cfg, est_fp);
+    let sol = graph.stage(
+        "select",
+        codec::SOLUTION_KIND,
+        codec::SOLUTION_VERSION,
+        sel_fp,
+        |j| {
+            let sol = codec::solution_from_json(j)?;
+            ensure!(
+                sol.picks.len() == row_lens.len(),
+                "cached solution has {} picks, model has {} layers",
+                sol.picks.len(),
+                row_lens.len()
+            );
+            for (k, &p) in sol.picks.iter().enumerate() {
+                ensure!(p < row_lens[k], "cached solution pick {k} out of range");
+            }
+            Ok(sol)
+        },
+        codec::solution_to_json,
+        || select_ilp_jobs(&table, &energy, library, cfg.r_energy, cfg.jobs).map(|(_, s)| s),
+    )?;
+
+    let choices: Vec<Vec<&AppMul>> = session
+        .art
+        .manifest
+        .layers
+        .iter()
+        .map(|l| library.for_bits(l.a_bits, l.w_bits))
+        .collect();
+    let selection: Vec<&AppMul> =
+        choices.iter().zip(&sol.picks).map(|(row, &i)| row[i]).collect();
+    let energy_ratio_exact = energy.ratio_vs_exact(&selection)?;
+    let names: Vec<String> = selection.iter().map(|m| m.name.clone()).collect();
+    let e_list = selection_tensors(&choices, &sol.picks);
+
+    session.set_selection(e_list.clone())?;
+    let n_layers = session.art.manifest.layers.len();
+    let cal_fp = calibrate_fingerprint(cfg, sel_fp);
+    let calib = graph.stage(
+        "calibrate",
+        codec::CALIB_KIND,
+        codec::CALIB_VERSION,
+        cal_fp,
+        |j| {
+            let c = codec::calib_from_json(j)?;
+            ensure!(
+                c.act_q.len() == n_layers,
+                "cached calibration has {} layers, model has {n_layers}",
+                c.act_q.len()
+            );
+            Ok(c)
+        },
+        codec::calib_to_json,
+        || {
+            let rep = calibrate::calibrate(&mut *session, &cfg.calib)?;
+            Ok(codec::CalibArtifact {
+                act_q: session.act_q.clone(),
+                lwc: session.lwc.clone(),
+                q_star: rep.q_star,
+                losses: rep.losses,
+            })
+        },
+    )?;
+
+    session.e_list = saved.0;
+    session.act_q = saved.1;
+    session.lwc = saved.2;
+
+    Ok(Activation {
+        selection: ActiveSelection {
+            r_energy: cfg.r_energy,
+            picks: sol.picks,
+            names,
+            select_fp: sel_fp,
+            fingerprint: cal_fp,
+            e_list,
+            act_q: calib.act_q,
+            lwc: calib.lwc,
+            energy_ratio_exact,
+        },
+        stages: graph.runs,
+    })
+}
+
+/// Store-only activation probe: rebuild the operating point for `cfg`
+/// from cached `select` + `calibrate` artifacts without touching any
+/// executable. `None` on any miss or stale entry — the caller falls back
+/// to [`activate`]. This is the reconfigure fast path for off-front
+/// budgets that were computed before.
+pub fn activate_cached(
+    store: &Store,
+    library: &Library,
+    manifest: &Manifest,
+    est_fp: Fingerprint,
+    cfg: &FamesConfig,
+) -> Option<Activation> {
+    let row_lens: Vec<usize> =
+        manifest.layers.iter().map(|l| library.for_bits(l.a_bits, l.w_bits).len()).collect();
+    let sel_fp = select_fingerprint(cfg, est_fp);
+    let cal_fp = calibrate_fingerprint(cfg, sel_fp);
+
+    let sol_payload = store.get(codec::SOLUTION_KIND, codec::SOLUTION_VERSION, sel_fp)?;
+    let sol = codec::solution_from_json(&sol_payload).ok()?;
+    if sol.picks.len() != row_lens.len()
+        || sol.picks.iter().zip(&row_lens).any(|(&p, &n)| p >= n)
+    {
+        return None;
+    }
+    let cal_payload = store.get(codec::CALIB_KIND, codec::CALIB_VERSION, cal_fp)?;
+    let calib = codec::calib_from_json(&cal_payload).ok()?;
+    if calib.act_q.len() != manifest.layers.len() || calib.lwc.len() != manifest.layers.len() {
+        return None;
+    }
+
+    let choices: Vec<Vec<&AppMul>> =
+        manifest.layers.iter().map(|l| library.for_bits(l.a_bits, l.w_bits)).collect();
+    let selection: Vec<&AppMul> =
+        choices.iter().zip(&sol.picks).map(|(row, &i)| row[i]).collect();
+    let energy = EnergyModel::new(manifest, library);
+    let energy_ratio_exact = energy.ratio_vs_exact(&selection).ok()?;
+    let names: Vec<String> = selection.iter().map(|m| m.name.clone()).collect();
+    let e_list = selection_tensors(&choices, &sol.picks);
+
+    let stages = vec![
+        StageRun { stage: "estimate", fingerprint: est_fp.hex(), hit: Some(true), secs: 0.0 },
+        StageRun { stage: "select", fingerprint: sel_fp.hex(), hit: Some(true), secs: 0.0 },
+        StageRun { stage: "calibrate", fingerprint: cal_fp.hex(), hit: Some(true), secs: 0.0 },
+    ];
+    Some(Activation {
+        selection: ActiveSelection {
+            r_energy: cfg.r_energy,
+            picks: sol.picks,
+            names,
+            select_fp: sel_fp,
+            fingerprint: cal_fp,
+            e_list,
+            act_q: calib.act_q,
+            lwc: calib.lwc,
+            energy_ratio_exact,
+        },
+        stages,
+    })
+}
+
+/// One point on the precomputed Pareto front: an [`ActiveSelection`]
+/// minus the E tensors (rebuilt from picks on load, so the persisted
+/// artifact stays compact and self-validating against the library).
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub r_energy: f64,
+    pub picks: Vec<usize>,
+    pub names: Vec<String>,
+    pub select_fp: Fingerprint,
+    /// The operating-point identity (`calibrate` fingerprint).
+    pub fingerprint: Fingerprint,
+    pub act_q: Vec<(f32, f32)>,
+    pub lwc: Vec<(f32, f32)>,
+    pub energy_ratio_exact: f64,
+}
+
+impl ParetoPoint {
+    pub fn from_active(a: &ActiveSelection) -> ParetoPoint {
+        ParetoPoint {
+            r_energy: a.r_energy,
+            picks: a.picks.clone(),
+            names: a.names.clone(),
+            select_fp: a.select_fp,
+            fingerprint: a.fingerprint,
+            act_q: a.act_q.clone(),
+            lwc: a.lwc.clone(),
+            energy_ratio_exact: a.energy_ratio_exact,
+        }
+    }
+
+    /// Rehydrate the full handle: rebuild per-layer E tensors from the
+    /// picks, validating every index against the live library.
+    pub fn to_active(&self, library: &Library, manifest: &Manifest) -> Result<ActiveSelection> {
+        ensure!(
+            self.picks.len() == manifest.layers.len(),
+            "pareto point has {} picks, model has {} layers",
+            self.picks.len(),
+            manifest.layers.len()
+        );
+        ensure!(
+            self.act_q.len() == manifest.layers.len() && self.lwc.len() == manifest.layers.len(),
+            "pareto point quant state does not cover the model's layers"
+        );
+        let mut e_list = Vec::with_capacity(self.picks.len());
+        for (layer, &pick) in manifest.layers.iter().zip(&self.picks) {
+            let row = library.for_bits(layer.a_bits, layer.w_bits);
+            ensure!(
+                pick < row.len(),
+                "pareto pick {pick} out of range for layer {} ({} candidates)",
+                layer.name,
+                row.len()
+            );
+            e_list.push(row[pick].error_tensor());
+        }
+        Ok(ActiveSelection {
+            r_energy: self.r_energy,
+            picks: self.picks.clone(),
+            names: self.names.clone(),
+            select_fp: self.select_fp,
+            fingerprint: self.fingerprint,
+            e_list,
+            act_q: self.act_q.clone(),
+            lwc: self.lwc.clone(),
+            energy_ratio_exact: self.energy_ratio_exact,
+        })
+    }
+}
+
+/// The precomputed energy/accuracy front: one operating point per grid
+/// budget, sorted by `r_energy`.
+#[derive(Clone, Debug, Default)]
+pub struct ParetoFront {
+    pub points: Vec<ParetoPoint>,
+}
+
+impl ParetoFront {
+    /// The point whose operating-point fingerprint matches — the runtime
+    /// hit test: the caller computes the expected fingerprint from the
+    /// *new* config, so a calibration-knob delta can never alias onto a
+    /// front entry swept under different knobs.
+    pub fn lookup_fp(&self, fp: Fingerprint) -> Option<&ParetoPoint> {
+        self.points.iter().find(|p| p.fingerprint == fp)
+    }
+
+    /// The point for an exact budget value (bit-equality on the f64 — grid
+    /// values come from parsing the same decimal text everywhere, so this
+    /// is deterministic, never approximate).
+    pub fn lookup_r(&self, r: f64) -> Option<&ParetoPoint> {
+        self.points.iter().find(|p| p.r_energy.to_bits() == r.to_bits())
+    }
+}
+
+/// Store address of a model's Pareto front: the estimate fingerprint (the
+/// immutable upstream), every calibration knob, and the grid itself.
+pub fn pareto_fingerprint(cfg: &FamesConfig, est_fp: Fingerprint) -> Fingerprint {
+    let mut b = FingerprintBuilder::new("pareto")
+        .fp("estimate", est_fp)
+        .u64("epochs", cfg.calib.epochs as u64)
+        .u64("samples", cfg.calib.samples as u64)
+        .f64("lr", cfg.calib.lr as f64)
+        .f64("q_step", cfg.calib.q_step)
+        .f64("q_max", cfg.calib.q_max)
+        .str("metric", &format!("{:?}", cfg.calib.metric))
+        .u64("grid", cfg.pareto_grid.len() as u64);
+    for &r in &cfg.pareto_grid {
+        b = b.f64("r_energy", r);
+    }
+    b.finish()
+}
+
+/// A sweep outcome: the front plus its store bookkeeping.
+pub struct ParetoSweep {
+    pub front: ParetoFront,
+    pub fingerprint: Fingerprint,
+    /// `Some(true)` loaded from the store, `Some(false)` swept and
+    /// persisted, `None` caching disabled.
+    pub hit: Option<bool>,
+    pub secs: f64,
+}
+
+/// Is a decoded front trustworthy for this config? A stale entry (library
+/// regenerated, grid changed, model re-shaped) degrades to a re-sweep.
+fn front_is_valid(front: &ParetoFront, library: &Library, manifest: &Manifest, grid: &[f64]) -> bool {
+    front.points.len() == grid.len()
+        && front.points.iter().zip(grid).all(|(p, &r)| {
+            p.r_energy.to_bits() == r.to_bits()
+                && p.picks.len() == manifest.layers.len()
+                && p.act_q.len() == manifest.layers.len()
+                && p.lwc.len() == manifest.layers.len()
+                && p.picks.iter().zip(&manifest.layers).all(|(&pick, l)| {
+                    pick < library.for_bits(l.a_bits, l.w_bits).len()
+                })
+        })
+}
+
+/// Precompute (or load) the Pareto front over `cfg.pareto_grid`: one
+/// [`activate`] per budget, persisted as a single `pareto` artifact and
+/// replicated to ring successors so routed/hedged fleets converge on the
+/// same front. Grid order is the config's (normalized at parse time).
+pub fn sweep_pareto(
+    session: &mut Session,
+    library: &Library,
+    lib_fp: Fingerprint,
+    cfg: &FamesConfig,
+) -> Result<ParetoSweep> {
+    ensure!(!cfg.pareto_grid.is_empty(), "pareto sweep needs a non-empty r_energy grid");
+    let t0 = std::time::Instant::now();
+    let manifest_hash = crate::util::hash::hash_file(session.art.dir.join("manifest.json"))?;
+    let est_fp = estimate_fingerprint(cfg, lib_fp, manifest_hash, session.params.content_hash());
+    let fp = pareto_fingerprint(cfg, est_fp);
+    let store = cfg.store();
+    if let Some(store) = &store {
+        if let Some(payload) = store.get(codec::PARETO_KIND, codec::PARETO_VERSION, fp) {
+            match codec::pareto_from_json(&payload) {
+                Ok(front) if front_is_valid(&front, library, &session.art.manifest, &cfg.pareto_grid) => {
+                    return Ok(ParetoSweep {
+                        front,
+                        fingerprint: fp,
+                        hit: Some(true),
+                        secs: t0.elapsed().as_secs_f64(),
+                    });
+                }
+                Ok(_) => eprintln!("  cache: discarding stale pareto entry {fp}"),
+                Err(e) => eprintln!("  cache: discarding undecodable pareto entry {fp}: {e:#}"),
+            }
+        }
+    }
+    let mut points = Vec::with_capacity(cfg.pareto_grid.len());
+    for &r in &cfg.pareto_grid {
+        let cfg_r = FamesConfig { r_energy: r, ..cfg.clone() };
+        let act = activate(session, library, lib_fp, &cfg_r)?;
+        points.push(ParetoPoint::from_active(&act.selection));
+    }
+    let front = ParetoFront { points };
+    let hit = match &store {
+        Some(store) => {
+            if let Err(e) =
+                store.put_replicated(codec::PARETO_KIND, codec::PARETO_VERSION, fp, codec::pareto_to_json(&front))
+            {
+                eprintln!("  cache: failed to persist pareto entry {fp}: {e:#}");
+            }
+            Some(false)
+        }
+        None => None,
+    };
+    Ok(ParetoSweep { front, fingerprint: fp, hit, secs: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(r: f64, tag: u64) -> ParetoPoint {
+        ParetoPoint {
+            r_energy: r,
+            picks: vec![0, 1],
+            names: vec!["a".into(), "b".into()],
+            select_fp: FingerprintBuilder::new("select").u64("t", tag).finish(),
+            fingerprint: FingerprintBuilder::new("calibrate").u64("t", tag).finish(),
+            act_q: vec![(0.1, 0.0); 2],
+            lwc: vec![(4.0, 4.0); 2],
+            energy_ratio_exact: r,
+        }
+    }
+
+    #[test]
+    fn front_lookup_is_exact_on_bits_and_fingerprints() {
+        let front = ParetoFront { points: vec![point(0.5, 1), point(0.7, 2)] };
+        assert_eq!(front.lookup_r(0.5).unwrap().names, vec!["a", "b"]);
+        assert!(front.lookup_r(0.5 + 1e-12).is_none(), "lookup is bit-exact, never fuzzy");
+        assert!(front.lookup_r(0.6).is_none());
+        let fp = FingerprintBuilder::new("calibrate").u64("t", 2).finish();
+        assert_eq!(front.lookup_fp(fp).unwrap().r_energy.to_bits(), 0.7f64.to_bits());
+        assert!(front.lookup_fp(FingerprintBuilder::new("x").finish()).is_none());
+    }
+}

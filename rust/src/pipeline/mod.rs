@@ -13,9 +13,11 @@
 //! [`FamesConfig::no_cache`] (CLI `--cache-dir` / `--no-cache`; inspect
 //! with `fames cache ls|stat|gc`).
 
+pub mod active;
 pub mod session;
 pub mod stages;
 
+pub use active::{ActiveSelection, Activation, ParetoFront, ParetoPoint};
 pub use session::{EvalResult, Session};
 pub use stages::{StageGraph, StageRun};
 
@@ -71,6 +73,13 @@ pub struct FamesConfig {
     /// warm before a router ever fails over to them). CLI:
     /// `replication=N`; 1 (the default) writes locally only.
     pub replication: usize,
+    /// `r_energy` grid for the precomputed Pareto front of selections
+    /// (adaptive serving): each value gets its selection + calibration
+    /// swept at warm-up (or via `fames sweep`) and stored under the
+    /// `pareto` kind, so a live `reconfigure` to an in-grid budget is a
+    /// pure cache hit + swap. CLI: `pareto=0.5,0.6,0.7`; empty (the
+    /// default) disables precomputation.
+    pub pareto_grid: Vec<f64>,
 }
 
 impl Default for FamesConfig {
@@ -92,6 +101,7 @@ impl Default for FamesConfig {
             no_cache: false,
             remote_peers: Vec::new(),
             replication: 1,
+            pareto_grid: Vec::new(),
         }
     }
 }
@@ -195,6 +205,61 @@ pub fn params_fingerprint(cfg: &FamesConfig) -> Fingerprint {
         .u64("seed", cfg.seed)
         .u64("train_steps", cfg.train_steps as u64)
         .f64("train_lr", cfg.train_lr as f64)
+        .finish()
+}
+
+/// The `train` stage's recorded fingerprint: the *content* address of the
+/// parameters in use (a knob change that reuses cached params keeps the
+/// same fingerprint — honest about what the cache key is).
+pub fn train_fingerprint(cfg: &FamesConfig, params_hash: u64) -> Fingerprint {
+    FingerprintBuilder::new("train")
+        .str("model", &cfg.model)
+        .u64("params", params_hash)
+        .finish()
+}
+
+/// The `estimate` stage fingerprint (Ω table). Chains the library content
+/// fingerprint and the *parameter content* rather than the train stage, so
+/// a re-train that loads the same cached params keeps the estimate warm.
+pub fn estimate_fingerprint(
+    cfg: &FamesConfig,
+    lib_fp: Fingerprint,
+    manifest_hash: u64,
+    params_hash: u64,
+) -> Fingerprint {
+    FingerprintBuilder::new("estimate")
+        .fp("library", lib_fp)
+        .u64("manifest", manifest_hash)
+        .u64("params", params_hash)
+        .u64("seed", cfg.seed)
+        .u64("est_batches", cfg.est_batches as u64)
+        .str("hessian", &format!("{:?}", cfg.hessian))
+        .finish()
+}
+
+/// The `select` stage fingerprint: estimate + the energy budget. The only
+/// per-knob dependency on `r_energy`, which is what makes a budget-only
+/// reconfigure a select/calibrate-only recompute.
+pub fn select_fingerprint(cfg: &FamesConfig, est_fp: Fingerprint) -> Fingerprint {
+    FingerprintBuilder::new("select")
+        .fp("estimate", est_fp)
+        .f64("r_energy", cfg.r_energy)
+        .finish()
+}
+
+/// The `calibrate` stage fingerprint: selection + every calibration knob.
+/// This is the **operating-point identity** adaptive serving reports: two
+/// daemons whose active selections share this fingerprint answer
+/// bit-identically.
+pub fn calibrate_fingerprint(cfg: &FamesConfig, sel_fp: Fingerprint) -> Fingerprint {
+    FingerprintBuilder::new("calibrate")
+        .fp("select", sel_fp)
+        .u64("epochs", cfg.calib.epochs as u64)
+        .u64("samples", cfg.calib.samples as u64)
+        .f64("lr", cfg.calib.lr as f64)
+        .f64("q_step", cfg.calib.q_step)
+        .f64("q_max", cfg.calib.q_max)
+        .str("metric", &format!("{:?}", cfg.calib.metric))
         .finish()
 }
 
@@ -483,10 +548,7 @@ fn run_inner(
     let t = std::time::Instant::now();
     let params_cached = Session::state_path(&cfg.artifact_root, &cfg.model).exists();
     times.train_secs = ensure_trained(&mut session, cfg)?;
-    let train_fp = FingerprintBuilder::new("train")
-        .str("model", &cfg.model)
-        .u64("params", session.params.content_hash())
-        .finish();
+    let train_fp = train_fingerprint(cfg, session.params.content_hash());
     graph.record("train", train_fp, Some(params_cached), t.elapsed().as_secs_f64());
     session.init_act_ranges()?;
 
@@ -512,14 +574,7 @@ fn run_inner(
     // dependency is the parameter content, so a re-train that loads the
     // same cached params keeps the estimate warm.
     let manifest_hash = crate::util::hash::hash_file(session.art.dir.join("manifest.json"))?;
-    let est_fp = FingerprintBuilder::new("estimate")
-        .fp("library", lib_fp)
-        .u64("manifest", manifest_hash)
-        .u64("params", session.params.content_hash())
-        .u64("seed", cfg.seed)
-        .u64("est_batches", cfg.est_batches as u64)
-        .str("hessian", &format!("{:?}", cfg.hessian))
-        .finish();
+    let est_fp = estimate_fingerprint(cfg, lib_fp, manifest_hash, session.params.content_hash());
     let t = std::time::Instant::now();
     let table = graph.stage(
         "estimate",
@@ -555,10 +610,7 @@ fn run_inner(
     // Step 2: ILP selection
     let t = std::time::Instant::now();
     let energy = EnergyModel::new(&session.art.manifest, library);
-    let sel_fp = FingerprintBuilder::new("select")
-        .fp("estimate", est_fp)
-        .f64("r_energy", cfg.r_energy)
-        .finish();
+    let sel_fp = select_fingerprint(cfg, est_fp);
     let sol = graph.stage(
         "select",
         codec::SOLUTION_KIND,
@@ -614,15 +666,7 @@ fn run_inner(
     // post-calibration session state (activation scales + LWC bounds);
     // applying it reproduces the calibrated model bit-for-bit.
     let n_layers = session.art.manifest.layers.len();
-    let cal_fp = FingerprintBuilder::new("calibrate")
-        .fp("select", sel_fp)
-        .u64("epochs", cfg.calib.epochs as u64)
-        .u64("samples", cfg.calib.samples as u64)
-        .f64("lr", cfg.calib.lr as f64)
-        .f64("q_step", cfg.calib.q_step)
-        .f64("q_max", cfg.calib.q_max)
-        .str("metric", &format!("{:?}", cfg.calib.metric))
-        .finish();
+    let cal_fp = calibrate_fingerprint(cfg, sel_fp);
     let t = std::time::Instant::now();
     let calib = graph.stage(
         "calibrate",

@@ -38,6 +38,13 @@ struct Extra<'a> {
     /// Override for the session's current E selection (used by parallel
     /// candidate scoring, which must not mutate shared session state).
     e_list: Option<&'a [Tensor]>,
+    /// Override for the per-layer activation quant state `(s_x, b_x)` —
+    /// with `lwc`, the rest of a swappable operating point (adaptive
+    /// serving evaluates against an `ActiveSelection` without mutating the
+    /// shared session).
+    act_q: Option<&'a [(f32, f32)]>,
+    /// Override for the per-layer LWC `(γ, β)` state.
+    lwc: Option<&'a [(f32, f32)]>,
     lr: f32,
 }
 
@@ -184,13 +191,13 @@ impl Session {
                     }
                 }
                 "lwc" => {
-                    for &(g1, b1) in &self.lwc {
+                    for &(g1, b1) in extra.lwc.unwrap_or(&self.lwc) {
                         v.push(Tensor::scalar(g1));
                         v.push(Tensor::scalar(b1));
                     }
                 }
                 "act_q" => {
-                    for &(s, b) in &self.act_q {
+                    for &(s, b) in extra.act_q.unwrap_or(&self.act_q) {
                         v.push(Tensor::scalar(s));
                         v.push(Tensor::scalar(b));
                     }
@@ -347,8 +354,13 @@ impl Session {
         &self,
         exe: &str,
         e_list: Option<&[Tensor]>,
+        quant: Option<(&[(f32, f32)], &[(f32, f32)])>,
         n_batches: usize,
     ) -> Result<EvalResult> {
+        let (act_q, lwc) = match quant {
+            Some((a, l)) => (Some(a), Some(l)),
+            None => (None, None),
+        };
         let mut loss_sum = 0.0;
         let mut correct = 0.0;
         let mut samples = 0usize;
@@ -359,6 +371,8 @@ impl Session {
                 &Extra {
                     batch: Some(&batch),
                     e_list,
+                    act_q,
+                    lwc,
                     ..Default::default()
                 },
             )?;
@@ -376,7 +390,7 @@ impl Session {
     /// Evaluate the quantized+approximate model (current E selection) over
     /// `n_batches` held-out batches.
     pub fn evaluate(&self, n_batches: usize) -> Result<EvalResult> {
-        self.eval_exe("fwd", None, n_batches)
+        self.eval_exe("fwd", None, None, n_batches)
     }
 
     /// Evaluate under an explicit E selection **without mutating the
@@ -388,14 +402,42 @@ impl Session {
         if e_list.len() != m.layers.len() {
             bail!("selection has {} layers, model has {}", e_list.len(), m.layers.len());
         }
-        self.eval_exe("fwd", Some(e_list), n_batches)
+        self.eval_exe("fwd", Some(e_list), None, n_batches)
+    }
+
+    /// Evaluate under a complete operating point — E selection plus the
+    /// calibrated activation/LWC quant state — **without mutating the
+    /// session**. Adaptive serving's primitive: a warm daemon holds one
+    /// shared immutable `Session` and swaps `ActiveSelection` handles over
+    /// it; with identical inputs this is bit-identical to mutating the
+    /// session state and calling [`Session::evaluate`].
+    pub fn evaluate_operating_point(
+        &self,
+        e_list: &[Tensor],
+        act_q: &[(f32, f32)],
+        lwc: &[(f32, f32)],
+        n_batches: usize,
+    ) -> Result<EvalResult> {
+        let m = &self.art.manifest;
+        if e_list.len() != m.layers.len() {
+            bail!("selection has {} layers, model has {}", e_list.len(), m.layers.len());
+        }
+        if act_q.len() != m.layers.len() || lwc.len() != m.layers.len() {
+            bail!(
+                "quant state has {}/{} layers, model has {}",
+                act_q.len(),
+                lwc.len(),
+                m.layers.len()
+            );
+        }
+        self.eval_exe("fwd", Some(e_list), Some((act_q, lwc)), n_batches)
     }
 
     /// Same as [`Session::evaluate`] but through the Pallas-kernel artifact
     /// (Layer-1 path); numerics must match `fwd` — asserted by integration
     /// tests.
     pub fn evaluate_pallas(&self, n_batches: usize) -> Result<EvalResult> {
-        self.eval_exe("fwd_pallas", None, n_batches)
+        self.eval_exe("fwd_pallas", None, None, n_batches)
     }
 
     /// Per-layer pre-quant conv inputs under the current E selection,

@@ -46,6 +46,13 @@ pub enum Op {
     /// Solve the MCKP over a caller-provided Ω table (rows aligned with
     /// `Library::for_bits` order) under `r_energy` × exact-model energy.
     Select { r_energy: f64, omega: Vec<Vec<f64>> },
+    /// Re-run the mobile tail of the stage graph (select → calibrate)
+    /// under a config delta and atomically swap the model's active
+    /// selection between batch waves. `delta` is an object of
+    /// `key=value` config overrides restricted to selection/calibration
+    /// knobs (`r_energy`, `calib_*`, `q_*`, ...); shape validation
+    /// happens in the handler so the two decoders stay in parity.
+    Reconfigure { delta: Json },
     /// Fetch one artifact-store envelope by `<kind>/<fingerprint>` from
     /// this daemon's **local** store tier (peers never chain). The result
     /// is `{"envelope":<envelope>|null}` — null means a clean miss.
@@ -114,6 +121,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 })
                 .collect::<Result<Vec<_>>>()?,
         },
+        "reconfigure" => Op::Reconfigure { delta: j.get("delta")?.clone() },
         "artifact_get" => Op::ArtifactGet {
             kind: j.get("kind")?.as_str().context("'kind' must be a string")?.to_string(),
             fingerprint: j
@@ -130,7 +138,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "status" => Op::Status,
         "shutdown" => Op::Shutdown,
         other => bail!(
-            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|health|status|shutdown)"
+            "unknown op '{other}' (evaluate|energy|select|reconfigure|artifact_get|artifact_put|health|status|shutdown)"
         ),
     };
     Ok(Request { id, model, op })
@@ -170,6 +178,17 @@ pub fn eval_json(r: &EvalResult) -> Json {
         .with("loss", r.loss)
         .with("accuracy", r.accuracy)
         .with("samples", r.samples)
+}
+
+/// [`eval_json`] plus the active-selection fingerprint tag. Responses from
+/// a daemon running an [`crate::pipeline::ActiveSelection`] pin the exact
+/// operating point that produced them (`"selection"` sorts after
+/// `"samples"`, so untagged responses are a byte-prefix of tagged ones).
+pub fn eval_json_tagged(r: &EvalResult, selection: Option<&str>) -> Json {
+    match selection {
+        Some(fp) => eval_json(r).with("selection", fp),
+        None => eval_json(r),
+    }
 }
 
 /// Encode an MCKP solution plus the chosen AppMul name per layer.
@@ -218,6 +237,15 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
+        let r = parse_request(r#"{"id":9,"op":"reconfigure","model":"m/c","delta":{"r_energy":0.6}}"#)
+            .unwrap();
+        match r.op {
+            Op::Reconfigure { delta } => {
+                assert_eq!(delta.get("r_energy").unwrap().as_f64().unwrap(), 0.6);
+            }
+            other => panic!("{other:?}"),
+        }
+
         let r = parse_request(r#"{"id":6,"op":"artifact_get","kind":"library","fingerprint":"00deadbeef00cafe"}"#)
             .unwrap();
         match r.op {
@@ -258,6 +286,7 @@ mod tests {
         assert!(parse_request(r#"{"id":1,"op":"artifact_get","kind":"library"}"#).is_err());
         assert!(parse_request(r#"{"id":1,"op":"artifact_get","fingerprint":5,"kind":"k"}"#).is_err());
         assert!(parse_request(r#"{"id":1,"op":"artifact_put","kind":"library"}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"reconfigure"}"#).is_err(), "delta is required");
         assert_eq!(request_id(r#"{"id":42,"op":"?"}"#), 42);
         assert_eq!(request_id("garbage"), -1);
     }
@@ -285,5 +314,15 @@ mod tests {
         let poisoned = EvalResult { loss: f64::NAN, accuracy: 0.0, samples: 64 };
         let s = eval_json(&poisoned).compact();
         assert!(s.contains("\"loss\":null"), "{s}");
+    }
+
+    #[test]
+    fn tagged_eval_json_extends_the_untagged_form() {
+        let r = EvalResult { loss: 1.5, accuracy: 0.25, samples: 64 };
+        let plain = eval_json_tagged(&r, None).compact();
+        assert_eq!(plain, eval_json(&r).compact());
+        let tagged = eval_json_tagged(&r, Some("00deadbeef00cafe")).compact();
+        assert!(tagged.starts_with(plain.trim_end_matches('}')), "{tagged}");
+        assert!(tagged.ends_with(r#","selection":"00deadbeef00cafe"}"#), "{tagged}");
     }
 }

@@ -8,6 +8,7 @@
 //! | POST   | `/v1/evaluate` | `{"batches":..,"selection":..}` | NDJSON ok envelope      |
 //! | POST   | `/v1/energy`   | `{"selection":[..]}`         | NDJSON ok envelope         |
 //! | POST   | `/v1/select`   | `{"r_energy":..,"omega":..}` | NDJSON ok envelope         |
+//! | POST   | `/v1/reconfigure` | `{"delta":{"r_energy":..}}` | NDJSON ok envelope      |
 //! | GET    | `/v1/status`   | —                            | bare status object         |
 //!
 //! POST bodies are the NDJSON request objects minus `"op"` (the route
@@ -287,6 +288,7 @@ fn serve_http_connection(
             ("POST", "/v1/evaluate") => dispatch(shared, client_id, &body, "evaluate", &mut resp),
             ("POST", "/v1/energy") => dispatch(shared, client_id, &body, "energy", &mut resp),
             ("POST", "/v1/select") => dispatch(shared, client_id, &body, "select", &mut resp),
+            ("POST", "/v1/reconfigure") => reconfigure(shared, &body, &mut resp),
             ("GET" | "POST", _) => {
                 let detail = format!("no route for {method} {path}");
                 error_body_into(&mut resp, -1, "not_found", "unknown route", &detail);
@@ -341,9 +343,9 @@ fn dispatch(
         }
     }
     match rx.recv() {
-        Ok(Ok(ComputeOut::Eval(r))) => {
+        Ok(Ok(ComputeOut::Eval(r, sel))) => {
             resp.clear();
-            wire::eval_ok_into(resp, id, &r);
+            wire::eval_ok_into(resp, id, &r, sel.as_deref());
             Outcome::ok()
         }
         Ok(Ok(ComputeOut::Other(j))) => {
@@ -365,6 +367,39 @@ fn dispatch(
         Err(_) => {
             error_body_into(resp, id, "internal", "dispatcher exited before answering", "");
             Outcome::err(500, "Internal Server Error")
+        }
+    }
+}
+
+/// `POST /v1/reconfigure` — decoded on the same wire path, but answered
+/// inline rather than through the batcher, exactly like the NDJSON front
+/// door: the swap must not queue behind the wave it supersedes.
+fn reconfigure(shared: &Shared, body: &str, resp: &mut String) -> Outcome {
+    let req = match wire::decode_body(body, "reconfigure") {
+        Ok(req) => req,
+        Err(e) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            error_body_into(resp, -1, "bad_request", "request body could not be decoded", &format!("{e:#}"));
+            return Outcome::err(400, "Bad Request");
+        }
+    };
+    shared.stats.count(&req.op);
+    match super::handle_reconfigure(shared, &req) {
+        Ok(result) => {
+            resp.clear();
+            wire::ok_into(resp, req.id, &result);
+            Outcome::ok()
+        }
+        Err(e) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("{e:#}");
+            if msg.starts_with("unknown model") {
+                error_body_into(resp, req.id, "unknown_model", "no such model is being served", &msg);
+                Outcome::err(404, "Not Found")
+            } else {
+                error_body_into(resp, req.id, "bad_request", "reconfigure was rejected", &msg);
+                Outcome::err(400, "Bad Request")
+            }
         }
     }
 }

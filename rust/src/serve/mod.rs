@@ -91,9 +91,11 @@ pub const MAX_EVAL_BATCHES: usize = 1024;
 /// than blocking a wave (see [`ReplySink::deliver`]).
 const REPLY_BUFFER: usize = 256;
 
+use std::collections::BTreeMap;
+
 use crate::energy::EnergyModel;
 use crate::json::Json;
-use crate::pipeline::{EvalResult, FamesConfig};
+use crate::pipeline::{self, ActiveSelection, EvalResult, FamesConfig, StageRun};
 use crate::runtime::Runtime;
 use crate::select::{self, Choice};
 use crate::util::par;
@@ -169,6 +171,8 @@ pub struct Stats {
     pub http: AtomicU64,
     /// Artifact replication ops (`artifact_get` + `artifact_put`).
     pub artifact: AtomicU64,
+    /// Live operating-point changes (`reconfigure`).
+    pub reconfigure: AtomicU64,
 }
 
 impl Stats {
@@ -177,6 +181,7 @@ impl Stats {
             Op::Evaluate { .. } => self.evaluate.fetch_add(1, Ordering::Relaxed),
             Op::Energy { .. } => self.energy.fetch_add(1, Ordering::Relaxed),
             Op::Select { .. } => self.select.fetch_add(1, Ordering::Relaxed),
+            Op::Reconfigure { .. } => self.reconfigure.fetch_add(1, Ordering::Relaxed),
             Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
                 self.artifact.fetch_add(1, Ordering::Relaxed)
             }
@@ -192,9 +197,10 @@ impl Stats {
 }
 
 /// Typed dispatcher output: `evaluate` streams through the zero-tree
-/// encoder; the colder ops carry their (small) payload tree.
+/// encoder (with the optional active-selection fingerprint tag); the
+/// colder ops carry their (small) payload tree.
 pub enum ComputeOut {
-    Eval(EvalResult),
+    Eval(EvalResult, Option<String>),
     Other(Json),
 }
 
@@ -241,7 +247,7 @@ impl ReplySink {
         match self {
             ReplySink::Line { tx, conn } => {
                 let line = match &out {
-                    Ok(ComputeOut::Eval(r)) => wire::eval_ok_line(id, r),
+                    Ok(ComputeOut::Eval(r, sel)) => wire::eval_ok_line(id, r, sel.as_deref()),
                     Ok(ComputeOut::Other(j)) => wire::ok_line(id, j),
                     Err(msg) => wire::err_line(id, msg),
                 };
@@ -319,6 +325,21 @@ impl Shared {
                             crate::pipeline::ParamsSource::Store => "store",
                             crate::pipeline::ParamsSource::Trained => "trained",
                         },
+                    )
+                    .with(
+                        "active_selection",
+                        match e.active_fingerprint() {
+                            Some(fp) => Json::Str(fp.hex()),
+                            None => Json::Null,
+                        },
+                    )
+                    .with(
+                        "pareto",
+                        Json::obj()
+                            .with("points", e.pareto.as_ref().map_or(0, |f| f.points.len()))
+                            .with("hits", e.pareto_hits.load(Ordering::Relaxed) as usize)
+                            .with("misses", e.pareto_misses.load(Ordering::Relaxed) as usize)
+                            .with("swaps", e.swaps.load(Ordering::Relaxed) as usize),
                     ),
             );
         }
@@ -337,6 +358,7 @@ impl Shared {
                     .with("evaluate", self.stats.evaluate.load(Ordering::Relaxed) as usize)
                     .with("energy", self.stats.energy.load(Ordering::Relaxed) as usize)
                     .with("select", self.stats.select.load(Ordering::Relaxed) as usize)
+                    .with("reconfigure", self.stats.reconfigure.load(Ordering::Relaxed) as usize)
                     .with("errors", self.stats.errors.load(Ordering::Relaxed) as usize)
                     .with("http", self.stats.http.load(Ordering::Relaxed) as usize)
                     .with("artifact", self.stats.artifact.load(Ordering::Relaxed) as usize)
@@ -554,8 +576,12 @@ fn dispatch_loop(shared: &Shared) {
             requests.push(job.request);
             sinks.push(job.sink);
         }
+        // one operating-point snapshot per wave: a concurrent reconfigure
+        // takes effect at the *next* wave boundary, so every request in
+        // this wave is answered (and tagged) under exactly one selection
+        let actives = shared.registry.active_snapshot();
         let outs: Vec<WaveResult> = par::par_map(&requests, shared.jobs, |_, req| {
-            handle_compute(shared, req).map_err(|e| format!("{e:#}"))
+            handle_compute(shared, &actives, req).map_err(|e| format!("{e:#}"))
         });
         for ((req, sink), out) in requests.iter().zip(sinks).zip(outs) {
             if out.is_err() {
@@ -570,8 +596,14 @@ fn dispatch_loop(shared: &Shared) {
 
 /// Score one compute request against its routed model entry. Every arm is
 /// exactly the call an embedder would make directly — the bit-identity
-/// contract of the serving layer.
-fn handle_compute(shared: &Shared, req: &Request) -> Result<ComputeOut> {
+/// contract of the serving layer. `actives` is the dispatcher's per-wave
+/// operating-point snapshot: a selection-less `evaluate` runs under it
+/// (and is tagged with its fingerprint) when one is live.
+fn handle_compute(
+    shared: &Shared,
+    actives: &BTreeMap<String, Arc<ActiveSelection>>,
+    req: &Request,
+) -> Result<ComputeOut> {
     let entry = shared.registry.get(req.model.as_deref())?;
     match &req.op {
         Op::Evaluate { batches, selection } => {
@@ -579,14 +611,24 @@ fn handle_compute(shared: &Shared, req: &Request) -> Result<ComputeOut> {
                 (1..=MAX_EVAL_BATCHES).contains(batches),
                 "batches must be in 1..={MAX_EVAL_BATCHES} (got {batches})"
             );
-            let r = match selection {
-                None => entry.session.evaluate(*batches)?,
+            match selection {
+                None => match actives.get(&entry.key) {
+                    Some(act) => {
+                        let r = entry.session.evaluate_operating_point(
+                            &act.e_list,
+                            &act.act_q,
+                            &act.lwc,
+                            *batches,
+                        )?;
+                        Ok(ComputeOut::Eval(r, Some(act.fingerprint.hex())))
+                    }
+                    None => Ok(ComputeOut::Eval(entry.session.evaluate(*batches)?, None)),
+                },
                 Some(picks) => {
                     let e_list = entry.selection_tensors(picks)?;
-                    entry.session.evaluate_with(&e_list, *batches)?
+                    Ok(ComputeOut::Eval(entry.session.evaluate_with(&e_list, *batches)?, None))
                 }
-            };
-            Ok(ComputeOut::Eval(r))
+            }
         }
         Op::Energy { selection } => {
             let sel = entry.resolve_selection(selection)?;
@@ -638,7 +680,12 @@ fn handle_compute(shared: &Shared, req: &Request) -> Result<ComputeOut> {
                 .collect();
             Ok(ComputeOut::Other(codec::solution_json(&sol, &picked)))
         }
-        Op::Health | Op::Status | Op::Shutdown | Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
+        Op::Health
+        | Op::Status
+        | Op::Shutdown
+        | Op::Reconfigure { .. }
+        | Op::ArtifactGet { .. }
+        | Op::ArtifactPut { .. } => {
             unreachable!("inline ops never reach the batcher")
         }
     }
@@ -665,6 +712,138 @@ fn handle_artifact(shared: &Shared, req: &Request) -> Result<Json> {
         }
         _ => unreachable!("handle_artifact only takes artifact ops"),
     }
+}
+
+/// Config keys a `reconfigure` delta may touch: inputs of the mobile
+/// stage-graph tail (select + calibrate). Anything upstream of those
+/// stages (model identity, seed, estimation, training, artifact layout)
+/// or process-level (jobs, cache, peers) requires a restart and is
+/// rejected, so a live daemon can never drift away from its immutable
+/// warm state.
+const RECONFIGURE_KEYS: &[&str] =
+    &["r_energy", "calib_epochs", "calib_samples", "calib_lr", "q_step", "q_max", "sweep_metric"];
+
+/// Apply one `reconfigure` delta: fold the allowed keys into the entry's
+/// config, resolve the operating point the new config names — in-memory
+/// Pareto front first, then cached `select`/`calibrate` store artifacts,
+/// then a full activation on a scratch session — and atomically swap it
+/// in. Runs inline on the reader thread (like the artifact ops); the
+/// entry's config mutex serializes concurrent reconfigures per model, and
+/// the swap takes effect at the next dispatcher wave.
+fn handle_reconfigure(shared: &Shared, req: &Request) -> Result<Json> {
+    let Op::Reconfigure { delta } = &req.op else {
+        unreachable!("handle_reconfigure only takes reconfigure ops")
+    };
+    let entry = shared.registry.get(req.model.as_deref())?;
+    let pairs = delta.as_obj().context("'delta' must be an object of config overrides")?;
+
+    let t0 = Instant::now();
+    let mut cfg_guard = entry.cfg.lock().unwrap();
+    let mut cfg = cfg_guard.clone();
+    for (k, v) in pairs {
+        anyhow::ensure!(
+            RECONFIGURE_KEYS.contains(&k.as_str()),
+            "'{k}' is not live-reconfigurable (allowed: {})",
+            RECONFIGURE_KEYS.join("|")
+        );
+        let s = match v {
+            Json::Str(s) => s.clone(),
+            Json::Num(n) => format!("{n}"),
+            other => anyhow::bail!("delta key '{k}': unsupported value {other}"),
+        };
+        crate::config::apply_kv(&mut cfg, k, &s)?;
+    }
+
+    // the fingerprint chain from the entry's immutable anchors names the
+    // operating point the new config asks for — before any work happens
+    let est_fp =
+        pipeline::estimate_fingerprint(&cfg, entry.lib_fp, entry.manifest_hash, entry.params_hash);
+    let cal_fp = pipeline::calibrate_fingerprint(&cfg, pipeline::select_fingerprint(&cfg, est_fp));
+    let manifest = &entry.session.art.manifest;
+
+    let mut swapped = false;
+    let (act, source, stages) = if entry.active_fingerprint() == Some(cal_fp) {
+        let cur = entry.active_selection().context("active selection vanished")?;
+        (cur, "active", Vec::new())
+    } else if let Some(point) = entry.pareto.as_ref().and_then(|f| f.lookup_fp(cal_fp)) {
+        // pure cache hit: rehydrate from the precomputed front and swap
+        entry.pareto_hits.fetch_add(1, Ordering::Relaxed);
+        let act = Arc::new(point.to_active(&entry.library, manifest)?);
+        let stages = vec![
+            StageRun { stage: "estimate", fingerprint: est_fp.hex(), hit: Some(true), secs: 0.0 },
+            StageRun {
+                stage: "select",
+                fingerprint: act.select_fp.hex(),
+                hit: Some(true),
+                secs: 0.0,
+            },
+            StageRun { stage: "calibrate", fingerprint: cal_fp.hex(), hit: Some(true), secs: 0.0 },
+        ];
+        entry.swap_active(act.clone());
+        swapped = true;
+        (act, "pareto", stages)
+    } else {
+        entry.pareto_misses.fetch_add(1, Ordering::Relaxed);
+        let cached = shared
+            .store
+            .as_ref()
+            .and_then(|s| pipeline::active::activate_cached(s, &entry.library, manifest, est_fp, &cfg));
+        let (activation, source) = match cached {
+            Some(a) => (a, "store"),
+            None => {
+                // full fallback: run the mobile stages on a scratch
+                // session, so the shared serving session stays immutable
+                // and the batcher keeps scoring lock-free throughout
+                let mut scratch = pipeline::warm_session(shared.rt.clone(), &cfg)
+                    .with_context(|| format!("warming scratch session for '{}'", entry.key))?;
+                let a = pipeline::active::activate(&mut scratch, &entry.library, entry.lib_fp, &cfg)?;
+                (a, "computed")
+            }
+        };
+        let act = Arc::new(activation.selection);
+        entry.swap_active(act.clone());
+        swapped = true;
+        (act, source, activation.stages)
+    };
+    *cfg_guard = cfg.clone();
+    drop(cfg_guard);
+
+    // the immutable half never moves on this path: report it as reused
+    // alongside the mobile stages' hit/miss records
+    let mut stage_arr = Json::arr();
+    stage_arr.push(
+        Json::obj()
+            .with("stage", "library")
+            .with("fingerprint", entry.lib_fp.hex().as_str())
+            .with("status", "reused"),
+    );
+    stage_arr.push(
+        Json::obj()
+            .with("stage", "train")
+            .with(
+                "fingerprint",
+                pipeline::train_fingerprint(&cfg, entry.params_hash).hex().as_str(),
+            )
+            .with("status", "reused"),
+    );
+    for run in &stages {
+        stage_arr.push(
+            Json::obj()
+                .with("stage", run.stage)
+                .with("fingerprint", run.fingerprint.as_str())
+                .with("status", run.status()),
+        );
+    }
+    Ok(Json::obj()
+        .with("model", entry.key.as_str())
+        .with("selection", cal_fp.hex().as_str())
+        .with("r_energy", cfg.r_energy)
+        .with("source", source)
+        .with("swapped", swapped)
+        .with("energy_ratio_exact", act.energy_ratio_exact)
+        .with("names", act.names.clone())
+        .with("stages", stage_arr)
+        .with("secs", t0.elapsed().as_secs_f64()))
 }
 
 /// Per-connection reader: decode lines through the bounded reader and the
@@ -796,6 +975,22 @@ fn serve_connection(
                 Op::ArtifactGet { .. } | Op::ArtifactPut { .. } => {
                     shared.stats.count(&req.op);
                     let line = match handle_artifact(shared, &req) {
+                        Ok(result) => wire::ok_line(req.id, &result),
+                        Err(e) => {
+                            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                            wire::err_line(req.id, &format!("{e:#}"))
+                        }
+                    };
+                    if tx.send(line).is_err() {
+                        break;
+                    }
+                }
+                Op::Reconfigure { .. } => {
+                    // inline, not batched: the swap must not wait behind the
+                    // wave it is about to supersede, and wave snapshots make
+                    // racing with in-flight evaluates safe
+                    shared.stats.count(&req.op);
+                    let line = match handle_reconfigure(shared, &req) {
                         Ok(result) => wire::ok_line(req.id, &result),
                         Err(e) => {
                             shared.stats.errors.fetch_add(1, Ordering::Relaxed);

@@ -6,23 +6,32 @@
 //! through the PR 3 artifact store when one is enabled — so a restarted
 //! daemon skips both training and library characterization.
 //!
-//! Entries are immutable once warmed: every request handler works through
-//! `&Session` (`evaluate` / `evaluate_with` never mutate session state),
-//! which is what lets the batcher score concurrent requests against one
-//! shared entry without locks.
+//! The **immutable** half of an entry (session, library, fingerprint
+//! anchors) never changes once warmed: every request handler works
+//! through `&Session` (`evaluate` / `evaluate_with` /
+//! `evaluate_operating_point` never mutate session state), which is what
+//! lets the batcher score concurrent requests against one shared entry
+//! without locks. The **mobile** half — the entry's
+//! [`ActiveSelection`] operating point and the config it derives from —
+//! sits behind its own locks and is swapped atomically by `reconfigure`;
+//! the dispatcher snapshots it once per wave, so in-flight requests
+//! always finish under the selection they started with.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::appmul::{AppMul, Library};
-use crate::pipeline::{self, FamesConfig, ParamsSource, Session};
+use crate::pipeline::{self, ActiveSelection, FamesConfig, ParamsSource, ParetoFront, Session};
 use crate::runtime::Runtime;
+use crate::store::Fingerprint;
 use crate::tensor::Tensor;
 
-/// One warmed model: routing key, session, candidate library.
+/// One warmed model: routing key, session, candidate library, and the
+/// swappable operating point.
 pub struct ModelEntry {
     /// Routing key, `<model>/<cfg>`.
     pub key: String,
@@ -30,11 +39,35 @@ pub struct ModelEntry {
     pub library: Library,
     /// Library stage cache outcome (`Some(true)` = store hit).
     pub lib_hit: Option<bool>,
+    /// Content fingerprint of `library` — the immutable upstream anchor
+    /// every reconfigure chains its stage fingerprints from.
+    pub lib_fp: Fingerprint,
+    /// Hash of the model's `manifest.json` (estimate fingerprint input).
+    pub manifest_hash: u64,
+    /// Content hash of the trained parameters in `session`.
+    pub params_hash: u64,
     /// Where the trained parameters came from (state file / store /
     /// trained here) — `Store` on a fresh root means warm handoff worked.
     pub params_source: ParamsSource,
     /// Wall-clock spent warming this entry (train/load + ranges + library).
     pub warm_secs: f64,
+    /// This entry's effective config: the serve base with the entry's
+    /// model/cfg swapped in, plus every applied `reconfigure` delta.
+    /// Held locked across a reconfigure so concurrent deltas serialize.
+    pub cfg: Mutex<FamesConfig>,
+    /// The active operating point; `None` serves the plain warmed session
+    /// (byte-identical to the pre-adaptive daemon). Swapped whole — the
+    /// dispatcher snapshots the `Arc` once per wave.
+    pub active: RwLock<Option<Arc<ActiveSelection>>>,
+    /// Precomputed Pareto front (`pareto=` grid); `None` when no grid is
+    /// configured.
+    pub pareto: Option<Arc<ParetoFront>>,
+    /// Reconfigures answered from the in-memory front.
+    pub pareto_hits: AtomicU64,
+    /// Reconfigures that fell through to the store or a fresh activation.
+    pub pareto_misses: AtomicU64,
+    /// Operating-point swaps applied to this entry.
+    pub swaps: AtomicU64,
 }
 
 impl ModelEntry {
@@ -80,6 +113,25 @@ impl ModelEntry {
     pub fn selection_tensors(&self, picks: &[usize]) -> Result<Vec<Tensor>> {
         Ok(self.resolve_selection(picks)?.iter().map(|am| am.error_tensor()).collect())
     }
+
+    /// Install a new operating point. The write is atomic; it takes effect
+    /// at the next dispatcher wave snapshot, so every request in a wave
+    /// runs under exactly one selection.
+    pub fn swap_active(&self, act: Arc<ActiveSelection>) {
+        *self.active.write().unwrap() = Some(act);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The current operating-point fingerprint, `None` when this entry
+    /// serves the plain warmed session.
+    pub fn active_fingerprint(&self) -> Option<Fingerprint> {
+        self.active.read().unwrap().as_ref().map(|a| a.fingerprint)
+    }
+
+    /// The current operating-point handle.
+    pub fn active_selection(&self) -> Option<Arc<ActiveSelection>> {
+        self.active.read().unwrap().clone()
+    }
 }
 
 /// All loaded models, keyed by `<model>/<cfg>`.
@@ -107,12 +159,42 @@ impl Registry {
                 ..base.clone()
             };
             let t0 = Instant::now();
-            let (session, warm) = pipeline::warm_session_report(rt.clone(), &cfg)
+            let (mut session, warm) = pipeline::warm_session_report(rt.clone(), &cfg)
                 .with_context(|| format!("warming model '{key}'"))?;
             let store = cfg.store();
             let prep =
                 pipeline::prepare_library(&session.art.manifest, cfg.seed, store.as_ref(), cfg.jobs)
                     .with_context(|| format!("preparing library for '{key}'"))?;
+            let manifest_hash =
+                crate::util::hash::hash_file(session.art.dir.join("manifest.json"))?;
+            let params_hash = session.params.content_hash();
+            // with a pareto grid configured, precompute the front and put
+            // the configured budget live; without one, serve the plain
+            // warmed session (byte-identical to the pre-adaptive daemon)
+            let (pareto, active) = if cfg.pareto_grid.is_empty() {
+                (None, None)
+            } else {
+                let sweep =
+                    pipeline::active::sweep_pareto(&mut session, &prep.library, prep.fingerprint, &cfg)
+                        .with_context(|| format!("sweeping pareto front for '{key}'"))?;
+                let front = Arc::new(sweep.front);
+                let est_fp = pipeline::estimate_fingerprint(
+                    &cfg,
+                    prep.fingerprint,
+                    manifest_hash,
+                    params_hash,
+                );
+                let cal_fp =
+                    pipeline::calibrate_fingerprint(&cfg, pipeline::select_fingerprint(&cfg, est_fp));
+                let act = match front.lookup_fp(cal_fp) {
+                    Some(p) => p.to_active(&prep.library, &session.art.manifest)?,
+                    None => {
+                        pipeline::active::activate(&mut session, &prep.library, prep.fingerprint, &cfg)?
+                            .selection
+                    }
+                };
+                (Some(front), Some(Arc::new(act)))
+            };
             entries.insert(
                 key.clone(),
                 Arc::new(ModelEntry {
@@ -120,8 +202,17 @@ impl Registry {
                     session,
                     library: prep.library,
                     lib_hit: prep.hit,
+                    lib_fp: prep.fingerprint,
+                    manifest_hash,
+                    params_hash,
                     params_source: warm.params,
                     warm_secs: t0.elapsed().as_secs_f64(),
+                    cfg: Mutex::new(cfg),
+                    active: RwLock::new(active),
+                    pareto,
+                    pareto_hits: AtomicU64::new(0),
+                    pareto_misses: AtomicU64::new(0),
+                    swaps: AtomicU64::new(0),
                 }),
             );
         }
@@ -145,6 +236,20 @@ impl Registry {
 
     pub fn keys(&self) -> Vec<String> {
         self.entries.keys().cloned().collect()
+    }
+
+    /// Snapshot every model's active operating point. The dispatcher takes
+    /// one snapshot per wave, which pins all requests in that wave to the
+    /// selection in force when the wave started — the wave-boundary
+    /// atomicity contract of `reconfigure`.
+    pub fn active_snapshot(&self) -> BTreeMap<String, Arc<ActiveSelection>> {
+        let mut map = BTreeMap::new();
+        for (k, e) in &self.entries {
+            if let Some(a) = e.active.read().unwrap().as_ref() {
+                map.insert(k.clone(), a.clone());
+            }
+        }
+        map
     }
 
     pub fn entries(&self) -> impl Iterator<Item = &Arc<ModelEntry>> {

@@ -51,8 +51,19 @@
 //! first non-shed answer wins. The loser's reply is drained and counted,
 //! never delivered, so clients still see exactly one response per id.
 //!
+//! # Fleet-wide reconfigure
+//!
+//! `reconfigure` is a broadcast, not a routed request: the delta goes to
+//! every live shard in turn (never hedged, never failed over — it mutates
+//! shard state) and the router aggregates the per-shard results, including
+//! whether all shards agreed on the resulting selection fingerprint. One
+//! shard rejecting the delta is relayed verbatim (all shards run the same
+//! validation); one shard being unreachable is an error, not a silent
+//! partial apply.
+//!
 //! `status` is answered by the router itself (fleet view: per-shard
-//! forward counts, liveness, and latency). `shutdown` stops the router
+//! forward counts, liveness, latency, and each live shard's per-model
+//! active selection + Pareto counters). `shutdown` stops the router
 //! only — shards are independent processes with their own lifecycles.
 
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -483,6 +494,72 @@ impl RouterShared {
         wire::shed_line(id, ALL_SHARDS_DOWN)
     }
 
+    /// Fan one `reconfigure` out to every live shard and aggregate the
+    /// answers. A tier change is fleet-wide state, not a routed
+    /// computation: every shard holding a replica of the model must swap,
+    /// or routed traffic would flip between operating points depending on
+    /// which replica answers. Never hedged and never failed over — the op
+    /// mutates shard state, so a shard that could not apply it must
+    /// surface in the response rather than be papered over.
+    fn broadcast_reconfigure(self: &Arc<Self>, id: i64, line: &str) -> String {
+        let view = self.membership.view();
+        let all: Vec<usize> = (0..self.pools.len()).collect();
+        let live = view.filter_order(&all);
+        if live.is_empty() {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return wire::shed_line(id, ALL_SHARDS_DOWN);
+        }
+        let mut shards = Json::arr();
+        let mut selection: Option<String> = None;
+        let mut agreed = true;
+        for &i in &live {
+            let addr = self.ring.shards()[i].as_str();
+            let resp = match self.pools[i].round_trip(line) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    return wire::err_line(
+                        id,
+                        &format!("reconfigure did not reach shard {addr}: {e:#}"),
+                    );
+                }
+            };
+            if is_conn_refusal(&resp) {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                return wire::shed_line(id, admission::OVERLOADED_CONNS);
+            }
+            let Ok(j) = Json::parse(&resp) else {
+                return wire::err_line(id, &format!("shard {addr} answered with invalid JSON"));
+            };
+            if !j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false) {
+                // relay the first rejection verbatim: every shard runs the
+                // same delta validation, so one rejection speaks for all
+                return resp;
+            }
+            let result = j.get("result").ok().cloned().unwrap_or(Json::Null);
+            let sel = result
+                .get("selection")
+                .ok()
+                .and_then(|v| v.as_str().ok())
+                .map(str::to_string);
+            match (&selection, &sel) {
+                (None, Some(s)) => selection = Some(s.clone()),
+                (Some(a), Some(b)) if a != b => agreed = false,
+                _ => {}
+            }
+            shards.push(Json::obj().with("addr", addr).with("result", result));
+        }
+        self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+        let mut out = Json::obj()
+            .with("agreed", agreed)
+            .with("fleet", live.len())
+            .with("shards", shards);
+        if let Some(s) = selection {
+            out = out.with("selection", s);
+        }
+        wire::ok_line(id, &out)
+    }
+
     /// Should a request owned by `owner` be hedged? Yes when the owner's
     /// rolling p99 exceeds `hedge_threshold` × the fleet median (over
     /// pools with data), with a minimum sample count so cold starts don't
@@ -550,14 +627,21 @@ impl RouterShared {
         let view = self.membership.view();
         let mut shards = Json::arr();
         for (i, p) in self.pools.iter().enumerate() {
-            shards.push(
-                Json::obj()
-                    .with("addr", self.ring.shards()[i].as_str())
-                    .with("forwarded", p.forwarded.load(Ordering::Relaxed) as usize)
-                    .with("down", p.is_down())
-                    .with("liveness", view.liveness(i).as_str())
-                    .with("p99_ms", p.window.p99_ms()),
-            );
+            let mut entry = Json::obj()
+                .with("addr", self.ring.shards()[i].as_str())
+                .with("forwarded", p.forwarded.load(Ordering::Relaxed) as usize)
+                .with("down", p.is_down())
+                .with("liveness", view.liveness(i).as_str())
+                .with("p99_ms", p.window.p99_ms());
+            // fleet view of adaptive serving: each live shard's per-model
+            // active selection fingerprint and Pareto counters (probe-style
+            // direct dial — best-effort, omitted when unreachable)
+            if view.liveness(i) != Liveness::Down {
+                if let Some(models) = shard_models(&p.addr, self.probe_timeout) {
+                    entry = entry.with("models", models);
+                }
+            }
+            shards.push(entry);
         }
         Json::obj()
             .with("protocol", PROTOCOL)
@@ -749,6 +833,37 @@ fn probe_shard(addr: &str, timeout: Duration) -> Option<ProbeReport> {
     })
 }
 
+/// Dial one shard's `status` op directly (fresh connection, bypassing the
+/// pool like the prober does) and extract its per-model adaptive-serving
+/// view: active selection fingerprint plus Pareto counters. `None` on any
+/// transport or shape problem — router status stays best-effort.
+fn shard_models(addr: &str, timeout: Duration) -> Option<Json> {
+    let sock: SocketAddr = addr.to_socket_addrs().ok()?.next()?;
+    let s = TcpStream::connect_timeout(&sock, timeout).ok()?;
+    let _ = s.set_nodelay(true);
+    let _ = s.set_read_timeout(Some(timeout));
+    let _ = s.set_write_timeout(Some(timeout));
+    let line = Json::obj().with("id", PROBE_ID).with("op", "status").compact();
+    let resp = exchange(&s, &line).ok()?;
+    let j = Json::parse(&resp).ok()?;
+    if !j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false) {
+        return None;
+    }
+    let mut out = Json::arr();
+    for m in j.get("result").ok()?.get("models").ok()?.as_arr().ok()? {
+        out.push(
+            Json::obj()
+                .with("key", m.get("key").ok().cloned().unwrap_or(Json::Null))
+                .with(
+                    "active_selection",
+                    m.get("active_selection").ok().cloned().unwrap_or(Json::Null),
+                )
+                .with("pareto", m.get("pareto").ok().cloned().unwrap_or(Json::Null)),
+        );
+    }
+    Some(out)
+}
+
 /// Probe one shard and fold the outcome into the membership view. On a
 /// recovery the pool's failure cooldown is cleared too, so routing resumes
 /// the moment the prober sees the shard again. Returns the new liveness.
@@ -870,6 +985,7 @@ fn route_connection(stream: TcpStream, shared: &Arc<RouterShared>, _guard: admis
             }
             Ok(req) => match req.op {
                 Op::Status => wire::ok_line(req.id, &shared.status_json()),
+                Op::Reconfigure { .. } => shared.broadcast_reconfigure(req.id, trimmed),
                 Op::Shutdown => {
                     let ack = wire::ok_line(req.id, &Json::obj().with("stopping", true));
                     let ok = send(&mut writer, &ack);
@@ -1075,6 +1191,7 @@ fn route_http_connection(
             ("POST", "/v1/evaluate") => http_forward(shared, &body, "evaluate", &mut resp),
             ("POST", "/v1/energy") => http_forward(shared, &body, "energy", &mut resp),
             ("POST", "/v1/select") => http_forward(shared, &body, "select", &mut resp),
+            ("POST", "/v1/reconfigure") => http_reconfigure(shared, &body, &mut resp),
             ("GET" | "POST", _) => {
                 let detail = format!("no route for {method} {path}");
                 error_body_into(&mut resp, -1, "not_found", "unknown route", &detail);
@@ -1111,10 +1228,32 @@ fn http_forward(
     };
     let line = request_line(&req);
     let answer = shared.forward(route_key(&req), req.id, &line, hedgeable(&req.op));
+    envelope_outcome(&answer, req.id, resp)
+}
+
+/// `POST /v1/reconfigure` on the router: decoded like any POST body, but
+/// broadcast to the whole live fleet instead of routed to one shard.
+fn http_reconfigure(shared: &Arc<RouterShared>, body: &str, resp: &mut String) -> HttpOutcome {
+    let req = match wire::decode_body(body, "reconfigure") {
+        Ok(req) => req,
+        Err(e) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            error_body_into(resp, -1, "bad_request", "request body could not be decoded", &format!("{e:#}"));
+            return HttpOutcome::err(400, "Bad Request");
+        }
+    };
+    let line = request_line(&req);
+    let answer = shared.broadcast_reconfigure(req.id, &line);
+    envelope_outcome(&answer, req.id, resp)
+}
+
+/// Map an NDJSON response envelope onto an HTTP outcome (200 / 503 shed +
+/// `Retry-After` / 404 unknown model / 400); the body is the envelope.
+fn envelope_outcome(answer: &str, id: i64, resp: &mut String) -> HttpOutcome {
     resp.clear();
-    resp.push_str(&answer);
-    let Ok(j) = Json::parse(&answer) else {
-        error_body_into(resp, req.id, "internal", "shard response was not valid JSON", "");
+    resp.push_str(answer);
+    let Ok(j) = Json::parse(answer) else {
+        error_body_into(resp, id, "internal", "shard response was not valid JSON", "");
         return HttpOutcome::err(500, "Internal Server Error");
     };
     if j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false) {
@@ -1163,6 +1302,7 @@ fn request_line(req: &Request) -> String {
         Op::ArtifactPut { kind, envelope } => {
             j.with("op", "artifact_put").with("kind", kind.as_str()).with("envelope", envelope.clone())
         }
+        Op::Reconfigure { delta } => j.with("op", "reconfigure").with("delta", delta.clone()),
         Op::Health => j.with("op", "health"),
         Op::Status => j.with("op", "status"),
         Op::Shutdown => j.with("op", "shutdown"),
@@ -1200,6 +1340,13 @@ mod tests {
                 op: Op::ArtifactPut {
                     kind: "k".into(),
                     envelope: Json::obj().with("schema", "fames-store-v1").with("payload", 1i64),
+                },
+            },
+            Request {
+                id: 6,
+                model: Some("m/c".into()),
+                op: Op::Reconfigure {
+                    delta: Json::obj().with("calib_epochs", 2i64).with("r_energy", 0.6),
                 },
             },
         ];

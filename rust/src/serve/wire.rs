@@ -159,6 +159,7 @@ struct Fields<'a> {
     kind: Option<std::result::Result<Cow<'a, str>, String>>,
     fingerprint: Option<std::result::Result<Cow<'a, str>, String>>,
     envelope: Option<std::result::Result<Json, String>>,
+    delta: Option<std::result::Result<Json, String>>,
 }
 
 /// One pass over the object: known keys go through their typed parser
@@ -194,6 +195,7 @@ fn scan_fields(bytes: &[u8]) -> Result<Fields<'_>> {
                 "kind" => f.kind = Some(lx.typed(|l| l.string())?),
                 "fingerprint" => f.fingerprint = Some(lx.typed(|l| l.string())?),
                 "envelope" => f.envelope = Some(lx.typed(|l| l.json_value())?),
+                "delta" => f.delta = Some(lx.typed(|l| l.json_value())?),
                 _ => lx.skip_value()?,
             }
             lx.skip_ws();
@@ -273,6 +275,13 @@ fn finish(f: Fields<'_>, route_op: Option<&str>) -> Result<Request> {
                 Some(Err(e)) => bail!("'omega': {e}"),
             },
         },
+        "reconfigure" => Op::Reconfigure {
+            delta: match f.delta {
+                None => bail!("missing key 'delta'"),
+                Some(Ok(v)) => v,
+                Some(Err(e)) => bail!("'delta': {e}"),
+            },
+        },
         "artifact_get" => Op::ArtifactGet {
             kind: match f.kind {
                 None => bail!("missing key 'kind'"),
@@ -301,7 +310,7 @@ fn finish(f: Fields<'_>, route_op: Option<&str>) -> Result<Request> {
         "status" => Op::Status,
         "shutdown" => Op::Shutdown,
         other => bail!(
-            "unknown op '{other}' (evaluate|energy|select|artifact_get|artifact_put|health|status|shutdown)"
+            "unknown op '{other}' (evaluate|energy|select|reconfigure|artifact_get|artifact_put|health|status|shutdown)"
         ),
     };
     Ok(Request { id, model, op })
@@ -734,8 +743,11 @@ pub fn ok_into(buf: &mut String, id: i64, result: &Json) {
 }
 
 /// Append a successful `evaluate` response with **no** intermediate tree:
-/// the payload keys stream out in the codec's (sorted) order.
-pub fn eval_ok_into(buf: &mut String, id: i64, r: &EvalResult) {
+/// the payload keys stream out in the codec's (sorted) order. `selection`
+/// is the active-selection fingerprint tag (`"selection"` sorts after
+/// `"samples"`, so it streams last and untagged responses stay
+/// byte-identical to the pre-adaptive wire format).
+pub fn eval_ok_into(buf: &mut String, id: i64, r: &EvalResult, selection: Option<&str>) {
     buf.push_str("{\"id\":");
     json::write_num(buf, id as f64);
     buf.push_str(",\"ok\":true,\"result\":{\"accuracy\":");
@@ -744,6 +756,10 @@ pub fn eval_ok_into(buf: &mut String, id: i64, r: &EvalResult) {
     json::write_num(buf, r.loss);
     buf.push_str(",\"samples\":");
     json::write_num(buf, r.samples as f64);
+    if let Some(fp) = selection {
+        buf.push_str(",\"selection\":");
+        json::write_escaped(buf, fp);
+    }
     buf.push_str("}}");
 }
 
@@ -775,9 +791,9 @@ pub fn ok_line(id: i64, result: &Json) -> String {
 }
 
 /// [`eval_ok_into`] as a fresh `String`.
-pub fn eval_ok_line(id: i64, r: &EvalResult) -> String {
+pub fn eval_ok_line(id: i64, r: &EvalResult, selection: Option<&str>) -> String {
     let mut buf = String::with_capacity(96);
-    eval_ok_into(&mut buf, id, r);
+    eval_ok_into(&mut buf, id, r, selection);
     buf
 }
 
@@ -831,6 +847,9 @@ mod tests {
                 .into(),
             r#"{"id":8,"op":"artifact_put","kind":"k","envelope":[1,2,3]}"#.into(),
             r#"{"id":9,"op":"artifact_put","kind":"k","envelope":null}"#.into(),
+            r#"{"id":12,"op":"reconfigure","model":"m/c","delta":{"r_energy":0.6}}"#.into(),
+            r#"{"id":13,"op":"reconfigure","delta":{"r_energy":0.5,"calib_epochs":2}}"#.into(),
+            r#"{"id":14,"op":"reconfigure","delta":[1,2]}"#.into(),
             // whitespace, duplicates (last wins), escaped keys and values
             "  {\"id\" :\t9 , \"op\" : \"status\" }  ".into(),
             r#"{"id":1,"id":2,"op":"status"}"#.into(),
@@ -870,6 +889,8 @@ mod tests {
             r#"{"id":1,"op":"artifact_get","kind":"k","fingerprint":[1]}"#.into(),
             r#"{"id":1,"op":"artifact_put","kind":"k"}"#.into(),
             r#"{"id":1,"op":"artifact_put","kind":"k","envelope":{"x":}}"#.into(),
+            r#"{"id":1,"op":"reconfigure"}"#.into(),
+            r#"{"id":1,"op":"reconfigure","delta":{"r_energy":}}"#.into(),
             // wrong-typed artifact fields unused by the op are ignored
             r#"{"id":1,"op":"status","kind":5,"fingerprint":[],"envelope":{"a":1}}"#.into(),
             r#"{"id":1,"op":"status"} trailing"#.into(),
@@ -939,11 +960,21 @@ mod tests {
     #[test]
     fn encoder_is_byte_identical_to_codec() {
         let r = EvalResult { loss: 0.1 + 0.2, accuracy: 1.0 / 3.0, samples: 64 };
-        assert_eq!(eval_ok_line(7, &r), codec::ok_response(7, codec::eval_json(&r)).compact());
+        assert_eq!(
+            eval_ok_line(7, &r, None),
+            codec::ok_response(7, codec::eval_json(&r)).compact()
+        );
         let poisoned = EvalResult { loss: f64::NAN, accuracy: 0.0, samples: 0 };
         assert_eq!(
-            eval_ok_line(-1, &poisoned),
+            eval_ok_line(-1, &poisoned, None),
             codec::ok_response(-1, codec::eval_json(&poisoned)).compact()
+        );
+        // the active-selection tag streams after "samples", matching the
+        // tree writer's sorted key order
+        assert_eq!(
+            eval_ok_line(7, &r, Some("00deadbeef00cafe")),
+            codec::ok_response(7, codec::eval_json_tagged(&r, Some("00deadbeef00cafe")))
+                .compact()
         );
 
         let payload = Json::obj()

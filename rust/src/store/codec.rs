@@ -36,6 +36,9 @@ pub const CALIB_VERSION: u32 = 1;
 pub const PARAMS_KIND: &str = "params";
 pub const PARAMS_VERSION: u32 = 1;
 
+pub const PARETO_KIND: &str = "pareto";
+pub const PARETO_VERSION: u32 = 1;
+
 // ---- AppMul library (including LUT payloads) ----
 
 /// Serialize a library, LUTs included. Item order is preserved — the
@@ -54,7 +57,12 @@ pub fn library_to_json(lib: &Library) -> Json {
                 .with("energy_fj", m.energy_fj)
                 .with("delay_ps", m.delay_ps)
                 .with("area_um2", m.area_um2)
-                .with("gates", m.gates),
+                .with("gates", m.gates)
+                // informational (recomputed from the LUT on load): error
+                // magnitude plus signed direction — the positive/negative
+                // pairing signal for downstream selection passes
+                .with("err_rms", m.err_rms())
+                .with("err_mean", m.err_mean()),
         );
     }
     Json::obj().with("items", items)
@@ -278,4 +286,111 @@ pub fn calib_from_json(j: &Json) -> Result<CalibArtifact> {
         q_star: j.get("q_star")?.as_arr()?.iter().map(|v| v.as_f64()).collect::<Result<_>>()?,
         losses: j.get("losses")?.as_arr()?.iter().map(|v| v.as_f64()).collect::<Result<_>>()?,
     })
+}
+
+// ---- Pareto front of selections (adaptive serving) ----
+
+/// Serialize a precomputed Pareto front. Each point is self-contained —
+/// budget, picks, names, fingerprints, calibrated quant state — so a
+/// front hit at reconfigure time needs no other store reads. E tensors
+/// are *not* persisted: they are rebuilt from the picks against the live
+/// library on load, which keeps the artifact compact and makes a stale
+/// front (library regenerated) fail validation instead of silently
+/// serving the wrong multipliers.
+pub fn pareto_to_json(front: &crate::pipeline::ParetoFront) -> Json {
+    let mut points = Json::arr();
+    for p in &front.points {
+        points.push(
+            Json::obj()
+                .with("r_energy", p.r_energy)
+                .with("picks", p.picks.as_slice())
+                .with(
+                    "names",
+                    Json::Arr(p.names.iter().map(|n| Json::from(n.as_str())).collect()),
+                )
+                .with("select_fp", p.select_fp.hex().as_str())
+                .with("fingerprint", p.fingerprint.hex().as_str())
+                .with("act_q", pairs_to_json(&p.act_q))
+                .with("lwc", pairs_to_json(&p.lwc))
+                .with("energy_ratio_exact", p.energy_ratio_exact),
+        );
+    }
+    Json::obj().with("points", points)
+}
+
+pub fn pareto_from_json(j: &Json) -> Result<crate::pipeline::ParetoFront> {
+    let mut points = Vec::new();
+    for (i, p) in j.get("points")?.as_arr()?.iter().enumerate() {
+        let ctx = || format!("pareto point {i}");
+        let fp_field = |key: &str| -> Result<Fingerprint> {
+            let hex = p.get(key)?.as_str().with_context(ctx)?;
+            Fingerprint::from_hex(hex)
+                .with_context(|| format!("pareto point {i}: malformed {key} {hex:?}"))
+        };
+        let act_q = pairs_from_json(p.get("act_q")?).with_context(ctx)?;
+        let lwc = pairs_from_json(p.get("lwc")?).with_context(ctx)?;
+        ensure!(act_q.len() == lwc.len(), "pareto point {i}: act_q/lwc layer count mismatch");
+        points.push(crate::pipeline::ParetoPoint {
+            r_energy: p.get("r_energy")?.as_f64().with_context(ctx)?,
+            picks: p.get("picks")?.as_usize_vec().with_context(ctx)?,
+            names: p.get("names")?.as_str_vec().with_context(ctx)?,
+            select_fp: fp_field("select_fp")?,
+            fingerprint: fp_field("fingerprint")?,
+            act_q,
+            lwc,
+            energy_ratio_exact: p.get("energy_ratio_exact")?.as_f64().with_context(ctx)?,
+        });
+    }
+    Ok(crate::pipeline::ParetoFront { points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{ParetoFront, ParetoPoint};
+    use crate::store::FingerprintBuilder;
+
+    #[test]
+    fn pareto_codec_round_trips_bit_exactly() {
+        let front = ParetoFront {
+            points: vec![ParetoPoint {
+                r_energy: 0.55,
+                picks: vec![2, 0, 1],
+                names: vec!["t2".into(), "mul4x4_exact".into(), "perf1".into()],
+                select_fp: FingerprintBuilder::new("select").u64("t", 9).finish(),
+                fingerprint: FingerprintBuilder::new("calibrate").u64("t", 9).finish(),
+                act_q: vec![(0.125, -0.5), (0.03125, 0.0), (1.5e-3, 2.0)],
+                lwc: vec![(3.75, 4.25), (4.0, 4.0), (0.5, -0.25)],
+                energy_ratio_exact: 0.5478515625,
+            }],
+        };
+        let back = pareto_from_json(&pareto_to_json(&front)).unwrap();
+        assert_eq!(back.points.len(), 1);
+        let (a, b) = (&front.points[0], &back.points[0]);
+        assert_eq!(a.r_energy.to_bits(), b.r_energy.to_bits());
+        assert_eq!(a.picks, b.picks);
+        assert_eq!(a.names, b.names);
+        assert_eq!(a.select_fp, b.select_fp);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.act_q, b.act_q);
+        assert_eq!(a.lwc, b.lwc);
+        assert_eq!(a.energy_ratio_exact.to_bits(), b.energy_ratio_exact.to_bits());
+    }
+
+    #[test]
+    fn pareto_decoder_rejects_malformed_fingerprints() {
+        let doc = Json::obj().with(
+            "points",
+            Json::Arr(vec![Json::obj()
+                .with("r_energy", 0.5)
+                .with("picks", vec![0usize].as_slice())
+                .with("names", Json::Arr(vec![Json::from("a")]))
+                .with("select_fp", "not-hex")
+                .with("fingerprint", "0011223344556677")
+                .with("act_q", pairs_to_json(&[(0.1, 0.0)]))
+                .with("lwc", pairs_to_json(&[(4.0, 4.0)]))
+                .with("energy_ratio_exact", 0.5)]),
+        );
+        assert!(pareto_from_json(&doc).is_err());
+    }
 }

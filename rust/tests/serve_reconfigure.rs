@@ -1,0 +1,258 @@
+//! Adaptive serving contract — live `reconfigure` against warm daemons.
+//!
+//! One warm daemon with a two-point Pareto front takes a live `r_energy`
+//! change three ways: onto the other front point (pure cache hit + swap),
+//! back onto itself (no-op), and off the grid (the mobile select +
+//! calibrate tail re-runs while library / train / estimate stay
+//! hit/reused). Every evaluate response carries the active-selection
+//! fingerprint, and the post-swap responses are diffed **byte-for-byte**
+//! against cold daemons started directly at the new budgets — at `jobs`
+//! 1 and auto — which is the whole point of the fingerprint contract:
+//! a swap must be indistinguishable from a restart.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fames::json::Json;
+use fames::pipeline::{self, FamesConfig};
+use fames::runtime::backend::native::{write_synthetic_artifacts, SyntheticSpec};
+use fames::runtime::Runtime;
+use fames::serve::{Client, ServeConfig, Server};
+
+fn setup_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("fames-reconf-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    write_synthetic_artifacts(&root, &SyntheticSpec::small("resnet8", "w4a4")).unwrap();
+    root
+}
+
+fn adaptive_cfg(root: &std::path::Path, r_energy: f64, jobs: usize) -> FamesConfig {
+    FamesConfig {
+        artifact_root: root.to_string_lossy().into_owned(),
+        train_steps: 200,
+        train_lr: 0.02,
+        pareto_grid: vec![0.55, 0.7],
+        r_energy,
+        jobs,
+        ..FamesConfig::default()
+    }
+}
+
+fn spawn(cfg: FamesConfig) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        models: vec!["resnet8/w4a4".to_string()],
+        max_batch: 4,
+        base: cfg,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&scfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn eval_compact(cl: &mut Client, id: i64) -> String {
+    let resp = cl
+        .call(
+            &Json::obj()
+                .with("id", id)
+                .with("op", "evaluate")
+                .with("model", "resnet8/w4a4")
+                .with("batches", 2usize),
+        )
+        .unwrap();
+    Client::expect_ok(&resp).unwrap().compact()
+}
+
+fn active_fp(cl: &mut Client, id: i64) -> (String, Json) {
+    let status = cl.call(&Json::obj().with("id", id).with("op", "status")).unwrap();
+    let st = Client::expect_ok(&status).unwrap().clone();
+    let m = &st.get("models").unwrap().as_arr().unwrap()[0];
+    (m.get("active_selection").unwrap().as_str().unwrap().to_string(), st)
+}
+
+fn reconfigure(cl: &mut Client, id: i64, r_energy: f64) -> Json {
+    let resp = cl
+        .call(
+            &Json::obj()
+                .with("id", id)
+                .with("op", "reconfigure")
+                .with("model", "resnet8/w4a4")
+                .with("delta", Json::obj().with("r_energy", r_energy)),
+        )
+        .unwrap();
+    Client::expect_ok(&resp).unwrap().clone()
+}
+
+fn stage_status(result: &Json, stage: &str) -> String {
+    result
+        .get("stages")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|s| s.get("stage").unwrap().as_str().unwrap() == stage)
+        .unwrap_or_else(|| panic!("stage {stage} missing from reconfigure response"))
+        .get("status")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+/// A cold daemon started at `r_energy`: one tagged evaluate, then a clean
+/// shutdown. The bit-identity reference for a live swap to that budget.
+fn cold_reference(root: &std::path::Path, r_energy: f64, jobs: usize) -> (String, String) {
+    let (addr, daemon) = spawn(adaptive_cfg(root, r_energy, jobs));
+    let mut cl = Client::connect(&addr).unwrap();
+    let eval = eval_compact(&mut cl, 1);
+    let (fp, _) = active_fp(&mut cl, 2);
+    cl.shutdown(3).unwrap();
+    drop(cl);
+    daemon.join().unwrap().unwrap();
+    (eval, fp)
+}
+
+#[test]
+fn reconfigure_swaps_in_front_recomputes_off_front_and_matches_cold_daemons() {
+    let root = setup_root("swap");
+    // warm the parameter cache once so every daemon in this test loads
+    // bit-identical parameters
+    {
+        let rt = Arc::new(Runtime::native());
+        pipeline::warm_session(rt, &adaptive_cfg(&root, 0.7, 1)).unwrap();
+    }
+
+    for jobs in [1usize, 0] {
+        let (addr, daemon) = spawn(adaptive_cfg(&root, 0.7, jobs));
+        let mut cl = Client::connect(&addr).unwrap();
+
+        // warm-up swept the grid: two points, no traffic on the counters
+        let (fp_07, st) = active_fp(&mut cl, 10);
+        let pareto = st.get("models").unwrap().as_arr().unwrap()[0].get("pareto").unwrap().clone();
+        assert_eq!(pareto.get("points").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(pareto.get("hits").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(pareto.get("misses").unwrap().as_usize().unwrap(), 0);
+
+        // every response under the active handle carries its fingerprint
+        let eval_07 = eval_compact(&mut cl, 11);
+        assert!(
+            eval_07.contains(&format!("\"selection\":\"{fp_07}\"")),
+            "jobs={jobs}: evaluate is not tagged with the active selection"
+        );
+
+        // ---- in-front swap: 0.7 → 0.55 is a pure Pareto cache hit ----
+        let r = reconfigure(&mut cl, 12, 0.55);
+        assert_eq!(r.get("source").unwrap().as_str().unwrap(), "pareto");
+        assert!(r.get("swapped").unwrap().as_bool().unwrap());
+        for stage in ["library", "train"] {
+            assert_eq!(stage_status(&r, stage), "reused", "jobs={jobs}: {stage} moved");
+        }
+        for stage in ["estimate", "select", "calibrate"] {
+            assert_eq!(stage_status(&r, stage), "hit", "jobs={jobs}: {stage} re-ran in-front");
+        }
+        let fp_055 = r.get("selection").unwrap().as_str().unwrap().to_string();
+        assert_ne!(fp_055, fp_07, "budget change must move the operating point");
+
+        let (now, st) = active_fp(&mut cl, 13);
+        assert_eq!(now, fp_055, "status does not report the swapped selection");
+        let pareto = st.get("models").unwrap().as_arr().unwrap()[0].get("pareto").unwrap().clone();
+        assert_eq!(pareto.get("hits").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(pareto.get("misses").unwrap().as_usize().unwrap(), 0);
+
+        let eval_055 = eval_compact(&mut cl, 14);
+        assert!(eval_055.contains(&format!("\"selection\":\"{fp_055}\"")));
+        assert_ne!(eval_055, eval_07, "distinct operating points must answer differently");
+
+        // ---- idempotent: reconfiguring onto the live point is a no-op ----
+        let r = reconfigure(&mut cl, 15, 0.55);
+        assert_eq!(r.get("source").unwrap().as_str().unwrap(), "active");
+        assert!(!r.get("swapped").unwrap().as_bool().unwrap());
+
+        // ---- off-front: 0.62 re-runs select + calibrate only ----
+        let r = reconfigure(&mut cl, 16, 0.62);
+        let source = r.get("source").unwrap().as_str().unwrap().to_string();
+        assert!(
+            source == "computed" || source == "store",
+            "jobs={jobs}: off-front source was {source:?}"
+        );
+        assert!(r.get("swapped").unwrap().as_bool().unwrap());
+        for stage in ["library", "train"] {
+            assert_eq!(stage_status(&r, stage), "reused", "jobs={jobs}: {stage} moved");
+        }
+        assert_eq!(
+            stage_status(&r, "estimate"),
+            "hit",
+            "jobs={jobs}: the Ω table is budget-independent and must not re-run"
+        );
+        if source == "computed" {
+            // first time through, the mobile tail is the only real work
+            assert_eq!(stage_status(&r, "select"), "miss");
+            assert_eq!(stage_status(&r, "calibrate"), "miss");
+        }
+        let fp_062 = r.get("selection").unwrap().as_str().unwrap().to_string();
+        let (_, st) = active_fp(&mut cl, 17);
+        let pareto = st.get("models").unwrap().as_arr().unwrap()[0].get("pareto").unwrap().clone();
+        assert_eq!(pareto.get("misses").unwrap().as_usize().unwrap(), 1);
+        let eval_062 = eval_compact(&mut cl, 18);
+        assert!(eval_062.contains(&format!("\"selection\":\"{fp_062}\"")));
+
+        // ---- guard rails: immutable keys and malformed deltas bounce ----
+        for delta in [
+            Json::obj().with("jobs", 4usize),
+            Json::obj().with("model", "resnet14"),
+            Json::obj().with("seed", 1usize),
+        ] {
+            let resp = cl
+                .call(
+                    &Json::obj()
+                        .with("id", 19)
+                        .with("op", "reconfigure")
+                        .with("model", "resnet8/w4a4")
+                        .with("delta", delta),
+                )
+                .unwrap();
+            assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+            assert!(resp
+                .get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("not live-reconfigurable"));
+        }
+        let resp = cl
+            .call(
+                &Json::obj()
+                    .with("id", 20)
+                    .with("op", "reconfigure")
+                    .with("model", "resnet8/w4a4")
+                    .with("delta", Json::arr()),
+            )
+            .unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+
+        // rejected deltas must not have moved the daemon
+        let (still, _) = active_fp(&mut cl, 21);
+        assert_eq!(still, fp_062);
+
+        cl.shutdown(22).unwrap();
+        drop(cl);
+        daemon.join().unwrap().unwrap();
+
+        // ---- warm == cold: a swap is indistinguishable from a restart ----
+        let (cold_eval_055, cold_fp_055) = cold_reference(&root, 0.55, jobs);
+        assert_eq!(cold_fp_055, fp_055, "jobs={jobs}: cold 0.55 fingerprint diverged");
+        assert_eq!(
+            cold_eval_055, eval_055,
+            "jobs={jobs}: warm swap to 0.55 is not bit-identical to a cold daemon"
+        );
+        let (cold_eval_062, cold_fp_062) = cold_reference(&root, 0.62, jobs);
+        assert_eq!(cold_fp_062, fp_062, "jobs={jobs}: cold 0.62 fingerprint diverged");
+        assert_eq!(
+            cold_eval_062, eval_062,
+            "jobs={jobs}: warm swap to 0.62 is not bit-identical to a cold daemon"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
